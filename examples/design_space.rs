@@ -1,0 +1,77 @@
+//! Design-space exploration with the §4.3 throughput optimizer.
+//!
+//! Sweeps clock frequency and LUT headroom for the Table-2 network,
+//! prints the (UF, P) plan the optimizer chooses at each point and where
+//! the paper's 90 MHz / 79%-LUT design sits; then optimizes the two
+//! smaller configs to show the model generalizes beyond Table 2.
+//!
+//! Run: cargo run --release --example design_space
+
+use repro::benchkit::Table;
+use repro::fpga::power::power;
+use repro::model::NetConfig;
+use repro::optimizer::{optimize, OptimizeOptions};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== frequency / headroom sweep (Table-2 network, XC7VX690) ===");
+    let mut t = Table::new(&[
+        "freq MHz",
+        "LUT headroom",
+        "bottleneck_est",
+        "FPS(model)",
+        "LUT%",
+        "W(model)",
+        "GOPS/W",
+    ]);
+    let cfg = NetConfig::table2();
+    for &mhz in &[90.0f64, 150.0, 200.0] {
+        for &headroom in &[0.7f64, 0.82, 0.95] {
+            let opts = OptimizeOptions {
+                freq_hz: mhz * 1e6,
+                lut_headroom: headroom,
+                ..OptimizeOptions::default()
+            };
+            let plan = optimize(&cfg, &opts)?;
+            let w = power(&plan.resources, opts.freq_hz).total_w();
+            let gops = cfg.ops_per_image() as f64 * plan.fps / 1e9;
+            t.row(&[
+                format!("{mhz:.0}"),
+                format!("{headroom:.2}"),
+                plan.bottleneck_est.to_string(),
+                format!("{:.0}", plan.fps),
+                format!("{:.1}", 100.0 * plan.resources.total.luts as f64 / 433_200.0),
+                format!("{w:.1}"),
+                format!("{:.0}", gops / w),
+            ]);
+        }
+    }
+    t.print();
+    println!("\npaper design point: 90 MHz, 79% LUTs, 6218 FPS, 8.2 W, 935 GOPS/W\n");
+
+    println!("=== optimizer plans for the smaller configs ===");
+    for name in ["small", "tiny"] {
+        let cfg = NetConfig::by_name(name).unwrap();
+        let plan = optimize(&cfg, &OptimizeOptions::default())?;
+        println!(
+            "{name}: bottleneck_est={} FPS(model)={:.0} LUTs={} BRAMs={} DSPs={}",
+            plan.bottleneck_est,
+            plan.fps,
+            plan.resources.total.luts,
+            plan.resources.total.brams,
+            plan.resources.total.dsps
+        );
+        let mut t = Table::new(&["layer", "UF", "P", "Cycle_est", "Cycle_r(model)"]);
+        for l in &plan.layers {
+            t.row(&[
+                l.geom.name.clone(),
+                l.params.uf.to_string(),
+                l.params.p.to_string(),
+                l.cycle_est.to_string(),
+                l.cycle_real.to_string(),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Quickstart: load a trained `.bcnn` model, classify a few images three
+//! ways (native engine, PJRT AOT executable, FPGA-architecture simulator)
+//! and check they agree.
+//!
+//! Run after `make artifacts`:
+//!     cargo run --release --example quickstart
+
+use repro::bcnn::Engine;
+use repro::coordinator::workload::random_images;
+use repro::coordinator::{Backend, FpgaSimBackend};
+use repro::model::BcnnModel;
+use repro::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. load the trained small model exported by python/compile/train.py
+    let model = BcnnModel::load("artifacts/model_small.bcnn")?;
+    println!("loaded {:?}: {} layers, {} classes", model.name, model.layers.len(), model.classes);
+
+    // 2. native packed-u64 engine (the serving hot path)
+    let engine = Engine::new(model.clone());
+    let images = random_images(&model.config(), 4, 2024);
+    let native: Vec<Vec<f32>> = engine.infer_batch(&images)?;
+    for (i, s) in native.iter().enumerate() {
+        let pred = s.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+        println!("image {i}: class {pred} (score {:+.2})", s[pred]);
+    }
+
+    // 3. same images through the AOT-compiled JAX/Pallas graph via PJRT
+    let mut rt = Runtime::new("artifacts")?;
+    let loaded = rt.load_model("small", 1, "artifacts/model_small.bcnn")?;
+    for (i, img) in images.iter().enumerate() {
+        let pjrt = loaded.infer_batch(img)?;
+        let max_delta = pjrt
+            .iter()
+            .zip(&native[i])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_delta < 1e-3, "PJRT diverged: {max_delta}");
+    }
+    println!("PJRT (AOT Pallas/JAX HLO) matches the native engine ✓");
+
+    // 4. same images through the paper's streaming FPGA architecture
+    let mut fpga = FpgaSimBackend::new(model)?;
+    let out = fpga.infer_batch(&images)?;
+    assert_eq!(out.scores, native, "FPGA simulator must be bit-exact");
+    let t = out.modeled_device_time.unwrap();
+    println!(
+        "FPGA simulator matches bit-exactly ✓  (modeled device time {:.3} ms for {} images)",
+        t.as_secs_f64() * 1e3,
+        images.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,156 @@
+"""AOT lowering: jax (L2 + Pallas L1) -> HLO *text* artifacts for Rust.
+
+HLO text, NOT ``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Each artifact is the *hardware-path* forward graph for one (config, batch)
+pair, with the image batch as argument 0 and the folded model parameters as
+the remaining arguments (order recorded in the ``.json`` manifest next to
+the HLO).  The Rust runtime builds the parameter literals from the
+``.bcnn`` file — weights stay hot-swappable without re-lowering.
+
+Run as a module (from ``python/``)::
+
+    python -m compile.aot --out ../artifacts          # default artifact set
+    python -m compile.aot --config small --batch 4 --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import CONFIGS, BcnnConfig, forward_packed
+
+# The default artifact set built by `make artifacts`.  (config, batch)
+# pairs: small model at serving batch sizes, plus a tiny module used by the
+# Rust runtime unit tests.
+DEFAULT_SET = [("small", 1), ("small", 8), ("small", 16), ("tiny", 1)]
+
+
+def param_manifest(config: BcnnConfig) -> list[dict]:
+    """Deterministic parameter order for the lowered graph: for each layer
+    ``w{l}`` then ``c{l}`` (hidden) or ``scale``+``bias`` (output layer).
+
+    Shapes/dtypes describe the *jnp hardware params* (uint32-packed binary
+    weights), the layout ``rust/src/runtime/params.rs`` reconstructs from a
+    ``.bcnn`` file.
+    """
+    entries: list[dict] = []
+    conv_shapes = config.conv_shapes()
+    n_conv = len(conv_shapes)
+    for i, (in_c, out_c, _, _, _) in enumerate(conv_shapes):
+        layer = i + 1
+        if layer == 1:
+            entries.append({"name": f"w{layer}", "dtype": "s32", "shape": [out_c, 9 * in_c]})
+        else:
+            kw = (9 * in_c + 31) // 32
+            entries.append({"name": f"w{layer}", "dtype": "u32", "shape": [out_c, kw]})
+        entries.append({"name": f"c{layer}", "dtype": "s32", "shape": [out_c]})
+    fc_shapes = config.fc_shapes()
+    for j, (in_f, out_f) in enumerate(fc_shapes):
+        layer = n_conv + 1 + j
+        kw = (in_f + 31) // 32
+        entries.append({"name": f"w{layer}", "dtype": "u32", "shape": [out_f, kw]})
+        if j < len(fc_shapes) - 1:
+            entries.append({"name": f"c{layer}", "dtype": "s32", "shape": [out_f]})
+        else:
+            entries.append({"name": "scale", "dtype": "f32", "shape": [out_f]})
+            entries.append({"name": "bias", "dtype": "f32", "shape": [out_f]})
+    return entries
+
+
+_DTYPES = {"s32": jnp.int32, "u32": jnp.uint32, "f32": jnp.float32}
+
+
+def lower_model(config: BcnnConfig, batch: int) -> tuple[str, list[dict]]:
+    """Lower forward_packed(config) at the given batch size to HLO text."""
+    manifest = param_manifest(config)
+
+    def fn(x, *flat_params):
+        params = {e["name"]: p for e, p in zip(manifest, flat_params)}
+        return (forward_packed(params, x, config),)
+
+    x_spec = jax.ShapeDtypeStruct(
+        (batch, config.input_hw, config.input_hw, config.input_channels), jnp.int32
+    )
+    param_specs = [
+        jax.ShapeDtypeStruct(tuple(e["shape"]), _DTYPES[e["dtype"]]) for e in manifest
+    ]
+    lowered = jax.jit(fn).lower(x_spec, *param_specs)
+    return to_hlo_text(lowered), manifest
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit_model(config_name: str, batch: int, out_dir: Path) -> Path:
+    config = CONFIGS[config_name]
+    text, manifest = lower_model(config, batch)
+    stem = f"model_{config_name}_b{batch}"
+    hlo_path = out_dir / f"{stem}.hlo.txt"
+    hlo_path.write_text(text)
+    meta = {
+        "config": config_name,
+        "batch": batch,
+        "input": {
+            "dtype": "s32",
+            "shape": [batch, config.input_hw, config.input_hw, config.input_channels],
+        },
+        "output": {"dtype": "f32", "shape": [batch, config.classes]},
+        "params": manifest,
+    }
+    (out_dir / f"{stem}.json").write_text(json.dumps(meta, indent=2) + "\n")
+    print(f"[aot] wrote {hlo_path} ({len(text)} chars)")
+    return hlo_path
+
+
+def emit_xnor_demo(out_dir: Path) -> Path:
+    """A standalone xnor_gemm module for Rust runtime unit tests:
+    uint32 [8, 4] x uint32 [8, 4] -> int32 [8, 8], k_bits = 128."""
+    from .kernels.binary_conv import xnor_gemm
+
+    def fn(a, w):
+        return (xnor_gemm(a, w, 128, bm=8, bn=8),)
+
+    spec = jax.ShapeDtypeStruct((8, 4), jnp.uint32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    path = out_dir / "xnor_demo.hlo.txt"
+    path.write_text(to_hlo_text(lowered))
+    print(f"[aot] wrote {path}")
+    return path
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", choices=sorted(CONFIGS), default=None)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--out", type=Path, default=Path("../artifacts"))
+    args = ap.parse_args(argv)
+    args.out.mkdir(parents=True, exist_ok=True)
+
+    if args.config is not None:
+        emit_model(args.config, args.batch, args.out)
+        return
+    for config_name, batch in DEFAULT_SET:
+        emit_model(config_name, batch, args.out)
+    emit_xnor_demo(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Synthetic 10-class image dataset (CIFAR-10 stand-in, DESIGN.md §2).
+
+The environment has no CIFAR-10 download, so the end-to-end training run
+uses a deterministic synthetic task with the same tensor interface: RGB
+images rescaled to 6-bit signed integers in [-31, 31] (paper §3.1), 10
+classes, 3x32x32 (NHWC).  Each class is a low-frequency ±1 template;
+samples are the template scaled into the 6-bit range plus Gaussian noise —
+enough structure that a BCNN must actually learn the conv + threshold
+pipeline, and enough noise that accuracy is a meaningful signal.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+INPUT_LO, INPUT_HI = -31, 31
+
+
+def class_templates(
+    classes: int, hw: int, channels: int, rng: np.random.Generator
+) -> np.ndarray:
+    """±1 low-frequency templates [classes, hw, hw, channels]: random ±1 at
+    hw/4 resolution, nearest-neighbour upsampled 4x."""
+    base = rng.integers(0, 2, (classes, hw // 4, hw // 4, channels)) * 2 - 1
+    return np.repeat(np.repeat(base, 4, axis=1), 4, axis=2).astype(np.int32)
+
+
+def make_dataset(
+    n_train: int,
+    n_test: int,
+    *,
+    classes: int = 10,
+    hw: int = 32,
+    channels: int = 3,
+    amplitude: float = 14.0,
+    noise: float = 10.0,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Returns (x_train, y_train, x_test, y_test); x int32 NHWC in
+    [-31, 31], y int32 class labels."""
+    rng = np.random.default_rng(seed)
+    templates = class_templates(classes, hw, channels, rng)
+
+    def sample(n: int) -> tuple[np.ndarray, np.ndarray]:
+        y = rng.integers(0, classes, n)
+        x = templates[y] * amplitude + rng.normal(0.0, noise, (n, hw, hw, channels))
+        x = np.clip(np.rint(x), INPUT_LO, INPUT_HI).astype(np.int32)
+        return x, y.astype(np.int32)
+
+    x_tr, y_tr = sample(n_train)
+    x_te, y_te = sample(n_test)
+    return x_tr, y_tr, x_te, y_te

@@ -1,0 +1,170 @@
+"""``.bcnn`` model-file writer/reader — the weight interchange with Rust.
+
+Binary little-endian format (mirrored by ``rust/src/model/file.rs``)::
+
+    magic   b"BCNN"
+    u32     version = 2
+    u16     name_len; utf-8 name
+    u32     input_hw, input_channels, input_bits, classes
+    u32     n_layers
+    layer records, in network order:
+      u8 kind:
+        0 = fp_conv   (first layer, 6-bit input x 2-bit weights)
+        1 = bin_conv  (XNOR conv)
+        2 = bin_fc    (hidden XNOR fully-connected)
+        3 = bin_fc_out(classifier: affine Norm, no binarize)
+      fp_conv : u32 in_c, out_c; u8 pool;
+                i8  weights [out_c][9*in_c]      (±1, (kh,kw,c) order)
+                i32 thresholds [out_c]
+      bin_conv: u32 in_c, out_c; u8 pool;
+                u64 weights [out_c][ceil(9*in_c/64)]  (LSB-first bits)
+                i32 thresholds [out_c]
+      bin_fc  : u32 in_f, out_f;
+                u64 weights [out_f][ceil(in_f/64)]
+                i32 thresholds [out_f]
+      bin_fc_out: u32 in_f, out_f;
+                u64 weights [out_f][ceil(in_f/64)]
+                f32 scale [out_f]; f32 bias [out_f]
+
+Bit order: bit ``b`` of word ``w`` = flattened input index ``w*64 + b``;
+conv inputs flatten (kh, kw, c), FC inputs flatten (h, w, c) — identical to
+the layouts in ``model.py``.  Trailing pad bits are zero.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from pathlib import Path
+
+import numpy as np
+
+from .packing import pack_bits_np64, unpack_bits_np64
+
+MAGIC = b"BCNN"
+VERSION = 2
+KIND_FP_CONV = 0
+KIND_BIN_CONV = 1
+KIND_BIN_FC = 2
+KIND_BIN_FC_OUT = 3
+
+
+@dataclasses.dataclass
+class LayerRecord:
+    kind: int
+    in_dim: int  # in_c for conv, in_features for fc
+    out_dim: int
+    pool: bool = False
+    weights_i8: np.ndarray | None = None  # fp_conv
+    weights_bits: np.ndarray | None = None  # {0,1} [out, K] for binary kinds
+    thresholds: np.ndarray | None = None  # i32 [out]
+    scale: np.ndarray | None = None  # f32 [out] (out layer)
+    bias: np.ndarray | None = None  # f32 [out]
+
+
+@dataclasses.dataclass
+class BcnnFile:
+    name: str
+    input_hw: int
+    input_channels: int
+    input_bits: int
+    classes: int
+    layers: list[LayerRecord]
+
+
+def write_bcnn(path: str | Path, model: BcnnFile) -> None:
+    """Serialize ``model`` to ``path`` in the format above."""
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<I", VERSION)
+    name_b = model.name.encode("utf-8")
+    out += struct.pack("<H", len(name_b)) + name_b
+    out += struct.pack(
+        "<IIII", model.input_hw, model.input_channels, model.input_bits, model.classes
+    )
+    out += struct.pack("<I", len(model.layers))
+    for layer in model.layers:
+        out += struct.pack("<B", layer.kind)
+        if layer.kind in (KIND_FP_CONV, KIND_BIN_CONV):
+            out += struct.pack("<IIB", layer.in_dim, layer.out_dim, int(layer.pool))
+        else:
+            out += struct.pack("<II", layer.in_dim, layer.out_dim)
+        if layer.kind == KIND_FP_CONV:
+            w = np.ascontiguousarray(layer.weights_i8, dtype=np.int8)
+            assert w.shape == (layer.out_dim, 9 * layer.in_dim), w.shape
+            out += w.tobytes()
+        else:
+            k = 9 * layer.in_dim if layer.kind == KIND_BIN_CONV else layer.in_dim
+            bits = np.ascontiguousarray(layer.weights_bits, dtype=np.int32)
+            assert bits.shape == (layer.out_dim, k), (bits.shape, k)
+            out += pack_bits_np64(bits).astype("<u8").tobytes()
+        if layer.kind == KIND_BIN_FC_OUT:
+            out += np.ascontiguousarray(layer.scale, dtype="<f4").tobytes()
+            out += np.ascontiguousarray(layer.bias, dtype="<f4").tobytes()
+        else:
+            out += np.ascontiguousarray(layer.thresholds, dtype="<i4").tobytes()
+    Path(path).write_bytes(bytes(out))
+
+
+class _Reader:
+    def __init__(self, data: bytes):
+        self.data = data
+        self.off = 0
+
+    def take(self, n: int) -> bytes:
+        b = self.data[self.off : self.off + n]
+        if len(b) != n:
+            raise ValueError("truncated .bcnn file")
+        self.off += n
+        return b
+
+    def unpack(self, fmt: str):
+        return struct.unpack(fmt, self.take(struct.calcsize(fmt)))
+
+    def array(self, dtype: str, count: int) -> np.ndarray:
+        a = np.frombuffer(self.take(count * np.dtype(dtype).itemsize), dtype=dtype)
+        return a.copy()
+
+
+def read_bcnn(path: str | Path) -> BcnnFile:
+    """Parse a ``.bcnn`` file (round-trip test + tooling)."""
+    r = _Reader(Path(path).read_bytes())
+    if r.take(4) != MAGIC:
+        raise ValueError("bad magic")
+    (version,) = r.unpack("<I")
+    if version != VERSION:
+        raise ValueError(f"unsupported version {version}")
+    (name_len,) = r.unpack("<H")
+    name = r.take(name_len).decode("utf-8")
+    hw, in_c, in_bits, classes = r.unpack("<IIII")
+    (n_layers,) = r.unpack("<I")
+    layers = []
+    for _ in range(n_layers):
+        (kind,) = r.unpack("<B")
+        if kind in (KIND_FP_CONV, KIND_BIN_CONV):
+            in_dim, out_dim, pool = r.unpack("<IIB")
+            pool = bool(pool)
+        elif kind in (KIND_BIN_FC, KIND_BIN_FC_OUT):
+            in_dim, out_dim = r.unpack("<II")
+            pool = False
+        else:
+            raise ValueError(f"bad layer kind {kind}")
+        rec = LayerRecord(kind=kind, in_dim=in_dim, out_dim=out_dim, pool=pool)
+        if kind == KIND_FP_CONV:
+            rec.weights_i8 = r.array("<i1", out_dim * 9 * in_dim).reshape(
+                out_dim, 9 * in_dim
+            )
+        else:
+            k = 9 * in_dim if kind == KIND_BIN_CONV else in_dim
+            kw = (k + 63) // 64
+            words = r.array("<u8", out_dim * kw).reshape(out_dim, kw)
+            rec.weights_bits = unpack_bits_np64(words, k)
+        if kind == KIND_BIN_FC_OUT:
+            rec.scale = r.array("<f4", out_dim)
+            rec.bias = r.array("<f4", out_dim)
+        else:
+            rec.thresholds = r.array("<i4", out_dim)
+        layers.append(rec)
+    if r.off != len(r.data):
+        raise ValueError(f"{len(r.data) - r.off} trailing bytes")
+    return BcnnFile(name, hw, in_c, in_bits, classes, layers)

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: XnorDotProduct GEMM (paper eq. 5).
+
+This is the compute hot-spot of the whole BCNN: every hidden layer
+(convolutional *and* fully-connected) reduces to a match-count GEMM over
+bit-packed operands once the L2 model has laid convolution patches out
+im2col-style (paper §3.1).
+
+TPU adaptation of the paper's LUT/XNOR-gate array (DESIGN.md
+§Hardware-Adaptation): 32 binary channels are packed per uint32 lane so the
+innermost FD reduction becomes ``popcount(xor(a, w))`` on integer vectors —
+element-wise VPU work plus a lane reduction, the role the XNOR-gate + bit
+count tree plays on the FPGA.  The grid tiles the (output-pixel M, filter N)
+space; one (bm, kw) activation tile and one (bn, kw) weight tile are
+VMEM-resident per grid step, mirroring how the paper's BRAM partitioning
+feeds P parallel PEs.  ``interpret=True`` everywhere: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain HLO
+that the Rust runtime loads unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  bm*bn*kw int32 intermediates must stay comfortably
+# inside VMEM (~16 MiB): 64*64*288*4 B = 4.5 MiB for the largest layer
+# (conv6: kw = 512*9/32 = 144; FC1: kw = 256).
+BM = 64
+BN = 64
+
+
+def _xnor_gemm_kernel(a_ref, w_ref, o_ref, *, k_bits: int):
+    """One (bm, bn) output tile: match count = k_bits - popcount(a ^ w)."""
+    a = a_ref[...]  # [bm, kw] uint32
+    w = w_ref[...]  # [bn, kw] uint32
+    mismatch = jax.lax.population_count(a[:, None, :] ^ w[None, :, :])
+    mismatch = jnp.sum(mismatch.astype(jnp.int32), axis=-1)  # [bm, bn]
+    o_ref[...] = jnp.int32(k_bits) - mismatch
+
+
+def _pad_rows(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    m = x.shape[0]
+    pad = (-m) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+
+
+def xnor_gemm(
+    a_packed: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    k_bits: int,
+    *,
+    bm: int = BM,
+    bn: int = BN,
+) -> jnp.ndarray:
+    """Match-count GEMM: uint32 [M, KW] x uint32 [N, KW] -> int32 [M, N].
+
+    out[m, n] = number of equal bits between a[m] and w[n] over the first
+    ``k_bits`` bits.  Pad bits beyond ``k_bits`` must be zero in BOTH
+    operands (they then xnor to 1 and are cancelled by the k_bits offset:
+    we subtract mismatches from k_bits, so equal pad bits contribute 0).
+    """
+    m, kw = a_packed.shape
+    n, kw2 = w_packed.shape
+    if kw != kw2:
+        raise ValueError(f"K mismatch: {kw} vs {kw2}")
+    if not (0 < k_bits <= kw * 32):
+        raise ValueError(f"k_bits={k_bits} out of range for {kw} words")
+    a_p = _pad_rows(a_packed.astype(jnp.uint32), bm)
+    w_p = _pad_rows(w_packed.astype(jnp.uint32), bn)
+    mp, np_ = a_p.shape[0], w_p.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_xnor_gemm_kernel, k_bits=k_bits),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kw), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kw), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(a_p, w_p)
+    return out[:m, :n]

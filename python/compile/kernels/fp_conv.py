@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: first-layer fixed-point GEMM (paper eq. 7).
+
+The paper's first layer takes the 6-bit rescaled RGB image (values in
+[-31, 31]) against 2-bit signed binary weights (±1); everything downstream
+of im2col is an integer GEMM accumulated in int32.  On the FPGA this is the
+one kernel mapped to DSP48 slices (~30% of DSP usage, §6.2); here it is a
+plain MXU/ALU integer dot product — the input layer is <5% of total compute
+(paper §3.1) so no bit tricks are warranted.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 64
+BN = 64
+
+
+def _fp_gemm_kernel(a_ref, w_ref, o_ref):
+    a = a_ref[...]  # [bm, k] int32
+    w = w_ref[...]  # [bn, k] int32
+    o_ref[...] = jax.lax.dot_general(
+        a,
+        w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _pad_rows(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad), (0, 0)))
+
+
+def fp_gemm(a: jnp.ndarray, w: jnp.ndarray, *, bm: int = BM, bn: int = BN) -> jnp.ndarray:
+    """Integer GEMM: int32 [M, K] x int32 [N, K] -> int32 [M, N].
+
+    ``a`` holds 6-bit signed activations, ``w`` 2-bit signed weights; both
+    are carried as int32 (zero-padding rows is exact for integer dot).
+    """
+    m, k = a.shape
+    n, k2 = w.shape
+    if k != k2:
+        raise ValueError(f"K mismatch: {k} vs {k2}")
+    a_p = _pad_rows(a.astype(jnp.int32), bm)
+    w_p = _pad_rows(w.astype(jnp.int32), bn)
+    mp, np_ = a_p.shape[0], w_p.shape[0]
+
+    out = pl.pallas_call(
+        _fp_gemm_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(a_p, w_p)
+    return out[:m, :n]

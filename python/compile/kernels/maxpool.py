@@ -1,0 +1,36 @@
+"""L1 Pallas kernel: 2x2/2 max-pool over integer conv outputs.
+
+The paper pools the *pre-binarization* accumulator outputs (fig. 3: MP runs
+between XnorDotProduct and NormBinarize in layers 2, 4, 6) so the MP kernel
+operates on int32 popcount results, in pipeline with the conv kernel
+(§5.2).  NormBinarize's per-channel threshold is monotone, so pooling the
+integers and pooling the bits commute — the tests assert this.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(y_ref, o_ref):
+    y = y_ref[...]  # [1, H, W, C] int32
+    _, h, w, c = y.shape
+    y = y.reshape(1, h // 2, 2, w // 2, 2, c)
+    o_ref[...] = jnp.max(y, axis=(2, 4))
+
+
+def maxpool2x2(y: jnp.ndarray) -> jnp.ndarray:
+    """NHWC int32 [B, H, W, C] -> [B, H/2, W/2, C], 2x2 window, stride 2."""
+    b, h, w, c = y.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"H, W must be even, got {h}x{w}")
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h // 2, w // 2, c), jnp.int32),
+        interpret=True,
+    )(y.astype(jnp.int32))

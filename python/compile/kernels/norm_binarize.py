@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: comparator-based NormBinarize (paper eq. 8).
+
+The paper folds batch-norm (eq. 2), the Binarize sign function (eq. 4) and
+the 1/0-encoding compensation (eq. 6) into one integer threshold compare
+per output channel — a single LUT comparator on the FPGA, a single VPU
+compare here.  The non-binarized output-layer ``Norm`` (fig. 3, last line)
+is the affine variant ``scale * y + bias``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 256
+
+
+def _norm_binarize_kernel(y_ref, c_ref, o_ref):
+    y = y_ref[...]  # [bm, N] int32
+    c = c_ref[...]  # [1, N] int32
+    o_ref[...] = (y >= c).astype(jnp.int32)
+
+
+def _norm_affine_kernel(y_ref, s_ref, b_ref, o_ref):
+    y = y_ref[...].astype(jnp.float32)  # [bm, N]
+    o_ref[...] = y * s_ref[...] + b_ref[...]
+
+
+def _pad_rows(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad), (0, 0)))
+
+
+def norm_binarize(y: jnp.ndarray, c: jnp.ndarray, *, bm: int = BM) -> jnp.ndarray:
+    """NormBinarize(y, c) = 1 if y >= c else 0 (paper eq. 8).
+
+    y: int32 [M, N]; c: int32 [N] per-channel integer threshold
+    (c_l = round((cnum_l + mu - beta*sigma'/gamma) / 2), paper §3.2).
+    Returns int32 {0,1} [M, N].
+    """
+    m, n = y.shape
+    if c.shape != (n,):
+        raise ValueError(f"threshold shape {c.shape} != ({n},)")
+    y_p = _pad_rows(y.astype(jnp.int32), bm)
+    mp = y_p.shape[0]
+    out = pl.pallas_call(
+        _norm_binarize_kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.int32),
+        interpret=True,
+    )(y_p, c.astype(jnp.int32).reshape(1, n))
+    return out[:m]
+
+
+def norm_affine(y: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, *, bm: int = BM) -> jnp.ndarray:
+    """Output-layer Norm: float scores = scale * y + bias.
+
+    y: int32 [M, N]; scale/bias: float32 [N] folding batch-norm constants
+    and the eq. 6 compensation; returns float32 [M, N] class scores.
+    """
+    m, n = y.shape
+    y_p = _pad_rows(y.astype(jnp.int32), bm)
+    mp = y_p.shape[0]
+    out = pl.pallas_call(
+        _norm_affine_kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(y_p, scale.astype(jnp.float32).reshape(1, n), bias.astype(jnp.float32).reshape(1, n))
+    return out[:m]

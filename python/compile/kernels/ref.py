@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness signal).
+
+Each ``*_ref`` mirrors one kernel in this package with straight-line jnp,
+and ``conv_pm1_ref`` implements the *textbook* ±1 BCNN convolution of
+paper eq. (3) so the tests can prove the 1/0 reformulation of eq. (5)-(6)
+exact: ``y_lo = 2 * y_l - cnum`` (paper eq. 6).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..packing import unpack_bits_jnp
+
+
+def xnor_gemm_ref(a_packed: jnp.ndarray, w_packed: jnp.ndarray, k_bits: int) -> jnp.ndarray:
+    """Match-count GEMM over packed binary operands.
+
+    a_packed: uint32 [M, KW]; w_packed: uint32 [N, KW]; returns int32 [M, N]
+    where out[m, n] = #bits where a[m] == w[n] over the first ``k_bits``
+    bits (paper eq. 5, XnorDotProduct).  Trailing pad bits (if any) MUST be
+    zero in both operands; matches over pad bits are excluded via k_bits.
+    """
+    a = unpack_bits_jnp(a_packed, a_packed.shape[-1] * 32)[..., :k_bits]
+    w = unpack_bits_jnp(w_packed, w_packed.shape[-1] * 32)[..., :k_bits]
+    # xnor(a, w) == 1 - xor(a, w) for bits
+    mismatch = jnp.sum(jnp.abs(a[:, None, :] - w[None, :, :]), axis=-1)
+    return (k_bits - mismatch).astype(jnp.int32)
+
+
+def conv_pm1_ref(a_pm1: jnp.ndarray, w_pm1: jnp.ndarray) -> jnp.ndarray:
+    """Textbook ±1 dot product of paper eq. (3): rows of a_pm1 [M, K] with
+    rows of w_pm1 [N, K], all values in {+1, -1}; returns int32 [M, N]."""
+    return jnp.dot(a_pm1.astype(jnp.int32), w_pm1.astype(jnp.int32).T)
+
+
+def fp_gemm_ref(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """First-layer fixed-point dot product (paper eq. 7): 6-bit signed
+    activations [M, K] x 2-bit signed weights [N, K] -> int32 [M, N]."""
+    return jnp.dot(a.astype(jnp.int32), w.astype(jnp.int32).T)
+
+
+def norm_binarize_ref(y: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Comparator-based normalization (paper eq. 8): 1 if y >= c else 0.
+
+    y: int32 [M, N]; c: int32 [N] per-output-channel threshold.
+    """
+    return (y >= c[None, :]).astype(jnp.int32)
+
+
+def norm_affine_ref(y: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """Output-layer Norm (paper fig. 3 last line): the non-binarized affine
+    normalization score = scale * y + bias (scale/bias fold eq. 2 + eq. 6)."""
+    return y.astype(jnp.float32) * scale[None, :] + bias[None, :]
+
+
+def maxpool2x2_ref(y: jnp.ndarray) -> jnp.ndarray:
+    """2x2/stride-2 max-pool over integer conv outputs, NHWC int32
+    [B, H, W, C] -> [B, H//2, W//2, C] (paper §2.1.2 / fig. 3 MP)."""
+    b, h, w, c = y.shape
+    y = y.reshape(b, h // 2, 2, w // 2, 2, c)
+    return jnp.max(y, axis=(2, 4))

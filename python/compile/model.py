@@ -1,0 +1,357 @@
+"""L2: the paper's BCNN forward graph (fig. 3), composed from L1 kernels.
+
+Two forward implementations live here:
+
+* :func:`forward_packed` — the *hardware-path* inference graph: bit-packed
+  activations, XnorDotProduct GEMMs, integer NormBinarize thresholds.  This
+  is what ``aot.py`` lowers to HLO text for the Rust runtime, and what the
+  Rust native engine (``rust/src/bcnn``) must match bit-exactly.
+* :func:`forward_train` — the *training-path* float graph: ±1 weights and
+  activations via straight-through estimators + batch-norm, numerically
+  identical to the hardware path after threshold folding (paper §3.2).
+
+Network configurations follow Table 2 of the paper (``TABLE2``), plus a
+scaled-down ``SMALL`` variant for the trained end-to-end run and ``TINY``
+for fast tests (DESIGN.md §2 documents the CIFAR-10 substitution).
+
+Layout conventions: activations are NHWC; im2col patches flatten in
+``(kh, kw, c)`` order; bit-packing is LSB-first (see ``packing.py``); FC
+input flattens the feature map in ``(h, w, c)`` order.  The packed-domain
+spatial padding is *zero bits*, i.e. -1 in the ±1 domain — exactly what the
+paper's fixed-cnum hardware does (cnum_l = FW*FH*FD regardless of border);
+the training path pads activations with -1 to match.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.binary_conv import xnor_gemm
+from .kernels.fp_conv import fp_gemm
+from .kernels.maxpool import maxpool2x2
+from .kernels.norm_binarize import norm_affine, norm_binarize
+from .packing import pack_bits_jnp
+
+
+# ---------------------------------------------------------------------------
+# Configuration (paper Table 2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One binary conv layer: 3x3 filters, stride 1, 1-pixel zero padding
+    (paper §2.5), optionally followed by 2x2/2 max-pool."""
+
+    out_channels: int
+    pool: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class BcnnConfig:
+    """A BCNN network description (paper Table 2 shape family)."""
+
+    name: str
+    conv: tuple[ConvSpec, ...]
+    fc: tuple[int, ...]  # hidden FC widths
+    classes: int = 10
+    input_hw: int = 32
+    input_channels: int = 3
+    input_bits: int = 6  # paper §3.1: inputs rescaled to [-31, 31]
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.conv) + len(self.fc) + 1
+
+    def conv_shapes(self) -> list[tuple[int, int, int, int, bool]]:
+        """Per conv layer: (in_c, out_c, in_hw, out_hw, pool)."""
+        shapes = []
+        hw = self.input_hw
+        in_c = self.input_channels
+        for spec in self.conv:
+            out_hw = hw // 2 if spec.pool else hw
+            shapes.append((in_c, spec.out_channels, hw, out_hw, spec.pool))
+            in_c, hw = spec.out_channels, out_hw
+        return shapes
+
+    @property
+    def fc_in_features(self) -> int:
+        *_, (_, out_c, _, out_hw, _) = self.conv_shapes()
+        return out_c * out_hw * out_hw
+
+    def fc_shapes(self) -> list[tuple[int, int]]:
+        """Per FC layer (incl. classifier): (in_features, out_features)."""
+        dims = [self.fc_in_features, *self.fc, self.classes]
+        return list(zip(dims[:-1], dims[1:]))
+
+    def cnum(self, layer: int) -> int:
+        """cnum_l = FW*FH*FD, the XNOR count per output value (paper eq. 6).
+        ``layer`` is 1-based as in the paper (1 = first conv)."""
+        if layer == 1:
+            return 9 * self.input_channels
+        conv_shapes = self.conv_shapes()
+        if layer <= len(conv_shapes):
+            return 9 * conv_shapes[layer - 1][0]
+        fc_shapes = self.fc_shapes()
+        return fc_shapes[layer - len(conv_shapes) - 1][0]
+
+    def ops_per_image(self) -> int:
+        """Total MAC-equivalent op count x2 (multiply + add), the paper's
+        GOPS accounting (7663 GOPS = ops_per_image * FPS for Table 2)."""
+        total = 0
+        hw = self.input_hw
+        in_c = self.input_channels
+        for spec in self.conv:
+            total += hw * hw * spec.out_channels * 9 * in_c
+            if spec.pool:
+                hw //= 2
+            in_c = spec.out_channels
+        for in_f, out_f in self.fc_shapes():
+            total += in_f * out_f
+        return 2 * total
+
+
+TABLE2 = BcnnConfig(
+    name="cifar10-table2",
+    conv=(
+        ConvSpec(128, False),
+        ConvSpec(128, True),
+        ConvSpec(256, False),
+        ConvSpec(256, True),
+        ConvSpec(512, False),
+        ConvSpec(512, True),
+    ),
+    fc=(1024, 1024),
+)
+
+SMALL = BcnnConfig(
+    name="synthetic-small",
+    conv=(
+        ConvSpec(32, False),
+        ConvSpec(32, True),
+        ConvSpec(64, False),
+        ConvSpec(64, True),
+        ConvSpec(128, False),
+        ConvSpec(128, True),
+    ),
+    fc=(256, 256),
+)
+
+TINY = BcnnConfig(
+    name="tiny-test",
+    conv=(ConvSpec(32, True), ConvSpec(32, True)),
+    fc=(64,),
+    input_hw=16,
+)
+
+CONFIGS = {"table2": TABLE2, "small": SMALL, "tiny": TINY}
+
+
+# ---------------------------------------------------------------------------
+# Hardware-path forward (packed, integer) — what the FPGA/Rust engine runs
+# ---------------------------------------------------------------------------
+
+
+def im2col_int(x: jnp.ndarray) -> jnp.ndarray:
+    """3x3/pad-1 patch extraction for the integer first layer.
+
+    x: int32 NHWC [B, H, W, C] -> [B*H*W, 9*C] patches in (kh, kw, c) order;
+    borders are zero-padded (true zeros: layer-1 inputs are not binary).
+    """
+    b, h, w, c = x.shape
+    p = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    taps = [p[:, dh : dh + h, dw : dw + w, :] for dh in range(3) for dw in range(3)]
+    return jnp.concatenate(taps, axis=-1).reshape(b * h * w, 9 * c)
+
+
+def im2col_packed(a: jnp.ndarray) -> jnp.ndarray:
+    """3x3/pad-1 patch extraction in the packed binary domain.
+
+    a: uint32 [B, H, W, CW] -> [B*H*W, 9*CW].  Padding inserts zero words =
+    0-bits = -1 activations; cnum stays FW*FH*FD everywhere (paper hardware
+    semantics, see module docstring).
+    """
+    b, h, w, cw = a.shape
+    p = jnp.pad(a, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    taps = [p[:, dh : dh + h, dw : dw + w, :] for dh in range(3) for dw in range(3)]
+    return jnp.concatenate(taps, axis=-1).reshape(b * h * w, 9 * cw)
+
+
+def forward_packed(params: dict, x: jnp.ndarray, config: BcnnConfig) -> jnp.ndarray:
+    """Hardware-path inference (paper fig. 3): int32 NHWC image batch in
+    [-31, 31] -> float32 [B, classes] scores.
+
+    ``params`` (see ``train.export_params``):
+      w1 int32 [C1, 9*Cin]; c1 int32 [C1];
+      w{l} uint32 [Cout, 9*Cin/32]; c{l} int32 [Cout]  (hidden layers);
+      w{L} uint32 [classes, in/32]; scale/bias float32 [classes] (output).
+    """
+    b = x.shape[0]
+    conv_shapes = config.conv_shapes()
+
+    # --- layer 1: FpDotProduct + NormBinarize (paper fig. 3 part 1) ---
+    in_c, out_c, hw, _, pool = conv_shapes[0]
+    patches = im2col_int(x)  # [B*HW^2, 9*Cin]
+    y = fp_gemm(patches, params["w1"])  # int32 [B*HW^2, C1]
+    if pool:
+        y = maxpool2x2(y.reshape(b, hw, hw, out_c))
+        hw //= 2
+        y = y.reshape(b * hw * hw, out_c)
+    bits = norm_binarize(y, params["c1"])
+    a = pack_bits_jnp(bits).reshape(b, hw, hw, out_c // 32)
+
+    # --- hidden conv layers: XnorDotProduct [+ MP] + NormBinarize ---
+    for idx in range(1, len(conv_shapes)):
+        in_c, out_c, hw, out_hw, pool = conv_shapes[idx]
+        layer = idx + 1
+        patches = im2col_packed(a)  # [B*hw^2, 9*in_c/32]
+        y = xnor_gemm(patches, params[f"w{layer}"], k_bits=9 * in_c)
+        if pool:
+            y = maxpool2x2(y.reshape(b, hw, hw, out_c)).reshape(b * out_hw * out_hw, out_c)
+        bits = norm_binarize(y, params[f"c{layer}"])
+        a = pack_bits_jnp(bits).reshape(b, out_hw, out_hw, out_c // 32)
+
+    # --- FC layers ---
+    a = a.reshape(b, -1)  # packed (h, w, c) flattening
+    fc_shapes = config.fc_shapes()
+    n_conv = len(conv_shapes)
+    for j, (in_f, out_f) in enumerate(fc_shapes):
+        layer = n_conv + 1 + j
+        y = xnor_gemm(a, params[f"w{layer}"], k_bits=in_f)
+        if j < len(fc_shapes) - 1:
+            bits = norm_binarize(y, params[f"c{layer}"])
+            a = pack_bits_jnp(bits)
+        else:
+            # output layer: Norm without binarization (paper fig. 3 part 3)
+            return norm_affine(y, params["scale"], params["bias"])
+    raise AssertionError("unreachable")
+
+
+# ---------------------------------------------------------------------------
+# Training-path forward (float, STE) — produces the params to fold
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _binarize_ste_impl(x):
+    return jnp.where(x >= 0, 1.0, -1.0)
+
+
+def _binarize_fwd(x):
+    return _binarize_ste_impl(x), x
+
+
+def _binarize_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+_binarize_ste_impl.defvjp(_binarize_fwd, _binarize_bwd)
+
+
+def _conv3x3_pm1(a: jnp.ndarray, w: jnp.ndarray, pad_value: float) -> jnp.ndarray:
+    """3x3/stride-1 conv via explicit constant padding + VALID conv.
+
+    a: float NHWC [B, H, W, Cin]; w: float [Cout, 9*Cin] in (kh, kw, c)
+    patch order (same layout as the packed weights); pad_value -1.0 for
+    binary activations (0-bit padding), 0.0 for the integer first layer.
+    """
+    b, h, wd, cin = a.shape
+    p = jnp.pad(a, ((0, 0), (1, 1), (1, 1), (0, 0)), constant_values=pad_value)
+    taps = [p[:, dh : dh + h, dw : dw + wd, :] for dh in range(3) for dw in range(3)]
+    patches = jnp.concatenate(taps, axis=-1).reshape(b * h * wd, 9 * cin)
+    y = patches @ w.T  # [B*H*W, Cout]
+    return y.reshape(b, h, wd, -1)
+
+
+def batchnorm_apply(y, gamma, beta, mean, var, eps=1e-4):
+    """Inference-mode batch normalization, paper eq. 2."""
+    return (y - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def init_train_params(config: BcnnConfig, key: jax.Array) -> dict:
+    """Real-valued master weights + BN params (BinaryNet training style)."""
+    params = {}
+    keys = jax.random.split(key, config.num_layers)
+    conv_shapes = config.conv_shapes()
+    for i, (in_c, out_c, _, _, _) in enumerate(conv_shapes):
+        fan_in = 9 * in_c
+        params[f"w{i + 1}"] = (
+            jax.random.uniform(keys[i], (out_c, fan_in), minval=-1.0, maxval=1.0)
+        )
+        params[f"bn{i + 1}"] = _bn_init(out_c)
+    for j, (in_f, out_f) in enumerate(config.fc_shapes()):
+        layer = len(conv_shapes) + 1 + j
+        params[f"w{layer}"] = jax.random.uniform(
+            keys[layer - 1], (out_f, in_f), minval=-1.0, maxval=1.0
+        )
+        params[f"bn{layer}"] = _bn_init(out_f)
+    return params
+
+
+def _bn_init(c: int) -> dict:
+    return {
+        "gamma": jnp.ones((c,)),
+        "beta": jnp.zeros((c,)),
+        "mean": jnp.zeros((c,)),
+        "var": jnp.ones((c,)),
+    }
+
+
+def forward_train(
+    params: dict,
+    x: jnp.ndarray,
+    config: BcnnConfig,
+    *,
+    train: bool = True,
+) -> tuple[jnp.ndarray, dict]:
+    """Training-path forward: float [B, H, W, C] input (integer-valued, in
+    [-31, 31]) -> (scores [B, classes], batch_stats).
+
+    Semantics match :func:`forward_packed` exactly after threshold folding:
+    ±1 weights/activations, -1 padding for binary layers, max-pool on the
+    pre-BN integer conv outputs, BN then sign.  In ``train`` mode BN uses
+    batch statistics and returns them so the loop can update running stats.
+    """
+    stats = {}
+    conv_shapes = config.conv_shapes()
+    a = x.astype(jnp.float32)
+    for i, (in_c, out_c, hw, out_hw, pool) in enumerate(conv_shapes):
+        layer = i + 1
+        wb = _binarize_ste_impl(params[f"w{layer}"])
+        pad_value = 0.0 if layer == 1 else -1.0
+        y = _conv3x3_pm1(a, wb, pad_value)
+        if pool:
+            b_, h_, w_, c_ = y.shape
+            y = y.reshape(b_, h_ // 2, 2, w_ // 2, 2, c_).max(axis=(2, 4))
+        y, stats[f"bn{layer}"] = _bn_forward(y, params[f"bn{layer}"], train)
+        a = _binarize_ste_impl(y)
+
+    b_ = a.shape[0]
+    a = a.reshape(b_, -1)  # (h, w, c) flattening, matches packed path
+    fc_shapes = config.fc_shapes()
+    n_conv = len(conv_shapes)
+    for j, (in_f, out_f) in enumerate(fc_shapes):
+        layer = n_conv + 1 + j
+        wb = _binarize_ste_impl(params[f"w{layer}"])
+        y = a @ wb.T
+        y, stats[f"bn{layer}"] = _bn_forward(y, params[f"bn{layer}"], train)
+        if j < len(fc_shapes) - 1:
+            a = _binarize_ste_impl(y)
+        else:
+            return y, stats
+    raise AssertionError("unreachable")
+
+
+def _bn_forward(y, bn, train):
+    axes = tuple(range(y.ndim - 1))
+    if train:
+        mean = jnp.mean(y, axis=axes)
+        var = jnp.var(y, axis=axes)
+    else:
+        mean, var = bn["mean"], bn["var"]
+    out = batchnorm_apply(y, bn["gamma"], bn["beta"], mean, var)
+    return out, {"mean": jax.lax.stop_gradient(mean), "var": jax.lax.stop_gradient(var)}

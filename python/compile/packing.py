@@ -1,0 +1,72 @@
+"""Bit-packing utilities for the binary-encoded BCNN (paper §3.1).
+
+The paper encodes +1/-1 as 1/0 so that a binary activation/weight costs a
+single bit and convolution becomes XNOR + popcount.  On the JAX/Pallas side
+we pack 32 binary channels into one ``uint32`` lane (the same packing the
+paper's CUDA XNOR kernel uses); the exported ``.bcnn`` model file packs into
+``uint64`` words for the Rust engine.
+
+Bit order convention (shared with ``rust/src/bcnn/tensor.rs``): bit ``b`` of
+word ``w`` holds flattened element ``w * LANE + b`` (LSB-first).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+LANE32 = 32
+LANE64 = 64
+
+
+def pack_bits_jnp(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a {0,1} int array of shape [..., K] (K % 32 == 0) into uint32
+    words of shape [..., K // 32], LSB-first."""
+    k = bits.shape[-1]
+    if k % LANE32 != 0:
+        raise ValueError(f"last dim {k} not a multiple of {LANE32}")
+    b = bits.reshape(bits.shape[:-1] + (k // LANE32, LANE32)).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(LANE32, dtype=jnp.uint32)).astype(jnp.uint32)
+    return jnp.sum(b * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits_jnp(words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits_jnp`: uint32 words [..., K//32] -> {0,1}
+    int32 array [..., K]."""
+    if k % LANE32 != 0:
+        raise ValueError(f"k={k} not a multiple of {LANE32}")
+    shifts = jnp.arange(LANE32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (k,)).astype(jnp.int32)
+
+
+def pack_bits_np64(bits: np.ndarray) -> np.ndarray:
+    """Pack a {0,1} array [..., K] into uint64 words [..., ceil(K/64)],
+    LSB-first, zero-padding the tail.  Used by the ``.bcnn`` exporter."""
+    k = bits.shape[-1]
+    kw = (k + LANE64 - 1) // LANE64
+    padded = np.zeros(bits.shape[:-1] + (kw * LANE64,), dtype=np.uint64)
+    padded[..., :k] = bits.astype(np.uint64)
+    padded = padded.reshape(bits.shape[:-1] + (kw, LANE64))
+    weights = (np.uint64(1) << np.arange(LANE64, dtype=np.uint64))
+    return (padded * weights).sum(axis=-1, dtype=np.uint64)
+
+
+def unpack_bits_np64(words: np.ndarray, k: int) -> np.ndarray:
+    """Inverse of :func:`pack_bits_np64` -> {0,1} int32 array [..., K]."""
+    shifts = np.arange(LANE64, dtype=np.uint64)
+    bits = (words[..., None] >> shifts) & np.uint64(1)
+    flat = bits.reshape(words.shape[:-1] + (words.shape[-1] * LANE64,))
+    return flat[..., :k].astype(np.int32)
+
+
+def pm1_to_bits(x) -> np.ndarray:
+    """Map the paper's +1/-1 domain onto the 1/0 encoding (§3.1)."""
+    x = np.asarray(x)
+    return (x > 0).astype(np.int32)
+
+
+def bits_to_pm1(b) -> np.ndarray:
+    """Inverse map: 1/0 -> +1/-1."""
+    b = np.asarray(b)
+    return (2 * b - 1).astype(np.int32)

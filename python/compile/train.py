@@ -1,0 +1,458 @@
+"""BCNN training (BinaryNet-style STE) + threshold folding + export.
+
+The paper deploys the Courbariaux-Bengio BinaryNet CIFAR-10 model; this
+module is the substitute training pipeline (DESIGN.md §2): straight-through
+estimator training in JAX on the synthetic dataset, then *threshold
+folding* (paper §3.2) that collapses batch-norm + binarize + the 1/0
+compensation of eq. 6 into one integer threshold ``c_l`` per channel, and
+finally export to the ``.bcnn`` interchange file and to jnp params for the
+hardware-path graph.
+
+Run as a module (from ``python/``)::
+
+    python -m compile.train --config small --steps 300 --out ../artifacts
+    python -m compile.train --config table2 --random --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .export import (
+    KIND_BIN_CONV,
+    KIND_BIN_FC,
+    KIND_BIN_FC_OUT,
+    KIND_FP_CONV,
+    BcnnFile,
+    LayerRecord,
+    write_bcnn,
+)
+from .model import (
+    CONFIGS,
+    BcnnConfig,
+    forward_packed,
+    forward_train,
+    init_train_params,
+)
+from .packing import pack_bits_jnp
+
+BN_EPS = 1e-4
+GAMMA_MIN = 0.05
+
+
+# ---------------------------------------------------------------------------
+# Threshold folding (paper §3.2)
+# ---------------------------------------------------------------------------
+
+
+def fold_params(train_params: dict, config: BcnnConfig) -> list[LayerRecord]:
+    """Fold trained float params into hardware layer records.
+
+    For hidden layers the BN-then-sign condition ``gamma*(y_lo-mu)/sigma'
+    + beta >= 0`` (gamma > 0 enforced in training) becomes ``y_lo >= t``
+    with ``t = mu - beta*sigma'/gamma``; with the 1/0 encoding
+    ``y_lo = 2*y_l - cnum`` (eq. 6) this is ``y_l >= c_l``,
+    ``c_l = ceil((t + cnum)/2)`` — exact for integer ``y_l`` (the paper
+    rounds to nearest; ceil preserves the comparison exactly).
+    """
+    records: list[LayerRecord] = []
+    conv_shapes = config.conv_shapes()
+    n_conv = len(conv_shapes)
+    fc_shapes = config.fc_shapes()
+
+    def bn_threshold(layer: int) -> np.ndarray:
+        bn = train_params[f"bn{layer}"]
+        gamma = np.asarray(bn["gamma"], np.float64)
+        if np.any(gamma <= 0):
+            raise ValueError(f"layer {layer}: gamma must be positive after training")
+        sigma = np.sqrt(np.asarray(bn["var"], np.float64) + BN_EPS)
+        return np.asarray(bn["mean"], np.float64) - np.asarray(
+            bn["beta"], np.float64
+        ) * sigma / gamma
+
+    for i, (in_c, out_c, _, _, pool) in enumerate(conv_shapes):
+        layer = i + 1
+        w_sign = np.where(np.asarray(train_params[f"w{layer}"]) >= 0, 1, -1)
+        t = bn_threshold(layer)
+        if layer == 1:
+            records.append(
+                LayerRecord(
+                    kind=KIND_FP_CONV,
+                    in_dim=in_c,
+                    out_dim=out_c,
+                    pool=pool,
+                    weights_i8=w_sign.astype(np.int8),
+                    thresholds=np.ceil(t).astype(np.int32),
+                )
+            )
+        else:
+            cnum = 9 * in_c
+            records.append(
+                LayerRecord(
+                    kind=KIND_BIN_CONV,
+                    in_dim=in_c,
+                    out_dim=out_c,
+                    pool=pool,
+                    weights_bits=(w_sign > 0).astype(np.int32),
+                    thresholds=np.ceil((t + cnum) / 2.0).astype(np.int32),
+                )
+            )
+
+    for j, (in_f, out_f) in enumerate(fc_shapes):
+        layer = n_conv + 1 + j
+        w_sign = np.where(np.asarray(train_params[f"w{layer}"]) >= 0, 1, -1)
+        bits = (w_sign > 0).astype(np.int32)
+        if j < len(fc_shapes) - 1:
+            t = bn_threshold(layer)
+            records.append(
+                LayerRecord(
+                    kind=KIND_BIN_FC,
+                    in_dim=in_f,
+                    out_dim=out_f,
+                    weights_bits=bits,
+                    thresholds=np.ceil((t + in_f) / 2.0).astype(np.int32),
+                )
+            )
+        else:
+            bn = train_params[f"bn{layer}"]
+            gamma = np.asarray(bn["gamma"], np.float64)
+            sigma = np.sqrt(np.asarray(bn["var"], np.float64) + BN_EPS)
+            mean = np.asarray(bn["mean"], np.float64)
+            beta = np.asarray(bn["beta"], np.float64)
+            # score = gamma*(2y - cnum - mu)/sigma' + beta = scale*y + bias
+            records.append(
+                LayerRecord(
+                    kind=KIND_BIN_FC_OUT,
+                    in_dim=in_f,
+                    out_dim=out_f,
+                    weights_bits=bits,
+                    scale=(2.0 * gamma / sigma).astype(np.float32),
+                    bias=(beta - gamma * (mean + in_f) / sigma).astype(np.float32),
+                )
+            )
+    return records
+
+
+def records_to_jnp_params(records: list[LayerRecord]) -> dict:
+    """Layer records -> the params dict :func:`compile.model.forward_packed`
+    expects (uint32-packed weights for the Pallas kernels)."""
+    params: dict = {}
+    for idx, rec in enumerate(records):
+        layer = idx + 1
+        if rec.kind == KIND_FP_CONV:
+            params[f"w{layer}"] = jnp.asarray(rec.weights_i8, jnp.int32)
+            params[f"c{layer}"] = jnp.asarray(rec.thresholds, jnp.int32)
+        elif rec.kind in (KIND_BIN_CONV, KIND_BIN_FC):
+            bits = np.asarray(rec.weights_bits)
+            k = bits.shape[1]
+            pad = (-k) % 32
+            if pad:
+                bits = np.pad(bits, ((0, 0), (0, pad)))
+            params[f"w{layer}"] = pack_bits_jnp(jnp.asarray(bits))
+            params[f"c{layer}"] = jnp.asarray(rec.thresholds, jnp.int32)
+        else:
+            bits = np.asarray(rec.weights_bits)
+            k = bits.shape[1]
+            pad = (-k) % 32
+            if pad:
+                bits = np.pad(bits, ((0, 0), (0, pad)))
+            params[f"w{layer}"] = pack_bits_jnp(jnp.asarray(bits))
+            params["scale"] = jnp.asarray(rec.scale, jnp.float32)
+            params["bias"] = jnp.asarray(rec.bias, jnp.float32)
+    return params
+
+
+def records_to_bcnn(records: list[LayerRecord], config: BcnnConfig, name: str) -> BcnnFile:
+    return BcnnFile(
+        name=name,
+        input_hw=config.input_hw,
+        input_channels=config.input_channels,
+        input_bits=config.input_bits,
+        classes=config.classes,
+        layers=records,
+    )
+
+
+def random_records(config: BcnnConfig, seed: int = 0) -> list[LayerRecord]:
+    """Random ±1 weights with *balanced* thresholds (c_l ~ cnum/2 + jitter,
+    so roughly half the output bits fire).  Used for the full Table-2 model
+    where timing/architecture experiments don't need trained weights."""
+    rng = np.random.default_rng(seed)
+    records: list[LayerRecord] = []
+    conv_shapes = config.conv_shapes()
+    for i, (in_c, out_c, _, _, pool) in enumerate(conv_shapes):
+        if i == 0:
+            records.append(
+                LayerRecord(
+                    kind=KIND_FP_CONV,
+                    in_dim=in_c,
+                    out_dim=out_c,
+                    pool=pool,
+                    weights_i8=(rng.integers(0, 2, (out_c, 9 * in_c)) * 2 - 1).astype(
+                        np.int8
+                    ),
+                    thresholds=rng.integers(-40, 40, out_c).astype(np.int32),
+                )
+            )
+        else:
+            cnum = 9 * in_c
+            jitter = rng.integers(-cnum // 16 - 1, cnum // 16 + 2, out_c)
+            records.append(
+                LayerRecord(
+                    kind=KIND_BIN_CONV,
+                    in_dim=in_c,
+                    out_dim=out_c,
+                    pool=pool,
+                    weights_bits=rng.integers(0, 2, (out_c, 9 * in_c)).astype(np.int32),
+                    thresholds=(cnum // 2 + jitter).astype(np.int32),
+                )
+            )
+    fc_shapes = config.fc_shapes()
+    for j, (in_f, out_f) in enumerate(fc_shapes):
+        bits = rng.integers(0, 2, (out_f, in_f)).astype(np.int32)
+        if j < len(fc_shapes) - 1:
+            jitter = rng.integers(-in_f // 32 - 1, in_f // 32 + 2, out_f)
+            records.append(
+                LayerRecord(
+                    kind=KIND_BIN_FC,
+                    in_dim=in_f,
+                    out_dim=out_f,
+                    weights_bits=bits,
+                    thresholds=(in_f // 2 + jitter).astype(np.int32),
+                )
+            )
+        else:
+            records.append(
+                LayerRecord(
+                    kind=KIND_BIN_FC_OUT,
+                    in_dim=in_f,
+                    out_dim=out_f,
+                    weights_bits=bits,
+                    scale=np.full(out_f, 2.0 / np.sqrt(in_f), np.float32),
+                    bias=rng.normal(0, 0.5, out_f).astype(np.float32),
+                )
+            )
+    return records
+
+
+# ---------------------------------------------------------------------------
+# Training loop (manual Adam, BinaryNet-style constraints)
+# ---------------------------------------------------------------------------
+
+
+def _adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def _adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads
+    )
+    scale = lr * jnp.sqrt(1 - b2**t) / (1 - b1**t)
+    new = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - scale * m_ / (jnp.sqrt(v_) + eps), params, m, v
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def _apply_constraints(params: dict, config: BcnnConfig) -> dict:
+    """BinaryNet weight clipping to [-1, 1] and gamma > 0 (needed for the
+    direction of the folded threshold compare, paper §3.2)."""
+    out = dict(params)
+    for l in range(1, config.num_layers + 1):
+        out[f"w{l}"] = jnp.clip(params[f"w{l}"], -1.0, 1.0)
+        bn = dict(params[f"bn{l}"])
+        bn["gamma"] = jnp.maximum(bn["gamma"], GAMMA_MIN)
+        out[f"bn{l}"] = bn
+    return out
+
+
+def make_train_step(config: BcnnConfig, lr: float, momentum: float = 0.9):
+    def loss_fn(params, x, y):
+        scores, stats = forward_train(params, x, config, train=True)
+        logp = jax.nn.log_softmax(scores)
+        loss = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+        acc = (jnp.argmax(scores, axis=1) == y).mean()
+        return loss, (stats, acc)
+
+    @jax.jit
+    def step(params, opt_state, x, y):
+        (loss, (stats, acc)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, x, y
+        )
+        params, opt_state = _adam_update(params, grads, opt_state, lr)
+        params = _apply_constraints(params, config)
+        # update BN running stats from batch stats
+        for name, st in stats.items():
+            bn = dict(params[name])
+            bn["mean"] = momentum * bn["mean"] + (1 - momentum) * st["mean"]
+            bn["var"] = momentum * bn["var"] + (1 - momentum) * st["var"]
+            params[name] = bn
+        return params, opt_state, loss, acc
+
+    return step
+
+
+def evaluate_train_path(params, x, y, config, batch: int = 256) -> float:
+    correct = 0
+    for i in range(0, len(x), batch):
+        scores, _ = forward_train(
+            params, jnp.asarray(x[i : i + batch], jnp.float32), config, train=False
+        )
+        correct += int((jnp.argmax(scores, axis=1) == jnp.asarray(y[i : i + batch])).sum())
+    return correct / len(x)
+
+
+def evaluate_packed_path(jnp_params, x, y, config, batch: int = 64) -> float:
+    correct = 0
+    for i in range(0, len(x), batch):
+        scores = forward_packed(jnp_params, jnp.asarray(x[i : i + batch]), config)
+        correct += int((jnp.argmax(scores, axis=1) == jnp.asarray(y[i : i + batch])).sum())
+    return correct / len(x)
+
+
+def train(
+    config: BcnnConfig,
+    *,
+    steps: int,
+    batch: int,
+    n_train: int,
+    n_test: int,
+    lr: float,
+    seed: int,
+    log_path: Path | None = None,
+) -> tuple[dict, dict]:
+    """Train and return (train_params, metrics)."""
+    x_tr, y_tr, x_te, y_te = data_mod.make_dataset(
+        n_train,
+        n_test,
+        classes=config.classes,
+        hw=config.input_hw,
+        channels=config.input_channels,
+        seed=seed,
+    )
+    params = init_train_params(config, jax.random.PRNGKey(seed))
+    opt_state = _adam_init(params)
+    step_fn = make_train_step(config, lr)
+    rng = np.random.default_rng(seed + 1)
+    log_rows = ["step,loss,batch_acc,elapsed_s"]
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.integers(0, n_train, batch)
+        params, opt_state, loss, acc = step_fn(
+            params, opt_state, jnp.asarray(x_tr[idx], jnp.float32), jnp.asarray(y_tr[idx])
+        )
+        if s % 10 == 0 or s == steps - 1:
+            row = f"{s},{float(loss):.4f},{float(acc):.4f},{time.time() - t0:.1f}"
+            log_rows.append(row)
+            print(f"[train] {row}", flush=True)
+    test_acc = evaluate_train_path(params, x_te, y_te, config)
+    metrics = {
+        "steps": steps,
+        "train_time_s": round(time.time() - t0, 1),
+        "test_acc_train_path": test_acc,
+    }
+    if log_path is not None:
+        log_path.write_text("\n".join(log_rows) + "\n")
+    return params, metrics
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", choices=sorted(CONFIGS), default="small")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=50)
+    ap.add_argument("--n-train", type=int, default=2000)
+    ap.add_argument("--n-test", type=int, default=500)
+    ap.add_argument("--lr", type=float, default=0.005)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--random", action="store_true", help="export random weights, no training")
+    ap.add_argument("--out", type=Path, default=Path("../artifacts"))
+    args = ap.parse_args(argv)
+
+    config = CONFIGS[args.config]
+    args.out.mkdir(parents=True, exist_ok=True)
+    stem = f"model_{args.config}"
+
+    if args.random:
+        records = random_records(config, args.seed)
+        metrics = {"mode": "random", "seed": args.seed}
+    else:
+        params, metrics = train(
+            config,
+            steps=args.steps,
+            batch=args.batch,
+            n_train=args.n_train,
+            n_test=args.n_test,
+            lr=args.lr,
+            seed=args.seed,
+            log_path=args.out / f"train_log_{args.config}.csv",
+        )
+        records = fold_params(params, config)
+        metrics["mode"] = "trained"
+        # verify the folded hardware path agrees with the training path
+        x_tr, y_tr, x_te, y_te = data_mod.make_dataset(
+            64,
+            args.n_test,
+            classes=config.classes,
+            hw=config.input_hw,
+            channels=config.input_channels,
+            seed=args.seed,
+        )
+        jnp_params = records_to_jnp_params(records)
+        metrics["test_acc_packed_path"] = evaluate_packed_path(
+            jnp_params, x_te, y_te, config
+        )
+        print(f"[train] test acc (train path)  = {metrics['test_acc_train_path']:.4f}")
+        print(f"[train] test acc (packed path) = {metrics['test_acc_packed_path']:.4f}")
+
+    path = args.out / f"{stem}.bcnn"
+    write_bcnn(path, records_to_bcnn(records, config, config.name))
+    (args.out / f"{stem}.json").write_text(json.dumps(metrics, indent=2) + "\n")
+    print(f"[train] wrote {path} ({path.stat().st_size} bytes)")
+
+    # export a labelled test set for the rust end-to-end example
+    # (format: b"BSET", u32 n, hw, channels, classes; then per sample
+    #  hw*hw*channels int8 pixels + 1 uint8 label)
+    _, _, x_te, y_te = data_mod.make_dataset(
+        1,
+        256,
+        classes=config.classes,
+        hw=config.input_hw,
+        channels=config.input_channels,
+        seed=args.seed,
+    )
+    ts_path = args.out / f"testset_{args.config}.bin"
+    import struct
+
+    with open(ts_path, "wb") as f:
+        f.write(b"BSET")
+        f.write(
+            struct.pack(
+                "<IIII", len(x_te), config.input_hw, config.input_channels, config.classes
+            )
+        )
+        for img, label in zip(x_te, y_te):
+            f.write(img.astype(np.int8).tobytes())
+            f.write(struct.pack("<B", int(label)))
+    print(f"[train] wrote {ts_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Round-trip tests for the ``.bcnn`` interchange format."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile.export import (
+    KIND_BIN_CONV,
+    KIND_BIN_FC,
+    KIND_BIN_FC_OUT,
+    KIND_FP_CONV,
+    read_bcnn,
+    write_bcnn,
+)
+from compile.model import CONFIGS, TINY
+from compile.train import random_records, records_to_bcnn
+
+
+@pytest.mark.parametrize("name", ["tiny", "small"])
+def test_roundtrip(tmp_path, name):
+    cfg = CONFIGS[name]
+    recs = random_records(cfg, seed=9)
+    path = tmp_path / "m.bcnn"
+    write_bcnn(path, records_to_bcnn(recs, cfg, cfg.name))
+    back = read_bcnn(path)
+    assert back.name == cfg.name
+    assert back.input_hw == cfg.input_hw
+    assert back.classes == cfg.classes
+    assert len(back.layers) == len(recs)
+    for got, want in zip(back.layers, recs):
+        assert got.kind == want.kind
+        assert got.in_dim == want.in_dim
+        assert got.out_dim == want.out_dim
+        assert got.pool == want.pool
+        if want.kind == KIND_FP_CONV:
+            assert np.array_equal(got.weights_i8, want.weights_i8)
+        else:
+            assert np.array_equal(got.weights_bits, want.weights_bits)
+        if want.kind == KIND_BIN_FC_OUT:
+            np.testing.assert_allclose(got.scale, want.scale)
+            np.testing.assert_allclose(got.bias, want.bias)
+        else:
+            assert np.array_equal(got.thresholds, want.thresholds)
+
+
+def test_layer_kind_sequence(tmp_path):
+    recs = random_records(TINY, seed=0)
+    kinds = [r.kind for r in recs]
+    assert kinds[0] == KIND_FP_CONV
+    assert all(k == KIND_BIN_CONV for k in kinds[1 : len(TINY.conv)])
+    assert all(k == KIND_BIN_FC for k in kinds[len(TINY.conv) : -1])
+    assert kinds[-1] == KIND_BIN_FC_OUT
+
+
+def test_truncated_file_rejected(tmp_path):
+    recs = random_records(TINY, seed=1)
+    path = tmp_path / "m.bcnn"
+    write_bcnn(path, records_to_bcnn(recs, TINY, "t"))
+    data = path.read_bytes()
+    bad = tmp_path / "bad.bcnn"
+    bad.write_bytes(data[: len(data) // 2])
+    with pytest.raises(ValueError):
+        read_bcnn(bad)
+
+
+def test_bad_magic_rejected(tmp_path):
+    bad = tmp_path / "bad.bcnn"
+    bad.write_bytes(b"NOPE" + b"\0" * 64)
+    with pytest.raises(ValueError, match="magic"):
+        read_bcnn(bad)
+
+
+def test_trailing_bytes_rejected(tmp_path):
+    recs = random_records(TINY, seed=2)
+    path = tmp_path / "m.bcnn"
+    write_bcnn(path, records_to_bcnn(recs, TINY, "t"))
+    bad = tmp_path / "bad.bcnn"
+    bad.write_bytes(path.read_bytes() + b"\x00")
+    with pytest.raises(ValueError, match="trailing"):
+        read_bcnn(bad)

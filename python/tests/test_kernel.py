@@ -1,0 +1,230 @@
+"""Kernel-vs-ref sweeps — the CORE L1 correctness signal.
+
+Hypothesis drives shapes and values through each Pallas kernel and asserts
+bit-exact agreement with the pure-jnp oracles in ``compile.kernels.ref``.
+Everything here is integer/bit arithmetic, so the comparison is
+``array_equal``, not allclose.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.binary_conv import xnor_gemm
+from compile.kernels.fp_conv import fp_gemm
+from compile.kernels.maxpool import maxpool2x2
+from compile.kernels.norm_binarize import norm_affine, norm_binarize
+from compile.kernels.ref import (
+    fp_gemm_ref,
+    maxpool2x2_ref,
+    norm_affine_ref,
+    norm_binarize_ref,
+    xnor_gemm_ref,
+)
+from compile.packing import pack_bits_jnp
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# xnor_gemm
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 80),
+    kw=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xnor_gemm_matches_ref(m, n, kw, seed):
+    rng = _rng(seed)
+    k = kw * 32
+    a = pack_bits_jnp(jnp.asarray(rng.integers(0, 2, (m, k))))
+    w = pack_bits_jnp(jnp.asarray(rng.integers(0, 2, (n, k))))
+    got = np.asarray(xnor_gemm(a, w, k))
+    want = np.asarray(xnor_gemm_ref(a, w, k))
+    assert np.array_equal(got, want)
+
+
+@settings(**SETTINGS)
+@given(
+    kw=st.integers(1, 8),
+    tail=st.integers(1, 31),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xnor_gemm_partial_last_word(kw, tail, seed):
+    """k_bits not a multiple of 32: pad bits are zero in both operands and
+    must not affect the match count."""
+    rng = _rng(seed)
+    k = (kw - 1) * 32 + tail
+    m, n = 17, 13
+    a_bits = np.zeros((m, kw * 32), np.int32)
+    w_bits = np.zeros((n, kw * 32), np.int32)
+    a_bits[:, :k] = rng.integers(0, 2, (m, k))
+    w_bits[:, :k] = rng.integers(0, 2, (n, k))
+    a = pack_bits_jnp(jnp.asarray(a_bits))
+    w = pack_bits_jnp(jnp.asarray(w_bits))
+    got = np.asarray(xnor_gemm(a, w, k))
+    want = np.asarray(xnor_gemm_ref(a, w, k))
+    assert np.array_equal(got, want)
+    assert got.min() >= 0 and got.max() <= k
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (16, 64), (64, 16)])
+def test_xnor_gemm_block_shape_invariance(bm, bn):
+    """Output must not depend on the BlockSpec tiling."""
+    rng = _rng(7)
+    m, n, k = 70, 33, 96
+    a = pack_bits_jnp(jnp.asarray(rng.integers(0, 2, (m, k))))
+    w = pack_bits_jnp(jnp.asarray(rng.integers(0, 2, (n, k))))
+    base = np.asarray(xnor_gemm(a, w, k))
+    got = np.asarray(xnor_gemm(a, w, k, bm=bm, bn=bn))
+    assert np.array_equal(base, got)
+
+
+def test_xnor_gemm_identity_rows():
+    """a == w rows give the full match count k."""
+    rng = _rng(3)
+    k = 64
+    bits = rng.integers(0, 2, (5, k))
+    p = pack_bits_jnp(jnp.asarray(bits))
+    out = np.asarray(xnor_gemm(p, p, k))
+    assert np.array_equal(np.diag(out), np.full(5, k))
+
+
+def test_xnor_gemm_complement_rows():
+    """complemented rows give 0 matches."""
+    rng = _rng(4)
+    k = 96
+    bits = rng.integers(0, 2, (4, k))
+    a = pack_bits_jnp(jnp.asarray(bits))
+    w = pack_bits_jnp(jnp.asarray(1 - bits))
+    out = np.asarray(xnor_gemm(a, w, k))
+    assert np.array_equal(np.diag(out), np.zeros(4, np.int32))
+
+
+def test_xnor_gemm_rejects_bad_shapes():
+    a = jnp.zeros((4, 3), jnp.uint32)
+    w = jnp.zeros((4, 2), jnp.uint32)
+    with pytest.raises(ValueError):
+        xnor_gemm(a, w, 64)
+    with pytest.raises(ValueError):
+        xnor_gemm(a, jnp.zeros((4, 3), jnp.uint32), 0)
+    with pytest.raises(ValueError):
+        xnor_gemm(a, jnp.zeros((4, 3), jnp.uint32), 97)
+
+
+# ---------------------------------------------------------------------------
+# fp_gemm (first layer)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 64),
+    k=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fp_gemm_matches_ref(m, n, k, seed):
+    rng = _rng(seed)
+    a = jnp.asarray(rng.integers(-31, 32, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(-1, 2, (n, k)), jnp.int32)
+    got = np.asarray(fp_gemm(a, w))
+    want = np.asarray(fp_gemm_ref(a, w))
+    assert np.array_equal(got, want)
+
+
+def test_fp_gemm_6bit_range_no_overflow():
+    """Worst-case layer-1 magnitude: 31 * 27 taps = 837 << int32 max."""
+    a = jnp.full((4, 27), 31, jnp.int32)
+    w = jnp.full((4, 27), 1, jnp.int32)
+    out = np.asarray(fp_gemm(a, w))
+    assert np.all(out == 31 * 27)
+
+
+# ---------------------------------------------------------------------------
+# norm_binarize / norm_affine
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 300),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_norm_binarize_matches_ref(m, n, seed):
+    rng = _rng(seed)
+    y = jnp.asarray(rng.integers(-1200, 1200, (m, n)), jnp.int32)
+    c = jnp.asarray(rng.integers(-600, 600, (n,)), jnp.int32)
+    got = np.asarray(norm_binarize(y, c))
+    want = np.asarray(norm_binarize_ref(y, c))
+    assert np.array_equal(got, want)
+
+
+def test_norm_binarize_boundary_is_ge():
+    """Paper eq. 8: y == c must produce 1 (>= not >)."""
+    y = jnp.asarray([[5, -3]], jnp.int32)
+    c = jnp.asarray([5, -3], jnp.int32)
+    assert np.array_equal(np.asarray(norm_binarize(y, c)), [[1, 1]])
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 128), n=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_norm_affine_matches_ref(m, n, seed):
+    rng = _rng(seed)
+    y = jnp.asarray(rng.integers(-500, 500, (m, n)), jnp.int32)
+    s = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    got = np.asarray(norm_affine(y, s, b))
+    want = np.asarray(norm_affine_ref(y, s, b))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# maxpool2x2
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    hw=st.sampled_from([2, 4, 8, 16]),
+    c=st.sampled_from([1, 3, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(b, hw, c, seed):
+    rng = _rng(seed)
+    y = jnp.asarray(rng.integers(-1000, 1000, (b, hw, hw, c)), jnp.int32)
+    got = np.asarray(maxpool2x2(y))
+    want = np.asarray(maxpool2x2_ref(y))
+    assert np.array_equal(got, want)
+
+
+def test_maxpool_rejects_odd():
+    with pytest.raises(ValueError):
+        maxpool2x2(jnp.zeros((1, 3, 4, 2), jnp.int32))
+
+
+def test_maxpool_commutes_with_binarize():
+    """Monotone threshold => NB(MP(y)) == OR-pool(NB(y)) (paper §5.2: MP in
+    pipeline with conv before NB)."""
+    rng = _rng(11)
+    y = jnp.asarray(rng.integers(-50, 50, (2, 8, 8, 16)), jnp.int32)
+    c = jnp.asarray(rng.integers(-20, 20, (16,)), jnp.int32)
+    pooled_then_nb = np.asarray(
+        norm_binarize(np.asarray(maxpool2x2(y)).reshape(-1, 16), c)
+    )
+    nb = np.asarray(norm_binarize(np.asarray(y).reshape(-1, 16), c)).reshape(2, 8, 8, 16)
+    nb_then_pool = np.asarray(maxpool2x2_ref(jnp.asarray(nb))).reshape(-1, 16)
+    assert np.array_equal(pooled_then_nb, nb_then_pool)

@@ -1,0 +1,156 @@
+"""L2 model tests: hardware path vs training path, shapes, config algebra."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as data_mod
+from compile.model import (
+    CONFIGS,
+    SMALL,
+    TABLE2,
+    TINY,
+    forward_packed,
+    forward_train,
+    im2col_int,
+    im2col_packed,
+    init_train_params,
+)
+from compile.train import fold_params, random_records, records_to_jnp_params
+
+
+def test_table2_matches_paper():
+    """Table 2 of the paper, exactly."""
+    shapes = TABLE2.conv_shapes()
+    assert [(s[0], s[1]) for s in shapes] == [
+        (3, 128),
+        (128, 128),
+        (128, 256),
+        (256, 256),
+        (256, 512),
+        (512, 512),
+    ]
+    assert [s[3] for s in shapes] == [32, 16, 16, 8, 8, 4]  # output hw
+    assert TABLE2.fc_shapes() == [(8192, 1024), (1024, 1024), (1024, 10)]
+    assert TABLE2.num_layers == 9
+
+
+def test_table2_cnum():
+    """cnum_l = FW*FH*FD (paper eq. 6)."""
+    assert TABLE2.cnum(1) == 27
+    assert TABLE2.cnum(2) == 9 * 128
+    assert TABLE2.cnum(6) == 9 * 512
+    assert TABLE2.cnum(7) == 8192
+    assert TABLE2.cnum(9) == 1024
+
+
+def test_table2_ops_per_image():
+    """The paper's 7663-GOPS figure implies ~1.23 GOP/image at 6218 FPS."""
+    ops = TABLE2.ops_per_image()
+    assert ops == 2 * (
+        32 * 32 * 128 * 27
+        + 32 * 32 * 128 * 9 * 128
+        + 16 * 16 * 256 * 9 * 128
+        + 16 * 16 * 256 * 9 * 256
+        + 8 * 8 * 512 * 9 * 256
+        + 8 * 8 * 512 * 9 * 512
+        + 8192 * 1024
+        + 1024 * 1024
+        + 1024 * 10
+    )
+    assert abs(ops * 6218 / 1e9 - 7663) / 7663 < 0.02
+
+
+@pytest.mark.parametrize("name", ["tiny", "small"])
+def test_forward_packed_shapes(name):
+    cfg = CONFIGS[name]
+    recs = random_records(cfg, seed=1)
+    params = records_to_jnp_params(recs)
+    x = jnp.zeros((2, cfg.input_hw, cfg.input_hw, cfg.input_channels), jnp.int32)
+    scores = forward_packed(params, x, cfg)
+    assert scores.shape == (2, cfg.classes)
+    assert scores.dtype == jnp.float32
+
+
+def test_im2col_int_center_pixel():
+    """The (1,1) tap of the patch at pixel (i,j) is the pixel itself."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-31, 32, (1, 4, 4, 3)), jnp.int32)
+    patches = np.asarray(im2col_int(x)).reshape(4, 4, 9, 3)
+    assert np.array_equal(patches[:, :, 4, :], np.asarray(x)[0])
+
+
+def test_im2col_int_zero_border():
+    """Corner patch: taps outside the image are zero."""
+    x = jnp.ones((1, 4, 4, 1), jnp.int32)
+    patches = np.asarray(im2col_int(x)).reshape(4, 4, 9)
+    # pixel (0,0): taps (0..2, 0..2) centred there; kh=0 row and kw=0 col pad
+    assert patches[0, 0, 0] == 0 and patches[0, 0, 1] == 0 and patches[0, 0, 3] == 0
+    assert patches[0, 0, 4] == 1
+
+
+def test_im2col_packed_matches_int_path():
+    """Packed im2col == pack(im2col of unpacked bits with 0-padding)."""
+    from compile.packing import pack_bits_jnp, unpack_bits_jnp
+
+    rng = np.random.default_rng(1)
+    b, h, c = 2, 4, 32
+    bits = rng.integers(0, 2, (b, h, h, c))
+    a = pack_bits_jnp(jnp.asarray(bits))
+    got = np.asarray(im2col_packed(a))
+    # reference: pad bit tensor, gather patches, pack
+    p = np.pad(bits, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    taps = [p[:, dh : dh + h, dw : dw + h, :] for dh in range(3) for dw in range(3)]
+    ref_bits = np.concatenate(taps, axis=-1).reshape(b * h * h, 9 * c)
+    want = np.asarray(pack_bits_jnp(jnp.asarray(ref_bits)))
+    assert np.array_equal(got, want)
+
+
+def test_train_and_packed_paths_agree_tiny():
+    """After threshold folding, the integer hardware path reproduces the
+    float training path's scores (to float tolerance) and predictions."""
+    cfg = TINY
+    params = init_train_params(cfg, jax.random.PRNGKey(2))
+    # jitter BN stats away from defaults so thresholds are non-trivial
+    for l in range(1, cfg.num_layers + 1):
+        bn = dict(params[f"bn{l}"])
+        key = jax.random.PRNGKey(100 + l)
+        k1, k2 = jax.random.split(key)
+        bn["mean"] = jax.random.normal(k1, bn["mean"].shape) * 3.0
+        bn["var"] = jnp.abs(jax.random.normal(k2, bn["var"].shape)) * 5.0 + 0.5
+        params[f"bn{l}"] = bn
+    x, _, _, _ = data_mod.make_dataset(16, 1, hw=cfg.input_hw, seed=3)
+    s_train, _ = forward_train(params, jnp.asarray(x, jnp.float32), cfg, train=False)
+    recs = fold_params(params, cfg)
+    s_packed = forward_packed(records_to_jnp_params(recs), jnp.asarray(x), cfg)
+    np.testing.assert_allclose(
+        np.asarray(s_train), np.asarray(s_packed), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_batch_invariance():
+    """forward_packed on a batch equals per-image forward (no cross-batch
+    leakage — required for the coordinator's dynamic batching)."""
+    cfg = TINY
+    recs = random_records(cfg, seed=5)
+    params = records_to_jnp_params(recs)
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.integers(-31, 32, (4, cfg.input_hw, cfg.input_hw, 3)), jnp.int32)
+    full = np.asarray(forward_packed(params, x, cfg))
+    singles = np.concatenate(
+        [np.asarray(forward_packed(params, x[i : i + 1], cfg)) for i in range(4)]
+    )
+    np.testing.assert_allclose(full, singles, rtol=1e-5, atol=1e-5)
+
+
+def test_fold_rejects_nonpositive_gamma():
+    cfg = TINY
+    params = init_train_params(cfg, jax.random.PRNGKey(0))
+    bn = dict(params["bn1"])
+    bn["gamma"] = bn["gamma"].at[0].set(-1.0)
+    params["bn1"] = bn
+    with pytest.raises(ValueError, match="gamma"):
+        fold_params(params, cfg)

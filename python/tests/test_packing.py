@@ -1,0 +1,70 @@
+"""Property tests for the bit-packing layer shared with Rust."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.packing import (
+    pack_bits_jnp,
+    pack_bits_np64,
+    unpack_bits_jnp,
+    unpack_bits_np64,
+)
+
+SETTINGS = dict(max_examples=50, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 8), kw=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_jnp_roundtrip(m, kw, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (m, kw * 32))
+    packed = pack_bits_jnp(jnp.asarray(bits))
+    assert packed.dtype == jnp.uint32
+    back = np.asarray(unpack_bits_jnp(packed, kw * 32))
+    assert np.array_equal(back, bits)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 5), k=st.integers(1, 200), seed=st.integers(0, 2**31 - 1))
+def test_np64_roundtrip_any_k(m, k, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (m, k))
+    packed = pack_bits_np64(bits)
+    assert packed.shape == (m, (k + 63) // 64)
+    assert np.array_equal(unpack_bits_np64(packed, k), bits)
+
+
+@settings(**SETTINGS)
+@given(kw=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_u32_and_u64_packings_agree(kw, seed):
+    """The uint32 (jax-side) and uint64 (.bcnn-side) packings describe the
+    same bit string: u64 word w == u32[2w] | u32[2w+1] << 32."""
+    rng = np.random.default_rng(seed)
+    k = kw * 64
+    bits = rng.integers(0, 2, (3, k))
+    p32 = np.asarray(pack_bits_jnp(jnp.asarray(bits))).astype(np.uint64)
+    p64 = pack_bits_np64(bits)
+    lo = p32[:, 0::2]
+    hi = p32[:, 1::2]
+    assert np.array_equal(p64, lo | (hi << np.uint64(32)))
+
+
+def test_lsb_first():
+    """Bit 0 of word 0 is element 0."""
+    bits = np.zeros((1, 32), np.int32)
+    bits[0, 0] = 1
+    assert int(np.asarray(pack_bits_jnp(jnp.asarray(bits)))[0, 0]) == 1
+    bits[0, 0] = 0
+    bits[0, 31] = 1
+    assert int(np.asarray(pack_bits_jnp(jnp.asarray(bits)))[0, 0]) == 2**31
+
+
+def test_rejects_non_multiple():
+    with pytest.raises(ValueError):
+        pack_bits_jnp(jnp.zeros((2, 33), jnp.int32))
+    with pytest.raises(ValueError):
+        unpack_bits_jnp(jnp.zeros((2, 2), jnp.uint32), 33)

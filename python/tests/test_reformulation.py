@@ -1,0 +1,91 @@
+"""Proofs (by exhaustive/property test) of the paper's §3 reformulation.
+
+The paper's hardware never computes the ±1 convolution of eq. (3); it
+computes the 1/0 match count of eq. (5) and compensates in the threshold
+(eq. 6, 8).  These tests pin the algebra the whole stack rests on.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import conv_pm1_ref, norm_binarize_ref, xnor_gemm_ref
+from compile.packing import bits_to_pm1, pack_bits_jnp, pm1_to_bits
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 16),
+    n=st.integers(1, 16),
+    kw=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_eq6_compensation_exact(m, n, kw, seed):
+    """y_lo = 2*y_l - cnum (paper eq. 6), for all inputs."""
+    rng = np.random.default_rng(seed)
+    k = kw * 32
+    a_bits = rng.integers(0, 2, (m, k))
+    w_bits = rng.integers(0, 2, (n, k))
+    y_l = np.asarray(
+        xnor_gemm_ref(
+            pack_bits_jnp(jnp.asarray(a_bits)), pack_bits_jnp(jnp.asarray(w_bits)), k
+        )
+    )
+    y_lo = np.asarray(
+        conv_pm1_ref(jnp.asarray(bits_to_pm1(a_bits)), jnp.asarray(bits_to_pm1(w_bits)))
+    )
+    assert np.array_equal(y_lo, 2 * y_l - k)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 32))
+def test_eq8_threshold_equals_bn_sign(seed, n):
+    """NormBinarize(y_l, c_l) == Binarize(BN(y_lo)) with
+    c_l = ceil((cnum + mu - beta*sigma'/gamma) / 2) — the paper §3.2 fold
+    (ceil instead of round-to-nearest keeps the compare exact for integer
+    y_l; ties BN(y_lo) == 0 binarize to 1 per eq. 4)."""
+    rng = np.random.default_rng(seed)
+    cnum = int(rng.integers(8, 512))
+    m = 64
+    y_l = rng.integers(0, cnum + 1, (m, n))
+    y_lo = 2 * y_l - cnum
+    gamma = rng.uniform(0.05, 2.0, n)
+    beta = rng.normal(0, 1.0, n)
+    mu = rng.normal(0, cnum / 4, n)
+    var = rng.uniform(0.5, cnum, n)
+    eps = 1e-4
+    sigma = np.sqrt(var + eps)
+    # software path: batch-norm then sign
+    z = (y_lo - mu) / sigma * gamma + beta
+    soft = (z >= 0).astype(np.int32)
+    # hardware path: integer threshold compare
+    t = mu - beta * sigma / gamma
+    c = np.ceil((t + cnum) / 2.0).astype(np.int64)
+    hard = np.asarray(
+        norm_binarize_ref(jnp.asarray(y_l, jnp.int32), jnp.asarray(c, jnp.int32))
+    )
+    # exclude razor-thin float ties (|z| ~ 0), measure-zero for trained nets
+    safe = np.abs(z) > 1e-9
+    assert np.array_equal(hard[safe], soft[safe])
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_pm1_bit_encoding_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    v = rng.choice([-1, 1], 257)
+    assert np.array_equal(bits_to_pm1(pm1_to_bits(v)), v)
+
+
+def test_padding_is_minus_one():
+    """Packed-domain zero-padding = 0 bits = -1 activations: a padded tap
+    against weight bit w contributes XNOR(0, w) = 1-w matches, i.e. the ±1
+    product (-1)*(2w-1).  Exhaustive over the bit."""
+    for w_bit in (0, 1):
+        xnor = 1 - (0 ^ w_bit)
+        pm1_product = (-1) * (2 * w_bit - 1)
+        assert 2 * xnor - 1 == pm1_product

@@ -1,0 +1,94 @@
+//! Bench: the native engine hot path — per-config image latency, per-layer
+//! breakdown, and effective bit-op rate.  This is the §Perf workload
+//! (EXPERIMENTS.md records before/after for each optimization step).
+//!
+//! Run: `cargo bench --bench engine_hotpath`
+
+use std::time::Duration;
+
+use repro::bcnn::{Engine, LayerOutput};
+use repro::benchkit::{bench_with, fmt_ns, BenchOpts, Table};
+use repro::coordinator::workload::random_images;
+use repro::model::BcnnModel;
+
+fn opts(ms: u64) -> BenchOpts {
+    BenchOpts {
+        warmup: Duration::from_millis(200),
+        samples: 12,
+        min_batch_time: Duration::from_millis(ms),
+        budget: Duration::from_secs(15),
+    }
+}
+
+fn main() {
+    let mut t = Table::new(&["config", "ms/image", "img/s", "GOPS", "Gbitop/s"]);
+    for name in ["tiny", "small", "table2"] {
+        let model = BcnnModel::load(format!("artifacts/model_{name}.bcnn"))
+            .expect("run `make artifacts` first");
+        let cfg = model.config();
+        let engine = Engine::new(model);
+        let images = random_images(&cfg, 4, 11);
+        let mut scratch = repro::bcnn::engine::Scratch::default();
+        let mut idx = 0usize;
+        let stats = bench_with(opts(30), &mut || {
+            let img = &images[idx % images.len()];
+            idx += 1;
+            std::hint::black_box(engine.infer_with_scratch(img, &mut scratch).unwrap());
+        });
+        let fps = stats.per_second();
+        let ops = cfg.ops_per_image() as f64;
+        t.row(&[
+            name.to_string(),
+            format!("{:.3}", stats.median_ns / 1e6),
+            format!("{fps:.1}"),
+            format!("{:.2}", ops * fps / 1e9),
+            format!("{:.2}", ops * fps / 2.0 / 1e9), // XNOR+acc pairs
+        ]);
+    }
+    println!("=== native engine hot path (single core) ===");
+    t.print();
+
+    // per-layer breakdown on table2 (where the time goes)
+    let model = BcnnModel::load("artifacts/model_table2.bcnn").unwrap();
+    let cfg = model.config();
+    let engine = Engine::new(model);
+    let img = random_images(&cfg, 1, 12).pop().unwrap();
+    let n_layers = engine.model().layers.len();
+
+    println!("\n=== per-layer breakdown (table2) ===");
+    let mut t = Table::new(&["layer", "median", "share%"]);
+    // capture inputs to each layer once (iterate the ENGINE's layers so
+    // the prepared-weight fast paths engage, as in real inference)
+    let mut acts = Vec::new();
+    let mut act = repro::bcnn::Activation::Int {
+        hw: cfg.input_hw,
+        c: cfg.input_channels,
+        data: img.clone(),
+    };
+    for i in 0..n_layers {
+        acts.push(act.clone());
+        match engine.run_layer(&engine.model().layers[i], &act).unwrap() {
+            LayerOutput::Act(a) => act = a,
+            LayerOutput::Scores(_) => break,
+        }
+    }
+    let mut medians = Vec::new();
+    for (i, input) in acts.iter().enumerate() {
+        let stats = bench_with(opts(20), &mut || {
+            std::hint::black_box(
+                engine.run_layer(&engine.model().layers[i], input).unwrap(),
+            );
+        });
+        medians.push(stats.median_ns);
+    }
+    let total: f64 = medians.iter().sum();
+    for (i, m) in medians.iter().enumerate() {
+        t.row(&[
+            format!("layer {}", i + 1),
+            fmt_ns(*m),
+            format!("{:.1}", 100.0 * m / total),
+        ]);
+    }
+    t.row(&["TOTAL".into(), fmt_ns(total), "100.0".into()]);
+    t.print();
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate paper Table 3 (optimized UF/P and per-layer cycles)
+//! from the throughput model + optimizer, and time the optimizer search.
+//!
+//! Run: `cargo bench --bench table3_cycles`
+
+use repro::benchkit::{bench, fmt_ns};
+use repro::model::NetConfig;
+use repro::optimizer::{optimize, OptimizeOptions};
+use repro::tables;
+
+fn main() {
+    println!("=== Table 3 (paper design point, model columns) ===");
+    println!("{}", tables::table3(&tables::default_plan()));
+
+    println!("=== Table 3 (optimizer-derived plan) ===");
+    let plan = tables::optimized_plan().expect("optimize table2");
+    println!("{}", tables::table3(&plan));
+
+    let stats = bench(|| {
+        std::hint::black_box(
+            optimize(&NetConfig::table2(), &OptimizeOptions::default()).unwrap(),
+        );
+    });
+    println!(
+        "optimizer search latency: median {} (p95 {}, n={})",
+        fmt_ns(stats.median_ns),
+        fmt_ns(stats.p95_ns),
+        stats.iters
+    );
+}

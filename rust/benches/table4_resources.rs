@@ -1,0 +1,44 @@
+//! Bench: regenerate paper Table 4 (resource utilization) from the
+//! resource model, for both the paper's design point and the optimizer's,
+//! plus the power-model breakdown behind Table 5's 8.2 W.
+//!
+//! Run: `cargo bench --bench table4_resources`
+
+use repro::benchkit::Table;
+use repro::fpga::power::power;
+use repro::fpga::DEFAULT_FREQ_HZ;
+use repro::tables;
+
+fn main() {
+    println!("=== Table 4 (paper design point) ===");
+    let plan = tables::default_plan();
+    println!("{}", tables::table4(&plan));
+
+    println!("=== Table 4 (optimizer-derived plan) ===");
+    let opt = tables::optimized_plan().expect("optimize");
+    println!("{}", tables::table4(&opt));
+
+    // per-layer breakdown (not in the paper; model introspection)
+    println!("=== per-layer resource breakdown (paper design point) ===");
+    let mut t = Table::new(&["layer", "LUTs", "BRAMs", "registers", "DSPs"]);
+    for (l, r) in plan.layers.iter().zip(&plan.resources.per_layer) {
+        t.row(&[
+            l.geom.name.clone(),
+            r.luts.to_string(),
+            r.brams.to_string(),
+            r.registers.to_string(),
+            r.dsps.to_string(),
+        ]);
+    }
+    t.print();
+
+    let p = power(&plan.resources, DEFAULT_FREQ_HZ);
+    println!(
+        "\npower model: static {:.2} W + LUT {:.2} W + BRAM {:.2} W + DSP {:.2} W = {:.2} W (paper: 8.2 W)",
+        p.static_w,
+        p.lut_w,
+        p.bram_w,
+        p.dsp_w,
+        p.total_w()
+    );
+}

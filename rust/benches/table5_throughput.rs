@@ -1,0 +1,51 @@
+//! Bench: regenerate paper Table 5 (cross-accelerator comparison) and
+//! measure the *actual* native-engine hot path on this host for contrast
+//! (the simulator row reproduces the paper's Virtex-7 claim; the native
+//! engine number is this machine's packed-popcount throughput).
+//!
+//! Run: `cargo bench --bench table5_throughput`
+
+use std::time::Duration;
+
+use repro::bcnn::Engine;
+use repro::benchkit::{bench_with, fmt_ns, BenchOpts};
+use repro::coordinator::workload::random_images;
+use repro::model::{BcnnModel, NetConfig};
+use repro::tables;
+
+fn main() {
+    println!("=== Table 5 (paper design point) ===");
+    println!("{}", tables::table5(&tables::default_plan()));
+
+    // measured: native engine on the full Table-2 network
+    let model =
+        BcnnModel::load("artifacts/model_table2.bcnn").expect("run `make artifacts` first");
+    let engine = Engine::new(model);
+    let cfg = NetConfig::table2();
+    let images = random_images(&cfg, 4, 3);
+    let mut idx = 0usize;
+    let mut scratch = repro::bcnn::engine::Scratch::default();
+    let stats = bench_with(
+        BenchOpts {
+            warmup: Duration::from_millis(300),
+            samples: 10,
+            min_batch_time: Duration::from_millis(50),
+            budget: Duration::from_secs(20),
+        },
+        &mut || {
+            let img = &images[idx % images.len()];
+            idx += 1;
+            std::hint::black_box(engine.infer_with_scratch(img, &mut scratch).unwrap());
+        },
+    );
+    let ops = cfg.ops_per_image() as f64;
+    let fps = stats.per_second();
+    println!("native engine on this host (single core), Table-2 network:");
+    println!("  per image : median {}", fmt_ns(stats.median_ns));
+    println!("  throughput: {fps:.1} img/s");
+    println!("  effective : {:.1} GOPS (binary-op accounting)", ops * fps / 1e9);
+    println!(
+        "  note: paper FPGA = 7663 GOPS @ 8.2 W; this host's engine is the\n\
+         functional model / serving hot path, not the accelerator claim"
+    );
+}

@@ -1,0 +1,497 @@
+//! The packed XNOR+popcount inference engine (paper fig. 3, bit-exact).
+//!
+//! Per layer: `XnorDotProduct` = `cnum - popcount(patch ^ weights)` over
+//! packed `u64` rows (paper eq. 5/6), optional 2x2/2 max-pool on the
+//! *integer* accumulator plane, then the folded `NormBinarize` threshold
+//! compare (eq. 8).  The first layer is the 6-bit x ±1 integer dot product
+//! of eq. 7.  Padding inserts zero bits = -1 activations, keeping
+//! `cnum = FW*FH*FD` constant across the border exactly like the paper's
+//! fixed-size PE datapath.
+//!
+//! The engine is allocation-free on the per-image path after construction:
+//! patch/accumulator scratch lives in a per-call [`Scratch`] arena that the
+//! coordinator reuses across requests.
+
+use anyhow::{bail, Result};
+
+use crate::bcnn::tensor::{Activation, BitFmap};
+use crate::model::{BcnnModel, LayerWeights};
+use crate::util::bits::{copy_bits, words_for, xor_popcount};
+
+/// Output of one layer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerOutput {
+    Act(Activation),
+    /// Classifier scores (only from the final layer).
+    Scores(Vec<f32>),
+}
+
+/// Reusable scratch buffers (one per worker thread).
+#[derive(Debug, Default, Clone)]
+pub struct Scratch {
+    patch: Vec<u64>,
+    int_patch: Vec<i32>,
+    mismatch: Vec<u64>,
+}
+
+/// Packed-u64 inference engine over a loaded model.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    model: BcnnModel,
+    /// PERF (EXPERIMENTS.md §Perf iter 2): first-layer weights transposed
+    /// to `[k][out_c]` and widened to i32 at load time, so the per-tap
+    /// filter loop is a unit-stride vectorizable MAC over out_c lanes.
+    fp_weights_t: Vec<Vec<i32>>,
+    /// PERF (EXPERIMENTS.md §Perf iter 4): binary conv weights transposed
+    /// to `[word][out_c]` so the XNOR dot products of all filters
+    /// accumulate *vertically* (one vpopcntq lane per filter) instead of
+    /// horizontally reducing per filter.
+    bin_weights_t: Vec<Vec<u64>>,
+}
+
+impl Engine {
+    pub fn new(model: BcnnModel) -> Self {
+        let fp_weights_t = model
+            .layers
+            .iter()
+            .map(|layer| match layer {
+                LayerWeights::FpConv { in_c, out_c, weights, .. } => {
+                    let k = 9 * in_c;
+                    let mut t = vec![0i32; k * out_c];
+                    for n in 0..*out_c {
+                        for kk in 0..k {
+                            t[kk * out_c + n] = weights[n * k + kk] as i32;
+                        }
+                    }
+                    t
+                }
+                _ => Vec::new(),
+            })
+            .collect();
+        let bin_weights_t = model
+            .layers
+            .iter()
+            .map(|layer| match layer {
+                LayerWeights::BinConv { out_c, weights, words_per_row, .. } => {
+                    let mut t = vec![0u64; weights.len()];
+                    for n in 0..*out_c {
+                        for w in 0..*words_per_row {
+                            t[w * out_c + n] = weights[n * words_per_row + w];
+                        }
+                    }
+                    t
+                }
+                _ => Vec::new(),
+            })
+            .collect();
+        Self { model, fp_weights_t, bin_weights_t }
+    }
+
+    pub fn model(&self) -> &BcnnModel {
+        &self.model
+    }
+
+    /// Classify one image (`hw*hw*input_channels` NHWC int values in the
+    /// 6-bit range).  Returns per-class scores.
+    pub fn infer(&self, image: &[i32]) -> Result<Vec<f32>> {
+        self.infer_with_scratch(image, &mut Scratch::default())
+    }
+
+    /// Allocation-reusing variant for the serving hot path.
+    pub fn infer_with_scratch(&self, image: &[i32], scratch: &mut Scratch) -> Result<Vec<f32>> {
+        let hw = self.model.input_hw;
+        let c = self.model.input_channels;
+        if image.len() != hw * hw * c {
+            bail!("image size {} != {}", image.len(), hw * hw * c);
+        }
+        let mut act = Activation::Int { hw, c, data: image.to_vec() };
+        for (i, layer) in self.model.layers.iter().enumerate() {
+            match self.run_layer_scratch(layer, &act, scratch)? {
+                LayerOutput::Act(next) => act = next,
+                LayerOutput::Scores(s) => {
+                    if i + 1 != self.model.layers.len() {
+                        bail!("classifier layer {i} is not last");
+                    }
+                    return Ok(s);
+                }
+            }
+        }
+        bail!("model has no classifier layer")
+    }
+
+    /// Batch inference (images processed independently; the FPGA streaming
+    /// architecture is batch-insensitive, and so is this loop).
+    pub fn infer_batch(&self, images: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+        let mut scratch = Scratch::default();
+        images
+            .iter()
+            .map(|img| self.infer_with_scratch(img, &mut scratch))
+            .collect()
+    }
+
+    /// Run a single layer — the functional core shared with the FPGA
+    /// simulator (`fpga::stream` drives layers one phase at a time).
+    pub fn run_layer(&self, layer: &LayerWeights, input: &Activation) -> Result<LayerOutput> {
+        self.run_layer_scratch(layer, input, &mut Scratch::default())
+    }
+
+    pub fn run_layer_scratch(
+        &self,
+        layer: &LayerWeights,
+        input: &Activation,
+        scratch: &mut Scratch,
+    ) -> Result<LayerOutput> {
+        match layer {
+            LayerWeights::FpConv { in_c, out_c, pool, weights, thresholds } => {
+                let Activation::Int { hw, c, data } = input else {
+                    bail!("FpConv expects integer input");
+                };
+                if c != in_c {
+                    bail!("FpConv channel mismatch: {c} != {in_c}");
+                }
+                // use the transposed weights if this layer is ours
+                let transposed = self
+                    .model
+                    .layers
+                    .iter()
+                    .position(|l| std::ptr::eq(l, layer))
+                    .map(|i| self.fp_weights_t[i].as_slice())
+                    .filter(|t| !t.is_empty());
+                let y = match transposed {
+                    Some(wt) => fp_conv3x3_transposed(data, *hw, *in_c, *out_c, wt, scratch),
+                    None => fp_conv3x3(data, *hw, *in_c, *out_c, weights, scratch),
+                };
+                let (y, out_hw) = maybe_pool(y, *hw, *out_c, *pool);
+                Ok(LayerOutput::Act(Activation::Bits(threshold_plane(
+                    &y, out_hw, *out_c, thresholds,
+                ))))
+            }
+            LayerWeights::BinConv { in_c, out_c, pool, words_per_row, thresholds, .. } => {
+                let Activation::Bits(fmap) = input else {
+                    bail!("BinConv expects binary input");
+                };
+                if fmap.c != *in_c {
+                    bail!("BinConv channel mismatch: {} != {in_c}", fmap.c);
+                }
+                let transposed = self
+                    .model
+                    .layers
+                    .iter()
+                    .position(|l| std::ptr::eq(l, layer))
+                    .map(|i| self.bin_weights_t[i].as_slice())
+                    .filter(|t| !t.is_empty());
+                // (PERF iter 5, REVERTED: fusing NormBinarize into the
+                // conv loop for non-pooling layers measured -3% — the
+                // accumulator plane is L2-resident, so skipping it bought
+                // nothing.  See EXPERIMENTS.md §Perf.)
+                let y = match transposed {
+                    Some(wt) => bin_conv3x3_transposed(
+                        fmap,
+                        wt,
+                        *in_c,
+                        *out_c,
+                        *words_per_row,
+                        scratch,
+                    ),
+                    None => bin_conv3x3(fmap, layer, *in_c, *out_c, *words_per_row, scratch),
+                };
+                let (y, out_hw) = maybe_pool(y, fmap.hw, *out_c, *pool);
+                Ok(LayerOutput::Act(Activation::Bits(threshold_plane(
+                    &y, out_hw, *out_c, thresholds,
+                ))))
+            }
+            LayerWeights::BinFc { in_f, out_f, words_per_row, thresholds, .. } => {
+                let row = flatten_input(input, *in_f)?;
+                let mut bits = BitFmap::zeros(1, *out_f);
+                for n in 0..*out_f {
+                    let w = layer_weight_row(layer, n, *words_per_row);
+                    let matches = *in_f as i32 - xor_popcount(&row, w) as i32;
+                    bits.set(0, 0, n, matches >= thresholds[n]);
+                }
+                Ok(LayerOutput::Act(Activation::Bits(bits)))
+            }
+            LayerWeights::BinFcOut { in_f, out_f, words_per_row, scale, bias, .. } => {
+                let row = flatten_input(input, *in_f)?;
+                let mut scores = Vec::with_capacity(*out_f);
+                for n in 0..*out_f {
+                    let w = layer_weight_row(layer, n, *words_per_row);
+                    let matches = *in_f as i32 - xor_popcount(&row, w) as i32;
+                    scores.push(matches as f32 * scale[n] + bias[n]);
+                }
+                Ok(LayerOutput::Scores(scores))
+            }
+        }
+    }
+}
+
+fn layer_weight_row<'a>(layer: &'a LayerWeights, n: usize, words_per_row: usize) -> &'a [u64] {
+    match layer {
+        LayerWeights::BinConv { weights, .. }
+        | LayerWeights::BinFc { weights, .. }
+        | LayerWeights::BinFcOut { weights, .. } => {
+            &weights[n * words_per_row..(n + 1) * words_per_row]
+        }
+        LayerWeights::FpConv { .. } => unreachable!(),
+    }
+}
+
+/// First-layer integer conv (eq. 7): 3x3, stride 1, true zero padding.
+fn fp_conv3x3(
+    data: &[i32],
+    hw: usize,
+    in_c: usize,
+    out_c: usize,
+    weights: &[i8],
+    scratch: &mut Scratch,
+) -> Vec<i32> {
+    let k = 9 * in_c;
+    scratch.int_patch.resize(k, 0);
+    let mut out = vec![0i32; hw * hw * out_c];
+    for y in 0..hw {
+        for x in 0..hw {
+            let patch = &mut scratch.int_patch;
+            patch.iter_mut().for_each(|v| *v = 0);
+            for kh in 0..3usize {
+                let sy = y as isize + kh as isize - 1;
+                if sy < 0 || sy >= hw as isize {
+                    continue;
+                }
+                for kw in 0..3usize {
+                    let sx = x as isize + kw as isize - 1;
+                    if sx < 0 || sx >= hw as isize {
+                        continue;
+                    }
+                    let src = (sy as usize * hw + sx as usize) * in_c;
+                    let dst = (kh * 3 + kw) * in_c;
+                    patch[dst..dst + in_c].copy_from_slice(&data[src..src + in_c]);
+                }
+            }
+            let base = (y * hw + x) * out_c;
+            for n in 0..out_c {
+                let w = &weights[n * k..(n + 1) * k];
+                let mut acc = 0i32;
+                for (p, wv) in patch.iter().zip(w.iter()) {
+                    acc += p * (*wv as i32);
+                }
+                out[base + n] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// First-layer integer conv with `[k][out_c]` transposed ±1 weights: for
+/// each patch tap, a unit-stride MAC across all filters (vectorizes to
+/// i32 lanes; PERF iter 2).
+fn fp_conv3x3_transposed(
+    data: &[i32],
+    hw: usize,
+    in_c: usize,
+    out_c: usize,
+    weights_t: &[i32],
+    scratch: &mut Scratch,
+) -> Vec<i32> {
+    let k = 9 * in_c;
+    scratch.int_patch.resize(k, 0);
+    let mut out = vec![0i32; hw * hw * out_c];
+    for y in 0..hw {
+        for x in 0..hw {
+            let patch = &mut scratch.int_patch;
+            patch.iter_mut().for_each(|v| *v = 0);
+            for kh in 0..3usize {
+                let sy = y as isize + kh as isize - 1;
+                if sy < 0 || sy >= hw as isize {
+                    continue;
+                }
+                for kw in 0..3usize {
+                    let sx = x as isize + kw as isize - 1;
+                    if sx < 0 || sx >= hw as isize {
+                        continue;
+                    }
+                    let src = (sy as usize * hw + sx as usize) * in_c;
+                    let dst = (kh * 3 + kw) * in_c;
+                    patch[dst..dst + in_c].copy_from_slice(&data[src..src + in_c]);
+                }
+            }
+            let acc = &mut out[(y * hw + x) * out_c..(y * hw + x + 1) * out_c];
+            for (kk, &p) in patch.iter().enumerate() {
+                if p == 0 {
+                    continue; // padded taps contribute nothing
+                }
+                let w_row = &weights_t[kk * out_c..(kk + 1) * out_c];
+                for (a, &w) in acc.iter_mut().zip(w_row) {
+                    *a += p * w;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Hidden binary conv: packed patch gather + XNOR dot product.
+fn bin_conv3x3(
+    fmap: &BitFmap,
+    layer: &LayerWeights,
+    in_c: usize,
+    out_c: usize,
+    words_per_row: usize,
+    scratch: &mut Scratch,
+) -> Vec<i32> {
+    let hw = fmap.hw;
+    let k = 9 * in_c;
+    let cnum = k as i32;
+    let patch_words = words_for(k);
+    scratch.patch.resize(patch_words, 0);
+    let mut out = vec![0i32; hw * hw * out_c];
+    for y in 0..hw {
+        for x in 0..hw {
+            let patch = &mut scratch.patch;
+            patch.iter_mut().for_each(|v| *v = 0);
+            for kh in 0..3usize {
+                let sy = y as isize + kh as isize - 1;
+                if sy < 0 || sy >= hw as isize {
+                    continue; // zero bits = -1 activations (paper padding)
+                }
+                for kw in 0..3usize {
+                    let sx = x as isize + kw as isize - 1;
+                    if sx < 0 || sx >= hw as isize {
+                        continue;
+                    }
+                    let src = fmap.pixel(sy as usize, sx as usize);
+                    copy_bits(patch, (kh * 3 + kw) * in_c, src, 0, in_c);
+                }
+            }
+            let base = (y * hw + x) * out_c;
+            for n in 0..out_c {
+                let w = layer_weight_row(layer, n, words_per_row);
+                out[base + n] = cnum - xor_popcount(patch, w) as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Hidden binary conv with `[word][out_c]` transposed weights (PERF iter
+/// 4): for each patch word, XOR it (broadcast) against the same word of
+/// all filters and accumulate popcounts per filter — unit-stride over the
+/// transposed weights, so the whole filter bank advances through AVX512
+/// vpopcntq lanes with no horizontal reductions.
+fn bin_conv3x3_transposed(
+    fmap: &BitFmap,
+    weights_t: &[u64],
+    in_c: usize,
+    out_c: usize,
+    words_per_row: usize,
+    scratch: &mut Scratch,
+) -> Vec<i32> {
+    let hw = fmap.hw;
+    let k = 9 * in_c;
+    let cnum = k as i32;
+    let patch_words = words_for(k);
+    debug_assert!(patch_words <= words_per_row || patch_words == words_per_row);
+    scratch.patch.resize(patch_words, 0);
+    scratch.mismatch.resize(out_c, 0);
+    let mut out = vec![0i32; hw * hw * out_c];
+    for y in 0..hw {
+        for x in 0..hw {
+            let patch = &mut scratch.patch;
+            patch.iter_mut().for_each(|v| *v = 0);
+            for kh in 0..3usize {
+                let sy = y as isize + kh as isize - 1;
+                if sy < 0 || sy >= hw as isize {
+                    continue; // zero bits = -1 activations (paper padding)
+                }
+                for kw in 0..3usize {
+                    let sx = x as isize + kw as isize - 1;
+                    if sx < 0 || sx >= hw as isize {
+                        continue;
+                    }
+                    let src = fmap.pixel(sy as usize, sx as usize);
+                    copy_bits(patch, (kh * 3 + kw) * in_c, src, 0, in_c);
+                }
+            }
+            let mism = &mut scratch.mismatch;
+            mism.iter_mut().for_each(|v| *v = 0);
+            for (w, &p) in patch.iter().enumerate() {
+                let row = &weights_t[w * out_c..(w + 1) * out_c];
+                for (m, &wv) in mism.iter_mut().zip(row) {
+                    *m += (p ^ wv).count_ones() as u64;
+                }
+            }
+            let base = (y * hw + x) * out_c;
+            for (o, &m) in out[base..base + out_c].iter_mut().zip(mism.iter()) {
+                *o = cnum - m as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Max-pool 2x2/2 over an integer plane if `pool`, else pass through.
+fn maybe_pool(y: Vec<i32>, hw: usize, c: usize, pool: bool) -> (Vec<i32>, usize) {
+    if !pool {
+        return (y, hw);
+    }
+    let oh = hw / 2;
+    let mut out = vec![i32::MIN; oh * oh * c];
+    for py in 0..oh {
+        for px in 0..oh {
+            for dy in 0..2 {
+                for dx in 0..2 {
+                    let src = ((py * 2 + dy) * hw + px * 2 + dx) * c;
+                    let dst = (py * oh + px) * c;
+                    for ch in 0..c {
+                        let v = y[src + ch];
+                        if v > out[dst + ch] {
+                            out[dst + ch] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, oh)
+}
+
+/// NormBinarize (eq. 8) over an integer plane.
+///
+/// PERF (EXPERIMENTS.md §Perf iter 3): builds each packed word from a
+/// 64-wide chunk of compares instead of per-bit read-modify-writes — the
+/// chunked compare loop lowers to AVX512 mask ops (vpcmpd/kmov) and this
+/// function fell from ~60% of layer-1 time to noise.
+fn threshold_plane(y: &[i32], hw: usize, c: usize, thresholds: &[i32]) -> BitFmap {
+    let mut bits = BitFmap::zeros(hw, c);
+    let wpp = bits.words_per_pixel;
+    for pix in 0..hw * hw {
+        let row = &y[pix * c..(pix + 1) * c];
+        let out = &mut bits.data[pix * wpp..(pix + 1) * wpp];
+        for (w, word_out) in out.iter_mut().enumerate() {
+            let lo = w * 64;
+            let n = (c - lo).min(64);
+            let mut word = 0u64;
+            for (b, (&v, &t)) in row[lo..lo + n]
+                .iter()
+                .zip(&thresholds[lo..lo + n])
+                .enumerate()
+            {
+                word |= ((v >= t) as u64) << b;
+            }
+            *word_out = word;
+        }
+    }
+    bits
+}
+
+/// Flatten any activation into a packed FC input row of `in_f` bits.
+fn flatten_input(input: &Activation, in_f: usize) -> Result<Vec<u64>> {
+    match input {
+        Activation::Bits(fmap) => {
+            let total = fmap.hw * fmap.hw * fmap.c;
+            if total != in_f {
+                bail!("FC input features {total} != {in_f}");
+            }
+            Ok(fmap.flatten())
+        }
+        Activation::Int { .. } => bail!("FC layer expects binary input"),
+    }
+}

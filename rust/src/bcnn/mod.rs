@@ -1,0 +1,17 @@
+//! Native packed-`u64` BCNN inference engine.
+//!
+//! This is (a) the serving hot path of the coordinator (no Python, no PJRT
+//! — pure integer/bit arithmetic), and (b) the *functional* model of the
+//! FPGA datapath: the fpga simulator calls [`engine::Engine::run_layer`]
+//! per layer so its numerics are exactly the paper's architecture
+//! (XnorDotProduct -> MP -> NormBinarize, fig. 3).
+//!
+//! [`scalar_ref`] is the slow ±1 textbook implementation (paper eq. 1/3)
+//! used by tests to validate every bit trick in [`engine`].
+
+pub mod engine;
+pub mod scalar_ref;
+pub mod tensor;
+
+pub use engine::{Engine, LayerOutput};
+pub use tensor::{Activation, BitFmap};

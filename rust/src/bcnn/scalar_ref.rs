@@ -1,0 +1,176 @@
+//! Textbook ±1 reference implementation (paper eq. 1/3, pre-reformulation).
+//!
+//! Deliberately slow and obvious: unpacked `i32` ±1 arrays, nested-loop
+//! convolution, explicit batch-norm-free threshold semantics.  The test
+//! suite runs this against [`crate::bcnn::Engine`] to validate every bit
+//! trick (packing, XNOR+popcount, -1 padding, FC flattening) end to end.
+
+use anyhow::{bail, Result};
+
+use crate::model::{BcnnModel, LayerWeights};
+use crate::util::bits::get_bit;
+
+/// ±1 value of a packed weight bit (1 -> +1, 0 -> -1; paper §3.1 encoding).
+fn pm1(words: &[u64], idx: usize) -> i32 {
+    if get_bit(words, idx) {
+        1
+    } else {
+        -1
+    }
+}
+
+/// Classify one image with the unpacked reference semantics.
+pub fn infer_reference(model: &BcnnModel, image: &[i32]) -> Result<Vec<f32>> {
+    let hw = model.input_hw;
+    let c = model.input_channels;
+    if image.len() != hw * hw * c {
+        bail!("image size mismatch");
+    }
+    // activations carried as ±1 i32 (or raw ints before the first layer)
+    enum Act {
+        Int(Vec<i32>, usize, usize),  // data, hw, c
+        Pm1(Vec<i32>, usize, usize),
+    }
+    let mut act = Act::Int(image.to_vec(), hw, c);
+
+    for layer in &model.layers {
+        act = match layer {
+            LayerWeights::FpConv { in_c, out_c, pool, weights, thresholds } => {
+                let Act::Int(data, hw, c) = &act else { bail!("FpConv wants ints") };
+                assert_eq!(c, in_c);
+                // true zero padding for the integer first layer
+                let y = conv3x3(
+                    *hw,
+                    *in_c,
+                    *out_c,
+                    |sy, sx, ch| {
+                        if sy < 0 || sx < 0 || sy >= *hw as isize || sx >= *hw as isize {
+                            0
+                        } else {
+                            data[(sy as usize * hw + sx as usize) * in_c + ch]
+                        }
+                    },
+                    |n, k| weights[n * 9 * in_c + k] as i32,
+                );
+                let (y, ohw) = pool2x2(y, *hw, *out_c, *pool);
+                // first layer: y IS y_lo; threshold directly
+                Act::Pm1(
+                    binarize(&y, *out_c, |v, n| v >= thresholds[n]),
+                    ohw,
+                    *out_c,
+                )
+            }
+            LayerWeights::BinConv { in_c, out_c, pool, weights, words_per_row, thresholds } => {
+                let Act::Pm1(data, hw, c) = &act else { bail!("BinConv wants ±1") };
+                assert_eq!(c, in_c);
+                // ±1 conv with -1 padding (paper hardware semantics)
+                let y_lo = conv3x3(
+                    *hw,
+                    *in_c,
+                    *out_c,
+                    |sy, sx, ch| {
+                        if sy < 0 || sx < 0 || sy >= *hw as isize || sx >= *hw as isize {
+                            -1
+                        } else {
+                            data[(sy as usize * hw + sx as usize) * in_c + ch]
+                        }
+                    },
+                    |n, k| pm1(&weights[n * words_per_row..(n + 1) * words_per_row], k),
+                );
+                let (y_lo, ohw) = pool2x2(y_lo, *hw, *out_c, *pool);
+                // eq. 6: y_lo = 2*y_l - cnum, so the match count is exactly
+                // y_l = (y_lo + cnum)/2 (always even sum); compare to c_l.
+                let cnum = (9 * in_c) as i32;
+                Act::Pm1(
+                    binarize(&y_lo, *out_c, |v, n| (v + cnum) / 2 >= thresholds[n]),
+                    ohw,
+                    *out_c,
+                )
+            }
+            LayerWeights::BinFc { in_f, out_f, weights, words_per_row, thresholds } => {
+                let Act::Pm1(data, hw, c) = &act else { bail!("BinFc wants ±1") };
+                assert_eq!(hw * hw * c, *in_f);
+                let mut out = Vec::with_capacity(*out_f);
+                for n in 0..*out_f {
+                    let w = &weights[n * words_per_row..(n + 1) * words_per_row];
+                    let y_lo: i32 = (0..*in_f).map(|k| data[k] * pm1(w, k)).sum();
+                    let y_l = (y_lo + *in_f as i32) / 2;
+                    out.push(if y_l >= thresholds[n] { 1 } else { -1 });
+                }
+                Act::Pm1(out, 1, *out_f)
+            }
+            LayerWeights::BinFcOut { in_f, out_f, weights, words_per_row, scale, bias } => {
+                let Act::Pm1(data, hw, c) = &act else { bail!("BinFcOut wants ±1") };
+                assert_eq!(hw * hw * c, *in_f);
+                let mut scores = Vec::with_capacity(*out_f);
+                for n in 0..*out_f {
+                    let w = &weights[n * words_per_row..(n + 1) * words_per_row];
+                    let y_lo: i32 = (0..*in_f).map(|k| data[k] * pm1(w, k)).sum();
+                    let y_l = (y_lo + *in_f as i32) / 2; // exact: y_lo+cnum even
+                    scores.push(y_l as f32 * scale[n] + bias[n]);
+                }
+                return Ok(scores);
+            }
+        };
+    }
+    bail!("model has no classifier layer")
+}
+
+/// Generic 3x3/stride-1 convolution with caller-supplied tap and weight
+/// accessors; output NHWC `hw*hw*out_c`.
+fn conv3x3(
+    hw: usize,
+    in_c: usize,
+    out_c: usize,
+    tap: impl Fn(isize, isize, usize) -> i32,
+    weight: impl Fn(usize, usize) -> i32,
+) -> Vec<i32> {
+    let mut out = vec![0i32; hw * hw * out_c];
+    for y in 0..hw {
+        for x in 0..hw {
+            for n in 0..out_c {
+                let mut acc = 0;
+                for kh in 0..3usize {
+                    for kw in 0..3usize {
+                        for ch in 0..in_c {
+                            let k = (kh * 3 + kw) * in_c + ch;
+                            acc += tap(y as isize + kh as isize - 1, x as isize + kw as isize - 1, ch)
+                                * weight(n, k);
+                        }
+                    }
+                }
+                out[(y * hw + x) * out_c + n] = acc;
+            }
+        }
+    }
+    out
+}
+
+fn pool2x2(y: Vec<i32>, hw: usize, c: usize, pool: bool) -> (Vec<i32>, usize) {
+    if !pool {
+        return (y, hw);
+    }
+    let oh = hw / 2;
+    let mut out = vec![i32::MIN; oh * oh * c];
+    for py in 0..oh {
+        for px in 0..oh {
+            for ch in 0..c {
+                let mut best = i32::MIN;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        best = best.max(y[((py * 2 + dy) * hw + px * 2 + dx) * c + ch]);
+                    }
+                }
+                out[(py * oh + px) * c + ch] = best;
+            }
+        }
+    }
+    (out, oh)
+}
+
+fn binarize(y: &[i32], c: usize, pred: impl Fn(i32, usize) -> bool) -> Vec<i32> {
+    y.iter()
+        .enumerate()
+        .map(|(i, &v)| if pred(v, i % c) { 1 } else { -1 })
+        .collect()
+}

@@ -1,0 +1,137 @@
+//! Packed activation tensors.
+//!
+//! A [`BitFmap`] stores a binary feature map as one word-aligned packed row
+//! per spatial pixel (c bits, LSB-first, channel-minor) — the layout the
+//! engine's patch gather and the FC flatten both consume, and the moral
+//! equivalent of the paper's distributed-RAM feature-map banks (§5.3).
+
+use crate::util::bits::{copy_bits, get_bit, set_bit, words_for};
+
+/// Binary feature map: `hw x hw` pixels, `c` channels, 1 bit each.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitFmap {
+    pub hw: usize,
+    pub c: usize,
+    pub words_per_pixel: usize,
+    /// `hw*hw` rows of `words_per_pixel` words.
+    pub data: Vec<u64>,
+}
+
+impl BitFmap {
+    pub fn zeros(hw: usize, c: usize) -> Self {
+        let words_per_pixel = words_for(c);
+        Self { hw, c, words_per_pixel, data: vec![0; hw * hw * words_per_pixel] }
+    }
+
+    #[inline]
+    pub fn pixel(&self, y: usize, x: usize) -> &[u64] {
+        let row = y * self.hw + x;
+        &self.data[row * self.words_per_pixel..(row + 1) * self.words_per_pixel]
+    }
+
+    #[inline]
+    pub fn pixel_mut(&mut self, y: usize, x: usize) -> &mut [u64] {
+        let row = y * self.hw + x;
+        &mut self.data[row * self.words_per_pixel..(row + 1) * self.words_per_pixel]
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> bool {
+        get_bit(self.pixel(y, x), ch)
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: bool) {
+        set_bit(self.pixel_mut(y, x), ch, v)
+    }
+
+    /// Flatten to a single packed bit row in (h, w, c) order — the FC input
+    /// layout shared with `python/compile/model.py`.
+    pub fn flatten(&self) -> Vec<u64> {
+        let total = self.hw * self.hw * self.c;
+        let mut out = vec![0u64; words_for(total)];
+        if self.c % 64 == 0 {
+            // pixel rows are already contiguous words
+            out.copy_from_slice(&self.data[..words_for(total)]);
+        } else {
+            for row in 0..self.hw * self.hw {
+                let src = &self.data[row * self.words_per_pixel..(row + 1) * self.words_per_pixel];
+                copy_bits(&mut out, row * self.c, src, 0, self.c);
+            }
+        }
+        out
+    }
+}
+
+/// An activation between layers: integer plane (first layer / pre-threshold
+/// accumulator values) or binary feature map.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Activation {
+    /// NHWC integer plane: `hw*hw*c` values.
+    Int { hw: usize, c: usize, data: Vec<i32> },
+    /// Packed binary feature map.
+    Bits(BitFmap),
+}
+
+impl Activation {
+    pub fn hw(&self) -> usize {
+        match self {
+            Activation::Int { hw, .. } => *hw,
+            Activation::Bits(f) => f.hw,
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        match self {
+            Activation::Int { c, .. } => *c,
+            Activation::Bits(f) => f.c,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut f = BitFmap::zeros(4, 33);
+        let mut rng = SplitMix64::new(1);
+        let mut want = vec![false; 4 * 4 * 33];
+        for y in 0..4 {
+            for x in 0..4 {
+                for ch in 0..33 {
+                    let v = rng.bit();
+                    f.set(y, x, ch, v);
+                    want[(y * 4 + x) * 33 + ch] = v;
+                }
+            }
+        }
+        for y in 0..4 {
+            for x in 0..4 {
+                for ch in 0..33 {
+                    assert_eq!(f.get(y, x, ch), want[(y * 4 + x) * 33 + ch]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flatten_hwc_order() {
+        for c in [32usize, 64, 96, 33] {
+            let mut f = BitFmap::zeros(2, c);
+            let mut rng = SplitMix64::new(c as u64);
+            let mut want = vec![false; 2 * 2 * c];
+            for (i, w) in want.iter_mut().enumerate() {
+                *w = rng.bit();
+                let (pix, ch) = (i / c, i % c);
+                f.set(pix / 2, pix % 2, ch, *w);
+            }
+            let flat = f.flatten();
+            for (i, &w) in want.iter().enumerate() {
+                assert_eq!(get_bit(&flat, i), w, "c={c} bit {i}");
+            }
+        }
+    }
+}

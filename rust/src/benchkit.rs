@@ -1,0 +1,206 @@
+//! Tiny benchmarking harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs the `harness = false` binaries under `rust/benches/`,
+//! each of which uses this module: warmup, adaptive iteration count,
+//! median/mean/p95 over wall-clock samples, aligned table output.
+
+use std::time::{Duration, Instant};
+
+/// Statistics of one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_s(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// Per-second rate for a unit of work done once per iteration.
+    pub fn per_second(&self) -> f64 {
+        1e9 / self.median_ns
+    }
+}
+
+/// Time `f` adaptively: warm up, then collect ~`samples` timing samples of
+/// batches sized so each batch takes >= 1 ms.
+pub fn bench<F: FnMut()>(mut f: F) -> Stats {
+    bench_with(BenchOpts::default(), &mut f)
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub min_batch_time: Duration,
+    /// Hard cap on total measuring time.
+    pub budget: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(100),
+            samples: 20,
+            min_batch_time: Duration::from_millis(1),
+            budget: Duration::from_secs(5),
+        }
+    }
+}
+
+pub fn bench_with<F: FnMut()>(opts: BenchOpts, f: &mut F) -> Stats {
+    // warmup + batch sizing
+    let mut batch = 1u64;
+    let warm_start = Instant::now();
+    loop {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t.elapsed();
+        if dt >= opts.min_batch_time || warm_start.elapsed() >= opts.warmup {
+            if dt < opts.min_batch_time && dt.as_nanos() > 0 {
+                let scale = (opts.min_batch_time.as_nanos() as f64 / dt.as_nanos() as f64).ceil();
+                batch = (batch as f64 * scale).min(1e9) as u64;
+            }
+            break;
+        }
+        batch *= 2;
+    }
+
+    let mut samples_ns: Vec<f64> = Vec::with_capacity(opts.samples);
+    let start = Instant::now();
+    let mut iters = 0u64;
+    for _ in 0..opts.samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples_ns.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        iters += batch;
+        if start.elapsed() > opts.budget {
+            break;
+        }
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    Stats {
+        iters,
+        mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+        median_ns: samples_ns[n / 2],
+        p95_ns: samples_ns[(n as f64 * 0.95) as usize % n.max(1)],
+        min_ns: samples_ns[0],
+    }
+}
+
+/// Pretty duration for reports.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Aligned two-column+ table printer used by every bench binary.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{:>w$}", c, w = widths[i]));
+            }
+            out.push('\n');
+        };
+        line(&self.header, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &widths, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let mut x = 0u64;
+        let stats = bench_with(
+            BenchOpts {
+                warmup: Duration::from_millis(5),
+                samples: 5,
+                min_batch_time: Duration::from_micros(50),
+                budget: Duration::from_millis(200),
+            },
+            &mut || {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                std::hint::black_box(x);
+            },
+        );
+        assert!(stats.iters > 0);
+        assert!(stats.median_ns > 0.0);
+        assert!(stats.min_ns <= stats.median_ns);
+        assert!(stats.median_ns <= stats.p95_ns * 1.001);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["layer", "cycles"]);
+        t.row(&["Conv 1".into(), "4096".into()]);
+        t.row(&["Conv 22".into(), "12288".into()]);
+        let s = t.to_string();
+        assert!(s.contains("Conv 22"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[1].chars().all(|c| c == '-'), true);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(1500.0).ends_with("µs"));
+        assert!(fmt_ns(2.5e6).ends_with("ms"));
+        assert!(fmt_ns(3.0e9).ends_with(" s"));
+    }
+}

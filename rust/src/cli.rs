@@ -1,0 +1,350 @@
+//! Hand-rolled CLI (no clap in the offline crate cache).
+//!
+//! Subcommands:
+//!   tables       — regenerate paper Tables 2/3/4/5
+//!   simulate     — run the FPGA streaming simulator on a batch
+//!   optimize     — run the §4.3 throughput optimizer for a config
+//!   compare-gpu  — Fig. 7 batch sweep (FPGA model vs GPU model)
+//!   infer        — classify images through a chosen backend
+//!   serve        — start the coordinator (optionally with TCP front-end)
+//!   selftest     — engine vs PJRT vs FPGA-sim cross-check on artifacts
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::workload::{random_images, run_open_loop};
+use crate::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, FpgaSimBackend, GpuSimBackend, NativeBackend,
+};
+use crate::fpga::stream::simulate;
+use crate::gpu::GpuKernel;
+use crate::model::{BcnnModel, NetConfig};
+use crate::optimizer::{optimize, OptimizeOptions};
+use crate::runtime::Runtime;
+use crate::tables;
+
+/// Parsed arguments: positional subcommand + `--key value` / `--flag`.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        args.command = it.next().cloned().unwrap_or_else(|| "help".into());
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // "--key value" unless next token is another option/missing
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        args.options.insert(key.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => args.flags.push(key.to_string()),
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+pub const USAGE: &str = "\
+repro — BCNN FPGA-accelerator reproduction (Li et al. 2017)
+
+USAGE: repro <command> [options]
+
+COMMANDS
+  tables [--table 2|3|4|5|all] [--optimized]
+      Regenerate the paper's tables (default: all, paper design point).
+  simulate [--config table2|small|tiny] [--images N] [--no-double-buffer]
+           [--artifacts DIR]
+      Run the FPGA streaming simulator (bit-exact numerics + cycle model).
+  optimize [--config table2|small|tiny] [--uf-scale X] [--lut-headroom F]
+      Run the throughput optimizer (paper §4.3) and print the plan.
+  compare-gpu [--batches 1,2,...]
+      Fig. 7: FPGA vs Titan-X-model throughput & energy across batch sizes.
+  infer [--config small] [--backend native|pjrt|fpga-sim] [--count N]
+        [--artifacts DIR]
+      Classify random workload images; print scores summary + timing.
+  serve [--config small] [--backend native|fpga-sim|gpu-sim] [--port P]
+        [--max-batch N] [--max-wait-ms M] [--requests N] [--rate RPS]
+      Start the coordinator; with --port, expose TCP; otherwise drive the
+      built-in open-loop workload and print serving metrics.
+  selftest [--artifacts DIR]
+      Cross-check native engine vs PJRT executable vs FPGA simulator on
+      the shipped artifacts (exit non-zero on mismatch).
+  help
+";
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "tables" => cmd_tables(&args),
+        "simulate" => cmd_simulate(&args),
+        "optimize" => cmd_optimize(&args),
+        "compare-gpu" => cmd_compare_gpu(&args),
+        "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
+        "selftest" => cmd_selftest(&args),
+        "help" | "" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.opt_or("artifacts", "artifacts"))
+}
+
+fn load_bcnn(args: &Args, config: &str) -> Result<BcnnModel> {
+    let path = artifacts_dir(args).join(format!("model_{config}.bcnn"));
+    BcnnModel::load(&path).with_context(|| {
+        format!("{} (run `make artifacts` first)", path.display())
+    })
+}
+
+fn net_config(args: &Args) -> Result<(String, NetConfig)> {
+    let name = args.opt_or("config", "table2");
+    let cfg = NetConfig::by_name(&name).ok_or_else(|| anyhow!("unknown config {name:?}"))?;
+    Ok((name, cfg))
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let plan = if args.flag("optimized") { tables::optimized_plan()? } else { tables::default_plan() };
+    let which = args.opt_or("table", "all");
+    if which == "2" || which == "all" {
+        println!("== Table 2: BCNN configuration ==\n{}", tables::table2(&NetConfig::table2()));
+    }
+    if which == "3" || which == "all" {
+        println!("== Table 3: optimized parameters & cycles ==\n{}", tables::table3(&plan));
+    }
+    if which == "4" || which == "all" {
+        println!("== Table 4: resource utilization ==\n{}", tables::table4(&plan));
+    }
+    if which == "5" || which == "all" {
+        println!("== Table 5: accelerator comparison ==\n{}", tables::table5(&plan));
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let (name, _cfg) = net_config(args)?;
+    let model = load_bcnn(args, &name)?;
+    let n = args.usize_or("images", 8)?;
+    let backend = FpgaSimBackend::new(model.clone())?;
+    let mut config = backend.stream_config().clone();
+    config.double_buffered = !args.flag("no-double-buffer");
+    let engine = crate::bcnn::Engine::new(model);
+    let images = random_images(&engine.model().config(), n, 42);
+    let report = simulate(&engine, &config, &images)?;
+    println!("streaming simulation: {} images, config {}", n, name);
+    println!("  double-buffered : {}", config.double_buffered);
+    println!("  phase cycles    : {}", report.phase_cycles);
+    println!("  total cycles    : {}", report.total_cycles);
+    println!("  steady FPS      : {:.0} @ {:.0} MHz", report.fps, config.freq_hz / 1e6);
+    println!("  first latency   : {:.3} ms", report.first_latency_s * 1e3);
+    for (i, (c, u)) in report.layer_cycles.iter().zip(&report.utilization).enumerate() {
+        println!("  layer {:>2} cycles : {:>8}  util {:>5.1}%", i + 1, c, u * 100.0);
+    }
+    let agree = images
+        .iter()
+        .zip(&report.scores)
+        .all(|(img, s)| engine.infer(img).map(|e| &e == s).unwrap_or(false));
+    println!("  numerics vs engine: {}", if agree { "MATCH" } else { "MISMATCH" });
+    if !agree {
+        bail!("simulator scores diverged from engine");
+    }
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let (_name, cfg) = net_config(args)?;
+    let opts = OptimizeOptions {
+        uf_scale: args.f64_or("uf-scale", 1.0)?,
+        lut_headroom: args.f64_or("lut-headroom", 0.82)?,
+        ..OptimizeOptions::default()
+    };
+    let plan = optimize(&cfg, &opts)?;
+    println!("{}", tables::table3(&plan));
+    println!("{}", tables::table4(&plan));
+    Ok(())
+}
+
+fn cmd_compare_gpu(args: &Args) -> Result<()> {
+    let batches: Vec<usize> = match args.opt("batches") {
+        None => vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512],
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().parse::<usize>().context("--batches"))
+            .collect::<Result<_>>()?,
+    };
+    println!("{}", tables::fig7(&tables::default_plan(), &batches));
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let name = args.opt_or("config", "small");
+    let model = load_bcnn(args, &name)?;
+    let cfg = model.config();
+    let count = args.usize_or("count", 16)?;
+    let images = random_images(&cfg, count, 7);
+    let backend = args.opt_or("backend", "native");
+    let t0 = std::time::Instant::now();
+    let scores: Vec<Vec<f32>> = match backend.as_str() {
+        "native" => {
+            let engine = crate::bcnn::Engine::new(model);
+            engine.infer_batch(&images)?
+        }
+        "fpga-sim" => {
+            let mut b = FpgaSimBackend::new(model)?;
+            crate::coordinator::Backend::infer_batch(&mut b, &images)?.scores
+        }
+        "pjrt" => {
+            let mut rt = Runtime::new(artifacts_dir(args))?;
+            let loaded = rt.load_model(&name, 1, artifacts_dir(args).join(format!("model_{name}.bcnn")))?;
+            let mut out = Vec::new();
+            for img in &images {
+                let s = loaded.infer_batch(img)?;
+                out.push(s);
+            }
+            out
+        }
+        other => bail!("unknown backend {other:?}"),
+    };
+    let dt = t0.elapsed();
+    let mut class_counts = vec![0usize; cfg.classes];
+    for s in &scores {
+        let arg = s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        class_counts[arg] += 1;
+    }
+    println!(
+        "{count} images via {backend}: {:.2} ms/image ({:.0} img/s)",
+        dt.as_secs_f64() * 1e3 / count as f64,
+        count as f64 / dt.as_secs_f64()
+    );
+    println!("predicted class histogram: {class_counts:?}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = args.opt_or("config", "small");
+    let model = load_bcnn(args, &name)?;
+    let cfg = model.config();
+    let backend_name = args.opt_or("backend", "native");
+    let backend: Box<dyn crate::coordinator::Backend + Send> = match backend_name.as_str() {
+        "native" => Box::new(NativeBackend::new(model)),
+        "fpga-sim" => Box::new(FpgaSimBackend::new(model)?),
+        "gpu-sim" => Box::new(GpuSimBackend::new(model, GpuKernel::Xnor)),
+        other => bail!("unknown backend {other:?}"),
+    };
+    let policy = BatchPolicy {
+        max_batch: args.usize_or("max-batch", 16)?,
+        max_wait: Duration::from_millis(args.usize_or("max-wait-ms", 2)? as u64),
+    };
+    let coord = Coordinator::start(backend, CoordinatorConfig { policy });
+
+    if let Some(port) = args.opt("port") {
+        let addr = format!("127.0.0.1:{port}");
+        let listener = TcpListener::bind(&addr).with_context(|| format!("bind {addr}"))?;
+        println!("serving {name} via {backend_name} on {addr} (ctrl-c to stop)");
+        let stop = Arc::new(AtomicBool::new(false));
+        crate::coordinator::server::serve_tcp(listener, coord.client(), stop)?;
+        return Ok(());
+    }
+
+    // built-in workload mode
+    let requests = args.usize_or("requests", 64)?;
+    let rate = args.f64_or("rate", 200.0)?;
+    println!("driving open-loop workload: {requests} requests at {rate}/s");
+    let report = run_open_loop(&coord.client(), &cfg, requests, rate, 11)?;
+    println!(
+        "  achieved {:.1} req/s, mean latency {:.2} ms, mean batch {:.1}",
+        report.throughput(),
+        report.mean_latency().as_secs_f64() * 1e3,
+        report.mean_batch()
+    );
+    let metrics = coord.shutdown();
+    println!("  {}", metrics.summary());
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let name = "tiny";
+    let model = BcnnModel::load(dir.join(format!("model_{name}.bcnn")))?;
+    let cfg = model.config();
+    let images = random_images(&cfg, 4, 99);
+    let engine = crate::bcnn::Engine::new(model.clone());
+    let native: Vec<Vec<f32>> = engine.infer_batch(&images)?;
+
+    // PJRT path
+    let mut rt = Runtime::new(&dir)?;
+    let loaded = rt.load_model(name, 1, dir.join(format!("model_{name}.bcnn")))?;
+    for (i, img) in images.iter().enumerate() {
+        let scores = loaded.infer_batch(img)?;
+        for (a, b) in scores.iter().zip(&native[i]) {
+            if (a - b).abs() > 1e-3 {
+                bail!("PJRT vs native mismatch image {i}: {a} vs {b}");
+            }
+        }
+    }
+    println!("PJRT == native: OK ({} images)", images.len());
+
+    // FPGA simulator path
+    let mut fpga = FpgaSimBackend::new(model)?;
+    let sim = crate::coordinator::Backend::infer_batch(&mut fpga, &images)?;
+    for (i, s) in sim.scores.iter().enumerate() {
+        if s != &native[i] {
+            bail!("FPGA-sim vs native mismatch image {i}");
+        }
+    }
+    println!("FPGA-sim == native: OK (bit-exact)");
+    println!("selftest PASS");
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! Pluggable inference backends.
+//!
+//! * [`NativeBackend`] — the packed-u64 engine: the production hot path.
+//! * [`PjrtBackend`] — the AOT HLO executable via PJRT (proves the
+//!   three-layer compose; numerics must match the native engine).
+//! * [`FpgaSimBackend`] — native numerics + the FPGA timing model: replies
+//!   carry the *modeled* device time, so serving experiments report what
+//!   the paper's accelerator would deliver.
+//! * [`GpuSimBackend`] — native numerics + the Titan X analytic model
+//!   (whole-batch completion), the Fig. 7 comparator on the serving path.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::bcnn::engine::Scratch;
+use crate::bcnn::Engine;
+use crate::fpga::stream::{simulate, StreamConfig};
+use crate::fpga::timing::{paper_fc_params, paper_table3_conv_params, LayerParams, PipelineModel};
+use crate::fpga::{layer_geometry, DEFAULT_FREQ_HZ};
+use crate::gpu::{GpuKernel, GpuModel};
+use crate::model::BcnnModel;
+use crate::optimizer::{optimize, OptimizeOptions};
+use crate::runtime::LoadedModel;
+
+/// Result of one batch execution.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    pub scores: Vec<Vec<f32>>,
+    /// Modeled device time (simulator backends); `None` = wall clock only.
+    pub modeled_device_time: Option<Duration>,
+}
+
+/// An inference backend consuming whole batches.
+///
+/// Deliberately NOT `Send`: PJRT client/executable handles are `Rc`-based.
+/// The coordinator therefore constructs its backend *on* the worker thread
+/// via a factory closure (see [`crate::coordinator::Coordinator::start`]).
+pub trait Backend {
+    fn name(&self) -> &str;
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchResult>;
+}
+
+/// Factory type the coordinator runs on its worker thread.
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+
+// ---------------------------------------------------------------------------
+
+/// The native packed-u64 engine.
+pub struct NativeBackend {
+    engine: Engine,
+    scratch: Scratch,
+}
+
+impl NativeBackend {
+    pub fn new(model: BcnnModel) -> Self {
+        Self { engine: Engine::new(model), scratch: Scratch::default() }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchResult> {
+        let scores = images
+            .iter()
+            .map(|img| self.engine.infer_with_scratch(img, &mut self.scratch))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BatchResult { scores, modeled_device_time: None })
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// PJRT executable backend (fixed lowered batch size; shorter batches are
+/// padded, longer ones chunked).
+pub struct PjrtBackend {
+    model: LoadedModel,
+    name: String,
+}
+
+impl PjrtBackend {
+    pub fn new(model: LoadedModel) -> Self {
+        let name = format!("pjrt-b{}", model.batch());
+        Self { model, name }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchResult> {
+        let lot = self.model.batch();
+        let classes = self.model.classes();
+        let per_image: usize = self.model.manifest.input_shape.iter().skip(1).product();
+        let mut scores = Vec::with_capacity(images.len());
+        for chunk in images.chunks(lot) {
+            let mut flat = vec![0i32; lot * per_image];
+            for (i, img) in chunk.iter().enumerate() {
+                flat[i * per_image..(i + 1) * per_image].copy_from_slice(img);
+            }
+            let out = self.model.infer_batch(&flat)?;
+            for i in 0..chunk.len() {
+                scores.push(out[i * classes..(i + 1) * classes].to_vec());
+            }
+        }
+        Ok(BatchResult { scores, modeled_device_time: None })
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// FPGA streaming accelerator: bit-exact numerics via the phase simulator,
+/// modeled service time from the cycle model.
+pub struct FpgaSimBackend {
+    engine: Engine,
+    config: StreamConfig,
+}
+
+impl FpgaSimBackend {
+    /// Build with the paper's Table-3 design point when the model is the
+    /// Table-2 network, otherwise with an optimizer-derived plan.
+    pub fn new(model: BcnnModel) -> Result<Self> {
+        let net = model.config();
+        let geoms = layer_geometry(&net);
+        let params: Vec<LayerParams> = if net.name == "cifar10-table2" {
+            let mut p = paper_table3_conv_params();
+            for g in &geoms[net.conv.len()..] {
+                p.push(paper_fc_params(g));
+            }
+            p
+        } else {
+            optimize(&net, &OptimizeOptions::default())?
+                .layers
+                .iter()
+                .map(|l| l.params)
+                .collect()
+        };
+        Ok(Self {
+            engine: Engine::new(model),
+            config: StreamConfig {
+                freq_hz: DEFAULT_FREQ_HZ,
+                params,
+                pipeline: PipelineModel::default(),
+                double_buffered: true,
+            },
+        })
+    }
+
+    pub fn stream_config(&self) -> &StreamConfig {
+        &self.config
+    }
+}
+
+impl Backend for FpgaSimBackend {
+    fn name(&self) -> &str {
+        "fpga-sim"
+    }
+
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchResult> {
+        let report = simulate(&self.engine, &self.config, images)?;
+        let modeled = Duration::from_secs_f64(report.total_cycles as f64 / self.config.freq_hz);
+        Ok(BatchResult { scores: report.scores, modeled_device_time: Some(modeled) })
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Titan X analytic comparator: native numerics, modeled whole-batch time.
+pub struct GpuSimBackend {
+    engine: Engine,
+    model: GpuModel,
+    kernel: GpuKernel,
+    scratch: Scratch,
+    name: String,
+}
+
+impl GpuSimBackend {
+    pub fn new(model: BcnnModel, kernel: GpuKernel) -> Self {
+        let gpu = GpuModel::new(&model.config());
+        let name = match kernel {
+            GpuKernel::Xnor => "gpu-sim-xnor".to_string(),
+            GpuKernel::Baseline => "gpu-sim-baseline".to_string(),
+        };
+        Self { engine: Engine::new(model), model: gpu, kernel, scratch: Scratch::default(), name }
+    }
+}
+
+impl Backend for GpuSimBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchResult> {
+        let scores = images
+            .iter()
+            .map(|img| self.engine.infer_with_scratch(img, &mut self.scratch))
+            .collect::<Result<Vec<_>>>()?;
+        let modeled =
+            Duration::from_secs_f64(self.model.batch_latency_s(self.kernel, images.len().max(1)));
+        Ok(BatchResult { scores, modeled_device_time: Some(modeled) })
+    }
+}

@@ -1,0 +1,191 @@
+//! Dynamic batcher: max-batch + deadline policy (vLLM-router style).
+//!
+//! Blocks for the first request, then keeps admitting until either the
+//! batch is full or the oldest request's deadline (`max_wait`) expires.
+//! `max_wait = 0` degenerates to pure online serving (batch = whatever is
+//! already queued) — the regime where Fig. 7 shows the FPGA winning 8.3x.
+//!
+//! The queue carries [`Msg`]: requests plus an explicit `Stop` poison so
+//! the coordinator can shut the worker down even while client handles
+//! (and their channel senders) are still alive.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::Instant;
+
+use crate::coordinator::request::InferRequest;
+
+/// Queue message: a request, or the shutdown poison.
+#[derive(Debug)]
+pub enum Msg {
+    Req(InferRequest),
+    Stop,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: std::time::Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 16, max_wait: std::time::Duration::from_millis(2) }
+    }
+}
+
+/// Pulls requests off a channel and forms batches.
+pub struct Batcher {
+    rx: Receiver<Msg>,
+    policy: BatchPolicy,
+    stopped: bool,
+}
+
+impl Batcher {
+    pub fn new(rx: Receiver<Msg>, policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1, "max_batch must be >= 1");
+        Self { rx, policy, stopped: false }
+    }
+
+    /// Next batch; `None` on `Stop` or when all senders are gone.  A
+    /// partially-formed batch is returned before the stop takes effect on
+    /// the *next* call (no request is dropped).
+    pub fn next_batch(&mut self) -> Option<Vec<InferRequest>> {
+        if self.stopped {
+            return None;
+        }
+        // block for the first request
+        let first = loop {
+            match self.rx.recv() {
+                Ok(Msg::Req(r)) => break r,
+                Ok(Msg::Stop) | Err(_) => {
+                    self.stopped = true;
+                    return None;
+                }
+            }
+        };
+        // deadline counts from the first request's arrival: if the queue
+        // backed up, the deadline is already past and we only drain what is
+        // queued (no extra waiting under load).
+        let deadline = first.enqueued + self.policy.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < self.policy.max_batch && !self.stopped {
+            let now = Instant::now();
+            let msg = if now >= deadline {
+                // deadline passed: take only what is already queued
+                match self.rx.try_recv() {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+            } else {
+                match self.rx.recv_timeout(deadline - now) {
+                    Ok(m) => m,
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                }
+            };
+            match msg {
+                Msg::Req(r) => batch.push(r),
+                Msg::Stop => self.stopped = true,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::{Duration, Instant};
+
+    fn req(id: u64) -> (Msg, mpsc::Receiver<crate::coordinator::InferReply>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Msg::Req(InferRequest { id, image: vec![], enqueued: Instant::now(), reply: tx }),
+            rx,
+        )
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = mpsc::channel();
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            let (r, k) = req(i);
+            keep.push(k);
+            tx.send(r).unwrap();
+        }
+        let mut b = Batcher::new(rx, BatchPolicy { max_batch: 3, max_wait: Duration::ZERO });
+        assert_eq!(b.next_batch().unwrap().len(), 3);
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn zero_wait_takes_only_queued() {
+        let (tx, rx) = mpsc::channel();
+        let (r, _k) = req(0);
+        tx.send(r).unwrap();
+        let mut b = Batcher::new(rx, BatchPolicy { max_batch: 16, max_wait: Duration::ZERO });
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn returns_none_on_disconnect() {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        drop(tx);
+        let mut b = Batcher::new(rx, BatchPolicy::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn stop_poison_terminates_even_with_live_senders() {
+        let (tx, rx) = mpsc::channel();
+        let tx2 = tx.clone(); // a "client" that never goes away
+        tx.send(Msg::Stop).unwrap();
+        let mut b = Batcher::new(rx, BatchPolicy::default());
+        assert!(b.next_batch().is_none());
+        assert!(b.next_batch().is_none()); // stays stopped
+        drop(tx2);
+    }
+
+    #[test]
+    fn stop_after_requests_flushes_batch_first() {
+        let (tx, rx) = mpsc::channel();
+        let (r0, _k0) = req(0);
+        let (r1, _k1) = req(1);
+        tx.send(r0).unwrap();
+        tx.send(r1).unwrap();
+        tx.send(Msg::Stop).unwrap();
+        let mut b = Batcher::new(rx, BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) });
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2, "queued requests must be served before stop");
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn waits_for_deadline_to_fill() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(100) },
+        );
+        let (r0, _k0) = req(0);
+        tx.send(r0).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            let (r1, k1) = req(1);
+            tx.send(r1).unwrap();
+            k1
+        });
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2, "second request should arrive before deadline");
+        let _ = handle.join();
+    }
+
+    #[test]
+    #[should_panic(expected = "max_batch")]
+    fn zero_max_batch_rejected() {
+        let (_tx, rx) = mpsc::channel::<Msg>();
+        let _ = Batcher::new(rx, BatchPolicy { max_batch: 0, max_wait: Duration::ZERO });
+    }
+}

@@ -1,0 +1,186 @@
+//! Serving metrics: latency histogram, throughput, batch-size stats,
+//! modeled energy accounting.
+
+use std::time::Duration;
+
+/// Log-scale latency histogram from 1 µs to ~17 s.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// bucket i covers [2^i, 2^(i+1)) microseconds.
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 25], count: 0, sum_us: 0.0, max_us: 0.0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        let idx = if us < 1.0 { 0 } else { (us.log2() as usize).min(self.buckets.len() - 1) };
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_secs_f64(self.sum_us / self.count as f64 / 1e6)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_secs_f64(self.max_us / 1e6)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the quantile).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target.max(1) {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub latency: Histogram,
+    pub queue: Histogram,
+    pub service: Histogram,
+    pub requests: u64,
+    pub batches: u64,
+    pub sum_batch: u64,
+    /// Modeled device-busy time (simulator backends).
+    pub modeled_busy: Duration,
+    pub wall: Duration,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self { latency: Histogram::new(), queue: Histogram::new(), service: Histogram::new(), ..Default::default() }
+    }
+
+    pub fn record_batch(
+        &mut self,
+        batch_size: usize,
+        service: Duration,
+        modeled: Option<Duration>,
+    ) {
+        self.batches += 1;
+        self.requests += batch_size as u64;
+        self.sum_batch += batch_size as u64;
+        self.service.record(service);
+        if let Some(m) = modeled {
+            self.modeled_busy += m;
+        }
+    }
+
+    pub fn record_request(&mut self, queue: Duration, latency: Duration) {
+        self.queue.record(queue);
+        self.latency.record(latency);
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.sum_batch as f64 / self.batches as f64
+        }
+    }
+
+    /// Achieved requests/s over the recorded wall time.
+    pub fn throughput(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / s
+        }
+    }
+
+    /// Modeled energy (J) given a device power draw, charged for the
+    /// modeled busy time only.
+    pub fn modeled_energy_j(&self, power_w: f64) -> f64 {
+        power_w * self.modeled_busy.as_secs_f64()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.1} throughput={:.1}/s \
+             latency(mean={:?} p50={:?} p99={:?} max={:?})",
+            self.requests,
+            self.batches,
+            self.mean_batch(),
+            self.throughput(),
+            self.latency.mean(),
+            self.latency.quantile(0.5),
+            self.latency.quantile(0.99),
+            self.latency.max(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(h.mean() > Duration::from_micros(400));
+        assert!(h.mean() < Duration::from_micros(600));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn metrics_accounting() {
+        let mut m = Metrics::new();
+        m.record_batch(4, Duration::from_millis(2), Some(Duration::from_millis(1)));
+        m.record_batch(2, Duration::from_millis(2), Some(Duration::from_millis(1)));
+        assert_eq!(m.requests, 6);
+        assert_eq!(m.mean_batch(), 3.0);
+        assert!((m.modeled_energy_j(8.2) - 8.2 * 0.002).abs() < 1e-9);
+        m.wall = Duration::from_secs(2);
+        assert_eq!(m.throughput(), 3.0);
+    }
+}

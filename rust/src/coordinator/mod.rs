@@ -1,0 +1,27 @@
+//! L3 serving coordinator.
+//!
+//! The paper's serving claim — FPGA throughput is batch-insensitive, so it
+//! wins for online individual requests (§6.3, the Baidu batch-8-to-16
+//! workload) — is an end-to-end *serving* property, so the reproduction
+//! ships a real request path: a dynamic [`batcher`] (max-batch + deadline,
+//! vLLM-router-style), pluggable [`backend`]s (native engine, PJRT
+//! executable, FPGA-simulator timing, GPU-model timing), per-request
+//! [`metrics`] (latency histograms, throughput, energy), a thread-based
+//! [`server`] with an optional TCP front-end, and a Poisson/closed-loop
+//! [`workload`] generator.
+//!
+//! No tokio in the offline crate cache — the event loop is std threads +
+//! channels, which for this workload (CPU-bound inference, one worker per
+//! backend) is the same architecture without the executor.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+pub mod workload;
+
+pub use backend::{Backend, BatchResult, FpgaSimBackend, GpuSimBackend, NativeBackend, PjrtBackend};
+pub use batcher::{BatchPolicy, Batcher, Msg};
+pub use request::{InferReply, InferRequest};
+pub use server::{Client, Coordinator, CoordinatorConfig};

@@ -1,0 +1,75 @@
+//! Request/reply types flowing through the coordinator.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// A classification request: one image, NHWC `i32` in the 6-bit range.
+#[derive(Debug)]
+pub struct InferRequest {
+    pub id: u64,
+    pub image: Vec<i32>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<InferReply>,
+}
+
+/// The reply, with per-request serving telemetry.
+#[derive(Debug, Clone)]
+pub struct InferReply {
+    pub id: u64,
+    pub scores: Vec<f32>,
+    /// Time spent queued before the batch formed.
+    pub queue_time: Duration,
+    /// Backend execution time for the whole batch this request rode in.
+    pub service_time: Duration,
+    /// Size of that batch.
+    pub batch_size: usize,
+    /// Modeled device time, if the backend is a simulator (FPGA/GPU).
+    pub modeled_device_time: Option<Duration>,
+}
+
+impl InferReply {
+    /// End-to-end latency as the client experienced it.
+    pub fn latency(&self) -> Duration {
+        self.queue_time + self.service_time
+    }
+
+    pub fn argmax(&self) -> usize {
+        self.scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_peak() {
+        let r = InferReply {
+            id: 0,
+            scores: vec![0.1, 2.0, -1.0],
+            queue_time: Duration::ZERO,
+            service_time: Duration::ZERO,
+            batch_size: 1,
+            modeled_device_time: None,
+        };
+        assert_eq!(r.argmax(), 1);
+    }
+
+    #[test]
+    fn latency_sums() {
+        let r = InferReply {
+            id: 0,
+            scores: vec![],
+            queue_time: Duration::from_millis(2),
+            service_time: Duration::from_millis(3),
+            batch_size: 4,
+            modeled_device_time: None,
+        };
+        assert_eq!(r.latency(), Duration::from_millis(5));
+    }
+}

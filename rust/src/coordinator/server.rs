@@ -1,0 +1,273 @@
+//! The coordinator proper: client handles -> channel -> batcher -> worker
+//! thread -> backend, with shared metrics.  Plus a minimal TCP front-end
+//! (length-prefixed binary protocol, thread per connection).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::backend::Backend;
+use crate::coordinator::batcher::{BatchPolicy, Batcher, Msg};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InferReply, InferRequest};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub policy: BatchPolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { policy: BatchPolicy::default() }
+    }
+}
+
+/// Handle clients use to submit work.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Msg>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Client {
+    /// Submit one image; returns the receiver for its reply.
+    pub fn submit(&self, image: Vec<i32>) -> Receiver<InferReply> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            image,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        // a send error means the coordinator shut down; the client sees a
+        // disconnected reply channel.
+        let _ = self.tx.send(Msg::Req(req));
+        reply_rx
+    }
+
+    /// Submit and wait.
+    pub fn infer(&self, image: Vec<i32>) -> Result<InferReply> {
+        self.submit(image)
+            .recv()
+            .map_err(|_| anyhow!("coordinator shut down before replying"))
+    }
+}
+
+/// A running coordinator (one worker thread over one backend).
+pub struct Coordinator {
+    client: Client,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Mutex<Metrics>>,
+    started: Instant,
+}
+
+impl Coordinator {
+    /// Spawn the worker thread around a `Send` backend.
+    pub fn start(backend: Box<dyn Backend + Send>, config: CoordinatorConfig) -> Self {
+        Self::start_with(Box::new(move || Ok(backend as Box<dyn Backend>)), config)
+            .expect("infallible factory")
+    }
+
+    /// Spawn the worker thread; the backend is constructed *on* the worker
+    /// (required for non-`Send` backends like PJRT).  Fails if the factory
+    /// fails.
+    pub fn start_with(
+        factory: crate::coordinator::backend::BackendFactory,
+        config: CoordinatorConfig,
+    ) -> Result<Self> {
+        let (tx, rx) = mpsc::channel();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let metrics_worker = Arc::clone(&metrics);
+        let worker = std::thread::Builder::new()
+            .name("coordinator-worker".into())
+            .spawn(move || {
+                let mut backend = match factory() {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok(()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut batcher = Batcher::new(rx, config.policy);
+                while let Some(batch) = batcher.next_batch() {
+                    let formed = Instant::now();
+                    let images: Vec<Vec<i32>> =
+                        batch.iter().map(|r| r.image.clone()).collect();
+                    let result = backend.infer_batch(&images);
+                    let service = formed.elapsed();
+                    match result {
+                        Ok(out) => {
+                            let mut m = metrics_worker.lock().unwrap();
+                            m.record_batch(batch.len(), service, out.modeled_device_time);
+                            for (req, scores) in batch.into_iter().zip(out.scores) {
+                                let queue_time = formed.duration_since(req.enqueued);
+                                m.record_request(queue_time, queue_time + service);
+                                let _ = req.reply.send(InferReply {
+                                    id: req.id,
+                                    scores,
+                                    queue_time,
+                                    service_time: service,
+                                    batch_size: images.len(),
+                                    modeled_device_time: out.modeled_device_time,
+                                });
+                            }
+                        }
+                        Err(e) => {
+                            // drop the batch; clients observe disconnect
+                            eprintln!("[coordinator] backend error: {e:#}");
+                        }
+                    }
+                }
+            })
+            .expect("spawn coordinator worker");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("coordinator worker died during startup"))??;
+        Ok(Self {
+            client: Client { tx, next_id: Arc::new(AtomicU64::new(0)) },
+            worker: Some(worker),
+            metrics,
+            started: Instant::now(),
+        })
+    }
+
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    /// Snapshot the metrics (wall time filled in).
+    pub fn metrics(&self) -> Metrics {
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.wall = self.started.elapsed();
+        m
+    }
+
+    /// Graceful shutdown: poison the queue (queued requests are still
+    /// served first), join the worker.  Works even while client handles
+    /// remain alive — their later submits see a dead reply channel.
+    pub fn shutdown(mut self) -> Metrics {
+        let metrics = self.metrics();
+        let _ = self.client.tx.send(Msg::Stop);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        metrics
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let _ = self.client.tx.send(Msg::Stop);
+            let _ = w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP front-end
+// ---------------------------------------------------------------------------
+//
+// Wire protocol (little-endian):
+//   request:  u32 n_values, then n_values x i32 (one NHWC image)
+//   reply:    u32 n_scores, then n_scores x f32
+// A zero-length request closes the connection.
+
+/// Serve a TCP listener until `stop` flips (thread per connection).
+pub fn serve_tcp(listener: TcpListener, client: Client, stop: Arc<AtomicBool>) -> Result<()> {
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let client = client.clone();
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, client);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => bail!("accept: {e}"),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(mut stream: TcpStream, client: Client) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    loop {
+        let mut len_buf = [0u8; 4];
+        if stream.read_exact(&mut len_buf).is_err() {
+            return Ok(()); // peer closed
+        }
+        let n = u32::from_le_bytes(len_buf) as usize;
+        if n == 0 {
+            return Ok(());
+        }
+        if n > 1 << 22 {
+            bail!("request too large: {n}");
+        }
+        let mut raw = vec![0u8; n * 4];
+        stream.read_exact(&mut raw)?;
+        let image: Vec<i32> = raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let reply = client.infer(image)?;
+        stream.write_all(&(reply.scores.len() as u32).to_le_bytes())?;
+        let mut out = Vec::with_capacity(reply.scores.len() * 4);
+        for s in &reply.scores {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        stream.write_all(&out)?;
+    }
+}
+
+/// Blocking TCP client for the wire protocol (used by tests/examples).
+pub struct TcpClient {
+    stream: TcpStream,
+}
+
+impl TcpClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        Ok(Self { stream: TcpStream::connect(addr).context("connect")? })
+    }
+
+    pub fn infer(&mut self, image: &[i32]) -> Result<Vec<f32>> {
+        self.stream.write_all(&(image.len() as u32).to_le_bytes())?;
+        let mut out = Vec::with_capacity(image.len() * 4);
+        for v in image {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        self.stream.write_all(&out)?;
+        let mut len_buf = [0u8; 4];
+        self.stream.read_exact(&mut len_buf)?;
+        let n = u32::from_le_bytes(len_buf) as usize;
+        let mut raw = vec![0u8; n * 4];
+        self.stream.read_exact(&mut raw)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn close(mut self) -> Result<()> {
+        self.stream.write_all(&0u32.to_le_bytes())?;
+        Ok(())
+    }
+}

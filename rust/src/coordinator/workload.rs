@@ -1,0 +1,121 @@
+//! Workload generation for serving experiments.
+//!
+//! * random 6-bit images (deterministic per seed);
+//! * open-loop Poisson arrivals — the "online individual requests" regime
+//!   of §6.3 (Baidu's reported batch-8..16 workload);
+//! * closed-loop back-to-back submission — the "static data, large batch"
+//!   regime.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::server::Client;
+use crate::coordinator::InferReply;
+use crate::model::NetConfig;
+use crate::util::SplitMix64;
+
+/// Deterministic random image in the 6-bit input range.
+pub fn random_image(config: &NetConfig, rng: &mut SplitMix64) -> Vec<i32> {
+    let n = config.input_hw * config.input_hw * config.input_channels;
+    (0..n).map(|_| rng.range_i64(-31, 31) as i32).collect()
+}
+
+/// A batch of deterministic random images.
+pub fn random_images(config: &NetConfig, count: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..count).map(|_| random_image(config, &mut rng)).collect()
+}
+
+/// Result of a driven workload.
+#[derive(Debug)]
+pub struct WorkloadReport {
+    pub replies: Vec<InferReply>,
+    pub wall: Duration,
+}
+
+impl WorkloadReport {
+    pub fn throughput(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.replies.len() as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn mean_latency(&self) -> Duration {
+        if self.replies.is_empty() {
+            return Duration::ZERO;
+        }
+        let sum: Duration = self.replies.iter().map(|r| r.latency()).sum();
+        sum / self.replies.len() as u32
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.replies.is_empty() {
+            return 0.0;
+        }
+        self.replies.iter().map(|r| r.batch_size as f64).sum::<f64>() / self.replies.len() as f64
+    }
+}
+
+/// Open-loop: submit `count` requests with Poisson inter-arrivals at
+/// `rate_rps`, then wait for all replies.
+pub fn run_open_loop(
+    client: &Client,
+    config: &NetConfig,
+    count: usize,
+    rate_rps: f64,
+    seed: u64,
+) -> Result<WorkloadReport> {
+    let mut rng = SplitMix64::new(seed);
+    let start = Instant::now();
+    let mut pending = Vec::with_capacity(count);
+    let mut next_at = Instant::now();
+    for _ in 0..count {
+        let now = Instant::now();
+        if next_at > now {
+            std::thread::sleep(next_at - now);
+        }
+        pending.push(client.submit(random_image(config, &mut rng)));
+        next_at += Duration::from_secs_f64(rng.exp(rate_rps));
+    }
+    let mut replies = Vec::with_capacity(count);
+    for rx in pending {
+        replies.push(rx.recv().map_err(|_| anyhow::anyhow!("coordinator died"))?);
+    }
+    Ok(WorkloadReport { replies, wall: start.elapsed() })
+}
+
+/// Closed-loop: submit everything at once (static-data regime), wait all.
+pub fn run_closed_loop(
+    client: &Client,
+    config: &NetConfig,
+    count: usize,
+    seed: u64,
+) -> Result<WorkloadReport> {
+    let start = Instant::now();
+    let mut rng = SplitMix64::new(seed);
+    let pending: Vec<_> =
+        (0..count).map(|_| client.submit(random_image(config, &mut rng))).collect();
+    let mut replies = Vec::with_capacity(count);
+    for rx in pending {
+        replies.push(rx.recv().map_err(|_| anyhow::anyhow!("coordinator died"))?);
+    }
+    Ok(WorkloadReport { replies, wall: start.elapsed() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_images_deterministic() {
+        let cfg = NetConfig::tiny();
+        let a = random_images(&cfg, 3, 7);
+        let b = random_images(&cfg, 3, 7);
+        assert_eq!(a, b);
+        assert_ne!(a, random_images(&cfg, 3, 8));
+        assert!(a[0].iter().all(|&v| (-31..=31).contains(&v)));
+        assert_eq!(a[0].len(), 16 * 16 * 3);
+    }
+}

@@ -1,0 +1,167 @@
+//! Computing kernel (paper fig. 6): a P-wide array of PEs with DSP
+//! accumulators, followed by the fused MaxPool and NormBinarize kernels.
+//!
+//! This is a second, *independent* functional implementation of a binary
+//! layer — it walks output values in PE groups and accumulates UF-wide
+//! trip partial counts exactly like the hardware datapath, rather than the
+//! engine's whole-row popcount.  Tests assert the two agree bit-exactly,
+//! which validates both the engine's packed tricks and this datapath
+//! model.  It also reports the cycle count its walk implies, which must
+//! equal `timing::cycle_est` for exact-divisor parameters.
+
+use anyhow::{bail, Result};
+
+use crate::bcnn::tensor::{Activation, BitFmap};
+use crate::bcnn::LayerOutput;
+use crate::fpga::pe::Pe;
+use crate::fpga::timing::LayerParams;
+use crate::model::LayerWeights;
+use crate::util::bits::{copy_bits, words_for};
+
+/// Result of simulating one layer on the kernel datapath.
+#[derive(Debug)]
+pub struct KernelRun {
+    pub output: LayerOutput,
+    /// Pipelined trip count the walk performed (= Cycle_est for II=1 and
+    /// exact-divisor UF/P).
+    pub trips: u64,
+    /// PE groups scheduled (output values / P).
+    pub groups: u64,
+}
+
+/// Execute one binary layer (conv or FC) through the PE-array datapath.
+pub fn run_layer(layer: &LayerWeights, input: &Activation, params: &LayerParams) -> Result<KernelRun> {
+    match layer {
+        LayerWeights::BinConv { in_c, out_c, pool, words_per_row, thresholds, .. } => {
+            let Activation::Bits(fmap) = input else {
+                bail!("BinConv expects binary input");
+            };
+            let hw = fmap.hw;
+            let cnum = 9 * in_c;
+            let pe = Pe::new(params.uf.min(cnum));
+            let mut trips = 0u64;
+            let mut groups = 0u64;
+            let mut plane = vec![0i32; hw * hw * out_c];
+            let mut patch = vec![0u64; words_for(cnum)];
+            // walk output values in groups of P (row-major over (y, x, n))
+            let mut pending = 0usize;
+            for y in 0..hw {
+                for x in 0..hw {
+                    gather_patch(fmap, y, x, *in_c, &mut patch);
+                    for n in 0..*out_c {
+                        let w = &layer_rows(layer)[n * words_per_row..(n + 1) * words_per_row];
+                        plane[(y * hw + x) * out_c + n] = pe.dot(&patch, w, cnum);
+                        pending += 1;
+                        if pending == params.p {
+                            pending = 0;
+                            groups += 1;
+                            trips += pe.trips(cnum);
+                        }
+                    }
+                }
+            }
+            if pending > 0 {
+                groups += 1;
+                trips += pe.trips(cnum);
+            }
+            let (plane, out_hw) = if *pool { pool2x2(&plane, hw, *out_c) } else { (plane, hw) };
+            let mut bits = BitFmap::zeros(out_hw, *out_c);
+            for py in 0..out_hw {
+                for px in 0..out_hw {
+                    for ch in 0..*out_c {
+                        bits.set(py, px, ch, plane[(py * out_hw + px) * out_c + ch] >= thresholds[ch]);
+                    }
+                }
+            }
+            Ok(KernelRun { output: LayerOutput::Act(Activation::Bits(bits)), trips, groups })
+        }
+        LayerWeights::BinFc { in_f, out_f, words_per_row, thresholds, .. } => {
+            let row = fc_input(input, *in_f)?;
+            let pe = Pe::new(params.uf.min(*in_f));
+            let mut bits = BitFmap::zeros(1, *out_f);
+            let mut trips = 0u64;
+            for n in 0..*out_f {
+                let w = &layer_rows(layer)[n * words_per_row..(n + 1) * words_per_row];
+                bits.set(0, 0, n, pe.dot(&row, w, *in_f) >= thresholds[n]);
+                trips += pe.trips(*in_f);
+            }
+            let groups = (*out_f as u64).div_ceil(params.p as u64);
+            // P PEs share trips across output neurons
+            let trips = trips.div_ceil(params.p as u64);
+            Ok(KernelRun { output: LayerOutput::Act(Activation::Bits(bits)), trips, groups })
+        }
+        LayerWeights::BinFcOut { in_f, out_f, words_per_row, scale, bias, .. } => {
+            let row = fc_input(input, *in_f)?;
+            let pe = Pe::new(params.uf.min(*in_f));
+            let mut scores = Vec::with_capacity(*out_f);
+            let mut trips = 0u64;
+            for n in 0..*out_f {
+                let w = &layer_rows(layer)[n * words_per_row..(n + 1) * words_per_row];
+                scores.push(pe.dot(&row, w, *in_f) as f32 * scale[n] + bias[n]);
+                trips += pe.trips(*in_f);
+            }
+            let groups = (*out_f as u64).div_ceil(params.p as u64);
+            let trips = trips.div_ceil(params.p as u64);
+            Ok(KernelRun { output: LayerOutput::Scores(scores), trips, groups })
+        }
+        LayerWeights::FpConv { .. } => bail!("FpConv runs on the DSP datapath, not the PE array"),
+    }
+}
+
+fn layer_rows(layer: &LayerWeights) -> &[u64] {
+    match layer {
+        LayerWeights::BinConv { weights, .. }
+        | LayerWeights::BinFc { weights, .. }
+        | LayerWeights::BinFcOut { weights, .. } => weights,
+        LayerWeights::FpConv { .. } => unreachable!(),
+    }
+}
+
+fn gather_patch(fmap: &BitFmap, y: usize, x: usize, in_c: usize, patch: &mut [u64]) {
+    patch.iter_mut().for_each(|v| *v = 0);
+    let hw = fmap.hw;
+    for kh in 0..3usize {
+        let sy = y as isize + kh as isize - 1;
+        if sy < 0 || sy >= hw as isize {
+            continue;
+        }
+        for kw in 0..3usize {
+            let sx = x as isize + kw as isize - 1;
+            if sx < 0 || sx >= hw as isize {
+                continue;
+            }
+            copy_bits(patch, (kh * 3 + kw) * in_c, fmap.pixel(sy as usize, sx as usize), 0, in_c);
+        }
+    }
+}
+
+fn pool2x2(plane: &[i32], hw: usize, c: usize) -> (Vec<i32>, usize) {
+    let oh = hw / 2;
+    let mut out = vec![i32::MIN; oh * oh * c];
+    for py in 0..oh {
+        for px in 0..oh {
+            for ch in 0..c {
+                let mut best = i32::MIN;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        best = best.max(plane[((py * 2 + dy) * hw + px * 2 + dx) * c + ch]);
+                    }
+                }
+                out[(py * oh + px) * c + ch] = best;
+            }
+        }
+    }
+    (out, oh)
+}
+
+fn fc_input(input: &Activation, in_f: usize) -> Result<Vec<u64>> {
+    match input {
+        Activation::Bits(f) => {
+            if f.hw * f.hw * f.c != in_f {
+                bail!("FC input features {} != {in_f}", f.hw * f.hw * f.c);
+            }
+            Ok(f.flatten())
+        }
+        Activation::Int { .. } => bail!("FC expects binary input"),
+    }
+}

@@ -1,0 +1,135 @@
+//! BRAM banking model (paper §5.3).
+//!
+//! The paper maps all weights onto on-chip block RAM, *reshaping* arrays to
+//! the 32-bit maximum BRAM word and *partitioning* them across banks so
+//! each PE array can read its UF weight bits every cycle.  Feature maps go
+//! to distributed RAM (LUTs), and per-feature-map accumulator intermediates
+//! go to BRAM (fig. 6).  This module computes the bank counts that banking
+//! discipline implies — the BRAM column of Table 4.
+
+use super::LayerGeom;
+use crate::fpga::timing::LayerParams;
+
+/// Virtex-7 36Kb block RAM.
+pub const BRAM_BITS: u64 = 36 * 1024;
+/// Paper §5.3: "the maximum word length of a BRAM ... is limited to 32
+/// bits", so arrays are reshaped by 32 before partitioning.
+pub const BRAM_WORD: u64 = 32;
+/// CAL: partition fragmentation overhead observed in HLS-generated banking
+/// (banks sized to power-of-two depths, per-partition waste).
+pub const PARTITION_OVERHEAD: f64 = 1.10;
+/// Accumulator intermediates are double-buffered 16-bit values (fig. 6:
+/// bit-count results within a single feature map live in BRAM).
+pub const ACC_BITS: u64 = 16;
+
+/// BRAM allocation for one layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BramAlloc {
+    /// Banks needed to stream UF weight bits per cycle.
+    pub bandwidth_banks: u64,
+    /// Banks needed to hold the layer's weights.
+    pub capacity_banks: u64,
+    /// Banks for double-buffered accumulator intermediates.
+    pub accumulator_banks: u64,
+    /// Final allocation (max of bandwidth/capacity shaping + accumulators,
+    /// with partition overhead).
+    pub total: u64,
+}
+
+/// Weight storage bits for a layer (first layer weights are 2-bit signed).
+pub fn weight_bits(geom: &LayerGeom) -> u64 {
+    let per_filter = geom.cnum as u64;
+    let bits = if geom.fixed_point { 2 * per_filter } else { per_filter };
+    geom.dep as u64 * bits
+}
+
+/// Bank the weights of one layer.
+///
+/// The weight array is partitioned into `ceil(UF_bits / 32)` banks so one
+/// 32-bit word from each bank supplies the PE array's UF lanes per cycle
+/// (weights are broadcast across the P PEs of a layer — all PEs apply the
+/// same filter to different output positions).  Each bank must then hold
+/// `weight_bits / banks`, rounded up to whole BRAMs.
+pub fn weight_brams(geom: &LayerGeom, params: &LayerParams) -> BramAlloc {
+    let bits = weight_bits(geom);
+    let uf_bits = if geom.fixed_point { 2 * params.uf as u64 } else { params.uf as u64 };
+    let bandwidth_banks = uf_bits.div_ceil(BRAM_WORD);
+    let capacity_banks = bits.div_ceil(BRAM_BITS);
+    let bits_per_bank = bits.div_ceil(bandwidth_banks);
+    let brams_per_bank = bits_per_bank.div_ceil(BRAM_BITS);
+    let shaped = bandwidth_banks * brams_per_bank;
+    let acc = accumulator_brams(geom);
+    let total = ((shaped.max(capacity_banks) as f64) * PARTITION_OVERHEAD).ceil() as u64 + acc;
+    BramAlloc { bandwidth_banks, capacity_banks, accumulator_banks: acc, total }
+}
+
+/// Double-buffered accumulator intermediates of one feature map (fig. 6).
+pub fn accumulator_brams(geom: &LayerGeom) -> u64 {
+    if !geom.is_conv {
+        // FC intermediates are a single vector — negligible, one bank
+        return 1;
+    }
+    let bits = geom.outputs() * ACC_BITS * 2; // double-buffered
+    bits.div_ceil(BRAM_BITS)
+}
+
+/// Total BRAM for a network plan.
+pub fn total_brams(geoms: &[LayerGeom], params: &[LayerParams]) -> u64 {
+    geoms
+        .iter()
+        .zip(params)
+        .map(|(g, p)| weight_brams(g, p).total)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::layer_geometry;
+    use crate::fpga::timing::{paper_fc_params, paper_table3_conv_params};
+    use crate::model::NetConfig;
+
+    fn table2_plan() -> (Vec<LayerGeom>, Vec<LayerParams>) {
+        let geoms = layer_geometry(&NetConfig::table2());
+        let mut params = paper_table3_conv_params();
+        for g in &geoms[6..] {
+            params.push(paper_fc_params(g));
+        }
+        (geoms, params)
+    }
+
+    #[test]
+    fn weight_bits_table2() {
+        let geoms = layer_geometry(&NetConfig::table2());
+        assert_eq!(weight_bits(&geoms[0]), 2 * 27 * 128); // 2-bit first layer
+        assert_eq!(weight_bits(&geoms[1]), 1152 * 128);
+        assert_eq!(weight_bits(&geoms[6]), 8192 * 1024);
+    }
+
+    #[test]
+    fn bandwidth_banks_follow_uf() {
+        let geoms = layer_geometry(&NetConfig::table2());
+        let params = paper_table3_conv_params();
+        // conv2: UF=384 -> 12 banks of 32 bits
+        assert_eq!(weight_brams(&geoms[1], &params[1]).bandwidth_banks, 12);
+        // conv6: UF=1536 -> 48
+        assert_eq!(weight_brams(&geoms[5], &params[5]).bandwidth_banks, 48);
+    }
+
+    #[test]
+    fn total_brams_close_to_table4() {
+        // paper Table 4: 1007 BRAMs used (48.88% of 2060)
+        let (geoms, params) = table2_plan();
+        let total = total_brams(&geoms, &params);
+        let err = (total as f64 - 1007.0).abs() / 1007.0;
+        assert!(err < 0.20, "total {total} vs paper 1007 ({:.1}% off)", err * 100.0);
+    }
+
+    #[test]
+    fn capacity_dominates_fc() {
+        let (geoms, params) = table2_plan();
+        let fc1 = weight_brams(&geoms[6], &params[6]);
+        assert!(fc1.capacity_banks >= 228, "fc1 {:?}", fc1);
+        assert!(fc1.total >= fc1.capacity_banks);
+    }
+}

@@ -1,0 +1,122 @@
+//! The paper's accelerator architecture as a simulator.
+//!
+//! The physical Virtex-7 + Vivado HLS flow is hardware-gated, so this
+//! module reproduces the *architecture* (paper §4–5) as executable models:
+//!
+//! * [`timing`] — the throughput model of eqs. 9–12 plus a microarchitecture
+//!   cycle model (pipeline fill, row control) approximating `Cycle_r`;
+//! * [`pe`] — the PE of fig. 5 (UF-wide XNOR array + popcount tree),
+//!   functional + per-stage latency;
+//! * [`kernel`] — the computing kernel of fig. 6 (P-wide PE array with
+//!   accumulators, fused MP + NB);
+//! * [`channel`] — the double-buffered inter-layer memory channels (§4.3);
+//! * [`stream`] — the phase-level system simulator implementing eq. 12's
+//!   streaming semantics with bit-exact numerics (it runs the real network
+//!   through [`crate::bcnn::Engine`] layer by layer);
+//! * [`memory`] — BRAM banking (§5.3: reshape by 32, partition for
+//!   bandwidth);
+//! * [`resource`] — the Table 4 utilization model;
+//! * [`power`] — the Table 5 power/energy model.
+//!
+//! Model constants calibrated against the paper's reported implementation
+//! are marked `CAL:` at their definition sites and collected in
+//! DESIGN.md §2.
+
+pub mod channel;
+pub mod kernel;
+pub mod memory;
+pub mod pe;
+pub mod power;
+pub mod resource;
+pub mod stream;
+pub mod timing;
+
+use crate::model::NetConfig;
+
+/// Paper-default system clock (§6.2: 90 MHz on the XC7VX690).
+pub const DEFAULT_FREQ_HZ: f64 = 90.0e6;
+
+/// Geometry of one layer as the throughput model sees it (paper eq. 9
+/// nomenclature): the convolution output is `wid x hei x dep` at *conv*
+/// resolution (pre-pool), each output value costing `cnum` XNOR ops.
+/// FC layers are `1 x 1 x out_f` with `cnum = in_f`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerGeom {
+    /// 1-based layer index (paper numbering).
+    pub index: usize,
+    pub name: String,
+    pub is_conv: bool,
+    pub wid: usize,
+    pub hei: usize,
+    pub dep: usize,
+    pub cnum: usize,
+    pub pool: bool,
+    /// First layer runs fixed-point MACs on DSPs instead of XNOR LUTs.
+    pub fixed_point: bool,
+}
+
+impl LayerGeom {
+    /// Output values computed per feature map.
+    pub fn outputs(&self) -> u64 {
+        (self.wid * self.hei * self.dep) as u64
+    }
+}
+
+/// Resolve a network into per-layer geometry (paper Table 2 -> Table 3
+/// rows).
+pub fn layer_geometry(config: &NetConfig) -> Vec<LayerGeom> {
+    let mut geoms = Vec::new();
+    for (i, s) in config.conv_shapes().iter().enumerate() {
+        geoms.push(LayerGeom {
+            index: i + 1,
+            name: format!("Conv {}", i + 1),
+            is_conv: true,
+            wid: s.in_hw,
+            hei: s.in_hw,
+            dep: s.out_c,
+            cnum: 9 * s.in_c,
+            pool: s.pool,
+            fixed_point: i == 0,
+        });
+    }
+    let n_conv = config.conv.len();
+    for (j, (in_f, out_f)) in config.fc_shapes().iter().enumerate() {
+        geoms.push(LayerGeom {
+            index: n_conv + 1 + j,
+            name: format!("FC {}", j + 1),
+            is_conv: false,
+            wid: 1,
+            hei: 1,
+            dep: *out_f,
+            cnum: *in_f,
+            pool: false,
+            fixed_point: false,
+        });
+    }
+    geoms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_geometry_matches_table3_cycle_conv() {
+        // paper Table 3 Cycle_conv column
+        let geoms = layer_geometry(&NetConfig::table2());
+        let cycle_conv: Vec<u64> = geoms.iter().map(|g| g.outputs() * g.cnum as u64).collect();
+        assert_eq!(
+            &cycle_conv[..6],
+            &[3_538_944, 150_994_944, 75_497_472, 150_994_944, 75_497_472, 150_994_944]
+        );
+    }
+
+    #[test]
+    fn fc_geometry() {
+        let geoms = layer_geometry(&NetConfig::table2());
+        assert_eq!(geoms.len(), 9);
+        assert_eq!(geoms[6].cnum, 8192);
+        assert_eq!(geoms[6].dep, 1024);
+        assert!(!geoms[6].is_conv);
+    }
+}

@@ -1,0 +1,126 @@
+//! Processing element (paper fig. 5): a UF-wide XNOR gate array feeding a
+//! parallel bit-count (popcount) tree, iterated `cnum/UF` times per output
+//! value with the partial counts accumulated downstream (fig. 6 DSP
+//! accumulators).
+//!
+//! The functional model is bit-exact (tests check it against the packed
+//! engine); the latency model exposes the per-stage depth that
+//! `timing::cycle_real` uses for pipeline fill.
+
+use crate::util::bits::read_bits_u64;
+
+/// One PE instance: UF XNOR lanes + popcount tree.
+#[derive(Debug, Clone, Copy)]
+pub struct Pe {
+    pub uf: usize,
+}
+
+impl Pe {
+    pub fn new(uf: usize) -> Self {
+        assert!(uf >= 1, "UF must be >= 1");
+        Self { uf }
+    }
+
+    /// Popcount-tree depth in pipeline stages (log2 levels of 6:3
+    /// compressors; the paper's "deep pipeline stages").
+    pub fn tree_depth(&self) -> u64 {
+        (self.uf.max(2) as f64).log2().ceil() as u64
+    }
+
+    /// Trips through the PE per output value (temporal reuse, §4.2.1).
+    pub fn trips(&self, cnum: usize) -> u64 {
+        (cnum as u64).div_ceil(self.uf as u64)
+    }
+
+    /// One pipeline trip: XNOR + popcount over lanes `[trip*UF, trip*UF+UF)`
+    /// of the packed activation patch and weight row.  Lanes beyond `cnum`
+    /// contribute zero (the hardware masks the tail).
+    pub fn trip_matches(&self, patch: &[u64], weights: &[u64], trip: u64, cnum: usize) -> u32 {
+        let start = trip as usize * self.uf;
+        let end = (start + self.uf).min(cnum);
+        debug_assert!(start < cnum);
+        let mut matches = 0u32;
+        let mut off = start;
+        while off < end {
+            let n = (end - off).min(64);
+            let a = read_bits_u64(patch, off, n);
+            let w = read_bits_u64(weights, off, n);
+            // XNOR match count within the n-bit chunk
+            let xnor = !(a ^ w);
+            let mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+            matches += (xnor & mask).count_ones();
+            off += n;
+        }
+        matches
+    }
+
+    /// Full XnorDotProduct of one output value: sum of all trips — must
+    /// equal `cnum - popcount(patch ^ weights)` computed by the engine.
+    pub fn dot(&self, patch: &[u64], weights: &[u64], cnum: usize) -> i32 {
+        (0..self.trips(cnum))
+            .map(|t| self.trip_matches(patch, weights, t, cnum))
+            .sum::<u32>() as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bits::{set_bit, words_for, xor_popcount};
+    use crate::util::SplitMix64;
+
+    fn random_row(rng: &mut SplitMix64, bits: usize) -> Vec<u64> {
+        let mut row = vec![0u64; words_for(bits)];
+        for i in 0..bits {
+            set_bit(&mut row, i, rng.bit());
+        }
+        row
+    }
+
+    #[test]
+    fn dot_equals_engine_formula_property() {
+        let mut rng = SplitMix64::new(10);
+        for _ in 0..200 {
+            let cnum = 1 + rng.below(700) as usize;
+            let uf = 1 + rng.below(cnum as u64) as usize;
+            let a = random_row(&mut rng, cnum);
+            let w = random_row(&mut rng, cnum);
+            let pe = Pe::new(uf);
+            let want = cnum as i32 - xor_popcount(&a, &w) as i32;
+            assert_eq!(pe.dot(&a, &w, cnum), want, "cnum={cnum} uf={uf}");
+        }
+    }
+
+    #[test]
+    fn trips_count() {
+        assert_eq!(Pe::new(384).trips(1152), 3);
+        assert_eq!(Pe::new(27).trips(27), 1);
+        assert_eq!(Pe::new(100).trips(101), 2);
+    }
+
+    #[test]
+    fn tree_depth_monotone() {
+        assert_eq!(Pe::new(2).tree_depth(), 1);
+        assert_eq!(Pe::new(384).tree_depth(), 9);
+        assert_eq!(Pe::new(1536).tree_depth(), 11);
+    }
+
+    #[test]
+    fn partial_trips_sum_to_dot() {
+        let mut rng = SplitMix64::new(11);
+        let cnum = 130;
+        let a = random_row(&mut rng, cnum);
+        let w = random_row(&mut rng, cnum);
+        let pe = Pe::new(64);
+        let parts: Vec<u32> = (0..pe.trips(cnum)).map(|t| pe.trip_matches(&a, &w, t, cnum)).collect();
+        assert_eq!(parts.len(), 3);
+        assert!(parts[2] <= 2); // tail trip covers only 2 lanes
+        assert_eq!(parts.iter().sum::<u32>() as i32, pe.dot(&a, &w, cnum));
+    }
+
+    #[test]
+    #[should_panic(expected = "UF")]
+    fn zero_uf_panics() {
+        Pe::new(0);
+    }
+}

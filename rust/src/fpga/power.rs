@@ -1,0 +1,107 @@
+//! Power and energy model — the Table 5 "Ours" row (8.2 W, 935 GOPS/W).
+//!
+//! First-order FPGA power: static leakage plus dynamic CV²f over the
+//! toggling fabric.  Coefficients (CAL) are set so the Table-3/Table-4
+//! design point reproduces the paper's 8.2 W implementation report; the
+//! *scaling* (with utilization, clock, and toggle activity) is physical,
+//! so ablation benches can vary the design point meaningfully.
+
+use crate::fpga::resource::ResourceReport;
+
+/// CAL: XC7VX690 static power at nominal voltage/temp (Xilinx XPE-class
+/// estimate for this device family).
+pub const STATIC_W: f64 = 2.4;
+/// CAL: dynamic watts per (kLUT * GHz) at the datapath's toggle activity.
+/// Register toggling is folded in (registers share the slices).
+pub const W_PER_KLUT_GHZ: f64 = 0.152;
+/// CAL: dynamic watts per (1000 BRAM * GHz) — 36Kb blocks, ports active.
+pub const W_PER_KBRAM_GHZ: f64 = 9.0e3;
+/// CAL: dynamic watts per (1000 DSP48 * GHz).
+pub const W_PER_KDSP_GHZ: f64 = 3.0e3;
+
+/// Power breakdown at a design point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerReport {
+    pub static_w: f64,
+    pub lut_w: f64,
+    pub bram_w: f64,
+    pub dsp_w: f64,
+}
+
+impl PowerReport {
+    pub fn total_w(&self) -> f64 {
+        self.static_w + self.lut_w + self.bram_w + self.dsp_w
+    }
+}
+
+/// Estimate total board power for a resource report at `freq_hz`.
+pub fn power(resources: &ResourceReport, freq_hz: f64) -> PowerReport {
+    let ghz = freq_hz / 1e9;
+    PowerReport {
+        static_w: STATIC_W,
+        lut_w: resources.total.luts as f64 / 1000.0 * W_PER_KLUT_GHZ * ghz,
+        bram_w: resources.total.brams as f64 / 1000.0 * W_PER_KBRAM_GHZ * ghz / 1000.0,
+        dsp_w: resources.total.dsps as f64 / 1000.0 * W_PER_KDSP_GHZ * ghz / 1000.0,
+    }
+}
+
+/// Energy per image in joules at a given throughput.
+pub fn energy_per_image_j(power_w: f64, fps: f64) -> f64 {
+    if fps <= 0.0 {
+        return f64::INFINITY;
+    }
+    power_w / fps
+}
+
+/// GOPS/W — Table 5's energy-efficiency metric.
+pub fn gops_per_w(gops: f64, power_w: f64) -> f64 {
+    gops / power_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::resource::{report, VIRTEX7_690T};
+    use crate::fpga::timing::{paper_fc_params, paper_table3_conv_params};
+    use crate::fpga::{layer_geometry, DEFAULT_FREQ_HZ};
+    use crate::model::NetConfig;
+
+    fn table2_power() -> PowerReport {
+        let geoms = layer_geometry(&NetConfig::table2());
+        let mut params = paper_table3_conv_params();
+        for g in &geoms[6..] {
+            params.push(paper_fc_params(g));
+        }
+        power(&report(&geoms, &params, VIRTEX7_690T), DEFAULT_FREQ_HZ)
+    }
+
+    #[test]
+    fn table5_power_within_band() {
+        // paper: 8.2 W at 90 MHz
+        let p = table2_power().total_w();
+        let err = (p - 8.2).abs() / 8.2;
+        assert!(err < 0.15, "power {p:.2} W vs 8.2 W ({:.1}% off)", err * 100.0);
+    }
+
+    #[test]
+    fn power_scales_with_clock() {
+        let geoms = layer_geometry(&NetConfig::table2());
+        let mut params = paper_table3_conv_params();
+        for g in &geoms[6..] {
+            params.push(paper_fc_params(g));
+        }
+        let r = report(&geoms, &params, VIRTEX7_690T);
+        let p90 = power(&r, 90e6).total_w();
+        let p180 = power(&r, 180e6).total_w();
+        assert!(p180 > p90);
+        // dynamic part doubles, static does not
+        assert!((p180 - STATIC_W) / (p90 - STATIC_W) > 1.9);
+    }
+
+    #[test]
+    fn energy_metrics() {
+        assert!((energy_per_image_j(8.2, 6218.0) - 0.0013187).abs() < 1e-5);
+        assert!((gops_per_w(7663.0, 8.2) - 934.5).abs() < 1.0);
+        assert!(energy_per_image_j(8.2, 0.0).is_infinite());
+    }
+}

@@ -1,0 +1,176 @@
+//! Phase-level streaming-system simulator (paper §4.3, fig. 4).
+//!
+//! All layers run concurrently; double-buffered channels decouple them; a
+//! phase ends when every active layer has finished its feature map, so the
+//! phase length is `max_L(C_L)` — exactly eq. 12.  The simulator moves
+//! *real activations* through [`DoubleBuffer`] channels and computes them
+//! with the bit-exact engine, so it validates both the schedule (cycle
+//! accounting, buffer discipline) and the numerics (scores must equal
+//! plain `Engine::infer`).
+//!
+//! The batch-insensitivity headline of Fig. 7 falls out of this schedule:
+//! one image leaves the pipeline per phase regardless of how many are
+//! queued.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::bcnn::tensor::Activation;
+use crate::bcnn::{Engine, LayerOutput};
+use crate::fpga::channel::DoubleBuffer;
+use crate::fpga::timing::{cycle_real, LayerParams, PipelineModel};
+use crate::fpga::{layer_geometry, LayerGeom};
+
+/// System configuration for a simulation run.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    pub freq_hz: f64,
+    pub params: Vec<LayerParams>,
+    pub pipeline: PipelineModel,
+    /// Disable double buffering (ablation): layers run sequentially per
+    /// image, so the phase length becomes `sum(C_L)` instead of `max(C_L)`.
+    pub double_buffered: bool,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    /// Per-layer modeled cycles (`Cycle_r`).
+    pub layer_cycles: Vec<u64>,
+    /// Cycles of the steady-state phase (`max` or `sum` per configuration).
+    pub phase_cycles: u64,
+    /// Total cycles for the whole batch (pipeline fill + drain included).
+    pub total_cycles: u64,
+    /// Per-image completion times in cycles since t=0.
+    pub completion_cycles: Vec<u64>,
+    /// Steady-state throughput at `freq_hz`.
+    pub fps: f64,
+    /// First-image latency in seconds.
+    pub first_latency_s: f64,
+    /// Per-layer utilization within a steady phase (C_L / phase).
+    pub utilization: Vec<f64>,
+    /// Classifier scores per image (bit-exact vs `Engine::infer`).
+    pub scores: Vec<Vec<f32>>,
+}
+
+/// Simulate the streaming accelerator over a batch of images.
+pub fn simulate(engine: &Engine, config: &StreamConfig, images: &[Vec<i32>]) -> Result<StreamReport> {
+    let model = engine.model();
+    let geoms = layer_geometry(&model.config());
+    let n_layers = model.layers.len();
+    if config.params.len() != n_layers {
+        bail!("need {} layer params, got {}", n_layers, config.params.len());
+    }
+    let layer_cycles: Vec<u64> = geoms
+        .iter()
+        .zip(&config.params)
+        .map(|(g, p)| cycle_real(g, p, &config.pipeline))
+        .collect();
+
+    if !config.double_buffered {
+        return simulate_sequential(engine, config, images, &geoms, &layer_cycles);
+    }
+
+    let phase_cycles = *layer_cycles.iter().max().ok_or_else(|| anyhow!("no layers"))?;
+    let n = images.len();
+    // channels[l] connects layer l-1 -> layer l; channels[0] is the input
+    // feed, channels[n_layers] collects scores.
+    let mut channels: Vec<DoubleBuffer<Activation>> =
+        (0..n_layers).map(|_| DoubleBuffer::new()).collect();
+    let mut out_scores: Vec<Vec<f32>> = Vec::with_capacity(n);
+    let mut completion_cycles = Vec::with_capacity(n);
+    let mut clock: u64 = 0;
+    let mut fed = 0usize;
+
+    // Each iteration is one phase.  Feed one image per phase (the host
+    // interface keeps up: one image per max(C_L) cycles).
+    while out_scores.len() < n {
+        let mut active = false;
+        // layers run "concurrently": all read their front buffers as they
+        // were at phase start.  Process back-to-front so writes land in
+        // back slots without ordering artifacts.
+        for l in (0..n_layers).rev() {
+            let input = channels[l].read();
+            if let Some(act) = input {
+                active = true;
+                match engine.run_layer(&model.layers[l], &act)? {
+                    LayerOutput::Act(next) => {
+                        if l + 1 < n_layers {
+                            channels[l + 1]
+                                .write(next)
+                                .map_err(|e| anyhow!("layer {}: {e}", l + 1))?;
+                        } else {
+                            bail!("non-classifier output from last layer");
+                        }
+                    }
+                    LayerOutput::Scores(s) => {
+                        if l + 1 != n_layers {
+                            bail!("classifier layer {l} is not last");
+                        }
+                        out_scores.push(s);
+                        completion_cycles.push(clock + phase_cycles);
+                    }
+                }
+            }
+        }
+        // host feeds the next image into layer 0's channel
+        if fed < n {
+            let hw = model.input_hw;
+            let c = model.input_channels;
+            channels[0]
+                .write(Activation::Int { hw, c, data: images[fed].clone() })
+                .map_err(|e| anyhow!("input channel: {e}"))?;
+            fed += 1;
+            active = true;
+        }
+        if !active {
+            bail!("deadlock: no layer active but {} images missing", n - out_scores.len());
+        }
+        for ch in &mut channels {
+            ch.swap();
+        }
+        clock += phase_cycles;
+    }
+
+    let utilization = layer_cycles.iter().map(|&c| c as f64 / phase_cycles as f64).collect();
+    Ok(StreamReport {
+        fps: config.freq_hz / phase_cycles as f64,
+        first_latency_s: completion_cycles.first().map(|&c| c as f64 / config.freq_hz).unwrap_or(0.0),
+        layer_cycles,
+        phase_cycles,
+        total_cycles: clock,
+        completion_cycles,
+        utilization,
+        scores: out_scores,
+    })
+}
+
+/// Ablation mode: no double buffering — one image occupies the whole
+/// datapath; layers execute in sequence (the time-multiplexed scheme the
+/// paper criticizes in Ref. 21, §6.2).
+fn simulate_sequential(
+    engine: &Engine,
+    config: &StreamConfig,
+    images: &[Vec<i32>],
+    _geoms: &[LayerGeom],
+    layer_cycles: &[u64],
+) -> Result<StreamReport> {
+    let per_image: u64 = layer_cycles.iter().sum();
+    let mut scores = Vec::with_capacity(images.len());
+    let mut completion_cycles = Vec::with_capacity(images.len());
+    let mut clock = 0u64;
+    for img in images {
+        scores.push(engine.infer(img)?);
+        clock += per_image;
+        completion_cycles.push(clock);
+    }
+    Ok(StreamReport {
+        layer_cycles: layer_cycles.to_vec(),
+        phase_cycles: per_image,
+        total_cycles: clock,
+        completion_cycles,
+        fps: config.freq_hz / per_image as f64,
+        first_latency_s: per_image as f64 / config.freq_hz,
+        utilization: layer_cycles.iter().map(|&c| c as f64 / per_image as f64).collect(),
+        scores,
+    })
+}

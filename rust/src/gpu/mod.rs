@@ -1,0 +1,192 @@
+//! Analytic Titan X GPU model — the Fig. 7 comparator.
+//!
+//! The paper benchmarks the BCNN on a Titan X with two CUDA kernels: the
+//! floating-point *baseline* and the bit-packed *XNOR kernel* of Ref. 9
+//! (32 1-bit lanes per 32-bit word; each fully-pipelined CUDA core retires
+//! 32 bitwise ops/cycle, §2.4).  No physical GPU exists in this
+//! environment, so Fig. 7's GPU series comes from a first-order
+//! latency-hiding model:
+//!
+//! * `FPS(batch) = FPS_peak * U(batch)`, with the occupancy/utilization
+//!   curve `U(b) = b / (b + b_half)` — the standard latency-hiding
+//!   saturation form (utilization grows with thread-level parallelism
+//!   until functional-unit latency is hidden);
+//! * `FPS_peak` from device arithmetic: 3072 cores x 32 bit-ops/cycle
+//!   x 1 GHz for the XNOR kernel, derated by a measured-efficiency factor
+//!   (XNOR kernels are memory/layout bound well below arithmetic peak);
+//! * board power during kernel execution (CAL) from the paper's two
+//!   energy-efficiency ratios, which pin it at ~76 W for this workload —
+//!   far under TDP, consistent with a memory-bound binary kernel.
+//!
+//! CAL constants reproduce the paper's anchor points: XNOR kernel at
+//! batch 512 on par with the FPGA's 6218 FPS, 8.3x slower at batch 16,
+//! and the 7x XNOR-over-baseline speedup reported in Ref. 9.
+
+use crate::model::NetConfig;
+
+/// Titan X (Maxwell) device arithmetic.
+pub const CUDA_CORES: f64 = 3072.0;
+pub const GPU_CLOCK_HZ: f64 = 1.0e9;
+/// Bitwise lanes per core per cycle with the 32-bit packed XNOR kernel.
+pub const BIT_LANES: f64 = 32.0;
+/// fp32 FMA throughput (2 flops/core/cycle).
+pub const FP32_FLOPS: f64 = CUDA_CORES * 2.0 * GPU_CLOCK_HZ;
+
+// --- CAL constants (calibrated against the paper's reported ratios) -----
+/// Achieved fraction of bit-op peak for the XNOR kernel (memory-bound;
+/// yields ~8.1 kFPS asymptotic on the Table-2 net, putting batch-512
+/// throughput on par with the FPGA as Fig. 7 reports).
+pub const XNOR_EFFICIENCY: f64 = 0.051;
+/// Achieved fraction of fp32 peak for the baseline kernel, set so the
+/// XNOR kernel's asymptotic speedup over baseline is the 7x of Ref. 9.
+pub const BASELINE_EFFICIENCY: f64 = 0.232;
+/// Latency-hiding half-saturation batch size (batch at which utilization
+/// reaches 50%); from the paper's 8.3x @16 vs parity @512 anchors.
+pub const B_HALF: f64 = 158.0;
+/// Board power during XNOR-kernel execution, W (CAL: pinned by the
+/// paper's 75x @16 and 9.5x @512 energy-efficiency ratios).
+pub const XNOR_POWER_W: f64 = 76.0;
+/// Board power during fp32 baseline execution, W (higher ALU activity).
+pub const BASELINE_POWER_W: f64 = 150.0;
+
+/// Which CUDA kernel the model evaluates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuKernel {
+    /// fp32 cuDNN-style baseline.
+    Baseline,
+    /// Bit-packed XNOR kernel of Ref. 9.
+    Xnor,
+}
+
+/// Analytic Titan X model for a given network.
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    /// Total MAC-equivalent ops per image (x2 convention, like the FPGA
+    /// side's GOPS accounting).
+    pub ops_per_image: f64,
+    pub b_half: f64,
+}
+
+impl GpuModel {
+    pub fn new(config: &NetConfig) -> Self {
+        Self { ops_per_image: config.ops_per_image() as f64, b_half: B_HALF }
+    }
+
+    /// Asymptotic (fully latency-hidden) throughput of a kernel.
+    pub fn peak_fps(&self, kernel: GpuKernel) -> f64 {
+        match kernel {
+            GpuKernel::Xnor => {
+                let bitops_per_s = CUDA_CORES * BIT_LANES * GPU_CLOCK_HZ * 2.0;
+                XNOR_EFFICIENCY * bitops_per_s / self.ops_per_image
+            }
+            GpuKernel::Baseline => BASELINE_EFFICIENCY * FP32_FLOPS / self.ops_per_image,
+        }
+    }
+
+    /// Utilization at a batch size (latency-hiding saturation curve).
+    pub fn utilization(&self, batch: usize) -> f64 {
+        let b = batch as f64;
+        b / (b + self.b_half)
+    }
+
+    /// Throughput at a batch size.
+    pub fn fps(&self, kernel: GpuKernel, batch: usize) -> f64 {
+        self.peak_fps(kernel) * self.utilization(batch)
+    }
+
+    /// Board power during execution.
+    pub fn power_w(&self, kernel: GpuKernel) -> f64 {
+        match kernel {
+            GpuKernel::Xnor => XNOR_POWER_W,
+            GpuKernel::Baseline => BASELINE_POWER_W,
+        }
+    }
+
+    /// Energy efficiency in FPS/W at a batch size.
+    pub fn fps_per_w(&self, kernel: GpuKernel, batch: usize) -> f64 {
+        self.fps(kernel, batch) / self.power_w(kernel)
+    }
+
+    /// GOPS at a batch size (Table-5-style accounting).
+    pub fn gops(&self, kernel: GpuKernel, batch: usize) -> f64 {
+        self.fps(kernel, batch) * self.ops_per_image / 1e9
+    }
+
+    /// Mean per-request latency at a batch size (batch must fill first:
+    /// the whole batch completes together — this is what makes small-batch
+    /// online serving GPU-unfriendly).
+    pub fn batch_latency_s(&self, kernel: GpuKernel, batch: usize) -> f64 {
+        batch as f64 / self.fps(kernel, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> GpuModel {
+        GpuModel::new(&NetConfig::table2())
+    }
+
+    const FPGA_FPS: f64 = 6218.0;
+    const FPGA_POWER: f64 = 8.2;
+
+    #[test]
+    fn fig7_throughput_anchor_batch16() {
+        // paper: FPGA 8.3x faster than GPU XNOR kernel at batch 16
+        let ratio = FPGA_FPS / model().fps(GpuKernel::Xnor, 16);
+        assert!((ratio - 8.3).abs() / 8.3 < 0.15, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig7_throughput_anchor_batch512() {
+        // paper: on a par at batch 512 (say within 10%)
+        let ratio = FPGA_FPS / model().fps(GpuKernel::Xnor, 512);
+        assert!((ratio - 1.0).abs() < 0.10, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig7_energy_anchor_batch16() {
+        // paper: 75x better energy efficiency at batch 16
+        let fpga = FPGA_FPS / FPGA_POWER;
+        let gpu = model().fps_per_w(GpuKernel::Xnor, 16);
+        let ratio = fpga / gpu;
+        assert!((ratio - 75.0).abs() / 75.0 < 0.15, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig7_energy_anchor_batch512() {
+        // paper: 9.5x better energy efficiency at batch 512
+        let fpga = FPGA_FPS / FPGA_POWER;
+        let gpu = model().fps_per_w(GpuKernel::Xnor, 512);
+        let ratio = fpga / gpu;
+        assert!((ratio - 9.5).abs() / 9.5 < 0.15, "ratio {ratio}");
+    }
+
+    #[test]
+    fn xnor_speedup_over_baseline_is_ref9_7x() {
+        let m = model();
+        let speedup = m.peak_fps(GpuKernel::Xnor) / m.peak_fps(GpuKernel::Baseline);
+        assert!((speedup - 7.0).abs() < 0.8, "speedup {speedup}");
+    }
+
+    #[test]
+    fn utilization_monotone_saturating() {
+        let m = model();
+        let mut prev = 0.0;
+        for b in [1usize, 4, 16, 64, 256, 1024, 8192] {
+            let u = m.utilization(b);
+            assert!(u > prev && u < 1.0);
+            prev = u;
+        }
+        assert!(m.utilization(100_000) > 0.99);
+    }
+
+    #[test]
+    fn batch_latency_grows_with_batch() {
+        let m = model();
+        assert!(
+            m.batch_latency_s(GpuKernel::Xnor, 512) > m.batch_latency_s(GpuKernel::Xnor, 16)
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! Reproduction of *"A GPU-Outperforming FPGA Accelerator Architecture for
+//! Binary Convolutional Neural Networks"* (Li, Liu, Xu, Yu, Ren — 2017).
+//!
+//! Three-layer architecture (DESIGN.md):
+//!
+//! * **L1/L2** live in `python/compile/`: Pallas XNOR-GEMM kernels and the
+//!   JAX BCNN forward graph, AOT-lowered once to HLO text artifacts.
+//! * **L3** is this crate: the serving coordinator ([`coordinator`]), the
+//!   PJRT runtime that executes the AOT artifacts ([`runtime`]), the native
+//!   packed-`u64` inference engine ([`bcnn`]) used as the hot path and as
+//!   the functional model of the FPGA datapath, and the paper's
+//!   architecture itself as a simulator: [`fpga`] (timing/resource/power),
+//!   [`optimizer`] (the §4.3 throughput-balancing model, Table 3) and
+//!   [`gpu`] (the Titan X comparator of Fig. 7).
+//!
+//! Python never runs at request time: the `repro` binary is self-contained
+//! once `make artifacts` has produced `artifacts/*.hlo.txt` + `*.bcnn`.
+
+pub mod bcnn;
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod fpga;
+pub mod gpu;
+pub mod model;
+pub mod optimizer;
+pub mod runtime;
+pub mod tables;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,13 @@
+//! `repro` — leader entrypoint for the BCNN FPGA-accelerator reproduction.
+//!
+//! Python never runs here: the binary loads AOT artifacts produced once by
+//! `make artifacts` (HLO text + `.bcnn` weights) and serves/simulates from
+//! rust alone.  See `repro help` for the subcommands.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = repro::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

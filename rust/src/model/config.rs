@@ -1,0 +1,236 @@
+//! BCNN network configurations — the shape algebra everything else
+//! (engine, FPGA simulator, optimizer, GPU model) is derived from.
+//!
+//! `NetConfig::table2()` is the paper's Table 2 network verbatim; all conv
+//! layers are 3x3, stride 1, 1-pixel zero padding (paper §2.5), max-pool is
+//! 2x2/2 after layers 2, 4, 6.
+
+/// One binary conv layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub out_channels: usize,
+    /// 2x2/2 max-pool after this layer's convolution.
+    pub pool: bool,
+}
+
+/// Resolved conv-layer geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    pub in_c: usize,
+    pub out_c: usize,
+    /// Spatial resolution the convolution runs at (pre-pool).
+    pub in_hw: usize,
+    /// Resolution after optional pooling.
+    pub out_hw: usize,
+    pub pool: bool,
+}
+
+/// A BCNN network description (paper Table 2 family).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetConfig {
+    pub name: String,
+    pub conv: Vec<ConvSpec>,
+    /// Hidden fully-connected widths (the classifier layer is appended).
+    pub fc: Vec<usize>,
+    pub classes: usize,
+    pub input_hw: usize,
+    pub input_channels: usize,
+    /// First-layer input precision; paper §3.1 rescales inputs to 6 bits.
+    pub input_bits: usize,
+}
+
+impl NetConfig {
+    /// The paper's Table 2 CIFAR-10 BCNN.
+    pub fn table2() -> Self {
+        Self {
+            name: "cifar10-table2".into(),
+            conv: vec![
+                ConvSpec { out_channels: 128, pool: false },
+                ConvSpec { out_channels: 128, pool: true },
+                ConvSpec { out_channels: 256, pool: false },
+                ConvSpec { out_channels: 256, pool: true },
+                ConvSpec { out_channels: 512, pool: false },
+                ConvSpec { out_channels: 512, pool: true },
+            ],
+            fc: vec![1024, 1024],
+            classes: 10,
+            input_hw: 32,
+            input_channels: 3,
+            input_bits: 6,
+        }
+    }
+
+    /// Scaled-down variant used for the trained end-to-end run.
+    pub fn small() -> Self {
+        Self {
+            name: "synthetic-small".into(),
+            conv: vec![
+                ConvSpec { out_channels: 32, pool: false },
+                ConvSpec { out_channels: 32, pool: true },
+                ConvSpec { out_channels: 64, pool: false },
+                ConvSpec { out_channels: 64, pool: true },
+                ConvSpec { out_channels: 128, pool: false },
+                ConvSpec { out_channels: 128, pool: true },
+            ],
+            fc: vec![256, 256],
+            classes: 10,
+            input_hw: 32,
+            input_channels: 3,
+            input_bits: 6,
+        }
+    }
+
+    /// Minimal configuration for fast tests.
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny-test".into(),
+            conv: vec![
+                ConvSpec { out_channels: 32, pool: true },
+                ConvSpec { out_channels: 32, pool: true },
+            ],
+            fc: vec![64],
+            classes: 10,
+            input_hw: 16,
+            input_channels: 3,
+            input_bits: 6,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "table2" => Some(Self::table2()),
+            "small" => Some(Self::small()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// Total layer count (conv + hidden FC + classifier).
+    pub fn num_layers(&self) -> usize {
+        self.conv.len() + self.fc.len() + 1
+    }
+
+    /// Resolved conv-layer geometry, in order.
+    pub fn conv_shapes(&self) -> Vec<ConvShape> {
+        let mut shapes = Vec::with_capacity(self.conv.len());
+        let mut hw = self.input_hw;
+        let mut in_c = self.input_channels;
+        for spec in &self.conv {
+            let out_hw = if spec.pool { hw / 2 } else { hw };
+            shapes.push(ConvShape {
+                in_c,
+                out_c: spec.out_channels,
+                in_hw: hw,
+                out_hw,
+                pool: spec.pool,
+            });
+            in_c = spec.out_channels;
+            hw = out_hw;
+        }
+        shapes
+    }
+
+    /// Flattened feature count entering the first FC layer ((h, w, c)).
+    pub fn fc_in_features(&self) -> usize {
+        let last = *self.conv_shapes().last().expect("at least one conv layer");
+        last.out_c * last.out_hw * last.out_hw
+    }
+
+    /// FC layer dims `(in, out)` including the classifier.
+    pub fn fc_shapes(&self) -> Vec<(usize, usize)> {
+        let mut dims = vec![self.fc_in_features()];
+        dims.extend_from_slice(&self.fc);
+        dims.push(self.classes);
+        dims.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    /// `cnum_l = FW*FH*FD` — XNOR ops per output value (paper eq. 6).
+    /// `layer` is 1-based as in the paper.
+    pub fn cnum(&self, layer: usize) -> usize {
+        assert!(layer >= 1 && layer <= self.num_layers(), "layer {layer}");
+        let conv_shapes = self.conv_shapes();
+        if layer <= conv_shapes.len() {
+            9 * conv_shapes[layer - 1].in_c
+        } else {
+            self.fc_shapes()[layer - conv_shapes.len() - 1].0
+        }
+    }
+
+    /// MAC-equivalent operation count per image, x2 (multiply + add) — the
+    /// paper's GOPS accounting (Table 5: 7663 GOPS = ops/image x 6218 FPS).
+    pub fn ops_per_image(&self) -> u64 {
+        let mut total: u64 = 0;
+        for s in self.conv_shapes() {
+            total += (s.in_hw * s.in_hw * s.out_c * 9 * s.in_c) as u64;
+        }
+        for (in_f, out_f) in self.fc_shapes() {
+            total += (in_f * out_f) as u64;
+        }
+        2 * total
+    }
+
+    /// Binary weight bits across all layers (capacity driver for BRAM).
+    pub fn weight_bits(&self) -> u64 {
+        let mut total: u64 = 0;
+        for (i, s) in self.conv_shapes().iter().enumerate() {
+            let per_filter = 9 * s.in_c;
+            // first layer weights are 2-bit signed in the paper's design
+            let bits = if i == 0 { 2 * per_filter } else { per_filter };
+            total += (s.out_c * bits) as u64;
+        }
+        for (in_f, out_f) in self.fc_shapes() {
+            total += (in_f * out_f) as u64;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper() {
+        let cfg = NetConfig::table2();
+        let shapes = cfg.conv_shapes();
+        let in_out: Vec<(usize, usize)> = shapes.iter().map(|s| (s.in_c, s.out_c)).collect();
+        assert_eq!(
+            in_out,
+            vec![(3, 128), (128, 128), (128, 256), (256, 256), (256, 512), (512, 512)]
+        );
+        let out_hw: Vec<usize> = shapes.iter().map(|s| s.out_hw).collect();
+        assert_eq!(out_hw, vec![32, 16, 16, 8, 8, 4]);
+        assert_eq!(cfg.fc_shapes(), vec![(8192, 1024), (1024, 1024), (1024, 10)]);
+        assert_eq!(cfg.num_layers(), 9);
+    }
+
+    #[test]
+    fn table2_cnum() {
+        let cfg = NetConfig::table2();
+        assert_eq!(cfg.cnum(1), 27);
+        assert_eq!(cfg.cnum(2), 9 * 128);
+        assert_eq!(cfg.cnum(6), 9 * 512);
+        assert_eq!(cfg.cnum(7), 8192);
+        assert_eq!(cfg.cnum(9), 1024);
+    }
+
+    #[test]
+    fn table2_gops_headline() {
+        // paper §6.2: 7663 GOPS at 6218 FPS => ~1.233 GOP/image
+        let ops = NetConfig::table2().ops_per_image();
+        let gops = ops as f64 * 6218.0 / 1e9;
+        assert!((gops - 7663.0).abs() / 7663.0 < 0.02, "gops {gops}");
+    }
+
+    #[test]
+    fn by_name() {
+        assert!(NetConfig::by_name("table2").is_some());
+        assert!(NetConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "layer")]
+    fn cnum_out_of_range_panics() {
+        NetConfig::tiny().cnum(99);
+    }
+}

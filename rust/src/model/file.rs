@@ -1,0 +1,284 @@
+//! `.bcnn` weight-file reader — the interchange with the python compile
+//! path (format spec in `python/compile/export.py`, version 2).
+//!
+//! Weights arrive already bit-packed (LSB-first `u64` words, `(kh, kw, c)`
+//! patch order for conv, `(h, w, c)` flattening for FC) so the native
+//! engine can use them in place.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::config::{ConvSpec, NetConfig};
+use crate::util::bits::words_for;
+
+pub const MAGIC: &[u8; 4] = b"BCNN";
+pub const VERSION: u32 = 2;
+
+/// One layer's folded inference parameters (paper §3: weights + the single
+/// per-channel threshold that replaces BN + binarize).
+#[derive(Debug, Clone)]
+pub enum LayerWeights {
+    /// First layer: 6-bit activations x ±1 weights, integer thresholds.
+    FpConv {
+        in_c: usize,
+        out_c: usize,
+        pool: bool,
+        /// `[out_c][9*in_c]` in (kh, kw, c) order, values in {-1, +1}.
+        weights: Vec<i8>,
+        thresholds: Vec<i32>,
+    },
+    /// Hidden binary conv: packed weights + thresholds.
+    BinConv {
+        in_c: usize,
+        out_c: usize,
+        pool: bool,
+        /// `[out_c]` rows of `words_for(9*in_c)` packed words.
+        weights: Vec<u64>,
+        words_per_row: usize,
+        thresholds: Vec<i32>,
+    },
+    /// Hidden binary FC.
+    BinFc {
+        in_f: usize,
+        out_f: usize,
+        weights: Vec<u64>,
+        words_per_row: usize,
+        thresholds: Vec<i32>,
+    },
+    /// Classifier: affine Norm (paper fig. 3 output layer), no binarize.
+    BinFcOut {
+        in_f: usize,
+        out_f: usize,
+        weights: Vec<u64>,
+        words_per_row: usize,
+        scale: Vec<f32>,
+        bias: Vec<f32>,
+    },
+}
+
+impl LayerWeights {
+    pub fn out_dim(&self) -> usize {
+        match self {
+            LayerWeights::FpConv { out_c, .. } | LayerWeights::BinConv { out_c, .. } => *out_c,
+            LayerWeights::BinFc { out_f, .. } | LayerWeights::BinFcOut { out_f, .. } => *out_f,
+        }
+    }
+
+    /// Packed weight row `n` for binary kinds.
+    pub fn weight_row(&self, n: usize) -> &[u64] {
+        match self {
+            LayerWeights::BinConv { weights, words_per_row, .. }
+            | LayerWeights::BinFc { weights, words_per_row, .. }
+            | LayerWeights::BinFcOut { weights, words_per_row, .. } => {
+                &weights[n * words_per_row..(n + 1) * words_per_row]
+            }
+            LayerWeights::FpConv { .. } => panic!("weight_row on FpConv"),
+        }
+    }
+}
+
+/// A fully-loaded BCNN model.
+#[derive(Debug, Clone)]
+pub struct BcnnModel {
+    pub name: String,
+    pub input_hw: usize,
+    pub input_channels: usize,
+    pub input_bits: usize,
+    pub classes: usize,
+    pub layers: Vec<LayerWeights>,
+}
+
+impl BcnnModel {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let data = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&data)
+    }
+
+    pub fn parse(data: &[u8]) -> Result<Self> {
+        let mut r = Reader { data, off: 0 };
+        if r.take(4)? != MAGIC {
+            bail!("bad magic (not a .bcnn file)");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported .bcnn version {version} (want {VERSION})");
+        }
+        let name_len = r.u16()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec()).context("model name")?;
+        let input_hw = r.u32()? as usize;
+        let input_channels = r.u32()? as usize;
+        let input_bits = r.u32()? as usize;
+        let classes = r.u32()? as usize;
+        let n_layers = r.u32()? as usize;
+        if n_layers == 0 || n_layers > 64 {
+            bail!("implausible layer count {n_layers}");
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            layers.push(read_layer(&mut r).with_context(|| format!("layer {i}"))?);
+        }
+        if r.off != data.len() {
+            bail!("{} trailing bytes", data.len() - r.off);
+        }
+        Ok(Self { name, input_hw, input_channels, input_bits, classes, layers })
+    }
+
+    /// Reconstruct the `NetConfig` this model instantiates (used to drive
+    /// the FPGA simulator / optimizer from a weight file alone).
+    pub fn config(&self) -> NetConfig {
+        let mut conv = Vec::new();
+        let mut fc = Vec::new();
+        for layer in &self.layers {
+            match layer {
+                LayerWeights::FpConv { out_c, pool, .. }
+                | LayerWeights::BinConv { out_c, pool, .. } => {
+                    conv.push(ConvSpec { out_channels: *out_c, pool: *pool })
+                }
+                LayerWeights::BinFc { out_f, .. } => fc.push(*out_f),
+                LayerWeights::BinFcOut { .. } => {}
+            }
+        }
+        NetConfig {
+            name: self.name.clone(),
+            conv,
+            fc,
+            classes: self.classes,
+            input_hw: self.input_hw,
+            input_channels: self.input_channels,
+            input_bits: self.input_bits,
+        }
+    }
+}
+
+struct Reader<'a> {
+    data: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.data.len() {
+            bail!("truncated file at byte {}", self.off);
+        }
+        let s = &self.data[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn i32_vec(&mut self, n: usize) -> Result<Vec<i32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u64_vec(&mut self, n: usize) -> Result<Vec<u64>> {
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+const KIND_FP_CONV: u8 = 0;
+const KIND_BIN_CONV: u8 = 1;
+const KIND_BIN_FC: u8 = 2;
+const KIND_BIN_FC_OUT: u8 = 3;
+
+fn read_layer(r: &mut Reader) -> Result<LayerWeights> {
+    let kind = r.u8()?;
+    match kind {
+        KIND_FP_CONV => {
+            let in_c = r.u32()? as usize;
+            let out_c = r.u32()? as usize;
+            let pool = r.u8()? != 0;
+            let raw = r.take(out_c * 9 * in_c)?;
+            let weights: Vec<i8> = raw.iter().map(|&b| b as i8).collect();
+            if weights.iter().any(|&w| w != 1 && w != -1) {
+                bail!("fp_conv weights must be ±1");
+            }
+            let thresholds = r.i32_vec(out_c)?;
+            Ok(LayerWeights::FpConv { in_c, out_c, pool, weights, thresholds })
+        }
+        KIND_BIN_CONV => {
+            let in_c = r.u32()? as usize;
+            let out_c = r.u32()? as usize;
+            let pool = r.u8()? != 0;
+            let words_per_row = words_for(9 * in_c);
+            let weights = r.u64_vec(out_c * words_per_row)?;
+            let thresholds = r.i32_vec(out_c)?;
+            Ok(LayerWeights::BinConv { in_c, out_c, pool, weights, words_per_row, thresholds })
+        }
+        KIND_BIN_FC => {
+            let in_f = r.u32()? as usize;
+            let out_f = r.u32()? as usize;
+            let words_per_row = words_for(in_f);
+            let weights = r.u64_vec(out_f * words_per_row)?;
+            let thresholds = r.i32_vec(out_f)?;
+            Ok(LayerWeights::BinFc { in_f, out_f, weights, words_per_row, thresholds })
+        }
+        KIND_BIN_FC_OUT => {
+            let in_f = r.u32()? as usize;
+            let out_f = r.u32()? as usize;
+            let words_per_row = words_for(in_f);
+            let weights = r.u64_vec(out_f * words_per_row)?;
+            let scale = r.f32_vec(out_f)?;
+            let bias = r.f32_vec(out_f)?;
+            Ok(LayerWeights::BinFcOut { in_f, out_f, weights, words_per_row, scale, bias })
+        }
+        k => bail!("unknown layer kind {k}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(BcnnModel::parse(b"NOPE\x02\0\0\0").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut data = Vec::new();
+        data.extend_from_slice(MAGIC);
+        data.extend_from_slice(&VERSION.to_le_bytes());
+        data.extend_from_slice(&2u16.to_le_bytes());
+        data.extend_from_slice(b"t");
+        // missing the rest
+        assert!(BcnnModel::parse(&data).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let mut data = Vec::new();
+        data.extend_from_slice(MAGIC);
+        data.extend_from_slice(&99u32.to_le_bytes());
+        assert!(BcnnModel::parse(&data).is_err());
+    }
+}

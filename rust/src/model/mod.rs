@@ -1,0 +1,10 @@
+//! Network description (paper Table 2) and the `.bcnn` weight file format
+//! shared with the python compile path.
+
+pub mod config;
+pub mod file;
+pub mod testset;
+
+pub use config::{ConvShape, ConvSpec, NetConfig};
+pub use file::{BcnnModel, LayerWeights};
+pub use testset::TestSet;

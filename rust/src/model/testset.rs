@@ -1,0 +1,71 @@
+//! Labelled test-set file reader (`artifacts/testset_<cfg>.bin`), written
+//! by `python/compile/train.py` for the rust end-to-end example.
+//!
+//! Format (little-endian): magic `BSET`; u32 n, hw, channels, classes;
+//! then per sample `hw*hw*channels` int8 NHWC pixels + u8 label.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A labelled evaluation set.
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    pub hw: usize,
+    pub channels: usize,
+    pub classes: usize,
+    pub images: Vec<Vec<i32>>,
+    pub labels: Vec<u8>,
+}
+
+impl TestSet {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let data = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        if data.len() < 20 || &data[..4] != b"BSET" {
+            bail!("not a test-set file");
+        }
+        let u32_at = |off: usize| {
+            u32::from_le_bytes(data[off..off + 4].try_into().unwrap()) as usize
+        };
+        let (n, hw, channels, classes) = (u32_at(4), u32_at(8), u32_at(12), u32_at(16));
+        let per = hw * hw * channels;
+        let expected = 20 + n * (per + 1);
+        if data.len() != expected {
+            bail!("test-set size {} != expected {}", data.len(), expected);
+        }
+        let mut images = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        let mut off = 20;
+        for _ in 0..n {
+            images.push(data[off..off + per].iter().map(|&b| b as i8 as i32).collect());
+            off += per;
+            labels.push(data[off]);
+            off += 1;
+        }
+        Ok(Self { hw, channels, classes, images, labels })
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("repro_testset_garbage.bin");
+        std::fs::write(&dir, b"NOPE").unwrap();
+        assert!(TestSet::load(&dir).is_err());
+        std::fs::write(&dir, b"BSET\x01\0\0\0\x02\0\0\0\x03\0\0\0\x0a\0\0\0").unwrap();
+        assert!(TestSet::load(&dir).is_err()); // truncated body
+        let _ = std::fs::remove_file(&dir);
+    }
+}

@@ -1,0 +1,156 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> compile -> execute.  HLO *text* is
+//! the interchange format — jax >= 0.5 emits protos with 64-bit ids the
+//! 0.5.1 parser rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and `python/compile/aot.py`).
+//!
+//! [`params`] reconstructs the lowered graph's parameter literals from a
+//! `.bcnn` weight file per the artifact's JSON manifest, so weights stay
+//! hot-swappable without re-lowering.
+
+pub mod params;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed artifact manifest (`artifacts/model_<cfg>_b<N>.json`).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+}
+
+/// One graph parameter (order matters: argument position = index + 1,
+/// argument 0 being the image batch).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dtype: String, // "s32" | "u32" | "f32"
+    pub shape: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let v = Json::parse(&text)?;
+        let shape_of = |node: &Json| -> Result<Vec<usize>> {
+            node.get("shape")?.as_arr()?.iter().map(|d| d.as_usize()).collect()
+        };
+        let mut params = Vec::new();
+        for p in v.get("params")?.as_arr()? {
+            params.push(ParamSpec {
+                name: p.get("name")?.as_str()?.to_string(),
+                dtype: p.get("dtype")?.as_str()?.to_string(),
+                shape: shape_of(p)?,
+            });
+        }
+        Ok(Self {
+            config: v.get("config")?.as_str()?.to_string(),
+            batch: v.get("batch")?.as_usize()?,
+            input_shape: shape_of(v.get("input")?)?,
+            output_shape: shape_of(v.get("output")?)?,
+            params,
+        })
+    }
+}
+
+/// A compiled model artifact bound to its parameter literals.
+pub struct LoadedModel {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+    /// Parameter literals in manifest order (built once from the .bcnn).
+    param_literals: Vec<xla::Literal>,
+}
+
+/// The PJRT runtime: one CPU client, a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    models: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client, artifacts_dir: artifacts_dir.into(), models: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `model_<config>_b<batch>` and bind weights from the
+    /// given `.bcnn` file.  Idempotent per (config, batch).
+    pub fn load_model(
+        &mut self,
+        config: &str,
+        batch: usize,
+        bcnn_path: impl AsRef<Path>,
+    ) -> Result<&LoadedModel> {
+        let key = format!("{config}_b{batch}");
+        if !self.models.contains_key(&key) {
+            let stem = self.artifacts_dir.join(format!("model_{config}_b{batch}"));
+            let manifest = Manifest::load(stem.with_extension("json"))?;
+            let hlo_path = stem.with_extension("hlo.txt");
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile: {e}"))?;
+            let model = crate::model::BcnnModel::load(bcnn_path.as_ref())?;
+            let param_literals = params::build_literals(&manifest, &model)?;
+            self.models.insert(key.clone(), LoadedModel { manifest, exe, param_literals });
+        }
+        Ok(&self.models[&key])
+    }
+
+    pub fn get(&self, config: &str, batch: usize) -> Option<&LoadedModel> {
+        self.models.get(&format!("{config}_b{batch}"))
+    }
+}
+
+impl LoadedModel {
+    /// Execute on a full image batch (`batch * hw * hw * c` i32 values,
+    /// NHWC).  Returns `batch * classes` f32 scores, row-major.
+    pub fn infer_batch(&self, images_flat: &[i32]) -> Result<Vec<f32>> {
+        let expect: usize = self.manifest.input_shape.iter().product();
+        if images_flat.len() != expect {
+            bail!("input length {} != {expect}", images_flat.len());
+        }
+        let dims: Vec<i64> = self.manifest.input_shape.iter().map(|&d| d as i64).collect();
+        let x = xla::Literal::vec1(images_flat)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("input reshape: {e}"))?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.param_literals.len());
+        args.push(&x);
+        args.extend(self.param_literals.iter());
+        let result = self
+            .exe
+            .execute(&args)
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        // lowered with return_tuple=True -> 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+
+    pub fn batch(&self) -> usize {
+        self.manifest.batch
+    }
+
+    pub fn classes(&self) -> usize {
+        *self.manifest.output_shape.last().unwrap_or(&0)
+    }
+}

@@ -1,0 +1,178 @@
+//! Rebuild the lowered graph's parameter literals from a `.bcnn` file.
+//!
+//! The AOT graph takes the folded model parameters as arguments (manifest
+//! order, image first).  Layout contracts with `python/compile/`:
+//!
+//! * binary weights are `u32`-packed LSB-first — the `.bcnn` file's `u64`
+//!   words split into (lo, hi) `u32` pairs (see
+//!   `python/tests/test_packing.py::test_u32_and_u64_packings_agree`);
+//! * first-layer weights are `s32` ±1; thresholds `s32`; classifier
+//!   scale/bias `f32`.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::{BcnnModel, LayerWeights};
+use crate::runtime::{Manifest, ParamSpec};
+
+/// Build literals for every manifest parameter from the loaded model.
+pub fn build_literals(manifest: &Manifest, model: &BcnnModel) -> Result<Vec<xla::Literal>> {
+    manifest.params.iter().map(|spec| build_one(spec, model)).collect()
+}
+
+fn build_one(spec: &ParamSpec, model: &BcnnModel) -> Result<xla::Literal> {
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let reshape = |lit: xla::Literal| -> Result<xla::Literal> {
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape {}: {e}", spec.name))
+    };
+    let expect: usize = spec.shape.iter().product();
+
+    match classify(&spec.name)? {
+        Param::Weights(layer_idx) => {
+            let layer = layer_of(model, layer_idx)?;
+            match layer {
+                LayerWeights::FpConv { weights, .. } => {
+                    if spec.dtype != "s32" {
+                        bail!("{}: expected s32", spec.name);
+                    }
+                    let vals: Vec<i32> = weights.iter().map(|&w| w as i32).collect();
+                    check_len(&spec.name, vals.len(), expect)?;
+                    reshape(xla::Literal::vec1(&vals))
+                }
+                LayerWeights::BinConv { weights, words_per_row, out_c, in_c, .. } => {
+                    let words32 = repack_u32(weights, *words_per_row, *out_c, 9 * in_c)?;
+                    check_len(&spec.name, words32.len(), expect)?;
+                    reshape(xla::Literal::vec1(&words32))
+                }
+                LayerWeights::BinFc { weights, words_per_row, out_f, in_f, .. }
+                | LayerWeights::BinFcOut { weights, words_per_row, out_f, in_f, .. } => {
+                    let words32 = repack_u32(weights, *words_per_row, *out_f, *in_f)?;
+                    check_len(&spec.name, words32.len(), expect)?;
+                    reshape(xla::Literal::vec1(&words32))
+                }
+            }
+        }
+        Param::Thresholds(layer_idx) => {
+            let layer = layer_of(model, layer_idx)?;
+            let thr = match layer {
+                LayerWeights::FpConv { thresholds, .. }
+                | LayerWeights::BinConv { thresholds, .. }
+                | LayerWeights::BinFc { thresholds, .. } => thresholds,
+                LayerWeights::BinFcOut { .. } => bail!("classifier has no thresholds"),
+            };
+            check_len(&spec.name, thr.len(), expect)?;
+            reshape(xla::Literal::vec1(thr))
+        }
+        Param::Scale => {
+            let LayerWeights::BinFcOut { scale, .. } = last_layer(model)? else {
+                bail!("last layer is not a classifier");
+            };
+            check_len(&spec.name, scale.len(), expect)?;
+            reshape(xla::Literal::vec1(scale))
+        }
+        Param::Bias => {
+            let LayerWeights::BinFcOut { bias, .. } = last_layer(model)? else {
+                bail!("last layer is not a classifier");
+            };
+            check_len(&spec.name, bias.len(), expect)?;
+            reshape(xla::Literal::vec1(bias))
+        }
+    }
+}
+
+enum Param {
+    Weights(usize),
+    Thresholds(usize),
+    Scale,
+    Bias,
+}
+
+fn classify(name: &str) -> Result<Param> {
+    if name == "scale" {
+        return Ok(Param::Scale);
+    }
+    if name == "bias" {
+        return Ok(Param::Bias);
+    }
+    if let Some(idx) = name.strip_prefix('w') {
+        return Ok(Param::Weights(idx.parse()?));
+    }
+    if let Some(idx) = name.strip_prefix('c') {
+        return Ok(Param::Thresholds(idx.parse()?));
+    }
+    bail!("unknown parameter name {name:?}")
+}
+
+fn layer_of(model: &BcnnModel, one_based: usize) -> Result<&LayerWeights> {
+    model
+        .layers
+        .get(one_based.checked_sub(1).ok_or_else(|| anyhow!("layer 0"))?)
+        .ok_or_else(|| anyhow!("layer {one_based} out of range"))
+}
+
+fn last_layer(model: &BcnnModel) -> Result<&LayerWeights> {
+    model.layers.last().ok_or_else(|| anyhow!("empty model"))
+}
+
+fn check_len(name: &str, got: usize, want: usize) -> Result<()> {
+    if got != want {
+        bail!("{name}: {got} values, manifest wants {want}");
+    }
+    Ok(())
+}
+
+/// Split `.bcnn` u64 rows into the graph's u32 rows.
+///
+/// Python packs `ceil(k/32)` u32 words per row; the file has
+/// `ceil(k/64)` u64 words.  u64 word w = u32[2w] | u32[2w+1] << 32, and
+/// when `ceil(k/32)` is odd the final u64's high half is padding the graph
+/// row does not include.
+pub fn repack_u32(words64: &[u64], words_per_row: usize, rows: usize, k_bits: usize) -> Result<Vec<u32>> {
+    if words64.len() != rows * words_per_row {
+        bail!("weight rows mismatch: {} != {}", words64.len(), rows * words_per_row);
+    }
+    let row32 = k_bits.div_ceil(32);
+    let mut out = Vec::with_capacity(rows * row32);
+    for r in 0..rows {
+        let row = &words64[r * words_per_row..(r + 1) * words_per_row];
+        for i in 0..row32 {
+            let w64 = row[i / 2];
+            let half = if i % 2 == 0 { w64 as u32 } else { (w64 >> 32) as u32 };
+            out.push(half);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repack_splits_lo_hi() {
+        // one row, k=96 bits -> 2 u64 words -> 3 u32 words (last hi half
+        // is padding, dropped)
+        let words = vec![0x1111_2222_3333_4444u64, 0xdead_beef_0000_5555u64];
+        let got = repack_u32(&words, 2, 1, 96).unwrap();
+        assert_eq!(got, vec![0x3333_4444, 0x1111_2222, 0x0000_5555]);
+    }
+
+    #[test]
+    fn repack_even_words() {
+        let words = vec![0xAAAA_BBBB_CCCC_DDDDu64];
+        let got = repack_u32(&words, 1, 1, 64).unwrap();
+        assert_eq!(got, vec![0xCCCC_DDDD, 0xAAAA_BBBB]);
+    }
+
+    #[test]
+    fn repack_rejects_bad_len() {
+        assert!(repack_u32(&[0u64; 3], 2, 2, 64).is_err());
+    }
+
+    #[test]
+    fn classify_names() {
+        assert!(matches!(classify("w3").unwrap(), Param::Weights(3)));
+        assert!(matches!(classify("c10").unwrap(), Param::Thresholds(10)));
+        assert!(matches!(classify("scale").unwrap(), Param::Scale));
+        assert!(classify("zzz").is_err());
+    }
+}

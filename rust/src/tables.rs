@@ -1,0 +1,271 @@
+//! Regeneration of the paper's tables and Fig. 7 with paper-vs-measured
+//! columns.  Used by the `repro tables` / `repro compare-gpu` subcommands
+//! and by the bench binaries; EXPERIMENTS.md embeds this output.
+
+use crate::benchkit::Table;
+use crate::fpga::power::{gops_per_w, power};
+use crate::fpga::resource::VIRTEX7_690T;
+use crate::fpga::timing::system_fps;
+use crate::fpga::DEFAULT_FREQ_HZ;
+use crate::gpu::{GpuKernel, GpuModel};
+use crate::model::NetConfig;
+use crate::optimizer::{optimize, paper_plan, OptimizeOptions, Plan};
+
+/// Paper Table 3 reference values (layer, UF, P, Cycle_conv, Cycle_est,
+/// Cycle_r).
+pub const PAPER_TABLE3: [(&str, usize, usize, u64, u64, u64); 6] = [
+    ("Conv 1", 27, 32, 3_538_944, 4_096, 5_233),
+    ("Conv 2", 384, 32, 150_994_944, 12_288, 12_386),
+    ("Conv 3", 384, 16, 75_497_472, 12_288, 12_296),
+    ("Conv 4", 768, 16, 150_994_944, 12_288, 13_329),
+    ("Conv 5", 768, 8, 75_497_472, 12_288, 12_386),
+    ("Conv 6", 1536, 8, 150_994_944, 12_288, 14_473),
+];
+
+/// Paper Table 4 reference (used, available).
+pub const PAPER_TABLE4: [(&str, u64, u64); 4] = [
+    ("LUTs", 342_126, 433_200),
+    ("BRAMs", 1_007, 2_060),
+    ("Registers", 70_769, 607_200),
+    ("DSP", 1_096, 2_800),
+];
+
+/// Paper Table 5 comparison rows (reference, device, clock MHz, precision,
+/// GOPS, power W) — published literature numbers quoted by the paper.
+pub const PAPER_TABLE5: [(&str, &str, u32, &str, f64, f64); 8] = [
+    ("[3]", "Virtex 6", 200, "16b", 147.0, 10.0),
+    ("[1]", "Virtex 7", 100, "fp32", 62.0, 18.7),
+    ("[12]", "Zynq-7000", 150, "16b", 137.0, 9.6),
+    ("[4]", "Stratix-V", 120, "8-16b", 117.8, 25.8),
+    ("[22]", "Arria-10", 150, "8-16b", 645.25, 21.2),
+    ("[23]", "QPI FPGA", 200, "fp32", 123.48, 13.18),
+    ("[24]", "Arria-10", 385, "fixed", 1790.0, 37.46),
+    ("[21]", "Zynq-7000", 143, "1-2b", 207.8, 4.7),
+];
+
+/// Paper headline numbers for "Ours".
+pub const PAPER_OURS_GOPS: f64 = 7663.0;
+pub const PAPER_OURS_POWER_W: f64 = 8.2;
+pub const PAPER_OURS_FPS: f64 = 6218.0;
+pub const PAPER_OURS_KLUT: f64 = 342.126;
+
+/// Table 2: the BCNN configuration.
+pub fn table2(config: &NetConfig) -> String {
+    let mut t = Table::new(&["layer", "filter/weight", "# filters", "output"]);
+    for (i, s) in config.conv_shapes().iter().enumerate() {
+        t.row(&[
+            format!("CONV-{}", i + 1),
+            format!("{}x3x3", s.in_c),
+            format!("{}", s.out_c),
+            format!("{}x{}x{}", s.out_c, s.out_hw, s.out_hw),
+        ]);
+    }
+    for (j, (in_f, out_f)) in config.fc_shapes().iter().enumerate() {
+        t.row(&[
+            format!("FC-{}", j + 1),
+            format!("{in_f}x{out_f}"),
+            "-".into(),
+            format!("{out_f}"),
+        ]);
+    }
+    t.to_string()
+}
+
+/// Table 3: optimized parameters + cycle model, ours vs paper.
+pub fn table3(plan: &Plan) -> String {
+    let mut t = Table::new(&[
+        "layer", "UF", "P", "Cycle_conv", "Cycle_est", "Cycle_r(model)", "Cycle_r(paper)", "err%",
+    ]);
+    for (layer, paper) in plan.layers.iter().zip(PAPER_TABLE3.iter()) {
+        let err = 100.0 * (layer.cycle_real as f64 - paper.5 as f64) / paper.5 as f64;
+        t.row(&[
+            layer.geom.name.clone(),
+            layer.params.uf.to_string(),
+            layer.params.p.to_string(),
+            layer.cycle_conv.to_string(),
+            layer.cycle_est.to_string(),
+            layer.cycle_real.to_string(),
+            paper.5.to_string(),
+            format!("{err:+.1}"),
+        ]);
+    }
+    for layer in &plan.layers[6..] {
+        t.row(&[
+            layer.geom.name.clone(),
+            layer.params.uf.to_string(),
+            layer.params.p.to_string(),
+            layer.cycle_conv.to_string(),
+            layer.cycle_est.to_string(),
+            layer.cycle_real.to_string(),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    let fps_model = system_fps(
+        &plan.layers.iter().map(|l| l.cycle_real).collect::<Vec<_>>(),
+        DEFAULT_FREQ_HZ,
+    );
+    format!(
+        "{t}\nbottleneck: est={} real(model)={}  FPS(model)={:.0}  FPS(paper)={:.0}\n",
+        plan.bottleneck_est,
+        plan.bottleneck_real,
+        fps_model,
+        PAPER_OURS_FPS,
+        t = t.to_string(),
+    )
+}
+
+/// Table 4: resource utilization, ours vs paper.
+pub fn table4(plan: &Plan) -> String {
+    let r = &plan.resources;
+    let ours = [
+        ("LUTs", r.total.luts, VIRTEX7_690T.luts),
+        ("BRAMs", r.total.brams, VIRTEX7_690T.brams),
+        ("Registers", r.total.registers, VIRTEX7_690T.registers),
+        ("DSP", r.total.dsps, VIRTEX7_690T.dsps),
+    ];
+    let mut t = Table::new(&["resource", "model", "paper", "available", "model%", "paper%", "err%"]);
+    for ((name, got, avail), (pname, paper, _)) in ours.iter().zip(PAPER_TABLE4.iter()) {
+        assert_eq!(name, pname);
+        t.row(&[
+            name.to_string(),
+            got.to_string(),
+            paper.to_string(),
+            avail.to_string(),
+            format!("{:.2}", 100.0 * *got as f64 / *avail as f64),
+            format!("{:.2}", 100.0 * *paper as f64 / *avail as f64),
+            format!("{:+.1}", 100.0 * (*got as f64 - *paper as f64) / *paper as f64),
+        ]);
+    }
+    t.to_string()
+}
+
+/// Table 5: cross-accelerator comparison with our model row appended.
+pub fn table5(plan: &Plan) -> String {
+    let mut t = Table::new(&[
+        "work", "device", "MHz", "precision", "GOPS", "W", "GOPS/W", "GOPS/kLUT",
+    ]);
+    for (r, dev, mhz, prec, gops, w) in PAPER_TABLE5.iter() {
+        t.row(&[
+            r.to_string(),
+            dev.to_string(),
+            mhz.to_string(),
+            prec.to_string(),
+            format!("{gops:.1}"),
+            format!("{w:.1}"),
+            format!("{:.1}", gops / w),
+            "-".into(),
+        ]);
+    }
+    let config = NetConfig::table2();
+    let fps = system_fps(
+        &plan.layers.iter().map(|l| l.cycle_real).collect::<Vec<_>>(),
+        DEFAULT_FREQ_HZ,
+    );
+    let gops = config.ops_per_image() as f64 * fps / 1e9;
+    let p = power(&plan.resources, DEFAULT_FREQ_HZ).total_w();
+    let klut = plan.resources.total.luts as f64 / 1000.0;
+    t.row(&[
+        "Ours(model)".into(),
+        "Virtex 7".into(),
+        "90".into(),
+        "1b".into(),
+        format!("{gops:.0}"),
+        format!("{p:.1}"),
+        format!("{:.0}", gops_per_w(gops, p)),
+        format!("{:.1}", gops / klut),
+    ]);
+    t.row(&[
+        "Ours(paper)".into(),
+        "Virtex 7".into(),
+        "90".into(),
+        "1b".into(),
+        format!("{PAPER_OURS_GOPS:.0}"),
+        format!("{PAPER_OURS_POWER_W:.1}"),
+        format!("{:.0}", PAPER_OURS_GOPS / PAPER_OURS_POWER_W),
+        format!("{:.1}", PAPER_OURS_GOPS / PAPER_OURS_KLUT),
+    ]);
+    t.to_string()
+}
+
+/// Fig. 7: FPGA vs GPU (baseline + XNOR) FPS and FPS/W across batch sizes.
+pub fn fig7(plan: &Plan, batches: &[usize]) -> String {
+    let config = NetConfig::table2();
+    let gpu = GpuModel::new(&config);
+    let fpga_fps = system_fps(
+        &plan.layers.iter().map(|l| l.cycle_real).collect::<Vec<_>>(),
+        DEFAULT_FREQ_HZ,
+    );
+    let fpga_w = power(&plan.resources, DEFAULT_FREQ_HZ).total_w();
+    let mut t = Table::new(&[
+        "batch",
+        "FPGA FPS",
+        "GPU-base FPS",
+        "GPU-XNOR FPS",
+        "FPGA FPS/W",
+        "GPU-base FPS/W",
+        "GPU-XNOR FPS/W",
+        "FPGA/GPU-XNOR speedup",
+        "FPGA/GPU-XNOR energy x",
+    ]);
+    for &b in batches {
+        let base = gpu.fps(GpuKernel::Baseline, b);
+        let xnor = gpu.fps(GpuKernel::Xnor, b);
+        let base_eff = gpu.fps_per_w(GpuKernel::Baseline, b);
+        let xnor_eff = gpu.fps_per_w(GpuKernel::Xnor, b);
+        t.row(&[
+            b.to_string(),
+            format!("{fpga_fps:.0}"),
+            format!("{base:.0}"),
+            format!("{xnor:.0}"),
+            format!("{:.1}", fpga_fps / fpga_w),
+            format!("{base_eff:.2}"),
+            format!("{xnor_eff:.2}"),
+            format!("{:.1}", fpga_fps / xnor),
+            format!("{:.1}", (fpga_fps / fpga_w) / xnor_eff),
+        ]);
+    }
+    format!(
+        "{}\npaper anchors: 8.3x speedup & 75x energy at batch 16; parity & 9.5x at batch 512\n",
+        t.to_string()
+    )
+}
+
+/// Default plan used by the table commands: the paper's design point.
+pub fn default_plan() -> Plan {
+    paper_plan(&OptimizeOptions::default())
+}
+
+/// Optimizer-derived plan (Table 3 regeneration from the model alone).
+pub fn optimized_plan() -> anyhow::Result<Plan> {
+    optimize(&NetConfig::table2(), &OptimizeOptions::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render() {
+        let plan = default_plan();
+        let t2 = table2(&NetConfig::table2());
+        assert!(t2.contains("CONV-6") && t2.contains("512x4x4"));
+        let t3 = table3(&plan);
+        assert!(t3.contains("Conv 6") && t3.contains("12288"));
+        let t4 = table4(&plan);
+        assert!(t4.contains("LUTs"));
+        let t5 = table5(&plan);
+        assert!(t5.contains("Ours(model)") && t5.contains("935"));
+        let f7 = fig7(&plan, &[16, 512]);
+        assert!(f7.contains("16") && f7.contains("512"));
+    }
+
+    #[test]
+    fn fig7_ratios_in_shape() {
+        let plan = default_plan();
+        let s = fig7(&plan, &[16, 512]);
+        // the table must show a large speedup at 16 and rough parity at 512
+        // (checked numerically in gpu::tests; here just rendering sanity)
+        assert!(s.lines().count() >= 5, "{s}");
+    }
+}

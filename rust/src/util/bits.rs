@@ -1,0 +1,215 @@
+//! Bit-string helpers shared by the packed engine and the model loader.
+//!
+//! Convention (identical to `python/compile/packing.py`): bit `b` of word
+//! `w` holds flattened element `w*64 + b` — LSB-first within each `u64`.
+
+/// Number of `u64` words needed to hold `bits` bits.
+#[inline]
+pub const fn words_for(bits: usize) -> usize {
+    bits.div_ceil(64)
+}
+
+/// Read bit `idx` from a packed word slice.
+#[inline]
+pub fn get_bit(words: &[u64], idx: usize) -> bool {
+    (words[idx / 64] >> (idx % 64)) & 1 == 1
+}
+
+/// Set bit `idx` in a packed word slice.
+#[inline]
+pub fn set_bit(words: &mut [u64], idx: usize, value: bool) {
+    let (w, b) = (idx / 64, idx % 64);
+    if value {
+        words[w] |= 1u64 << b;
+    } else {
+        words[w] &= !(1u64 << b);
+    }
+}
+
+/// Copy `len` bits from `src` starting at bit `src_off` into `dst` starting
+/// at bit `dst_off`.  Destination bits outside the range are preserved.
+///
+/// This is the patch-assembly primitive of the native engine (gathering
+/// 3x3 neighbourhood channel blocks into an im2row patch) so it has a fast
+/// word-aligned path; the general path shifts across word boundaries.
+pub fn copy_bits(dst: &mut [u64], dst_off: usize, src: &[u64], src_off: usize, len: usize) {
+    if len == 0 {
+        return;
+    }
+    debug_assert!(src_off + len <= src.len() * 64, "src range");
+    debug_assert!(dst_off + len <= dst.len() * 64, "dst range");
+
+    // Fast path: both offsets word-aligned.
+    if dst_off % 64 == 0 && src_off % 64 == 0 {
+        let dw = dst_off / 64;
+        let sw = src_off / 64;
+        let full = len / 64;
+        dst[dw..dw + full].copy_from_slice(&src[sw..sw + full]);
+        let tail = len % 64;
+        if tail != 0 {
+            let mask = (1u64 << tail) - 1;
+            dst[dw + full] = (dst[dw + full] & !mask) | (src[sw + full] & mask);
+        }
+        return;
+    }
+
+    // General path: 64-bit chunks with unaligned word reads.
+    let mut done = 0;
+    while done < len {
+        let n = (len - done).min(64);
+        let chunk = read_bits_u64(src, src_off + done, n);
+        write_bits_u64(dst, dst_off + done, chunk, n);
+        done += n;
+    }
+}
+
+/// Read `n <= 64` bits starting at `off` as the low bits of a u64.
+#[inline]
+pub fn read_bits_u64(words: &[u64], off: usize, n: usize) -> u64 {
+    debug_assert!(n >= 1 && n <= 64);
+    let w = off / 64;
+    let b = off % 64;
+    let lo = words[w] >> b;
+    let val = if b != 0 && b + n > 64 {
+        lo | (words[w + 1] << (64 - b))
+    } else {
+        lo
+    };
+    if n == 64 {
+        val
+    } else {
+        val & ((1u64 << n) - 1)
+    }
+}
+
+/// Write the low `n <= 64` bits of `value` at bit offset `off`.
+#[inline]
+pub fn write_bits_u64(words: &mut [u64], off: usize, value: u64, n: usize) {
+    debug_assert!(n >= 1 && n <= 64);
+    let masked = if n == 64 { value } else { value & ((1u64 << n) - 1) };
+    let w = off / 64;
+    let b = off % 64;
+    if b == 0 {
+        let mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+        words[w] = (words[w] & !mask) | masked;
+    } else if b + n <= 64 {
+        let mask = (if n == 64 { u64::MAX } else { (1u64 << n) - 1 }) << b;
+        words[w] = (words[w] & !mask) | (masked << b);
+    } else {
+        let lo_n = 64 - b;
+        let hi_n = n - lo_n;
+        let lo_mask = ((1u64 << lo_n) - 1) << b;
+        words[w] = (words[w] & !lo_mask) | (masked << b);
+        let hi_mask = (1u64 << hi_n) - 1;
+        words[w + 1] = (words[w + 1] & !hi_mask) | (masked >> lo_n);
+    }
+}
+
+/// Popcount of `a XOR b` over whole word slices (the XnorDotProduct core:
+/// mismatch count; match count = k_bits - mismatches when pad bits agree).
+#[inline]
+pub fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u32;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc += (x ^ y).count_ones();
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn random_bits(rng: &mut SplitMix64, n: usize) -> Vec<bool> {
+        (0..n).map(|_| rng.bit()).collect()
+    }
+
+    fn pack(bits: &[bool]) -> Vec<u64> {
+        let mut words = vec![0u64; words_for(bits.len())];
+        for (i, &b) in bits.iter().enumerate() {
+            set_bit(&mut words, i, b);
+        }
+        words
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut rng = SplitMix64::new(1);
+        let bits = random_bits(&mut rng, 193);
+        let words = pack(&bits);
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(get_bit(&words, i), b, "bit {i}");
+        }
+    }
+
+    #[test]
+    fn copy_bits_property() {
+        // property sweep: random (src_off, dst_off, len) against a scalar model
+        let mut rng = SplitMix64::new(2);
+        for case in 0..500 {
+            let src_bits = random_bits(&mut rng, 256);
+            let dst_bits = random_bits(&mut rng, 256);
+            let src = pack(&src_bits);
+            let mut dst = pack(&dst_bits);
+            let len = rng.below(200) as usize;
+            let src_off = rng.below((256 - len + 1) as u64) as usize;
+            let dst_off = rng.below((256 - len + 1) as u64) as usize;
+            copy_bits(&mut dst, dst_off, &src, src_off, len);
+            for i in 0..256 {
+                let want = if i >= dst_off && i < dst_off + len {
+                    src_bits[src_off + (i - dst_off)]
+                } else {
+                    dst_bits[i]
+                };
+                assert_eq!(get_bit(&dst, i), want, "case {case} bit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn copy_bits_aligned_fast_path() {
+        let mut rng = SplitMix64::new(3);
+        let src_bits = random_bits(&mut rng, 320);
+        let src = pack(&src_bits);
+        let mut dst = vec![0u64; 5];
+        copy_bits(&mut dst, 64, &src, 128, 96);
+        for i in 0..96 {
+            assert_eq!(get_bit(&dst, 64 + i), src_bits[128 + i]);
+        }
+        assert_eq!(dst[0], 0);
+    }
+
+    #[test]
+    fn read_write_bits_u64_roundtrip() {
+        let mut rng = SplitMix64::new(4);
+        for _ in 0..500 {
+            let mut words = vec![rng.next_u64(), rng.next_u64(), rng.next_u64()];
+            let n = 1 + rng.below(64) as usize;
+            let off = rng.below((192 - n + 1) as u64) as usize;
+            let val = rng.next_u64();
+            let before: Vec<bool> = (0..192).map(|i| get_bit(&words, i)).collect();
+            write_bits_u64(&mut words, off, val, n);
+            let got = read_bits_u64(&words, off, n);
+            let want = if n == 64 { val } else { val & ((1 << n) - 1) };
+            assert_eq!(got, want);
+            for i in 0..192 {
+                if i < off || i >= off + n {
+                    assert_eq!(get_bit(&words, i), before[i], "untouched bit {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xor_popcount_matches_scalar() {
+        let mut rng = SplitMix64::new(5);
+        let a: Vec<u64> = (0..7).map(|_| rng.next_u64()).collect();
+        let b: Vec<u64> = (0..7).map(|_| rng.next_u64()).collect();
+        let scalar: u32 = (0..7 * 64)
+            .filter(|&i| get_bit(&a, i) != get_bit(&b, i))
+            .count() as u32;
+        assert_eq!(xor_popcount(&a, &b), scalar);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained substrates the offline environment forces us to
+//! own: a seeded PRNG (no `rand`), a minimal JSON reader (no `serde_json`),
+//! and bit-string copy helpers shared by the engine and the model loader.
+
+pub mod bits;
+pub mod json;
+pub mod prng;
+
+pub use prng::SplitMix64;

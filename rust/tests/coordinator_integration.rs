@@ -1,0 +1,164 @@
+//! Coordinator integration: batching policy, serving metrics, TCP
+//! front-end, simulator backends on the request path.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use repro::bcnn::Engine;
+use repro::coordinator::server::{serve_tcp, TcpClient};
+use repro::coordinator::workload::{random_images, run_closed_loop, run_open_loop};
+use repro::coordinator::{
+    Backend, BatchPolicy, Coordinator, CoordinatorConfig, FpgaSimBackend, GpuSimBackend,
+    NativeBackend,
+};
+use repro::gpu::GpuKernel;
+use repro::model::BcnnModel;
+
+fn load(name: &str) -> BcnnModel {
+    BcnnModel::load(format!("artifacts/model_{name}.bcnn"))
+        .expect("run `make artifacts` before `cargo test`")
+}
+
+fn start_native(max_batch: usize, max_wait: Duration) -> (Coordinator, Engine) {
+    let model = load("tiny");
+    let engine = Engine::new(model.clone());
+    let coord = Coordinator::start(
+        Box::new(NativeBackend::new(model)),
+        CoordinatorConfig { policy: BatchPolicy { max_batch, max_wait } },
+    );
+    (coord, engine)
+}
+
+#[test]
+fn serves_correct_scores() {
+    let (coord, engine) = start_native(4, Duration::from_millis(1));
+    let cfg = engine.model().config();
+    let images = random_images(&cfg, 6, 41);
+    let client = coord.client();
+    for img in &images {
+        let reply = client.infer(img.clone()).unwrap();
+        assert_eq!(reply.scores, engine.infer(img).unwrap());
+    }
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.requests, 6);
+}
+
+#[test]
+fn closed_loop_batches_up() {
+    let (coord, engine) = start_native(8, Duration::from_millis(20));
+    let cfg = engine.model().config();
+    let report = run_closed_loop(&coord.client(), &cfg, 32, 42).unwrap();
+    assert_eq!(report.replies.len(), 32);
+    // under a burst, batches should form well above size 1
+    assert!(report.mean_batch() > 2.0, "mean batch {}", report.mean_batch());
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.requests, 32);
+    assert!(metrics.batches < 32, "no batching happened");
+}
+
+#[test]
+fn open_loop_low_rate_means_small_batches() {
+    let (coord, engine) = start_native(16, Duration::from_millis(1));
+    let cfg = engine.model().config();
+    // slow trickle: requests should mostly ride alone
+    let report = run_open_loop(&coord.client(), &cfg, 10, 50.0, 43).unwrap();
+    assert!(report.mean_batch() < 4.0, "mean batch {}", report.mean_batch());
+    coord.shutdown();
+}
+
+#[test]
+fn replies_match_request_order_data() {
+    // each reply must carry the scores of ITS request (no cross-wiring)
+    let (coord, engine) = start_native(8, Duration::from_millis(10));
+    let cfg = engine.model().config();
+    let images = random_images(&cfg, 16, 44);
+    let client = coord.client();
+    let rxs: Vec<_> = images.iter().map(|img| client.submit(img.clone())).collect();
+    for (img, rx) in images.iter().zip(rxs) {
+        let reply = rx.recv().unwrap();
+        assert_eq!(reply.scores, engine.infer(img).unwrap());
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn fpga_sim_backend_reports_modeled_time() {
+    let model = load("tiny");
+    let mut backend = FpgaSimBackend::new(model.clone()).unwrap();
+    let images = random_images(&model.config(), 4, 45);
+    let out = backend.infer_batch(&images).unwrap();
+    let modeled = out.modeled_device_time.expect("simulator must model time");
+    assert!(modeled > Duration::ZERO);
+    // (images + layers + slack) phases at 90 MHz with a generous per-phase
+    // bound for the tiny config — modeled time must stay physical
+    let n_layers = backend.stream_config().params.len();
+    let upper = (images.len() + n_layers + 2) as f64 * 262_144.0 / 90.0e6;
+    assert!(modeled.as_secs_f64() < upper, "modeled {modeled:?} > bound {upper}");
+}
+
+#[test]
+fn gpu_sim_backend_penalizes_small_batches() {
+    let model = load("tiny");
+    let mut backend = GpuSimBackend::new(model.clone(), GpuKernel::Xnor);
+    let one = backend
+        .infer_batch(&random_images(&model.config(), 1, 46))
+        .unwrap()
+        .modeled_device_time
+        .unwrap();
+    let many = backend
+        .infer_batch(&random_images(&model.config(), 64, 46))
+        .unwrap()
+        .modeled_device_time
+        .unwrap();
+    // 64 images take longer than 1, but far less than 64x (latency hiding)
+    assert!(many > one);
+    assert!(many < one * 64, "no latency hiding in model");
+}
+
+#[test]
+fn tcp_round_trip() {
+    let (coord, engine) = start_native(4, Duration::from_millis(1));
+    let cfg = engine.model().config();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let client = coord.client();
+    let server = std::thread::spawn(move || serve_tcp(listener, client, stop2));
+
+    let images = random_images(&cfg, 3, 47);
+    let mut tcp = TcpClient::connect(&addr).unwrap();
+    for img in &images {
+        let scores = tcp.infer(img).unwrap();
+        assert_eq!(scores, engine.infer(img).unwrap());
+    }
+    tcp.close().unwrap();
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+#[test]
+fn metrics_quantiles_present() {
+    let (coord, engine) = start_native(4, Duration::from_millis(1));
+    let cfg = engine.model().config();
+    run_closed_loop(&coord.client(), &cfg, 12, 48).unwrap();
+    let m = coord.shutdown();
+    assert_eq!(m.requests, 12);
+    assert!(m.latency.quantile(0.5) > Duration::ZERO);
+    assert!(m.latency.quantile(0.99) >= m.latency.quantile(0.5));
+    assert!(m.mean_batch() >= 1.0);
+    assert!(m.summary().contains("requests=12"));
+}
+
+#[test]
+fn shutdown_disconnects_clients() {
+    let (coord, engine) = start_native(4, Duration::from_millis(1));
+    let client = coord.client();
+    let cfg = engine.model().config();
+    coord.shutdown();
+    let img = random_images(&cfg, 1, 49).pop().unwrap();
+    assert!(client.infer(img).is_err());
+}

@@ -1,0 +1,174 @@
+//! Engine integration: the packed-u64 engine against the textbook ±1
+//! reference and the PE-array datapath, over the real shipped artifacts.
+//!
+//! Requires `make artifacts` (the `.bcnn` files under `artifacts/`).
+
+use repro::bcnn::{scalar_ref, Engine, LayerOutput};
+use repro::coordinator::workload::random_images;
+use repro::fpga::kernel;
+use repro::fpga::timing::LayerParams;
+use repro::model::{BcnnModel, LayerWeights};
+use repro::util::SplitMix64;
+
+fn load(name: &str) -> BcnnModel {
+    BcnnModel::load(format!("artifacts/model_{name}.bcnn"))
+        .expect("run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn engine_matches_textbook_reference_tiny() {
+    let model = load("tiny");
+    let engine = Engine::new(model.clone());
+    let images = random_images(&model.config(), 6, 1);
+    for (i, img) in images.iter().enumerate() {
+        let fast = engine.infer(img).unwrap();
+        let slow = scalar_ref::infer_reference(&model, img).unwrap();
+        assert_eq!(fast.len(), slow.len());
+        for (a, b) in fast.iter().zip(&slow) {
+            assert!((a - b).abs() < 1e-4, "image {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn engine_matches_textbook_reference_small() {
+    let model = load("small");
+    let engine = Engine::new(model.clone());
+    let images = random_images(&model.config(), 2, 2);
+    for img in &images {
+        let fast = engine.infer(img).unwrap();
+        let slow = scalar_ref::infer_reference(&model, img).unwrap();
+        for (a, b) in fast.iter().zip(&slow) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn engine_matches_pe_datapath_per_layer() {
+    // drive the same activations through the engine and the fig.6 kernel
+    // datapath (independent implementation) layer by layer
+    let model = load("tiny");
+    let engine = Engine::new(model.clone());
+    let images = random_images(&model.config(), 2, 3);
+    for img in &images {
+        let hw = model.input_hw;
+        let c = model.input_channels;
+        let mut act = repro::bcnn::Activation::Int { hw, c, data: img.clone() };
+        for layer in &model.layers {
+            let engine_out = engine.run_layer(layer, &act).unwrap();
+            if matches!(layer, LayerWeights::FpConv { .. }) {
+                // PE datapath covers binary layers; FpConv is DSP-side
+                match engine_out {
+                    LayerOutput::Act(a) => act = a,
+                    LayerOutput::Scores(_) => unreachable!(),
+                }
+                continue;
+            }
+            let kernel_out =
+                kernel::run_layer(layer, &act, &LayerParams::new(64, 4)).unwrap();
+            match (&engine_out, &kernel_out.output) {
+                (LayerOutput::Act(a), LayerOutput::Act(b)) => assert_eq!(a, b),
+                (LayerOutput::Scores(a), LayerOutput::Scores(b)) => {
+                    for (x, y) in a.iter().zip(b) {
+                        assert!((x - y).abs() < 1e-4);
+                    }
+                }
+                _ => panic!("output kind mismatch"),
+            }
+            match engine_out {
+                LayerOutput::Act(a) => act = a,
+                LayerOutput::Scores(_) => break,
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_equals_singles() {
+    let model = load("tiny");
+    let engine = Engine::new(model.clone());
+    let images = random_images(&model.config(), 5, 4);
+    let batch = engine.infer_batch(&images).unwrap();
+    for (img, want) in images.iter().zip(&batch) {
+        assert_eq!(&engine.infer(img).unwrap(), want);
+    }
+}
+
+#[test]
+fn scratch_reuse_is_transparent() {
+    let model = load("tiny");
+    let engine = Engine::new(model.clone());
+    let images = random_images(&model.config(), 4, 5);
+    let mut scratch = repro::bcnn::engine::Scratch::default();
+    for img in &images {
+        let a = engine.infer(img).unwrap();
+        let b = engine.infer_with_scratch(img, &mut scratch).unwrap();
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn rejects_wrong_image_size() {
+    let model = load("tiny");
+    let engine = Engine::new(model);
+    assert!(engine.infer(&[0i32; 7]).is_err());
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let model = load("small");
+    let engine = Engine::new(model.clone());
+    let img = random_images(&model.config(), 1, 6).pop().unwrap();
+    let a = engine.infer(&img).unwrap();
+    let b = engine.infer(&img).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn scores_sensitive_to_input() {
+    // flipping pixels hard should (almost surely) change some score
+    let model = load("small");
+    let engine = Engine::new(model.clone());
+    let mut rng = SplitMix64::new(7);
+    let mut img = random_images(&model.config(), 1, 8).pop().unwrap();
+    let base = engine.infer(&img).unwrap();
+    let mut changed = false;
+    for _ in 0..16 {
+        let idx = rng.below(img.len() as u64) as usize;
+        let old = img[idx];
+        img[idx] = if old > 0 { -31 } else { 31 };
+        let new = engine.infer(&img).unwrap();
+        img[idx] = old;
+        if new != base {
+            changed = true;
+            break;
+        }
+    }
+    assert!(changed, "16 large pixel perturbations never changed any score");
+}
+
+#[test]
+fn trained_small_model_beats_chance_on_testset() {
+    // the end-to-end trained artifact: accuracy on the held-out synthetic
+    // test set must far exceed the 10% chance level (training reached
+    // ~100%; see artifacts/model_small.json and EXPERIMENTS.md)
+    let model = load("small");
+    let engine = Engine::new(model);
+    let ts = repro::model::TestSet::load("artifacts/testset_small.bin").unwrap();
+    let mut correct = 0usize;
+    for (img, &label) in ts.images.iter().zip(&ts.labels) {
+        let scores = engine.infer(img).unwrap();
+        let pred = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == label as usize {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / ts.len() as f64;
+    assert!(acc > 0.9, "accuracy {acc} on {} samples", ts.len());
+}

@@ -1,0 +1,97 @@
+//! Runtime integration: PJRT loads the AOT HLO-text artifacts, binds
+//! weights from `.bcnn`, and must agree with the native engine — the
+//! end-to-end proof that L1 (Pallas) + L2 (JAX) + L3 (rust) compose.
+
+use repro::bcnn::Engine;
+use repro::coordinator::workload::random_images;
+use repro::model::BcnnModel;
+use repro::runtime::{Manifest, Runtime};
+
+const DIR: &str = "artifacts";
+
+fn bcnn(name: &str) -> String {
+    format!("{DIR}/model_{name}.bcnn")
+}
+
+#[test]
+fn manifest_parses() {
+    let m = Manifest::load(format!("{DIR}/model_tiny_b1.json")).unwrap();
+    assert_eq!(m.config, "tiny");
+    assert_eq!(m.batch, 1);
+    assert_eq!(m.input_shape, vec![1, 16, 16, 3]);
+    assert_eq!(m.output_shape, vec![1, 10]);
+    assert_eq!(m.params.first().unwrap().name, "w1");
+    assert_eq!(m.params.last().unwrap().name, "bias");
+}
+
+#[test]
+fn pjrt_matches_native_tiny_b1() {
+    let model = BcnnModel::load(bcnn("tiny")).unwrap();
+    let engine = Engine::new(model.clone());
+    let mut rt = Runtime::new(DIR).unwrap();
+    let loaded = rt.load_model("tiny", 1, bcnn("tiny")).unwrap();
+    let images = random_images(&model.config(), 5, 31);
+    for (i, img) in images.iter().enumerate() {
+        let pjrt = loaded.infer_batch(img).unwrap();
+        let native = engine.infer(img).unwrap();
+        assert_eq!(pjrt.len(), native.len());
+        for (a, b) in pjrt.iter().zip(&native) {
+            assert!((a - b).abs() < 1e-3, "image {i}: pjrt {a} vs native {b}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_native_small_batched() {
+    let model = BcnnModel::load(bcnn("small")).unwrap();
+    let engine = Engine::new(model.clone());
+    let mut rt = Runtime::new(DIR).unwrap();
+    let loaded = rt.load_model("small", 8, bcnn("small")).unwrap();
+    let images = random_images(&model.config(), 8, 32);
+    let per: usize = images[0].len();
+    let mut flat = Vec::with_capacity(8 * per);
+    for img in &images {
+        flat.extend_from_slice(img);
+    }
+    let scores = loaded.infer_batch(&flat).unwrap();
+    let classes = loaded.classes();
+    for (i, img) in images.iter().enumerate() {
+        let native = engine.infer(img).unwrap();
+        for (a, b) in scores[i * classes..(i + 1) * classes].iter().zip(&native) {
+            assert!((a - b).abs() < 1e-3, "image {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn runtime_caches_executables() {
+    let mut rt = Runtime::new(DIR).unwrap();
+    rt.load_model("tiny", 1, bcnn("tiny")).unwrap();
+    assert!(rt.get("tiny", 1).is_some());
+    assert!(rt.get("tiny", 99).is_none());
+    // loading again must not fail (idempotent)
+    rt.load_model("tiny", 1, bcnn("tiny")).unwrap();
+}
+
+#[test]
+fn rejects_wrong_input_length() {
+    let mut rt = Runtime::new(DIR).unwrap();
+    let loaded = rt.load_model("tiny", 1, bcnn("tiny")).unwrap();
+    assert!(loaded.infer_batch(&[0i32; 3]).is_err());
+}
+
+#[test]
+fn missing_artifact_is_clean_error() {
+    let mut rt = Runtime::new(DIR).unwrap();
+    let msg = match rt.load_model("nonexistent", 1, bcnn("tiny")) {
+        Ok(_) => panic!("expected error"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("nonexistent"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn platform_is_cpu() {
+    let rt = Runtime::new(DIR).unwrap();
+    assert!(rt.platform().to_lowercase().contains("cpu"), "{}", rt.platform());
+}
