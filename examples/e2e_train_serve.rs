@@ -42,16 +42,20 @@ fn main() -> anyhow::Result<()> {
         Box::new(NativeBackend::new(model.clone())),
         CoordinatorConfig {
             policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+            ..CoordinatorConfig::default()
         },
     );
     let client = coord.client();
-    let pending: Vec<_> =
-        testset.images.iter().map(|img| client.submit(img.clone())).collect();
+    let pending = testset
+        .images
+        .iter()
+        .map(|img| client.submit_blocking(img.clone()))
+        .collect::<Result<Vec<_>, _>>()?;
     let mut correct = 0usize;
     let mut preds = Vec::with_capacity(testset.len());
     for (rx, &label) in pending.into_iter().zip(&testset.labels) {
         let reply = rx.recv()?;
-        let pred = reply.argmax();
+        let pred = reply.argmax().ok_or_else(|| anyhow::anyhow!("error reply"))?;
         preds.push(pred);
         if pred == label as usize {
             correct += 1;

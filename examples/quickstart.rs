@@ -13,7 +13,8 @@ use repro::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     // 1. load the trained small model exported by python/compile/train.py
-    let model = BcnnModel::load("artifacts/model_small.bcnn")?;
+    //    (falls back to deterministic synthetic weights without artifacts)
+    let model = BcnnModel::load_or_synthetic("small", "artifacts", 0xB_C0DE)?;
     println!("loaded {:?}: {} layers, {} classes", model.name, model.layers.len(), model.classes);
 
     // 2. native packed-u64 engine (the serving hot path)
@@ -26,22 +27,27 @@ fn main() -> anyhow::Result<()> {
     }
 
     // 3. same images through the AOT-compiled JAX/Pallas graph via PJRT
-    let mut rt = Runtime::new("artifacts")?;
-    let loaded = rt.load_model("small", 1, "artifacts/model_small.bcnn")?;
-    for (i, img) in images.iter().enumerate() {
-        let pjrt = loaded.infer_batch(img)?;
-        let max_delta = pjrt
-            .iter()
-            .zip(&native[i])
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0f32, f32::max);
-        assert!(max_delta < 1e-3, "PJRT diverged: {max_delta}");
+    //    (skipped when the runtime or artifacts are unavailable)
+    match Runtime::new("artifacts") {
+        Ok(mut rt) => {
+            let loaded = rt.load_model("small", 1, "artifacts/model_small.bcnn")?;
+            for (i, img) in images.iter().enumerate() {
+                let pjrt = loaded.infer_batch(img)?;
+                let max_delta = pjrt
+                    .iter()
+                    .zip(&native[i])
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(max_delta < 1e-3, "PJRT diverged: {max_delta}");
+            }
+            println!("PJRT (AOT Pallas/JAX HLO) matches the native engine ✓");
+        }
+        Err(e) => println!("PJRT check skipped: {e:#}"),
     }
-    println!("PJRT (AOT Pallas/JAX HLO) matches the native engine ✓");
 
     // 4. same images through the paper's streaming FPGA architecture
     let mut fpga = FpgaSimBackend::new(model)?;
-    let out = fpga.infer_batch(&images)?;
+    let out = fpga.infer_owned(&images)?;
     assert_eq!(out.scores, native, "FPGA simulator must be bit-exact");
     let t = out.modeled_device_time.unwrap();
     println!(

@@ -28,8 +28,8 @@ fn main() {
     ]);
 
     for name in ["tiny", "small"] {
-        let model = BcnnModel::load(format!("artifacts/model_{name}.bcnn"))
-            .expect("run `make artifacts` first");
+        let model = BcnnModel::load_or_synthetic(name, "artifacts", 0xB_C0DE)
+            .expect("built-in config");
         let net = model.config();
         let plan = optimize(&net, &OptimizeOptions::default()).unwrap();
         let mut config = StreamConfig {

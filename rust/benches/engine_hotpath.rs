@@ -23,8 +23,8 @@ fn opts(ms: u64) -> BenchOpts {
 fn main() {
     let mut t = Table::new(&["config", "ms/image", "img/s", "GOPS", "Gbitop/s"]);
     for name in ["tiny", "small", "table2"] {
-        let model = BcnnModel::load(format!("artifacts/model_{name}.bcnn"))
-            .expect("run `make artifacts` first");
+        let model = BcnnModel::load_or_synthetic(name, "artifacts", 0xB_C0DE)
+            .expect("built-in config");
         let cfg = model.config();
         let engine = Engine::new(model);
         let images = random_images(&cfg, 4, 11);
@@ -49,7 +49,7 @@ fn main() {
     t.print();
 
     // per-layer breakdown on table2 (where the time goes)
-    let model = BcnnModel::load("artifacts/model_table2.bcnn").unwrap();
+    let model = BcnnModel::load_or_synthetic("table2", "artifacts", 0xB_C0DE).unwrap();
     let cfg = model.config();
     let engine = Engine::new(model);
     let img = random_images(&cfg, 1, 12).pop().unwrap();
@@ -57,8 +57,9 @@ fn main() {
 
     println!("\n=== per-layer breakdown (table2) ===");
     let mut t = Table::new(&["layer", "median", "share%"]);
-    // capture inputs to each layer once (iterate the ENGINE's layers so
-    // the prepared-weight fast paths engage, as in real inference)
+    // capture inputs to each layer once (run_layer_at engages the
+    // prepared-weight fast paths by index, as in real inference)
+    let mut scratch = repro::bcnn::engine::Scratch::default();
     let mut acts = Vec::new();
     let mut act = repro::bcnn::Activation::Int {
         hw: cfg.input_hw,
@@ -67,7 +68,7 @@ fn main() {
     };
     for i in 0..n_layers {
         acts.push(act.clone());
-        match engine.run_layer(&engine.model().layers[i], &act).unwrap() {
+        match engine.run_layer_at(i, &act, &mut scratch).unwrap() {
             LayerOutput::Act(a) => act = a,
             LayerOutput::Scores(_) => break,
         }
@@ -75,9 +76,7 @@ fn main() {
     let mut medians = Vec::new();
     for (i, input) in acts.iter().enumerate() {
         let stats = bench_with(opts(20), &mut || {
-            std::hint::black_box(
-                engine.run_layer(&engine.model().layers[i], input).unwrap(),
-            );
+            std::hint::black_box(engine.run_layer_at(i, input, &mut scratch).unwrap());
         });
         medians.push(stats.median_ns);
     }

@@ -105,8 +105,8 @@ impl Engine {
             bail!("image size {} != {}", image.len(), hw * hw * c);
         }
         let mut act = Activation::Int { hw, c, data: image.to_vec() };
-        for (i, layer) in self.model.layers.iter().enumerate() {
-            match self.run_layer_scratch(layer, &act, scratch)? {
+        for i in 0..self.model.layers.len() {
+            match self.run_layer_at(i, &act, scratch)? {
                 LayerOutput::Act(next) => act = next,
                 LayerOutput::Scores(s) => {
                     if i + 1 != self.model.layers.len() {
@@ -120,24 +120,52 @@ impl Engine {
     }
 
     /// Batch inference (images processed independently; the FPGA streaming
-    /// architecture is batch-insensitive, and so is this loop).
-    pub fn infer_batch(&self, images: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+    /// architecture is batch-insensitive, and so is this loop).  Accepts
+    /// owned (`Vec<i32>`) or borrowed (`&[i32]`) image rows.
+    pub fn infer_batch<I: AsRef<[i32]>>(&self, images: &[I]) -> Result<Vec<Vec<f32>>> {
         let mut scratch = Scratch::default();
         images
             .iter()
-            .map(|img| self.infer_with_scratch(img, &mut scratch))
+            .map(|img| self.infer_with_scratch(img.as_ref(), &mut scratch))
             .collect()
     }
 
-    /// Run a single layer — the functional core shared with the FPGA
-    /// simulator (`fpga::stream` drives layers one phase at a time).
-    pub fn run_layer(&self, layer: &LayerWeights, input: &Activation) -> Result<LayerOutput> {
-        self.run_layer_scratch(layer, input, &mut Scratch::default())
+    /// Run the model's layer `index` — the layer-by-index API used by the
+    /// inference loop, the FPGA phase simulator, and the per-layer benches.
+    /// The transposed-weight fast paths are selected by index (no pointer
+    /// identity games), so they engage for every caller.
+    pub fn run_layer_at(
+        &self,
+        index: usize,
+        input: &Activation,
+        scratch: &mut Scratch,
+    ) -> Result<LayerOutput> {
+        let Some(layer) = self.model.layers.get(index) else {
+            bail!("layer index {index} out of range ({} layers)", self.model.layers.len());
+        };
+        let fp_t = self.fp_weights_t[index].as_slice();
+        let bin_t = self.bin_weights_t[index].as_slice();
+        self.run_layer_impl(
+            layer,
+            (!fp_t.is_empty()).then_some(fp_t),
+            (!bin_t.is_empty()).then_some(bin_t),
+            input,
+            scratch,
+        )
     }
 
-    pub fn run_layer_scratch(
+    /// Run an arbitrary layer value through the portable (untransposed)
+    /// path.  Prefer [`Engine::run_layer_at`] for the model's own layers —
+    /// it engages the prepared-weight fast paths.
+    pub fn run_layer(&self, layer: &LayerWeights, input: &Activation) -> Result<LayerOutput> {
+        self.run_layer_impl(layer, None, None, input, &mut Scratch::default())
+    }
+
+    fn run_layer_impl(
         &self,
         layer: &LayerWeights,
+        fp_transposed: Option<&[i32]>,
+        bin_transposed: Option<&[u64]>,
         input: &Activation,
         scratch: &mut Scratch,
     ) -> Result<LayerOutput> {
@@ -149,15 +177,7 @@ impl Engine {
                 if c != in_c {
                     bail!("FpConv channel mismatch: {c} != {in_c}");
                 }
-                // use the transposed weights if this layer is ours
-                let transposed = self
-                    .model
-                    .layers
-                    .iter()
-                    .position(|l| std::ptr::eq(l, layer))
-                    .map(|i| self.fp_weights_t[i].as_slice())
-                    .filter(|t| !t.is_empty());
-                let y = match transposed {
+                let y = match fp_transposed {
                     Some(wt) => fp_conv3x3_transposed(data, *hw, *in_c, *out_c, wt, scratch),
                     None => fp_conv3x3(data, *hw, *in_c, *out_c, weights, scratch),
                 };
@@ -173,13 +193,7 @@ impl Engine {
                 if fmap.c != *in_c {
                     bail!("BinConv channel mismatch: {} != {in_c}", fmap.c);
                 }
-                let transposed = self
-                    .model
-                    .layers
-                    .iter()
-                    .position(|l| std::ptr::eq(l, layer))
-                    .map(|i| self.bin_weights_t[i].as_slice())
-                    .filter(|t| !t.is_empty());
+                let transposed = bin_transposed;
                 // (PERF iter 5, REVERTED: fusing NormBinarize into the
                 // conv loop for non-pooling layers measured -3% — the
                 // accumulator plane is L2-resident, so skipping it bought

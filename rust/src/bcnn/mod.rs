@@ -2,7 +2,7 @@
 //!
 //! This is (a) the serving hot path of the coordinator (no Python, no PJRT
 //! — pure integer/bit arithmetic), and (b) the *functional* model of the
-//! FPGA datapath: the fpga simulator calls [`engine::Engine::run_layer`]
+//! FPGA datapath: the fpga simulator calls [`engine::Engine::run_layer_at`]
 //! per layer so its numerics are exactly the paper's architecture
 //! (XnorDotProduct -> MP -> NormBinarize, fig. 3).
 //!

@@ -20,7 +20,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::workload::{random_images, run_open_loop};
 use crate::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, FpgaSimBackend, GpuSimBackend, NativeBackend,
+    Backend, BackendFactory, BatchPolicy, Coordinator, CoordinatorConfig, FpgaSimBackend,
+    GpuSimBackend, NativeBackend,
 };
 use crate::fpga::stream::simulate;
 use crate::gpu::GpuKernel;
@@ -106,8 +107,11 @@ COMMANDS
       Classify random workload images; print scores summary + timing.
   serve [--config small] [--backend native|fpga-sim|gpu-sim] [--port P]
         [--max-batch N] [--max-wait-ms M] [--requests N] [--rate RPS]
-      Start the coordinator; with --port, expose TCP; otherwise drive the
-      built-in open-loop workload and print serving metrics.
+        [--workers W] [--queue-depth D] [--lanes L]
+      Start the sharded coordinator (W worker shards, one backend replica
+      each, bounded D-deep queues, L intra-batch lanes for the native
+      backend); with --port, expose TCP; otherwise drive the built-in
+      open-loop workload and print serving metrics.
   selftest [--artifacts DIR]
       Cross-check native engine vs PJRT executable vs FPGA simulator on
       the shipped artifacts (exit non-zero on mismatch).
@@ -139,9 +143,24 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 
 fn load_bcnn(args: &Args, config: &str) -> Result<BcnnModel> {
     let path = artifacts_dir(args).join(format!("model_{config}.bcnn"));
-    BcnnModel::load(&path).with_context(|| {
-        format!("{} (run `make artifacts` first)", path.display())
-    })
+    match BcnnModel::load(&path) {
+        Ok(m) => Ok(m),
+        Err(e) => {
+            // no trained artifact: fall back to deterministic synthetic
+            // weights so serving/simulation demos run without python
+            let Some(cfg) = NetConfig::by_name(config) else {
+                return Err(e.context(format!(
+                    "{} (run `make artifacts` first)",
+                    path.display()
+                )));
+            };
+            eprintln!(
+                "note: {} not found; using synthetic weights for {config:?}",
+                path.display()
+            );
+            Ok(BcnnModel::synthetic(&cfg, 0xB_C0DE))
+        }
+    }
 }
 
 fn net_config(args: &Args) -> Result<(String, NetConfig)> {
@@ -238,7 +257,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
         }
         "fpga-sim" => {
             let mut b = FpgaSimBackend::new(model)?;
-            crate::coordinator::Backend::infer_batch(&mut b, &images)?.scores
+            b.infer_owned(&images)?.scores
         }
         "pjrt" => {
             let mut rt = Runtime::new(artifacts_dir(args))?;
@@ -272,27 +291,45 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build a per-worker backend factory for the named backend kind.
+fn backend_factory(kind: &str, model: BcnnModel, lanes: usize) -> Result<BackendFactory> {
+    match kind {
+        "native" | "fpga-sim" | "gpu-sim" => {}
+        other => bail!("unknown backend {other:?}"),
+    }
+    let kind = kind.to_string();
+    Ok(Arc::new(move || -> Result<Box<dyn Backend>> {
+        Ok(match kind.as_str() {
+            "native" => Box::new(NativeBackend::with_lanes(model.clone(), lanes)),
+            "fpga-sim" => Box::new(FpgaSimBackend::new(model.clone())?),
+            _ => Box::new(GpuSimBackend::new(model.clone(), GpuKernel::Xnor)),
+        })
+    }))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.opt_or("config", "small");
     let model = load_bcnn(args, &name)?;
     let cfg = model.config();
     let backend_name = args.opt_or("backend", "native");
-    let backend: Box<dyn crate::coordinator::Backend + Send> = match backend_name.as_str() {
-        "native" => Box::new(NativeBackend::new(model)),
-        "fpga-sim" => Box::new(FpgaSimBackend::new(model)?),
-        "gpu-sim" => Box::new(GpuSimBackend::new(model, GpuKernel::Xnor)),
-        other => bail!("unknown backend {other:?}"),
-    };
+    let workers = args.usize_or("workers", 1)?.max(1);
+    let queue_depth = args.usize_or("queue-depth", 256)?.max(1);
+    let lanes = args.usize_or("lanes", 1)?.max(1);
     let policy = BatchPolicy {
         max_batch: args.usize_or("max-batch", 16)?,
         max_wait: Duration::from_millis(args.usize_or("max-wait-ms", 2)? as u64),
     };
-    let coord = Coordinator::start(backend, CoordinatorConfig { policy });
+    let factory = backend_factory(&backend_name, model, lanes)?;
+    let coord =
+        Coordinator::start_sharded(factory, CoordinatorConfig { policy, workers, queue_depth })?;
 
     if let Some(port) = args.opt("port") {
         let addr = format!("127.0.0.1:{port}");
         let listener = TcpListener::bind(&addr).with_context(|| format!("bind {addr}"))?;
-        println!("serving {name} via {backend_name} on {addr} (ctrl-c to stop)");
+        println!(
+            "serving {name} via {backend_name} on {addr} \
+             ({workers} shard(s), queue depth {queue_depth}; ctrl-c to stop)"
+        );
         let stop = Arc::new(AtomicBool::new(false));
         crate::coordinator::server::serve_tcp(listener, coord.client(), stop)?;
         return Ok(());
@@ -301,15 +338,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // built-in workload mode
     let requests = args.usize_or("requests", 64)?;
     let rate = args.f64_or("rate", 200.0)?;
-    println!("driving open-loop workload: {requests} requests at {rate}/s");
+    println!(
+        "driving open-loop workload: {requests} requests at {rate}/s \
+         across {workers} shard(s)"
+    );
     let report = run_open_loop(&coord.client(), &cfg, requests, rate, 11)?;
     println!(
-        "  achieved {:.1} req/s, mean latency {:.2} ms, mean batch {:.1}",
+        "  achieved {:.1} req/s, mean latency {:.2} ms, mean batch {:.1}, errors {}",
         report.throughput(),
         report.mean_latency().as_secs_f64() * 1e3,
-        report.mean_batch()
+        report.mean_batch(),
+        report.errors()
     );
+    let per_shard: Vec<u64> = coord.shard_metrics().iter().map(|m| m.requests).collect();
     let metrics = coord.shutdown();
+    println!("  per-shard requests: {per_shard:?}");
     println!("  {}", metrics.summary());
     Ok(())
 }
@@ -338,7 +381,7 @@ fn cmd_selftest(args: &Args) -> Result<()> {
 
     // FPGA simulator path
     let mut fpga = FpgaSimBackend::new(model)?;
-    let sim = crate::coordinator::Backend::infer_batch(&mut fpga, &images)?;
+    let sim = fpga.infer_owned(&images)?;
     for (i, s) in sim.scores.iter().enumerate() {
         if s != &native[i] {
             bail!("FPGA-sim vs native mismatch image {i}");

@@ -1,6 +1,8 @@
 //! Pluggable inference backends.
 //!
-//! * [`NativeBackend`] — the packed-u64 engine: the production hot path.
+//! * [`NativeBackend`] — the packed-u64 engine: the production hot path,
+//!   optionally fanning a batch across intra-batch lanes (scoped threads,
+//!   one `Scratch` per lane).
 //! * [`PjrtBackend`] — the AOT HLO executable via PJRT (proves the
 //!   three-layer compose; numerics must match the native engine).
 //! * [`FpgaSimBackend`] — native numerics + the FPGA timing model: replies
@@ -9,9 +11,10 @@
 //! * [`GpuSimBackend`] — native numerics + the Titan X analytic model
 //!   (whole-batch completion), the Fig. 7 comparator on the serving path.
 
+use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::bcnn::engine::Scratch;
 use crate::bcnn::Engine;
@@ -33,32 +36,55 @@ pub struct BatchResult {
 
 /// An inference backend consuming whole batches.
 ///
+/// Batches arrive as *borrowed* image views (`&[&[i32]]`): the coordinator
+/// worker lends each queued request's buffer directly, so batch formation
+/// never copies pixel data.
+///
 /// Deliberately NOT `Send`: PJRT client/executable handles are `Rc`-based.
-/// The coordinator therefore constructs its backend *on* the worker thread
-/// via a factory closure (see [`crate::coordinator::Coordinator::start`]).
+/// The coordinator therefore constructs one backend replica *on* each
+/// worker thread via a [`BackendFactory`].
 pub trait Backend {
     fn name(&self) -> &str;
-    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchResult>;
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchResult>;
+
+    /// Convenience for owned batches (tests/CLI); borrows and delegates.
+    fn infer_owned(&mut self, images: &[Vec<i32>]) -> Result<BatchResult> {
+        let views: Vec<&[i32]> = images.iter().map(|v| v.as_slice()).collect();
+        self.infer_batch(&views)
+    }
 }
 
-/// Factory type the coordinator runs on its worker thread.
-pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+/// Per-worker backend factory: the sharded coordinator calls it once on
+/// every worker thread to build that shard's replica.  `Fn` (not `FnOnce`)
+/// because a pool of N workers needs N replicas.
+pub type BackendFactory = Arc<dyn Fn() -> Result<Box<dyn Backend>> + Send + Sync>;
 
 // ---------------------------------------------------------------------------
 
-/// The native packed-u64 engine.
+/// The native packed-u64 engine, with optional intra-batch parallelism:
+/// `lanes > 1` splits each batch across scoped threads sharing the same
+/// `Engine` (it is `Sync`; weights are read-only), one `Scratch` per lane.
 pub struct NativeBackend {
     engine: Engine,
-    scratch: Scratch,
+    scratches: Vec<Scratch>,
 }
 
 impl NativeBackend {
     pub fn new(model: BcnnModel) -> Self {
-        Self { engine: Engine::new(model), scratch: Scratch::default() }
+        Self::with_lanes(model, 1)
+    }
+
+    /// `lanes` intra-batch worker threads (clamped to at least 1).
+    pub fn with_lanes(model: BcnnModel, lanes: usize) -> Self {
+        Self { engine: Engine::new(model), scratches: vec![Scratch::default(); lanes.max(1)] }
     }
 
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.scratches.len()
     }
 }
 
@@ -67,11 +93,46 @@ impl Backend for NativeBackend {
         "native"
     }
 
-    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchResult> {
-        let scores = images
-            .iter()
-            .map(|img| self.engine.infer_with_scratch(img, &mut self.scratch))
-            .collect::<Result<Vec<_>>>()?;
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchResult> {
+        let lanes = self.scratches.len();
+        let scores = if lanes == 1 || images.len() < 2 {
+            let scratch = &mut self.scratches[0];
+            images
+                .iter()
+                .map(|img| self.engine.infer_with_scratch(img, scratch))
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            // Split the batch into one contiguous chunk per lane; scoped
+            // threads share `&Engine` and own one `&mut Scratch` each, so
+            // the hot path stays allocation-reusing per lane.
+            let chunk = images.len().div_ceil(lanes);
+            let engine = &self.engine;
+            let lane_results: Vec<Result<Vec<Vec<f32>>>> = std::thread::scope(|s| {
+                let handles: Vec<_> = images
+                    .chunks(chunk)
+                    .zip(self.scratches.iter_mut())
+                    .map(|(part, scratch)| {
+                        s.spawn(move || {
+                            part.iter()
+                                .map(|img| engine.infer_with_scratch(img, scratch))
+                                .collect::<Result<Vec<_>>>()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| match h.join() {
+                        Ok(r) => r,
+                        Err(_) => Err(anyhow!("inference lane panicked")),
+                    })
+                    .collect()
+            });
+            let mut scores = Vec::with_capacity(images.len());
+            for lane in lane_results {
+                scores.extend(lane?);
+            }
+            scores
+        };
         Ok(BatchResult { scores, modeled_device_time: None })
     }
 }
@@ -97,7 +158,7 @@ impl Backend for PjrtBackend {
         &self.name
     }
 
-    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchResult> {
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchResult> {
         let lot = self.model.batch();
         let classes = self.model.classes();
         let per_image: usize = self.model.manifest.input_shape.iter().skip(1).product();
@@ -165,7 +226,7 @@ impl Backend for FpgaSimBackend {
         "fpga-sim"
     }
 
-    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchResult> {
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchResult> {
         let report = simulate(&self.engine, &self.config, images)?;
         let modeled = Duration::from_secs_f64(report.total_cycles as f64 / self.config.freq_hz);
         Ok(BatchResult { scores: report.scores, modeled_device_time: Some(modeled) })
@@ -199,7 +260,7 @@ impl Backend for GpuSimBackend {
         &self.name
     }
 
-    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchResult> {
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchResult> {
         let scores = images
             .iter()
             .map(|img| self.engine.infer_with_scratch(img, &mut self.scratch))

@@ -8,6 +8,11 @@
 //! The queue carries [`Msg`]: requests plus an explicit `Stop` poison so
 //! the coordinator can shut the worker down even while client handles
 //! (and their channel senders) are still alive.
+//!
+//! The batcher is queue-flavor agnostic: it consumes any `Receiver<Msg>`,
+//! and in the sharded coordinator that receiver is the consumption side of
+//! a *bounded* `sync_channel` — admission control (backpressure on a full
+//! queue) happens at the sender, so nothing here ever grows unboundedly.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::Instant;

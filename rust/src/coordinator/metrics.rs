@@ -50,6 +50,18 @@ impl Histogram {
         Duration::from_secs_f64(self.max_us / 1e6)
     }
 
+    /// Fold another histogram in (sharded metrics aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        if other.max_us > self.max_us {
+            self.max_us = other.max_us;
+        }
+    }
+
     /// Approximate quantile from bucket boundaries (upper bound of the
     /// bucket containing the quantile).
     pub fn quantile(&self, q: f64) -> Duration {
@@ -77,6 +89,9 @@ pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
     pub sum_batch: u64,
+    /// Requests that received an error reply (failed batches; nothing is
+    /// silently dropped).
+    pub errors: u64,
     /// Modeled device-busy time (simulator backends).
     pub modeled_busy: Duration,
     pub wall: Duration,
@@ -107,6 +122,28 @@ impl Metrics {
         self.latency.record(latency);
     }
 
+    /// A whole batch failed: its requests got error replies.
+    pub fn record_batch_error(&mut self, batch_size: usize, service: Duration) {
+        self.batches += 1;
+        self.requests += batch_size as u64;
+        self.sum_batch += batch_size as u64;
+        self.errors += batch_size as u64;
+        self.service.record(service);
+    }
+
+    /// Fold a shard's metrics into this aggregate (wall time is set by the
+    /// coordinator snapshot, not merged).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.latency.merge(&other.latency);
+        self.queue.merge(&other.queue);
+        self.service.merge(&other.service);
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.sum_batch += other.sum_batch;
+        self.errors += other.errors;
+        self.modeled_busy += other.modeled_busy;
+    }
+
     pub fn mean_batch(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -133,9 +170,10 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} mean_batch={:.1} throughput={:.1}/s \
+            "requests={} errors={} batches={} mean_batch={:.1} throughput={:.1}/s \
              latency(mean={:?} p50={:?} p99={:?} max={:?})",
             self.requests,
+            self.errors,
             self.batches,
             self.mean_batch(),
             self.throughput(),
@@ -170,6 +208,25 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.quantile(0.5), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_accumulates_shards() {
+        let mut a = Metrics::new();
+        a.record_batch(4, Duration::from_millis(2), None);
+        a.record_request(Duration::from_millis(1), Duration::from_millis(3));
+        let mut b = Metrics::new();
+        b.record_batch(2, Duration::from_millis(2), Some(Duration::from_millis(1)));
+        b.record_batch_error(3, Duration::from_millis(1));
+        let mut total = Metrics::new();
+        total.merge(&a);
+        total.merge(&b);
+        assert_eq!(total.requests, 9);
+        assert_eq!(total.batches, 3);
+        assert_eq!(total.errors, 3);
+        assert_eq!(total.latency.count(), 1);
+        assert_eq!(total.modeled_busy, Duration::from_millis(1));
+        assert!(total.summary().contains("errors=3"));
     }
 
     #[test]

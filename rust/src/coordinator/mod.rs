@@ -6,13 +6,23 @@
 //! ships a real request path: a dynamic [`batcher`] (max-batch + deadline,
 //! vLLM-router-style), pluggable [`backend`]s (native engine, PJRT
 //! executable, FPGA-simulator timing, GPU-model timing), per-request
-//! [`metrics`] (latency histograms, throughput, energy), a thread-based
-//! [`server`] with an optional TCP front-end, and a Poisson/closed-loop
-//! [`workload`] generator.
+//! [`metrics`] (latency histograms, throughput, errors, energy), a
+//! *sharded* thread-pool [`server`] — N worker shards, each owning a
+//! backend replica, fed from bounded queues with explicit backpressure —
+//! an optional TCP front-end, and a Poisson/closed-loop [`workload`]
+//! generator.
+//!
+//! The sharding mirrors how FINN-style BNN accelerators scale by
+//! replicating compute engines: host software must be as spatially
+//! parallel as the datapath or it becomes the bottleneck the paper's
+//! Fig. 7 says should not exist.  Data flow:
+//!
+//! `client -> dispatch (round-robin + least-loaded) -> bounded shard queue
+//! -> batcher -> worker thread -> backend replica -> reply channel`
 //!
 //! No tokio in the offline crate cache — the event loop is std threads +
 //! channels, which for this workload (CPU-bound inference, one worker per
-//! backend) is the same architecture without the executor.
+//! replica) is the same architecture without the executor.
 
 pub mod backend;
 pub mod batcher;
@@ -21,7 +31,10 @@ pub mod request;
 pub mod server;
 pub mod workload;
 
-pub use backend::{Backend, BatchResult, FpgaSimBackend, GpuSimBackend, NativeBackend, PjrtBackend};
+pub use backend::{
+    Backend, BackendFactory, BatchResult, FpgaSimBackend, GpuSimBackend, NativeBackend,
+    PjrtBackend,
+};
 pub use batcher::{BatchPolicy, Batcher, Msg};
-pub use request::{InferReply, InferRequest};
+pub use request::{InferError, InferReply, InferRequest, SubmitError};
 pub use server::{Client, Coordinator, CoordinatorConfig};

@@ -1,5 +1,6 @@
 //! Request/reply types flowing through the coordinator.
 
+use std::fmt;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -12,17 +13,57 @@ pub struct InferRequest {
     pub reply: mpsc::Sender<InferReply>,
 }
 
+/// Typed backend failure carried back to the client (no silent drops:
+/// when `infer_batch` errors, every request in the batch receives this).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InferError {
+    pub message: String,
+}
+
+impl fmt::Display for InferError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "backend error: {}", self.message)
+    }
+}
+
+impl std::error::Error for InferError {}
+
+/// Submission failure from a bounded-queue [`crate::coordinator::Client`].
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Every shard queue is at capacity.  The image is handed back so the
+    /// caller can retry (backpressure, not data loss).
+    QueueFull { image: Vec<i32> },
+    /// The coordinator has shut down; no worker will ever reply.
+    Shutdown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { .. } => write!(f, "all shard queues full (backpressure)"),
+            SubmitError::Shutdown => write!(f, "coordinator shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// The reply, with per-request serving telemetry.
 #[derive(Debug, Clone)]
 pub struct InferReply {
     pub id: u64,
-    pub scores: Vec<f32>,
+    /// Per-class scores, or the typed failure of the batch this request
+    /// rode in.
+    pub scores: Result<Vec<f32>, InferError>,
     /// Time spent queued before the batch formed.
     pub queue_time: Duration,
     /// Backend execution time for the whole batch this request rode in.
     pub service_time: Duration,
     /// Size of that batch.
     pub batch_size: usize,
+    /// Which shard of the worker pool served it.
+    pub shard: usize,
     /// Modeled device time, if the backend is a simulator (FPGA/GPU).
     pub modeled_device_time: Option<Duration>,
 }
@@ -33,13 +74,22 @@ impl InferReply {
         self.queue_time + self.service_time
     }
 
-    pub fn argmax(&self) -> usize {
-        self.scores
+    /// Scores or a typed error (convenience over matching on the field).
+    pub fn ok_scores(&self) -> Result<&[f32], InferError> {
+        match &self.scores {
+            Ok(s) => Ok(s.as_slice()),
+            Err(e) => Err(e.clone()),
+        }
+    }
+
+    /// Predicted class, `None` for an error reply.
+    pub fn argmax(&self) -> Option<usize> {
+        let scores = self.scores.as_ref().ok()?;
+        scores
             .iter()
             .enumerate()
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
             .map(|(i, _)| i)
-            .unwrap_or(0)
     }
 }
 
@@ -47,29 +97,43 @@ impl InferReply {
 mod tests {
     use super::*;
 
+    fn reply(scores: Result<Vec<f32>, InferError>) -> InferReply {
+        InferReply {
+            id: 0,
+            scores,
+            queue_time: Duration::from_millis(2),
+            service_time: Duration::from_millis(3),
+            batch_size: 4,
+            shard: 0,
+            modeled_device_time: None,
+        }
+    }
+
     #[test]
     fn argmax_picks_peak() {
-        let r = InferReply {
-            id: 0,
-            scores: vec![0.1, 2.0, -1.0],
-            queue_time: Duration::ZERO,
-            service_time: Duration::ZERO,
-            batch_size: 1,
-            modeled_device_time: None,
-        };
-        assert_eq!(r.argmax(), 1);
+        let r = reply(Ok(vec![0.1, 2.0, -1.0]));
+        assert_eq!(r.argmax(), Some(1));
+    }
+
+    #[test]
+    fn argmax_none_on_error() {
+        let r = reply(Err(InferError { message: "boom".into() }));
+        assert_eq!(r.argmax(), None);
+        assert!(r.ok_scores().is_err());
     }
 
     #[test]
     fn latency_sums() {
-        let r = InferReply {
-            id: 0,
-            scores: vec![],
-            queue_time: Duration::from_millis(2),
-            service_time: Duration::from_millis(3),
-            batch_size: 4,
-            modeled_device_time: None,
-        };
+        let r = reply(Ok(vec![]));
         assert_eq!(r.latency(), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn submit_error_returns_image() {
+        let e = SubmitError::QueueFull { image: vec![1, 2, 3] };
+        match e {
+            SubmitError::QueueFull { image } => assert_eq!(image, vec![1, 2, 3]),
+            SubmitError::Shutdown => panic!("wrong variant"),
+        }
     }
 }

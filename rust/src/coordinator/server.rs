@@ -1,94 +1,350 @@
-//! The coordinator proper: client handles -> channel -> batcher -> worker
-//! thread -> backend, with shared metrics.  Plus a minimal TCP front-end
-//! (length-prefixed binary protocol, thread per connection).
+//! The coordinator proper: a *sharded worker pool* mirroring the paper's
+//! spatially-parallel accelerator in host software.
+//!
+//! ```text
+//! client ──try_send──► bounded queue (shard 0) ──► batcher ──► worker 0 ──► backend replica 0
+//!        └─dispatch──► bounded queue (shard 1) ──► batcher ──► worker 1 ──► backend replica 1
+//!            ...                 ...                                ...
+//! ```
+//!
+//! * Each shard owns one backend replica (built on its worker thread via a
+//!   [`BackendFactory`] — required for non-`Send` backends like PJRT) and a
+//!   bounded `sync_channel` submission queue.
+//! * Dispatch is round-robin with a least-loaded pick: the cursor sets the
+//!   tie-break order, then shards are tried in ascending queued+in-flight
+//!   depth.  When *every* queue is full, [`Client::submit`] returns
+//!   [`SubmitError::QueueFull`] — explicit backpressure, never unbounded
+//!   growth.
+//! * Batch formation is zero-copy: workers lend request buffers to
+//!   [`Backend::infer_batch`] as `&[&[i32]]`.
+//! * Backend failures produce typed error replies (and an `errors` metric);
+//!   requests are never silently dropped.
+//!
+//! A minimal TCP front-end (length-prefixed binary protocol, thread per
+//! connection) rides on top.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::backend::Backend;
+use crate::coordinator::backend::{Backend, BackendFactory};
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Msg};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{InferReply, InferRequest};
+use crate::coordinator::request::{InferError, InferReply, InferRequest, SubmitError};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     pub policy: BatchPolicy,
+    /// Worker shards; each owns one backend replica (>= 1).
+    pub workers: usize,
+    /// Bounded submission-queue capacity *per shard* (>= 1).
+    pub queue_depth: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { policy: BatchPolicy::default() }
+        Self { policy: BatchPolicy::default(), workers: 1, queue_depth: 256 }
     }
 }
 
-/// Handle clients use to submit work.
+impl CoordinatorConfig {
+    /// Default policy/depth with `workers` shards.
+    pub fn with_workers(workers: usize) -> Self {
+        Self { workers, ..Self::default() }
+    }
+}
+
+/// One shard as the client sees it: a bounded sender, a load gauge
+/// (queued + in-flight requests), and the shutdown latch.
+#[derive(Clone)]
+struct ShardHandle {
+    tx: SyncSender<Msg>,
+    depth: Arc<AtomicUsize>,
+    /// Set by `stop_shard` before it enqueues the poison: submitters stop
+    /// competing for queue slots, so the `Stop` message cannot be starved
+    /// by `submit_blocking` retry loops.
+    stopping: Arc<AtomicBool>,
+}
+
+/// Handle clients use to submit work.  Cheap to clone; clones share the
+/// same shard queues and request-id counter, and every clone is `Send`,
+/// so M client threads can drive the pool concurrently.
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<Msg>,
+    shards: Vec<ShardHandle>,
+    rr: Arc<AtomicUsize>,
     next_id: Arc<AtomicU64>,
 }
 
+/// How long `submit_blocking` sleeps between backpressure retries.
+const BACKPRESSURE_RETRY: Duration = Duration::from_micros(50);
+
 impl Client {
-    /// Submit one image; returns the receiver for its reply.
-    pub fn submit(&self, image: Vec<i32>) -> Receiver<InferReply> {
+    /// Submit one image; returns the receiver for its reply, or a
+    /// backpressure/shutdown error.
+    ///
+    /// Dispatch policy: the round-robin cursor fixes the tie-break order,
+    /// then shards are tried least-loaded first.  `QueueFull` hands the
+    /// image back so callers can retry without re-allocating.
+    pub fn submit(&self, image: Vec<i32>) -> std::result::Result<Receiver<InferReply>, SubmitError> {
+        let n = self.shards.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        // snapshot the depth gauges ONCE (they move under concurrent
+        // traffic, and a comparator over live atomics is not a total
+        // order); the stable sort keeps round-robin rotation for ties
+        let mut order: Vec<(usize, usize)> = (0..n)
+            .map(|k| {
+                let i = (start + k) % n;
+                (self.shards[i].depth.load(Ordering::Relaxed), i)
+            })
+            .collect();
+        order.sort_by_key(|&(depth, _)| depth);
+
         let (reply_tx, reply_rx) = mpsc::channel();
-        let req = InferRequest {
+        let mut msg = Msg::Req(InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             image,
             enqueued: Instant::now(),
             reply: reply_tx,
-        };
-        // a send error means the coordinator shut down; the client sees a
-        // disconnected reply channel.
-        let _ = self.tx.send(Msg::Req(req));
-        reply_rx
+        });
+        let mut dead = 0usize;
+        for &(_, i) in &order {
+            if self.shards[i].stopping.load(Ordering::Relaxed) {
+                dead += 1;
+                continue;
+            }
+            // gauge up BEFORE the send: the worker's decrement must always
+            // observe a prior increment, or the usize gauge could wrap
+            self.shards[i].depth.fetch_add(1, Ordering::Relaxed);
+            match self.shards[i].tx.try_send(msg) {
+                Ok(()) => return Ok(reply_rx),
+                Err(TrySendError::Full(m)) => {
+                    self.shards[i].depth.fetch_sub(1, Ordering::Relaxed);
+                    msg = m;
+                }
+                Err(TrySendError::Disconnected(m)) => {
+                    self.shards[i].depth.fetch_sub(1, Ordering::Relaxed);
+                    dead += 1;
+                    msg = m;
+                }
+            }
+        }
+        let Msg::Req(req) = msg else { unreachable!("submit only builds Req") };
+        if dead == n {
+            Err(SubmitError::Shutdown)
+        } else {
+            Err(SubmitError::QueueFull { image: req.image })
+        }
     }
 
-    /// Submit and wait.
+    /// Submit, waiting out backpressure (bounded memory, unbounded time).
+    pub fn submit_blocking(
+        &self,
+        mut image: Vec<i32>,
+    ) -> std::result::Result<Receiver<InferReply>, SubmitError> {
+        loop {
+            match self.submit(image) {
+                Ok(rx) => return Ok(rx),
+                Err(SubmitError::QueueFull { image: img }) => {
+                    image = img;
+                    std::thread::sleep(BACKPRESSURE_RETRY);
+                }
+                Err(e @ SubmitError::Shutdown) => return Err(e),
+            }
+        }
+    }
+
+    /// Submit (waiting out backpressure) and wait for the reply.
     pub fn infer(&self, image: Vec<i32>) -> Result<InferReply> {
-        self.submit(image)
+        self.submit_blocking(image)
+            .map_err(|e| anyhow!("{e}"))?
             .recv()
             .map_err(|_| anyhow!("coordinator shut down before replying"))
     }
+
+    /// Per-shard queued+in-flight depths (dispatch introspection).
+    pub fn shard_depths(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed)).collect()
+    }
 }
 
-/// A running coordinator (one worker thread over one backend).
-pub struct Coordinator {
-    client: Client,
+/// One running shard: its worker thread plus that shard's metrics.
+struct Shard {
+    handle: ShardHandle,
     worker: Option<JoinHandle<()>>,
     metrics: Arc<Mutex<Metrics>>,
+}
+
+/// A running coordinator: N worker shards over N backend replicas.
+pub struct Coordinator {
+    client: Client,
+    shards: Vec<Shard>,
     started: Instant,
 }
 
 impl Coordinator {
-    /// Spawn the worker thread around a `Send` backend.
+    /// Spawn a single-shard coordinator around an already-built `Send`
+    /// backend.  For a multi-worker pool use [`Coordinator::start_sharded`]
+    /// (a boxed backend cannot be replicated).
+    ///
+    /// # Panics
+    /// If `config.workers > 1` — replication needs a factory.
     pub fn start(backend: Box<dyn Backend + Send>, config: CoordinatorConfig) -> Self {
-        Self::start_with(Box::new(move || Ok(backend as Box<dyn Backend>)), config)
-            .expect("infallible factory")
+        assert!(
+            config.workers <= 1,
+            "Coordinator::start cannot replicate a boxed backend; use start_sharded"
+        );
+        let cell = Mutex::new(Some(backend));
+        let factory: BackendFactory = Arc::new(move || {
+            cell.lock()
+                .unwrap()
+                .take()
+                .map(|b| {
+                    let b: Box<dyn Backend> = b;
+                    b
+                })
+                .ok_or_else(|| anyhow!("single backend already claimed"))
+        });
+        Self::start_sharded(factory, CoordinatorConfig { workers: 1, ..config })
+            .expect("single-shard startup cannot fail")
     }
 
-    /// Spawn the worker thread; the backend is constructed *on* the worker
-    /// (required for non-`Send` backends like PJRT).  Fails if the factory
-    /// fails.
-    pub fn start_with(
-        factory: crate::coordinator::backend::BackendFactory,
-        config: CoordinatorConfig,
-    ) -> Result<Self> {
-        let (tx, rx) = mpsc::channel();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let metrics_worker = Arc::clone(&metrics);
-        let worker = std::thread::Builder::new()
-            .name("coordinator-worker".into())
-            .spawn(move || {
+    /// Backwards-compatible alias for [`Coordinator::start_sharded`].
+    pub fn start_with(factory: BackendFactory, config: CoordinatorConfig) -> Result<Self> {
+        Self::start_sharded(factory, config)
+    }
+
+    /// Spawn `config.workers` shards; the factory runs once on each worker
+    /// thread (required for non-`Send` backends like PJRT).  Fails if any
+    /// factory call fails — already-started shards are shut down.
+    pub fn start_sharded(factory: BackendFactory, config: CoordinatorConfig) -> Result<Self> {
+        let workers = config.workers.max(1);
+        let queue_depth = config.queue_depth.max(1);
+        let mut shards = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        let mut startup_err = None;
+        for shard_id in 0..workers {
+            match spawn_shard(shard_id, Arc::clone(&factory), config.policy, queue_depth) {
+                Ok(shard) => {
+                    handles.push(shard.handle.clone());
+                    shards.push(shard);
+                }
+                Err(e) => {
+                    startup_err = Some(e.context(format!("starting shard {shard_id}")));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = startup_err {
+            for shard in &mut shards {
+                stop_shard(shard);
+            }
+            return Err(e);
+        }
+        Ok(Self {
+            client: Client {
+                shards: handles,
+                rr: Arc::new(AtomicUsize::new(0)),
+                next_id: Arc::new(AtomicU64::new(0)),
+            },
+            shards,
+            started: Instant::now(),
+        })
+    }
+
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Snapshot the aggregate metrics across shards (wall time filled in).
+    pub fn metrics(&self) -> Metrics {
+        let mut total = Metrics::new();
+        for shard in &self.shards {
+            total.merge(&shard.metrics.lock().unwrap());
+        }
+        total.wall = self.started.elapsed();
+        total
+    }
+
+    /// Per-shard metrics snapshots (dispatch-distribution introspection).
+    pub fn shard_metrics(&self) -> Vec<Metrics> {
+        self.shards.iter().map(|s| s.metrics.lock().unwrap().clone()).collect()
+    }
+
+    /// Graceful shutdown: poison every queue (queued requests are still
+    /// served first), join the workers, then snapshot the metrics — so the
+    /// requests drained during shutdown are included.  Works even while
+    /// client handles remain alive — their later submits see
+    /// `SubmitError::Shutdown`.
+    pub fn shutdown(mut self) -> Metrics {
+        for shard in &mut self.shards {
+            stop_shard(shard);
+        }
+        self.metrics()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for shard in &mut self.shards {
+            stop_shard(shard);
+        }
+    }
+}
+
+/// Send the stop poison (waiting out a full queue) and join the worker.
+/// The `stopping` latch is raised first so submitters stop competing for
+/// freed queue slots — the poison cannot be starved.
+fn stop_shard(shard: &mut Shard) {
+    if shard.worker.is_none() {
+        return;
+    }
+    shard.handle.stopping.store(true, Ordering::Relaxed);
+    let mut msg = Msg::Stop;
+    loop {
+        match shard.handle.tx.try_send(msg) {
+            Ok(()) => break,
+            Err(TrySendError::Full(m)) => {
+                msg = m;
+                std::thread::sleep(BACKPRESSURE_RETRY);
+            }
+            Err(TrySendError::Disconnected(_)) => break,
+        }
+    }
+    if let Some(w) = shard.worker.take() {
+        let _ = w.join();
+    }
+}
+
+/// Spawn one shard: bounded queue + worker thread building its replica.
+fn spawn_shard(
+    shard_id: usize,
+    factory: BackendFactory,
+    policy: BatchPolicy,
+    queue_depth: usize,
+) -> Result<Shard> {
+    let (tx, rx) = mpsc::sync_channel(queue_depth);
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let depth = Arc::new(AtomicUsize::new(0));
+    let stopping = Arc::new(AtomicBool::new(false));
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let worker = std::thread::Builder::new()
+        .name(format!("coordinator-shard-{shard_id}"))
+        .spawn({
+            let depth = Arc::clone(&depth);
+            let metrics = Arc::clone(&metrics);
+            move || {
                 let mut backend = match factory() {
                     Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
@@ -99,79 +355,80 @@ impl Coordinator {
                         return;
                     }
                 };
-                let mut batcher = Batcher::new(rx, config.policy);
-                while let Some(batch) = batcher.next_batch() {
-                    let formed = Instant::now();
-                    let images: Vec<Vec<i32>> =
-                        batch.iter().map(|r| r.image.clone()).collect();
-                    let result = backend.infer_batch(&images);
-                    let service = formed.elapsed();
-                    match result {
-                        Ok(out) => {
-                            let mut m = metrics_worker.lock().unwrap();
-                            m.record_batch(batch.len(), service, out.modeled_device_time);
-                            for (req, scores) in batch.into_iter().zip(out.scores) {
-                                let queue_time = formed.duration_since(req.enqueued);
-                                m.record_request(queue_time, queue_time + service);
-                                let _ = req.reply.send(InferReply {
-                                    id: req.id,
-                                    scores,
-                                    queue_time,
-                                    service_time: service,
-                                    batch_size: images.len(),
-                                    modeled_device_time: out.modeled_device_time,
-                                });
-                            }
-                        }
-                        Err(e) => {
-                            // drop the batch; clients observe disconnect
-                            eprintln!("[coordinator] backend error: {e:#}");
-                        }
-                    }
-                }
-            })
-            .expect("spawn coordinator worker");
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("coordinator worker died during startup"))??;
-        Ok(Self {
-            client: Client { tx, next_id: Arc::new(AtomicU64::new(0)) },
-            worker: Some(worker),
-            metrics,
-            started: Instant::now(),
+                shard_loop(shard_id, backend.as_mut(), rx, policy, &metrics, &depth);
+            }
         })
-    }
-
-    pub fn client(&self) -> Client {
-        self.client.clone()
-    }
-
-    /// Snapshot the metrics (wall time filled in).
-    pub fn metrics(&self) -> Metrics {
-        let mut m = self.metrics.lock().unwrap().clone();
-        m.wall = self.started.elapsed();
-        m
-    }
-
-    /// Graceful shutdown: poison the queue (queued requests are still
-    /// served first), join the worker.  Works even while client handles
-    /// remain alive — their later submits see a dead reply channel.
-    pub fn shutdown(mut self) -> Metrics {
-        let metrics = self.metrics();
-        let _ = self.client.tx.send(Msg::Stop);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-        metrics
-    }
+        .expect("spawn coordinator shard");
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow!("shard worker died during startup"))??;
+    Ok(Shard { handle: ShardHandle { tx, depth, stopping }, worker: Some(worker), metrics })
 }
 
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        if let Some(w) = self.worker.take() {
-            let _ = self.client.tx.send(Msg::Stop);
-            let _ = w.join();
+/// The per-shard serving loop: form batches, lend buffers zero-copy to the
+/// replica, fan replies (or typed errors) back out.
+fn shard_loop(
+    shard_id: usize,
+    backend: &mut dyn Backend,
+    rx: Receiver<Msg>,
+    policy: BatchPolicy,
+    metrics: &Mutex<Metrics>,
+    depth: &AtomicUsize,
+) {
+    let mut batcher = Batcher::new(rx, policy);
+    while let Some(batch) = batcher.next_batch() {
+        let formed = Instant::now();
+        let batch_len = batch.len();
+        let views: Vec<&[i32]> = batch.iter().map(|r| r.image.as_slice()).collect();
+        let mut result = backend.infer_batch(&views);
+        drop(views);
+        let service = formed.elapsed();
+        if let Ok(out) = &result {
+            if out.scores.len() != batch_len {
+                result = Err(anyhow!(
+                    "backend returned {} score rows for a batch of {batch_len}",
+                    out.scores.len()
+                ));
+            }
         }
+        match result {
+            Ok(out) => {
+                let mut m = metrics.lock().unwrap();
+                m.record_batch(batch_len, service, out.modeled_device_time);
+                for (req, scores) in batch.into_iter().zip(out.scores) {
+                    let queue_time = formed.duration_since(req.enqueued);
+                    m.record_request(queue_time, queue_time + service);
+                    let _ = req.reply.send(InferReply {
+                        id: req.id,
+                        scores: Ok(scores),
+                        queue_time,
+                        service_time: service,
+                        batch_size: batch_len,
+                        shard: shard_id,
+                        modeled_device_time: out.modeled_device_time,
+                    });
+                }
+            }
+            Err(e) => {
+                // No silent drops: every request in the failed batch gets
+                // a typed error reply, and the failure is counted.
+                let message = format!("{e:#}");
+                metrics.lock().unwrap().record_batch_error(batch_len, service);
+                for req in batch {
+                    let queue_time = formed.duration_since(req.enqueued);
+                    let _ = req.reply.send(InferReply {
+                        id: req.id,
+                        scores: Err(InferError { message: message.clone() }),
+                        queue_time,
+                        service_time: service,
+                        batch_size: batch_len,
+                        shard: shard_id,
+                        modeled_device_time: None,
+                    });
+                }
+            }
+        }
+        depth.fetch_sub(batch_len, Ordering::Relaxed);
     }
 }
 
@@ -182,7 +439,13 @@ impl Drop for Coordinator {
 // Wire protocol (little-endian):
 //   request:  u32 n_values, then n_values x i32 (one NHWC image)
 //   reply:    u32 n_scores, then n_scores x f32
+//   error:    u32 0xFFFF_FFFF, u32 msg_len, msg bytes (then close)
 // A zero-length request closes the connection.
+
+/// Error sentinel in the reply length slot.
+const WIRE_ERROR: u32 = u32::MAX;
+/// Largest accepted request, in i32 values.
+pub const MAX_WIRE_VALUES: usize = 1 << 22;
 
 /// Serve a TCP listener until `stop` flips (thread per connection).
 pub fn serve_tcp(listener: TcpListener, client: Client, stop: Arc<AtomicBool>) -> Result<()> {
@@ -208,6 +471,12 @@ pub fn serve_tcp(listener: TcpListener, client: Client, stop: Arc<AtomicBool>) -
     Ok(())
 }
 
+fn write_error(stream: &mut TcpStream, msg: &str) -> std::io::Result<()> {
+    stream.write_all(&WIRE_ERROR.to_le_bytes())?;
+    stream.write_all(&(msg.len() as u32).to_le_bytes())?;
+    stream.write_all(msg.as_bytes())
+}
+
 fn handle_conn(mut stream: TcpStream, client: Client) -> Result<()> {
     stream.set_nodelay(true).ok();
     loop {
@@ -219,7 +488,8 @@ fn handle_conn(mut stream: TcpStream, client: Client) -> Result<()> {
         if n == 0 {
             return Ok(());
         }
-        if n > 1 << 22 {
+        if n > MAX_WIRE_VALUES {
+            let _ = write_error(&mut stream, &format!("request too large: {n} values"));
             bail!("request too large: {n}");
         }
         let mut raw = vec![0u8; n * 4];
@@ -228,13 +498,28 @@ fn handle_conn(mut stream: TcpStream, client: Client) -> Result<()> {
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
             .collect();
-        let reply = client.infer(image)?;
-        stream.write_all(&(reply.scores.len() as u32).to_le_bytes())?;
-        let mut out = Vec::with_capacity(reply.scores.len() * 4);
-        for s in &reply.scores {
-            out.extend_from_slice(&s.to_le_bytes());
+        let reply = match client.infer(image) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ = write_error(&mut stream, &format!("{e:#}"));
+                bail!("infer: {e:#}");
+            }
+        };
+        match &reply.scores {
+            Ok(scores) => {
+                stream.write_all(&(scores.len() as u32).to_le_bytes())?;
+                let mut out = Vec::with_capacity(scores.len() * 4);
+                for s in scores {
+                    out.extend_from_slice(&s.to_le_bytes());
+                }
+                stream.write_all(&out)?;
+            }
+            Err(e) => {
+                // typed failure: forward it and keep the connection open
+                // (the next request may land on a healthy batch)
+                write_error(&mut stream, &e.message)?;
+            }
         }
-        stream.write_all(&out)?;
     }
 }
 
@@ -257,8 +542,15 @@ impl TcpClient {
         self.stream.write_all(&out)?;
         let mut len_buf = [0u8; 4];
         self.stream.read_exact(&mut len_buf)?;
-        let n = u32::from_le_bytes(len_buf) as usize;
-        let mut raw = vec![0u8; n * 4];
+        let n = u32::from_le_bytes(len_buf);
+        if n == WIRE_ERROR {
+            let mut msg_len = [0u8; 4];
+            self.stream.read_exact(&mut msg_len)?;
+            let mut msg = vec![0u8; u32::from_le_bytes(msg_len) as usize];
+            self.stream.read_exact(&mut msg)?;
+            bail!("server error: {}", String::from_utf8_lossy(&msg));
+        }
+        let mut raw = vec![0u8; n as usize * 4];
         self.stream.read_exact(&mut raw)?;
         Ok(raw
             .chunks_exact(4)

@@ -35,6 +35,11 @@ pub struct WorkloadReport {
 }
 
 impl WorkloadReport {
+    /// Replies that carried a typed backend error.
+    pub fn errors(&self) -> usize {
+        self.replies.iter().filter(|r| r.scores.is_err()).count()
+    }
+
     pub fn throughput(&self) -> f64 {
         if self.wall.is_zero() {
             return 0.0;
@@ -59,7 +64,9 @@ impl WorkloadReport {
 }
 
 /// Open-loop: submit `count` requests with Poisson inter-arrivals at
-/// `rate_rps`, then wait for all replies.
+/// `rate_rps`, then wait for all replies.  Backpressure from the bounded
+/// shard queues is waited out (the arrival process stalls — open loop
+/// degrades to closed loop at saturation, which is the honest behavior).
 pub fn run_open_loop(
     client: &Client,
     config: &NetConfig,
@@ -76,7 +83,7 @@ pub fn run_open_loop(
         if next_at > now {
             std::thread::sleep(next_at - now);
         }
-        pending.push(client.submit(random_image(config, &mut rng)));
+        pending.push(client.submit_blocking(random_image(config, &mut rng))?);
         next_at += Duration::from_secs_f64(rng.exp(rate_rps));
     }
     let mut replies = Vec::with_capacity(count);
@@ -86,7 +93,8 @@ pub fn run_open_loop(
     Ok(WorkloadReport { replies, wall: start.elapsed() })
 }
 
-/// Closed-loop: submit everything at once (static-data regime), wait all.
+/// Closed-loop: submit everything as fast as the bounded queues admit it
+/// (static-data regime), wait all.
 pub fn run_closed_loop(
     client: &Client,
     config: &NetConfig,
@@ -95,8 +103,9 @@ pub fn run_closed_loop(
 ) -> Result<WorkloadReport> {
     let start = Instant::now();
     let mut rng = SplitMix64::new(seed);
-    let pending: Vec<_> =
-        (0..count).map(|_| client.submit(random_image(config, &mut rng))).collect();
+    let pending = (0..count)
+        .map(|_| client.submit_blocking(random_image(config, &mut rng)))
+        .collect::<std::result::Result<Vec<_>, _>>()?;
     let mut replies = Vec::with_capacity(count);
     for rx in pending {
         replies.push(rx.recv().map_err(|_| anyhow::anyhow!("coordinator died"))?);

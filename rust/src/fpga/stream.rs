@@ -14,6 +14,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::bcnn::engine::Scratch;
 use crate::bcnn::tensor::Activation;
 use crate::bcnn::{Engine, LayerOutput};
 use crate::fpga::channel::DoubleBuffer;
@@ -52,8 +53,13 @@ pub struct StreamReport {
     pub scores: Vec<Vec<f32>>,
 }
 
-/// Simulate the streaming accelerator over a batch of images.
-pub fn simulate(engine: &Engine, config: &StreamConfig, images: &[Vec<i32>]) -> Result<StreamReport> {
+/// Simulate the streaming accelerator over a batch of images (owned or
+/// borrowed rows — the serving path lends request buffers zero-copy).
+pub fn simulate<I: AsRef<[i32]>>(
+    engine: &Engine,
+    config: &StreamConfig,
+    images: &[I],
+) -> Result<StreamReport> {
     let model = engine.model();
     let geoms = layer_geometry(&model.config());
     let n_layers = model.layers.len();
@@ -80,6 +86,7 @@ pub fn simulate(engine: &Engine, config: &StreamConfig, images: &[Vec<i32>]) -> 
     let mut completion_cycles = Vec::with_capacity(n);
     let mut clock: u64 = 0;
     let mut fed = 0usize;
+    let mut scratch = Scratch::default();
 
     // Each iteration is one phase.  Feed one image per phase (the host
     // interface keeps up: one image per max(C_L) cycles).
@@ -92,7 +99,7 @@ pub fn simulate(engine: &Engine, config: &StreamConfig, images: &[Vec<i32>]) -> 
             let input = channels[l].read();
             if let Some(act) = input {
                 active = true;
-                match engine.run_layer(&model.layers[l], &act)? {
+                match engine.run_layer_at(l, &act, &mut scratch)? {
                     LayerOutput::Act(next) => {
                         if l + 1 < n_layers {
                             channels[l + 1]
@@ -117,7 +124,7 @@ pub fn simulate(engine: &Engine, config: &StreamConfig, images: &[Vec<i32>]) -> 
             let hw = model.input_hw;
             let c = model.input_channels;
             channels[0]
-                .write(Activation::Int { hw, c, data: images[fed].clone() })
+                .write(Activation::Int { hw, c, data: images[fed].as_ref().to_vec() })
                 .map_err(|e| anyhow!("input channel: {e}"))?;
             fed += 1;
             active = true;
@@ -147,10 +154,10 @@ pub fn simulate(engine: &Engine, config: &StreamConfig, images: &[Vec<i32>]) -> 
 /// Ablation mode: no double buffering — one image occupies the whole
 /// datapath; layers execute in sequence (the time-multiplexed scheme the
 /// paper criticizes in Ref. 21, §6.2).
-fn simulate_sequential(
+fn simulate_sequential<I: AsRef<[i32]>>(
     engine: &Engine,
     config: &StreamConfig,
-    images: &[Vec<i32>],
+    images: &[I],
     _geoms: &[LayerGeom],
     layer_cycles: &[u64],
 ) -> Result<StreamReport> {
@@ -159,7 +166,7 @@ fn simulate_sequential(
     let mut completion_cycles = Vec::with_capacity(images.len());
     let mut clock = 0u64;
     for img in images {
-        scores.push(engine.infer(img)?);
+        scores.push(engine.infer(img.as_ref())?);
         clock += per_image;
         completion_cycles.push(clock);
     }

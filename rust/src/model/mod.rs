@@ -3,6 +3,7 @@
 
 pub mod config;
 pub mod file;
+pub mod synthetic;
 pub mod testset;
 
 pub use config::{ConvShape, ConvSpec, NetConfig};

@@ -1,0 +1,205 @@
+//! Deterministic synthetic weights for any [`NetConfig`].
+//!
+//! The trained artifacts come from `make artifacts` (python/JAX); this
+//! module lets every functional test, bench, and serving experiment run
+//! *without* them: weights are random but valid (packed rows padded with
+//! zero bits past the row's bit count, exactly like
+//! `python/compile/packing.py`), and thresholds sit near each layer's
+//! match-count median so activations stay balanced instead of saturating.
+//!
+//! Numerics-equivalence tests (engine vs scalar reference vs FPGA
+//! simulator vs PE datapath) are as strong on synthetic weights as on
+//! trained ones — both sides consume the same `BcnnModel`.  Only
+//! *accuracy* assertions need the trained artifacts.
+
+use crate::model::config::NetConfig;
+use crate::model::file::{BcnnModel, LayerWeights};
+use crate::util::bits::words_for;
+use crate::util::SplitMix64;
+
+/// Random packed ±1 rows: `rows x words_for(bits)` words, bits past
+/// `bits` in each row's last word forced to zero (packing invariant).
+fn packed_rows(rng: &mut SplitMix64, rows: usize, bits: usize) -> Vec<u64> {
+    let wpr = words_for(bits);
+    let tail = bits % 64;
+    let mut out = Vec::with_capacity(rows * wpr);
+    for _ in 0..rows {
+        for w in 0..wpr {
+            let mut word = rng.next_u64();
+            if w == wpr - 1 && tail != 0 {
+                word &= (1u64 << tail) - 1;
+            }
+            out.push(word);
+        }
+    }
+    out
+}
+
+/// Thresholds near the match-count median `bits/2`, jittered by about one
+/// standard deviation (`sqrt(bits)/2`) so channels differ.
+fn match_thresholds(rng: &mut SplitMix64, n: usize, bits: usize) -> Vec<i32> {
+    let mid = (bits / 2) as i64;
+    let sd = ((bits as f64).sqrt() / 2.0).ceil() as i64;
+    (0..n).map(|_| rng.range_i64(mid - sd, mid + sd) as i32).collect()
+}
+
+impl BcnnModel {
+    /// Build a deterministic random model instantiating `config`.
+    pub fn synthetic(config: &NetConfig, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut layers = Vec::with_capacity(config.num_layers());
+
+        for (i, shape) in config.conv_shapes().iter().enumerate() {
+            let k = 9 * shape.in_c;
+            if i == 0 {
+                // first layer: 6-bit ints x ±1 weights (paper eq. 7); the
+                // accumulator is zero-mean with sd ~ sqrt(k * 31^2/3)
+                let weights: Vec<i8> = (0..shape.out_c * k)
+                    .map(|_| if rng.bit() { 1 } else { -1 })
+                    .collect();
+                let sd = (k as f64 * 31.0 * 31.0 / 3.0).sqrt().ceil() as i64;
+                let thresholds: Vec<i32> = (0..shape.out_c)
+                    .map(|_| rng.range_i64(-sd / 2, sd / 2) as i32)
+                    .collect();
+                layers.push(LayerWeights::FpConv {
+                    in_c: shape.in_c,
+                    out_c: shape.out_c,
+                    pool: shape.pool,
+                    weights,
+                    thresholds,
+                });
+            } else {
+                layers.push(LayerWeights::BinConv {
+                    in_c: shape.in_c,
+                    out_c: shape.out_c,
+                    pool: shape.pool,
+                    weights: packed_rows(&mut rng, shape.out_c, k),
+                    words_per_row: words_for(k),
+                    thresholds: match_thresholds(&mut rng, shape.out_c, k),
+                });
+            }
+        }
+
+        let fc_shapes = config.fc_shapes();
+        for (i, &(in_f, out_f)) in fc_shapes.iter().enumerate() {
+            let weights = packed_rows(&mut rng, out_f, in_f);
+            if i + 1 == fc_shapes.len() {
+                // classifier: affine Norm, no binarize
+                let scale: Vec<f32> =
+                    (0..out_f).map(|_| (0.05 + 0.1 * rng.f64()) as f32).collect();
+                let bias: Vec<f32> =
+                    (0..out_f).map(|_| (2.0 * rng.f64() - 1.0) as f32).collect();
+                layers.push(LayerWeights::BinFcOut {
+                    in_f,
+                    out_f,
+                    weights,
+                    words_per_row: words_for(in_f),
+                    scale,
+                    bias,
+                });
+            } else {
+                layers.push(LayerWeights::BinFc {
+                    in_f,
+                    out_f,
+                    weights,
+                    words_per_row: words_for(in_f),
+                    thresholds: match_thresholds(&mut rng, out_f, in_f),
+                });
+            }
+        }
+
+        Self {
+            name: config.name.clone(),
+            input_hw: config.input_hw,
+            input_channels: config.input_channels,
+            input_bits: config.input_bits,
+            classes: config.classes,
+            layers,
+        }
+    }
+
+    /// Load the named artifact if present, else fall back to a synthetic
+    /// model for the named built-in config — the test/bench entry point.
+    pub fn load_or_synthetic(name: &str, dir: &str, seed: u64) -> anyhow::Result<Self> {
+        let path = format!("{dir}/model_{name}.bcnn");
+        if let Ok(m) = Self::load(&path) {
+            return Ok(m);
+        }
+        let config = NetConfig::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact at {path} and no built-in config {name:?}"))?;
+        Ok(Self::synthetic(&config, seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let cfg = NetConfig::tiny();
+        let a = BcnnModel::synthetic(&cfg, 7);
+        let b = BcnnModel::synthetic(&cfg, 7);
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            match (la, lb) {
+                (
+                    LayerWeights::BinConv { weights: wa, .. },
+                    LayerWeights::BinConv { weights: wb, .. },
+                ) => assert_eq!(wa, wb),
+                (
+                    LayerWeights::FpConv { weights: wa, .. },
+                    LayerWeights::FpConv { weights: wb, .. },
+                ) => assert_eq!(wa, wb),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_matches_config_shape() {
+        let cfg = NetConfig::tiny();
+        let m = BcnnModel::synthetic(&cfg, 3);
+        assert_eq!(m.layers.len(), cfg.num_layers());
+        assert_eq!(m.config().conv_shapes(), cfg.conv_shapes());
+        assert_eq!(m.config().fc_shapes(), cfg.fc_shapes());
+    }
+
+    #[test]
+    fn synthetic_packed_rows_respect_padding() {
+        // bits past each row's logical width must be zero (the engine and
+        // the scalar reference both rely on it)
+        let cfg = NetConfig::tiny();
+        let m = BcnnModel::synthetic(&cfg, 9);
+        for layer in &m.layers {
+            let (weights, wpr, bits, rows) = match layer {
+                LayerWeights::BinConv { weights, words_per_row, in_c, out_c, .. } => {
+                    (weights, *words_per_row, 9 * in_c, *out_c)
+                }
+                LayerWeights::BinFc { weights, words_per_row, in_f, out_f, .. }
+                | LayerWeights::BinFcOut { weights, words_per_row, in_f, out_f, .. } => {
+                    (weights, *words_per_row, *in_f, *out_f)
+                }
+                LayerWeights::FpConv { .. } => continue,
+            };
+            let tail = bits % 64;
+            if tail == 0 {
+                continue;
+            }
+            for r in 0..rows {
+                let last = weights[r * wpr + wpr - 1];
+                assert_eq!(last >> tail, 0, "stray bits past row width");
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_runs_through_engine() {
+        let cfg = NetConfig::tiny();
+        let m = BcnnModel::synthetic(&cfg, 11);
+        let engine = crate::bcnn::Engine::new(m);
+        let img = vec![5i32; cfg.input_hw * cfg.input_hw * cfg.input_channels];
+        let scores = engine.infer(&img).unwrap();
+        assert_eq!(scores.len(), cfg.classes);
+    }
+}

@@ -12,10 +12,10 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::model::{BcnnModel, LayerWeights};
-use crate::runtime::{Manifest, ParamSpec};
+use crate::runtime::{xla, Manifest, ParamSpec};
 
 /// Build literals for every manifest parameter from the loaded model.
-pub fn build_literals(manifest: &Manifest, model: &BcnnModel) -> Result<Vec<xla::Literal>> {
+pub(crate) fn build_literals(manifest: &Manifest, model: &BcnnModel) -> Result<Vec<xla::Literal>> {
     manifest.params.iter().map(|spec| build_one(spec, model)).collect()
 }
 

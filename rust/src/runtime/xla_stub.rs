@@ -1,0 +1,106 @@
+//! Offline stand-in for the `xla` crate (xla_extension 0.5.1).
+//!
+//! The seed environment compiled the AOT HLO artifacts through PJRT; this
+//! build environment has no `xla` crate in its offline registry, so the
+//! runtime layer links against this API-compatible stub instead (see
+//! `runtime/mod.rs`).  Every entry point type-checks identically to the
+//! real crate, and the *first* call a `Runtime` makes —
+//! [`PjRtClient::cpu`] — returns a clear error, so callers degrade
+//! gracefully (tests skip, `repro selftest` reports the missing runtime)
+//! instead of failing to build.
+//!
+//! To restore real PJRT execution: add `xla` back to `Cargo.toml` and
+//! delete the `#[path]` module alias in `runtime/mod.rs`.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (only `Display` is consumed).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error("PJRT runtime unavailable: built with the in-tree xla stub (re-add the `xla` crate to enable AOT execution)".into())
+}
+
+/// Stub of `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub of the per-device buffer handle returned by `execute`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute(&self, _args: &[&Literal]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always fails: there is no PJRT in this build.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}

@@ -1,24 +1,28 @@
-//! Coordinator integration: batching policy, serving metrics, TCP
+//! Coordinator integration: batching policy, sharded worker pool,
+//! bounded-queue backpressure, typed error replies, serving metrics, TCP
 //! front-end, simulator backends on the request path.
+//!
+//! Runs against trained artifacts when present, else deterministic
+//! synthetic weights (numerics-equivalence needs no training).
 
-use std::net::TcpListener;
+use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use anyhow::bail;
 use repro::bcnn::Engine;
 use repro::coordinator::server::{serve_tcp, TcpClient};
 use repro::coordinator::workload::{random_images, run_closed_loop, run_open_loop};
 use repro::coordinator::{
-    Backend, BatchPolicy, Coordinator, CoordinatorConfig, FpgaSimBackend, GpuSimBackend,
-    NativeBackend,
+    Backend, BackendFactory, BatchPolicy, BatchResult, Coordinator, CoordinatorConfig,
+    FpgaSimBackend, GpuSimBackend, NativeBackend, SubmitError,
 };
 use repro::gpu::GpuKernel;
 use repro::model::BcnnModel;
 
 fn load(name: &str) -> BcnnModel {
-    BcnnModel::load(format!("artifacts/model_{name}.bcnn"))
-        .expect("run `make artifacts` before `cargo test`")
+    BcnnModel::load_or_synthetic(name, "artifacts", 0xB_C0DE).expect("built-in config")
 }
 
 fn start_native(max_batch: usize, max_wait: Duration) -> (Coordinator, Engine) {
@@ -26,8 +30,25 @@ fn start_native(max_batch: usize, max_wait: Duration) -> (Coordinator, Engine) {
     let engine = Engine::new(model.clone());
     let coord = Coordinator::start(
         Box::new(NativeBackend::new(model)),
-        CoordinatorConfig { policy: BatchPolicy { max_batch, max_wait } },
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch, max_wait },
+            ..CoordinatorConfig::default()
+        },
     );
+    (coord, engine)
+}
+
+fn start_sharded(workers: usize, policy: BatchPolicy, queue_depth: usize) -> (Coordinator, Engine) {
+    let model = load("tiny");
+    let engine = Engine::new(model.clone());
+    let factory: BackendFactory = Arc::new(move || -> anyhow::Result<Box<dyn Backend>> {
+        Ok(Box::new(NativeBackend::new(model.clone())))
+    });
+    let coord = Coordinator::start_sharded(
+        factory,
+        CoordinatorConfig { policy, workers, queue_depth },
+    )
+    .expect("start sharded pool");
     (coord, engine)
 }
 
@@ -39,10 +60,11 @@ fn serves_correct_scores() {
     let client = coord.client();
     for img in &images {
         let reply = client.infer(img.clone()).unwrap();
-        assert_eq!(reply.scores, engine.infer(img).unwrap());
+        assert_eq!(reply.scores.unwrap(), engine.infer(img).unwrap());
     }
     let metrics = coord.shutdown();
     assert_eq!(metrics.requests, 6);
+    assert_eq!(metrics.errors, 0);
 }
 
 #[test]
@@ -75,12 +97,163 @@ fn replies_match_request_order_data() {
     let cfg = engine.model().config();
     let images = random_images(&cfg, 16, 44);
     let client = coord.client();
-    let rxs: Vec<_> = images.iter().map(|img| client.submit(img.clone())).collect();
+    let rxs: Vec<_> = images
+        .iter()
+        .map(|img| client.submit(img.clone()).expect("queue has room"))
+        .collect();
     for (img, rx) in images.iter().zip(rxs) {
         let reply = rx.recv().unwrap();
-        assert_eq!(reply.scores, engine.infer(img).unwrap());
+        assert_eq!(reply.scores.unwrap(), engine.infer(img).unwrap());
     }
     coord.shutdown();
+}
+
+#[test]
+fn sharded_pool_concurrent_clients_get_correct_replies() {
+    // M client threads through a 4-shard pool: every reply must carry the
+    // scores of its own request, across shard boundaries
+    let (coord, engine) = start_sharded(
+        4,
+        BatchPolicy { max_batch: 8, max_wait: Duration::ZERO },
+        64,
+    );
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 8;
+    let mut joins = Vec::new();
+    for t in 0..THREADS {
+        let client = coord.client();
+        let cfg = engine.model().config();
+        joins.push(std::thread::spawn(move || {
+            let images = random_images(&cfg, PER_THREAD, 100 + t as u64);
+            images
+                .into_iter()
+                .map(|img| {
+                    let reply = client.infer(img.clone()).unwrap();
+                    (img, reply)
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    let mut served = 0u64;
+    for j in joins {
+        for (img, reply) in j.join().unwrap() {
+            assert_eq!(reply.scores.unwrap(), engine.infer(&img).unwrap());
+            served += 1;
+        }
+    }
+    assert_eq!(served, (THREADS * PER_THREAD) as u64);
+
+    // dispatch spread the load: total adds up and >= 2 shards served work
+    let per_shard: Vec<u64> = coord.shard_metrics().iter().map(|m| m.requests).collect();
+    assert_eq!(per_shard.iter().sum::<u64>(), served);
+    assert!(
+        per_shard.iter().filter(|&&r| r > 0).count() >= 2,
+        "round-robin + least-loaded dispatch never spread load: {per_shard:?}"
+    );
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.requests, served);
+    assert_eq!(metrics.errors, 0);
+}
+
+/// Backend that parks inside `infer_batch` until released (deterministic
+/// queue-full setup) and reports when it has started.
+struct GatedBackend {
+    started: Arc<AtomicBool>,
+    release: Arc<AtomicBool>,
+}
+
+impl Backend for GatedBackend {
+    fn name(&self) -> &str {
+        "gated"
+    }
+
+    fn infer_batch(&mut self, images: &[&[i32]]) -> anyhow::Result<BatchResult> {
+        self.started.store(true, Ordering::SeqCst);
+        let t0 = Instant::now();
+        while !self.release.load(Ordering::SeqCst) {
+            assert!(t0.elapsed() < Duration::from_secs(10), "test gate never released");
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        Ok(BatchResult { scores: vec![vec![0.0]; images.len()], modeled_device_time: None })
+    }
+}
+
+#[test]
+fn full_bounded_queue_returns_queue_full() {
+    let started = Arc::new(AtomicBool::new(false));
+    let release = Arc::new(AtomicBool::new(false));
+    let backend = GatedBackend { started: Arc::clone(&started), release: Arc::clone(&release) };
+    let coord = Coordinator::start(
+        Box::new(backend),
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            workers: 1,
+            queue_depth: 2,
+        },
+    );
+    let client = coord.client();
+
+    // occupy the worker, then wait until it is provably inside infer_batch
+    let rx0 = client.submit(vec![0i32; 4]).unwrap();
+    let t0 = Instant::now();
+    while !started.load(Ordering::SeqCst) {
+        assert!(t0.elapsed() < Duration::from_secs(5), "worker never started");
+        std::thread::sleep(Duration::from_micros(50));
+    }
+
+    // fill the (now empty) 2-deep queue, then overflow it
+    let rx1 = client.submit(vec![1i32; 4]).unwrap();
+    let rx2 = client.submit(vec![2i32; 4]).unwrap();
+    let overflow = vec![3i32; 4];
+    match client.submit(overflow.clone()) {
+        Err(SubmitError::QueueFull { image }) => {
+            assert_eq!(image, overflow, "backpressure must hand the image back");
+        }
+        Err(SubmitError::Shutdown) => panic!("pool is alive"),
+        Ok(_) => panic!("4th request fit a 2-deep queue with a busy worker"),
+    }
+
+    // release: everything admitted must still be served
+    release.store(true, Ordering::SeqCst);
+    for rx in [rx0, rx1, rx2] {
+        let reply = rx.recv().unwrap();
+        assert!(reply.scores.is_ok());
+    }
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.requests, 3);
+}
+
+/// Backend that always fails.
+struct FailingBackend;
+
+impl Backend for FailingBackend {
+    fn name(&self) -> &str {
+        "failing"
+    }
+
+    fn infer_batch(&mut self, _images: &[&[i32]]) -> anyhow::Result<BatchResult> {
+        bail!("synthetic device fault")
+    }
+}
+
+#[test]
+fn backend_error_becomes_typed_reply_not_silent_drop() {
+    let coord = Coordinator::start(
+        Box::new(FailingBackend),
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            ..CoordinatorConfig::default()
+        },
+    );
+    let client = coord.client();
+    let reply = client.infer(vec![0i32; 8]).unwrap();
+    let err = reply.scores.expect_err("failing backend must produce an error reply");
+    assert!(err.message.contains("synthetic device fault"), "{err}");
+    assert_eq!(reply.argmax(), None);
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.requests, 1);
+    assert_eq!(metrics.errors, 1);
+    assert!(metrics.summary().contains("errors=1"));
 }
 
 #[test]
@@ -88,7 +261,7 @@ fn fpga_sim_backend_reports_modeled_time() {
     let model = load("tiny");
     let mut backend = FpgaSimBackend::new(model.clone()).unwrap();
     let images = random_images(&model.config(), 4, 45);
-    let out = backend.infer_batch(&images).unwrap();
+    let out = backend.infer_owned(&images).unwrap();
     let modeled = out.modeled_device_time.expect("simulator must model time");
     assert!(modeled > Duration::ZERO);
     // (images + layers + slack) phases at 90 MHz with a generous per-phase
@@ -103,18 +276,31 @@ fn gpu_sim_backend_penalizes_small_batches() {
     let model = load("tiny");
     let mut backend = GpuSimBackend::new(model.clone(), GpuKernel::Xnor);
     let one = backend
-        .infer_batch(&random_images(&model.config(), 1, 46))
+        .infer_owned(&random_images(&model.config(), 1, 46))
         .unwrap()
         .modeled_device_time
         .unwrap();
     let many = backend
-        .infer_batch(&random_images(&model.config(), 64, 46))
+        .infer_owned(&random_images(&model.config(), 64, 46))
         .unwrap()
         .modeled_device_time
         .unwrap();
     // 64 images take longer than 1, but far less than 64x (latency hiding)
     assert!(many > one);
     assert!(many < one * 64, "no latency hiding in model");
+}
+
+#[test]
+fn native_backend_lanes_match_serial() {
+    let model = load("tiny");
+    let engine = Engine::new(model.clone());
+    let images = random_images(&model.config(), 9, 50);
+    let mut parallel = NativeBackend::with_lanes(model, 4);
+    let out = parallel.infer_owned(&images).unwrap();
+    assert_eq!(out.scores.len(), images.len());
+    for (img, got) in images.iter().zip(&out.scores) {
+        assert_eq!(&engine.infer(img).unwrap(), got, "lane split changed numerics");
+    }
 }
 
 #[test]
@@ -141,6 +327,80 @@ fn tcp_round_trip() {
 }
 
 #[test]
+fn tcp_oversized_request_rejected_with_error_frame() {
+    use std::io::{Read, Write};
+
+    let (coord, _engine) = start_native(4, Duration::from_millis(1));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let client = coord.client();
+    let server = std::thread::spawn(move || serve_tcp(listener, client, stop2));
+
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    let huge = (repro::coordinator::server::MAX_WIRE_VALUES as u32) + 1;
+    raw.write_all(&huge.to_le_bytes()).unwrap();
+    // server must answer with the error frame (0xFFFF_FFFF + message)
+    let mut len_buf = [0u8; 4];
+    raw.read_exact(&mut len_buf).unwrap();
+    assert_eq!(u32::from_le_bytes(len_buf), u32::MAX, "expected error sentinel");
+    raw.read_exact(&mut len_buf).unwrap();
+    let mut msg = vec![0u8; u32::from_le_bytes(len_buf) as usize];
+    raw.read_exact(&mut msg).unwrap();
+    let msg = String::from_utf8_lossy(&msg).into_owned();
+    assert!(msg.contains("too large"), "unhelpful error: {msg}");
+    // connection is then closed by the server
+    let mut probe = [0u8; 1];
+    assert_eq!(raw.read(&mut probe).unwrap_or(0), 0, "connection should be closed");
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+#[test]
+fn tcp_concurrent_clients_through_sharded_pool() {
+    let (coord, engine) = start_sharded(
+        4,
+        BatchPolicy { max_batch: 8, max_wait: Duration::ZERO },
+        64,
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let client = coord.client();
+    let server = std::thread::spawn(move || serve_tcp(listener, client, stop2));
+
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let addr = addr.clone();
+        let cfg = engine.model().config();
+        joins.push(std::thread::spawn(move || {
+            let images = random_images(&cfg, 4, 200 + t);
+            let mut tcp = TcpClient::connect(&addr).unwrap();
+            let out: Vec<_> = images
+                .iter()
+                .map(|img| (img.clone(), tcp.infer(img).unwrap()))
+                .collect();
+            tcp.close().unwrap();
+            out
+        }));
+    }
+    for j in joins {
+        for (img, scores) in j.join().unwrap() {
+            assert_eq!(scores, engine.infer(&img).unwrap());
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.requests, 16);
+    assert_eq!(metrics.errors, 0);
+}
+
+#[test]
 fn metrics_quantiles_present() {
     let (coord, engine) = start_native(4, Duration::from_millis(1));
     let cfg = engine.model().config();
@@ -160,5 +420,10 @@ fn shutdown_disconnects_clients() {
     let cfg = engine.model().config();
     coord.shutdown();
     let img = random_images(&cfg, 1, 49).pop().unwrap();
+    match client.submit(img.clone()) {
+        Err(SubmitError::Shutdown) => {}
+        Err(SubmitError::QueueFull { .. }) => panic!("dead pool reported backpressure"),
+        Ok(_) => panic!("submit to a dead pool succeeded"),
+    }
     assert!(client.infer(img).is_err());
 }

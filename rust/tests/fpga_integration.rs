@@ -10,8 +10,7 @@ use repro::model::{BcnnModel, NetConfig};
 use repro::optimizer::{optimize, OptimizeOptions};
 
 fn load(name: &str) -> BcnnModel {
-    BcnnModel::load(format!("artifacts/model_{name}.bcnn"))
-        .expect("run `make artifacts` before `cargo test`")
+    BcnnModel::load_or_synthetic(name, "artifacts", 0xB_C0DE).expect("built-in config")
 }
 
 fn stream_config(model: &BcnnModel) -> StreamConfig {
