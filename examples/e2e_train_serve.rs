@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- serve the test set through the coordinator (native hot path) ---
     let coord = Coordinator::start(
-        Box::new(NativeBackend::new(model.clone())),
+        Box::new(NativeBackend::new(model.clone())?),
         CoordinatorConfig {
             policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
             ..CoordinatorConfig::default()
@@ -71,7 +71,7 @@ fn main() -> anyhow::Result<()> {
     // --- cross-check a sample against the AOT PJRT path ---
     let mut rt = Runtime::new("artifacts")?;
     let loaded = rt.load_model("small", 1, "artifacts/model_small.bcnn")?;
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone())?;
     for (i, img) in testset.images.iter().take(8).enumerate() {
         let pjrt = loaded.infer_batch(img)?;
         let native = engine.infer(img)?;

@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     println!("loaded {:?}: {} layers, {} classes", model.name, model.layers.len(), model.classes);
 
     // 2. native packed-u64 engine (the serving hot path)
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone())?;
     let images = random_images(&model.config(), 4, 2024);
     let native: Vec<Vec<f32>> = engine.infer_batch(&images)?;
     for (i, s) in native.iter().enumerate() {

@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     for which in ["fpga-sim", "gpu-sim-xnor"] {
         let backend: Box<dyn Backend + Send> = match which {
             "fpga-sim" => Box::new(FpgaSimBackend::new(model.clone())?),
-            _ => Box::new(GpuSimBackend::new(model.clone(), GpuKernel::Xnor)),
+            _ => Box::new(GpuSimBackend::new(model.clone(), GpuKernel::Xnor)?),
         };
         let coord = Coordinator::start(
             backend,
@@ -81,7 +81,7 @@ fn main() -> anyhow::Result<()> {
     for workers in [1usize, 2, 4] {
         let m = model.clone();
         let factory: BackendFactory = Arc::new(move || -> anyhow::Result<Box<dyn Backend>> {
-            Ok(Box::new(NativeBackend::new(m.clone())))
+            Ok(Box::new(NativeBackend::new(m.clone())?))
         });
         let coord = Coordinator::start_sharded(
             factory,

@@ -38,7 +38,7 @@ fn main() {
             pipeline: PipelineModel::default(),
             double_buffered: true,
         };
-        let engine = Engine::new(model);
+        let engine = Engine::new(model).expect("valid model");
         let images = random_images(&net, 8, 5);
         let on = simulate(&engine, &config, &images).unwrap();
         config.double_buffered = false;

@@ -2,16 +2,33 @@
 //! breakdown, and effective bit-op rate.  This is the §Perf workload
 //! (EXPERIMENTS.md records before/after for each optimization step).
 //!
+//! Emits `rust/BENCH_engine.json` (ns/image per layer + end-to-end; bench
+//! binaries run with the package root as cwd) so the perf trajectory is
+//! machine-readable and comparable across commits; CI runs a shortened
+//! pass with `BENCH_SMOKE=1` to keep the artifact fresh.
+//!
 //! Run: `cargo bench --bench engine_hotpath`
 
 use std::time::Duration;
 
-use repro::bcnn::{Engine, LayerOutput};
-use repro::benchkit::{bench_with, fmt_ns, BenchOpts, Table};
+use repro::bcnn::{Engine, LayerOutput, Scratch};
+use repro::benchkit::{bench_with, fmt_ns, write_bench_json, BenchOpts, Json, Table};
 use repro::coordinator::workload::random_images;
 use repro::model::BcnnModel;
 
+fn smoke() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some()
+}
+
 fn opts(ms: u64) -> BenchOpts {
+    if smoke() {
+        return BenchOpts {
+            warmup: Duration::from_millis(10),
+            samples: 3,
+            min_batch_time: Duration::from_millis(1),
+            budget: Duration::from_secs(1),
+        };
+    }
     BenchOpts {
         warmup: Duration::from_millis(200),
         samples: 12,
@@ -22,13 +39,14 @@ fn opts(ms: u64) -> BenchOpts {
 
 fn main() {
     let mut t = Table::new(&["config", "ms/image", "img/s", "GOPS", "Gbitop/s"]);
+    let mut e2e_rows: Vec<Json> = Vec::new();
     for name in ["tiny", "small", "table2"] {
         let model = BcnnModel::load_or_synthetic(name, "artifacts", 0xB_C0DE)
             .expect("built-in config");
         let cfg = model.config();
-        let engine = Engine::new(model);
+        let engine = Engine::new(model).expect("valid model");
         let images = random_images(&cfg, 4, 11);
-        let mut scratch = repro::bcnn::engine::Scratch::default();
+        let mut scratch = Scratch::default();
         let mut idx = 0usize;
         let stats = bench_with(opts(30), &mut || {
             let img = &images[idx % images.len()];
@@ -44,6 +62,12 @@ fn main() {
             format!("{:.2}", ops * fps / 1e9),
             format!("{:.2}", ops * fps / 2.0 / 1e9), // XNOR+acc pairs
         ]);
+        e2e_rows.push(Json::Obj(vec![
+            ("config".into(), Json::Str(name.into())),
+            ("median_ns_per_image".into(), Json::Num(stats.median_ns)),
+            ("img_per_s".into(), Json::Num(fps)),
+            ("gops".into(), Json::Num(ops * fps / 1e9)),
+        ]));
     }
     println!("=== native engine hot path (single core) ===");
     t.print();
@@ -51,15 +75,15 @@ fn main() {
     // per-layer breakdown on table2 (where the time goes)
     let model = BcnnModel::load_or_synthetic("table2", "artifacts", 0xB_C0DE).unwrap();
     let cfg = model.config();
-    let engine = Engine::new(model);
+    let engine = Engine::new(model).expect("valid model");
     let img = random_images(&cfg, 1, 12).pop().unwrap();
     let n_layers = engine.model().layers.len();
 
     println!("\n=== per-layer breakdown (table2) ===");
     let mut t = Table::new(&["layer", "median", "share%"]);
     // capture inputs to each layer once (run_layer_at engages the
-    // prepared-weight fast paths by index, as in real inference)
-    let mut scratch = repro::bcnn::engine::Scratch::default();
+    // prepared tap-major banks by index, as in real inference)
+    let mut scratch = Scratch::default();
     let mut acts = Vec::new();
     let mut act = repro::bcnn::Activation::Int {
         hw: cfg.input_hw,
@@ -81,13 +105,35 @@ fn main() {
         medians.push(stats.median_ns);
     }
     let total: f64 = medians.iter().sum();
+    let mut layer_rows: Vec<Json> = Vec::new();
     for (i, m) in medians.iter().enumerate() {
         t.row(&[
             format!("layer {}", i + 1),
             fmt_ns(*m),
             format!("{:.1}", 100.0 * m / total),
         ]);
+        layer_rows.push(Json::Obj(vec![
+            ("layer".into(), Json::Num((i + 1) as f64)),
+            ("median_ns".into(), Json::Num(*m)),
+            ("share_pct".into(), Json::Num(100.0 * m / total)),
+        ]));
     }
     t.row(&["TOTAL".into(), fmt_ns(total), "100.0".into()]);
     t.print();
+
+    let json = Json::Obj(vec![
+        ("bench".into(), Json::Str("engine_hotpath".into())),
+        ("smoke".into(), Json::Bool(smoke())),
+        ("end_to_end".into(), Json::Arr(e2e_rows)),
+        (
+            "per_layer".into(),
+            Json::Obj(vec![
+                ("config".into(), Json::Str("table2".into())),
+                ("layers".into(), Json::Arr(layer_rows)),
+                ("total_ns_per_image".into(), Json::Num(total)),
+            ]),
+        ),
+    ]);
+    write_bench_json("BENCH_engine.json", &json).expect("write BENCH_engine.json");
+    println!("\nwrote BENCH_engine.json (smoke={})", smoke());
 }

@@ -31,7 +31,7 @@ fn main() {
     let model = BcnnModel::load_or_synthetic("tiny", "artifacts", 0xB_C0DE)
         .expect("built-in config");
     let mut fpga = FpgaSimBackend::new(model.clone()).expect("fpga backend");
-    let mut gpu = GpuSimBackend::new(model.clone(), GpuKernel::Xnor);
+    let mut gpu = GpuSimBackend::new(model.clone(), GpuKernel::Xnor).expect("valid model");
     let cfg = model.config();
 
     println!("=== serving path (tiny config, modeled device time per batch) ===");
@@ -86,7 +86,7 @@ fn main() {
     for workers in [1usize, 2, 4, 8] {
         let m = model.clone();
         let factory: BackendFactory = Arc::new(move || -> anyhow::Result<Box<dyn Backend>> {
-            Ok(Box::new(NativeBackend::new(m.clone())))
+            Ok(Box::new(NativeBackend::new(m.clone())?))
         });
         let coord = Coordinator::start_sharded(
             factory,

@@ -20,7 +20,7 @@ fn main() {
     // measured: native engine on the full Table-2 network
     let model =
         BcnnModel::load("artifacts/model_table2.bcnn").expect("run `make artifacts` first");
-    let engine = Engine::new(model);
+    let engine = Engine::new(model).expect("valid model");
     let cfg = NetConfig::table2();
     let images = random_images(&cfg, 4, 3);
     let mut idx = 0usize;

@@ -4,19 +4,47 @@
 //! packed `u64` rows (paper eq. 5/6), optional 2x2/2 max-pool on the
 //! *integer* accumulator plane, then the folded `NormBinarize` threshold
 //! compare (eq. 8).  The first layer is the 6-bit x ±1 integer dot product
-//! of eq. 7.  Padding inserts zero bits = -1 activations, keeping
+//! of eq. 7.  Padding contributes zero bits = -1 activations, keeping
 //! `cnum = FW*FH*FD` constant across the border exactly like the paper's
 //! fixed-size PE datapath.
 //!
-//! The engine is allocation-free on the per-image path after construction:
-//! patch/accumulator scratch lives in a per-call [`Scratch`] arena that the
-//! coordinator reuses across requests.
+//! ## Tap-major dataflow (PERF iter 6, EXPERIMENTS.md §Perf)
+//!
+//! The conv hot path is **tap-major**: no im2row patch is ever gathered.
+//! For each output pixel the 9 filter taps are visited directly — each tap
+//! XORs the input pixel's own packed channel words (already contiguous in
+//! [`BitFmap`]) against that tap's word-aligned slice of the transposed
+//! weight bank, accumulating mismatches *vertically* across all filters
+//! (one popcount lane per filter).  This is the software analogue of the
+//! paper's line-buffer pipeline (fig. 3): every input pixel streams past
+//! the filter bank once per tap position, and nothing is re-packed.
+//! Out-of-bounds taps contribute a precomputed per-tap weight popcount
+//! (all activation bits zero = all −1 padding).  Rows are split into
+//! border/interior so the interior — the vast majority of pixels at
+//! `hw >= 8` — runs a branch-free constant-trip tap loop.  For pooling
+//! layers the 2x2/2 max is fused into the conv output write, so the
+//! full-resolution accumulator plane is never materialized.
+//!
+//! The engine is allocation-free on the per-image path after warm-up: the
+//! integer accumulator plane, the mismatch lanes, the ping-pong packed
+//! activation buffers, and the FC flatten row all live in a per-worker
+//! [`Scratch`] arena that the coordinator reuses across requests
+//! ([`Engine::infer_into`] performs zero heap allocations once the arena
+//! is warm; see the capacity regression test in
+//! `rust/tests/engine_integration.rs`).
+//!
+//! Malformed models (packed rows whose word stride disagrees with their
+//! bit width, pooling at an odd resolution, mis-sized parameter vectors)
+//! are rejected with a typed [`ModelError`] at [`Engine::new`] time
+//! instead of producing silent misnumerics at request time.
+
+use std::fmt;
 
 use anyhow::{bail, Result};
 
 use crate::bcnn::tensor::{Activation, BitFmap};
 use crate::model::{BcnnModel, LayerWeights};
-use crate::util::bits::{copy_bits, words_for, xor_popcount};
+use crate::util::bits::{read_bits_u64, words_for, xor_popcount, xor_popcount_lanes};
 
 /// Output of one layer.
 #[derive(Debug, Clone, PartialEq)]
@@ -26,65 +54,124 @@ pub enum LayerOutput {
     Scores(Vec<f32>),
 }
 
-/// Reusable scratch buffers (one per worker thread).
-#[derive(Debug, Default, Clone)]
-pub struct Scratch {
-    patch: Vec<u64>,
-    int_patch: Vec<i32>,
-    mismatch: Vec<u64>,
+/// Model-validation failure detected at [`Engine::new`] time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ModelError {
+    /// A packed weight row's word stride disagrees with its bit width
+    /// (`words_per_row != words_for(row_bits)`), which would make every
+    /// row slice read the wrong filter.
+    WeightRowWidth { layer: usize, got: usize, want: usize },
+    /// A weight/threshold/scale/bias vector's length disagrees with the
+    /// layer shape.
+    VectorLen { layer: usize, what: &'static str, got: usize, want: usize },
+    /// A 2x2/2 max-pool would run at an odd resolution and silently drop
+    /// the last row/column of the feature map.
+    OddPoolInput { layer: usize, hw: usize },
 }
 
-/// Packed-u64 inference engine over a loaded model.
+impl fmt::Display for ModelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ModelError::WeightRowWidth { layer, got, want } => write!(
+                f,
+                "layer {layer}: packed weight rows span {got} words but the row width needs {want}"
+            ),
+            ModelError::VectorLen { layer, what, got, want } => {
+                write!(f, "layer {layer}: {what} has {got} elements, expected {want}")
+            }
+            ModelError::OddPoolInput { layer, hw } => write!(
+                f,
+                "layer {layer}: 2x2/2 max-pool at odd resolution {hw}x{hw} \
+                 would drop the last row/column"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
+
+/// Reusable per-worker scratch arena.  Everything the per-image path
+/// touches lives here: after one warm-up image every buffer has reached
+/// the network's maximum size and later images perform zero heap
+/// allocations (asserted by [`Scratch::capacity_bytes`] in the
+/// regression tests).
+#[derive(Debug, Default, Clone)]
+pub struct Scratch {
+    /// Integer conv accumulator plane (already pooled for pooling layers).
+    acc: Vec<i32>,
+    /// Per-pixel mismatch accumulators, one lane per output channel.
+    mismatch: Vec<u64>,
+    /// Per-pixel integer accumulators for the first (eq. 7) layer.
+    pix: Vec<i32>,
+    /// Ping-pong packed activation planes reused across layers and images.
+    bits_in: BitFmap,
+    bits_out: BitFmap,
+    /// Packed FC input row (flatten target).
+    fc_row: Vec<u64>,
+}
+
+impl Scratch {
+    /// Total heap capacity currently owned by the arena, in bytes.  The
+    /// zero-allocation regression test asserts this stops growing after
+    /// one warm-up image.
+    pub fn capacity_bytes(&self) -> usize {
+        self.acc.capacity() * std::mem::size_of::<i32>()
+            + self.pix.capacity() * std::mem::size_of::<i32>()
+            + self.mismatch.capacity() * std::mem::size_of::<u64>()
+            + self.fc_row.capacity() * std::mem::size_of::<u64>()
+            + self.bits_in.data.capacity() * std::mem::size_of::<u64>()
+            + self.bits_out.data.capacity() * std::mem::size_of::<u64>()
+    }
+}
+
+/// Tap-major prepared form of one BinConv layer's weights.
+#[derive(Debug, Clone)]
+struct PreparedBin {
+    /// `[tap][word][out_c]` transposed weights: entry
+    /// `(t * chan_words + w) * out_c + n` holds bits
+    /// `[t*in_c + 64w, t*in_c + 64w + 64)` of filter `n`'s packed row —
+    /// i.e. tap `t`'s channel block, re-aligned to word boundaries so it
+    /// XORs directly against the input pixel's own packed words.
+    tap_weights: Vec<u64>,
+    /// `[tap][out_c]` popcount of each tap's weight bits: the mismatch
+    /// contribution of an out-of-bounds tap (zero activation bits = all
+    /// -1 padding, paper border semantics).
+    tap_pop: Vec<u32>,
+    /// `words_for(in_c)` — packed words per input pixel.
+    chan_words: usize,
+}
+
+/// Packed-u64 inference engine over a loaded (and validated) model.
 #[derive(Debug, Clone)]
 pub struct Engine {
     model: BcnnModel,
-    /// PERF (EXPERIMENTS.md §Perf iter 2): first-layer weights transposed
-    /// to `[k][out_c]` and widened to i32 at load time, so the per-tap
-    /// filter loop is a unit-stride vectorizable MAC over out_c lanes.
+    /// First-layer weights transposed to `[k][out_c]` and widened to i32
+    /// at load time, so the per-tap filter loop is a unit-stride
+    /// vectorizable MAC over out_c lanes (PERF iter 2).
     fp_weights_t: Vec<Vec<i32>>,
-    /// PERF (EXPERIMENTS.md §Perf iter 4): binary conv weights transposed
-    /// to `[word][out_c]` so the XNOR dot products of all filters
-    /// accumulate *vertically* (one vpopcntq lane per filter) instead of
-    /// horizontally reducing per filter.
-    bin_weights_t: Vec<Vec<u64>>,
+    /// Tap-major transposed banks for every BinConv layer (PERF iter 6;
+    /// superseded the whole-row `[word][out_c]` transpose of iter 4).
+    bin_prepared: Vec<Option<PreparedBin>>,
 }
 
 impl Engine {
-    pub fn new(model: BcnnModel) -> Self {
-        let fp_weights_t = model
-            .layers
-            .iter()
-            .map(|layer| match layer {
-                LayerWeights::FpConv { in_c, out_c, weights, .. } => {
-                    let k = 9 * in_c;
-                    let mut t = vec![0i32; k * out_c];
-                    for n in 0..*out_c {
-                        for kk in 0..k {
-                            t[kk * out_c + n] = weights[n * k + kk] as i32;
-                        }
+    /// Validate `model` and prepare the transposed weight banks.
+    pub fn new(model: BcnnModel) -> std::result::Result<Self, ModelError> {
+        let mut hw = model.input_hw;
+        for (i, layer) in model.layers.iter().enumerate() {
+            validate_layer(i, layer)?;
+            if let LayerWeights::FpConv { pool, .. } | LayerWeights::BinConv { pool, .. } = layer {
+                if *pool {
+                    if hw % 2 != 0 {
+                        return Err(ModelError::OddPoolInput { layer: i, hw });
                     }
-                    t
+                    hw /= 2;
                 }
-                _ => Vec::new(),
-            })
-            .collect();
-        let bin_weights_t = model
-            .layers
-            .iter()
-            .map(|layer| match layer {
-                LayerWeights::BinConv { out_c, weights, words_per_row, .. } => {
-                    let mut t = vec![0u64; weights.len()];
-                    for n in 0..*out_c {
-                        for w in 0..*words_per_row {
-                            t[w * out_c + n] = weights[n * words_per_row + w];
-                        }
-                    }
-                    t
-                }
-                _ => Vec::new(),
-            })
-            .collect();
-        Self { model, fp_weights_t, bin_weights_t }
+            }
+        }
+        let fp_weights_t = model.layers.iter().map(prepare_fp).collect();
+        let bin_prepared = model.layers.iter().map(prepare_bin).collect();
+        Ok(Self { model, fp_weights_t, bin_prepared })
     }
 
     pub fn model(&self) -> &BcnnModel {
@@ -97,22 +184,73 @@ impl Engine {
         self.infer_with_scratch(image, &mut Scratch::default())
     }
 
-    /// Allocation-reusing variant for the serving hot path.
+    /// Allocation-reusing variant for the serving hot path (allocates only
+    /// the returned score vector; see [`Engine::infer_into`]).
     pub fn infer_with_scratch(&self, image: &[i32], scratch: &mut Scratch) -> Result<Vec<f32>> {
+        let mut scores = Vec::with_capacity(self.model.classes);
+        self.infer_into(image, scratch, &mut scores)?;
+        Ok(scores)
+    }
+
+    /// Fully allocation-free inference: the class scores land in `scores`
+    /// (cleared first) and every intermediate lives in `scratch`.  After
+    /// one warm-up image neither buffer grows again.
+    pub fn infer_into(
+        &self,
+        image: &[i32],
+        scratch: &mut Scratch,
+        scores: &mut Vec<f32>,
+    ) -> Result<()> {
         let hw = self.model.input_hw;
         let c = self.model.input_channels;
         if image.len() != hw * hw * c {
             bail!("image size {} != {}", image.len(), hw * hw * c);
         }
-        let mut act = Activation::Int { hw, c, data: image.to_vec() };
-        for i in 0..self.model.layers.len() {
-            match self.run_layer_at(i, &act, scratch)? {
-                LayerOutput::Act(next) => act = next,
-                LayerOutput::Scores(s) => {
-                    if i + 1 != self.model.layers.len() {
+        scores.clear();
+        let n_layers = self.model.layers.len();
+        let Scratch { acc, mismatch, pix, bits_in, bits_out, fc_row } = scratch;
+        // parity of the ping-pong swaps this image has performed; restored
+        // on exit so every image resets the same physical buffer sequence
+        // (otherwise an odd number of activation layers alternates the
+        // buffer roles between images and capacities keep flip-flopping —
+        // the arena would only freeze after the *second* image)
+        let mut flipped = false;
+        for i in 0..n_layers {
+            let layer = &self.model.layers[i];
+            // the first layer reads the caller's image in place; later
+            // layers read the ping (bits_in) and write the pong (bits_out)
+            let input = if i == 0 {
+                ActRef::Int { hw, c, data: image }
+            } else {
+                ActRef::Bits(&*bits_in)
+            };
+            let out = step_layer(
+                layer,
+                self.fp_weights_t[i].as_slice(),
+                self.bin_prepared[i].as_ref(),
+                input,
+                StepBufs {
+                    acc: &mut *acc,
+                    mism: &mut *mismatch,
+                    pix: &mut *pix,
+                    bits_out: &mut *bits_out,
+                    fc_row: &mut *fc_row,
+                },
+                scores,
+            )?;
+            match out {
+                StepOut::Act => {
+                    std::mem::swap(&mut *bits_in, &mut *bits_out);
+                    flipped = !flipped;
+                }
+                StepOut::Scores => {
+                    if i + 1 != n_layers {
                         bail!("classifier layer {i} is not last");
                     }
-                    return Ok(s);
+                    if flipped {
+                        std::mem::swap(&mut *bits_in, &mut *bits_out);
+                    }
+                    return Ok(());
                 }
             }
         }
@@ -131,9 +269,11 @@ impl Engine {
     }
 
     /// Run the model's layer `index` — the layer-by-index API used by the
-    /// inference loop, the FPGA phase simulator, and the per-layer benches.
-    /// The transposed-weight fast paths are selected by index (no pointer
-    /// identity games), so they engage for every caller.
+    /// FPGA phase simulator and the per-layer benches.  The prepared
+    /// tap-major banks are selected by index, so they engage for every
+    /// caller.  Outputs are owned clones of the scratch planes (this path
+    /// trades the extra copy for the channel-friendly owned API; the
+    /// zero-alloc pipeline is [`Engine::infer_into`]).
     pub fn run_layer_at(
         &self,
         index: usize,
@@ -143,99 +283,260 @@ impl Engine {
         let Some(layer) = self.model.layers.get(index) else {
             bail!("layer index {index} out of range ({} layers)", self.model.layers.len());
         };
-        let fp_t = self.fp_weights_t[index].as_slice();
-        let bin_t = self.bin_weights_t[index].as_slice();
-        self.run_layer_impl(
+        run_prepared_layer(
             layer,
-            (!fp_t.is_empty()).then_some(fp_t),
-            (!bin_t.is_empty()).then_some(bin_t),
+            self.fp_weights_t[index].as_slice(),
+            self.bin_prepared[index].as_ref(),
             input,
             scratch,
         )
     }
 
-    /// Run an arbitrary layer value through the portable (untransposed)
-    /// path.  Prefer [`Engine::run_layer_at`] for the model's own layers —
-    /// it engages the prepared-weight fast paths.
+    /// Run an arbitrary layer value: validates it, prepares its tap-major
+    /// bank on the fly (allocates — fine off the hot path) and runs the
+    /// same kernels as [`Engine::run_layer_at`].
     pub fn run_layer(&self, layer: &LayerWeights, input: &Activation) -> Result<LayerOutput> {
-        self.run_layer_impl(layer, None, None, input, &mut Scratch::default())
+        // the layer value has no index of its own; relabel the validation
+        // error so it doesn't masquerade as the model's layer 0
+        if let Err(e) = validate_layer(0, layer) {
+            bail!("invalid ad-hoc layer value: {e}");
+        }
+        let fp_t = prepare_fp(layer);
+        let bin = prepare_bin(layer);
+        run_prepared_layer(layer, &fp_t, bin.as_ref(), input, &mut Scratch::default())
     }
+}
 
-    fn run_layer_impl(
-        &self,
-        layer: &LayerWeights,
-        fp_transposed: Option<&[i32]>,
-        bin_transposed: Option<&[u64]>,
-        input: &Activation,
-        scratch: &mut Scratch,
-    ) -> Result<LayerOutput> {
-        match layer {
-            LayerWeights::FpConv { in_c, out_c, pool, weights, thresholds } => {
-                let Activation::Int { hw, c, data } = input else {
-                    bail!("FpConv expects integer input");
-                };
-                if c != in_c {
-                    bail!("FpConv channel mismatch: {c} != {in_c}");
-                }
-                let y = match fp_transposed {
-                    Some(wt) => fp_conv3x3_transposed(data, *hw, *in_c, *out_c, wt, scratch),
-                    None => fp_conv3x3(data, *hw, *in_c, *out_c, weights, scratch),
-                };
-                let (y, out_hw) = maybe_pool(y, *hw, *out_c, *pool);
-                Ok(LayerOutput::Act(Activation::Bits(threshold_plane(
-                    &y, out_hw, *out_c, thresholds,
-                ))))
+// ---------------------------------------------------------------------------
+// validation & weight preparation
+
+fn validate_layer(index: usize, layer: &LayerWeights) -> std::result::Result<(), ModelError> {
+    let len_err = |what: &'static str, got: usize, want: usize| ModelError::VectorLen {
+        layer: index,
+        what,
+        got,
+        want,
+    };
+    match layer {
+        LayerWeights::FpConv { in_c, out_c, weights, thresholds, .. } => {
+            let k = 9 * *in_c;
+            if weights.len() != *out_c * k {
+                return Err(len_err("weights", weights.len(), *out_c * k));
             }
-            LayerWeights::BinConv { in_c, out_c, pool, words_per_row, thresholds, .. } => {
-                let Activation::Bits(fmap) = input else {
-                    bail!("BinConv expects binary input");
-                };
-                if fmap.c != *in_c {
-                    bail!("BinConv channel mismatch: {} != {in_c}", fmap.c);
-                }
-                let transposed = bin_transposed;
-                // (PERF iter 5, REVERTED: fusing NormBinarize into the
-                // conv loop for non-pooling layers measured -3% — the
-                // accumulator plane is L2-resident, so skipping it bought
-                // nothing.  See EXPERIMENTS.md §Perf.)
-                let y = match transposed {
-                    Some(wt) => bin_conv3x3_transposed(
-                        fmap,
-                        wt,
-                        *in_c,
-                        *out_c,
-                        *words_per_row,
-                        scratch,
-                    ),
-                    None => bin_conv3x3(fmap, layer, *in_c, *out_c, *words_per_row, scratch),
-                };
-                let (y, out_hw) = maybe_pool(y, fmap.hw, *out_c, *pool);
-                Ok(LayerOutput::Act(Activation::Bits(threshold_plane(
-                    &y, out_hw, *out_c, thresholds,
-                ))))
+            if thresholds.len() != *out_c {
+                return Err(len_err("thresholds", thresholds.len(), *out_c));
             }
-            LayerWeights::BinFc { in_f, out_f, words_per_row, thresholds, .. } => {
-                let row = flatten_input(input, *in_f)?;
-                let mut bits = BitFmap::zeros(1, *out_f);
-                for n in 0..*out_f {
-                    let w = layer_weight_row(layer, n, *words_per_row);
-                    let matches = *in_f as i32 - xor_popcount(&row, w) as i32;
-                    bits.set(0, 0, n, matches >= thresholds[n]);
-                }
-                Ok(LayerOutput::Act(Activation::Bits(bits)))
+        }
+        LayerWeights::BinConv { in_c, out_c, weights, words_per_row, thresholds, .. } => {
+            let want = words_for(9 * *in_c);
+            if *words_per_row != want {
+                return Err(ModelError::WeightRowWidth { layer: index, got: *words_per_row, want });
             }
-            LayerWeights::BinFcOut { in_f, out_f, words_per_row, scale, bias, .. } => {
-                let row = flatten_input(input, *in_f)?;
-                let mut scores = Vec::with_capacity(*out_f);
-                for n in 0..*out_f {
-                    let w = layer_weight_row(layer, n, *words_per_row);
-                    let matches = *in_f as i32 - xor_popcount(&row, w) as i32;
-                    scores.push(matches as f32 * scale[n] + bias[n]);
-                }
-                Ok(LayerOutput::Scores(scores))
+            if weights.len() != *out_c * *words_per_row {
+                return Err(len_err("weights", weights.len(), *out_c * *words_per_row));
+            }
+            if thresholds.len() != *out_c {
+                return Err(len_err("thresholds", thresholds.len(), *out_c));
+            }
+        }
+        LayerWeights::BinFc { in_f, out_f, weights, words_per_row, thresholds } => {
+            let want = words_for(*in_f);
+            if *words_per_row != want {
+                return Err(ModelError::WeightRowWidth { layer: index, got: *words_per_row, want });
+            }
+            if weights.len() != *out_f * *words_per_row {
+                return Err(len_err("weights", weights.len(), *out_f * *words_per_row));
+            }
+            if thresholds.len() != *out_f {
+                return Err(len_err("thresholds", thresholds.len(), *out_f));
+            }
+        }
+        LayerWeights::BinFcOut { in_f, out_f, weights, words_per_row, scale, bias } => {
+            let want = words_for(*in_f);
+            if *words_per_row != want {
+                return Err(ModelError::WeightRowWidth { layer: index, got: *words_per_row, want });
+            }
+            if weights.len() != *out_f * *words_per_row {
+                return Err(len_err("weights", weights.len(), *out_f * *words_per_row));
+            }
+            if scale.len() != *out_f {
+                return Err(len_err("scale", scale.len(), *out_f));
+            }
+            if bias.len() != *out_f {
+                return Err(len_err("bias", bias.len(), *out_f));
             }
         }
     }
+    Ok(())
+}
+
+/// `[k][out_c]` transposed i32 first-layer weights (empty for other kinds).
+fn prepare_fp(layer: &LayerWeights) -> Vec<i32> {
+    match layer {
+        LayerWeights::FpConv { in_c, out_c, weights, .. } => {
+            let k = 9 * *in_c;
+            let mut t = vec![0i32; k * *out_c];
+            for n in 0..*out_c {
+                for kk in 0..k {
+                    t[kk * *out_c + n] = weights[n * k + kk] as i32;
+                }
+            }
+            t
+        }
+        _ => Vec::new(),
+    }
+}
+
+/// Tap-major bank for a BinConv layer (None for other kinds).  Assumes the
+/// layer already passed [`validate_layer`].
+fn prepare_bin(layer: &LayerWeights) -> Option<PreparedBin> {
+    let LayerWeights::BinConv { in_c, out_c, weights, words_per_row, .. } = layer else {
+        return None;
+    };
+    let (in_c, out_c, words_per_row) = (*in_c, *out_c, *words_per_row);
+    let cw = words_for(in_c);
+    let mut tap_weights = vec![0u64; 9 * cw * out_c];
+    let mut tap_pop = vec![0u32; 9 * out_c];
+    for n in 0..out_c {
+        let row = &weights[n * words_per_row..(n + 1) * words_per_row];
+        for t in 0..9 {
+            let mut pop = 0u32;
+            for w in 0..cw {
+                let lo = w * 64;
+                let nbits = (in_c - lo).min(64);
+                // re-align tap t's channel block [t*in_c, (t+1)*in_c) of
+                // the packed row to word boundaries
+                let bits = read_bits_u64(row, t * in_c + lo, nbits);
+                tap_weights[(t * cw + w) * out_c + n] = bits;
+                pop += bits.count_ones();
+            }
+            tap_pop[t * out_c + n] = pop;
+        }
+    }
+    Some(PreparedBin { tap_weights, tap_pop, chan_words: cw })
+}
+
+// ---------------------------------------------------------------------------
+// the layer step (shared by the zero-alloc pipeline and the owned API)
+
+/// Borrowed activation view — the zero-alloc pipeline never owns planes.
+enum ActRef<'a> {
+    Int { hw: usize, c: usize, data: &'a [i32] },
+    Bits(&'a BitFmap),
+}
+
+enum StepOut {
+    Act,
+    Scores,
+}
+
+/// Disjoint mutable views into the [`Scratch`] arena for one layer step.
+struct StepBufs<'a> {
+    acc: &'a mut Vec<i32>,
+    mism: &'a mut Vec<u64>,
+    pix: &'a mut Vec<i32>,
+    bits_out: &'a mut BitFmap,
+    fc_row: &'a mut Vec<u64>,
+}
+
+fn step_layer(
+    layer: &LayerWeights,
+    fp_t: &[i32],
+    bin: Option<&PreparedBin>,
+    input: ActRef<'_>,
+    bufs: StepBufs<'_>,
+    scores: &mut Vec<f32>,
+) -> Result<StepOut> {
+    let StepBufs { acc, mism, pix, bits_out, fc_row } = bufs;
+    match layer {
+        LayerWeights::FpConv { in_c, out_c, pool, thresholds, .. } => {
+            let ActRef::Int { hw, c, data } = input else {
+                bail!("FpConv expects integer input");
+            };
+            if c != *in_c {
+                bail!("FpConv channel mismatch: {c} != {in_c}");
+            }
+            if *pool && hw % 2 != 0 {
+                bail!("2x2/2 max-pool at odd resolution {hw}");
+            }
+            let out_hw = fp_conv3x3_tap_major(data, hw, *in_c, *out_c, fp_t, *pool, acc, pix);
+            threshold_into(acc, out_hw, *out_c, thresholds, bits_out);
+            Ok(StepOut::Act)
+        }
+        LayerWeights::BinConv { in_c, out_c, pool, thresholds, .. } => {
+            let ActRef::Bits(fmap) = input else {
+                bail!("BinConv expects binary input");
+            };
+            if fmap.c != *in_c {
+                bail!("BinConv channel mismatch: {} != {in_c}", fmap.c);
+            }
+            if *pool && fmap.hw % 2 != 0 {
+                bail!("2x2/2 max-pool at odd resolution {}", fmap.hw);
+            }
+            let Some(prep) = bin else {
+                bail!("BinConv layer without a prepared tap-major bank");
+            };
+            let out_hw = bin_conv3x3_tap_major(fmap, prep, *in_c, *out_c, *pool, acc, mism);
+            threshold_into(acc, out_hw, *out_c, thresholds, bits_out);
+            Ok(StepOut::Act)
+        }
+        LayerWeights::BinFc { in_f, out_f, words_per_row, thresholds, .. } => {
+            flatten_act(&input, *in_f, fc_row)?;
+            bits_out.reset(1, *out_f);
+            for n in 0..*out_f {
+                let w = layer_weight_row(layer, n, *words_per_row);
+                let matches = *in_f as i32 - xor_popcount(&fc_row[..], w) as i32;
+                if matches >= thresholds[n] {
+                    bits_out.set(0, 0, n, true);
+                }
+            }
+            Ok(StepOut::Act)
+        }
+        LayerWeights::BinFcOut { in_f, out_f, words_per_row, scale, bias, .. } => {
+            flatten_act(&input, *in_f, fc_row)?;
+            scores.clear();
+            for n in 0..*out_f {
+                let w = layer_weight_row(layer, n, *words_per_row);
+                let matches = *in_f as i32 - xor_popcount(&fc_row[..], w) as i32;
+                scores.push(matches as f32 * scale[n] + bias[n]);
+            }
+            Ok(StepOut::Scores)
+        }
+    }
+}
+
+/// Owned-output wrapper around [`step_layer`] for the layer-at-a-time API.
+fn run_prepared_layer(
+    layer: &LayerWeights,
+    fp_t: &[i32],
+    bin: Option<&PreparedBin>,
+    input: &Activation,
+    scratch: &mut Scratch,
+) -> Result<LayerOutput> {
+    let input_ref = match input {
+        Activation::Int { hw, c, data } => ActRef::Int { hw: *hw, c: *c, data },
+        Activation::Bits(f) => ActRef::Bits(f),
+    };
+    let mut scores = Vec::new();
+    let Scratch { acc, mismatch, pix, bits_out, fc_row, .. } = scratch;
+    let out = step_layer(
+        layer,
+        fp_t,
+        bin,
+        input_ref,
+        StepBufs {
+            acc: &mut *acc,
+            mism: &mut *mismatch,
+            pix: &mut *pix,
+            bits_out: &mut *bits_out,
+            fc_row: &mut *fc_row,
+        },
+        &mut scores,
+    )?;
+    Ok(match out {
+        StepOut::Act => LayerOutput::Act(Activation::Bits(bits_out.clone())),
+        StepOut::Scores => LayerOutput::Scores(scores),
+    })
 }
 
 fn layer_weight_row<'a>(layer: &'a LayerWeights, n: usize, words_per_row: usize) -> &'a [u64] {
@@ -249,73 +550,52 @@ fn layer_weight_row<'a>(layer: &'a LayerWeights, n: usize, words_per_row: usize)
     }
 }
 
-/// First-layer integer conv (eq. 7): 3x3, stride 1, true zero padding.
-fn fp_conv3x3(
-    data: &[i32],
-    hw: usize,
-    in_c: usize,
-    out_c: usize,
-    weights: &[i8],
-    scratch: &mut Scratch,
-) -> Vec<i32> {
-    let k = 9 * in_c;
-    scratch.int_patch.resize(k, 0);
-    let mut out = vec![0i32; hw * hw * out_c];
-    for y in 0..hw {
-        for x in 0..hw {
-            let patch = &mut scratch.int_patch;
-            patch.iter_mut().for_each(|v| *v = 0);
-            for kh in 0..3usize {
-                let sy = y as isize + kh as isize - 1;
-                if sy < 0 || sy >= hw as isize {
-                    continue;
-                }
-                for kw in 0..3usize {
-                    let sx = x as isize + kw as isize - 1;
-                    if sx < 0 || sx >= hw as isize {
-                        continue;
-                    }
-                    let src = (sy as usize * hw + sx as usize) * in_c;
-                    let dst = (kh * 3 + kw) * in_c;
-                    patch[dst..dst + in_c].copy_from_slice(&data[src..src + in_c]);
-                }
+/// Flatten a binary activation into the packed FC input row of `in_f` bits.
+fn flatten_act(input: &ActRef<'_>, in_f: usize, out: &mut Vec<u64>) -> Result<()> {
+    match input {
+        ActRef::Bits(fmap) => {
+            let total = fmap.hw * fmap.hw * fmap.c;
+            if total != in_f {
+                bail!("FC input features {total} != {in_f}");
             }
-            let base = (y * hw + x) * out_c;
-            for n in 0..out_c {
-                let w = &weights[n * k..(n + 1) * k];
-                let mut acc = 0i32;
-                for (p, wv) in patch.iter().zip(w.iter()) {
-                    acc += p * (*wv as i32);
-                }
-                out[base + n] = acc;
-            }
+            fmap.flatten_into(out);
+            Ok(())
         }
+        ActRef::Int { .. } => bail!("FC layer expects binary input"),
     }
-    out
 }
 
-/// First-layer integer conv with `[k][out_c]` transposed ±1 weights: for
-/// each patch tap, a unit-stride MAC across all filters (vectorizes to
-/// i32 lanes; PERF iter 2).
-fn fp_conv3x3_transposed(
+// ---------------------------------------------------------------------------
+// conv kernels
+
+/// First-layer integer conv (eq. 7): 3x3, stride 1, true zero padding,
+/// tap-major over the `[k][out_c]` transposed ±1 weights — each tap's
+/// channel values MAC straight out of the input plane (no patch copy)
+/// across all filters at unit stride.  `pool` fuses the 2x2/2 max into
+/// the output write.  Returns the output resolution.
+#[allow(clippy::too_many_arguments)]
+fn fp_conv3x3_tap_major(
     data: &[i32],
     hw: usize,
     in_c: usize,
     out_c: usize,
     weights_t: &[i32],
-    scratch: &mut Scratch,
-) -> Vec<i32> {
-    let k = 9 * in_c;
-    scratch.int_patch.resize(k, 0);
-    let mut out = vec![0i32; hw * hw * out_c];
+    pool: bool,
+    acc: &mut Vec<i32>,
+    pix: &mut Vec<i32>,
+) -> usize {
+    let out_hw = if pool { hw / 2 } else { hw };
+    acc.clear();
+    acc.resize(out_hw * out_hw * out_c, if pool { i32::MIN } else { 0 });
+    pix.clear();
+    pix.resize(out_c, 0);
     for y in 0..hw {
         for x in 0..hw {
-            let patch = &mut scratch.int_patch;
-            patch.iter_mut().for_each(|v| *v = 0);
+            pix.fill(0);
             for kh in 0..3usize {
                 let sy = y as isize + kh as isize - 1;
                 if sy < 0 || sy >= hw as isize {
-                    continue;
+                    continue; // true zero padding: clipped taps add nothing
                 }
                 for kw in 0..3usize {
                     let sx = x as isize + kw as isize - 1;
@@ -323,163 +603,198 @@ fn fp_conv3x3_transposed(
                         continue;
                     }
                     let src = (sy as usize * hw + sx as usize) * in_c;
-                    let dst = (kh * 3 + kw) * in_c;
-                    patch[dst..dst + in_c].copy_from_slice(&data[src..src + in_c]);
-                }
-            }
-            let acc = &mut out[(y * hw + x) * out_c..(y * hw + x + 1) * out_c];
-            for (kk, &p) in patch.iter().enumerate() {
-                if p == 0 {
-                    continue; // padded taps contribute nothing
-                }
-                let w_row = &weights_t[kk * out_c..(kk + 1) * out_c];
-                for (a, &w) in acc.iter_mut().zip(w_row) {
-                    *a += p * w;
-                }
-            }
-        }
-    }
-    out
-}
-
-/// Hidden binary conv: packed patch gather + XNOR dot product.
-fn bin_conv3x3(
-    fmap: &BitFmap,
-    layer: &LayerWeights,
-    in_c: usize,
-    out_c: usize,
-    words_per_row: usize,
-    scratch: &mut Scratch,
-) -> Vec<i32> {
-    let hw = fmap.hw;
-    let k = 9 * in_c;
-    let cnum = k as i32;
-    let patch_words = words_for(k);
-    scratch.patch.resize(patch_words, 0);
-    let mut out = vec![0i32; hw * hw * out_c];
-    for y in 0..hw {
-        for x in 0..hw {
-            let patch = &mut scratch.patch;
-            patch.iter_mut().for_each(|v| *v = 0);
-            for kh in 0..3usize {
-                let sy = y as isize + kh as isize - 1;
-                if sy < 0 || sy >= hw as isize {
-                    continue; // zero bits = -1 activations (paper padding)
-                }
-                for kw in 0..3usize {
-                    let sx = x as isize + kw as isize - 1;
-                    if sx < 0 || sx >= hw as isize {
-                        continue;
-                    }
-                    let src = fmap.pixel(sy as usize, sx as usize);
-                    copy_bits(patch, (kh * 3 + kw) * in_c, src, 0, in_c);
-                }
-            }
-            let base = (y * hw + x) * out_c;
-            for n in 0..out_c {
-                let w = layer_weight_row(layer, n, words_per_row);
-                out[base + n] = cnum - xor_popcount(patch, w) as i32;
-            }
-        }
-    }
-    out
-}
-
-/// Hidden binary conv with `[word][out_c]` transposed weights (PERF iter
-/// 4): for each patch word, XOR it (broadcast) against the same word of
-/// all filters and accumulate popcounts per filter — unit-stride over the
-/// transposed weights, so the whole filter bank advances through AVX512
-/// vpopcntq lanes with no horizontal reductions.
-fn bin_conv3x3_transposed(
-    fmap: &BitFmap,
-    weights_t: &[u64],
-    in_c: usize,
-    out_c: usize,
-    words_per_row: usize,
-    scratch: &mut Scratch,
-) -> Vec<i32> {
-    let hw = fmap.hw;
-    let k = 9 * in_c;
-    let cnum = k as i32;
-    let patch_words = words_for(k);
-    debug_assert!(patch_words <= words_per_row || patch_words == words_per_row);
-    scratch.patch.resize(patch_words, 0);
-    scratch.mismatch.resize(out_c, 0);
-    let mut out = vec![0i32; hw * hw * out_c];
-    for y in 0..hw {
-        for x in 0..hw {
-            let patch = &mut scratch.patch;
-            patch.iter_mut().for_each(|v| *v = 0);
-            for kh in 0..3usize {
-                let sy = y as isize + kh as isize - 1;
-                if sy < 0 || sy >= hw as isize {
-                    continue; // zero bits = -1 activations (paper padding)
-                }
-                for kw in 0..3usize {
-                    let sx = x as isize + kw as isize - 1;
-                    if sx < 0 || sx >= hw as isize {
-                        continue;
-                    }
-                    let src = fmap.pixel(sy as usize, sx as usize);
-                    copy_bits(patch, (kh * 3 + kw) * in_c, src, 0, in_c);
-                }
-            }
-            let mism = &mut scratch.mismatch;
-            mism.iter_mut().for_each(|v| *v = 0);
-            for (w, &p) in patch.iter().enumerate() {
-                let row = &weights_t[w * out_c..(w + 1) * out_c];
-                for (m, &wv) in mism.iter_mut().zip(row) {
-                    *m += (p ^ wv).count_ones() as u64;
-                }
-            }
-            let base = (y * hw + x) * out_c;
-            for (o, &m) in out[base..base + out_c].iter_mut().zip(mism.iter()) {
-                *o = cnum - m as i32;
-            }
-        }
-    }
-    out
-}
-
-/// Max-pool 2x2/2 over an integer plane if `pool`, else pass through.
-fn maybe_pool(y: Vec<i32>, hw: usize, c: usize, pool: bool) -> (Vec<i32>, usize) {
-    if !pool {
-        return (y, hw);
-    }
-    let oh = hw / 2;
-    let mut out = vec![i32::MIN; oh * oh * c];
-    for py in 0..oh {
-        for px in 0..oh {
-            for dy in 0..2 {
-                for dx in 0..2 {
-                    let src = ((py * 2 + dy) * hw + px * 2 + dx) * c;
-                    let dst = (py * oh + px) * c;
-                    for ch in 0..c {
-                        let v = y[src + ch];
-                        if v > out[dst + ch] {
-                            out[dst + ch] = v;
+                    let t = kh * 3 + kw;
+                    for ch in 0..in_c {
+                        let p = data[src + ch];
+                        if p == 0 {
+                            continue; // zero taps contribute nothing
+                        }
+                        let row =
+                            &weights_t[(t * in_c + ch) * out_c..(t * in_c + ch + 1) * out_c];
+                        for (a, &w) in pix.iter_mut().zip(row) {
+                            *a += p * w;
                         }
                     }
                 }
             }
+            store_pixel_i32(acc, pix, pool, out_hw, out_c, y, x);
         }
     }
-    (out, oh)
+    out_hw
 }
 
-/// NormBinarize (eq. 8) over an integer plane.
+/// Hidden binary conv, tap-major and gather-free (see module docs).
+/// Returns the output resolution (`hw/2` when `pool` is fused).
+fn bin_conv3x3_tap_major(
+    fmap: &BitFmap,
+    prep: &PreparedBin,
+    in_c: usize,
+    out_c: usize,
+    pool: bool,
+    acc: &mut Vec<i32>,
+    mism: &mut Vec<u64>,
+) -> usize {
+    let hw = fmap.hw;
+    let cnum = (9 * in_c) as i32;
+    debug_assert_eq!(prep.chan_words, fmap.words_per_pixel);
+    let lane = prep.chan_words * out_c; // words per tap bank
+    let out_hw = if pool { hw / 2 } else { hw };
+    acc.clear();
+    acc.resize(out_hw * out_hw * out_c, if pool { i32::MIN } else { 0 });
+    mism.clear();
+    mism.resize(out_c, 0);
+    let tw = prep.tap_weights.as_slice();
+    for y in 0..hw {
+        if hw < 3 || y == 0 || y + 1 == hw {
+            for x in 0..hw {
+                border_pixel(fmap, prep, out_c, y, x, mism);
+                store_pixel(acc, mism, cnum, pool, out_hw, out_c, y, x);
+            }
+            continue;
+        }
+        // interior row: only x = 0 and x = hw-1 need border handling
+        border_pixel(fmap, prep, out_c, y, 0, mism);
+        store_pixel(acc, mism, cnum, pool, out_hw, out_c, y, 0);
+        for x in 1..hw - 1 {
+            interior_pixel(fmap, tw, lane, out_c, y, x, mism);
+            store_pixel(acc, mism, cnum, pool, out_hw, out_c, y, x);
+        }
+        border_pixel(fmap, prep, out_c, y, hw - 1, mism);
+        store_pixel(acc, mism, cnum, pool, out_hw, out_c, y, hw - 1);
+    }
+    out_hw
+}
+
+/// One tap: XOR the pixel's packed channel words against the tap's bank
+/// slice, accumulating mismatches per filter lane.
+#[inline(always)]
+fn accumulate_tap(src: &[u64], tap_bank: &[u64], out_c: usize, mism: &mut [u64]) {
+    for (w, &p) in src.iter().enumerate() {
+        xor_popcount_lanes(p, &tap_bank[w * out_c..(w + 1) * out_c], mism);
+    }
+}
+
+/// All 9 taps in bounds: constant-trip, branch-free tap loop.
+#[inline(always)]
+fn interior_pixel(
+    fmap: &BitFmap,
+    tw: &[u64],
+    lane: usize,
+    out_c: usize,
+    y: usize,
+    x: usize,
+    mism: &mut [u64],
+) {
+    mism.fill(0);
+    for t in 0..9usize {
+        // caller guarantees 1 <= y, x <= hw-2, so no bounds checks
+        let src = fmap.pixel(y + t / 3 - 1, x + t % 3 - 1);
+        accumulate_tap(src, &tw[t * lane..(t + 1) * lane], out_c, mism);
+    }
+}
+
+/// Border pixel: clipped taps contribute their precomputed weight
+/// popcount (zero activation bits = all -1 padding, paper semantics).
+#[inline(always)]
+fn border_pixel(
+    fmap: &BitFmap,
+    prep: &PreparedBin,
+    out_c: usize,
+    y: usize,
+    x: usize,
+    mism: &mut [u64],
+) {
+    let hw = fmap.hw as isize;
+    let lane = prep.chan_words * out_c;
+    mism.fill(0);
+    for t in 0..9usize {
+        let sy = y as isize + (t / 3) as isize - 1;
+        let sx = x as isize + (t % 3) as isize - 1;
+        if sy < 0 || sy >= hw || sx < 0 || sx >= hw {
+            for (m, &p) in mism.iter_mut().zip(&prep.tap_pop[t * out_c..(t + 1) * out_c]) {
+                *m += p as u64;
+            }
+        } else {
+            accumulate_tap(
+                fmap.pixel(sy as usize, sx as usize),
+                &prep.tap_weights[t * lane..(t + 1) * lane],
+                out_c,
+                mism,
+            );
+        }
+    }
+}
+
+/// Write one output pixel's match counts (`cnum - mismatches`) into the
+/// accumulator plane; for pooling layers the 2x2/2 max is fused here, so
+/// the plane is already at the pooled resolution.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn store_pixel(
+    acc: &mut [i32],
+    mism: &[u64],
+    cnum: i32,
+    pool: bool,
+    out_hw: usize,
+    out_c: usize,
+    y: usize,
+    x: usize,
+) {
+    if pool {
+        let dst = ((y / 2) * out_hw + x / 2) * out_c;
+        for (a, &m) in acc[dst..dst + out_c].iter_mut().zip(mism) {
+            let v = cnum - m as i32;
+            if v > *a {
+                *a = v;
+            }
+        }
+    } else {
+        let dst = (y * out_hw + x) * out_c;
+        for (a, &m) in acc[dst..dst + out_c].iter_mut().zip(mism) {
+            *a = cnum - m as i32;
+        }
+    }
+}
+
+/// Integer-plane variant of [`store_pixel`] for the first layer.
+#[inline(always)]
+fn store_pixel_i32(
+    acc: &mut [i32],
+    vals: &[i32],
+    pool: bool,
+    out_hw: usize,
+    out_c: usize,
+    y: usize,
+    x: usize,
+) {
+    if pool {
+        let dst = ((y / 2) * out_hw + x / 2) * out_c;
+        for (a, &v) in acc[dst..dst + out_c].iter_mut().zip(vals) {
+            if v > *a {
+                *a = v;
+            }
+        }
+    } else {
+        let dst = (y * out_hw + x) * out_c;
+        acc[dst..dst + out_c].copy_from_slice(vals);
+    }
+}
+
+/// NormBinarize (eq. 8) over an integer plane, into a reused [`BitFmap`].
 ///
 /// PERF (EXPERIMENTS.md §Perf iter 3): builds each packed word from a
 /// 64-wide chunk of compares instead of per-bit read-modify-writes — the
 /// chunked compare loop lowers to AVX512 mask ops (vpcmpd/kmov) and this
 /// function fell from ~60% of layer-1 time to noise.
-fn threshold_plane(y: &[i32], hw: usize, c: usize, thresholds: &[i32]) -> BitFmap {
-    let mut bits = BitFmap::zeros(hw, c);
-    let wpp = bits.words_per_pixel;
-    for pix in 0..hw * hw {
-        let row = &y[pix * c..(pix + 1) * c];
-        let out = &mut bits.data[pix * wpp..(pix + 1) * wpp];
-        for (w, word_out) in out.iter_mut().enumerate() {
+fn threshold_into(y: &[i32], hw: usize, c: usize, thresholds: &[i32], out: &mut BitFmap) {
+    // every word (pad bits included) is written in full below, so the
+    // reshape skips the redundant zero-fill
+    out.reshape_for_overwrite(hw, c);
+    let wpp = out.words_per_pixel;
+    for p in 0..hw * hw {
+        let row = &y[p * c..(p + 1) * c];
+        let words = &mut out.data[p * wpp..(p + 1) * wpp];
+        for (w, word_out) in words.iter_mut().enumerate() {
             let lo = w * 64;
             let n = (c - lo).min(64);
             let mut word = 0u64;
@@ -492,20 +807,5 @@ fn threshold_plane(y: &[i32], hw: usize, c: usize, thresholds: &[i32]) -> BitFma
             }
             *word_out = word;
         }
-    }
-    bits
-}
-
-/// Flatten any activation into a packed FC input row of `in_f` bits.
-fn flatten_input(input: &Activation, in_f: usize) -> Result<Vec<u64>> {
-    match input {
-        Activation::Bits(fmap) => {
-            let total = fmap.hw * fmap.hw * fmap.c;
-            if total != in_f {
-                bail!("FC input features {total} != {in_f}");
-            }
-            Ok(fmap.flatten())
-        }
-        Activation::Int { .. } => bail!("FC layer expects binary input"),
     }
 }

@@ -13,5 +13,5 @@ pub mod engine;
 pub mod scalar_ref;
 pub mod tensor;
 
-pub use engine::{Engine, LayerOutput};
+pub use engine::{Engine, LayerOutput, ModelError, Scratch};
 pub use tensor::{Activation, BitFmap};

@@ -147,6 +147,9 @@ fn conv3x3(
 }
 
 fn pool2x2(y: Vec<i32>, hw: usize, c: usize, pool: bool) -> (Vec<i32>, usize) {
+    // odd-`hw` pooling would silently drop the last row/column here; such
+    // models are rejected up front by `Engine::new` (ModelError::
+    // OddPoolInput), so the oracle only ever sees even resolutions.
     if !pool {
         return (y, hw);
     }

@@ -8,7 +8,7 @@
 use crate::util::bits::{copy_bits, get_bit, set_bit, words_for};
 
 /// Binary feature map: `hw x hw` pixels, `c` channels, 1 bit each.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct BitFmap {
     pub hw: usize,
     pub c: usize,
@@ -21,6 +21,30 @@ impl BitFmap {
     pub fn zeros(hw: usize, c: usize) -> Self {
         let words_per_pixel = words_for(c);
         Self { hw, c, words_per_pixel, data: vec![0; hw * hw * words_per_pixel] }
+    }
+
+    /// Reshape to an all-zero `hw x hw x c` map, reusing the existing
+    /// allocation — the scratch-arena primitive: the engine's ping-pong
+    /// activation buffers are `reset` once per layer and never reallocate
+    /// after the first image warms their capacity to the network maximum.
+    pub fn reset(&mut self, hw: usize, c: usize) {
+        self.hw = hw;
+        self.c = c;
+        self.words_per_pixel = words_for(c);
+        self.data.clear();
+        self.data.resize(hw * hw * self.words_per_pixel, 0);
+    }
+
+    /// Like [`BitFmap::reset`] but skips the zero-fill: word contents are
+    /// unspecified afterwards.  Only for callers that overwrite every
+    /// word (the engine's threshold compare writes each packed word in
+    /// full, pad bits included, so pre-zeroing would double the writes on
+    /// the hot path).
+    pub fn reshape_for_overwrite(&mut self, hw: usize, c: usize) {
+        self.hw = hw;
+        self.c = c;
+        self.words_per_pixel = words_for(c);
+        self.data.resize(hw * hw * self.words_per_pixel, 0);
     }
 
     #[inline]
@@ -45,20 +69,28 @@ impl BitFmap {
         set_bit(self.pixel_mut(y, x), ch, v)
     }
 
-    /// Flatten to a single packed bit row in (h, w, c) order — the FC input
-    /// layout shared with `python/compile/model.py`.
-    pub fn flatten(&self) -> Vec<u64> {
+    /// Flatten into a caller-owned packed bit row in (h, w, c) order — the
+    /// FC input layout shared with `python/compile/model.py`.  Reuses the
+    /// buffer's capacity (allocation-free once warmed).
+    pub fn flatten_into(&self, out: &mut Vec<u64>) {
         let total = self.hw * self.hw * self.c;
-        let mut out = vec![0u64; words_for(total)];
+        out.clear();
+        out.resize(words_for(total), 0);
         if self.c % 64 == 0 {
             // pixel rows are already contiguous words
             out.copy_from_slice(&self.data[..words_for(total)]);
         } else {
             for row in 0..self.hw * self.hw {
                 let src = &self.data[row * self.words_per_pixel..(row + 1) * self.words_per_pixel];
-                copy_bits(&mut out, row * self.c, src, 0, self.c);
+                copy_bits(out, row * self.c, src, 0, self.c);
             }
         }
+    }
+
+    /// Owning variant of [`BitFmap::flatten_into`].
+    pub fn flatten(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.flatten_into(&mut out);
         out
     }
 }
@@ -115,6 +147,60 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn reset_reuses_capacity_and_zeroes() {
+        let mut f = BitFmap::zeros(4, 96);
+        for w in f.data.iter_mut() {
+            *w = u64::MAX;
+        }
+        let cap = f.data.capacity();
+        f.reset(2, 33);
+        assert_eq!((f.hw, f.c, f.words_per_pixel), (2, 33, 1));
+        assert_eq!(f.data.len(), 2 * 2);
+        assert!(f.data.iter().all(|&w| w == 0), "reset must zero");
+        assert_eq!(f.data.capacity(), cap, "shrinking reset must not reallocate");
+    }
+
+    #[test]
+    fn reshape_for_overwrite_shapes_without_zeroing_cost() {
+        let mut f = BitFmap::zeros(2, 65);
+        for w in f.data.iter_mut() {
+            *w = u64::MAX;
+        }
+        f.reshape_for_overwrite(1, 130);
+        assert_eq!((f.hw, f.c, f.words_per_pixel), (1, 130, 3));
+        assert_eq!(f.data.len(), 3);
+        // contents are unspecified (stale words allowed); a full overwrite
+        // must leave it equal to the zeroed-and-set equivalent
+        for w in f.data.iter_mut() {
+            *w = 0;
+        }
+        let mut rng = SplitMix64::new(12);
+        let mut want = BitFmap::zeros(1, 130);
+        for ch in 0..130 {
+            let v = rng.bit();
+            f.set(0, 0, ch, v);
+            want.set(0, 0, ch, v);
+        }
+        assert_eq!(f, want);
+    }
+
+    #[test]
+    fn flatten_into_matches_flatten() {
+        let mut f = BitFmap::zeros(3, 33);
+        let mut rng = SplitMix64::new(9);
+        for y in 0..3 {
+            for x in 0..3 {
+                for ch in 0..33 {
+                    f.set(y, x, ch, rng.bit());
+                }
+            }
+        }
+        let mut out = vec![u64::MAX; 17]; // stale content must be cleared
+        f.flatten_into(&mut out);
+        assert_eq!(out, f.flatten());
     }
 
     #[test]

@@ -98,6 +98,88 @@ pub fn bench_with<F: FnMut()>(opts: BenchOpts, f: &mut F) -> Stats {
     }
 }
 
+/// Minimal JSON value for machine-readable `BENCH_*.json` artifacts
+/// (serde is not in the offline crate cache).  Non-finite numbers render
+/// as `null` so the output always parses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    out.push_str(&format!("{v}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_json_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (key, value)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_string(key, out);
+                    out.push(':');
+                    value.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Write a `BENCH_*.json` artifact.  Cargo runs bench binaries with the
+/// *package* root as working directory, so a bare file name lands in
+/// `rust/` (e.g. `rust/BENCH_engine.json`) — the perf-trajectory
+/// artifact CI archives and diffs across commits.
+pub fn write_bench_json(path: &str, value: &Json) -> std::io::Result<()> {
+    std::fs::write(path, value.render() + "\n")
+}
+
 /// Pretty duration for reports.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -194,6 +276,26 @@ mod tests {
         let lines: Vec<&str> = s.lines().collect();
         assert_eq!(lines.len(), 4);
         assert_eq!(lines[1].chars().all(|c| c == '-'), true);
+    }
+
+    #[test]
+    fn json_renders_nested_values() {
+        let v = Json::Obj(vec![
+            ("name".into(), Json::Str("engine \"hot\"\npath".into())),
+            ("smoke".into(), Json::Bool(false)),
+            ("nan".into(), Json::Num(f64::NAN)),
+            (
+                "layers".into(),
+                Json::Arr(vec![
+                    Json::Obj(vec![("ns".into(), Json::Num(1234.5))]),
+                    Json::Null,
+                ]),
+            ),
+        ]);
+        assert_eq!(
+            v.render(),
+            r#"{"name":"engine \"hot\"\npath","smoke":false,"nan":null,"layers":[{"ns":1234.5},null]}"#
+        );
     }
 
     #[test]

@@ -194,7 +194,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let backend = FpgaSimBackend::new(model.clone())?;
     let mut config = backend.stream_config().clone();
     config.double_buffered = !args.flag("no-double-buffer");
-    let engine = crate::bcnn::Engine::new(model);
+    let engine = crate::bcnn::Engine::new(model)?;
     let images = random_images(&engine.model().config(), n, 42);
     let report = simulate(&engine, &config, &images)?;
     println!("streaming simulation: {} images, config {}", n, name);
@@ -252,7 +252,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let scores: Vec<Vec<f32>> = match backend.as_str() {
         "native" => {
-            let engine = crate::bcnn::Engine::new(model);
+            let engine = crate::bcnn::Engine::new(model)?;
             engine.infer_batch(&images)?
         }
         "fpga-sim" => {
@@ -300,9 +300,9 @@ fn backend_factory(kind: &str, model: BcnnModel, lanes: usize) -> Result<Backend
     let kind = kind.to_string();
     Ok(Arc::new(move || -> Result<Box<dyn Backend>> {
         Ok(match kind.as_str() {
-            "native" => Box::new(NativeBackend::with_lanes(model.clone(), lanes)),
+            "native" => Box::new(NativeBackend::with_lanes(model.clone(), lanes)?),
             "fpga-sim" => Box::new(FpgaSimBackend::new(model.clone())?),
-            _ => Box::new(GpuSimBackend::new(model.clone(), GpuKernel::Xnor)),
+            _ => Box::new(GpuSimBackend::new(model.clone(), GpuKernel::Xnor)?),
         })
     }))
 }
@@ -363,7 +363,7 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     let model = BcnnModel::load(dir.join(format!("model_{name}.bcnn")))?;
     let cfg = model.config();
     let images = random_images(&cfg, 4, 99);
-    let engine = crate::bcnn::Engine::new(model.clone());
+    let engine = crate::bcnn::Engine::new(model.clone())?;
     let native: Vec<Vec<f32>> = engine.infer_batch(&images)?;
 
     // PJRT path

@@ -70,13 +70,15 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    pub fn new(model: BcnnModel) -> Self {
+    pub fn new(model: BcnnModel) -> Result<Self> {
         Self::with_lanes(model, 1)
     }
 
-    /// `lanes` intra-batch worker threads (clamped to at least 1).
-    pub fn with_lanes(model: BcnnModel, lanes: usize) -> Self {
-        Self { engine: Engine::new(model), scratches: vec![Scratch::default(); lanes.max(1)] }
+    /// `lanes` intra-batch worker threads (clamped to at least 1).  One
+    /// [`Scratch`] arena per lane: the tap-major engine is zero-alloc per
+    /// image once each lane's arena is warm.
+    pub fn with_lanes(model: BcnnModel, lanes: usize) -> Result<Self> {
+        Ok(Self { engine: Engine::new(model)?, scratches: vec![Scratch::default(); lanes.max(1)] })
     }
 
     pub fn engine(&self) -> &Engine {
@@ -206,7 +208,7 @@ impl FpgaSimBackend {
                 .collect()
         };
         Ok(Self {
-            engine: Engine::new(model),
+            engine: Engine::new(model)?,
             config: StreamConfig {
                 freq_hz: DEFAULT_FREQ_HZ,
                 params,
@@ -245,13 +247,19 @@ pub struct GpuSimBackend {
 }
 
 impl GpuSimBackend {
-    pub fn new(model: BcnnModel, kernel: GpuKernel) -> Self {
+    pub fn new(model: BcnnModel, kernel: GpuKernel) -> Result<Self> {
         let gpu = GpuModel::new(&model.config());
         let name = match kernel {
             GpuKernel::Xnor => "gpu-sim-xnor".to_string(),
             GpuKernel::Baseline => "gpu-sim-baseline".to_string(),
         };
-        Self { engine: Engine::new(model), model: gpu, kernel, scratch: Scratch::default(), name }
+        Ok(Self {
+            engine: Engine::new(model)?,
+            model: gpu,
+            kernel,
+            scratch: Scratch::default(),
+            name,
+        })
     }
 }
 

@@ -197,7 +197,7 @@ mod tests {
     fn synthetic_runs_through_engine() {
         let cfg = NetConfig::tiny();
         let m = BcnnModel::synthetic(&cfg, 11);
-        let engine = crate::bcnn::Engine::new(m);
+        let engine = crate::bcnn::Engine::new(m).expect("synthetic model is valid");
         let img = vec![5i32; cfg.input_hw * cfg.input_hw * cfg.input_channels];
         let scores = engine.infer(&img).unwrap();
         assert_eq!(scores.len(), cfg.classes);

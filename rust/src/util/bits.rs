@@ -117,6 +117,18 @@ pub fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
     acc
 }
 
+/// For one activation word `p`, accumulate `popcount(p ^ bank[n])` into
+/// `mism[n]` for every filter lane `n` — the vertical (filter-bank-major)
+/// XnorDotProduct step of the tap-major engine.  The weight bank is
+/// unit-stride, so the loop lowers to vpopcntq lanes with no horizontal
+/// reductions; `p` is broadcast.
+#[inline]
+pub fn xor_popcount_lanes(p: u64, bank: &[u64], mism: &mut [u64]) {
+    for (m, &w) in mism.iter_mut().zip(bank) {
+        *m += (p ^ w).count_ones() as u64;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +211,18 @@ mod tests {
                     assert_eq!(get_bit(&words, i), before[i], "untouched bit {i}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn xor_popcount_lanes_matches_scalar() {
+        let mut rng = SplitMix64::new(6);
+        let p = rng.next_u64();
+        let bank: Vec<u64> = (0..9).map(|_| rng.next_u64()).collect();
+        let mut mism = vec![3u64; 9]; // non-zero start: must accumulate
+        xor_popcount_lanes(p, &bank, &mut mism);
+        for (n, &w) in bank.iter().enumerate() {
+            assert_eq!(mism[n], 3 + (p ^ w).count_ones() as u64, "lane {n}");
         }
     }
 

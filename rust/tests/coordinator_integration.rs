@@ -27,9 +27,9 @@ fn load(name: &str) -> BcnnModel {
 
 fn start_native(max_batch: usize, max_wait: Duration) -> (Coordinator, Engine) {
     let model = load("tiny");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let coord = Coordinator::start(
-        Box::new(NativeBackend::new(model)),
+        Box::new(NativeBackend::new(model).expect("valid model")),
         CoordinatorConfig {
             policy: BatchPolicy { max_batch, max_wait },
             ..CoordinatorConfig::default()
@@ -40,9 +40,9 @@ fn start_native(max_batch: usize, max_wait: Duration) -> (Coordinator, Engine) {
 
 fn start_sharded(workers: usize, policy: BatchPolicy, queue_depth: usize) -> (Coordinator, Engine) {
     let model = load("tiny");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let factory: BackendFactory = Arc::new(move || -> anyhow::Result<Box<dyn Backend>> {
-        Ok(Box::new(NativeBackend::new(model.clone())))
+        Ok(Box::new(NativeBackend::new(model.clone())?))
     });
     let coord = Coordinator::start_sharded(
         factory,
@@ -274,7 +274,7 @@ fn fpga_sim_backend_reports_modeled_time() {
 #[test]
 fn gpu_sim_backend_penalizes_small_batches() {
     let model = load("tiny");
-    let mut backend = GpuSimBackend::new(model.clone(), GpuKernel::Xnor);
+    let mut backend = GpuSimBackend::new(model.clone(), GpuKernel::Xnor).unwrap();
     let one = backend
         .infer_owned(&random_images(&model.config(), 1, 46))
         .unwrap()
@@ -293,9 +293,9 @@ fn gpu_sim_backend_penalizes_small_batches() {
 #[test]
 fn native_backend_lanes_match_serial() {
     let model = load("tiny");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let images = random_images(&model.config(), 9, 50);
-    let mut parallel = NativeBackend::with_lanes(model, 4);
+    let mut parallel = NativeBackend::with_lanes(model, 4).unwrap();
     let out = parallel.infer_owned(&images).unwrap();
     assert_eq!(out.scores.len(), images.len());
     for (img, got) in images.iter().zip(&out.scores) {

@@ -6,21 +6,37 @@
 //! the check is equally strong).  Only the accuracy test needs `make
 //! artifacts`, and it skips cleanly without them.
 
-use repro::bcnn::{scalar_ref, Engine, LayerOutput};
+use repro::bcnn::{scalar_ref, Engine, LayerOutput, ModelError, Scratch};
 use repro::coordinator::workload::random_images;
 use repro::fpga::kernel;
 use repro::fpga::timing::LayerParams;
-use repro::model::{BcnnModel, LayerWeights};
+use repro::model::{BcnnModel, ConvSpec, LayerWeights, NetConfig};
 use repro::util::SplitMix64;
 
 fn load(name: &str) -> BcnnModel {
     BcnnModel::load_or_synthetic(name, "artifacts", 0xB_C0DE).expect("built-in config")
 }
 
+/// Ad-hoc network shapes for the tap-major property sweep.
+fn custom_cfg(hw: usize, conv: &[(usize, bool)], fc: &[usize]) -> NetConfig {
+    NetConfig {
+        name: "prop".into(),
+        conv: conv
+            .iter()
+            .map(|&(out_channels, pool)| ConvSpec { out_channels, pool })
+            .collect(),
+        fc: fc.to_vec(),
+        classes: 10,
+        input_hw: hw,
+        input_channels: 3,
+        input_bits: 6,
+    }
+}
+
 #[test]
 fn engine_matches_textbook_reference_tiny() {
     let model = load("tiny");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let images = random_images(&model.config(), 6, 1);
     for (i, img) in images.iter().enumerate() {
         let fast = engine.infer(img).unwrap();
@@ -35,7 +51,7 @@ fn engine_matches_textbook_reference_tiny() {
 #[test]
 fn engine_matches_textbook_reference_small() {
     let model = load("small");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let images = random_images(&model.config(), 2, 2);
     for img in &images {
         let fast = engine.infer(img).unwrap();
@@ -51,7 +67,7 @@ fn engine_matches_pe_datapath_per_layer() {
     // drive the same activations through the engine and the fig.6 kernel
     // datapath (independent implementation) layer by layer
     let model = load("tiny");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let images = random_images(&model.config(), 2, 3);
     let mut scratch = repro::bcnn::engine::Scratch::default();
     for img in &images {
@@ -92,7 +108,7 @@ fn engine_matches_pe_datapath_per_layer() {
 #[test]
 fn batch_equals_singles() {
     let model = load("tiny");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let images = random_images(&model.config(), 5, 4);
     let batch = engine.infer_batch(&images).unwrap();
     for (img, want) in images.iter().zip(&batch) {
@@ -103,7 +119,7 @@ fn batch_equals_singles() {
 #[test]
 fn scratch_reuse_is_transparent() {
     let model = load("tiny");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let images = random_images(&model.config(), 4, 5);
     let mut scratch = repro::bcnn::engine::Scratch::default();
     for img in &images {
@@ -114,16 +130,122 @@ fn scratch_reuse_is_transparent() {
 }
 
 #[test]
+fn tap_major_matches_reference_on_random_models() {
+    // Randomized synthetic models across the shapes that stress the
+    // tap-major path: varied hw (odd included), channel counts off the
+    // 64-bit lattice, pool on/off, FC widths that exercise the unaligned
+    // flatten.  The textbook ±1 reference is the bit-exactness oracle.
+    let cases: &[(usize, &[(usize, bool)], &[usize])] = &[
+        (8, &[(33, false), (65, true)], &[32]),
+        (7, &[(64, false)], &[16]),
+        (12, &[(100, true), (40, true)], &[]),
+        (6, &[(128, true), (96, false)], &[24]),
+    ];
+    for (ci, &(hw, conv, fc)) in cases.iter().enumerate() {
+        let cfg = custom_cfg(hw, conv, fc);
+        let model = BcnnModel::synthetic(&cfg, 0xC0FFEE + ci as u64);
+        let engine = Engine::new(model.clone()).expect("valid model");
+        let mut scratch = Scratch::default();
+        for (ii, img) in random_images(&cfg, 3, 77 + ci as u64).iter().enumerate() {
+            let fast = engine.infer_with_scratch(img, &mut scratch).unwrap();
+            let slow = scalar_ref::infer_reference(&model, img).unwrap();
+            assert_eq!(fast.len(), slow.len());
+            for (a, b) in fast.iter().zip(&slow) {
+                assert!((a - b).abs() < 1e-3, "case {ci} image {ii}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn scratch_capacity_stable_after_warmup() {
+    // the zero-allocation contract: one warm-up image grows the arena to
+    // the network maximum; every later image performs zero heap
+    // allocations (scratch capacity frozen, score buffer reused in place)
+    let model = load("tiny");
+    let engine = Engine::new(model.clone()).expect("valid model");
+    let images = random_images(&model.config(), 8, 21);
+    let mut scratch = Scratch::default();
+    let mut scores = Vec::new();
+    engine.infer_into(&images[0], &mut scratch, &mut scores).unwrap();
+    let cap = scratch.capacity_bytes();
+    let score_cap = scores.capacity();
+    assert!(cap > 0, "warm-up must populate the arena");
+    assert_eq!(scores.len(), model.classes);
+    for img in images.iter().cycle().take(64) {
+        engine.infer_into(img, &mut scratch, &mut scores).unwrap();
+    }
+    assert_eq!(scratch.capacity_bytes(), cap, "scratch arena grew after warm-up");
+    assert_eq!(scores.capacity(), score_cap, "score buffer grew after warm-up");
+}
+
+#[test]
+fn odd_pool_rejected_at_construction() {
+    // first layer pooling at hw = 9
+    let model = BcnnModel::synthetic(&custom_cfg(9, &[(32, true)], &[]), 1);
+    match Engine::new(model) {
+        Err(ModelError::OddPoolInput { layer: 0, hw: 9 }) => {}
+        other => panic!("expected OddPoolInput at layer 0, got {other:?}"),
+    }
+    // second pool hits an odd resolution only after the first halving
+    let model = BcnnModel::synthetic(&custom_cfg(6, &[(16, true), (16, true)], &[]), 2);
+    match Engine::new(model) {
+        Err(ModelError::OddPoolInput { layer: 1, hw: 3 }) => {}
+        other => panic!("expected OddPoolInput at layer 1, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_weight_rows_rejected() {
+    let cfg = custom_cfg(8, &[(32, false), (32, false)], &[]);
+    let mut model = BcnnModel::synthetic(&cfg, 3);
+    for layer in &mut model.layers {
+        if let LayerWeights::BinConv { words_per_row, .. } = layer {
+            *words_per_row += 1; // corrupt the packed row stride
+            break;
+        }
+    }
+    match Engine::new(model) {
+        Err(ModelError::WeightRowWidth { layer: 1, .. }) => {}
+        other => panic!("expected WeightRowWidth at layer 1, got {other:?}"),
+    }
+}
+
+#[test]
+fn portable_run_layer_matches_prepared_path() {
+    // the on-the-fly prepared path (arbitrary layer values) must agree
+    // with the index-addressed prepared banks
+    let model = load("tiny");
+    let engine = Engine::new(model.clone()).expect("valid model");
+    let img = random_images(&model.config(), 1, 91).pop().unwrap();
+    let mut act = repro::bcnn::Activation::Int {
+        hw: model.input_hw,
+        c: model.input_channels,
+        data: img,
+    };
+    let mut scratch = Scratch::default();
+    for (i, layer) in model.layers.iter().enumerate() {
+        let a = engine.run_layer_at(i, &act, &mut scratch).unwrap();
+        let b = engine.run_layer(layer, &act).unwrap();
+        assert_eq!(a, b, "layer {i}");
+        match a {
+            LayerOutput::Act(next) => act = next,
+            LayerOutput::Scores(_) => break,
+        }
+    }
+}
+
+#[test]
 fn rejects_wrong_image_size() {
     let model = load("tiny");
-    let engine = Engine::new(model);
+    let engine = Engine::new(model).expect("valid model");
     assert!(engine.infer(&[0i32; 7]).is_err());
 }
 
 #[test]
 fn deterministic_across_runs() {
     let model = load("small");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let img = random_images(&model.config(), 1, 6).pop().unwrap();
     let a = engine.infer(&img).unwrap();
     let b = engine.infer(&img).unwrap();
@@ -134,7 +256,7 @@ fn deterministic_across_runs() {
 fn scores_sensitive_to_input() {
     // flipping pixels hard should (almost surely) change some score
     let model = load("small");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let mut rng = SplitMix64::new(7);
     let mut img = random_images(&model.config(), 1, 8).pop().unwrap();
     let base = engine.infer(&img).unwrap();
@@ -163,7 +285,7 @@ fn trained_small_model_beats_chance_on_testset() {
         eprintln!("skipping: trained artifacts not present (run `make artifacts`)");
         return;
     };
-    let engine = Engine::new(model);
+    let engine = Engine::new(model).expect("valid model");
     let Ok(ts) = repro::model::TestSet::load("artifacts/testset_small.bin") else {
         eprintln!("skipping: testset artifact not present (run `make artifacts`)");
         return;

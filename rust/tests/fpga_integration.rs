@@ -27,7 +27,7 @@ fn stream_config(model: &BcnnModel) -> StreamConfig {
 #[test]
 fn stream_scores_bit_exact_vs_engine() {
     let model = load("tiny");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let config = stream_config(&model);
     let images = random_images(&model.config(), 7, 21);
     let report = simulate(&engine, &config, &images).unwrap();
@@ -40,7 +40,7 @@ fn stream_scores_bit_exact_vs_engine() {
 #[test]
 fn stream_throughput_is_bottleneck_bound() {
     let model = load("tiny");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let config = stream_config(&model);
     let images = random_images(&model.config(), 12, 22);
     let report = simulate(&engine, &config, &images).unwrap();
@@ -61,7 +61,7 @@ fn double_buffering_ablation_matches_sum_over_max() {
     // without double buffering throughput degrades by sum(C)/max(C) —
     // the time-multiplexed single-layer scheme of Ref. 21 (paper §6.2)
     let model = load("tiny");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let mut config = stream_config(&model);
     let images = random_images(&model.config(), 6, 23);
     let on = simulate(&engine, &config, &images).unwrap();
@@ -87,7 +87,7 @@ fn latency_is_layers_plus_feed_times_phase() {
     // per layer (the input load is double-buffered like every other
     // channel, §4.3), so first latency = (L + 1) * phase
     let model = load("tiny");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let config = stream_config(&model);
     let images = random_images(&model.config(), 3, 24);
     let report = simulate(&engine, &config, &images).unwrap();
@@ -126,7 +126,7 @@ fn optimizer_plans_are_feasible_for_all_configs() {
 #[test]
 fn stream_rejects_wrong_param_count() {
     let model = load("tiny");
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let config = StreamConfig {
         freq_hz: DEFAULT_FREQ_HZ,
         params: vec![LayerParams::new(32, 2)], // wrong: model has 4 layers

@@ -55,7 +55,7 @@ fn manifest_parses() {
 #[test]
 fn pjrt_matches_native_tiny_b1() {
     let Some((mut rt, model)) = runtime_and_model("tiny") else { return };
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let loaded = rt.load_model("tiny", 1, bcnn("tiny")).unwrap();
     let images = random_images(&model.config(), 5, 31);
     for (i, img) in images.iter().enumerate() {
@@ -71,7 +71,7 @@ fn pjrt_matches_native_tiny_b1() {
 #[test]
 fn pjrt_matches_native_small_batched() {
     let Some((mut rt, model)) = runtime_and_model("small") else { return };
-    let engine = Engine::new(model.clone());
+    let engine = Engine::new(model.clone()).expect("valid model");
     let loaded = rt.load_model("small", 8, bcnn("small")).unwrap();
     let images = random_images(&model.config(), 8, 32);
     let per: usize = images[0].len();
