@@ -1,17 +1,24 @@
 //! Bench: regenerate Fig. 7 — FPGA vs GPU throughput and energy
 //! efficiency across batch sizes — from the models, then validate the
 //! *serving-path* version: drive the coordinator with both simulator
-//! backends and compare modeled per-batch device times.  Finally sweep the
+//! backends and compare modeled per-batch device times.  Sweep the
 //! sharded pool's worker count to show HOST-side throughput now scales the
 //! way the paper says the accelerator does (the old single-worker
 //! coordinator collapsed exactly where Fig. 7 says it should not).
+//! Finally, the *executed* (not modeled) batch-insensitivity signature:
+//! wall-clock throughput of the row-streaming pipeline runtime vs the
+//! sequential engine across batch sizes, emitted to
+//! `rust/BENCH_pipeline.json`.
 //!
 //! Run: `cargo bench --bench fig7_batch_sweep`
+//! (CI runs a shortened pass with `BENCH_SMOKE=1`.)
 
+use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use repro::benchkit::Table;
+use repro::bcnn::Engine;
+use repro::benchkit::{write_bench_json, Json, Table};
 use repro::coordinator::workload::{random_images, run_closed_loop};
 use repro::coordinator::{
     Backend, BackendFactory, BatchPolicy, Coordinator, CoordinatorConfig, FpgaSimBackend,
@@ -19,7 +26,12 @@ use repro::coordinator::{
 };
 use repro::gpu::GpuKernel;
 use repro::model::BcnnModel;
+use repro::pipeline::{PipelineRuntime, ScoreTicket};
 use repro::tables;
+
+fn smoke() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some()
+}
 
 fn main() {
     let batches = [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512];
@@ -79,7 +91,7 @@ fn main() {
     // replica.  Throughput should scale with the shard count until cores
     // run out — this is the host mirroring the accelerator's spatial
     // parallelism.
-    const REQUESTS: usize = 512;
+    let requests: usize = if smoke() { 64 } else { 512 };
     println!("\n=== host throughput vs worker shards (native, max_wait=0) ===");
     let mut t = Table::new(&["workers", "req/s", "vs 1 worker", "mean batch", "per-shard reqs"]);
     let mut base = 0.0f64;
@@ -97,7 +109,7 @@ fn main() {
             },
         )
         .expect("start pool");
-        let report = run_closed_loop(&coord.client(), &cfg, REQUESTS, 17).expect("workload");
+        let report = run_closed_loop(&coord.client(), &cfg, requests, 17).expect("workload");
         let per_shard: Vec<u64> = coord.shard_metrics().iter().map(|m| m.requests).collect();
         coord.shutdown();
         let rps = report.throughput();
@@ -118,4 +130,136 @@ fn main() {
          sharding restores the batch-insensitive scaling the FPGA datapath\n\
          promises (expect ~Nx until physical cores saturate)."
     );
+
+    // --- executed batch-insensitivity: pipeline runtime vs engine -------
+    //
+    // The sections above *model* Fig. 7; this one executes it.  A backlog
+    // of images is handed to each backend in groups of `batch`:
+    //
+    // * engine — `NativeBackend` with one intra-batch lane per pipeline
+    //   thread (fair thread budget); each group is a blocking
+    //   `infer_batch` call, so a group of 1 can use only one lane — the
+    //   GPU-style "parallelism comes from batching" regime.
+    // * pipeline — groups are submitted to the layer-pipeline runtime
+    //   back-to-back (admission window = inflight); every layer stage is
+    //   its own thread, so a stream of single-image groups keeps all
+    //   stages busy and grouping stops mattering — eq. 12 executed.
+    //
+    // BENCH_pipeline.json records both curves and the batch-1 : batch-64
+    // throughput ratio per backend (the batch-insensitivity signature:
+    // ~1.0 for the pipeline, well below 1.0 for the laned engine).
+    let total = if smoke() { 64usize } else { 256 };
+    let sweep = [1usize, 4, 16, 64];
+    let images = random_images(&cfg, total, 23);
+    let n_stage_threads = model.layers.len() + 1;
+    let inflight = 2 * n_stage_threads;
+
+    println!(
+        "\n=== executed batch sweep (tiny config, {total} images, \
+         {n_stage_threads} threads per backend) ==="
+    );
+    let mut t = Table::new(&["batch", "engine img/s", "pipeline img/s", "pipeline/engine"]);
+    let mut engine_rows: Vec<Json> = Vec::new();
+    let mut pipeline_rows: Vec<Json> = Vec::new();
+    let mut engine_tput = Vec::new();
+    let mut pipeline_tput = Vec::new();
+    for &batch in &sweep {
+        let e = engine_throughput(&model, &images, batch, n_stage_threads);
+        let p = pipeline_throughput(&model, &images, batch, inflight);
+        engine_tput.push(e);
+        pipeline_tput.push(p);
+        engine_rows.push(sweep_row(batch, e));
+        pipeline_rows.push(sweep_row(batch, p));
+        t.row(&[
+            batch.to_string(),
+            format!("{e:.0}"),
+            format!("{p:.0}"),
+            format!("{:.2}", p / e),
+        ]);
+    }
+    t.print();
+    let engine_ratio = engine_tput[0] / engine_tput[sweep.len() - 1];
+    let pipeline_ratio = pipeline_tput[0] / pipeline_tput[sweep.len() - 1];
+    println!(
+        "\nbatch-1 : batch-{} throughput — engine {:.2}, pipeline {:.2}\n\
+         (batch-insensitive serving keeps the pipeline ratio near 1.0; the\n\
+         laned engine needs large batches to light up its threads)",
+        sweep[sweep.len() - 1],
+        engine_ratio,
+        pipeline_ratio,
+    );
+
+    let json = Json::Obj(vec![
+        ("bench".into(), Json::Str("pipeline_batch_sweep".into())),
+        ("smoke".into(), Json::Bool(smoke())),
+        ("config".into(), Json::Str("tiny".into())),
+        ("images".into(), Json::Num(total as f64)),
+        ("threads_per_backend".into(), Json::Num(n_stage_threads as f64)),
+        ("engine".into(), Json::Arr(engine_rows)),
+        ("pipeline".into(), Json::Arr(pipeline_rows)),
+        ("engine_batch1_over_batch64".into(), Json::Num(engine_ratio)),
+        ("pipeline_batch1_over_batch64".into(), Json::Num(pipeline_ratio)),
+    ]);
+    write_bench_json("BENCH_pipeline.json", &json).expect("write BENCH_pipeline.json");
+    println!("\nwrote BENCH_pipeline.json (smoke={})", smoke());
+}
+
+fn sweep_row(batch: usize, img_per_s: f64) -> Json {
+    Json::Obj(vec![
+        ("batch".into(), Json::Num(batch as f64)),
+        ("img_per_s".into(), Json::Num(img_per_s)),
+    ])
+}
+
+/// Wall-clock throughput of the sequential engine given the backlog in
+/// groups of `batch`: one blocking `infer_batch` per group, `lanes`
+/// intra-batch threads (the batching-dependent parallelism regime).
+fn engine_throughput(model: &BcnnModel, images: &[Vec<i32>], batch: usize, lanes: usize) -> f64 {
+    let mut backend = NativeBackend::with_lanes(model.clone(), lanes).expect("valid model");
+    // warm the per-lane scratch arenas before timing
+    backend
+        .infer_owned(&images[..batch.min(images.len())])
+        .expect("warm-up");
+    let t0 = Instant::now();
+    for chunk in images.chunks(batch) {
+        backend.infer_owned(chunk).expect("engine batch");
+    }
+    images.len() as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Wall-clock throughput of the layer-pipeline runtime given the backlog
+/// in groups of `batch`: groups are submitted back-to-back (the backlog
+/// exists, so the host never idles the device between groups), with at
+/// most `inflight` tickets outstanding.
+fn pipeline_throughput(
+    model: &BcnnModel,
+    images: &[Vec<i32>],
+    batch: usize,
+    inflight: usize,
+) -> f64 {
+    let runtime = PipelineRuntime::new(Engine::new(model.clone()).expect("valid model"), inflight)
+        .expect("spawn pipeline");
+    // warm-up: stream one window through the stages before timing
+    let warm: Vec<ScoreTicket> = images
+        .iter()
+        .take(inflight.min(images.len()))
+        .map(|img| runtime.submit(img.clone()).expect("submit"))
+        .collect();
+    for ticket in warm {
+        ticket.wait().expect("warm-up scores");
+    }
+    let t0 = Instant::now();
+    let mut outstanding: VecDeque<ScoreTicket> = VecDeque::new();
+    for chunk in images.chunks(batch) {
+        for img in chunk {
+            while outstanding.len() >= inflight {
+                outstanding.pop_front().unwrap().wait().expect("scores");
+            }
+            outstanding.push_back(runtime.submit(img.clone()).expect("submit"));
+        }
+    }
+    while let Some(ticket) = outstanding.pop_front() {
+        ticket.wait().expect("scores");
+    }
+    images.len() as f64 / t0.elapsed().as_secs_f64()
 }

@@ -44,7 +44,9 @@ use anyhow::{bail, Result};
 
 use crate::bcnn::tensor::{Activation, BitFmap};
 use crate::model::{BcnnModel, LayerWeights};
-use crate::util::bits::{read_bits_u64, words_for, xor_popcount, xor_popcount_lanes};
+use crate::util::bits::{
+    copy_bits, read_bits_u64, set_bit, words_for, xor_popcount, xor_popcount_lanes,
+};
 
 /// Output of one layer.
 #[derive(Debug, Clone, PartialEq)]
@@ -67,6 +69,10 @@ pub enum ModelError {
     /// A 2x2/2 max-pool would run at an odd resolution and silently drop
     /// the last row/column of the feature map.
     OddPoolInput { layer: usize, hw: usize },
+    /// A layer's declared input geometry disagrees with the previous
+    /// layer's output — the model would bail (or, worse, misnumerate
+    /// against phantom pad bits) at request time.
+    ChainMismatch { layer: usize, what: &'static str, got: usize, want: usize },
 }
 
 impl fmt::Display for ModelError {
@@ -83,6 +89,11 @@ impl fmt::Display for ModelError {
                 f,
                 "layer {layer}: 2x2/2 max-pool at odd resolution {hw}x{hw} \
                  would drop the last row/column"
+            ),
+            ModelError::ChainMismatch { layer, what, got, want } => write!(
+                f,
+                "layer {layer}: declared {what} {got} disagrees with the \
+                 previous layer's output ({want})"
             ),
         }
     }
@@ -155,17 +166,44 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Validate `model` and prepare the transposed weight banks.
+    /// Validate `model` (per-layer shapes AND layer-to-layer geometry
+    /// chaining) and prepare the transposed weight banks.
     pub fn new(model: BcnnModel) -> std::result::Result<Self, ModelError> {
         let mut hw = model.input_hw;
+        let mut c = model.input_channels;
         for (i, layer) in model.layers.iter().enumerate() {
             validate_layer(i, layer)?;
-            if let LayerWeights::FpConv { pool, .. } | LayerWeights::BinConv { pool, .. } = layer {
-                if *pool {
-                    if hw % 2 != 0 {
-                        return Err(ModelError::OddPoolInput { layer: i, hw });
+            match layer {
+                LayerWeights::FpConv { in_c, out_c, pool, .. }
+                | LayerWeights::BinConv { in_c, out_c, pool, .. } => {
+                    if *in_c != c {
+                        return Err(ModelError::ChainMismatch {
+                            layer: i,
+                            what: "input channels",
+                            got: *in_c,
+                            want: c,
+                        });
                     }
-                    hw /= 2;
+                    if *pool {
+                        if hw % 2 != 0 {
+                            return Err(ModelError::OddPoolInput { layer: i, hw });
+                        }
+                        hw /= 2;
+                    }
+                    c = *out_c;
+                }
+                LayerWeights::BinFc { in_f, out_f, .. }
+                | LayerWeights::BinFcOut { in_f, out_f, .. } => {
+                    if *in_f != hw * hw * c {
+                        return Err(ModelError::ChainMismatch {
+                            layer: i,
+                            what: "input features",
+                            got: *in_f,
+                            want: hw * hw * c,
+                        });
+                    }
+                    hw = 1;
+                    c = *out_f;
                 }
             }
         }
@@ -305,6 +343,532 @@ impl Engine {
         let bin = prepare_bin(layer);
         run_prepared_layer(layer, &fp_t, bin.as_ref(), input, &mut Scratch::default())
     }
+}
+
+// ---------------------------------------------------------------------------
+// row-granular stepping (the pipeline runtime's building block)
+
+/// Static I/O geometry of one layer, produced by [`Engine::layer_shapes`].
+///
+/// `out_c` is the output channel count for conv layers and the output
+/// feature count for FC layers (an FC output is a 1x1 feature map).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerShape {
+    pub in_hw: usize,
+    pub in_c: usize,
+    pub out_hw: usize,
+    pub out_c: usize,
+    /// `true` for the classifier layer (emits scores, not a row).
+    pub scores: bool,
+}
+
+impl LayerShape {
+    /// Packed words per *input* row of this layer (`in_hw` pixels).
+    pub fn in_row_words(&self) -> usize {
+        self.in_hw * words_for(self.in_c)
+    }
+
+    /// Packed words per *output* row of this layer (`out_hw` pixels).
+    pub fn out_row_words(&self) -> usize {
+        self.out_hw * words_for(self.out_c)
+    }
+}
+
+/// A borrowed input row for [`LayerStepper::push_row`].
+///
+/// `Int` rows (raw `in_hw * in_c` NHWC values) feed the first layer only;
+/// every later layer consumes `Bits` rows — `in_hw` pixels of
+/// `words_for(in_c)` packed words each, exactly one spatial row of a
+/// [`BitFmap`].
+#[derive(Debug, Clone, Copy)]
+pub enum RowRef<'a> {
+    Int(&'a [i32]),
+    Bits(&'a [u64]),
+}
+
+/// One emission from a [`LayerStepper`]: a packed output row, or the
+/// classifier scores (final layer, on [`LayerStepper::flush`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepperOut {
+    /// `out_hw` pixels x `words_for(out_c)` packed words.
+    Row(Vec<u64>),
+    Scores(Vec<f32>),
+}
+
+/// Row-granular layer executor: the software analogue of one pipeline
+/// stage of the paper's streaming architecture (§4, fig. 4).  Input rows
+/// are pushed as they arrive; output rows are emitted as soon as their
+/// 3x3 window (plus the fused 2x2/2 pool pair, for pooling layers) is
+/// complete — so a downstream stage can start an image *before* the
+/// upstream stage has finished it.
+///
+/// The stepper runs the same tap-major kernels as [`Engine::infer_into`]
+/// over a 3-row sliding window instead of a whole plane, so its output is
+/// bit-identical to whole-image inference (asserted by the property tests
+/// in `rust/tests/pipeline_integration.rs`).
+///
+/// Lifecycle per image: exactly `in_hw` [`LayerStepper::push_row`] calls,
+/// then one [`LayerStepper::flush`] (which emits the bottom border row,
+/// or the FC/classifier output, and resets the stepper for the next
+/// image).
+pub struct LayerStepper<'e> {
+    engine: &'e Engine,
+    index: usize,
+    shape: LayerShape,
+    /// Input rows pushed so far this image.
+    rows_seen: usize,
+    state: StepperState,
+}
+
+enum StepperState {
+    FpConv {
+        /// Sliding window: input row `r` lives in `ring[r % 3]`.
+        ring: [Vec<i32>; 3],
+        /// Per-pixel `out_c` accumulator lanes.
+        pix: Vec<i32>,
+        /// One full-resolution conv output row of match counts.
+        conv_row: Vec<i32>,
+        /// Pooling: the even conv row awaiting its odd partner (empty =
+        /// none pending).
+        pending: Vec<i32>,
+        /// Pooling: reused half-resolution max plane for one output row
+        /// (keeps the per-row hot path allocation-free except for the
+        /// emitted packed row, which must be owned to cross threads).
+        pooled: Vec<i32>,
+    },
+    BinConv {
+        ring: [Vec<u64>; 3],
+        mism: Vec<u64>,
+        conv_row: Vec<i32>,
+        pending: Vec<i32>,
+        pooled: Vec<i32>,
+    },
+    /// BinFc and BinFcOut: accumulate the packed flatten row, compute on
+    /// flush.
+    Fc {
+        fc_row: Vec<u64>,
+    },
+}
+
+impl Engine {
+    /// Per-layer I/O geometry, in model order (the pool halving applied
+    /// layer by layer exactly as [`Engine::new`] validated it).
+    pub fn layer_shapes(&self) -> Vec<LayerShape> {
+        let mut hw = self.model.input_hw;
+        let mut c = self.model.input_channels;
+        self.model
+            .layers
+            .iter()
+            .map(|layer| match layer {
+                LayerWeights::FpConv { out_c, pool, .. }
+                | LayerWeights::BinConv { out_c, pool, .. } => {
+                    let (in_hw, in_c) = (hw, c);
+                    let out_hw = if *pool { hw / 2 } else { hw };
+                    hw = out_hw;
+                    c = *out_c;
+                    LayerShape { in_hw, in_c, out_hw, out_c: *out_c, scores: false }
+                }
+                LayerWeights::BinFc { out_f, .. } => {
+                    let s =
+                        LayerShape { in_hw: hw, in_c: c, out_hw: 1, out_c: *out_f, scores: false };
+                    hw = 1;
+                    c = *out_f;
+                    s
+                }
+                LayerWeights::BinFcOut { out_f, .. } => {
+                    let s =
+                        LayerShape { in_hw: hw, in_c: c, out_hw: 1, out_c: *out_f, scores: true };
+                    hw = 1;
+                    c = *out_f;
+                    s
+                }
+            })
+            .collect()
+    }
+
+    /// Build a row-granular stepper for the model's layer `index`.
+    pub fn layer_stepper(&self, index: usize) -> Result<LayerStepper<'_>> {
+        let shapes = self.layer_shapes();
+        let Some(&shape) = shapes.get(index) else {
+            bail!("layer index {index} out of range ({} layers)", shapes.len());
+        };
+        let state = match &self.model.layers[index] {
+            LayerWeights::FpConv { .. } => StepperState::FpConv {
+                ring: std::array::from_fn(|_| vec![0i32; shape.in_hw * shape.in_c]),
+                pix: vec![0i32; shape.out_c],
+                conv_row: vec![0i32; shape.in_hw * shape.out_c],
+                pending: Vec::with_capacity(shape.in_hw * shape.out_c),
+                pooled: Vec::with_capacity(shape.out_hw * shape.out_c),
+            },
+            LayerWeights::BinConv { .. } => StepperState::BinConv {
+                ring: std::array::from_fn(|_| vec![0u64; shape.in_row_words()]),
+                mism: vec![0u64; shape.out_c],
+                conv_row: vec![0i32; shape.in_hw * shape.out_c],
+                pending: Vec::with_capacity(shape.in_hw * shape.out_c),
+                pooled: Vec::with_capacity(shape.out_hw * shape.out_c),
+            },
+            LayerWeights::BinFc { in_f, .. } | LayerWeights::BinFcOut { in_f, .. } => {
+                StepperState::Fc { fc_row: vec![0u64; words_for(*in_f)] }
+            }
+        };
+        Ok(LayerStepper { engine: self, index, shape, rows_seen: 0, state })
+    }
+}
+
+impl LayerStepper<'_> {
+    pub fn shape(&self) -> LayerShape {
+        self.shape
+    }
+
+    /// Push one input row (row `rows_seen` of the current image).  Output
+    /// rows whose windows are complete are handed to `emit` before this
+    /// returns — zero or one conv row per push (zero or one *pooled* row
+    /// for pooling layers), nothing for FC layers until flush.
+    pub fn push_row(&mut self, row: RowRef<'_>, emit: &mut dyn FnMut(StepperOut)) -> Result<()> {
+        let LayerShape { in_hw, .. } = self.shape;
+        if self.rows_seen >= in_hw {
+            bail!("layer {}: image already has all {in_hw} rows (missing flush?)", self.index);
+        }
+        let r = self.rows_seen;
+        match (&mut self.state, row) {
+            (StepperState::FpConv { ring, .. }, RowRef::Int(data)) => {
+                if data.len() != in_hw * self.shape.in_c {
+                    bail!(
+                        "layer {}: int row has {} values, want {}",
+                        self.index,
+                        data.len(),
+                        in_hw * self.shape.in_c
+                    );
+                }
+                ring[r % 3].copy_from_slice(data);
+            }
+            (StepperState::BinConv { ring, .. }, RowRef::Bits(words)) => {
+                if words.len() != self.shape.in_row_words() {
+                    bail!(
+                        "layer {}: packed row has {} words, want {}",
+                        self.index,
+                        words.len(),
+                        self.shape.in_row_words()
+                    );
+                }
+                ring[r % 3].copy_from_slice(words);
+            }
+            (StepperState::Fc { fc_row }, RowRef::Bits(words)) => {
+                if words.len() != self.shape.in_row_words() {
+                    bail!(
+                        "layer {}: packed row has {} words, want {}",
+                        self.index,
+                        words.len(),
+                        self.shape.in_row_words()
+                    );
+                }
+                // append this spatial row's pixels to the flatten row in
+                // (h, w, c) bit order — identical to BitFmap::flatten_into
+                let c = self.shape.in_c;
+                let cw = words_for(c);
+                for x in 0..in_hw {
+                    copy_bits(fc_row, (r * in_hw + x) * c, &words[x * cw..(x + 1) * cw], 0, c);
+                }
+                self.rows_seen += 1;
+                return Ok(());
+            }
+            (StepperState::FpConv { .. }, _) => {
+                bail!("layer {}: FpConv expects int rows", self.index)
+            }
+            (_, _) => bail!("layer {}: expects packed binary rows", self.index),
+        }
+        self.rows_seen += 1;
+        // rows 0..=r are in the window: output row r-1 is now complete
+        // (its 3x3 window needs input rows r-2, r-1, r)
+        if r >= 1 {
+            self.conv_out_row(r - 1, emit)?;
+        }
+        Ok(())
+    }
+
+    /// End of image: emit the bottom border row (conv) or the FC /
+    /// classifier output, then reset for the next image.
+    pub fn flush(&mut self, emit: &mut dyn FnMut(StepperOut)) -> Result<()> {
+        let LayerShape { in_hw, .. } = self.shape;
+        if self.rows_seen != in_hw {
+            bail!(
+                "layer {}: flush after {} of {in_hw} rows",
+                self.index,
+                self.rows_seen
+            );
+        }
+        if matches!(self.state, StepperState::Fc { .. }) {
+            self.flush_fc(emit);
+        } else {
+            // bottom output row: window is [in_hw-2, in_hw-1, pad]
+            self.conv_out_row(in_hw - 1, emit)?;
+        }
+        self.rows_seen = 0;
+        Ok(())
+    }
+
+    /// FC / classifier flush: the whole flatten row is in, compute the
+    /// packed dot products (identical arithmetic to [`step_layer`]'s FC
+    /// arms) and zero the accumulator for the next image.
+    fn flush_fc(&mut self, emit: &mut dyn FnMut(StepperOut)) {
+        let layer = &self.engine.model.layers[self.index];
+        let StepperState::Fc { fc_row } = &mut self.state else {
+            unreachable!("flush_fc on a conv stepper");
+        };
+        match layer {
+            LayerWeights::BinFc { out_f, .. } => {
+                let mut out = vec![0u64; words_for(*out_f)];
+                bin_fc_select(layer, &fc_row[..], |n| set_bit(&mut out, n, true));
+                emit(StepperOut::Row(out));
+            }
+            LayerWeights::BinFcOut { out_f, .. } => {
+                let mut scores = Vec::with_capacity(*out_f);
+                bin_fc_out_scores(layer, &fc_row[..], &mut scores);
+                emit(StepperOut::Scores(scores));
+            }
+            _ => unreachable!("Fc state only built for FC layers"),
+        }
+        fc_row.fill(0);
+    }
+
+    /// Compute conv output row `y` from the sliding window and emit it
+    /// (possibly folded through the fused 2x2/2 pool).
+    fn conv_out_row(&mut self, y: usize, emit: &mut dyn FnMut(StepperOut)) -> Result<()> {
+        let LayerShape { in_hw, in_c, out_c, .. } = self.shape;
+        let layer = &self.engine.model.layers[self.index];
+        match &mut self.state {
+            StepperState::FpConv { ring, pix, conv_row, pending, pooled } => {
+                let LayerWeights::FpConv { pool, thresholds, .. } = layer else {
+                    unreachable!("FpConv state only built for FpConv layers");
+                };
+                let rows = window(ring, y, in_hw);
+                fp_conv_row(
+                    rows,
+                    in_hw,
+                    in_c,
+                    out_c,
+                    self.engine.fp_weights_t[self.index].as_slice(),
+                    pix,
+                    conv_row,
+                );
+                finish_conv_row(
+                    conv_row, pending, pooled, *pool, y, in_hw, out_c, thresholds, emit,
+                );
+            }
+            StepperState::BinConv { ring, mism, conv_row, pending, pooled } => {
+                let LayerWeights::BinConv { pool, thresholds, .. } = layer else {
+                    unreachable!("BinConv state only built for BinConv layers");
+                };
+                let prep = self.engine.bin_prepared[self.index]
+                    .as_ref()
+                    .expect("BinConv layer has a prepared bank");
+                let rows = window(ring, y, in_hw);
+                bin_conv_row(rows, in_hw, in_c, out_c, prep, mism, conv_row);
+                finish_conv_row(
+                    conv_row, pending, pooled, *pool, y, in_hw, out_c, thresholds, emit,
+                );
+            }
+            StepperState::Fc { .. } => unreachable!("conv_out_row on an FC stepper"),
+        }
+        Ok(())
+    }
+}
+
+/// The 3-row window `[above, centre, below]` for output row `y` (`None` =
+/// the -1-padding border, exactly the whole-image kernels' semantics).
+fn window<T>(ring: &[Vec<T>; 3], y: usize, hw: usize) -> [Option<&[T]>; 3] {
+    [
+        if y > 0 { Some(ring[(y - 1) % 3].as_slice()) } else { None },
+        Some(ring[y % 3].as_slice()),
+        if y + 1 < hw { Some(ring[(y + 1) % 3].as_slice()) } else { None },
+    ]
+}
+
+/// Row-window variant of [`bin_conv3x3_tap_major`]: one output row of
+/// match counts from three (optional) input rows.  Runs the identical
+/// tap-major kernels ([`accumulate_tap`] / `tap_pop` borders) so counts
+/// are bit-exact vs the whole-image path.
+fn bin_conv_row(
+    rows: [Option<&[u64]>; 3],
+    hw: usize,
+    in_c: usize,
+    out_c: usize,
+    prep: &PreparedBin,
+    mism: &mut [u64],
+    out_row: &mut [i32],
+) {
+    let cnum = (9 * in_c) as i32;
+    let cw = prep.chan_words;
+    let lane = cw * out_c;
+    let interior_ok = hw >= 3 && rows.iter().all(|r| r.is_some());
+
+    if !interior_ok {
+        for x in 0..hw {
+            bin_row_border(&rows, hw, prep, out_c, x, mism);
+            store_row_pixel(out_row, mism, cnum, out_c, x);
+        }
+        return;
+    }
+    bin_row_border(&rows, hw, prep, out_c, 0, mism);
+    store_row_pixel(out_row, mism, cnum, out_c, 0);
+    for x in 1..hw - 1 {
+        // all 9 taps in bounds: constant-trip, branch-free tap loop
+        mism.fill(0);
+        for t in 0..9usize {
+            let row = rows[t / 3].unwrap();
+            let sx = x + t % 3 - 1;
+            accumulate_tap(
+                &row[sx * cw..(sx + 1) * cw],
+                &prep.tap_weights[t * lane..(t + 1) * lane],
+                out_c,
+                mism,
+            );
+        }
+        store_row_pixel(out_row, mism, cnum, out_c, x);
+    }
+    bin_row_border(&rows, hw, prep, out_c, hw - 1, mism);
+    store_row_pixel(out_row, mism, cnum, out_c, hw - 1);
+}
+
+/// Border pixel of a row window: clipped taps contribute their
+/// precomputed weight popcount, exactly like [`border_pixel`].
+fn bin_row_border(
+    rows: &[Option<&[u64]>; 3],
+    hw: usize,
+    prep: &PreparedBin,
+    out_c: usize,
+    x: usize,
+    mism: &mut [u64],
+) {
+    let cw = prep.chan_words;
+    let lane = cw * out_c;
+    mism.fill(0);
+    for t in 0..9usize {
+        let sx = x as isize + (t % 3) as isize - 1;
+        match rows[t / 3] {
+            Some(row) if sx >= 0 && (sx as usize) < hw => {
+                let sx = sx as usize;
+                accumulate_tap(
+                    &row[sx * cw..(sx + 1) * cw],
+                    &prep.tap_weights[t * lane..(t + 1) * lane],
+                    out_c,
+                    mism,
+                );
+            }
+            _ => {
+                for (m, &p) in mism.iter_mut().zip(&prep.tap_pop[t * out_c..(t + 1) * out_c]) {
+                    *m += p as u64;
+                }
+            }
+        }
+    }
+}
+
+/// Write one pixel's match counts (`cnum - mismatches`) into a conv row.
+fn store_row_pixel(out_row: &mut [i32], mism: &[u64], cnum: i32, out_c: usize, x: usize) {
+    for (a, &m) in out_row[x * out_c..(x + 1) * out_c].iter_mut().zip(mism) {
+        *a = cnum - m as i32;
+    }
+}
+
+/// Row-window variant of [`fp_conv3x3_tap_major`] (first layer, eq. 7):
+/// true zero padding, tap-major MAC over the transposed ±1 weights.
+fn fp_conv_row(
+    rows: [Option<&[i32]>; 3],
+    hw: usize,
+    in_c: usize,
+    out_c: usize,
+    weights_t: &[i32],
+    pix: &mut [i32],
+    out_row: &mut [i32],
+) {
+    for x in 0..hw {
+        pix.fill(0);
+        for (kh, row) in rows.iter().enumerate() {
+            let Some(row) = row else {
+                continue; // true zero padding: clipped taps add nothing
+            };
+            for kw in 0..3usize {
+                let sx = x as isize + kw as isize - 1;
+                if sx < 0 || sx >= hw as isize {
+                    continue;
+                }
+                let src = sx as usize * in_c;
+                let t = kh * 3 + kw;
+                for ch in 0..in_c {
+                    let p = row[src + ch];
+                    if p == 0 {
+                        continue; // zero taps contribute nothing
+                    }
+                    let wrow = &weights_t[(t * in_c + ch) * out_c..(t * in_c + ch + 1) * out_c];
+                    for (a, &w) in pix.iter_mut().zip(wrow) {
+                        *a += p * w;
+                    }
+                }
+            }
+        }
+        out_row[x * out_c..(x + 1) * out_c].copy_from_slice(pix);
+    }
+}
+
+/// Fold one full-resolution conv row through the (optional) fused 2x2/2
+/// pool and the NormBinarize threshold, emitting a packed output row.
+///
+/// Pooling layers emit one pooled row per *pair* of conv rows: the even
+/// row is stashed in `pending`, the odd row maxes against it — the same
+/// integers the whole-image kernel's fused `store_pixel` max produces.
+#[allow(clippy::too_many_arguments)]
+fn finish_conv_row(
+    conv_row: &[i32],
+    pending: &mut Vec<i32>,
+    pooled: &mut Vec<i32>,
+    pool: bool,
+    y: usize,
+    in_hw: usize,
+    out_c: usize,
+    thresholds: &[i32],
+    emit: &mut dyn FnMut(StepperOut),
+) {
+    if !pool {
+        emit(StepperOut::Row(threshold_row(conv_row, in_hw, out_c, thresholds)));
+        return;
+    }
+    if y % 2 == 0 {
+        pending.clear();
+        pending.extend_from_slice(conv_row);
+        return;
+    }
+    let out_hw = in_hw / 2;
+    pooled.clear();
+    pooled.resize(out_hw * out_c, i32::MIN);
+    for px in 0..out_hw {
+        let dst = &mut pooled[px * out_c..(px + 1) * out_c];
+        for src in [&pending[2 * px * out_c..], &conv_row[2 * px * out_c..]] {
+            for half in 0..2 {
+                for (a, &v) in dst.iter_mut().zip(&src[half * out_c..(half + 1) * out_c]) {
+                    if v > *a {
+                        *a = v;
+                    }
+                }
+            }
+        }
+    }
+    pending.clear();
+    emit(StepperOut::Row(threshold_row(&pooled[..], out_hw, out_c, thresholds)));
+}
+
+/// Row variant of [`threshold_into`]: NormBinarize one row of `width`
+/// pixels into a freshly-allocated packed row (owned because it is about
+/// to cross a stage-thread boundary).  Same [`threshold_pixel`] packing
+/// as the whole-image path by construction.
+fn threshold_row(acc_row: &[i32], width: usize, c: usize, thresholds: &[i32]) -> Vec<u64> {
+    let wpp = words_for(c);
+    let mut out = vec![0u64; width * wpp];
+    for p in 0..width {
+        let words = &mut out[p * wpp..(p + 1) * wpp];
+        threshold_pixel(&acc_row[p * c..(p + 1) * c], c, thresholds, words);
+    }
+    out
 }
 
 // ---------------------------------------------------------------------------
@@ -480,28 +1044,48 @@ fn step_layer(
             threshold_into(acc, out_hw, *out_c, thresholds, bits_out);
             Ok(StepOut::Act)
         }
-        LayerWeights::BinFc { in_f, out_f, words_per_row, thresholds, .. } => {
+        LayerWeights::BinFc { in_f, out_f, .. } => {
             flatten_act(&input, *in_f, fc_row)?;
             bits_out.reset(1, *out_f);
-            for n in 0..*out_f {
-                let w = layer_weight_row(layer, n, *words_per_row);
-                let matches = *in_f as i32 - xor_popcount(&fc_row[..], w) as i32;
-                if matches >= thresholds[n] {
-                    bits_out.set(0, 0, n, true);
-                }
-            }
+            bin_fc_select(layer, &fc_row[..], |n| bits_out.set(0, 0, n, true));
             Ok(StepOut::Act)
         }
-        LayerWeights::BinFcOut { in_f, out_f, words_per_row, scale, bias, .. } => {
+        LayerWeights::BinFcOut { in_f, .. } => {
             flatten_act(&input, *in_f, fc_row)?;
-            scores.clear();
-            for n in 0..*out_f {
-                let w = layer_weight_row(layer, n, *words_per_row);
-                let matches = *in_f as i32 - xor_popcount(&fc_row[..], w) as i32;
-                scores.push(matches as f32 * scale[n] + bias[n]);
-            }
+            bin_fc_out_scores(layer, &fc_row[..], scores);
             Ok(StepOut::Scores)
         }
+    }
+}
+
+/// Shared hidden-FC forward (the single implementation behind both the
+/// whole-image [`step_layer`] and the row-streaming
+/// [`LayerStepper::flush`]): calls `on_set(n)` for every output feature
+/// whose packed-dot-product match count clears its threshold (eq. 8).
+fn bin_fc_select(layer: &LayerWeights, fc_row: &[u64], mut on_set: impl FnMut(usize)) {
+    let LayerWeights::BinFc { in_f, out_f, words_per_row, thresholds, .. } = layer else {
+        unreachable!("bin_fc_select on a non-BinFc layer");
+    };
+    for n in 0..*out_f {
+        let w = layer_weight_row(layer, n, *words_per_row);
+        let matches = *in_f as i32 - xor_popcount(fc_row, w) as i32;
+        if matches >= thresholds[n] {
+            on_set(n);
+        }
+    }
+}
+
+/// Shared classifier forward (affine Norm, paper fig. 3 output layer) —
+/// same single-implementation discipline as [`bin_fc_select`].
+fn bin_fc_out_scores(layer: &LayerWeights, fc_row: &[u64], scores: &mut Vec<f32>) {
+    let LayerWeights::BinFcOut { in_f, out_f, words_per_row, scale, bias, .. } = layer else {
+        unreachable!("bin_fc_out_scores on a non-classifier layer");
+    };
+    scores.clear();
+    for n in 0..*out_f {
+        let w = layer_weight_row(layer, n, *words_per_row);
+        let matches = *in_f as i32 - xor_popcount(fc_row, w) as i32;
+        scores.push(matches as f32 * scale[n] + bias[n]);
     }
 }
 
@@ -792,20 +1376,30 @@ fn threshold_into(y: &[i32], hw: usize, c: usize, thresholds: &[i32], out: &mut 
     out.reshape_for_overwrite(hw, c);
     let wpp = out.words_per_pixel;
     for p in 0..hw * hw {
-        let row = &y[p * c..(p + 1) * c];
         let words = &mut out.data[p * wpp..(p + 1) * wpp];
-        for (w, word_out) in words.iter_mut().enumerate() {
-            let lo = w * 64;
-            let n = (c - lo).min(64);
-            let mut word = 0u64;
-            for (b, (&v, &t)) in row[lo..lo + n]
-                .iter()
-                .zip(&thresholds[lo..lo + n])
-                .enumerate()
-            {
-                word |= ((v >= t) as u64) << b;
-            }
-            *word_out = word;
+        threshold_pixel(&y[p * c..(p + 1) * c], c, thresholds, words);
+    }
+}
+
+/// Pack one pixel's NormBinarize compares into its packed words — the
+/// single implementation behind both [`threshold_into`] (whole plane) and
+/// [`threshold_row`] (row stream), so the two paths cannot drift.  Every
+/// word is written in full (pad bits zero), so callers may skip
+/// pre-zeroing; the 64-wide chunked compare is the vectorizable shape the
+/// PERF note above describes.
+#[inline]
+fn threshold_pixel(row: &[i32], c: usize, thresholds: &[i32], words: &mut [u64]) {
+    for (w, word_out) in words.iter_mut().enumerate() {
+        let lo = w * 64;
+        let n = (c - lo).min(64);
+        let mut word = 0u64;
+        for (b, (&v, &t)) in row[lo..lo + n]
+            .iter()
+            .zip(&thresholds[lo..lo + n])
+            .enumerate()
+        {
+            word |= ((v >= t) as u64) << b;
         }
+        *word_out = word;
     }
 }

@@ -13,5 +13,7 @@ pub mod engine;
 pub mod scalar_ref;
 pub mod tensor;
 
-pub use engine::{Engine, LayerOutput, ModelError, Scratch};
+pub use engine::{
+    Engine, LayerOutput, LayerShape, LayerStepper, ModelError, RowRef, Scratch, StepperOut,
+};
 pub use tensor::{Activation, BitFmap};

@@ -21,7 +21,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::workload::{random_images, run_open_loop};
 use crate::coordinator::{
     Backend, BackendFactory, BatchPolicy, Coordinator, CoordinatorConfig, FpgaSimBackend,
-    GpuSimBackend, NativeBackend,
+    GpuSimBackend, NativeBackend, PipelineBackend,
 };
 use crate::fpga::stream::simulate;
 use crate::gpu::GpuKernel;
@@ -102,16 +102,19 @@ COMMANDS
       Run the throughput optimizer (paper §4.3) and print the plan.
   compare-gpu [--batches 1,2,...]
       Fig. 7: FPGA vs Titan-X-model throughput & energy across batch sizes.
-  infer [--config small] [--backend native|pjrt|fpga-sim] [--count N]
-        [--artifacts DIR]
+  infer [--config small] [--backend engine|pipeline|pjrt|fpga-sim]
+        [--count N] [--inflight N] [--artifacts DIR]
       Classify random workload images; print scores summary + timing.
-  serve [--config small] [--backend native|fpga-sim|gpu-sim] [--port P]
-        [--max-batch N] [--max-wait-ms M] [--requests N] [--rate RPS]
-        [--workers W] [--queue-depth D] [--lanes L]
+  serve [--config small] [--backend engine|pipeline|fpga-sim|gpu-sim]
+        [--port P] [--max-batch N] [--max-wait-ms M] [--requests N]
+        [--rate RPS] [--workers W] [--queue-depth D] [--lanes L]
+        [--inflight N]
       Start the sharded coordinator (W worker shards, one backend replica
-      each, bounded D-deep queues, L intra-batch lanes for the native
+      each, bounded D-deep queues, L intra-batch lanes for the engine
       backend); with --port, expose TCP; otherwise drive the built-in
-      open-loop workload and print serving metrics.
+      open-loop workload and print serving metrics.  `--backend pipeline`
+      serves from the row-streaming layer-pipeline runtime (all layers
+      concurrently active; N-image admission window per replica).
   selftest [--artifacts DIR]
       Cross-check native engine vs PJRT executable vs FPGA simulator on
       the shipped artifacts (exit non-zero on mismatch).
@@ -251,9 +254,14 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let backend = args.opt_or("backend", "native");
     let t0 = std::time::Instant::now();
     let scores: Vec<Vec<f32>> = match backend.as_str() {
-        "native" => {
+        "engine" | "native" => {
             let engine = crate::bcnn::Engine::new(model)?;
             engine.infer_batch(&images)?
+        }
+        "pipeline" => {
+            let inflight = args.usize_or("inflight", DEFAULT_INFLIGHT)?;
+            let mut b = PipelineBackend::new(model, inflight)?;
+            b.infer_owned(&images)?.scores
         }
         "fpga-sim" => {
             let mut b = FpgaSimBackend::new(model)?;
@@ -291,16 +299,28 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Build a per-worker backend factory for the named backend kind.
-fn backend_factory(kind: &str, model: BcnnModel, lanes: usize) -> Result<BackendFactory> {
+/// Default pipeline admission-window depth (images queued for feeding
+/// beyond those already streaming through the stages).
+pub const DEFAULT_INFLIGHT: usize = 8;
+
+/// Build a per-worker backend factory for the named backend kind
+/// (`engine` is the canonical name for the sequential native engine;
+/// `native` stays accepted for compatibility).
+fn backend_factory(
+    kind: &str,
+    model: BcnnModel,
+    lanes: usize,
+    inflight: usize,
+) -> Result<BackendFactory> {
     match kind {
-        "native" | "fpga-sim" | "gpu-sim" => {}
+        "engine" | "native" | "pipeline" | "fpga-sim" | "gpu-sim" => {}
         other => bail!("unknown backend {other:?}"),
     }
     let kind = kind.to_string();
     Ok(Arc::new(move || -> Result<Box<dyn Backend>> {
         Ok(match kind.as_str() {
-            "native" => Box::new(NativeBackend::with_lanes(model.clone(), lanes)?),
+            "engine" | "native" => Box::new(NativeBackend::with_lanes(model.clone(), lanes)?),
+            "pipeline" => Box::new(PipelineBackend::new(model.clone(), inflight)?),
             "fpga-sim" => Box::new(FpgaSimBackend::new(model.clone())?),
             _ => Box::new(GpuSimBackend::new(model.clone(), GpuKernel::Xnor)?),
         })
@@ -311,15 +331,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.opt_or("config", "small");
     let model = load_bcnn(args, &name)?;
     let cfg = model.config();
-    let backend_name = args.opt_or("backend", "native");
+    let backend_name = args.opt_or("backend", "engine");
     let workers = args.usize_or("workers", 1)?.max(1);
     let queue_depth = args.usize_or("queue-depth", 256)?.max(1);
     let lanes = args.usize_or("lanes", 1)?.max(1);
+    let inflight = args.usize_or("inflight", DEFAULT_INFLIGHT)?.max(1);
     let policy = BatchPolicy {
         max_batch: args.usize_or("max-batch", 16)?,
         max_wait: Duration::from_millis(args.usize_or("max-wait-ms", 2)? as u64),
     };
-    let factory = backend_factory(&backend_name, model, lanes)?;
+    let factory = backend_factory(&backend_name, model, lanes, inflight)?;
     let coord =
         Coordinator::start_sharded(factory, CoordinatorConfig { policy, workers, queue_depth })?;
 

@@ -10,6 +10,10 @@
 //!   the paper's accelerator would deliver.
 //! * [`GpuSimBackend`] — native numerics + the Titan X analytic model
 //!   (whole-batch completion), the Fig. 7 comparator on the serving path.
+//! * [`crate::pipeline::PipelineBackend`] — the row-streaming
+//!   layer-pipeline runtime (all layers concurrently active, paper §4);
+//!   lives in `crate::pipeline` and is re-exported from
+//!   [`crate::coordinator`].
 
 use std::sync::Arc;
 use std::time::Duration;

@@ -35,6 +35,9 @@ pub use backend::{
     Backend, BackendFactory, BatchResult, FpgaSimBackend, GpuSimBackend, NativeBackend,
     PjrtBackend,
 };
+// the row-streaming layer-pipeline backend lives in `crate::pipeline` but
+// is served through this coordinator like every other backend
+pub use crate::pipeline::PipelineBackend;
 pub use batcher::{BatchPolicy, Batcher, Msg};
 pub use request::{InferError, InferReply, InferRequest, SubmitError};
 pub use server::{Client, Coordinator, CoordinatorConfig};

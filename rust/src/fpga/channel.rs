@@ -7,10 +7,29 @@
 //! streaming architecture — and is what makes system throughput eq. 12's
 //! `max(C_L)` instead of `sum(C_L)`.
 
+/// Slots per inter-layer channel: the paper's §4.3 channels are *double*
+/// buffered (one slot being produced while the other is consumed).  This
+/// constant is the single source of truth for inter-layer buffer depth —
+/// both the phase simulator's [`DoubleBuffer`] and the row-streaming
+/// pipeline runtime's FIFO capacity ([`fifo_rows`]) derive from it.
+pub const CHANNEL_SLOTS: usize = 2;
+
+/// Row capacity of a software FIFO standing in for a double-buffered
+/// inter-layer channel whose slots each hold one feature map of
+/// `rows_per_image` rows.  `CHANNEL_SLOTS` slots x one image of rows per
+/// slot — the row-streaming pipeline can hold exactly as much in-flight
+/// data between two adjacent layers as the paper's ping-pong memory does
+/// (`rows_per_image` is clamped to >= 1 so degenerate 1-pixel FC "maps"
+/// still get a usable channel).
+pub const fn fifo_rows(rows_per_image: usize) -> usize {
+    let rows = if rows_per_image == 0 { 1 } else { rows_per_image };
+    CHANNEL_SLOTS * rows
+}
+
 /// A two-slot ping-pong buffer carrying `T` between adjacent layers.
 #[derive(Debug, Clone)]
 pub struct DoubleBuffer<T> {
-    slots: [Option<T>; 2],
+    slots: [Option<T>; CHANNEL_SLOTS],
     /// Index of the slot the consumer reads this phase.
     front: usize,
     writes: u64,
@@ -69,6 +88,18 @@ impl<T> DoubleBuffer<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fifo_rows_derives_from_channel_geometry() {
+        // the pipeline runtime's FIFO depth and the simulator's ping-pong
+        // buffer must never drift apart: both are CHANNEL_SLOTS deep
+        assert_eq!(CHANNEL_SLOTS, 2, "paper §4.3: channels are double-buffered");
+        for rows in [1usize, 2, 8, 32] {
+            assert_eq!(fifo_rows(rows), CHANNEL_SLOTS * rows);
+        }
+        // degenerate 1-pixel FC maps still get a two-slot channel
+        assert_eq!(fifo_rows(0), CHANNEL_SLOTS);
+    }
 
     #[test]
     fn pingpong_flow() {

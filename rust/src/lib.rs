@@ -8,10 +8,13 @@
 //! * **L3** is this crate: the serving coordinator ([`coordinator`]), the
 //!   PJRT runtime that executes the AOT artifacts ([`runtime`]), the native
 //!   packed-`u64` inference engine ([`bcnn`]) used as the hot path and as
-//!   the functional model of the FPGA datapath, and the paper's
-//!   architecture itself as a simulator: [`fpga`] (timing/resource/power),
-//!   [`optimizer`] (the §4.3 throughput-balancing model, Table 3) and
-//!   [`gpu`] (the Titan X comparator of Fig. 7).
+//!   the functional model of the FPGA datapath, the row-streaming
+//!   layer-pipeline runtime ([`pipeline`]) that executes the paper's
+//!   all-layers-concurrent dataflow for real on host threads, and the
+//!   paper's architecture itself as a simulator: [`fpga`]
+//!   (timing/resource/power), [`optimizer`] (the §4.3
+//!   throughput-balancing model, Table 3) and [`gpu`] (the Titan X
+//!   comparator of Fig. 7).
 //!
 //! Python never runs at request time: the `repro` binary is self-contained
 //! once `make artifacts` has produced `artifacts/*.hlo.txt` + `*.bcnn`.
@@ -24,6 +27,7 @@ pub mod fpga;
 pub mod gpu;
 pub mod model;
 pub mod optimizer;
+pub mod pipeline;
 pub mod runtime;
 pub mod tables;
 pub mod util;

@@ -1,0 +1,61 @@
+//! [`PipelineBackend`] — the layer-pipeline runtime behind the
+//! coordinator's [`Backend`] trait, so the sharded worker pool can serve
+//! from a row-streaming pipeline instead of the sequential engine.
+//!
+//! `infer_batch` submits every image of the batch before waiting on any
+//! of them, so the whole batch is in flight across the stages at once;
+//! but unlike a batch-parallel device, the pipeline gains nothing *from*
+//! the batching — single images submitted back-to-back through
+//! [`PipelineRuntime::submit`] sustain the same throughput (the paper's
+//! batch-insensitivity claim, measured in `benches/fig7_batch_sweep.rs`).
+//!
+//! Each backend replica owns its own runtime (one thread per layer plus a
+//! feeder), so a sharded coordinator with `W` workers runs `W *
+//! (layers + 1)` pipeline threads — size the pool accordingly.
+
+use anyhow::Result;
+
+use crate::bcnn::Engine;
+use crate::coordinator::backend::{Backend, BatchResult};
+use crate::model::BcnnModel;
+use crate::pipeline::runtime::PipelineRuntime;
+
+/// Row-streaming layer-pipeline inference backend.
+pub struct PipelineBackend {
+    runtime: PipelineRuntime,
+}
+
+impl PipelineBackend {
+    /// Validate the model and spawn the stage pipeline.  `inflight` is
+    /// the runtime's admission window (see [`PipelineRuntime::new`]).
+    pub fn new(model: BcnnModel, inflight: usize) -> Result<Self> {
+        let engine = Engine::new(model)?;
+        Ok(Self { runtime: PipelineRuntime::new(engine, inflight)? })
+    }
+
+    pub fn runtime(&self) -> &PipelineRuntime {
+        &self.runtime
+    }
+}
+
+impl Backend for PipelineBackend {
+    fn name(&self) -> &str {
+        "pipeline"
+    }
+
+    fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchResult> {
+        // submit everything first: the whole batch streams through the
+        // stages concurrently, tickets complete in submission order
+        let mut tickets = Vec::with_capacity(images.len());
+        for img in images {
+            // the runtime's feeder slices rows on its own thread, so it
+            // needs an owned copy (the only copy on this path)
+            tickets.push(self.runtime.submit(img.to_vec())?);
+        }
+        let scores = tickets
+            .into_iter()
+            .map(|t| t.wait())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BatchResult { scores, modeled_device_time: None })
+    }
+}

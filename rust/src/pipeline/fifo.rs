@@ -1,0 +1,176 @@
+//! Bounded SPSC row FIFO — the software stand-in for the paper's §4.3
+//! double-buffered inter-layer memory channel.
+//!
+//! Capacity comes from [`crate::fpga::channel::fifo_rows`]: `CHANNEL_SLOTS`
+//! feature maps' worth of rows, so a producer stage can run at most one
+//! full image ahead of its consumer — exactly the decoupling the ping-pong
+//! memories provide on the device, and the property that bounds in-flight
+//! memory no matter how many images are queued behind the pipeline.
+//!
+//! Endpoints are single-owner (no `Clone`), so the channel is SPSC by
+//! construction.  Dropping the sender closes the stream (the receiver
+//! drains what is buffered, then sees `None`); dropping the receiver
+//! makes further sends fail fast, which is how shutdown propagates
+//! *upstream* through a pipeline without poison messages racing full
+//! queues.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct State<T> {
+    buf: VecDeque<T>,
+    sender_gone: bool,
+    receiver_gone: bool,
+}
+
+struct Inner<T> {
+    state: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+/// Producer endpoint of a bounded SPSC row FIFO.
+pub struct RowSender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Consumer endpoint of a bounded SPSC row FIFO.
+pub struct RowReceiver<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Create a bounded SPSC FIFO holding at most `capacity` items
+/// (`capacity` is clamped to at least 1).
+pub fn bounded<T>(capacity: usize) -> (RowSender<T>, RowReceiver<T>) {
+    let inner = Arc::new(Inner {
+        state: Mutex::new(State {
+            buf: VecDeque::with_capacity(capacity.max(1)),
+            sender_gone: false,
+            receiver_gone: false,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        capacity: capacity.max(1),
+    });
+    (RowSender { inner: Arc::clone(&inner) }, RowReceiver { inner })
+}
+
+impl<T> RowSender<T> {
+    /// Blocking send: waits while the FIFO is full.  Returns the value
+    /// back if the receiver is gone (the downstream stage exited), so the
+    /// caller can stop producing.
+    pub fn send(&self, value: T) -> Result<(), T> {
+        let mut state = self.inner.state.lock().unwrap();
+        loop {
+            if state.receiver_gone {
+                return Err(value);
+            }
+            if state.buf.len() < self.inner.capacity {
+                state.buf.push_back(value);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            state = self.inner.not_full.wait(state).unwrap();
+        }
+    }
+
+    /// Configured capacity (for the geometry-pinning tests).
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+}
+
+impl<T> Drop for RowSender<T> {
+    fn drop(&mut self) {
+        let mut state = self.inner.state.lock().unwrap();
+        state.sender_gone = true;
+        drop(state);
+        // wake a receiver blocked on an empty queue so it observes EOS
+        self.inner.not_empty.notify_all();
+    }
+}
+
+impl<T> RowReceiver<T> {
+    /// Blocking receive: waits while the FIFO is empty.  Returns `None`
+    /// once the sender is gone *and* the buffer is drained — in-flight
+    /// rows are always delivered before end-of-stream.
+    pub fn recv(&self) -> Option<T> {
+        let mut state = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(value) = state.buf.pop_front() {
+                drop(state);
+                self.inner.not_full.notify_one();
+                return Some(value);
+            }
+            if state.sender_gone {
+                return None;
+            }
+            state = self.inner.not_empty.wait(state).unwrap();
+        }
+    }
+
+    /// Configured capacity (for the geometry-pinning tests).
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+}
+
+impl<T> Drop for RowReceiver<T> {
+    fn drop(&mut self) {
+        let mut state = self.inner.state.lock().unwrap();
+        state.receiver_gone = true;
+        state.buf.clear();
+        drop(state);
+        // wake a producer blocked on a full queue so it sees the closure
+        self.inner.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_eos() {
+        let (tx, rx) = bounded(4);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        // buffered items drain before end-of-stream
+        let got = (rx.recv(), rx.recv(), rx.recv(), rx.recv());
+        assert_eq!(got, (Some(0), Some(1), Some(2), Some(3)));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn send_blocks_until_consumer_drains() {
+        let (tx, rx) = bounded(1);
+        tx.send(1u32).unwrap();
+        let producer = std::thread::spawn(move || {
+            tx.send(2).unwrap(); // blocks until the 1 is consumed
+            3u32
+        });
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(producer.join().unwrap(), 3);
+    }
+
+    #[test]
+    fn dropped_receiver_fails_sends_and_unblocks_producer() {
+        let (tx, rx) = bounded(1);
+        tx.send(7u32).unwrap(); // fifo now full
+        let producer = std::thread::spawn(move || tx.send(8).err());
+        // the producer may already be blocked on the full queue; dropping
+        // the receiver must wake it with its value handed back
+        drop(rx);
+        assert_eq!(producer.join().unwrap(), Some(8));
+    }
+
+    #[test]
+    fn capacity_clamped_to_one() {
+        let (tx, _rx) = bounded::<u8>(0);
+        assert_eq!(tx.capacity(), 1);
+    }
+}

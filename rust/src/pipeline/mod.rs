@@ -1,0 +1,33 @@
+//! Row-streaming layer-pipeline inference runtime (paper §4, fig. 4/7).
+//!
+//! The repo's `fpga::stream` simulator *models* the paper's headline
+//! property — all layers concurrently active behind double-buffered
+//! channels, so throughput is eq. 12's `max(C_L)` and independent of
+//! batch size — but the serving engine executed layers sequentially per
+//! image.  This module makes the property real on the host:
+//!
+//! * [`fifo`] — bounded SPSC row FIFOs sized from the §4.3 channel
+//!   geometry ([`crate::fpga::channel::fifo_rows`]): the software
+//!   equivalent of the ping-pong inter-layer memories.
+//! * [`stage`] — one thread per layer wrapping the engine's row-granular
+//!   [`crate::bcnn::engine::LayerStepper`]; a stage starts emitting
+//!   output rows while its input image is still arriving.
+//! * [`runtime`] — [`PipelineRuntime`]: feeder + stages + in-order score
+//!   tickets, bounded admission, poison-free cascade shutdown.
+//! * [`backend`] — [`PipelineBackend`]: the runtime behind the
+//!   coordinator's `Backend` trait (`--backend pipeline` in the CLI).
+//!
+//! The FINN-style dataflow scheduling (one compute engine per layer,
+//! rate-matched by buffer depth) is what makes serving throughput
+//! batch-insensitive: a stream of individual requests keeps every stage
+//! busy just as well as a large batch does.  `benches/fig7_batch_sweep.rs`
+//! measures exactly that signature.
+
+pub mod backend;
+pub mod fifo;
+pub mod runtime;
+pub mod stage;
+
+pub use backend::PipelineBackend;
+pub use runtime::{PipelineRuntime, ScoreTicket};
+pub use stage::PipeRow;

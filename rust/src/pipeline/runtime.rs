@@ -1,0 +1,262 @@
+//! The layer-pipeline runtime: every layer a concurrently-active stage.
+//!
+//! ```text
+//! submit(image) ─► admission queue (inflight) ─► feeder thread
+//!     feeder: image -> rows ─► FIFO(2·hw₀ rows) ─► stage 0 (layer 0)
+//!                                 │ rows stream row-by-row
+//!                                 ▼
+//!                              FIFO(2·hw₁) ─► stage 1 ─► … ─► classifier
+//!                                                              stage
+//!                                                                │ scores
+//!                                                                ▼
+//!                                              pending-reply queue ─► ticket
+//! ```
+//!
+//! Each inter-stage FIFO holds [`crate::fpga::channel::CHANNEL_SLOTS`]
+//! images' worth of rows ([`fifo_rows`]), mirroring the paper's §4.3
+//! double-buffered channels: a stage can run at most one full feature map
+//! ahead of its consumer, and *multiple images are in flight across the
+//! stages simultaneously* — which is why throughput is set by the slowest
+//! stage (eq. 12's `max(C_L)`), not by the sum of layers, and why it does
+//! not depend on how requests are grouped into batches.
+//!
+//! Shutdown has no poison tokens: dropping the runtime closes the
+//! admission queue; the feeder finishes the images already admitted and
+//! exits; end-of-stream then cascades stage by stage (each stage drains
+//! its FIFO before observing closure), the classifier answers every
+//! completed image, and the runtime joins all threads.  Tickets for
+//! images that can no longer complete fail with a disconnect error —
+//! never a hang (see `pipeline_integration.rs::drop_with_images_in_flight`).
+
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::bcnn::engine::LayerShape;
+use crate::bcnn::Engine;
+use crate::fpga::channel::fifo_rows;
+use crate::pipeline::fifo::{bounded, RowSender};
+use crate::pipeline::stage::{
+    fail_pending, new_pending, register_reply, run_stage, PendingReplies, PipeRow, ScoreResult,
+    StageOutput,
+};
+
+/// An admitted image on its way to the feeder.
+type FeedMsg = (Vec<i32>, mpsc::Sender<ScoreResult>);
+
+/// Receipt for one submitted image; [`ScoreTicket::wait`] blocks for its
+/// scores.  Tickets complete in submission order.
+pub struct ScoreTicket {
+    rx: mpsc::Receiver<ScoreResult>,
+}
+
+impl ScoreTicket {
+    /// Block until the image's scores arrive (or the pipeline fails /
+    /// shuts down — an error, never a hang).
+    pub fn wait(self) -> Result<Vec<f32>> {
+        match self.rx.recv() {
+            Ok(Ok(scores)) => Ok(scores),
+            Ok(Err(message)) => Err(anyhow!("{message}")),
+            Err(_) => Err(anyhow!("pipeline shut down with the image in flight")),
+        }
+    }
+
+    /// Non-blocking probe (used by the open-window bench driver).
+    pub fn try_wait(&self) -> Option<Result<Vec<f32>>> {
+        match self.rx.try_recv() {
+            Ok(Ok(scores)) => Some(Ok(scores)),
+            Ok(Err(message)) => Some(Err(anyhow!("{message}"))),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(anyhow!("pipeline shut down with the image in flight")))
+            }
+        }
+    }
+}
+
+/// A running row-streaming layer pipeline over one [`Engine`].
+pub struct PipelineRuntime {
+    /// `None` once shutdown has begun (admission closed).
+    feeder_tx: Option<RowSender<FeedMsg>>,
+    threads: Vec<JoinHandle<()>>,
+    pending: PendingReplies,
+    shapes: Vec<LayerShape>,
+    fifo_caps: Vec<usize>,
+    inflight: usize,
+    input_len: usize,
+}
+
+impl PipelineRuntime {
+    /// Spawn one stage thread per layer plus the feeder.  `inflight` is
+    /// the admission-window depth: how many whole images may be queued
+    /// for feeding beyond those already streaming through the stages
+    /// (clamped to >= 1).
+    pub fn new(engine: Engine, inflight: usize) -> Result<Self> {
+        let shapes = engine.layer_shapes();
+        let n = shapes.len();
+        match shapes.last() {
+            None => bail!("model has no layers"),
+            Some(last) if !last.scores => bail!("model's final layer is not a classifier"),
+            _ => {}
+        }
+        if let Some(i) = shapes[..n - 1].iter().position(|s| s.scores) {
+            bail!("classifier layer {i} is not last");
+        }
+
+        let inflight = inflight.max(1);
+        let input_len = shapes[0].in_hw * shapes[0].in_hw * shapes[0].in_c;
+        let engine = Arc::new(engine);
+        let pending = new_pending();
+        let mut threads = Vec::with_capacity(n + 1);
+
+        // build the inter-stage FIFOs front to back, then hand each stage
+        // its receiver and the next stage's sender
+        let fifo_caps: Vec<usize> = shapes.iter().map(|s| fifo_rows(s.in_hw)).collect();
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for &cap in &fifo_caps {
+            let (tx, rx) = bounded::<PipeRow>(cap);
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        // stage i sends into stage i+1's FIFO; the classifier stage sends
+        // into the pending-reply queue.  Walk back to front so each
+        // iteration can move the next stage's sender out of the vec.
+        let mut next_tx: Option<RowSender<PipeRow>> = None;
+        for i in (0..n).rev() {
+            let rx = receivers.pop().expect("one receiver per stage");
+            let tx = match next_tx.take() {
+                Some(tx) => StageOutput::Rows(tx),
+                None => StageOutput::Scores(Arc::clone(&pending)),
+            };
+            next_tx = senders.pop();
+            let engine = Arc::clone(&engine);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("pipeline-stage-{i}"))
+                    .spawn(move || {
+                        let mut stepper =
+                            engine.layer_stepper(i).expect("index validated at construction");
+                        run_stage(&mut stepper, rx, tx);
+                    })
+                    .expect("spawn pipeline stage"),
+            );
+        }
+        let stage0_tx = next_tx.expect("stage 0 sender");
+
+        // the feeder: admitted images -> rows into stage 0
+        let (feeder_tx, feeder_rx) = bounded::<FeedMsg>(inflight);
+        let feed_shape = shapes[0];
+        threads.push(
+            std::thread::Builder::new()
+                .name("pipeline-feeder".into())
+                .spawn({
+                    let pending = Arc::clone(&pending);
+                    move || {
+                        let row_len = feed_shape.in_hw * feed_shape.in_c;
+                        while let Some((image, reply)) = feeder_rx.recv() {
+                            // register the reply BEFORE feeding any rows so
+                            // the classifier pops replies in image order
+                            // (and so an already-failed pipeline fails the
+                            // ticket immediately instead of queueing it)
+                            register_reply(&pending, reply);
+                            let mut aborted = false;
+                            for row in image.chunks(row_len) {
+                                if stage0_tx.send(PipeRow::Int(row.to_vec())).is_err() {
+                                    aborted = true;
+                                    break;
+                                }
+                            }
+                            if aborted {
+                                // a stage exited: fail everything in flight
+                                // and everything still being admitted
+                                fail_pending(&pending, "pipeline stage exited");
+                                while let Some((_image, reply)) = feeder_rx.recv() {
+                                    let _ = reply.send(Err("pipeline stage exited".into()));
+                                }
+                                return;
+                            }
+                        }
+                        // normal shutdown: dropping stage0_tx cascades
+                        // end-of-stream down the stages
+                    }
+                })
+                .expect("spawn pipeline feeder"),
+        );
+
+        Ok(Self {
+            feeder_tx: Some(feeder_tx),
+            threads,
+            pending,
+            shapes,
+            fifo_caps,
+            inflight,
+            input_len,
+        })
+    }
+
+    /// Submit one image (`hw*hw*c` NHWC values).  Blocks while the
+    /// admission window is full — bounded memory, explicit backpressure —
+    /// and returns a ticket that completes in submission order.
+    pub fn submit(&self, image: Vec<i32>) -> Result<ScoreTicket> {
+        if image.len() != self.input_len {
+            bail!("image size {} != {}", image.len(), self.input_len);
+        }
+        let Some(feeder_tx) = &self.feeder_tx else {
+            bail!("pipeline is shut down");
+        };
+        let (tx, rx) = mpsc::channel();
+        feeder_tx
+            .send((image, tx))
+            .map_err(|_| anyhow!("pipeline is shut down"))?;
+        Ok(ScoreTicket { rx })
+    }
+
+    /// Per-layer I/O geometry (same order as the stages).
+    pub fn shapes(&self) -> &[LayerShape] {
+        &self.shapes
+    }
+
+    /// Input-FIFO row capacity per stage — derived from the §4.3 channel
+    /// geometry ([`fifo_rows`]); the pinning test asserts this.
+    pub fn stage_fifo_capacities(&self) -> &[usize] {
+        &self.fifo_caps
+    }
+
+    /// Admission-window depth.
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
+    /// Stage threads (layers) plus the feeder.
+    pub fn thread_count(&self) -> usize {
+        self.shapes.len() + 1
+    }
+
+    /// Close admission, let the stages drain every admitted image, join
+    /// all threads, and fail any ticket that could not complete.
+    pub fn shutdown(mut self) {
+        self.shutdown_now();
+    }
+
+    fn shutdown_now(&mut self) {
+        // closing the admission queue makes the feeder exit after the
+        // images it has already accepted; EOS then cascades through the
+        // stages, which drain their FIFOs before exiting, and the
+        // classifier latches the pending queue on its way out
+        self.feeder_tx = None;
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        // belt and braces: if the threads were already gone the latch is
+        // set, but make sure no ticket can be left waiting either way
+        fail_pending(&self.pending, "pipeline shut down with the image in flight");
+    }
+}
+
+impl Drop for PipelineRuntime {
+    fn drop(&mut self) {
+        self.shutdown_now();
+    }
+}

@@ -1,0 +1,177 @@
+//! One pipeline stage: a thread wrapping a [`LayerStepper`].
+//!
+//! The stage consumes input rows from its bounded FIFO as they arrive,
+//! pushes them through the stepper, and forwards every emitted output row
+//! downstream — so the stage is *concurrently active* with every other
+//! stage, the defining property of the paper's §4 streaming architecture.
+//! Image boundaries are implicit: a stage knows its layer consumes exactly
+//! `in_hw` rows per image, so after the `in_hw`-th row it flushes (bottom
+//! border / FC compute) and resets for the next image.  No marker tokens
+//! means no marker/poison races with full queues.
+//!
+//! Shutdown is edge-triggered in both directions:
+//! * upstream closure (sender dropped) — the stage drains buffered rows,
+//!   then exits and drops its own sender, cascading end-of-stream down
+//!   the pipe;
+//! * downstream closure (receiver dropped) — the stage's forward `send`
+//!   fails, it exits and drops its receiver, cascading the closure up the
+//!   pipe until the feeder observes it.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::bcnn::engine::{LayerStepper, RowRef, StepperOut};
+
+/// A row in flight between stages: raw integers into the first layer,
+/// packed bits everywhere else.
+#[derive(Debug, Clone)]
+pub enum PipeRow {
+    Int(Vec<i32>),
+    Bits(Vec<u64>),
+}
+
+/// Per-image completion result delivered to a submit ticket.
+pub type ScoreResult = Result<Vec<f32>, String>;
+
+/// FIFO-ordered reply senders for images in flight, plus the pipeline's
+/// failure latch.  The feeder registers one sender per admitted image
+/// *before* feeding its rows; the classifier stage pops one per completed
+/// image.  The linear pipeline preserves image order, so front-of-queue
+/// is always the next image to finish.
+///
+/// The latch makes "no ticket ever hangs" airtight: once the classifier
+/// stage exits (shutdown drain or failure cascade) it calls
+/// [`fail_pending`], which — atomically with [`register_reply`] — fails
+/// every queued ticket AND every ticket registered afterwards.  Without
+/// the latch, an image fed while a *mid*-pipeline stage was already dead
+/// would vanish between live stages and its ticket would wait forever.
+pub struct PendingState {
+    queue: VecDeque<mpsc::Sender<ScoreResult>>,
+    /// `Some(reason)` once no new image can ever complete.
+    failed: Option<String>,
+}
+
+/// Shared handle to the pending-reply state.
+pub type PendingReplies = Arc<Mutex<PendingState>>;
+
+/// Fresh pending-reply state (no images in flight, latch clear).
+pub fn new_pending() -> PendingReplies {
+    Arc::new(Mutex::new(PendingState { queue: VecDeque::new(), failed: None }))
+}
+
+/// Register an admitted image's reply sender.  If the pipeline has
+/// already failed, the ticket is failed immediately instead of being
+/// queued behind a classifier that will never pop it.
+pub fn register_reply(pending: &PendingReplies, reply: mpsc::Sender<ScoreResult>) {
+    let mut state = pending.lock().unwrap();
+    match &state.failed {
+        Some(reason) => {
+            let _ = reply.send(Err(reason.clone()));
+        }
+        None => state.queue.push_back(reply),
+    }
+}
+
+/// Latch the failure `reason` (first caller wins) and fail every ticket
+/// currently in flight.
+pub fn fail_pending(pending: &PendingReplies, reason: &str) {
+    let mut state = pending.lock().unwrap();
+    if state.failed.is_none() {
+        state.failed = Some(reason.to_string());
+    }
+    let reason = state.failed.clone().expect("latched above");
+    for reply in state.queue.drain(..) {
+        let _ = reply.send(Err(reason.clone()));
+    }
+}
+
+/// Where a stage's emissions go: another stage's FIFO, or (for the
+/// classifier stage) the pending-reply queue.
+pub enum StageOutput {
+    Rows(super::fifo::RowSender<PipeRow>),
+    Scores(PendingReplies),
+}
+
+/// Run one stage to completion.  Returns when the input stream closes
+/// (normal drain) or the downstream side disappears (abort cascade).
+pub fn run_stage(
+    stepper: &mut LayerStepper<'_>,
+    rx: super::fifo::RowReceiver<PipeRow>,
+    tx: StageOutput,
+) {
+    let in_hw = stepper.shape().in_hw;
+    let mut rows_in_image = 0usize;
+    // a push emits at most one row and a flush at most one more, so the
+    // staging buffer never grows past 2
+    let mut emitted: Vec<StepperOut> = Vec::with_capacity(2);
+
+    while let Some(row) = rx.recv() {
+        let rref = match &row {
+            PipeRow::Int(v) => RowRef::Int(v),
+            PipeRow::Bits(v) => RowRef::Bits(v),
+        };
+        if let Err(e) = stepper.push_row(rref, &mut |o| emitted.push(o)) {
+            fail_stage(&tx, &e);
+            return;
+        }
+        rows_in_image += 1;
+        if rows_in_image == in_hw {
+            rows_in_image = 0;
+            if let Err(e) = stepper.flush(&mut |o| emitted.push(o)) {
+                fail_stage(&tx, &e);
+                return;
+            }
+        }
+        for out in emitted.drain(..) {
+            if !forward(&tx, out) {
+                finish_stage(&tx);
+                return; // downstream gone: cascade the closure upstream
+            }
+        }
+    }
+    // input closed (shutdown drain or upstream failure): dropping rx/tx
+    // cascades the closure; if this is the classifier, latch so nothing
+    // registered from now on can wait on a stage that no longer runs
+    finish_stage(&tx);
+}
+
+/// On classifier-stage exit (any reason), latch the pending queue: no
+/// image can complete anymore, so in-flight and future tickets must fail
+/// instead of waiting forever.  No-op for non-classifier stages.
+fn finish_stage(tx: &StageOutput) {
+    if let StageOutput::Scores(pending) = tx {
+        fail_pending(pending, "pipeline shut down with the image in flight");
+    }
+}
+
+/// Forward one emission; `false` means the downstream side is gone.
+fn forward(tx: &StageOutput, out: StepperOut) -> bool {
+    match (tx, out) {
+        (StageOutput::Rows(tx), StepperOut::Row(row)) => tx.send(PipeRow::Bits(row)).is_ok(),
+        (StageOutput::Scores(pending), StepperOut::Scores(scores)) => {
+            let slot = pending.lock().unwrap().queue.pop_front();
+            if let Some(reply) = slot {
+                // the ticket holder may have given up; that's their right
+                let _ = reply.send(Ok(scores));
+            }
+            true
+        }
+        // a non-classifier layer emitting into the score sink (or vice
+        // versa) is a construction bug caught by PipelineRuntime::new
+        (StageOutput::Rows(_), StepperOut::Scores(_))
+        | (StageOutput::Scores(_), StepperOut::Row(_)) => {
+            unreachable!("stage output kind mismatches layer kind")
+        }
+    }
+}
+
+/// A stepper error (impossible for rows produced by validated upstream
+/// stages, but never silently swallowed): if this is the classifier
+/// stage, latch and fail everything in flight with the real error; the
+/// upstream cascade (failed sends, then the feeder) handles the rest.
+fn fail_stage(tx: &StageOutput, error: &anyhow::Error) {
+    if let StageOutput::Scores(pending) = tx {
+        fail_pending(pending, &format!("pipeline stage failed: {error}"));
+    }
+}

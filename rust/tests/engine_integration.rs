@@ -6,7 +6,9 @@
 //! the check is equally strong).  Only the accuracy test needs `make
 //! artifacts`, and it skips cleanly without them.
 
-use repro::bcnn::{scalar_ref, Engine, LayerOutput, ModelError, Scratch};
+use repro::bcnn::{
+    scalar_ref, Activation, Engine, LayerOutput, ModelError, RowRef, Scratch, StepperOut,
+};
 use repro::coordinator::workload::random_images;
 use repro::fpga::kernel;
 use repro::fpga::timing::LayerParams;
@@ -212,6 +214,31 @@ fn malformed_weight_rows_rejected() {
 }
 
 #[test]
+fn inconsistent_layer_chain_rejected() {
+    // in_f shrunk within the same packed word count: every per-layer
+    // check still passes, so only the cross-layer geometry walk can
+    // catch it (before that walk existed, the row-streaming path would
+    // score such a model against phantom pad bits instead of erroring)
+    let cfg = custom_cfg(8, &[(16, true)], &[32]);
+    let mut model = BcnnModel::synthetic(&cfg, 4);
+    let mut declared = 0usize;
+    for layer in &mut model.layers {
+        if let LayerWeights::BinFc { in_f, .. } = layer {
+            declared = *in_f;
+            *in_f -= 6; // words_for unchanged, bit width wrong
+            break;
+        }
+    }
+    assert!(declared > 0, "config has a hidden FC layer");
+    match Engine::new(model) {
+        Err(ModelError::ChainMismatch { layer: 1, what: "input features", got, want }) => {
+            assert_eq!((got, want), (declared - 6, declared));
+        }
+        other => panic!("expected ChainMismatch at layer 1, got {other:?}"),
+    }
+}
+
+#[test]
 fn portable_run_layer_matches_prepared_path() {
     // the on-the-fly prepared path (arbitrary layer values) must agree
     // with the index-addressed prepared banks
@@ -231,6 +258,64 @@ fn portable_run_layer_matches_prepared_path() {
         match a {
             LayerOutput::Act(next) => act = next,
             LayerOutput::Scores(_) => break,
+        }
+    }
+}
+
+#[test]
+fn layer_stepper_rows_match_whole_image_layers() {
+    // the pipeline's building block: feeding a layer row by row must
+    // reproduce the whole-image path bit for bit — same packed words,
+    // same row count, same classifier floats
+    let model = load("tiny");
+    let engine = Engine::new(model.clone()).expect("valid model");
+    let img = random_images(&model.config(), 1, 55).pop().unwrap();
+    let mut act = Activation::Int { hw: model.input_hw, c: model.input_channels, data: img };
+    let mut scratch = Scratch::default();
+    for i in 0..model.layers.len() {
+        let mut stepper = engine.layer_stepper(i).unwrap();
+        let shape = stepper.shape();
+        let mut rows: Vec<Vec<u64>> = Vec::new();
+        let mut scores: Option<Vec<f32>> = None;
+        {
+            let mut emit = |o: StepperOut| match o {
+                StepperOut::Row(r) => rows.push(r),
+                StepperOut::Scores(s) => scores = Some(s),
+            };
+            match &act {
+                Activation::Int { hw, c, data } => {
+                    let (hw, c) = (*hw, *c);
+                    for y in 0..hw {
+                        stepper
+                            .push_row(RowRef::Int(&data[y * hw * c..(y + 1) * hw * c]), &mut emit)
+                            .unwrap();
+                    }
+                }
+                Activation::Bits(f) => {
+                    let wpr = f.hw * f.words_per_pixel;
+                    for y in 0..f.hw {
+                        stepper
+                            .push_row(RowRef::Bits(&f.data[y * wpr..(y + 1) * wpr]), &mut emit)
+                            .unwrap();
+                    }
+                }
+            }
+            stepper.flush(&mut emit).unwrap();
+        }
+        match engine.run_layer_at(i, &act, &mut scratch).unwrap() {
+            LayerOutput::Act(next) => {
+                let Activation::Bits(f) = &next else {
+                    panic!("layer {i}: expected binary activation");
+                };
+                assert_eq!(rows.len(), shape.out_hw, "layer {i} row count");
+                assert_eq!(rows.concat(), f.data, "layer {i} packed rows");
+                act = next;
+            }
+            LayerOutput::Scores(s) => {
+                assert!(rows.is_empty(), "classifier layer {i} must not emit rows");
+                assert_eq!(scores, Some(s), "layer {i} scores");
+                break;
+            }
         }
     }
 }

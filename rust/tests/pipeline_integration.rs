@@ -1,0 +1,205 @@
+//! Pipeline-runtime integration: the row-streaming layer pipeline against
+//! the whole-image engine and the textbook ±1 reference, plus the
+//! channel-geometry pinning and the shutdown-with-images-in-flight
+//! guarantees.
+//!
+//! The headline property: [`PipelineBackend`] output is **bit-identical**
+//! to `Engine::infer` on every shape — the pipeline runs the same
+//! tap-major kernels over a 3-row window, so not even the float ops of
+//! the classifier differ in order.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use repro::bcnn::{scalar_ref, Engine};
+use repro::coordinator::workload::random_images;
+use repro::coordinator::{
+    Backend, BackendFactory, BatchPolicy, Coordinator, CoordinatorConfig, PipelineBackend,
+};
+use repro::fpga::channel::{fifo_rows, CHANNEL_SLOTS};
+use repro::model::{BcnnModel, ConvSpec, NetConfig};
+use repro::pipeline::PipelineRuntime;
+
+fn load(name: &str) -> BcnnModel {
+    BcnnModel::load_or_synthetic(name, "artifacts", 0xB_C0DE).expect("built-in config")
+}
+
+/// Ad-hoc network shapes for the property sweep.
+fn custom_cfg(hw: usize, conv: &[(usize, bool)], fc: &[usize]) -> NetConfig {
+    NetConfig {
+        name: "pipe-prop".into(),
+        conv: conv
+            .iter()
+            .map(|&(out_channels, pool)| ConvSpec { out_channels, pool })
+            .collect(),
+        fc: fc.to_vec(),
+        classes: 10,
+        input_hw: hw,
+        input_channels: 3,
+        input_bits: 6,
+    }
+}
+
+#[test]
+fn pipeline_is_bit_exact_vs_engine_and_reference_on_random_shapes() {
+    // the shapes that stress the row window: odd hw (asymmetric borders),
+    // channel counts off the 64-bit lattice (partial packed words), pool
+    // on/off (fused pair folding), multi-FC tails (row-flatten order)
+    let cases: &[(usize, &[(usize, bool)], &[usize])] = &[
+        (8, &[(33, false), (65, true)], &[32]),
+        (7, &[(64, false)], &[16]),
+        (12, &[(100, true), (40, true)], &[]),
+        (6, &[(128, true), (96, false)], &[24]),
+        (3, &[(5, false)], &[]),
+        (2, &[(17, true)], &[]),
+    ];
+    for (ci, &(hw, conv, fc)) in cases.iter().enumerate() {
+        let cfg = custom_cfg(hw, conv, fc);
+        let model = BcnnModel::synthetic(&cfg, 0xD00D + ci as u64);
+        let engine = Engine::new(model.clone()).expect("valid model");
+        let mut backend = PipelineBackend::new(model.clone(), 4).expect("valid model");
+        let images = random_images(&cfg, 4, 1000 + ci as u64);
+        let piped = backend.infer_owned(&images).unwrap().scores;
+        assert_eq!(piped.len(), images.len());
+        for (ii, img) in images.iter().enumerate() {
+            // vs the whole-image engine: identical arithmetic, identical
+            // float op order -> exact equality
+            let seq = engine.infer(img).unwrap();
+            assert_eq!(piped[ii], seq, "case {ci} image {ii}: pipeline != engine");
+            // vs the textbook reference: same tolerance as the engine's
+            // own property sweep (float summation order differs there)
+            let slow = scalar_ref::infer_reference(&model, img).unwrap();
+            assert_eq!(piped[ii].len(), slow.len());
+            for (a, b) in piped[ii].iter().zip(&slow) {
+                assert!((a - b).abs() < 1e-3, "case {ci} image {ii}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_grouping_does_not_change_scores() {
+    // the same 12 images through batch sizes 1, 3, and 12 — grouping is a
+    // serving-side artifact and must be invisible in the numerics
+    let model = load("tiny");
+    let engine = Engine::new(model.clone()).expect("valid model");
+    let images = random_images(&model.config(), 12, 33);
+    let want: Vec<Vec<f32>> = images.iter().map(|i| engine.infer(i).unwrap()).collect();
+    for group in [1usize, 3, 12] {
+        let mut backend = PipelineBackend::new(model.clone(), 4).expect("valid model");
+        let mut got: Vec<Vec<f32>> = Vec::new();
+        for chunk in images.chunks(group) {
+            got.extend(backend.infer_owned(chunk).unwrap().scores);
+        }
+        assert_eq!(got, want, "batch grouping {group} changed the scores");
+    }
+}
+
+#[test]
+fn tickets_complete_in_submission_order_with_many_images_in_flight() {
+    let model = load("tiny");
+    let engine = Engine::new(model.clone()).expect("valid model");
+    let runtime = PipelineRuntime::new(Engine::new(model.clone()).unwrap(), 16).unwrap();
+    let images = random_images(&model.config(), 16, 5);
+    // submit everything before collecting anything: the whole set is in
+    // flight across the stages simultaneously
+    let tickets: Vec<_> = images
+        .iter()
+        .map(|img| runtime.submit(img.clone()).unwrap())
+        .collect();
+    for (img, ticket) in images.iter().zip(tickets) {
+        assert_eq!(ticket.wait().unwrap(), engine.infer(img).unwrap());
+    }
+}
+
+#[test]
+fn fifo_capacity_is_pinned_to_channel_geometry() {
+    // one source of truth: the pipeline's FIFO depth IS the §4.3
+    // double-buffer geometry — CHANNEL_SLOTS feature maps of rows per
+    // inter-layer channel, nothing locally invented
+    let model = load("tiny");
+    let runtime = PipelineRuntime::new(Engine::new(model).unwrap(), 2).unwrap();
+    let caps = runtime.stage_fifo_capacities();
+    let shapes = runtime.shapes();
+    assert_eq!(caps.len(), shapes.len());
+    for (cap, shape) in caps.iter().zip(shapes) {
+        assert_eq!(*cap, fifo_rows(shape.in_hw), "stage fifo drifted from channel geometry");
+        assert_eq!(*cap, CHANNEL_SLOTS * shape.in_hw.max(1));
+    }
+}
+
+#[test]
+fn drop_with_images_in_flight_neither_deadlocks_nor_leaks() {
+    let model = load("small");
+    let runtime = PipelineRuntime::new(Engine::new(model.clone()).unwrap(), 32).unwrap();
+    let images = random_images(&model.config(), 24, 9);
+    let tickets: Vec<_> = images
+        .iter()
+        .map(|img| runtime.submit(img.clone()).unwrap())
+        .collect();
+    // drop the runtime while all 24 images are somewhere between the
+    // feeder and the classifier; the drop must drain and join every
+    // stage thread in bounded time (watchdogged, not just test-timeout)
+    let dropper = std::thread::spawn(move || drop(runtime));
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !dropper.is_finished() {
+        assert!(Instant::now() < deadline, "PipelineRuntime::drop deadlocked");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    dropper.join().unwrap();
+    // every ticket resolves immediately now — drained images get scores,
+    // anything that could not complete gets an error, nothing hangs
+    let engine = Engine::new(model).unwrap();
+    for (img, ticket) in images.iter().zip(tickets) {
+        match ticket.wait() {
+            Ok(scores) => assert_eq!(scores, engine.infer(img).unwrap()),
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("shut down") || msg.contains("exited"),
+                    "unexpected ticket error: {msg}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rejects_wrong_image_size_and_shuts_down_idle() {
+    let model = load("tiny");
+    let runtime = PipelineRuntime::new(Engine::new(model.clone()).unwrap(), 2).unwrap();
+    let hw = model.input_hw;
+    let c = model.input_channels;
+    // wrong image size is rejected before admission
+    assert!(runtime.submit(vec![0i32; hw * hw * c + 1]).is_err());
+    // explicit shutdown of an idle pipeline joins every thread promptly
+    runtime.shutdown();
+}
+
+#[test]
+fn pipeline_serves_through_the_sharded_coordinator() {
+    let model = load("tiny");
+    let engine = Engine::new(model.clone()).expect("valid model");
+    let m = model.clone();
+    let factory: BackendFactory = Arc::new(move || -> anyhow::Result<Box<dyn Backend>> {
+        Ok(Box::new(PipelineBackend::new(m.clone(), 4)?))
+    });
+    let coord = Coordinator::start_sharded(
+        factory,
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            workers: 2,
+            queue_depth: 32,
+        },
+    )
+    .expect("start pipeline pool");
+    let client = coord.client();
+    let images = random_images(&model.config(), 10, 77);
+    for img in &images {
+        let reply = client.infer(img.clone()).expect("infer");
+        assert_eq!(reply.scores.expect("scores"), engine.infer(img).unwrap());
+    }
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.errors, 0);
+    assert_eq!(metrics.requests, images.len() as u64);
+}
