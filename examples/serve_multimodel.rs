@@ -1,0 +1,192 @@
+//! Multi-model serving with zero-downtime hot-swap (the control plane the
+//! ROADMAP's "millions of users" north star needs on top of the paper's
+//! batch-insensitive dataplane).
+//!
+//! The scenario: a server starts with one production model, takes
+//! continuous client traffic over protocol v2, and — while the load loop
+//! never pauses — deploys a retrained candidate over the same name,
+//! rolls it back, repeats, and runs a second model side by side.  The
+//! example asserts the control plane's contract the whole way:
+//!
+//! * zero dropped replies: every submitted request is answered;
+//! * bit-exact versioning: every reply's scores equal a direct
+//!   `Engine::infer` of exactly the model *version* the reply claims
+//!   served it;
+//! * conserved accounting: protocol-v2 `STATS` per-model requests sum to
+//!   the number of client submissions.
+//!
+//! Run:  cargo run --release --example serve_multimodel
+//! CI:   BENCH_SMOKE=1 shortens the load loop; the run always writes a
+//!       `BENCH_hotswap.json` artifact (path override: BENCH_OUT).
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use repro::bcnn::Engine;
+use repro::coordinator::workload::random_images;
+use repro::model::{BcnnModel, NetConfig};
+use repro::serving::{serve_registry, ControlClient, DeploySpec, ModelRegistry};
+use repro::util::json::Json;
+
+const PROD_SEED: u64 = 11;
+const CANDIDATE_SEED: u64 = 22;
+const SWAP_CYCLES: usize = 3;
+const CLIENT_THREADS: usize = 3;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let dwell = if smoke { Duration::from_millis(40) } else { Duration::from_millis(150) };
+
+    let cfg = NetConfig::tiny();
+    let prod = BcnnModel::synthetic(&cfg, PROD_SEED);
+    let candidate = BcnnModel::synthetic(&cfg, CANDIDATE_SEED);
+    let engine_prod = Engine::new(prod.clone())?;
+    let engine_cand = Engine::new(candidate.clone())?;
+
+    // -- control plane + TCP front-end -----------------------------------
+    let registry = Arc::new(ModelRegistry::new());
+    let v1 = registry.deploy("prod", DeploySpec::new(prod).with_workers(2))?;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let registry = Arc::clone(&registry);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || serve_registry(listener, registry, stop))
+    };
+    println!("serving on {addr}; model prod v{v1} (seed {PROD_SEED})");
+
+    // versions -> which engine must have produced the reply's scores
+    // (v1 = prod weights; wire deploys/rollbacks extend this map below)
+    let mut version_seed: BTreeMap<u64, u64> = BTreeMap::new();
+    version_seed.insert(v1, PROD_SEED);
+
+    // -- continuous client load over protocol v2 -------------------------
+    let images = random_images(&cfg, 8, 77);
+    let submitted = Arc::new(AtomicU64::new(0));
+    let mut clients = Vec::new();
+    for t in 0..CLIENT_THREADS {
+        let addr = addr.clone();
+        let images = images.clone();
+        let stop = Arc::clone(&stop);
+        let submitted = Arc::clone(&submitted);
+        clients.push(std::thread::spawn(move || -> anyhow::Result<Vec<(usize, u64, Vec<f32>)>> {
+            let mut conn = ControlClient::connect(&addr)?;
+            let mut got = Vec::new();
+            let mut i = t; // stagger the image cycle per thread
+            while !stop.load(Ordering::Relaxed) {
+                let idx = i % images.len();
+                submitted.fetch_add(1, Ordering::Relaxed);
+                let reply = conn.infer("prod", &images[idx])?; // any error = a drop
+                got.push((idx, reply.version, reply.scores));
+                i += 1;
+            }
+            conn.close()?;
+            Ok(got)
+        }));
+    }
+
+    // -- hot-swap cycles under load, over the wire -----------------------
+    let mut admin = ControlClient::connect(&addr)?;
+    let t0 = Instant::now();
+    std::thread::sleep(dwell);
+    for cycle in 1..=SWAP_CYCLES {
+        let v = admin.deploy(
+            "prod",
+            &format!("synthetic:tiny:{CANDIDATE_SEED}"),
+            "engine",
+            2,
+            0,
+        )?;
+        version_seed.insert(v, CANDIDATE_SEED);
+        println!("cycle {cycle}: deployed candidate as prod v{v}");
+        std::thread::sleep(dwell);
+        let v = admin.rollback("prod")?;
+        version_seed.insert(v, PROD_SEED);
+        println!("cycle {cycle}: rolled back to prod weights as v{v}");
+        std::thread::sleep(dwell);
+    }
+
+    // a second model running side by side, then retired
+    let v = admin.deploy("canary", "synthetic:tiny:33", "engine", 1, 0)?;
+    println!("deployed canary v{v}");
+    let canary_scores = admin.infer("canary", &images[0])?;
+    assert_eq!(canary_scores.version, v, "canary reply tagged with wrong version");
+    let retired = admin.undeploy("canary")?;
+    assert_eq!(retired, v);
+
+    stop.store(true, Ordering::Relaxed);
+    let mut replies: Vec<(usize, u64, Vec<f32>)> = Vec::new();
+    for c in clients {
+        replies.extend(c.join().expect("client thread panicked")?);
+    }
+    let wall = t0.elapsed();
+
+    // -- the contract -----------------------------------------------------
+    let submitted = submitted.load(Ordering::Relaxed);
+    assert_eq!(
+        replies.len() as u64,
+        submitted,
+        "dropped replies: {} submitted, {} answered",
+        submitted,
+        replies.len()
+    );
+    for (idx, version, scores) in &replies {
+        let seed = version_seed
+            .get(version)
+            .unwrap_or_else(|| panic!("reply claims unknown version {version}"));
+        let engine = if *seed == PROD_SEED { &engine_prod } else { &engine_cand };
+        let want = engine.infer(&images[*idx])?;
+        assert_eq!(&want, scores, "v{version} reply diverged from its engine");
+    }
+
+    let stats = admin.stats()?;
+    admin.close()?;
+    let mut stats_requests = 0u64;
+    for m in stats.get("models")?.as_arr()? {
+        stats_requests += m.get("metrics")?.get("requests")?.as_f64()? as u64;
+    }
+    assert_eq!(
+        stats_requests,
+        submitted + 1,
+        "STATS per-model counts must sum to submissions"
+    );
+
+    println!(
+        "\nhot-swap under load: {} requests over {:.2}s across {} version flips — \
+         zero drops, all replies bit-exact for their serving version",
+        submitted + 1,
+        wall.as_secs_f64(),
+        2 * SWAP_CYCLES
+    );
+
+    // -- artifact ---------------------------------------------------------
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("requests".into(), Json::Num((submitted + 1) as f64));
+    obj.insert("dropped".into(), Json::Num(0.0));
+    obj.insert("swap_cycles".into(), Json::Num(SWAP_CYCLES as f64));
+    obj.insert("version_flips".into(), Json::Num((2 * SWAP_CYCLES) as f64));
+    obj.insert("wall_s".into(), Json::Num(wall.as_secs_f64()));
+    obj.insert(
+        "throughput_rps".into(),
+        Json::Num((submitted + 1) as f64 / wall.as_secs_f64().max(1e-9)),
+    );
+    obj.insert("stats".into(), stats);
+    let json = Json::Obj(obj);
+    let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "rust/BENCH_hotswap.json".into());
+    let text = json.to_string();
+    if std::fs::write(&path, &text).is_err() {
+        // running from inside rust/ (e.g. `cargo bench` cwd): fall back
+        std::fs::write("BENCH_hotswap.json", &text)?;
+        println!("wrote BENCH_hotswap.json");
+    } else {
+        println!("wrote {path}");
+    }
+
+    // a server-side accept-loop error must fail the smoke run
+    server.join().expect("server thread panicked")?;
+    Ok(())
+}

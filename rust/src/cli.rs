@@ -6,7 +6,10 @@
 //!   optimize     — run the §4.3 throughput optimizer for a config
 //!   compare-gpu  — Fig. 7 batch sweep (FPGA model vs GPU model)
 //!   infer        — classify images through a chosen backend
-//!   serve        — start the coordinator (optionally with TCP front-end)
+//!   serve        — start the serving control plane (registry of model
+//!                  pools; optional protocol-v2 TCP front-end)
+//!   deploy / undeploy / rollback / models — admin plane against a
+//!                  running server (zero-downtime hot-swap by name)
 //!   selftest     — engine vs PJRT vs FPGA-sim cross-check on artifacts
 
 use std::collections::BTreeMap;
@@ -18,17 +21,18 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::benchkit::Table;
 use crate::coordinator::workload::{random_images, run_open_loop};
-use crate::coordinator::{
-    Backend, BackendFactory, BatchPolicy, Coordinator, CoordinatorConfig, FpgaSimBackend,
-    GpuSimBackend, NativeBackend, PipelineBackend,
-};
+use crate::coordinator::{Backend, BatchPolicy, FpgaSimBackend, PipelineBackend};
 use crate::fpga::stream::simulate;
-use crate::gpu::GpuKernel;
 use crate::model::{BcnnModel, NetConfig};
 use crate::optimizer::{optimize, OptimizeOptions};
 use crate::runtime::Runtime;
+use crate::serving::{
+    serve_registry, BackendSpec, ControlClient, DeploySpec, ModelRegistry, ModelSource,
+};
 use crate::tables;
+use crate::util::json::Json;
 
 /// Parsed arguments: positional subcommand + `--key value` / `--flag`.
 #[derive(Debug, Default)]
@@ -47,9 +51,15 @@ impl Args {
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
                 // "--key value" unless next token is another option/missing
+                // (a trailing "--key" lands in `flags`; value-taking
+                // accessors below turn that into a usage error instead of
+                // a panic or a silently-applied default)
                 match it.peek() {
                     Some(v) if !v.starts_with("--") => {
-                        args.options.insert(key.to_string(), it.next().unwrap().clone());
+                        let value = it
+                            .next()
+                            .ok_or_else(|| anyhow!("option --{key} requires a value"))?;
+                        args.options.insert(key.to_string(), value.clone());
                     }
                     _ => args.flags.push(key.to_string()),
                 }
@@ -64,19 +74,28 @@ impl Args {
         self.options.get(key).map(|s| s.as_str())
     }
 
-    pub fn opt_or(&self, key: &str, default: &str) -> String {
-        self.opt(key).unwrap_or(default).to_string()
+    /// `Some(value)` for `--key value`, `None` when absent, and a usage
+    /// error when `--key` was passed bare (it takes a value).
+    pub fn value_of(&self, key: &str) -> Result<Option<&str>> {
+        if self.flags.iter().any(|f| f == key) {
+            bail!("option --{key} requires a value (see `repro help`)");
+        }
+        Ok(self.opt(key))
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> Result<String> {
+        Ok(self.value_of(key)?.unwrap_or(default).to_string())
     }
 
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
-        match self.opt(key) {
+        match self.value_of(key)? {
             None => Ok(default),
             Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
         }
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
-        match self.opt(key) {
+        match self.value_of(key)? {
             None => Ok(default),
             Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
         }
@@ -105,16 +124,34 @@ COMMANDS
   infer [--config small] [--backend engine|pipeline|pjrt|fpga-sim]
         [--count N] [--inflight N] [--artifacts DIR]
       Classify random workload images; print scores summary + timing.
-  serve [--config small] [--backend engine|pipeline|fpga-sim|gpu-sim]
-        [--port P] [--max-batch N] [--max-wait-ms M] [--requests N]
-        [--rate RPS] [--workers W] [--queue-depth D] [--lanes L]
-        [--inflight N]
-      Start the sharded coordinator (W worker shards, one backend replica
-      each, bounded D-deep queues, L intra-batch lanes for the engine
-      backend); with --port, expose TCP; otherwise drive the built-in
-      open-loop workload and print serving metrics.  `--backend pipeline`
-      serves from the row-streaming layer-pipeline runtime (all layers
-      concurrently active; N-image admission window per replica).
+  serve [--config small | --models name=src,name=src,... [--default NAME]]
+        [--backend engine|pipeline|fpga-sim|gpu-sim] [--port P]
+        [--max-batch N] [--max-wait-ms M] [--requests N] [--rate RPS]
+        [--workers W] [--queue-depth D] [--lanes L] [--inflight N]
+      Start the serving control plane: every model gets its own sharded
+      coordinator pool (W worker shards, bounded D-deep queues, L
+      intra-batch lanes for the engine backend).  A model source is a
+      built-in config name (artifact if trained, else synthetic), a
+      `.bcnn` path, or `synthetic:<config>[:<seed>]`.  With --port,
+      expose the TCP front-end (protocol v2 with model routing + admin
+      frames; protocol-v1 clients are served by the default model);
+      otherwise drive the built-in open-loop workload and print
+      per-model serving metrics.  `--backend pipeline` serves from the
+      row-streaming layer-pipeline runtime (N-image admission window).
+  deploy --addr HOST:PORT --name NAME --source SRC [--backend B]
+         [--workers W] [--queue-depth D]
+      Hot-swap NAME on a running server: the new pool is built while the
+      old version serves, then the route swaps — zero downtime.  SRC is
+      a server-side `.bcnn` path or `synthetic:<config>[:<seed>]`.
+      Omitted backend/workers/queue-depth inherit the pool parameters of
+      the version currently serving under NAME.
+  undeploy --addr HOST:PORT --name NAME
+      Remove NAME from the routing table (in-flight requests drain).
+  rollback --addr HOST:PORT --name NAME
+      Redeploy NAME's previous version (zero downtime, new version id).
+  models --addr HOST:PORT
+      List deployed models and per-model serving stats (p50/p99) from
+      the protocol-v2 LIST/STATS admin frames.
   selftest [--artifacts DIR]
       Cross-check native engine vs PJRT executable vs FPGA simulator on
       the shipped artifacts (exit non-zero on mismatch).
@@ -131,6 +168,10 @@ pub fn run(argv: &[String]) -> Result<()> {
         "compare-gpu" => cmd_compare_gpu(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
+        "deploy" => cmd_deploy(&args),
+        "undeploy" => cmd_admin_name_op(&args, "undeploy"),
+        "rollback" => cmd_admin_name_op(&args, "rollback"),
+        "models" => cmd_models(&args),
         "selftest" => cmd_selftest(&args),
         "help" | "" => {
             print!("{USAGE}");
@@ -140,12 +181,12 @@ pub fn run(argv: &[String]) -> Result<()> {
     }
 }
 
-fn artifacts_dir(args: &Args) -> PathBuf {
-    PathBuf::from(args.opt_or("artifacts", "artifacts"))
+fn artifacts_dir(args: &Args) -> Result<PathBuf> {
+    Ok(PathBuf::from(args.opt_or("artifacts", "artifacts")?))
 }
 
 fn load_bcnn(args: &Args, config: &str) -> Result<BcnnModel> {
-    let path = artifacts_dir(args).join(format!("model_{config}.bcnn"));
+    let path = artifacts_dir(args)?.join(format!("model_{config}.bcnn"));
     match BcnnModel::load(&path) {
         Ok(m) => Ok(m),
         Err(e) => {
@@ -167,14 +208,14 @@ fn load_bcnn(args: &Args, config: &str) -> Result<BcnnModel> {
 }
 
 fn net_config(args: &Args) -> Result<(String, NetConfig)> {
-    let name = args.opt_or("config", "table2");
+    let name = args.opt_or("config", "table2")?;
     let cfg = NetConfig::by_name(&name).ok_or_else(|| anyhow!("unknown config {name:?}"))?;
     Ok((name, cfg))
 }
 
 fn cmd_tables(args: &Args) -> Result<()> {
     let plan = if args.flag("optimized") { tables::optimized_plan()? } else { tables::default_plan() };
-    let which = args.opt_or("table", "all");
+    let which = args.opt_or("table", "all")?;
     if which == "2" || which == "all" {
         println!("== Table 2: BCNN configuration ==\n{}", tables::table2(&NetConfig::table2()));
     }
@@ -234,7 +275,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
 }
 
 fn cmd_compare_gpu(args: &Args) -> Result<()> {
-    let batches: Vec<usize> = match args.opt("batches") {
+    let batches: Vec<usize> = match args.value_of("batches")? {
         None => vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512],
         Some(s) => s
             .split(',')
@@ -246,12 +287,12 @@ fn cmd_compare_gpu(args: &Args) -> Result<()> {
 }
 
 fn cmd_infer(args: &Args) -> Result<()> {
-    let name = args.opt_or("config", "small");
+    let name = args.opt_or("config", "small")?;
     let model = load_bcnn(args, &name)?;
     let cfg = model.config();
     let count = args.usize_or("count", 16)?;
     let images = random_images(&cfg, count, 7);
-    let backend = args.opt_or("backend", "native");
+    let backend = args.opt_or("backend", "native")?;
     let t0 = std::time::Instant::now();
     let scores: Vec<Vec<f32>> = match backend.as_str() {
         "engine" | "native" => {
@@ -268,8 +309,9 @@ fn cmd_infer(args: &Args) -> Result<()> {
             b.infer_owned(&images)?.scores
         }
         "pjrt" => {
-            let mut rt = Runtime::new(artifacts_dir(args))?;
-            let loaded = rt.load_model(&name, 1, artifacts_dir(args).join(format!("model_{name}.bcnn")))?;
+            let mut rt = Runtime::new(artifacts_dir(args)?)?;
+            let path = artifacts_dir(args)?.join(format!("model_{name}.bcnn"));
+            let loaded = rt.load_model(&name, 1, path)?;
             let mut out = Vec::new();
             for img in &images {
                 let s = loaded.infer_batch(img)?;
@@ -303,35 +345,32 @@ fn cmd_infer(args: &Args) -> Result<()> {
 /// beyond those already streaming through the stages).
 pub const DEFAULT_INFLIGHT: usize = 8;
 
-/// Build a per-worker backend factory for the named backend kind
-/// (`engine` is the canonical name for the sequential native engine;
-/// `native` stays accepted for compatibility).
-fn backend_factory(
-    kind: &str,
-    model: BcnnModel,
-    lanes: usize,
-    inflight: usize,
-) -> Result<BackendFactory> {
-    match kind {
-        "engine" | "native" | "pipeline" | "fpga-sim" | "gpu-sim" => {}
-        other => bail!("unknown backend {other:?}"),
+/// Resolve `--backend`/`--lanes`/`--inflight` into a [`BackendSpec`]; an
+/// explicit `kind:N` parameter wins over the separate flags.
+fn backend_spec(kind: &str, lanes: usize, inflight: usize) -> Result<BackendSpec> {
+    let parsed = BackendSpec::parse(kind)?;
+    if kind.contains(':') {
+        return Ok(parsed);
     }
-    let kind = kind.to_string();
-    Ok(Arc::new(move || -> Result<Box<dyn Backend>> {
-        Ok(match kind.as_str() {
-            "engine" | "native" => Box::new(NativeBackend::with_lanes(model.clone(), lanes)?),
-            "pipeline" => Box::new(PipelineBackend::new(model.clone(), inflight)?),
-            "fpga-sim" => Box::new(FpgaSimBackend::new(model.clone())?),
-            _ => Box::new(GpuSimBackend::new(model.clone(), GpuKernel::Xnor)?),
-        })
-    }))
+    Ok(match parsed {
+        BackendSpec::Engine { .. } => BackendSpec::Engine { lanes },
+        BackendSpec::Pipeline { .. } => BackendSpec::Pipeline { inflight },
+        other => other,
+    })
+}
+
+/// Load a model from a `--models` source: a built-in config name (trained
+/// artifact if present, else synthetic), a `.bcnn` path, or
+/// `synthetic:<config>[:<seed>]`.
+fn resolve_model(args: &Args, source: &str) -> Result<BcnnModel> {
+    if NetConfig::by_name(source).is_some() {
+        return load_bcnn(args, source);
+    }
+    ModelSource::parse(source)?.load()
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let name = args.opt_or("config", "small");
-    let model = load_bcnn(args, &name)?;
-    let cfg = model.config();
-    let backend_name = args.opt_or("backend", "engine");
+    let backend_name = args.opt_or("backend", "engine")?;
     let workers = args.usize_or("workers", 1)?.max(1);
     let queue_depth = args.usize_or("queue-depth", 256)?.max(1);
     let lanes = args.usize_or("lanes", 1)?.max(1);
@@ -340,30 +379,68 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.usize_or("max-batch", 16)?,
         max_wait: Duration::from_millis(args.usize_or("max-wait-ms", 2)? as u64),
     };
-    let factory = backend_factory(&backend_name, model, lanes, inflight)?;
-    let coord =
-        Coordinator::start_sharded(factory, CoordinatorConfig { policy, workers, queue_depth })?;
+    let backend = backend_spec(&backend_name, lanes, inflight)?;
 
-    if let Some(port) = args.opt("port") {
+    // model set: every entry gets its own pool behind the shared registry
+    let registry = Arc::new(ModelRegistry::new());
+    let mut default_cfg: Option<NetConfig> = None;
+    let spec_for = |model: BcnnModel| {
+        DeploySpec::new(model)
+            .with_backend(backend)
+            .with_workers(workers)
+            .with_queue_depth(queue_depth)
+            .with_policy(policy)
+    };
+    if let Some(models) = args.value_of("models")? {
+        for part in models.split(',') {
+            let part = part.trim();
+            let (name, source) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--models expects name=source, got {part:?}"))?;
+            let model = resolve_model(args, source)?;
+            if default_cfg.is_none() {
+                default_cfg = Some(model.config());
+            }
+            let version = registry.deploy(name, spec_for(model))?;
+            println!("deployed {name} v{version} <- {source} [{}]", backend.label());
+        }
+        // protocol-v1 clients are served by the default route (first
+        // deployed unless overridden)
+        if let Some(default) = args.value_of("default")? {
+            registry.set_default(default)?;
+            println!("default model: {default}");
+        }
+    } else {
+        let name = args.opt_or("config", "small")?;
+        let model = load_bcnn(args, &name)?;
+        default_cfg = Some(model.config());
+        let version = registry.deploy(&name, spec_for(model))?;
+        println!("deployed {name} v{version} [{}]", backend.label());
+    }
+
+    if let Some(port) = args.value_of("port")? {
         let addr = format!("127.0.0.1:{port}");
         let listener = TcpListener::bind(&addr).with_context(|| format!("bind {addr}"))?;
         println!(
-            "serving {name} via {backend_name} on {addr} \
-             ({workers} shard(s), queue depth {queue_depth}; ctrl-c to stop)"
+            "serving {} model(s) on {addr} (protocol v2 + v1 compat; \
+             {workers} shard(s) per model, queue depth {queue_depth}; ctrl-c to stop)",
+            registry.list().len()
         );
         let stop = Arc::new(AtomicBool::new(false));
-        crate::coordinator::server::serve_tcp(listener, coord.client(), stop)?;
+        serve_registry(listener, Arc::clone(&registry), stop)?;
         return Ok(());
     }
 
-    // built-in workload mode
+    // built-in workload mode against the default model
+    let cfg = default_cfg.expect("at least one model deployed");
     let requests = args.usize_or("requests", 64)?;
     let rate = args.f64_or("rate", 200.0)?;
     println!(
         "driving open-loop workload: {requests} requests at {rate}/s \
          across {workers} shard(s)"
     );
-    let report = run_open_loop(&coord.client(), &cfg, requests, rate, 11)?;
+    let entry = registry.router().resolve(None).map_err(|e| anyhow!("{e}"))?;
+    let report = run_open_loop(&entry.client(), &cfg, requests, rate, 11)?;
     println!(
         "  achieved {:.1} req/s, mean latency {:.2} ms, mean batch {:.1}, errors {}",
         report.throughput(),
@@ -371,15 +448,103 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.mean_batch(),
         report.errors()
     );
-    let per_shard: Vec<u64> = coord.shard_metrics().iter().map(|m| m.requests).collect();
-    let metrics = coord.shutdown();
-    println!("  per-shard requests: {per_shard:?}");
-    println!("  {}", metrics.summary());
+    drop(entry);
+    for s in registry.stats() {
+        println!("  model {} v{} [{}]: {}", s.name, s.version, s.backend, s.metrics.summary());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// admin-plane commands (protocol v2 against a running `serve --port`)
+// ---------------------------------------------------------------------------
+
+fn admin_client(args: &Args) -> Result<ControlClient> {
+    let addr = args
+        .value_of("addr")?
+        .ok_or_else(|| anyhow!("--addr HOST:PORT is required"))?;
+    ControlClient::connect(addr)
+}
+
+fn required<'a>(args: &'a Args, key: &str) -> Result<&'a str> {
+    args.value_of(key)?.ok_or_else(|| anyhow!("--{key} is required"))
+}
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    let name = required(args, "name")?;
+    let source = required(args, "source")?;
+    // unset fields inherit the currently-deployed pool's parameters
+    let backend = args.opt_or("backend", "")?;
+    let workers = args.usize_or("workers", 0)?;
+    let queue_depth = args.usize_or("queue-depth", 0)?;
+    let mut client = admin_client(args)?;
+    let version = client.deploy(name, source, &backend, workers, queue_depth)?;
+    let shown = if backend.is_empty() { "inherited" } else { backend.as_str() };
+    println!("deployed {name} v{version} <- {source} [{shown}]");
+    client.close()
+}
+
+fn cmd_admin_name_op(args: &Args, op: &str) -> Result<()> {
+    let name = required(args, "name")?;
+    let mut client = admin_client(args)?;
+    let version = match op {
+        "undeploy" => client.undeploy(name)?,
+        _ => client.rollback(name)?,
+    };
+    match op {
+        "undeploy" => println!("undeployed {name} (was v{version})"),
+        _ => println!("rolled back {name} -> v{version}"),
+    }
+    client.close()
+}
+
+fn cmd_models(args: &Args) -> Result<()> {
+    let mut client = admin_client(args)?;
+    let list = client.list()?;
+    let stats = client.stats()?;
+    client.close()?;
+
+    println!("routing epoch {}", list.get("epoch")?.as_f64()? as u64);
+    let mut table = Table::new(&["model", "version", "backend", "config", "workers", "default"]);
+    for m in list.get("models")?.as_arr()? {
+        table.row(&[
+            m.get("name")?.as_str()?.to_string(),
+            format!("v{}", m.get("version")?.as_f64()? as u64),
+            m.get("backend")?.as_str()?.to_string(),
+            m.get("config")?.as_str()?.to_string(),
+            format!("{}", m.get("workers")?.as_f64()? as u64),
+            match m.get("default")? {
+                Json::Bool(true) => "*".to_string(),
+                _ => String::new(),
+            },
+        ]);
+    }
+    table.print();
+
+    println!();
+    let mut table =
+        Table::new(&["model", "version", "live", "requests", "errors", "p50 ms", "p99 ms"]);
+    for m in stats.get("models")?.as_arr()? {
+        let metrics = m.get("metrics")?;
+        table.row(&[
+            m.get("name")?.as_str()?.to_string(),
+            format!("v{}", m.get("version")?.as_f64()? as u64),
+            match m.get("live")? {
+                Json::Bool(true) => "yes".to_string(),
+                _ => "no".to_string(),
+            },
+            format!("{}", metrics.get("requests")?.as_f64()? as u64),
+            format!("{}", metrics.get("errors")?.as_f64()? as u64),
+            format!("{:.2}", metrics.get("latency_p50_us")?.as_f64()? / 1e3),
+            format!("{:.2}", metrics.get("latency_p99_us")?.as_f64()? / 1e3),
+        ]);
+    }
+    table.print();
     Ok(())
 }
 
 fn cmd_selftest(args: &Args) -> Result<()> {
-    let dir = artifacts_dir(args);
+    let dir = artifacts_dir(args)?;
     let name = "tiny";
     let model = BcnnModel::load(dir.join(format!("model_{name}.bcnn")))?;
     let cfg = model.config();
@@ -411,4 +576,43 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     println!("FPGA-sim == native: OK (bit-exact)");
     println!("selftest PASS");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        let argv: Vec<String> = tokens.iter().map(|s| s.to_string()).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn trailing_valued_flag_is_a_usage_error_not_a_panic() {
+        // `repro serve --workers` used to fall through as a silent boolean
+        // flag (and the parser's unwrap path could panic); now every
+        // value-taking accessor reports a usage error
+        let args = parse(&["serve", "--workers"]);
+        assert!(args.usize_or("workers", 1).is_err());
+        assert!(args.opt_or("workers", "x").is_err());
+        assert!(args.value_of("workers").is_err());
+        assert!(args.f64_or("workers", 1.0).is_err());
+    }
+
+    #[test]
+    fn valued_flag_followed_by_flag_is_also_bare() {
+        let args = parse(&["serve", "--workers", "--port", "9000"]);
+        assert!(args.usize_or("workers", 1).is_err());
+        assert_eq!(args.value_of("port").unwrap(), Some("9000"));
+    }
+
+    #[test]
+    fn normal_parsing_still_works() {
+        let args = parse(&["serve", "--workers", "4", "--optimized", "pos"]);
+        assert_eq!(args.usize_or("workers", 1).unwrap(), 4);
+        assert!(args.flag("optimized"));
+        assert_eq!(args.usize_or("queue-depth", 7).unwrap(), 7);
+        assert_eq!(args.positional, vec!["pos".to_string()]);
+        assert_eq!(args.opt_or("backend", "engine").unwrap(), "engine");
+    }
 }

@@ -1,7 +1,11 @@
 //! Serving metrics: latency histogram, throughput, batch-size stats,
-//! modeled energy accounting.
+//! modeled energy accounting, and the JSON snapshot served by the
+//! protocol-v2 `STATS` admin frame.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
+
+use crate::util::json::Json;
 
 /// Log-scale latency histogram from 1 µs to ~17 s.
 #[derive(Debug, Clone)]
@@ -168,6 +172,34 @@ impl Metrics {
         power_w * self.modeled_busy.as_secs_f64()
     }
 
+    /// Median end-to-end latency.
+    pub fn p50(&self) -> Duration {
+        self.latency.quantile(0.5)
+    }
+
+    /// Tail end-to-end latency.
+    pub fn p99(&self) -> Duration {
+        self.latency.quantile(0.99)
+    }
+
+    /// JSON snapshot (stable keys; microsecond latencies) — the payload
+    /// of the protocol-v2 `STATS` frame and of bench artifacts.
+    pub fn to_json(&self) -> Json {
+        let us = |d: Duration| Json::Num(d.as_secs_f64() * 1e6);
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("requests".into(), Json::Num(self.requests as f64));
+        m.insert("errors".into(), Json::Num(self.errors as f64));
+        m.insert("batches".into(), Json::Num(self.batches as f64));
+        m.insert("mean_batch".into(), Json::Num(self.mean_batch()));
+        m.insert("throughput".into(), Json::Num(self.throughput()));
+        m.insert("latency_mean_us".into(), us(self.latency.mean()));
+        m.insert("latency_p50_us".into(), us(self.p50()));
+        m.insert("latency_p99_us".into(), us(self.p99()));
+        m.insert("latency_max_us".into(), us(self.latency.max()));
+        m.insert("modeled_busy_us".into(), us(self.modeled_busy));
+        Json::Obj(m)
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "requests={} errors={} batches={} mean_batch={:.1} throughput={:.1}/s \
@@ -227,6 +259,20 @@ mod tests {
         assert_eq!(total.latency.count(), 1);
         assert_eq!(total.modeled_busy, Duration::from_millis(1));
         assert!(total.summary().contains("errors=3"));
+    }
+
+    #[test]
+    fn json_snapshot_has_quantiles() {
+        let mut m = Metrics::new();
+        m.record_batch(2, Duration::from_millis(2), None);
+        m.record_request(Duration::from_millis(1), Duration::from_millis(3));
+        m.record_request(Duration::from_millis(1), Duration::from_millis(5));
+        let j = m.to_json();
+        assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("errors").unwrap().as_usize().unwrap(), 0);
+        let p50 = j.get("latency_p50_us").unwrap().as_f64().unwrap();
+        let p99 = j.get("latency_p99_us").unwrap().as_f64().unwrap();
+        assert!(p50 > 0.0 && p99 >= p50, "p50 {p50} p99 {p99}");
     }
 
     #[test]

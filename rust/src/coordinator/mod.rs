@@ -39,5 +39,6 @@ pub use backend::{
 // is served through this coordinator like every other backend
 pub use crate::pipeline::PipelineBackend;
 pub use batcher::{BatchPolicy, Batcher, Msg};
+pub use metrics::Metrics;
 pub use request::{InferError, InferReply, InferRequest, SubmitError};
-pub use server::{Client, Coordinator, CoordinatorConfig};
+pub use server::{serve_tcp, Client, Coordinator, CoordinatorConfig, TcpClient, MAX_WIRE_VALUES};

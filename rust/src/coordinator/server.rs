@@ -161,6 +161,30 @@ impl Client {
         }
     }
 
+    /// Submit, waiting out backpressure for at most `deadline`.  On expiry
+    /// the image is handed back in [`SubmitError::QueueFull`] so callers
+    /// (e.g. the TCP handler) can signal overload instead of stalling.
+    pub fn submit_deadline(
+        &self,
+        mut image: Vec<i32>,
+        deadline: Duration,
+    ) -> std::result::Result<Receiver<InferReply>, SubmitError> {
+        let start = Instant::now();
+        loop {
+            match self.submit(image) {
+                Ok(rx) => return Ok(rx),
+                Err(SubmitError::QueueFull { image: img }) => {
+                    if start.elapsed() >= deadline {
+                        return Err(SubmitError::QueueFull { image: img });
+                    }
+                    image = img;
+                    std::thread::sleep(BACKPRESSURE_RETRY);
+                }
+                Err(e @ SubmitError::Shutdown) => return Err(e),
+            }
+        }
+    }
+
     /// Submit (waiting out backpressure) and wait for the reply.
     pub fn infer(&self, image: Vec<i32>) -> Result<InferReply> {
         self.submit_blocking(image)
@@ -433,33 +457,50 @@ fn shard_loop(
 }
 
 // ---------------------------------------------------------------------------
-// TCP front-end
+// TCP front-end (protocol v1; the v2 model-routed front-end rides the
+// same framing from `crate::serving::admin`)
 // ---------------------------------------------------------------------------
 //
 // Wire protocol (little-endian):
 //   request:  u32 n_values, then n_values x i32 (one NHWC image)
 //   reply:    u32 n_scores, then n_scores x f32
-//   error:    u32 0xFFFF_FFFF, u32 msg_len, msg bytes (then close)
-// A zero-length request closes the connection.
+//   error:    u32 0xFFFF_FFFF, u32 msg_len, msg bytes
+// A zero-length request closes the connection.  An error frame does NOT
+// close it: oversized requests have their payload discarded and
+// backend/backpressure failures are per-request, so the next request on
+// the connection can still succeed.
 
 /// Error sentinel in the reply length slot.
-const WIRE_ERROR: u32 = u32::MAX;
+pub const WIRE_ERROR: u32 = u32::MAX;
 /// Largest accepted request, in i32 values.
 pub const MAX_WIRE_VALUES: usize = 1 << 22;
+/// How long the TCP handler waits out backpressure before answering with
+/// an overload error frame instead of stalling the connection.
+pub const TCP_SUBMIT_DEADLINE: Duration = Duration::from_secs(5);
 
-/// Serve a TCP listener until `stop` flips (thread per connection).
-pub fn serve_tcp(listener: TcpListener, client: Client, stop: Arc<AtomicBool>) -> Result<()> {
+/// Shared nonblocking accept loop (v1 and v2 front-ends): thread per
+/// connection, finished handlers pruned as connections churn, everything
+/// joined on shutdown.  `on_idle` runs on every empty poll — the v2
+/// front-end reaps drained retired pools there.
+pub(crate) fn serve_connections(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    handler: Arc<dyn Fn(TcpStream) + Send + Sync>,
+    mut on_idle: impl FnMut(),
+) -> Result<()> {
     listener.set_nonblocking(true).context("nonblocking listener")?;
     let mut conns: Vec<JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, _addr)) => {
-                let client = client.clone();
-                conns.push(std::thread::spawn(move || {
-                    let _ = handle_conn(stream, client);
-                }));
+                // long-lived servers churn many short connections: drop
+                // finished handlers so the list doesn't grow unboundedly
+                conns.retain(|c| !c.is_finished());
+                let handler = Arc::clone(&handler);
+                conns.push(std::thread::spawn(move || handler(stream)));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                on_idle();
                 std::thread::sleep(Duration::from_millis(2));
             }
             Err(e) => bail!("accept: {e}"),
@@ -471,10 +512,80 @@ pub fn serve_tcp(listener: TcpListener, client: Client, stop: Arc<AtomicBool>) -
     Ok(())
 }
 
-fn write_error(stream: &mut TcpStream, msg: &str) -> std::io::Result<()> {
+/// Serve a TCP listener until `stop` flips (thread per connection).
+pub fn serve_tcp(listener: TcpListener, client: Client, stop: Arc<AtomicBool>) -> Result<()> {
+    let handler: Arc<dyn Fn(TcpStream) + Send + Sync> = Arc::new(move |stream| {
+        let _ = handle_conn(stream, client.clone());
+    });
+    serve_connections(listener, stop, handler, || {})
+}
+
+pub(crate) fn write_error(stream: &mut TcpStream, msg: &str) -> std::io::Result<()> {
     stream.write_all(&WIRE_ERROR.to_le_bytes())?;
     stream.write_all(&(msg.len() as u32).to_le_bytes())?;
     stream.write_all(msg.as_bytes())
+}
+
+/// Longest payload the server will read-and-discard to keep a connection
+/// framed after rejecting a request (4x the largest valid request).  A
+/// claimed length beyond this is protocol garbage rather than a client
+/// mistake, and is not worth draining gigabytes for.
+pub(crate) const MAX_DISCARD_BYTES: usize = 4 * MAX_WIRE_VALUES * 4;
+/// Read timeout while discarding a rejected payload: a peer that claims a
+/// length and then stalls must not pin the connection thread forever.
+const DISCARD_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Read and drop `bytes` from the stream.  Oversized-request recovery:
+/// the peer already committed to sending the payload, so consuming it is
+/// the only way to keep the connection framed (closing instead would RST
+/// away the error frame before the client reads it).  Bounded on both
+/// axes — an implausible length, or a peer that has not delivered the
+/// whole payload within [`DISCARD_TIMEOUT`] *total* (trickling counts),
+/// returns an error and the caller closes the connection.
+pub(crate) fn discard_payload(stream: &mut TcpStream, bytes: usize) -> std::io::Result<()> {
+    if bytes > MAX_DISCARD_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("implausible payload of {bytes} bytes"),
+        ));
+    }
+    let start = Instant::now();
+    let result = (|| {
+        let mut remaining = bytes;
+        let mut sink = [0u8; 65536];
+        while remaining > 0 {
+            let elapsed = start.elapsed();
+            if elapsed >= DISCARD_TIMEOUT {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "peer stalled while its rejected payload was drained",
+                ));
+            }
+            // cap each read by the *remaining* overall budget, so a
+            // trickling peer cannot reset the clock chunk by chunk
+            stream.set_read_timeout(Some(DISCARD_TIMEOUT - elapsed))?;
+            let take = remaining.min(sink.len());
+            stream.read_exact(&mut sink[..take])?;
+            remaining -= take;
+        }
+        Ok(())
+    })();
+    // restore blocking reads for the normal request path
+    stream.set_read_timeout(None)?;
+    result
+}
+
+/// Reject a request whose `n_values` length was refused: drain the
+/// committed payload, send `msg` as an error frame, and keep the
+/// connection usable.  Returns `Err` (caller closes) when the payload is
+/// implausible or the peer stalls.
+pub(crate) fn reject_payload(stream: &mut TcpStream, n_values: usize, msg: &str) -> Result<()> {
+    if discard_payload(stream, n_values.saturating_mul(4)).is_err() {
+        let _ = write_error(stream, msg);
+        bail!("{msg}: implausible or stalled payload");
+    }
+    write_error(stream, msg)?;
+    Ok(())
 }
 
 fn handle_conn(mut stream: TcpStream, client: Client) -> Result<()> {
@@ -489,8 +600,8 @@ fn handle_conn(mut stream: TcpStream, client: Client) -> Result<()> {
             return Ok(());
         }
         if n > MAX_WIRE_VALUES {
-            let _ = write_error(&mut stream, &format!("request too large: {n} values"));
-            bail!("request too large: {n}");
+            reject_payload(&mut stream, n, &format!("request too large: {n} values"))?;
+            continue;
         }
         let mut raw = vec![0u8; n * 4];
         stream.read_exact(&mut raw)?;
@@ -498,11 +609,24 @@ fn handle_conn(mut stream: TcpStream, client: Client) -> Result<()> {
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
             .collect();
-        let reply = match client.infer(image) {
+        // a saturated pool answers with a typed overload frame instead of
+        // parking the connection on an unbounded submit_blocking retry
+        let rx = match client.submit_deadline(image, TCP_SUBMIT_DEADLINE) {
+            Ok(rx) => rx,
+            Err(SubmitError::QueueFull { .. }) => {
+                write_error(&mut stream, "server overloaded: all shard queues full")?;
+                continue;
+            }
+            Err(SubmitError::Shutdown) => {
+                let _ = write_error(&mut stream, "coordinator shut down");
+                bail!("coordinator shut down");
+            }
+        };
+        let reply = match rx.recv() {
             Ok(r) => r,
-            Err(e) => {
-                let _ = write_error(&mut stream, &format!("{e:#}"));
-                bail!("infer: {e:#}");
+            Err(_) => {
+                let _ = write_error(&mut stream, "coordinator shut down before replying");
+                bail!("coordinator shut down before replying");
             }
         };
         match &reply.scores {

@@ -15,6 +15,11 @@
 //!   (timing/resource/power), [`optimizer`] (the §4.3
 //!   throughput-balancing model, Table 3) and [`gpu`] (the Titan X
 //!   comparator of Fig. 7).
+//! * **L4** is the serving control plane ([`serving`]): a multi-model
+//!   registry (one coordinator pool per named, versioned model),
+//!   zero-downtime hot-swap via an epoch-tagged routing-table swap, and
+//!   protocol v2 — model-routed request frames plus
+//!   `DEPLOY`/`UNDEPLOY`/`ROLLBACK`/`LIST`/`STATS` admin frames.
 //!
 //! Python never runs at request time: the `repro` binary is self-contained
 //! once `make artifacts` has produced `artifacts/*.hlo.txt` + `*.bcnn`.
@@ -29,6 +34,7 @@ pub mod model;
 pub mod optimizer;
 pub mod pipeline;
 pub mod runtime;
+pub mod serving;
 pub mod tables;
 pub mod util;
 

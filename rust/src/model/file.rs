@@ -125,6 +125,37 @@ impl BcnnModel {
         Ok(Self { name, input_hw, input_channels, input_bits, classes, layers })
     }
 
+    /// Serialize back to the `.bcnn` wire format (inverse of
+    /// [`BcnnModel::parse`]; used by tests and by tooling that ships
+    /// models to a serving host).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        if self.name.len() > u16::MAX as usize {
+            // the format stores the name length as u16; truncating it
+            // silently would produce an artifact that misparses far from
+            // the cause
+            bail!("model name too long to serialize ({} bytes)", self.name.len());
+        }
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.name.len() as u16).to_le_bytes());
+        out.extend_from_slice(self.name.as_bytes());
+        for v in [self.input_hw, self.input_channels, self.input_bits, self.classes] {
+            out.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        for layer in &self.layers {
+            write_layer(&mut out, layer);
+        }
+        Ok(out)
+    }
+
+    /// Write the serialized model to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_bytes()?)
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
     /// Reconstruct the `NetConfig` this model instantiates (used to drive
     /// the FPGA simulator / optimizer from a weight file alone).
     pub fn config(&self) -> NetConfig {
@@ -209,6 +240,58 @@ const KIND_BIN_CONV: u8 = 1;
 const KIND_BIN_FC: u8 = 2;
 const KIND_BIN_FC_OUT: u8 = 3;
 
+fn write_layer(out: &mut Vec<u8>, layer: &LayerWeights) {
+    match layer {
+        LayerWeights::FpConv { in_c, out_c, pool, weights, thresholds } => {
+            out.push(KIND_FP_CONV);
+            out.extend_from_slice(&(*in_c as u32).to_le_bytes());
+            out.extend_from_slice(&(*out_c as u32).to_le_bytes());
+            out.push(u8::from(*pool));
+            out.extend(weights.iter().map(|&w| w as u8));
+            for t in thresholds {
+                out.extend_from_slice(&t.to_le_bytes());
+            }
+        }
+        LayerWeights::BinConv { in_c, out_c, pool, weights, thresholds, .. } => {
+            out.push(KIND_BIN_CONV);
+            out.extend_from_slice(&(*in_c as u32).to_le_bytes());
+            out.extend_from_slice(&(*out_c as u32).to_le_bytes());
+            out.push(u8::from(*pool));
+            for w in weights {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            for t in thresholds {
+                out.extend_from_slice(&t.to_le_bytes());
+            }
+        }
+        LayerWeights::BinFc { in_f, out_f, weights, thresholds, .. } => {
+            out.push(KIND_BIN_FC);
+            out.extend_from_slice(&(*in_f as u32).to_le_bytes());
+            out.extend_from_slice(&(*out_f as u32).to_le_bytes());
+            for w in weights {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            for t in thresholds {
+                out.extend_from_slice(&t.to_le_bytes());
+            }
+        }
+        LayerWeights::BinFcOut { in_f, out_f, weights, scale, bias, .. } => {
+            out.push(KIND_BIN_FC_OUT);
+            out.extend_from_slice(&(*in_f as u32).to_le_bytes());
+            out.extend_from_slice(&(*out_f as u32).to_le_bytes());
+            for w in weights {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            for s in scale {
+                out.extend_from_slice(&s.to_le_bytes());
+            }
+            for b in bias {
+                out.extend_from_slice(&b.to_le_bytes());
+            }
+        }
+    }
+}
+
 fn read_layer(r: &mut Reader) -> Result<LayerWeights> {
     let kind = r.u8()?;
     match kind {
@@ -257,6 +340,11 @@ fn read_layer(r: &mut Reader) -> Result<LayerWeights> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::config::NetConfig;
+
+    fn tiny_bytes() -> Vec<u8> {
+        BcnnModel::synthetic(&NetConfig::tiny(), 0xF11E).to_bytes().unwrap()
+    }
 
     #[test]
     fn rejects_bad_magic() {
@@ -280,5 +368,118 @@ mod tests {
         data.extend_from_slice(MAGIC);
         data.extend_from_slice(&99u32.to_le_bytes());
         assert!(BcnnModel::parse(&data).is_err());
+    }
+
+    #[test]
+    fn round_trips_through_bytes() {
+        let model = BcnnModel::synthetic(&NetConfig::tiny(), 0xF11E);
+        let bytes = model.to_bytes().unwrap();
+        let parsed = BcnnModel::parse(&bytes).expect("own serialization parses");
+        assert_eq!(parsed.name, model.name);
+        assert_eq!(parsed.config(), model.config());
+        assert_eq!(parsed.layers.len(), model.layers.len());
+        // spot-check one packed tensor survives the trip bit-for-bit
+        match (&parsed.layers[1], &model.layers[1]) {
+            (
+                LayerWeights::BinConv { weights: a, thresholds: ta, .. },
+                LayerWeights::BinConv { weights: b, thresholds: tb, .. },
+            ) => {
+                assert_eq!(a, b);
+                assert_eq!(ta, tb);
+            }
+            other => panic!("layer 1 should be BinConv on both sides: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_a_typed_error_not_a_panic() {
+        // every proper prefix must fail cleanly through the guarded
+        // Reader::take path — no slice-index or try_into panic anywhere
+        let data = tiny_bytes();
+        let step = (data.len() / 257).max(1); // ~257 cut points incl. tensor interiors
+        let mut cuts: Vec<usize> = (0..data.len()).step_by(step).collect();
+        cuts.extend([1, 2, 3, 4, 5, 7, 8, 9, 13, 25, data.len() - 1]);
+        for cut in cuts {
+            let res = BcnnModel::parse(&data[..cut]);
+            assert!(res.is_err(), "prefix of {cut} bytes parsed successfully");
+        }
+    }
+
+    #[test]
+    fn short_tensor_is_an_error() {
+        // drop the final 4 bytes (inside the classifier bias vector)
+        let data = tiny_bytes();
+        let err = BcnnModel::parse(&data[..data.len() - 4]).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_layer_kind_is_an_error() {
+        let model = BcnnModel::synthetic(&NetConfig::tiny(), 0xF11E);
+        let mut data = Vec::new();
+        data.extend_from_slice(MAGIC);
+        data.extend_from_slice(&VERSION.to_le_bytes());
+        data.extend_from_slice(&(model.name.len() as u16).to_le_bytes());
+        data.extend_from_slice(model.name.as_bytes());
+        for v in [model.input_hw, model.input_channels, model.input_bits, model.classes] {
+            data.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        data.extend_from_slice(&1u32.to_le_bytes());
+        data.push(0x7F); // no such layer kind
+        let err = BcnnModel::parse(&data).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown layer kind"), "{err:#}");
+    }
+
+    #[test]
+    fn corrupt_fp_conv_weight_is_an_error() {
+        // byte value 3 is not a ±1 weight; find the first fp_conv weight
+        // byte (fixed offset: header + name + 5 u32 + kind + 2 u32 + pool)
+        let model = BcnnModel::synthetic(&NetConfig::tiny(), 0xF11E);
+        let mut data = model.to_bytes().unwrap();
+        let off = 4 + 4 + 2 + model.name.len() + 4 * 4 + 4 + 1 + 4 + 4 + 1;
+        data[off] = 3;
+        let err = BcnnModel::parse(&data).unwrap_err();
+        assert!(format!("{err:#}").contains("±1"), "{err:#}");
+    }
+
+    #[test]
+    fn trailing_bytes_are_an_error() {
+        let mut data = tiny_bytes();
+        data.push(0);
+        let err = BcnnModel::parse(&data).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn implausible_layer_count_is_an_error() {
+        let data = tiny_bytes();
+        // layer count sits right after magic+version+name+4 header u32s
+        let model = BcnnModel::parse(&data).unwrap();
+        let off = 4 + 4 + 2 + model.name.len() + 4 * 4;
+        let mut data = data;
+        data[off..off + 4].copy_from_slice(&10_000u32.to_le_bytes());
+        let err = BcnnModel::parse(&data).unwrap_err();
+        assert!(format!("{err:#}").contains("implausible"), "{err:#}");
+    }
+
+    #[test]
+    fn oversized_name_is_a_serialization_error() {
+        // the format stores the name length as u16; a longer name must be
+        // a typed error, not a silently-corrupt artifact
+        let mut model = BcnnModel::synthetic(&NetConfig::tiny(), 0xF11E);
+        model.name = "x".repeat(70_000);
+        assert!(model.to_bytes().is_err());
+    }
+
+    #[test]
+    fn save_and_load_round_trip() {
+        let model = BcnnModel::synthetic(&NetConfig::tiny(), 0xF11E);
+        let dir = std::env::temp_dir().join("bcnn_file_roundtrip_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model_tiny.bcnn");
+        model.save(&path).unwrap();
+        let loaded = BcnnModel::load(&path).unwrap();
+        assert_eq!(loaded.config(), model.config());
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -1,0 +1,467 @@
+//! Protocol v2: model-routed inference frames plus the admin plane
+//! (`DEPLOY` / `UNDEPLOY` / `ROLLBACK` / `LIST` / `STATS`) over the same
+//! TCP front-end.
+//!
+//! Wire format (little-endian).  The first `u32` of every frame is a tag.
+//! Protocol-v1 clients are still served: a tag in `1..=MAX_WIRE_VALUES`
+//! *is* a v1 request length, and is answered with a v1 reply on the
+//! default model — so old clients keep working against a v2 server.
+//!
+//! ```text
+//! tag 0                        close connection (v1 semantics)
+//! tag 1..=MAX_WIRE_VALUES      v1 request: tag x i32 values -> u32 n, n x f32
+//! OP_INFER    name, u32 n, n x i32   -> REPLY_SCORES, u64 version, u32 n, n x f32
+//! OP_DEPLOY   name, source, backend, u32 workers, u32 queue_depth
+//!                                    -> REPLY_OK, u64 version
+//! OP_UNDEPLOY name                   -> REPLY_OK, u64 retired version
+//! OP_ROLLBACK name                   -> REPLY_OK, u64 new version
+//! OP_LIST                            -> REPLY_JSON, u32 len, bytes
+//! OP_STATS                           -> REPLY_JSON, u32 len, bytes
+//! error (any op)                     -> 0xFFFF_FFFF, u32 len, msg bytes
+//! ```
+//!
+//! Strings are `u16 len + UTF-8 bytes`.  Error frames do **not** close
+//! the connection (the next request may route to a healthy model); only
+//! malformed framing does.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::server::{
+    reject_payload, serve_connections, write_error, MAX_WIRE_VALUES, TCP_SUBMIT_DEADLINE,
+    WIRE_ERROR,
+};
+use crate::coordinator::SubmitError;
+use crate::model::BcnnModel;
+use crate::serving::registry::{BackendSpec, DeploySpec, ModelEntry, ModelRegistry, ModelSource};
+use crate::util::json::Json;
+
+/// v2 frame tags.  All sit far above [`MAX_WIRE_VALUES`] (a v1 length)
+/// and below [`WIRE_ERROR`], so the three frame families cannot collide.
+pub const OP_INFER: u32 = 0xBC20_0001;
+pub const OP_DEPLOY: u32 = 0xBC20_0002;
+pub const OP_UNDEPLOY: u32 = 0xBC20_0003;
+pub const OP_ROLLBACK: u32 = 0xBC20_0004;
+pub const OP_LIST: u32 = 0xBC20_0005;
+pub const OP_STATS: u32 = 0xBC20_0006;
+pub const REPLY_SCORES: u32 = 0xBC20_0081;
+pub const REPLY_OK: u32 = 0xBC20_0082;
+pub const REPLY_JSON: u32 = 0xBC20_0083;
+
+/// How long a handler waits out backpressure before sending the client a
+/// typed overload error instead of stalling the connection (shared with
+/// the v1 front-end).
+pub const SUBMIT_DEADLINE: Duration = TCP_SUBMIT_DEADLINE;
+
+/// Serve the registry on a TCP listener until `stop` flips (thread per
+/// connection, sharing the v1 front-end's accept loop).  Idle accept
+/// polls reap drained retired pools, so a hot-swapped-out model's
+/// threads and weights are freed promptly even on a server that only
+/// ever sees inference traffic after the swap.
+pub fn serve_registry(
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let handler: Arc<dyn Fn(TcpStream) + Send + Sync> = {
+        let registry = Arc::clone(&registry);
+        Arc::new(move |stream| {
+            let _ = handle_conn(stream, &registry);
+        })
+    };
+    serve_connections(listener, stop, handler, move || registry.reap_retired())
+}
+
+fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let router = registry.router();
+    loop {
+        let mut tag_buf = [0u8; 4];
+        if stream.read_exact(&mut tag_buf).is_err() {
+            return Ok(()); // peer closed
+        }
+        let tag = u32::from_le_bytes(tag_buf);
+        match tag {
+            0 => return Ok(()),
+            // ---- protocol-v1 compatibility: tag is the request length --
+            n if (n as usize) <= MAX_WIRE_VALUES => {
+                let image = read_image(&mut stream, n as usize)?;
+                let entry = match router.resolve(None) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        write_error(&mut stream, &e.to_string())?;
+                        continue;
+                    }
+                };
+                match infer_on(&entry, image) {
+                    Ok(scores) => {
+                        let mut out = Vec::with_capacity(4 + scores.len() * 4);
+                        out.extend_from_slice(&(scores.len() as u32).to_le_bytes());
+                        for s in &scores {
+                            out.extend_from_slice(&s.to_le_bytes());
+                        }
+                        stream.write_all(&out)?;
+                    }
+                    Err(msg) => write_error(&mut stream, &msg)?,
+                }
+            }
+            // ---- oversized v1 length: discard payload, reject, go on ---
+            // (bounded — an implausible length or a stalled peer closes
+            // the connection instead of pinning this thread)
+            n if n != WIRE_ERROR && (n >> 24) != 0xBC => {
+                reject_payload(&mut stream, n as usize, &format!("request too large: {n} values"))?;
+            }
+            OP_INFER => {
+                let name = read_string(&mut stream)?;
+                let n = read_u32(&mut stream)? as usize;
+                if n == 0 || n > MAX_WIRE_VALUES {
+                    reject_payload(&mut stream, n, &format!("invalid request size: {n} values"))?;
+                    continue;
+                }
+                let image = read_image(&mut stream, n)?;
+                let sel = if name.is_empty() { None } else { Some(name.as_str()) };
+                let entry = match router.resolve(sel) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        write_error(&mut stream, &e.to_string())?;
+                        continue;
+                    }
+                };
+                match infer_on(&entry, image) {
+                    Ok(scores) => {
+                        let mut out = Vec::with_capacity(16 + scores.len() * 4);
+                        out.extend_from_slice(&REPLY_SCORES.to_le_bytes());
+                        out.extend_from_slice(&entry.version.to_le_bytes());
+                        out.extend_from_slice(&(scores.len() as u32).to_le_bytes());
+                        for s in &scores {
+                            out.extend_from_slice(&s.to_le_bytes());
+                        }
+                        stream.write_all(&out)?;
+                    }
+                    Err(msg) => write_error(&mut stream, &msg)?,
+                }
+            }
+            OP_DEPLOY => {
+                let name = read_string(&mut stream)?;
+                let source = read_string(&mut stream)?;
+                let backend = read_string(&mut stream)?;
+                let workers = read_u32(&mut stream)? as usize;
+                let queue_depth = read_u32(&mut stream)? as usize;
+                let result =
+                    deploy_from_wire(registry, &name, &source, &backend, workers, queue_depth);
+                reply_version(&mut stream, result)?;
+            }
+            OP_UNDEPLOY => {
+                let name = read_string(&mut stream)?;
+                reply_version(&mut stream, registry.undeploy(&name))?;
+            }
+            OP_ROLLBACK => {
+                let name = read_string(&mut stream)?;
+                reply_version(&mut stream, registry.rollback(&name))?;
+            }
+            OP_LIST => {
+                let json = list_json(registry);
+                write_json(&mut stream, &json)?;
+            }
+            OP_STATS => {
+                let json = stats_json(registry);
+                write_json(&mut stream, &json)?;
+            }
+            other => {
+                let _ = write_error(&mut stream, &format!("unknown frame tag {other:#010x}"));
+                bail!("unknown frame tag {other:#010x}");
+            }
+        }
+    }
+}
+
+/// Submit to one entry's pool with a deadline; a saturated pool yields an
+/// error string (sent as an error frame) instead of a stalled connection.
+fn infer_on(entry: &ModelEntry, image: Vec<i32>) -> std::result::Result<Vec<f32>, String> {
+    let rx = entry
+        .client()
+        .submit_deadline(image, SUBMIT_DEADLINE)
+        .map_err(|e| match e {
+            SubmitError::QueueFull { .. } => {
+                format!("model {:?} overloaded: all shard queues full", entry.name)
+            }
+            SubmitError::Shutdown => format!("model {:?} pool shut down", entry.name),
+        })?;
+    let reply = rx
+        .recv()
+        .map_err(|_| format!("model {:?} pool shut down before replying", entry.name))?;
+    reply.scores.map_err(|e| e.message)
+}
+
+/// Build the deploy spec for a wire `DEPLOY`.  Unset fields (empty
+/// backend string, `workers`/`queue_depth` of 0) inherit the pool
+/// parameters of the version currently serving under `name`, so a
+/// hot-swap does not silently reset a tuned pool to defaults; a fresh
+/// name falls back to [`DeploySpec::new`]'s defaults.
+fn deploy_from_wire(
+    registry: &ModelRegistry,
+    name: &str,
+    source: &str,
+    backend: &str,
+    workers: usize,
+    queue_depth: usize,
+) -> Result<u64> {
+    let model: BcnnModel = ModelSource::parse(source)?.load()?;
+    let mut spec = DeploySpec::new(model);
+    if let Some((b, w, q, p)) = registry.current_params(name) {
+        spec = spec.with_backend(b).with_workers(w).with_queue_depth(q).with_policy(p);
+    }
+    if !backend.is_empty() {
+        spec = spec.with_backend(BackendSpec::parse(backend)?);
+    }
+    if workers > 0 {
+        spec = spec.with_workers(workers);
+    }
+    if queue_depth > 0 {
+        spec = spec.with_queue_depth(queue_depth);
+    }
+    registry.deploy(name, spec)
+}
+
+fn reply_version(stream: &mut TcpStream, result: Result<u64>) -> std::io::Result<()> {
+    match result {
+        Ok(version) => {
+            let mut out = Vec::with_capacity(12);
+            out.extend_from_slice(&REPLY_OK.to_le_bytes());
+            out.extend_from_slice(&version.to_le_bytes());
+            stream.write_all(&out)
+        }
+        Err(e) => write_error(stream, &format!("{e:#}")),
+    }
+}
+
+fn write_json(stream: &mut TcpStream, json: &Json) -> std::io::Result<()> {
+    let text = json.to_string();
+    let mut out = Vec::with_capacity(8 + text.len());
+    out.extend_from_slice(&REPLY_JSON.to_le_bytes());
+    out.extend_from_slice(&(text.len() as u32).to_le_bytes());
+    out.extend_from_slice(text.as_bytes());
+    stream.write_all(&out)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// `LIST` payload: the routing table as JSON.
+pub fn list_json(registry: &ModelRegistry) -> Json {
+    let router = registry.router();
+    let table = router.snapshot();
+    let models: Vec<Json> = table
+        .entries
+        .values()
+        .map(|e| {
+            obj(vec![
+                ("name", Json::Str(e.name.clone())),
+                ("version", Json::Num(e.version as f64)),
+                ("backend", Json::Str(e.backend.clone())),
+                ("config", Json::Str(e.config.name.clone())),
+                ("classes", Json::Num(e.config.classes as f64)),
+                ("workers", Json::Num(e.workers() as f64)),
+                ("age_s", Json::Num(e.deployed.elapsed().as_secs_f64())),
+                ("default", Json::Bool(table.default.as_deref() == Some(e.name.as_str()))),
+            ])
+        })
+        .collect();
+    obj(vec![("epoch", Json::Num(table.epoch as f64)), ("models", Json::Arr(models))])
+}
+
+/// `STATS` payload: per-model serving metrics across versions.
+pub fn stats_json(registry: &ModelRegistry) -> Json {
+    let rows: Vec<Json> = registry
+        .stats()
+        .into_iter()
+        .map(|s| {
+            obj(vec![
+                ("name", Json::Str(s.name)),
+                ("version", Json::Num(s.version as f64)),
+                ("live", Json::Bool(s.live)),
+                ("backend", Json::Str(s.backend)),
+                ("config", Json::Str(s.config)),
+                ("metrics", s.metrics.to_json()),
+            ])
+        })
+        .collect();
+    obj(vec![("epoch", Json::Num(registry.epoch() as f64)), ("models", Json::Arr(rows))])
+}
+
+// ---------------------------------------------------------------------------
+// frame primitives
+// ---------------------------------------------------------------------------
+
+fn read_u32(stream: &mut TcpStream) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    stream.read_exact(&mut buf).context("reading u32")?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+fn read_u64(stream: &mut TcpStream) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    stream.read_exact(&mut buf).context("reading u64")?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+fn read_string(stream: &mut TcpStream) -> Result<String> {
+    let mut len = [0u8; 2];
+    stream.read_exact(&mut len).context("reading string length")?;
+    let mut buf = vec![0u8; u16::from_le_bytes(len) as usize];
+    stream.read_exact(&mut buf).context("reading string")?;
+    String::from_utf8(buf).context("string is not UTF-8")
+}
+
+fn read_image(stream: &mut TcpStream, n: usize) -> Result<Vec<i32>> {
+    let mut raw = vec![0u8; n * 4];
+    stream.read_exact(&mut raw).context("reading image payload")?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn push_string(out: &mut Vec<u8>, s: &str) -> Result<()> {
+    if s.len() > u16::MAX as usize {
+        bail!("string too long for wire ({} bytes)", s.len());
+    }
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------------
+
+/// A v2 inference reply: the scores plus which model *version* served it
+/// (the hot-swap observability hook: clients can pin replies to versions).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VersionedScores {
+    pub version: u64,
+    pub scores: Vec<f32>,
+}
+
+/// Blocking protocol-v2 client (inference + admin plane).  Server-sent
+/// error frames surface as `Err` but leave the connection usable.
+pub struct ControlClient {
+    stream: TcpStream,
+}
+
+impl ControlClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Self { stream })
+    }
+
+    /// Classify one image on `model` (empty = server's default model).
+    pub fn infer(&mut self, model: &str, image: &[i32]) -> Result<VersionedScores> {
+        let mut out = Vec::with_capacity(10 + model.len() + image.len() * 4);
+        out.extend_from_slice(&OP_INFER.to_le_bytes());
+        push_string(&mut out, model)?;
+        out.extend_from_slice(&(image.len() as u32).to_le_bytes());
+        for v in image {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        self.stream.write_all(&out)?;
+        self.expect(REPLY_SCORES)?;
+        let version = read_u64(&mut self.stream)?;
+        let n = read_u32(&mut self.stream)? as usize;
+        let mut raw = vec![0u8; n * 4];
+        self.stream.read_exact(&mut raw)?;
+        let scores = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(VersionedScores { version, scores })
+    }
+
+    /// Deploy (or hot-swap) `name` from `source` (a server-side `.bcnn`
+    /// path or `synthetic:<config>[:<seed>]`).  An empty `backend` and
+    /// `workers`/`queue_depth` of 0 inherit the currently-deployed
+    /// pool's parameters (or the server defaults for a fresh name).
+    /// Returns the new version.
+    pub fn deploy(
+        &mut self,
+        name: &str,
+        source: &str,
+        backend: &str,
+        workers: usize,
+        queue_depth: usize,
+    ) -> Result<u64> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&OP_DEPLOY.to_le_bytes());
+        push_string(&mut out, name)?;
+        push_string(&mut out, source)?;
+        push_string(&mut out, backend)?;
+        out.extend_from_slice(&(workers as u32).to_le_bytes());
+        out.extend_from_slice(&(queue_depth as u32).to_le_bytes());
+        self.stream.write_all(&out)?;
+        self.expect(REPLY_OK)?;
+        read_u64(&mut self.stream)
+    }
+
+    pub fn undeploy(&mut self, name: &str) -> Result<u64> {
+        self.name_op(OP_UNDEPLOY, name)
+    }
+
+    pub fn rollback(&mut self, name: &str) -> Result<u64> {
+        self.name_op(OP_ROLLBACK, name)
+    }
+
+    fn name_op(&mut self, op: u32, name: &str) -> Result<u64> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&op.to_le_bytes());
+        push_string(&mut out, name)?;
+        self.stream.write_all(&out)?;
+        self.expect(REPLY_OK)?;
+        read_u64(&mut self.stream)
+    }
+
+    pub fn list(&mut self) -> Result<Json> {
+        self.json_op(OP_LIST)
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.json_op(OP_STATS)
+    }
+
+    fn json_op(&mut self, op: u32) -> Result<Json> {
+        self.stream.write_all(&op.to_le_bytes())?;
+        self.expect(REPLY_JSON)?;
+        let len = read_u32(&mut self.stream)? as usize;
+        let mut raw = vec![0u8; len];
+        self.stream.read_exact(&mut raw)?;
+        Json::parse(std::str::from_utf8(&raw).context("JSON reply is not UTF-8")?)
+    }
+
+    /// Read a reply tag; decode an error frame into `Err` (connection
+    /// stays usable), fail hard on an unexpected tag.
+    fn expect(&mut self, want: u32) -> Result<()> {
+        let tag = read_u32(&mut self.stream)?;
+        if tag == want {
+            return Ok(());
+        }
+        if tag == WIRE_ERROR {
+            let len = read_u32(&mut self.stream)? as usize;
+            let mut msg = vec![0u8; len];
+            self.stream.read_exact(&mut msg)?;
+            bail!("server error: {}", String::from_utf8_lossy(&msg));
+        }
+        bail!("unexpected reply tag {tag:#010x} (wanted {want:#010x})");
+    }
+
+    pub fn close(mut self) -> Result<()> {
+        self.stream.write_all(&0u32.to_le_bytes())?;
+        Ok(())
+    }
+}

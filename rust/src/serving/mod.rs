@@ -1,0 +1,27 @@
+//! Serving control plane (L4): multi-model registry, zero-downtime
+//! hot-swap, and wire-level model routing over the sharded coordinator.
+//!
+//! The dataplane ([`crate::coordinator`], [`crate::pipeline`]) executes
+//! one frozen model fast; a production service never runs one frozen
+//! model.  This module adds the missing control plane:
+//!
+//! * [`registry`] — named, versioned [`registry::ModelEntry`]s, each
+//!   owning its own coordinator pool (engine / pipeline / simulator
+//!   backend per entry), with `deploy` / `undeploy` / `rollback` that
+//!   build the replacement pool off to the side, swap the routing table
+//!   in one epoch bump, and drain-then-join the old pool — no dropped or
+//!   stalled requests across a swap.
+//! * [`router`] — the epoch-tagged `Arc`-swapped routing table handlers
+//!   resolve through.
+//! * [`admin`] — protocol v2: request frames carry a model name, admin
+//!   frames (`DEPLOY`/`UNDEPLOY`/`ROLLBACK`/`LIST`/`STATS`) manage the
+//!   registry remotely, and protocol-v1 clients keep working against the
+//!   default model.
+
+pub mod admin;
+pub mod registry;
+pub mod router;
+
+pub use admin::{serve_registry, ControlClient, VersionedScores};
+pub use registry::{BackendSpec, DeploySpec, ModelEntry, ModelRegistry, ModelSource, ModelStats};
+pub use router::{RouteError, Router, RoutingTable};

@@ -1,0 +1,622 @@
+//! Multi-model registry: named, versioned model entries, each owning its
+//! own sharded [`Coordinator`] pool, with zero-downtime replacement.
+//!
+//! Deploy flow (`deploy`/`rollback`):
+//!
+//! 1. the replacement pool is built *off to the side* (weights transposed,
+//!    workers spawned) while the old version keeps serving;
+//! 2. the routing table is swapped (one epoch bump) — new resolutions land
+//!    on the new pool;
+//! 3. the old entry moves to the retired list.  Handlers that resolved it
+//!    before the swap still hold its `Arc`, so it is only reaped — queue
+//!    drained via the coordinator's poison-free shutdown, workers joined,
+//!    metrics folded into the model's lineage — once its strong count
+//!    falls back to one.  No request is dropped or served by a
+//!    half-initialized pool.
+//!
+//! Per-model serving metrics survive the swap: `stats()` merges the
+//! lineage accumulator (reaped pools), still-draining retired pools, and
+//! the live pool, so counts always sum to the requests actually served.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{
+    Backend, BackendFactory, BatchPolicy, Client, Coordinator, CoordinatorConfig, FpgaSimBackend,
+    GpuSimBackend, Metrics, NativeBackend, PipelineBackend,
+};
+use crate::gpu::GpuKernel;
+use crate::model::{BcnnModel, NetConfig};
+use crate::serving::router::{Router, RoutingTable, TableSlot};
+
+/// Which backend a model entry's pool replicates (paper backends plus the
+/// row-streaming pipeline; see `crate::coordinator::backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// Sequential tap-major engine, `lanes` intra-batch threads.
+    Engine { lanes: usize },
+    /// Row-streaming layer pipeline, `inflight` admission window.
+    Pipeline { inflight: usize },
+    FpgaSim,
+    GpuSim,
+}
+
+impl BackendSpec {
+    /// Parse `engine`, `engine:4`, `pipeline`, `pipeline:8`, `fpga-sim`,
+    /// `gpu-sim` (the wire/CLI encoding).
+    pub fn parse(s: &str) -> Result<Self> {
+        let (kind, arg) = match s.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (s, None),
+        };
+        let num = |default: usize| -> Result<usize> {
+            match arg {
+                None => Ok(default),
+                Some(a) => a
+                    .parse::<usize>()
+                    .map(|n| n.max(1))
+                    .with_context(|| format!("backend parameter {a:?} in {s:?}")),
+            }
+        };
+        match kind {
+            "engine" | "native" => Ok(BackendSpec::Engine { lanes: num(1)? }),
+            "pipeline" => Ok(BackendSpec::Pipeline { inflight: num(8)? }),
+            "fpga-sim" => Ok(BackendSpec::FpgaSim),
+            "gpu-sim" => Ok(BackendSpec::GpuSim),
+            other => bail!("unknown backend {other:?} (engine|pipeline|fpga-sim|gpu-sim)"),
+        }
+    }
+
+    /// Stable wire/CLI label (round-trips through [`BackendSpec::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            BackendSpec::Engine { lanes } => format!("engine:{lanes}"),
+            BackendSpec::Pipeline { inflight } => format!("pipeline:{inflight}"),
+            BackendSpec::FpgaSim => "fpga-sim".to_string(),
+            BackendSpec::GpuSim => "gpu-sim".to_string(),
+        }
+    }
+
+    /// Per-worker replica factory for this backend kind over `model`.
+    pub fn factory(&self, model: BcnnModel) -> BackendFactory {
+        let spec = *self;
+        Arc::new(move || -> Result<Box<dyn Backend>> {
+            Ok(match spec {
+                BackendSpec::Engine { lanes } => {
+                    Box::new(NativeBackend::with_lanes(model.clone(), lanes)?)
+                }
+                BackendSpec::Pipeline { inflight } => {
+                    Box::new(PipelineBackend::new(model.clone(), inflight)?)
+                }
+                BackendSpec::FpgaSim => Box::new(FpgaSimBackend::new(model.clone())?),
+                BackendSpec::GpuSim => {
+                    Box::new(GpuSimBackend::new(model.clone(), GpuKernel::Xnor)?)
+                }
+            })
+        })
+    }
+}
+
+/// Where a model's weights come from — the wire/CLI encoding used by
+/// `--models name=source` and the `DEPLOY` admin frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ModelSource {
+    /// A `.bcnn` artifact on the server's filesystem.
+    File(PathBuf),
+    /// Deterministic synthetic weights for a built-in config
+    /// (`synthetic:<config>[:<seed>]`).
+    Synthetic { config: String, seed: u64 },
+}
+
+impl ModelSource {
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == "synthetic" {
+            bail!("model source \"synthetic\" needs a config: synthetic:<config>[:<seed>]");
+        }
+        if let Some(rest) = s.strip_prefix("synthetic:") {
+            let (config, seed) = match rest.split_once(':') {
+                Some((c, seed)) => {
+                    (c, seed.parse::<u64>().with_context(|| format!("seed {seed:?} in {s:?}"))?)
+                }
+                None => (rest, 0xB_C0DE),
+            };
+            if config.is_empty() {
+                bail!("empty config in model source {s:?}");
+            }
+            Ok(ModelSource::Synthetic { config: config.to_string(), seed })
+        } else if s.is_empty() {
+            bail!("empty model source");
+        } else {
+            Ok(ModelSource::File(PathBuf::from(s)))
+        }
+    }
+
+    pub fn load(&self) -> Result<BcnnModel> {
+        match self {
+            ModelSource::File(path) => BcnnModel::load(path),
+            ModelSource::Synthetic { config, seed } => {
+                let cfg = NetConfig::by_name(config)
+                    .ok_or_else(|| anyhow!("unknown built-in config {config:?}"))?;
+                Ok(BcnnModel::synthetic(&cfg, *seed))
+            }
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            ModelSource::File(p) => p.display().to_string(),
+            ModelSource::Synthetic { config, seed } => format!("synthetic:{config}:{seed}"),
+        }
+    }
+}
+
+/// Everything needed to (re)build one model version's pool — kept in the
+/// lineage history so `rollback` re-instantiates the previous version.
+#[derive(Clone)]
+pub struct DeploySpec {
+    pub model: BcnnModel,
+    pub backend: BackendSpec,
+    pub workers: usize,
+    pub queue_depth: usize,
+    pub policy: BatchPolicy,
+}
+
+impl DeploySpec {
+    /// Engine backend, one worker, default queueing.
+    pub fn new(model: BcnnModel) -> Self {
+        Self {
+            model,
+            backend: BackendSpec::Engine { lanes: 1 },
+            workers: 1,
+            queue_depth: 256,
+            policy: BatchPolicy::default(),
+        }
+    }
+
+    pub fn with_backend(mut self, backend: BackendSpec) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
+    pub fn with_policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+}
+
+/// One live (or draining) model version: its pool plus identity metadata.
+pub struct ModelEntry {
+    pub name: String,
+    /// Registry-global, monotonically increasing deployment version.
+    pub version: u64,
+    pub backend: String,
+    pub config: NetConfig,
+    pub deployed: Instant,
+    coordinator: Coordinator,
+}
+
+impl ModelEntry {
+    /// Submission handle into this version's pool.
+    pub fn client(&self) -> Client {
+        self.coordinator.client()
+    }
+
+    /// Live metrics snapshot of this version's pool.
+    pub fn metrics(&self) -> Metrics {
+        self.coordinator.metrics()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.coordinator.workers()
+    }
+}
+
+/// `stats()` row: one model name across all its versions.
+#[derive(Debug, Clone)]
+pub struct ModelStats {
+    pub name: String,
+    /// Version currently serving, or the last retired version.
+    pub version: u64,
+    pub live: bool,
+    pub backend: String,
+    pub config: String,
+    pub metrics: Metrics,
+}
+
+/// Per-name bookkeeping that outlives individual pools.
+#[derive(Default)]
+struct Lineage {
+    /// Metrics folded in from reaped (fully drained + joined) pools.
+    retired_metrics: Metrics,
+    /// Specs of superseded versions, oldest first (rollback pops).
+    history: Vec<DeploySpec>,
+    /// Spec of the currently-deployed version.
+    current: Option<DeploySpec>,
+    /// Last version number issued for this name.
+    last_version: u64,
+    /// Backend label of the last deployment (for retired-only stats rows).
+    last_backend: String,
+    last_config: String,
+}
+
+/// How many superseded specs to keep per model for `rollback`.
+const HISTORY_DEPTH: usize = 4;
+
+/// A pool that has been unpublished but may still hold in-flight work.
+struct Retired {
+    name: String,
+    entry: Arc<ModelEntry>,
+}
+
+struct RegState {
+    next_version: u64,
+    lineage: BTreeMap<String, Lineage>,
+    retired: Vec<Retired>,
+}
+
+/// The serving control plane: named, versioned model entries over the
+/// sharded coordinator, with zero-downtime hot-swap.
+pub struct ModelRegistry {
+    state: Mutex<RegState>,
+    slot: Arc<TableSlot>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(RegState {
+                next_version: 0,
+                lineage: BTreeMap::new(),
+                retired: Vec::new(),
+            }),
+            slot: Arc::new(RwLock::new(Arc::new(RoutingTable::default()))),
+        }
+    }
+
+    /// Read-side routing handle (cheap clone, share with handler threads).
+    pub fn router(&self) -> Router {
+        Router::new(Arc::clone(&self.slot))
+    }
+
+    /// Deploy (or replace) `name`.  Returns the new version.  The old
+    /// version, if any, keeps serving everything submitted before the
+    /// swap and is joined only once drained.
+    pub fn deploy(&self, name: &str, spec: DeploySpec) -> Result<u64> {
+        if name.is_empty() {
+            bail!("model name must be non-empty");
+        }
+        // the expensive part — weight transposition, worker spawn — runs
+        // before any lock is taken, so routing, stats, and the accept
+        // loop never stall behind a pool build
+        let pool = build_pool(name, &spec)?;
+        let mut st = self.state.lock().unwrap();
+        let version = self.publish_locked(&mut st, name, spec, pool, true);
+        reap(&mut st);
+        Ok(version)
+    }
+
+    /// Remove `name` from the routing table.  In-flight requests finish;
+    /// the pool is joined once drained.  Returns the retired version.
+    pub fn undeploy(&self, name: &str) -> Result<u64> {
+        let mut st = self.state.lock().unwrap();
+        let old = self.swap_table(|table| match table.entries.remove(name) {
+            Some(old) => {
+                if table.default.as_deref() == Some(name) {
+                    table.default = table.entries.keys().next().cloned();
+                }
+                Ok(Some(old))
+            }
+            None => bail!("no model {name:?} deployed"),
+        })?;
+        let old = old.expect("undeploy removed an entry");
+        let version = old.version;
+        let lin = st.lineage.entry(name.to_string()).or_default();
+        if let Some(cur) = lin.current.take() {
+            push_history(lin, cur);
+        }
+        st.retired.push(Retired { name: name.to_string(), entry: old });
+        reap(&mut st);
+        Ok(version)
+    }
+
+    /// Redeploy the previous version of `name` (zero-downtime, like
+    /// `deploy`).  Returns the new version number it serves under.
+    ///
+    /// Unlike `deploy`, the pool build runs *under* the state lock: the
+    /// peek-build-pop of the history stack must be atomic against racing
+    /// admin operations on the same name, rollbacks are rare, and the
+    /// accept loop never blocks on this lock (`reap_retired` try-locks).
+    /// A failed build leaves the rollback point in place for a retry.
+    pub fn rollback(&self, name: &str) -> Result<u64> {
+        let mut st = self.state.lock().unwrap();
+        let spec = st
+            .lineage
+            .get(name)
+            .and_then(|l| l.history.last())
+            .cloned()
+            .ok_or_else(|| anyhow!("no previous version of {name:?} to roll back to"))?;
+        let pool = build_pool(name, &spec)?;
+        let version = self.publish_locked(&mut st, name, spec, pool, false);
+        st.lineage
+            .get_mut(name)
+            .expect("lineage row exists for a rolled-back model")
+            .history
+            .pop();
+        reap(&mut st);
+        Ok(version)
+    }
+
+    /// Pool parameters (backend, workers, queue depth, batch policy) of
+    /// the currently-deployed version of `name` — wire deploys inherit
+    /// these for any field the frame leaves unset, so a hot-swap does not
+    /// silently reset a tuned pool to defaults.
+    pub fn current_params(&self, name: &str) -> Option<(BackendSpec, usize, usize, BatchPolicy)> {
+        let st = self.state.lock().unwrap();
+        st.lineage
+            .get(name)
+            .and_then(|l| l.current.as_ref())
+            .map(|s| (s.backend, s.workers, s.queue_depth, s.policy))
+    }
+
+    /// Make `name` the protocol-v1 default route.
+    pub fn set_default(&self, name: &str) -> Result<()> {
+        let _st = self.state.lock().unwrap();
+        self.swap_table(|table| {
+            if !table.entries.contains_key(name) {
+                bail!("no model {name:?} deployed");
+            }
+            table.default = Some(name.to_string());
+            Ok(None)
+        })?;
+        Ok(())
+    }
+
+    /// Current routing epoch (bumps on every deploy/undeploy/rollback).
+    pub fn epoch(&self) -> u64 {
+        self.slot.read().unwrap().epoch
+    }
+
+    /// Deployed entries, in name order.
+    pub fn list(&self) -> Vec<Arc<ModelEntry>> {
+        self.slot.read().unwrap().entries.values().cloned().collect()
+    }
+
+    /// Per-model serving stats across versions: lineage accumulator
+    /// (reaped pools) + still-draining retired pools + the live pool.
+    pub fn stats(&self) -> Vec<ModelStats> {
+        let mut st = self.state.lock().unwrap();
+        reap(&mut st);
+        let table = Arc::clone(&self.slot.read().unwrap());
+        let mut rows: BTreeMap<String, ModelStats> = BTreeMap::new();
+        for (name, lin) in &st.lineage {
+            rows.insert(
+                name.clone(),
+                ModelStats {
+                    name: name.clone(),
+                    version: lin.last_version,
+                    live: false,
+                    backend: lin.last_backend.clone(),
+                    config: lin.last_config.clone(),
+                    metrics: lin.retired_metrics.clone(),
+                },
+            );
+        }
+        for r in &st.retired {
+            if let Some(row) = rows.get_mut(&r.name) {
+                let snap = r.entry.metrics();
+                row.metrics.merge(&snap);
+                row.metrics.wall += snap.wall;
+            }
+        }
+        for (name, entry) in &table.entries {
+            let row = rows.entry(name.clone()).or_insert_with(|| ModelStats {
+                name: name.clone(),
+                version: entry.version,
+                live: true,
+                backend: entry.backend.clone(),
+                config: entry.config.name.clone(),
+                metrics: Metrics::new(),
+            });
+            row.version = entry.version;
+            row.live = true;
+            row.backend = entry.backend.clone();
+            row.config = entry.config.name.clone();
+            let snap = entry.metrics();
+            row.metrics.merge(&snap);
+            // merge() skips `wall` by design; sum pool lifetimes so the
+            // row's throughput() is defined across versions
+            row.metrics.wall += snap.wall;
+        }
+        rows.into_values().collect()
+    }
+
+    /// Opportunistic reap of drained retired pools.  Also called from
+    /// the TCP front-end's idle loop, so an inference-only server frees
+    /// a displaced pool's threads and weights moments after its last
+    /// in-flight request finishes instead of at the next admin call.
+    /// Non-blocking: if an admin operation holds the state lock, skip —
+    /// the accept loop must never park behind the control plane.
+    pub fn reap_retired(&self) {
+        if let Ok(mut st) = self.state.try_lock() {
+            reap(&mut st);
+        }
+    }
+
+    /// Wait until every retired pool has drained and been joined.
+    pub fn drain_retired(&self, timeout: Duration) -> Result<()> {
+        let start = Instant::now();
+        loop {
+            {
+                let mut st = self.state.lock().unwrap();
+                reap(&mut st);
+                if st.retired.is_empty() {
+                    return Ok(());
+                }
+            }
+            if start.elapsed() >= timeout {
+                bail!("retired pools still draining after {timeout:?}");
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Publish an already-built pool as a new version of `name`.  Caller
+    /// holds the state lock (control operations serialize; router reads
+    /// never touch this lock, and nothing slow happens here).
+    fn publish_locked(
+        &self,
+        st: &mut RegState,
+        name: &str,
+        spec: DeploySpec,
+        pool: Coordinator,
+        push_current_to_history: bool,
+    ) -> u64 {
+        st.next_version += 1;
+        let version = st.next_version;
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            version,
+            backend: spec.backend.label(),
+            config: spec.model.config(),
+            deployed: Instant::now(),
+            coordinator: pool,
+        });
+        let lin = st.lineage.entry(name.to_string()).or_default();
+        lin.last_version = version;
+        lin.last_backend = entry.backend.clone();
+        lin.last_config = entry.config.name.clone();
+        let prev = lin.current.replace(spec);
+        if push_current_to_history {
+            if let Some(prev) = prev {
+                push_history(lin, prev);
+            }
+        }
+        let old = self
+            .swap_table(|table| {
+                let old = table.entries.insert(name.to_string(), Arc::clone(&entry));
+                if table.default.is_none() {
+                    table.default = Some(name.to_string());
+                }
+                Ok(old)
+            })
+            .expect("publish mutation is infallible");
+        if let Some(old) = old {
+            st.retired.push(Retired { name: name.to_string(), entry: old });
+        }
+        version
+    }
+
+    /// Copy-on-write table swap: build the successor off the current
+    /// snapshot, bump the epoch, publish atomically.
+    fn swap_table<F>(&self, mutate: F) -> Result<Option<Arc<ModelEntry>>>
+    where
+        F: FnOnce(&mut RoutingTable) -> Result<Option<Arc<ModelEntry>>>,
+    {
+        let mut slot = self.slot.write().unwrap();
+        let mut next: RoutingTable = (**slot).clone();
+        next.epoch += 1;
+        let displaced = mutate(&mut next)?;
+        *slot = Arc::new(next);
+        Ok(displaced)
+    }
+}
+
+/// Build one version's coordinator pool.  Deliberately a free function
+/// taking no registry state: callers run it *before* locking, so a slow
+/// build (weight transposition, worker spawn) never blocks routing,
+/// stats, or the accept loop.
+fn build_pool(name: &str, spec: &DeploySpec) -> Result<Coordinator> {
+    Coordinator::start_sharded(
+        spec.backend.factory(spec.model.clone()),
+        CoordinatorConfig {
+            policy: spec.policy,
+            workers: spec.workers,
+            queue_depth: spec.queue_depth,
+        },
+    )
+    .with_context(|| format!("building pool for model {name:?}"))
+}
+
+fn push_history(lin: &mut Lineage, spec: DeploySpec) {
+    lin.history.push(spec);
+    if lin.history.len() > HISTORY_DEPTH {
+        lin.history.remove(0);
+    }
+}
+
+/// Join every retired pool whose last external reference is gone: its
+/// queue is drained by the coordinator's poison-free shutdown, the worker
+/// threads are joined, and the final metrics are folded into the lineage.
+fn reap(st: &mut RegState) {
+    let mut i = 0;
+    while i < st.retired.len() {
+        if Arc::strong_count(&st.retired[i].entry) != 1 {
+            i += 1;
+            continue;
+        }
+        let r = st.retired.swap_remove(i);
+        match Arc::try_unwrap(r.entry) {
+            Ok(entry) => {
+                let finals = entry.coordinator.shutdown();
+                let lin = st.lineage.entry(r.name).or_default();
+                lin.retired_metrics.merge(&finals);
+                // merge() deliberately skips `wall`; per-model wall is
+                // the sum of pool lifetimes so throughput stays defined
+                lin.retired_metrics.wall += finals.wall;
+            }
+            // a reader raced us between the count check and the unwrap;
+            // put it back and try again on the next reap
+            Err(entry) => {
+                st.retired.push(Retired { name: r.name, entry });
+                i += 1;
+            }
+        }
+    }
+}
+
+impl Drop for ModelRegistry {
+    fn drop(&mut self) {
+        // live pools: unpublish everything so their queues poison cleanly
+        let entries: Vec<Arc<ModelEntry>> = {
+            let mut slot = self.slot.write().unwrap();
+            let old = Arc::clone(&slot);
+            *slot = Arc::new(RoutingTable {
+                epoch: old.epoch + 1,
+                entries: BTreeMap::new(),
+                default: None,
+            });
+            old.entries.values().cloned().collect()
+        };
+        {
+            let mut st = self.state.lock().unwrap();
+            for entry in entries {
+                let name = entry.name.clone();
+                st.retired.push(Retired { name, entry });
+            }
+        }
+        // bounded wait for handler threads to release their entry refs;
+        // anything still referenced after the deadline is leaked rather
+        // than blocking process teardown forever
+        let _ = self.drain_retired(Duration::from_secs(10));
+    }
+}

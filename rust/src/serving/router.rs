@@ -1,0 +1,102 @@
+//! Wire-level model routing: an epoch-tagged, atomically-swapped routing
+//! table.
+//!
+//! The registry *publishes* immutable [`RoutingTable`] snapshots; request
+//! handlers *resolve* through a [`Router`], which clones the table `Arc`
+//! under a read lock and then works lock-free on the snapshot.  A
+//! `deploy`/`undeploy`/`rollback` builds the successor table off to the
+//! side and swaps it in one write — readers never observe a half-updated
+//! table, and requests that resolved the *old* table keep their
+//! `Arc<ModelEntry>` alive until they finish, which is exactly the
+//! drain-before-join guarantee the hot-swap needs.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, RwLock};
+
+use crate::serving::registry::ModelEntry;
+
+/// One immutable routing snapshot.  `epoch` increments on every publish,
+/// so clients can detect (and log) that a swap happened between requests.
+#[derive(Clone, Default)]
+pub struct RoutingTable {
+    pub epoch: u64,
+    pub entries: BTreeMap<String, Arc<ModelEntry>>,
+    /// Model that serves protocol-v1 frames (no name field on the wire).
+    pub default: Option<String>,
+}
+
+/// Routing failure, surfaced to the wire as an error frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteError {
+    /// Named model is not deployed.
+    Unknown(String),
+    /// Request named no model and no default is deployed.
+    NoDefault,
+}
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteError::Unknown(name) => write!(f, "no model {name:?} deployed"),
+            RouteError::NoDefault => write!(f, "no models deployed"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// Shared slot the registry publishes tables into.  A plain
+/// `RwLock<Arc<_>>` (no arc-swap crate offline): the write section is two
+/// pointer stores, so readers are never blocked for longer than a snapshot
+/// clone.
+pub(crate) type TableSlot = RwLock<Arc<RoutingTable>>;
+
+/// Read-side handle: cheap to clone, safe to use from any number of
+/// connection handler threads.
+#[derive(Clone)]
+pub struct Router {
+    slot: Arc<TableSlot>,
+}
+
+impl Router {
+    pub(crate) fn new(slot: Arc<TableSlot>) -> Self {
+        Self { slot }
+    }
+
+    /// Current table snapshot (immutable; holds its entries alive).
+    pub fn snapshot(&self) -> Arc<RoutingTable> {
+        Arc::clone(&self.slot.read().unwrap())
+    }
+
+    /// Epoch of the current table.
+    pub fn epoch(&self) -> u64 {
+        self.slot.read().unwrap().epoch
+    }
+
+    /// Resolve a request to a model entry.  `None` (or `Some("")`) routes
+    /// to the default model — the protocol-v1 compatibility path.
+    pub fn resolve(&self, name: Option<&str>) -> Result<Arc<ModelEntry>, RouteError> {
+        let table = self.snapshot();
+        match name {
+            Some(n) if !n.is_empty() => table
+                .entries
+                .get(n)
+                .cloned()
+                .ok_or_else(|| RouteError::Unknown(n.to_string())),
+            _ => {
+                let d = table.default.as_deref().ok_or(RouteError::NoDefault)?;
+                table
+                    .entries
+                    .get(d)
+                    .cloned()
+                    .ok_or_else(|| RouteError::Unknown(d.to_string()))
+            }
+        }
+    }
+
+    /// Deployed model names, in table order.
+    pub fn names(&self) -> Vec<String> {
+        self.snapshot().entries.keys().cloned().collect()
+    }
+}

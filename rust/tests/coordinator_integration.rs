@@ -5,7 +5,7 @@
 //! Runs against trained artifacts when present, else deterministic
 //! synthetic weights (numerics-equivalence needs no training).
 
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -328,9 +328,12 @@ fn tcp_round_trip() {
 
 #[test]
 fn tcp_oversized_request_rejected_with_error_frame() {
-    use std::io::{Read, Write};
-
-    let (coord, _engine) = start_native(4, Duration::from_millis(1));
+    // satellite coverage for the server's oversized path end-to-end: the
+    // *client* must decode the error frame, and — because the server
+    // discards the committed payload instead of slamming the connection —
+    // the very next request on the same connection must still be served
+    let (coord, engine) = start_native(4, Duration::from_millis(1));
+    let cfg = engine.model().config();
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let stop = Arc::new(AtomicBool::new(false));
@@ -338,24 +341,95 @@ fn tcp_oversized_request_rejected_with_error_frame() {
     let client = coord.client();
     let server = std::thread::spawn(move || serve_tcp(listener, client, stop2));
 
-    let mut raw = TcpStream::connect(&addr).unwrap();
-    let huge = (repro::coordinator::server::MAX_WIRE_VALUES as u32) + 1;
-    raw.write_all(&huge.to_le_bytes()).unwrap();
-    // server must answer with the error frame (0xFFFF_FFFF + message)
-    let mut len_buf = [0u8; 4];
-    raw.read_exact(&mut len_buf).unwrap();
-    assert_eq!(u32::from_le_bytes(len_buf), u32::MAX, "expected error sentinel");
-    raw.read_exact(&mut len_buf).unwrap();
-    let mut msg = vec![0u8; u32::from_le_bytes(len_buf) as usize];
-    raw.read_exact(&mut msg).unwrap();
-    let msg = String::from_utf8_lossy(&msg).into_owned();
-    assert!(msg.contains("too large"), "unhelpful error: {msg}");
-    // connection is then closed by the server
-    let mut probe = [0u8; 1];
-    assert_eq!(raw.read(&mut probe).unwrap_or(0), 0, "connection should be closed");
+    let huge = vec![0i32; repro::coordinator::server::MAX_WIRE_VALUES + 1];
+    let mut tcp = TcpClient::connect(&addr).unwrap();
+    let err = tcp.infer(&huge).expect_err("oversized request must be rejected");
+    assert!(err.to_string().contains("too large"), "unhelpful error: {err}");
+
+    // the connection survived the rejection
+    let img = random_images(&cfg, 1, 61).pop().unwrap();
+    assert_eq!(tcp.infer(&img).unwrap(), engine.infer(&img).unwrap());
+    tcp.close().unwrap();
 
     stop.store(true, Ordering::Relaxed);
     server.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+#[test]
+fn tcp_backend_failure_becomes_decodable_error_frame() {
+    // satellite coverage for the server's backend-failure reply: the
+    // typed error frame must round-trip to the client, and the
+    // connection must stay open for subsequent requests
+    let coord = Coordinator::start(
+        Box::new(FailingBackend),
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            ..CoordinatorConfig::default()
+        },
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let client = coord.client();
+    let server = std::thread::spawn(move || serve_tcp(listener, client, stop2));
+
+    let mut tcp = TcpClient::connect(&addr).unwrap();
+    for attempt in 0..2 {
+        let err = tcp.infer(&[0i32; 8]).expect_err("failing backend must surface an error");
+        assert!(
+            err.to_string().contains("synthetic device fault"),
+            "attempt {attempt}: undecodable error: {err}"
+        );
+    }
+    tcp.close().unwrap();
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.errors, 2, "both failures must be counted");
+}
+
+#[test]
+fn submit_deadline_expires_with_queue_full() {
+    let started = Arc::new(AtomicBool::new(false));
+    let release = Arc::new(AtomicBool::new(false));
+    let backend = GatedBackend { started: Arc::clone(&started), release: Arc::clone(&release) };
+    let coord = Coordinator::start(
+        Box::new(backend),
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            workers: 1,
+            queue_depth: 1,
+        },
+    );
+    let client = coord.client();
+
+    // park the worker inside infer_batch, then fill the 1-deep queue
+    let rx0 = client.submit(vec![0i32; 4]).unwrap();
+    let t0 = Instant::now();
+    while !started.load(Ordering::SeqCst) {
+        assert!(t0.elapsed() < Duration::from_secs(5), "worker never started");
+        std::thread::sleep(Duration::from_micros(50));
+    }
+    let rx1 = client.submit(vec![1i32; 4]).unwrap();
+
+    // a saturated pool must bound the wait and hand the image back
+    let t0 = Instant::now();
+    match client.submit_deadline(vec![2i32; 4], Duration::from_millis(20)) {
+        Err(SubmitError::QueueFull { image }) => assert_eq!(image, vec![2i32; 4]),
+        Err(SubmitError::Shutdown) => panic!("pool is alive"),
+        Ok(_) => panic!("deadline submit fit a full queue"),
+    }
+    let waited = t0.elapsed();
+    assert!(waited >= Duration::from_millis(20), "returned before the deadline: {waited:?}");
+    assert!(waited < Duration::from_secs(5), "deadline failed to bound the wait: {waited:?}");
+
+    release.store(true, Ordering::SeqCst);
+    for rx in [rx0, rx1] {
+        assert!(rx.recv().unwrap().scores.is_ok());
+    }
     coord.shutdown();
 }
 

@@ -1,0 +1,373 @@
+//! Serving control plane integration: registry deploy/undeploy/rollback,
+//! epoch-tagged routing swaps, protocol-v2 wire framing (model routing +
+//! admin frames + v1 compat), and the headline guarantee — zero-downtime
+//! hot-swap under live traffic with bit-exact, version-attributed replies.
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use repro::bcnn::Engine;
+use repro::coordinator::server::TcpClient;
+use repro::coordinator::workload::random_images;
+use repro::model::{BcnnModel, NetConfig};
+use repro::serving::{
+    serve_registry, BackendSpec, ControlClient, DeploySpec, ModelRegistry, ModelSource, RouteError,
+};
+
+fn tiny(seed: u64) -> BcnnModel {
+    BcnnModel::synthetic(&NetConfig::tiny(), seed)
+}
+
+#[test]
+fn registry_deploy_resolve_undeploy() {
+    let registry = ModelRegistry::new();
+    let router = registry.router();
+    assert!(matches!(router.resolve(None), Err(RouteError::NoDefault)));
+
+    let v_a = registry.deploy("a", DeploySpec::new(tiny(1))).unwrap();
+    let v_b = registry.deploy("b", DeploySpec::new(tiny(2))).unwrap();
+    assert!(v_b > v_a, "versions must increase");
+    assert_eq!(router.names(), vec!["a".to_string(), "b".to_string()]);
+
+    // first deployment becomes the default route
+    assert_eq!(router.resolve(None).unwrap().name, "a");
+    assert_eq!(router.resolve(Some("b")).unwrap().version, v_b);
+    assert!(matches!(
+        router.resolve(Some("nope")),
+        Err(RouteError::Unknown(n)) if n == "nope"
+    ));
+
+    // the default route can be repointed explicitly
+    registry.set_default("b").unwrap();
+    assert_eq!(router.resolve(None).unwrap().name, "b");
+    assert!(registry.set_default("nope").is_err());
+    registry.set_default("a").unwrap();
+
+    // undeploy the default: the route falls over to the survivor
+    registry.undeploy("a").unwrap();
+    assert_eq!(router.resolve(None).unwrap().name, "b");
+    assert!(registry.undeploy("a").is_err(), "double undeploy must fail");
+    registry.drain_retired(Duration::from_secs(5)).unwrap();
+}
+
+#[test]
+fn epoch_bumps_on_every_swap() {
+    let registry = ModelRegistry::new();
+    let e0 = registry.epoch();
+    registry.deploy("m", DeploySpec::new(tiny(1))).unwrap();
+    let e1 = registry.epoch();
+    assert!(e1 > e0);
+    registry.deploy("m", DeploySpec::new(tiny(2))).unwrap();
+    let e2 = registry.epoch();
+    assert!(e2 > e1);
+    registry.rollback("m").unwrap();
+    assert!(registry.epoch() > e2);
+}
+
+#[test]
+fn swap_is_zero_downtime_for_inflight_requests() {
+    // hold a resolved entry across a swap: its pool must keep serving
+    let registry = ModelRegistry::new();
+    let v1 = registry.deploy("m", DeploySpec::new(tiny(1))).unwrap();
+    let router = registry.router();
+    let old = router.resolve(Some("m")).unwrap();
+    assert_eq!(old.version, v1);
+
+    let v2 = registry.deploy("m", DeploySpec::new(tiny(2))).unwrap();
+    // the old pool still answers a submission made through the held ref
+    let img = random_images(&NetConfig::tiny(), 1, 9).pop().unwrap();
+    let engine_old = Engine::new(tiny(1)).unwrap();
+    let reply = old.client().infer(img.clone()).unwrap();
+    assert_eq!(reply.scores.unwrap(), engine_old.infer(&img).unwrap());
+
+    // new resolutions land on the new version
+    assert_eq!(router.resolve(Some("m")).unwrap().version, v2);
+
+    drop(old);
+    registry.drain_retired(Duration::from_secs(5)).unwrap();
+    // after drain, per-model stats still account for the retired pool
+    let stats = registry.stats();
+    let m = stats.iter().find(|s| s.name == "m").unwrap();
+    assert!(m.live);
+    assert_eq!(m.metrics.requests, 1, "retired pool's request must survive the swap");
+}
+
+#[test]
+fn rollback_restores_previous_weights() {
+    let registry = ModelRegistry::new();
+    registry.deploy("m", DeploySpec::new(tiny(1))).unwrap();
+    registry.deploy("m", DeploySpec::new(tiny(2))).unwrap();
+    let v3 = registry.rollback("m").unwrap();
+
+    let img = random_images(&NetConfig::tiny(), 1, 10).pop().unwrap();
+    let engine_a = Engine::new(tiny(1)).unwrap();
+    let entry = registry.router().resolve(Some("m")).unwrap();
+    assert_eq!(entry.version, v3);
+    let reply = entry.client().infer(img.clone()).unwrap();
+    assert_eq!(
+        reply.scores.unwrap(),
+        engine_a.infer(&img).unwrap(),
+        "rollback must serve the original weights"
+    );
+    drop(entry);
+
+    // the history was consumed: nothing left to roll back to
+    assert!(registry.rollback("m").is_err());
+}
+
+#[test]
+fn model_source_and_backend_spec_parse() {
+    assert_eq!(
+        ModelSource::parse("synthetic:tiny:7").unwrap(),
+        ModelSource::Synthetic { config: "tiny".into(), seed: 7 }
+    );
+    let file = ModelSource::parse("artifacts/model_small.bcnn").unwrap();
+    assert!(matches!(file, ModelSource::File(_)));
+    assert!(ModelSource::parse("synthetic:").is_err());
+    assert!(ModelSource::parse("synthetic:tiny:notanumber").is_err());
+    assert!(ModelSource::parse("synthetic:nope:1").unwrap().load().is_err());
+
+    assert_eq!(BackendSpec::parse("engine:4").unwrap(), BackendSpec::Engine { lanes: 4 });
+    assert_eq!(BackendSpec::parse("pipeline").unwrap(), BackendSpec::Pipeline { inflight: 8 });
+    assert_eq!(BackendSpec::parse("fpga-sim").unwrap(), BackendSpec::FpgaSim);
+    assert!(BackendSpec::parse("tpu").is_err());
+    let label = BackendSpec::Engine { lanes: 2 }.label();
+    assert_eq!(BackendSpec::parse(&label).unwrap(), BackendSpec::Engine { lanes: 2 });
+}
+
+type ServerHandle = std::thread::JoinHandle<anyhow::Result<()>>;
+
+fn start_server(registry: Arc<ModelRegistry>) -> (String, Arc<AtomicBool>, ServerHandle) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || serve_registry(listener, registry, stop))
+    };
+    (addr, stop, handle)
+}
+
+#[test]
+fn v2_wire_admin_and_routing() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.deploy("prod", DeploySpec::new(tiny(1))).unwrap();
+    let (addr, stop, server) = start_server(Arc::clone(&registry));
+
+    let mut admin = ControlClient::connect(&addr).unwrap();
+    let v = admin.deploy("canary", "synthetic:tiny:5", "engine:2", 1, 16).unwrap();
+
+    let list = admin.list().unwrap();
+    let models = list.get("models").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(models.len(), 2);
+    let canary = models
+        .iter()
+        .find(|m| m.get("name").unwrap().as_str().unwrap() == "canary")
+        .expect("canary listed");
+    assert_eq!(canary.get("version").unwrap().as_f64().unwrap() as u64, v);
+    assert_eq!(canary.get("backend").unwrap().as_str().unwrap(), "engine:2");
+
+    // routed inference: each name serves its own weights
+    let img = random_images(&NetConfig::tiny(), 1, 3).pop().unwrap();
+    let prod_reply = admin.infer("prod", &img).unwrap();
+    let canary_reply = admin.infer("canary", &img).unwrap();
+    assert_eq!(prod_reply.scores, Engine::new(tiny(1)).unwrap().infer(&img).unwrap());
+    assert_eq!(canary_reply.scores, Engine::new(tiny(5)).unwrap().infer(&img).unwrap());
+    assert_eq!(canary_reply.version, v);
+
+    // a wire redeploy with unset fields inherits the tuned pool
+    // parameters instead of resetting them to defaults
+    let v2 = admin.deploy("canary", "synthetic:tiny:6", "", 0, 0).unwrap();
+    let list = admin.list().unwrap();
+    let canary = list
+        .get("models")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|m| m.get("name").unwrap().as_str().unwrap() == "canary")
+        .cloned()
+        .expect("canary listed");
+    assert_eq!(canary.get("version").unwrap().as_f64().unwrap() as u64, v2);
+    assert_eq!(
+        canary.get("backend").unwrap().as_str().unwrap(),
+        "engine:2",
+        "unset wire fields must inherit the deployed pool's parameters"
+    );
+
+    // unknown model: error frame, connection stays usable
+    let err = admin.infer("ghost", &img).unwrap_err();
+    assert!(err.to_string().contains("ghost"), "{err}");
+    assert!(admin.infer("prod", &img).is_ok(), "connection must survive a routing error");
+
+    // undeploy via wire; the name disappears from LIST
+    admin.undeploy("canary").unwrap();
+    let list = admin.list().unwrap();
+    assert_eq!(list.get("models").unwrap().as_arr().unwrap().len(), 1);
+    assert!(admin.undeploy("canary").is_err());
+    assert!(admin.infer("prod", &img).is_ok(), "connection must survive an admin error");
+
+    admin.close().unwrap();
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn v1_clients_are_served_by_the_default_model() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.deploy("prod", DeploySpec::new(tiny(1))).unwrap();
+    registry.deploy("other", DeploySpec::new(tiny(2))).unwrap();
+    let (addr, stop, server) = start_server(Arc::clone(&registry));
+
+    let engine = Engine::new(tiny(1)).unwrap();
+    let images = random_images(&NetConfig::tiny(), 3, 8);
+    let mut v1 = TcpClient::connect(&addr).unwrap();
+    for img in &images {
+        assert_eq!(v1.infer(img).unwrap(), engine.infer(img).unwrap());
+    }
+    v1.close().unwrap();
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn garbage_tag_is_rejected_promptly_not_drained() {
+    use std::io::{Read, Write};
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.deploy("m", DeploySpec::new(tiny(1))).unwrap();
+    let (addr, stop, server) = start_server(Arc::clone(&registry));
+
+    // a tag claiming a ~17 GiB v1 payload (with no payload behind it)
+    // must get an immediate error frame + close — the server must not
+    // park this connection's thread trying to drain it
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    raw.write_all(&0xFEFF_FFFFu32.to_le_bytes()).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = [0u8; 4];
+    raw.read_exact(&mut buf).unwrap();
+    assert_eq!(u32::from_le_bytes(buf), u32::MAX, "expected error sentinel");
+    raw.read_exact(&mut buf).unwrap();
+    let mut msg = vec![0u8; u32::from_le_bytes(buf) as usize];
+    raw.read_exact(&mut msg).unwrap();
+    assert!(String::from_utf8_lossy(&msg).contains("too large"));
+    let mut probe = [0u8; 1];
+    assert_eq!(raw.read(&mut probe).unwrap_or(0), 0, "connection must close");
+    drop(raw);
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
+/// The acceptance scenario: a continuous client load loop while the
+/// server flips between two synthetic configs >= 3 times.  Every
+/// submission must be answered, every reply must be bit-identical to a
+/// direct `Engine::infer` of the version that claims to have served it,
+/// and `STATS` request counts must sum to the number of submissions.
+#[test]
+fn hot_swap_under_live_traffic_is_lossless_and_bit_exact() {
+    const SEED_A: u64 = 101;
+    const SEED_B: u64 = 202;
+    const CYCLES: usize = 3;
+    const THREADS: usize = 3;
+
+    let cfg = NetConfig::tiny();
+    let engine_a = Engine::new(tiny(SEED_A)).unwrap();
+    let engine_b = Engine::new(tiny(SEED_B)).unwrap();
+
+    let registry = Arc::new(ModelRegistry::new());
+    let v1 = registry
+        .deploy("m", DeploySpec::new(tiny(SEED_A)).with_workers(2))
+        .unwrap();
+    let (addr, stop, server) = start_server(Arc::clone(&registry));
+
+    let images = random_images(&cfg, 6, 55);
+    let submitted = Arc::new(AtomicU64::new(0));
+    let mut clients = Vec::new();
+    for t in 0..THREADS {
+        let addr = addr.clone();
+        let images = images.clone();
+        let stop = Arc::clone(&stop);
+        let submitted = Arc::clone(&submitted);
+        clients.push(std::thread::spawn(
+            move || -> anyhow::Result<Vec<(usize, u64, Vec<f32>)>> {
+                let mut conn = ControlClient::connect(&addr)?;
+                let mut got = Vec::new();
+                let mut i = t;
+                while !stop.load(Ordering::Relaxed) {
+                    let idx = i % images.len();
+                    submitted.fetch_add(1, Ordering::Relaxed);
+                    let reply = conn.infer("m", &images[idx])?;
+                    got.push((idx, reply.version, reply.scores));
+                    i += 1;
+                }
+                conn.close()?;
+                Ok(got)
+            },
+        ));
+    }
+
+    // versions deployed so far -> which weights they serve
+    let mut version_seed: BTreeMap<u64, u64> = BTreeMap::new();
+    version_seed.insert(v1, SEED_A);
+    let mut admin = ControlClient::connect(&addr).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    for _ in 0..CYCLES {
+        let v = admin
+            .deploy("m", &format!("synthetic:tiny:{SEED_B}"), "engine", 2, 0)
+            .unwrap();
+        version_seed.insert(v, SEED_B);
+        std::thread::sleep(Duration::from_millis(30));
+        let v = admin.rollback("m").unwrap();
+        version_seed.insert(v, SEED_A);
+        std::thread::sleep(Duration::from_millis(30));
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let mut replies = Vec::new();
+    for c in clients {
+        replies.extend(c.join().unwrap().expect("client saw an error (a drop)"));
+    }
+
+    // zero drops, zero hangs
+    let submitted = submitted.load(Ordering::Relaxed);
+    assert_eq!(replies.len() as u64, submitted, "every submission must be answered");
+    assert!(submitted > 0, "load loop never ran");
+
+    // bit-exact attribution to the serving version
+    let mut versions_seen = std::collections::BTreeSet::new();
+    for (idx, version, scores) in &replies {
+        let seed = version_seed
+            .get(version)
+            .unwrap_or_else(|| panic!("reply claims unknown version {version}"));
+        versions_seen.insert(*version);
+        let engine = if *seed == SEED_A { &engine_a } else { &engine_b };
+        assert_eq!(
+            &engine.infer(&images[*idx]).unwrap(),
+            scores,
+            "reply from v{version} diverged from that version's weights"
+        );
+    }
+    assert!(
+        versions_seen.len() >= 2,
+        "traffic never spanned a swap (saw versions {versions_seen:?}); \
+         the test needs in-flight coverage of both configs"
+    );
+
+    // STATS conservation across live + retired pools
+    let stats = admin.stats().unwrap();
+    let mut stats_requests = 0u64;
+    for m in stats.get("models").unwrap().as_arr().unwrap() {
+        stats_requests +=
+            m.get("metrics").unwrap().get("requests").unwrap().as_f64().unwrap() as u64;
+    }
+    assert_eq!(stats_requests, submitted, "STATS counts must sum to submissions");
+    admin.close().unwrap();
+
+    server.join().unwrap().unwrap();
+    registry.drain_retired(Duration::from_secs(5)).unwrap();
+}
