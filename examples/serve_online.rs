@@ -10,15 +10,18 @@
 //!
 //! Run (trained artifacts optional — synthetic weights otherwise):
 //!     cargo run --release --example serve_online -- \
-//!         [--backend engine|pipeline] [--inflight N]
+//!         [--backend engine|pipeline] [--inflight N] [--stage-threads T]
 //!
 //! `--backend pipeline` serves the final section from the row-streaming
 //! layer-pipeline runtime (all layers concurrently active) instead of the
-//! sequential engine; `--inflight` sets its per-replica admission window.
+//! sequential engine; `--inflight` sets its per-replica admission window
+//! and `--stage-threads` a total stage-lane budget that the calibrated
+//! §4.3 balancing plan spreads across the layers (0 = one lane each).
 
 use std::sync::Arc;
 use std::time::Duration;
 
+use repro::bcnn::Engine;
 use repro::benchkit::Table;
 use repro::coordinator::workload::{run_closed_loop, run_open_loop};
 use repro::coordinator::{
@@ -27,6 +30,7 @@ use repro::coordinator::{
 };
 use repro::gpu::{GpuKernel, XNOR_POWER_W};
 use repro::model::BcnnModel;
+use repro::pipeline::StagePlan;
 
 /// `--key value` lookup over the raw argv (the examples stay free of the
 /// CLI parser on purpose: they document the library API, not the binary).
@@ -40,6 +44,10 @@ fn main() -> anyhow::Result<()> {
     let inflight: usize = match arg_value("--inflight") {
         Some(v) => v.parse()?,
         None => 8,
+    };
+    let stage_threads: usize = match arg_value("--stage-threads") {
+        Some(v) => v.parse()?,
+        None => 0,
     };
     if !matches!(backend_kind.as_str(), "engine" | "native" | "pipeline") {
         anyhow::bail!("--backend must be engine or pipeline, got {backend_kind:?}");
@@ -101,12 +109,24 @@ fn main() -> anyhow::Result<()> {
     );
     let mut table = Table::new(&["workers", "req/s", "speedup", "per-shard requests"]);
     let mut base = 0.0f64;
+    // calibrate the stage plan ONCE (idle machine, no sibling replicas
+    // skewing the timing) and share it across every replica of every
+    // pool size — all shards run identical lane counts
+    let stage_plan = if stage_threads > 0 {
+        Some(StagePlan::balanced(&Engine::new(model.clone())?, stage_threads)?)
+    } else {
+        None
+    };
     for workers in [1usize, 2, 4] {
         let m = model.clone();
         let kind = backend_kind.clone();
+        let plan = stage_plan.clone();
         let factory: BackendFactory = Arc::new(move || -> anyhow::Result<Box<dyn Backend>> {
-            Ok(match kind.as_str() {
-                "pipeline" => Box::new(PipelineBackend::new(m.clone(), inflight)?),
+            Ok(match (kind.as_str(), &plan) {
+                ("pipeline", Some(plan)) => {
+                    Box::new(PipelineBackend::with_plan(m.clone(), inflight, plan.clone())?)
+                }
+                ("pipeline", None) => Box::new(PipelineBackend::new(m.clone(), inflight)?),
                 _ => Box::new(NativeBackend::new(m.clone())?),
             })
         });

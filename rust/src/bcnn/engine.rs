@@ -407,6 +407,21 @@ pub enum StepperOut {
 /// bit-identical to whole-image inference (asserted by the property tests
 /// in `rust/tests/pipeline_integration.rs`).
 ///
+/// ## Channel partitions (stage-lane parallelism)
+///
+/// A stepper may be restricted to an output-channel subrange
+/// ([`Engine::layer_stepper_part`]): it then accumulates only the filter
+/// subrange `[lo, hi)` of the tap-major bank and its emitted packed rows
+/// carry only bits `[lo, hi)` of each pixel (all other bits zero), so
+/// the lanes of a disjoint cover of `0..out_c` OR-merge into exactly the
+/// unpartitioned row — bit-identical by construction, since every output
+/// channel's accumulator chain (conv counts, pool max, NormBinarize
+/// compare, FC dot product, classifier affine) is independent of every
+/// other channel's.  Partitioned classifier steppers emit the score
+/// subrange `[lo, hi)`; lanes concatenate in ascending range order.
+/// This is the host analogue of splitting a layer's filters across `P`
+/// PEs (paper §4.2 spatial parallelism).
+///
 /// Lifecycle per image: exactly `in_hw` [`LayerStepper::push_row`] calls,
 /// then one [`LayerStepper::flush`] (which emits the bottom border row,
 /// or the FC/classifier output, and resets the stepper for the next
@@ -415,6 +430,10 @@ pub struct LayerStepper<'e> {
     engine: &'e Engine,
     index: usize,
     shape: LayerShape,
+    /// Output-channel (conv) / feature (FC) / class (classifier) subrange
+    /// this stepper computes; `(0, shape.out_c)` for the full stepper.
+    lo: usize,
+    hi: usize,
     /// Input rows pushed so far this image.
     rows_seen: usize,
     state: StepperState,
@@ -492,32 +511,73 @@ impl Engine {
         let Some(&shape) = shapes.get(index) else {
             bail!("layer index {index} out of range ({} layers)", shapes.len());
         };
+        self.stepper_for(index, shape, 0, shape.out_c)
+    }
+
+    /// Build a *partitioned* stepper computing only output channels
+    /// (features / classes) `[lo, hi)` of layer `index` — one lane of a
+    /// stage lane group.  See the partition notes on [`LayerStepper`].
+    pub fn layer_stepper_part(
+        &self,
+        index: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Result<LayerStepper<'_>> {
+        let shapes = self.layer_shapes();
+        let Some(&shape) = shapes.get(index) else {
+            bail!("layer index {index} out of range ({} layers)", shapes.len());
+        };
+        if lo >= hi || hi > shape.out_c {
+            bail!(
+                "layer {index}: partition [{lo}, {hi}) out of range for {} output channels",
+                shape.out_c
+            );
+        }
+        self.stepper_for(index, shape, lo, hi)
+    }
+
+    fn stepper_for(
+        &self,
+        index: usize,
+        shape: LayerShape,
+        lo: usize,
+        hi: usize,
+    ) -> Result<LayerStepper<'_>> {
+        // partition-local accumulators are compact (`plen` lanes); only
+        // the emitted packed rows span the full channel width
+        let plen = hi - lo;
         let state = match &self.model.layers[index] {
             LayerWeights::FpConv { .. } => StepperState::FpConv {
                 ring: std::array::from_fn(|_| vec![0i32; shape.in_hw * shape.in_c]),
-                pix: vec![0i32; shape.out_c],
-                conv_row: vec![0i32; shape.in_hw * shape.out_c],
-                pending: Vec::with_capacity(shape.in_hw * shape.out_c),
-                pooled: Vec::with_capacity(shape.out_hw * shape.out_c),
+                pix: vec![0i32; plen],
+                conv_row: vec![0i32; shape.in_hw * plen],
+                pending: Vec::with_capacity(shape.in_hw * plen),
+                pooled: Vec::with_capacity(shape.out_hw * plen),
             },
             LayerWeights::BinConv { .. } => StepperState::BinConv {
                 ring: std::array::from_fn(|_| vec![0u64; shape.in_row_words()]),
-                mism: vec![0u64; shape.out_c],
-                conv_row: vec![0i32; shape.in_hw * shape.out_c],
-                pending: Vec::with_capacity(shape.in_hw * shape.out_c),
-                pooled: Vec::with_capacity(shape.out_hw * shape.out_c),
+                mism: vec![0u64; plen],
+                conv_row: vec![0i32; shape.in_hw * plen],
+                pending: Vec::with_capacity(shape.in_hw * plen),
+                pooled: Vec::with_capacity(shape.out_hw * plen),
             },
             LayerWeights::BinFc { in_f, .. } | LayerWeights::BinFcOut { in_f, .. } => {
                 StepperState::Fc { fc_row: vec![0u64; words_for(*in_f)] }
             }
         };
-        Ok(LayerStepper { engine: self, index, shape, rows_seen: 0, state })
+        Ok(LayerStepper { engine: self, index, shape, lo, hi, rows_seen: 0, state })
     }
 }
 
 impl LayerStepper<'_> {
     pub fn shape(&self) -> LayerShape {
         self.shape
+    }
+
+    /// The output-channel subrange this stepper computes
+    /// (`(0, shape.out_c)` for an unpartitioned stepper).
+    pub fn partition(&self) -> (usize, usize) {
+        (self.lo, self.hi)
     }
 
     /// Push one input row (row `rows_seen` of the current image).  Output
@@ -609,8 +669,10 @@ impl LayerStepper<'_> {
 
     /// FC / classifier flush: the whole flatten row is in, compute the
     /// packed dot products (identical arithmetic to [`step_layer`]'s FC
-    /// arms) and zero the accumulator for the next image.
+    /// arms) for this stepper's feature subrange and zero the accumulator
+    /// for the next image.
     fn flush_fc(&mut self, emit: &mut dyn FnMut(StepperOut)) {
+        let (lo, hi) = (self.lo, self.hi);
         let layer = &self.engine.model.layers[self.index];
         let StepperState::Fc { fc_row } = &mut self.state else {
             unreachable!("flush_fc on a conv stepper");
@@ -618,12 +680,12 @@ impl LayerStepper<'_> {
         match layer {
             LayerWeights::BinFc { out_f, .. } => {
                 let mut out = vec![0u64; words_for(*out_f)];
-                bin_fc_select(layer, &fc_row[..], |n| set_bit(&mut out, n, true));
+                bin_fc_select(layer, &fc_row[..], lo, hi, |n| set_bit(&mut out, n, true));
                 emit(StepperOut::Row(out));
             }
-            LayerWeights::BinFcOut { out_f, .. } => {
-                let mut scores = Vec::with_capacity(*out_f);
-                bin_fc_out_scores(layer, &fc_row[..], &mut scores);
+            LayerWeights::BinFcOut { .. } => {
+                let mut scores = Vec::with_capacity(hi - lo);
+                bin_fc_out_scores(layer, &fc_row[..], lo, hi, &mut scores);
                 emit(StepperOut::Scores(scores));
             }
             _ => unreachable!("Fc state only built for FC layers"),
@@ -631,10 +693,12 @@ impl LayerStepper<'_> {
         fc_row.fill(0);
     }
 
-    /// Compute conv output row `y` from the sliding window and emit it
-    /// (possibly folded through the fused 2x2/2 pool).
+    /// Compute conv output row `y` (this stepper's channel subrange) from
+    /// the sliding window and emit it (possibly folded through the fused
+    /// 2x2/2 pool).
     fn conv_out_row(&mut self, y: usize, emit: &mut dyn FnMut(StepperOut)) -> Result<()> {
         let LayerShape { in_hw, in_c, out_c, .. } = self.shape;
+        let (lo, hi) = (self.lo, self.hi);
         let layer = &self.engine.model.layers[self.index];
         match &mut self.state {
             StepperState::FpConv { ring, pix, conv_row, pending, pooled } => {
@@ -647,12 +711,14 @@ impl LayerStepper<'_> {
                     in_hw,
                     in_c,
                     out_c,
+                    lo,
+                    hi,
                     self.engine.fp_weights_t[self.index].as_slice(),
                     pix,
                     conv_row,
                 );
                 finish_conv_row(
-                    conv_row, pending, pooled, *pool, y, in_hw, out_c, thresholds, emit,
+                    conv_row, pending, pooled, *pool, y, in_hw, out_c, lo, hi, thresholds, emit,
                 );
             }
             StepperState::BinConv { ring, mism, conv_row, pending, pooled } => {
@@ -663,9 +729,9 @@ impl LayerStepper<'_> {
                     .as_ref()
                     .expect("BinConv layer has a prepared bank");
                 let rows = window(ring, y, in_hw);
-                bin_conv_row(rows, in_hw, in_c, out_c, prep, mism, conv_row);
+                bin_conv_row(rows, in_hw, in_c, out_c, lo, hi, prep, mism, conv_row);
                 finish_conv_row(
-                    conv_row, pending, pooled, *pool, y, in_hw, out_c, thresholds, emit,
+                    conv_row, pending, pooled, *pool, y, in_hw, out_c, lo, hi, thresholds, emit,
                 );
             }
             StepperState::Fc { .. } => unreachable!("conv_out_row on an FC stepper"),
@@ -685,14 +751,19 @@ fn window<T>(ring: &[Vec<T>; 3], y: usize, hw: usize) -> [Option<&[T]>; 3] {
 }
 
 /// Row-window variant of [`bin_conv3x3_tap_major`]: one output row of
-/// match counts from three (optional) input rows.  Runs the identical
-/// tap-major kernels ([`accumulate_tap`] / `tap_pop` borders) so counts
-/// are bit-exact vs the whole-image path.
+/// match counts (channels `[lo, hi)`, compact `hi - lo` stride) from
+/// three (optional) input rows.  Runs the identical tap-major kernels
+/// ([`accumulate_tap_range`] / `tap_pop` borders) so counts are bit-exact
+/// vs the whole-image path — per channel, a partition accumulates exactly
+/// the lanes the full kernel does.
+#[allow(clippy::too_many_arguments)]
 fn bin_conv_row(
     rows: [Option<&[u64]>; 3],
     hw: usize,
     in_c: usize,
     out_c: usize,
+    lo: usize,
+    hi: usize,
     prep: &PreparedBin,
     mism: &mut [u64],
     out_row: &mut [i32],
@@ -700,43 +771,49 @@ fn bin_conv_row(
     let cnum = (9 * in_c) as i32;
     let cw = prep.chan_words;
     let lane = cw * out_c;
+    let plen = hi - lo;
     let interior_ok = hw >= 3 && rows.iter().all(|r| r.is_some());
 
     if !interior_ok {
         for x in 0..hw {
-            bin_row_border(&rows, hw, prep, out_c, x, mism);
-            store_row_pixel(out_row, mism, cnum, out_c, x);
+            bin_row_border(&rows, hw, prep, out_c, lo, hi, x, mism);
+            store_row_pixel(out_row, mism, cnum, plen, x);
         }
         return;
     }
-    bin_row_border(&rows, hw, prep, out_c, 0, mism);
-    store_row_pixel(out_row, mism, cnum, out_c, 0);
+    bin_row_border(&rows, hw, prep, out_c, lo, hi, 0, mism);
+    store_row_pixel(out_row, mism, cnum, plen, 0);
     for x in 1..hw - 1 {
         // all 9 taps in bounds: constant-trip, branch-free tap loop
         mism.fill(0);
         for t in 0..9usize {
             let row = rows[t / 3].unwrap();
             let sx = x + t % 3 - 1;
-            accumulate_tap(
+            accumulate_tap_range(
                 &row[sx * cw..(sx + 1) * cw],
                 &prep.tap_weights[t * lane..(t + 1) * lane],
                 out_c,
+                lo,
+                hi,
                 mism,
             );
         }
-        store_row_pixel(out_row, mism, cnum, out_c, x);
+        store_row_pixel(out_row, mism, cnum, plen, x);
     }
-    bin_row_border(&rows, hw, prep, out_c, hw - 1, mism);
-    store_row_pixel(out_row, mism, cnum, out_c, hw - 1);
+    bin_row_border(&rows, hw, prep, out_c, lo, hi, hw - 1, mism);
+    store_row_pixel(out_row, mism, cnum, plen, hw - 1);
 }
 
 /// Border pixel of a row window: clipped taps contribute their
 /// precomputed weight popcount, exactly like [`border_pixel`].
+#[allow(clippy::too_many_arguments)]
 fn bin_row_border(
     rows: &[Option<&[u64]>; 3],
     hw: usize,
     prep: &PreparedBin,
     out_c: usize,
+    lo: usize,
+    hi: usize,
     x: usize,
     mism: &mut [u64],
 ) {
@@ -748,15 +825,17 @@ fn bin_row_border(
         match rows[t / 3] {
             Some(row) if sx >= 0 && (sx as usize) < hw => {
                 let sx = sx as usize;
-                accumulate_tap(
+                accumulate_tap_range(
                     &row[sx * cw..(sx + 1) * cw],
                     &prep.tap_weights[t * lane..(t + 1) * lane],
                     out_c,
+                    lo,
+                    hi,
                     mism,
                 );
             }
             _ => {
-                for (m, &p) in mism.iter_mut().zip(&prep.tap_pop[t * out_c..(t + 1) * out_c]) {
+                for (m, &p) in mism.iter_mut().zip(&prep.tap_pop[t * out_c + lo..t * out_c + hi]) {
                     *m += p as u64;
                 }
             }
@@ -764,24 +843,30 @@ fn bin_row_border(
     }
 }
 
-/// Write one pixel's match counts (`cnum - mismatches`) into a conv row.
-fn store_row_pixel(out_row: &mut [i32], mism: &[u64], cnum: i32, out_c: usize, x: usize) {
-    for (a, &m) in out_row[x * out_c..(x + 1) * out_c].iter_mut().zip(mism) {
+/// Write one pixel's match counts (`cnum - mismatches`) into a conv row
+/// of `plen` channels per pixel.
+fn store_row_pixel(out_row: &mut [i32], mism: &[u64], cnum: i32, plen: usize, x: usize) {
+    for (a, &m) in out_row[x * plen..(x + 1) * plen].iter_mut().zip(mism) {
         *a = cnum - m as i32;
     }
 }
 
 /// Row-window variant of [`fp_conv3x3_tap_major`] (first layer, eq. 7):
-/// true zero padding, tap-major MAC over the transposed ±1 weights.
+/// true zero padding, tap-major MAC over the transposed ±1 weights,
+/// restricted to output channels `[lo, hi)` (compact output stride).
+#[allow(clippy::too_many_arguments)]
 fn fp_conv_row(
     rows: [Option<&[i32]>; 3],
     hw: usize,
     in_c: usize,
     out_c: usize,
+    lo: usize,
+    hi: usize,
     weights_t: &[i32],
     pix: &mut [i32],
     out_row: &mut [i32],
 ) {
+    let plen = hi - lo;
     for x in 0..hw {
         pix.fill(0);
         for (kh, row) in rows.iter().enumerate() {
@@ -800,19 +885,22 @@ fn fp_conv_row(
                     if p == 0 {
                         continue; // zero taps contribute nothing
                     }
-                    let wrow = &weights_t[(t * in_c + ch) * out_c..(t * in_c + ch + 1) * out_c];
+                    let wrow =
+                        &weights_t[(t * in_c + ch) * out_c + lo..(t * in_c + ch) * out_c + hi];
                     for (a, &w) in pix.iter_mut().zip(wrow) {
                         *a += p * w;
                     }
                 }
             }
         }
-        out_row[x * out_c..(x + 1) * out_c].copy_from_slice(pix);
+        out_row[x * plen..(x + 1) * plen].copy_from_slice(pix);
     }
 }
 
-/// Fold one full-resolution conv row through the (optional) fused 2x2/2
-/// pool and the NormBinarize threshold, emitting a packed output row.
+/// Fold one full-resolution conv row (channels `[lo, hi)`, compact
+/// stride) through the (optional) fused 2x2/2 pool and the NormBinarize
+/// threshold, emitting a full-width packed output row with only bits
+/// `[lo, hi)` of each pixel set.
 ///
 /// Pooling layers emit one pooled row per *pair* of conv rows: the even
 /// row is stashed in `pending`, the odd row maxes against it — the same
@@ -826,11 +914,14 @@ fn finish_conv_row(
     y: usize,
     in_hw: usize,
     out_c: usize,
+    lo: usize,
+    hi: usize,
     thresholds: &[i32],
     emit: &mut dyn FnMut(StepperOut),
 ) {
+    let plen = hi - lo;
     if !pool {
-        emit(StepperOut::Row(threshold_row(conv_row, in_hw, out_c, thresholds)));
+        emit(StepperOut::Row(threshold_row_part(conv_row, in_hw, out_c, lo, hi, thresholds)));
         return;
     }
     if y % 2 == 0 {
@@ -840,12 +931,12 @@ fn finish_conv_row(
     }
     let out_hw = in_hw / 2;
     pooled.clear();
-    pooled.resize(out_hw * out_c, i32::MIN);
+    pooled.resize(out_hw * plen, i32::MIN);
     for px in 0..out_hw {
-        let dst = &mut pooled[px * out_c..(px + 1) * out_c];
-        for src in [&pending[2 * px * out_c..], &conv_row[2 * px * out_c..]] {
+        let dst = &mut pooled[px * plen..(px + 1) * plen];
+        for src in [&pending[2 * px * plen..], &conv_row[2 * px * plen..]] {
             for half in 0..2 {
-                for (a, &v) in dst.iter_mut().zip(&src[half * out_c..(half + 1) * out_c]) {
+                for (a, &v) in dst.iter_mut().zip(&src[half * plen..(half + 1) * plen]) {
                     if v > *a {
                         *a = v;
                     }
@@ -854,7 +945,7 @@ fn finish_conv_row(
         }
     }
     pending.clear();
-    emit(StepperOut::Row(threshold_row(&pooled[..], out_hw, out_c, thresholds)));
+    emit(StepperOut::Row(threshold_row_part(&pooled[..], out_hw, out_c, lo, hi, thresholds)));
 }
 
 /// Row variant of [`threshold_into`]: NormBinarize one row of `width`
@@ -867,6 +958,42 @@ fn threshold_row(acc_row: &[i32], width: usize, c: usize, thresholds: &[i32]) ->
     for p in 0..width {
         let words = &mut out[p * wpp..(p + 1) * wpp];
         threshold_pixel(&acc_row[p * c..(p + 1) * c], c, thresholds, words);
+    }
+    out
+}
+
+/// Partition variant of [`threshold_row`]: the accumulator row is compact
+/// (`hi - lo` channels per pixel) and the emitted packed row is full
+/// width with only bits `[lo, hi)` of each pixel set, so the rows of a
+/// disjoint partition cover OR-merge into exactly the unpartitioned
+/// [`threshold_row`] output (same `v >= t` compare per channel; the full
+/// partition takes the chunked fast path unchanged).
+fn threshold_row_part(
+    acc_row: &[i32],
+    width: usize,
+    c: usize,
+    lo: usize,
+    hi: usize,
+    thresholds: &[i32],
+) -> Vec<u64> {
+    if lo == 0 && hi == c {
+        return threshold_row(acc_row, width, c, thresholds);
+    }
+    let plen = hi - lo;
+    let wpp = words_for(c);
+    let mut out = vec![0u64; width * wpp];
+    for p in 0..width {
+        let words = &mut out[p * wpp..(p + 1) * wpp];
+        for (i, (&v, &t)) in acc_row[p * plen..(p + 1) * plen]
+            .iter()
+            .zip(&thresholds[lo..hi])
+            .enumerate()
+        {
+            let ch = lo + i;
+            if v >= t {
+                words[ch / 64] |= 1u64 << (ch % 64);
+            }
+        }
     }
     out
 }
@@ -1047,12 +1174,12 @@ fn step_layer(
         LayerWeights::BinFc { in_f, out_f, .. } => {
             flatten_act(&input, *in_f, fc_row)?;
             bits_out.reset(1, *out_f);
-            bin_fc_select(layer, &fc_row[..], |n| bits_out.set(0, 0, n, true));
+            bin_fc_select(layer, &fc_row[..], 0, *out_f, |n| bits_out.set(0, 0, n, true));
             Ok(StepOut::Act)
         }
-        LayerWeights::BinFcOut { in_f, .. } => {
+        LayerWeights::BinFcOut { in_f, out_f, .. } => {
             flatten_act(&input, *in_f, fc_row)?;
-            bin_fc_out_scores(layer, &fc_row[..], scores);
+            bin_fc_out_scores(layer, &fc_row[..], 0, *out_f, scores);
             Ok(StepOut::Scores)
         }
     }
@@ -1061,12 +1188,20 @@ fn step_layer(
 /// Shared hidden-FC forward (the single implementation behind both the
 /// whole-image [`step_layer`] and the row-streaming
 /// [`LayerStepper::flush`]): calls `on_set(n)` for every output feature
-/// whose packed-dot-product match count clears its threshold (eq. 8).
-fn bin_fc_select(layer: &LayerWeights, fc_row: &[u64], mut on_set: impl FnMut(usize)) {
-    let LayerWeights::BinFc { in_f, out_f, words_per_row, thresholds, .. } = layer else {
+/// in `[lo, hi)` whose packed-dot-product match count clears its
+/// threshold (eq. 8).  Features are computed independently, so a
+/// partition's selections equal the full range's for every `n` it owns.
+fn bin_fc_select(
+    layer: &LayerWeights,
+    fc_row: &[u64],
+    lo: usize,
+    hi: usize,
+    mut on_set: impl FnMut(usize),
+) {
+    let LayerWeights::BinFc { in_f, words_per_row, thresholds, .. } = layer else {
         unreachable!("bin_fc_select on a non-BinFc layer");
     };
-    for n in 0..*out_f {
+    for n in lo..hi {
         let w = layer_weight_row(layer, n, *words_per_row);
         let matches = *in_f as i32 - xor_popcount(fc_row, w) as i32;
         if matches >= thresholds[n] {
@@ -1076,13 +1211,20 @@ fn bin_fc_select(layer: &LayerWeights, fc_row: &[u64], mut on_set: impl FnMut(us
 }
 
 /// Shared classifier forward (affine Norm, paper fig. 3 output layer) —
-/// same single-implementation discipline as [`bin_fc_select`].
-fn bin_fc_out_scores(layer: &LayerWeights, fc_row: &[u64], scores: &mut Vec<f32>) {
-    let LayerWeights::BinFcOut { in_f, out_f, words_per_row, scale, bias, .. } = layer else {
+/// same single-implementation discipline as [`bin_fc_select`].  `scores`
+/// receives classes `[lo, hi)` in order; partitions concatenate.
+fn bin_fc_out_scores(
+    layer: &LayerWeights,
+    fc_row: &[u64],
+    lo: usize,
+    hi: usize,
+    scores: &mut Vec<f32>,
+) {
+    let LayerWeights::BinFcOut { in_f, words_per_row, scale, bias, .. } = layer else {
         unreachable!("bin_fc_out_scores on a non-classifier layer");
     };
     scores.clear();
-    for n in 0..*out_f {
+    for n in lo..hi {
         let w = layer_weight_row(layer, n, *words_per_row);
         let matches = *in_f as i32 - xor_popcount(fc_row, w) as i32;
         scores.push(matches as f32 * scale[n] + bias[n]);
@@ -1253,8 +1395,24 @@ fn bin_conv3x3_tap_major(
 /// slice, accumulating mismatches per filter lane.
 #[inline(always)]
 fn accumulate_tap(src: &[u64], tap_bank: &[u64], out_c: usize, mism: &mut [u64]) {
+    accumulate_tap_range(src, tap_bank, out_c, 0, out_c, mism);
+}
+
+/// [`accumulate_tap`] restricted to the filter lanes `[lo, hi)` of the
+/// tap bank (`mism` holds `hi - lo` lanes) — identical arithmetic per
+/// filter, so a partition's counts equal the full kernel's for every
+/// channel it owns.
+#[inline(always)]
+fn accumulate_tap_range(
+    src: &[u64],
+    tap_bank: &[u64],
+    out_c: usize,
+    lo: usize,
+    hi: usize,
+    mism: &mut [u64],
+) {
     for (w, &p) in src.iter().enumerate() {
-        xor_popcount_lanes(p, &tap_bank[w * out_c..(w + 1) * out_c], mism);
+        xor_popcount_lanes(p, &tap_bank[w * out_c + lo..w * out_c + hi], mism);
     }
 }
 

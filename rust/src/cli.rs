@@ -118,16 +118,22 @@ COMMANDS
            [--artifacts DIR]
       Run the FPGA streaming simulator (bit-exact numerics + cycle model).
   optimize [--config table2|small|tiny] [--uf-scale X] [--lut-headroom F]
+           [--json]
       Run the throughput optimizer (paper §4.3) and print the plan.
+      --json emits the full plan (per-layer UF/P/cycles, resources, fps)
+      as machine-readable JSON, diffable against the executed host
+      StagePlan recorded in BENCH_pipeline.json.
   compare-gpu [--batches 1,2,...]
       Fig. 7: FPGA vs Titan-X-model throughput & energy across batch sizes.
   infer [--config small] [--backend engine|pipeline|pjrt|fpga-sim]
-        [--count N] [--inflight N] [--artifacts DIR]
+        [--count N] [--inflight N] [--stage-threads N | --stage-plan auto]
+        [--artifacts DIR]
       Classify random workload images; print scores summary + timing.
   serve [--config small | --models name=src,name=src,... [--default NAME]]
         [--backend engine|pipeline|fpga-sim|gpu-sim] [--port P]
         [--max-batch N] [--max-wait-ms M] [--requests N] [--rate RPS]
         [--workers W] [--queue-depth D] [--lanes L] [--inflight N]
+        [--stage-threads N | --stage-plan auto]
       Start the serving control plane: every model gets its own sharded
       coordinator pool (W worker shards, bounded D-deep queues, L
       intra-batch lanes for the engine backend).  A model source is a
@@ -137,7 +143,11 @@ COMMANDS
       frames; protocol-v1 clients are served by the default model);
       otherwise drive the built-in open-loop workload and print
       per-model serving metrics.  `--backend pipeline` serves from the
-      row-streaming layer-pipeline runtime (N-image admission window).
+      row-streaming layer-pipeline runtime (N-image admission window);
+      `--stage-threads N` balances N total stage lanes across the layers
+      (paper §4.3 executed: the bottleneck stage gets more channel-
+      partitioned lanes), `--stage-plan auto` sizes the budget to the
+      machine's parallelism.
   deploy --addr HOST:PORT --name NAME --source SRC [--backend B]
          [--workers W] [--queue-depth D]
       Hot-swap NAME on a running server: the new pool is built while the
@@ -269,6 +279,10 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         ..OptimizeOptions::default()
     };
     let plan = optimize(&cfg, &opts)?;
+    if args.flag("json") {
+        println!("{}", plan.to_json().to_string());
+        return Ok(());
+    }
     println!("{}", tables::table3(&plan));
     println!("{}", tables::table4(&plan));
     Ok(())
@@ -301,7 +315,8 @@ fn cmd_infer(args: &Args) -> Result<()> {
         }
         "pipeline" => {
             let inflight = args.usize_or("inflight", DEFAULT_INFLIGHT)?;
-            let mut b = PipelineBackend::new(model, inflight)?;
+            let budget = stage_budget(args)?;
+            let mut b = PipelineBackend::with_stage_budget(model, inflight, budget)?;
             b.infer_owned(&images)?.scores
         }
         "fpga-sim" => {
@@ -345,16 +360,38 @@ fn cmd_infer(args: &Args) -> Result<()> {
 /// beyond those already streaming through the stages).
 pub const DEFAULT_INFLIGHT: usize = 8;
 
-/// Resolve `--backend`/`--lanes`/`--inflight` into a [`BackendSpec`]; an
-/// explicit `kind:N` parameter wins over the separate flags.
-fn backend_spec(kind: &str, lanes: usize, inflight: usize) -> Result<BackendSpec> {
+/// Resolve `--stage-threads N` / `--stage-plan auto` into a total
+/// stage-lane budget for the pipeline backend (0 = one lane per stage,
+/// i.e. the unbalanced pipeline).  `auto` sizes the budget to the
+/// machine's available parallelism, letting the calibrated water-fill
+/// decide which stages deserve the lanes.
+fn stage_budget(args: &Args) -> Result<usize> {
+    if let Some(v) = args.value_of("stage-threads")? {
+        return v.parse::<usize>().with_context(|| format!("--stage-threads {v}"));
+    }
+    match args.value_of("stage-plan")? {
+        None => Ok(0),
+        Some("auto") => Ok(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8)),
+        Some(other) => bail!("--stage-plan must be `auto`, got {other:?}"),
+    }
+}
+
+/// Resolve `--backend`/`--lanes`/`--inflight`/`--stage-threads` into a
+/// [`BackendSpec`]; an explicit `kind:N[:T]` parameter wins over the
+/// separate flags.
+fn backend_spec(
+    kind: &str,
+    lanes: usize,
+    inflight: usize,
+    stage_threads: usize,
+) -> Result<BackendSpec> {
     let parsed = BackendSpec::parse(kind)?;
     if kind.contains(':') {
         return Ok(parsed);
     }
     Ok(match parsed {
         BackendSpec::Engine { .. } => BackendSpec::Engine { lanes },
-        BackendSpec::Pipeline { .. } => BackendSpec::Pipeline { inflight },
+        BackendSpec::Pipeline { .. } => BackendSpec::Pipeline { inflight, stage_threads },
         other => other,
     })
 }
@@ -375,11 +412,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let queue_depth = args.usize_or("queue-depth", 256)?.max(1);
     let lanes = args.usize_or("lanes", 1)?.max(1);
     let inflight = args.usize_or("inflight", DEFAULT_INFLIGHT)?.max(1);
+    let stage_threads = stage_budget(args)?;
     let policy = BatchPolicy {
         max_batch: args.usize_or("max-batch", 16)?,
         max_wait: Duration::from_millis(args.usize_or("max-wait-ms", 2)? as u64),
     };
-    let backend = backend_spec(&backend_name, lanes, inflight)?;
+    let backend = backend_spec(&backend_name, lanes, inflight, stage_threads)?;
 
     // model set: every entry gets its own pool behind the shared registry
     let registry = Arc::new(ModelRegistry::new());

@@ -56,6 +56,16 @@ pub trait Backend {
         let views: Vec<&[i32]> = images.iter().map(|v| v.as_slice()).collect();
         self.infer_batch(&views)
     }
+
+    /// Per-stage busy/stall observability for pipeline-backed replicas
+    /// (cumulative since construction); empty for backends that have no
+    /// stages.  The shard worker folds this into its [`Metrics`] snapshot
+    /// so `STATS`/bench JSON show *which* stage bottlenecks.
+    ///
+    /// [`Metrics`]: crate::coordinator::Metrics
+    fn stage_stats(&self) -> Vec<crate::pipeline::stage::StageSnapshot> {
+        Vec::new()
+    }
 }
 
 /// Per-worker backend factory: the sharded coordinator calls it once on

@@ -5,6 +5,7 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::pipeline::stage::StageSnapshot;
 use crate::util::json::Json;
 
 /// Log-scale latency histogram from 1 µs to ~17 s.
@@ -99,6 +100,11 @@ pub struct Metrics {
     /// Modeled device-busy time (simulator backends).
     pub modeled_busy: Duration,
     pub wall: Duration,
+    /// Per-stage busy/stall counters for pipeline-backed models (one
+    /// entry per layer stage; empty for stage-less backends).  Shards
+    /// replace their own snapshot per batch; [`Metrics::merge`] sums
+    /// stage-wise across replicas.
+    pub stages: Vec<StageSnapshot>,
 }
 
 impl Metrics {
@@ -146,6 +152,18 @@ impl Metrics {
         self.sum_batch += other.sum_batch;
         self.errors += other.errors;
         self.modeled_busy += other.modeled_busy;
+        if !other.stages.is_empty() {
+            if self.stages.is_empty() {
+                self.stages = other.stages.clone();
+            } else if self.stages.len() == other.stages.len() {
+                // same pipeline shape: aggregate stage-wise across shards
+                for (a, b) in self.stages.iter_mut().zip(&other.stages) {
+                    a.absorb(b);
+                }
+            }
+            // differing shapes (mixed backends in one fold): keep ours —
+            // per-stage sums across different pipelines are meaningless
+        }
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -197,6 +215,24 @@ impl Metrics {
         m.insert("latency_p99_us".into(), us(self.p99()));
         m.insert("latency_max_us".into(), us(self.latency.max()));
         m.insert("modeled_busy_us".into(), us(self.modeled_busy));
+        if !self.stages.is_empty() {
+            let stages: Vec<Json> = self
+                .stages
+                .iter()
+                .map(|s| {
+                    let mut o: BTreeMap<String, Json> = BTreeMap::new();
+                    o.insert("layer".into(), Json::Num(s.layer as f64));
+                    o.insert("lanes".into(), Json::Num(s.lanes as f64));
+                    o.insert("busy_us".into(), us(s.busy));
+                    o.insert("stall_in_us".into(), us(s.stall_in));
+                    o.insert("stall_out_us".into(), us(s.stall_out));
+                    o.insert("rows_in".into(), Json::Num(s.rows_in as f64));
+                    o.insert("images".into(), Json::Num(s.images as f64));
+                    Json::Obj(o)
+                })
+                .collect();
+            m.insert("stages".into(), Json::Arr(stages));
+        }
         Json::Obj(m)
     }
 
@@ -273,6 +309,36 @@ mod tests {
         let p50 = j.get("latency_p50_us").unwrap().as_f64().unwrap();
         let p99 = j.get("latency_p99_us").unwrap().as_f64().unwrap();
         assert!(p50 > 0.0 && p99 >= p50, "p50 {p50} p99 {p99}");
+    }
+
+    #[test]
+    fn stage_snapshots_merge_and_serialize() {
+        let stage = |layer: usize, busy_ms: u64| StageSnapshot {
+            layer,
+            lanes: 2,
+            busy: Duration::from_millis(busy_ms),
+            stall_in: Duration::from_millis(1),
+            stall_out: Duration::ZERO,
+            rows_in: 8,
+            images: 1,
+        };
+        let mut a = Metrics::new();
+        a.stages = vec![stage(0, 3), stage(1, 9)];
+        let mut b = Metrics::new();
+        b.stages = vec![stage(0, 1), stage(1, 2)];
+        let mut total = Metrics::new();
+        total.merge(&a);
+        total.merge(&b);
+        assert_eq!(total.stages.len(), 2);
+        assert_eq!(total.stages[1].busy, Duration::from_millis(11));
+        assert_eq!(total.stages[0].rows_in, 16);
+        let j = total.to_json();
+        let stages = j.get("stages").unwrap().as_arr().unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[1].get("lanes").unwrap().as_usize().unwrap(), 2);
+        assert!(stages[1].get("busy_us").unwrap().as_f64().unwrap() > 0.0);
+        // stage-less metrics omit the key entirely
+        assert!(Metrics::new().to_json().get("stages").is_err());
     }
 
     #[test]

@@ -415,9 +415,17 @@ fn shard_loop(
                 ));
             }
         }
+        // pipeline-backed replicas expose cumulative per-stage busy/stall
+        // counters; snapshot them into this shard's metrics (replace, not
+        // add — the counters are running totals) so STATS shows which
+        // stage bottlenecks.  Empty for stage-less backends.
+        let stage_stats = backend.stage_stats();
         match result {
             Ok(out) => {
                 let mut m = metrics.lock().unwrap();
+                if !stage_stats.is_empty() {
+                    m.stages = stage_stats;
+                }
                 m.record_batch(batch_len, service, out.modeled_device_time);
                 for (req, scores) in batch.into_iter().zip(out.scores) {
                     let queue_time = formed.duration_since(req.enqueued);
@@ -437,7 +445,13 @@ fn shard_loop(
                 // No silent drops: every request in the failed batch gets
                 // a typed error reply, and the failure is counted.
                 let message = format!("{e:#}");
-                metrics.lock().unwrap().record_batch_error(batch_len, service);
+                {
+                    let mut m = metrics.lock().unwrap();
+                    if !stage_stats.is_empty() {
+                        m.stages = stage_stats;
+                    }
+                    m.record_batch_error(batch_len, service);
+                }
                 for req in batch {
                     let queue_time = formed.duration_since(req.enqueued);
                     let _ = req.reply.send(InferReply {

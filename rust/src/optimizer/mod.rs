@@ -13,12 +13,15 @@
 //! power-of-two `P` meeting it per layer; feasibility = the Table-4
 //! resource model fits the device.
 
+use std::collections::BTreeMap;
+
 use anyhow::{bail, Result};
 
 use crate::fpga::resource::{self, Device, ResourceReport};
 use crate::fpga::timing::{cycle_conv, cycle_est, cycle_real, LayerParams, PipelineModel};
 use crate::fpga::{layer_geometry, LayerGeom};
 use crate::model::NetConfig;
+use crate::util::json::Json;
 
 /// One planned layer.
 #[derive(Debug, Clone)]
@@ -38,6 +41,49 @@ pub struct Plan {
     pub bottleneck_est: u64,
     pub bottleneck_real: u64,
     pub fps: f64,
+}
+
+impl Plan {
+    /// Machine-readable §4.3 plan (`repro optimize --json`): per-layer
+    /// `UF`/`P`/cycles, the resource totals, and the eq. 12 fps — stable
+    /// keys, so plans can be diffed against each other and against the
+    /// executed host [`StagePlan`] (the bench records both).
+    ///
+    /// [`StagePlan`]: crate::pipeline::StagePlan
+    pub fn to_json(&self) -> Json {
+        let num = |v: u64| Json::Num(v as f64);
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut o: BTreeMap<String, Json> = BTreeMap::new();
+                o.insert("name".into(), Json::Str(l.geom.name.clone()));
+                o.insert("is_conv".into(), Json::Bool(l.geom.is_conv));
+                o.insert("outputs".into(), num(l.geom.outputs()));
+                o.insert("cnum".into(), num(l.geom.cnum as u64));
+                o.insert("uf".into(), num(l.params.uf as u64));
+                o.insert("p".into(), num(l.params.p as u64));
+                o.insert("cycle_conv".into(), num(l.cycle_conv));
+                o.insert("cycle_est".into(), num(l.cycle_est));
+                o.insert("cycle_real".into(), num(l.cycle_real));
+                Json::Obj(o)
+            })
+            .collect();
+        let r = &self.resources.total;
+        let mut res: BTreeMap<String, Json> = BTreeMap::new();
+        res.insert("luts".into(), num(r.luts));
+        res.insert("registers".into(), num(r.registers));
+        res.insert("brams".into(), num(r.brams));
+        res.insert("dsps".into(), num(r.dsps));
+        res.insert("fits".into(), Json::Bool(self.resources.fits()));
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("layers".into(), Json::Arr(layers));
+        o.insert("resources".into(), Json::Obj(res));
+        o.insert("bottleneck_est".into(), num(self.bottleneck_est));
+        o.insert("bottleneck_real".into(), num(self.bottleneck_real));
+        o.insert("fps".into(), Json::Num(self.fps));
+        Json::Obj(o)
+    }
 }
 
 /// Search options.
@@ -249,6 +295,28 @@ mod tests {
         let sum_p =
             |p: &Plan| p.layers[..6].iter().map(|l| l.params.p as u64).sum::<u64>();
         assert!(sum_p(&half) > sum_p(&base));
+    }
+
+    #[test]
+    fn plan_json_round_trips_with_table3_fields() {
+        let plan = optimize(&NetConfig::table2(), &OptimizeOptions::default()).unwrap();
+        let parsed = Json::parse(&plan.to_json().to_string()).unwrap();
+        let layers = parsed.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), plan.layers.len());
+        assert_eq!(
+            layers[1].get("p").unwrap().as_usize().unwrap(),
+            plan.layers[1].params.p
+        );
+        assert_eq!(
+            layers[1].get("cycle_real").unwrap().as_usize().unwrap(),
+            plan.layers[1].cycle_real as usize
+        );
+        assert_eq!(
+            parsed.get("bottleneck_est").unwrap().as_usize().unwrap() as u64,
+            plan.bottleneck_est
+        );
+        assert!(parsed.get("fps").unwrap().as_f64().unwrap() > 0.0);
+        assert!(parsed.get("resources").unwrap().get("luts").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

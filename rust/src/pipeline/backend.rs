@@ -9,16 +9,21 @@
 //! [`PipelineRuntime::submit`] sustain the same throughput (the paper's
 //! batch-insensitivity claim, measured in `benches/fig7_batch_sweep.rs`).
 //!
-//! Each backend replica owns its own runtime (one thread per layer plus a
-//! feeder), so a sharded coordinator with `W` workers runs `W *
-//! (layers + 1)` pipeline threads — size the pool accordingly.
+//! Each backend replica owns its own runtime — with a *stage budget*
+//! ([`PipelineBackend::with_stage_budget`]) the per-stage lane counts are
+//! balanced by a host calibration pass ([`StagePlan::balanced`]), so the
+//! bottleneck layer gets more channel-partitioned lanes exactly the way
+//! the paper gives it more `P`.  A replica runs
+//! `total lanes + 1 (feeder)` threads; size a sharded pool accordingly.
 
 use anyhow::Result;
 
 use crate::bcnn::Engine;
 use crate::coordinator::backend::{Backend, BatchResult};
 use crate::model::BcnnModel;
+use crate::pipeline::plan::StagePlan;
 use crate::pipeline::runtime::PipelineRuntime;
+use crate::pipeline::stage::StageSnapshot;
 
 /// Row-streaming layer-pipeline inference backend.
 pub struct PipelineBackend {
@@ -26,11 +31,36 @@ pub struct PipelineBackend {
 }
 
 impl PipelineBackend {
-    /// Validate the model and spawn the stage pipeline.  `inflight` is
-    /// the runtime's admission window (see [`PipelineRuntime::new`]).
+    /// Validate the model and spawn the unbalanced (one lane per stage)
+    /// pipeline.  `inflight` is the runtime's admission window (see
+    /// [`PipelineRuntime::new`]).
     pub fn new(model: BcnnModel, inflight: usize) -> Result<Self> {
+        Self::with_stage_budget(model, inflight, 0)
+    }
+
+    /// Like [`PipelineBackend::new`], but with `stage_budget > 0` the
+    /// per-stage lane counts are throughput-balanced under that total
+    /// lane budget (calibration + water-filling; `0` keeps one lane per
+    /// stage).
+    pub fn with_stage_budget(
+        model: BcnnModel,
+        inflight: usize,
+        stage_budget: usize,
+    ) -> Result<Self> {
         let engine = Engine::new(model)?;
-        Ok(Self { runtime: PipelineRuntime::new(engine, inflight)? })
+        let runtime = if stage_budget == 0 {
+            PipelineRuntime::new(engine, inflight)?
+        } else {
+            let plan = StagePlan::balanced(&engine, stage_budget)?;
+            PipelineRuntime::with_plan(engine, inflight, plan)?
+        };
+        Ok(Self { runtime })
+    }
+
+    /// Spawn with an explicit, already-chosen [`StagePlan`].
+    pub fn with_plan(model: BcnnModel, inflight: usize, plan: StagePlan) -> Result<Self> {
+        let engine = Engine::new(model)?;
+        Ok(Self { runtime: PipelineRuntime::with_plan(engine, inflight, plan)? })
     }
 
     pub fn runtime(&self) -> &PipelineRuntime {
@@ -57,5 +87,9 @@ impl Backend for PipelineBackend {
             .map(|t| t.wait())
             .collect::<Result<Vec<_>>>()?;
         Ok(BatchResult { scores, modeled_device_time: None })
+    }
+
+    fn stage_stats(&self) -> Vec<StageSnapshot> {
+        self.runtime.stage_stats()
     }
 }

@@ -17,17 +17,28 @@
 //! * [`backend`] — [`PipelineBackend`]: the runtime behind the
 //!   coordinator's `Backend` trait (`--backend pipeline` in the CLI).
 //!
+//! * [`plan`] — [`StagePlan`]: per-stage lane counts, balanced the way
+//!   the paper balances per-layer `P` (§4.3, Table 3) — by calibration
+//!   ([`StagePlan::balanced`]) or from the optimizer's plan
+//!   ([`StagePlan::from_plan`]); stages become channel-partitioned lane
+//!   groups so the bottleneck layer's service time drops toward the
+//!   balanced optimum.
+//!
 //! The FINN-style dataflow scheduling (one compute engine per layer,
 //! rate-matched by buffer depth) is what makes serving throughput
 //! batch-insensitive: a stream of individual requests keeps every stage
 //! busy just as well as a large batch does.  `benches/fig7_batch_sweep.rs`
-//! measures exactly that signature.
+//! measures exactly that signature — and, since the stage-balance PR, the
+//! balanced-vs-unbalanced throughput delta on a deliberately skewed
+//! model.
 
 pub mod backend;
 pub mod fifo;
+pub mod plan;
 pub mod runtime;
 pub mod stage;
 
 pub use backend::PipelineBackend;
+pub use plan::StagePlan;
 pub use runtime::{PipelineRuntime, ScoreTicket};
-pub use stage::PipeRow;
+pub use stage::{PipeRow, StageError, StageSnapshot};

@@ -1,0 +1,281 @@
+//! Stage-parallelism plans: how many worker lanes each pipeline stage
+//! runs (paper §4.3, executed).
+//!
+//! The paper reaches eq. 12's `FPS = freq / max_L(C_L)` only by giving
+//! each layer a *different* spatial parallelism `P` until every stage's
+//! cycle count is equal (Table 3) — FINN balances BNN dataflow pipelines
+//! the same way, by per-layer compute folding.  A [`StagePlan`] is the
+//! host-side counterpart: `lanes_per_layer[l]` channel-partitioned worker
+//! lanes for stage `l` (see the partition notes on
+//! [`crate::bcnn::engine::LayerStepper`]), chosen so per-stage service
+//! time is as equal as the lane quantization allows.
+//!
+//! Two ways to get a balanced plan:
+//!
+//! * [`StagePlan::balanced`] — a quick host calibration pass
+//!   ([`calibrate_image_costs`]) measures each stage's real per-image row
+//!   cost on this machine, then water-fills lanes onto the measured
+//!   bottlenecks.  This is what `--stage-plan auto` / `--stage-threads N`
+//!   execute.
+//! * [`StagePlan::from_plan`] — maps a §4.3 optimizer [`Plan`]'s
+//!   per-layer work profile onto lanes.  The profile used is eq. 9's
+//!   `cycle_conv` (the parallelism-independent work a host lane must
+//!   grind through); the plan's `cycle_real` already has the device's
+//!   `UF·P` folded in, so it is what a balanced pipeline should
+//!   *equalize*, not the imbalance to correct — `repro optimize --json`
+//!   emits both so the modeled balance can be diffed against the
+//!   executed one.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::bcnn::engine::{RowRef, StepperOut};
+use crate::bcnn::Engine;
+use crate::model::LayerWeights;
+use crate::optimizer::Plan;
+use crate::util::SplitMix64;
+
+/// Per-stage lane counts for a [`crate::pipeline::PipelineRuntime`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StagePlan {
+    /// Worker lanes per layer stage, in model order.  Values are clamped
+    /// to `[1, out_c]` when the runtime applies the plan (a layer cannot
+    /// split finer than its output channels).
+    pub lanes_per_layer: Vec<usize>,
+}
+
+impl StagePlan {
+    /// The same lane count for every stage (`uniform(n, 1)` is the
+    /// unbalanced one-thread-per-layer pipeline of PR 3).
+    pub fn uniform(layers: usize, lanes: usize) -> Self {
+        Self { lanes_per_layer: vec![lanes.max(1); layers] }
+    }
+
+    /// Total lanes (= stage threads) this plan asks for — the raw sum of
+    /// `lanes_per_layer`.  The runtime clamps each stage to `[1, out_c]`
+    /// when applying a plan, so size thread pools from the *executed*
+    /// plan ([`crate::pipeline::PipelineRuntime::plan`]), which reports
+    /// the clamped counts.
+    pub fn total_lanes(&self) -> usize {
+        self.lanes_per_layer.iter().sum()
+    }
+
+    /// Water-fill `budget` total lanes onto stages proportionally to
+    /// their measured (or modeled) per-image `costs`: starting from one
+    /// lane everywhere, repeatedly grant one lane to the stage with the
+    /// largest per-lane cost `costs[i] / lanes[i]` until the budget is
+    /// spent or every stage is at its cap — the discrete version of the
+    /// paper's "choose P until all the layers have equal execution time".
+    /// `caps[i]` bounds stage `i` (a layer cannot split finer than its
+    /// output channels).  Deterministic: ties go to the earliest stage.
+    pub fn from_costs(costs: &[f64], caps: &[usize], budget: usize) -> Self {
+        let n = costs.len();
+        let mut lanes = vec![1usize; n];
+        if n == 0 {
+            return Self { lanes_per_layer: lanes };
+        }
+        let mut spare = budget.saturating_sub(n);
+        while spare > 0 {
+            let mut best: Option<(usize, f64)> = None;
+            for i in 0..n {
+                if lanes[i] >= caps.get(i).copied().unwrap_or(usize::MAX).max(1) {
+                    continue;
+                }
+                let per_lane = costs[i] / lanes[i] as f64;
+                if best.map(|(_, c)| per_lane > c).unwrap_or(true) {
+                    best = Some((i, per_lane));
+                }
+            }
+            let Some((i, _)) = best else {
+                break; // every stage is at its cap
+            };
+            lanes[i] += 1;
+            spare -= 1;
+        }
+        Self { lanes_per_layer: lanes }
+    }
+
+    /// Measure each stage's per-image cost on this host
+    /// ([`calibrate_image_costs`]) and water-fill `budget` total lanes
+    /// onto the bottlenecks.  `budget <= layers` degenerates to the
+    /// unbalanced one-lane-per-stage plan.
+    pub fn balanced(engine: &Engine, budget: usize) -> Result<Self> {
+        let costs = calibrate_image_costs(engine)?;
+        let caps: Vec<usize> = engine.layer_shapes().iter().map(|s| s.out_c.max(1)).collect();
+        Ok(Self::from_costs(&costs, &caps, budget))
+    }
+
+    /// Map a §4.3 optimizer [`Plan`] onto host lanes: water-fill `budget`
+    /// lanes proportionally to each layer's eq. 9 work (`cycle_conv`) —
+    /// see the module docs for why `cycle_real` is the balance *target*
+    /// rather than the cost profile.  The plan must describe the same
+    /// network the runtime will execute (same layer count and order).
+    pub fn from_plan(plan: &Plan, budget: usize) -> Self {
+        let costs: Vec<f64> = plan.layers.iter().map(|l| l.cycle_conv as f64).collect();
+        let caps: Vec<usize> = plan.layers.iter().map(|l| l.geom.dep.max(1)).collect();
+        Self::from_costs(&costs, &caps, budget)
+    }
+}
+
+/// How long the calibration pass spends per stage, at most.  The costs
+/// only need to be *relatively* right for water-filling, so a couple of
+/// milliseconds per stage is plenty.
+const CALIBRATE_BUDGET_PER_STAGE: Duration = Duration::from_millis(2);
+/// Image-count bounds for one stage's calibration loop.
+const CALIBRATE_MIN_IMAGES: u32 = 3;
+const CALIBRATE_MAX_IMAGES: u32 = 256;
+
+/// Measure each stage's single-lane cost of streaming one whole image
+/// through its [`crate::bcnn::engine::LayerStepper`] (seconds per image,
+/// in model order).  Inputs are deterministic pseudo-random rows — zeros
+/// would let the first layer's zero-skip path cheat the measurement.
+pub fn calibrate_image_costs(engine: &Engine) -> Result<Vec<f64>> {
+    let shapes = engine.layer_shapes();
+    let mut costs = Vec::with_capacity(shapes.len());
+    for (i, shape) in shapes.iter().enumerate() {
+        let mut stepper = engine.layer_stepper(i)?;
+        let mut rng = SplitMix64::new(0xCA11_B8A7 ^ i as u64);
+        // one synthetic input row, reused for every push of the image
+        let int_row: Vec<i32>;
+        let bits_row: Vec<u64>;
+        let row: RowRef<'_> =
+            if matches!(engine.model().layers[i], LayerWeights::FpConv { .. }) {
+                int_row = (0..shape.in_hw * shape.in_c)
+                    .map(|_| rng.range_i64(-31, 31) as i32)
+                    .collect();
+                RowRef::Int(&int_row)
+            } else {
+                bits_row = (0..shape.in_row_words()).map(|_| rng.next_u64()).collect();
+                RowRef::Bits(&bits_row)
+            };
+        let mut sink = |out: StepperOut| {
+            std::hint::black_box(&out);
+        };
+        // warm-up image (first-touch allocations, branch training)
+        for _ in 0..shape.in_hw {
+            stepper.push_row(row, &mut sink)?;
+        }
+        stepper.flush(&mut sink)?;
+        let start = Instant::now();
+        let mut images = 0u32;
+        loop {
+            for _ in 0..shape.in_hw {
+                stepper.push_row(row, &mut sink)?;
+            }
+            stepper.flush(&mut sink)?;
+            images += 1;
+            if (start.elapsed() >= CALIBRATE_BUDGET_PER_STAGE && images >= CALIBRATE_MIN_IMAGES)
+                || images >= CALIBRATE_MAX_IMAGES
+            {
+                break;
+            }
+        }
+        costs.push(start.elapsed().as_secs_f64() / images as f64);
+    }
+    Ok(costs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BcnnModel, NetConfig};
+
+    #[test]
+    fn water_filling_feeds_the_bottleneck_first() {
+        // stage 1 carries 8x the work of the others: every spare lane
+        // lands there until per-lane costs level out
+        let costs = [1.0, 8.0, 1.0];
+        let caps = [64, 64, 64];
+        let plan = StagePlan::from_costs(&costs, &caps, 7);
+        assert_eq!(plan.lanes_per_layer, vec![1, 5, 1]);
+        assert_eq!(plan.total_lanes(), 7);
+        // budget at (or below) the stage count: unbalanced fallback
+        let plan = StagePlan::from_costs(&costs, &caps, 3);
+        assert_eq!(plan.lanes_per_layer, vec![1, 1, 1]);
+        let plan = StagePlan::from_costs(&costs, &caps, 0);
+        assert_eq!(plan.lanes_per_layer, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn caps_bound_the_fill_and_spill_to_the_next_stage() {
+        let costs = [1.0, 100.0, 2.0];
+        let caps = [4, 2, 4];
+        let plan = StagePlan::from_costs(&costs, &caps, 8);
+        // the bottleneck is capped at 2 lanes; the remaining budget goes
+        // to the next-most-expensive stages until their caps
+        assert_eq!(plan.lanes_per_layer[1], 2);
+        assert!(plan.total_lanes() <= 8);
+        // all-capped: the fill stops early instead of looping forever
+        let plan = StagePlan::from_costs(&costs, &[1, 1, 1], 100);
+        assert_eq!(plan.lanes_per_layer, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn from_plan_maps_the_optimizer_profile_onto_lanes() {
+        // the optimizer plan and the engine describe the same network
+        // layer-for-layer (conv rows then FC rows, classifier last), so
+        // from_plan's lane vector drops straight into the runtime
+        let cfg = NetConfig::tiny();
+        let engine = Engine::new(BcnnModel::synthetic(&cfg, 3)).unwrap();
+        let plan = crate::optimizer::optimize(&cfg, &crate::optimizer::OptimizeOptions::default())
+            .unwrap();
+        assert_eq!(plan.layers.len(), engine.layer_shapes().len());
+        let stage_plan = StagePlan::from_plan(&plan, 6);
+        assert_eq!(stage_plan.lanes_per_layer.len(), plan.layers.len());
+        // eq. 9 work profile: conv2 (32 -> 32 at 8x8 pre-pool) dominates
+        // tiny, so the spare lanes land there
+        let bottleneck = plan
+            .layers
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, l)| l.cycle_conv)
+            .unwrap()
+            .0;
+        assert!(
+            stage_plan.lanes_per_layer[bottleneck]
+                > stage_plan.lanes_per_layer[(bottleneck + 1) % plan.layers.len()],
+            "plan {stage_plan:?}"
+        );
+        // caps: no layer gets more lanes than it has output values deep
+        for (lanes, l) in stage_plan.lanes_per_layer.iter().zip(&plan.layers) {
+            assert!(*lanes >= 1 && *lanes <= l.geom.dep.max(1));
+        }
+    }
+
+    #[test]
+    fn calibration_finds_the_skewed_layer() {
+        // conv2 (8 -> 256 channels) dwarfs the other stages; the measured
+        // costs must rank it the bottleneck and `balanced` must give it
+        // the spare lanes
+        let cfg = NetConfig {
+            name: "skew".into(),
+            conv: vec![
+                crate::model::ConvSpec { out_channels: 8, pool: false },
+                crate::model::ConvSpec { out_channels: 256, pool: false },
+            ],
+            fc: vec![],
+            classes: 10,
+            input_hw: 8,
+            input_channels: 3,
+            input_bits: 6,
+        };
+        let engine = Engine::new(BcnnModel::synthetic(&cfg, 7)).unwrap();
+        let costs = calibrate_image_costs(&engine).unwrap();
+        assert_eq!(costs.len(), 3);
+        let bottleneck = costs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(bottleneck, 1, "costs {costs:?}");
+        let plan = StagePlan::balanced(&engine, 6).unwrap();
+        assert_eq!(plan.lanes_per_layer.len(), 3);
+        assert!(
+            plan.lanes_per_layer[1] > plan.lanes_per_layer[0]
+                && plan.lanes_per_layer[1] > plan.lanes_per_layer[2],
+            "plan {plan:?} (costs {costs:?})"
+        );
+    }
+}

@@ -1,4 +1,5 @@
-//! The layer-pipeline runtime: every layer a concurrently-active stage.
+//! The layer-pipeline runtime: every layer a concurrently-active stage,
+//! each stage a plan-sized lane group.
 //!
 //! ```text
 //! submit(image) ─► admission queue (inflight) ─► feeder thread
@@ -6,8 +7,8 @@
 //!                                 │ rows stream row-by-row
 //!                                 ▼
 //!                              FIFO(2·hw₁) ─► stage 1 ─► … ─► classifier
-//!                                                              stage
-//!                                                                │ scores
+//!                               lanes: P₁ channel partitions   stage
+//!                               (StagePlan, §4.3 executed)       │ scores
 //!                                                                ▼
 //!                                              pending-reply queue ─► ticket
 //! ```
@@ -18,15 +19,19 @@
 //! ahead of its consumer, and *multiple images are in flight across the
 //! stages simultaneously* — which is why throughput is set by the slowest
 //! stage (eq. 12's `max(C_L)`), not by the sum of layers, and why it does
-//! not depend on how requests are grouped into batches.
+//! not depend on how requests are grouped into batches.  A [`StagePlan`]
+//! then attacks `max(C_L)` itself: the bottleneck stage gets more
+//! channel-partitioned lanes (the paper's per-layer `P`), so the slowest
+//! stage's service time drops toward the balanced optimum.
 //!
 //! Shutdown has no poison tokens: dropping the runtime closes the
 //! admission queue; the feeder finishes the images already admitted and
 //! exits; end-of-stream then cascades stage by stage (each stage drains
-//! its FIFO before observing closure), the classifier answers every
-//! completed image, and the runtime joins all threads.  Tickets for
-//! images that can no longer complete fail with a disconnect error —
-//! never a hang (see `pipeline_integration.rs::drop_with_images_in_flight`).
+//! its FIFO before observing closure; lane groups release their helper
+//! lanes the same way), the classifier answers every completed image, and
+//! the runtime joins all threads.  Tickets for images that can no longer
+//! complete fail with a typed [`StageError`] — never a hang (see
+//! `pipeline_integration.rs::drop_with_images_in_flight`).
 
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
@@ -37,9 +42,10 @@ use crate::bcnn::engine::LayerShape;
 use crate::bcnn::Engine;
 use crate::fpga::channel::fifo_rows;
 use crate::pipeline::fifo::{bounded, RowSender};
+use crate::pipeline::plan::StagePlan;
 use crate::pipeline::stage::{
-    fail_pending, new_pending, register_reply, run_stage, PendingReplies, PipeRow, ScoreResult,
-    StageOutput,
+    fail_pending, new_pending, register_reply, run_stage_group, PendingReplies, PipeRow,
+    ScoreResult, StageCounters, StageError, StageOutput, StageSnapshot,
 };
 
 /// An admitted image on its way to the feeder.
@@ -55,10 +61,17 @@ impl ScoreTicket {
     /// Block until the image's scores arrive (or the pipeline fails /
     /// shuts down — an error, never a hang).
     pub fn wait(self) -> Result<Vec<f32>> {
+        self.wait_typed().map_err(anyhow::Error::new)
+    }
+
+    /// [`ScoreTicket::wait`] with the typed failure reason, so callers
+    /// can distinguish shutdown-in-flight (resubmit elsewhere) from a
+    /// stage failure (the image stream itself was rejected) without
+    /// string-matching.
+    pub fn wait_typed(self) -> std::result::Result<Vec<f32>, StageError> {
         match self.rx.recv() {
-            Ok(Ok(scores)) => Ok(scores),
-            Ok(Err(message)) => Err(anyhow!("{message}")),
-            Err(_) => Err(anyhow!("pipeline shut down with the image in flight")),
+            Ok(result) => result,
+            Err(_) => Err(StageError::Shutdown),
         }
     }
 
@@ -66,10 +79,10 @@ impl ScoreTicket {
     pub fn try_wait(&self) -> Option<Result<Vec<f32>>> {
         match self.rx.try_recv() {
             Ok(Ok(scores)) => Some(Ok(scores)),
-            Ok(Err(message)) => Some(Err(anyhow!("{message}"))),
+            Ok(Err(error)) => Some(Err(anyhow::Error::new(error))),
             Err(mpsc::TryRecvError::Empty) => None,
             Err(mpsc::TryRecvError::Disconnected) => {
-                Some(Err(anyhow!("pipeline shut down with the image in flight")))
+                Some(Err(anyhow::Error::new(StageError::Shutdown)))
             }
         }
     }
@@ -83,16 +96,29 @@ pub struct PipelineRuntime {
     pending: PendingReplies,
     shapes: Vec<LayerShape>,
     fifo_caps: Vec<usize>,
+    /// The plan actually applied (lane counts clamped to `[1, out_c]`).
+    plan: StagePlan,
+    counters: Vec<Arc<StageCounters>>,
     inflight: usize,
     input_len: usize,
 }
 
 impl PipelineRuntime {
-    /// Spawn one stage thread per layer plus the feeder.  `inflight` is
-    /// the admission-window depth: how many whole images may be queued
-    /// for feeding beyond those already streaming through the stages
-    /// (clamped to >= 1).
+    /// Spawn the unbalanced pipeline: one lane per layer stage plus the
+    /// feeder.  `inflight` is the admission-window depth: how many whole
+    /// images may be queued for feeding beyond those already streaming
+    /// through the stages (clamped to >= 1).
     pub fn new(engine: Engine, inflight: usize) -> Result<Self> {
+        let layers = engine.layer_shapes().len();
+        Self::with_plan(engine, inflight, StagePlan::uniform(layers, 1))
+    }
+
+    /// Spawn a plan-shaped pipeline: stage `l` runs
+    /// `plan.lanes_per_layer[l]` channel-partitioned lanes (clamped to
+    /// `[1, out_c]`).  The total thread count is
+    /// `plan lanes + 1` (feeder); see [`StagePlan::balanced`] for
+    /// choosing the lane counts under a thread budget.
+    pub fn with_plan(engine: Engine, inflight: usize, plan: StagePlan) -> Result<Self> {
         let shapes = engine.layer_shapes();
         let n = shapes.len();
         match shapes.last() {
@@ -103,11 +129,29 @@ impl PipelineRuntime {
         if let Some(i) = shapes[..n - 1].iter().position(|s| s.scores) {
             bail!("classifier layer {i} is not last");
         }
+        if plan.lanes_per_layer.len() != n {
+            bail!(
+                "stage plan covers {} layers, model has {n}",
+                plan.lanes_per_layer.len()
+            );
+        }
+        // the plan as executed: lane counts clamped to what the layer can
+        // actually split across
+        let plan = StagePlan {
+            lanes_per_layer: plan
+                .lanes_per_layer
+                .iter()
+                .zip(&shapes)
+                .map(|(&l, s)| l.clamp(1, s.out_c.max(1)))
+                .collect(),
+        };
 
         let inflight = inflight.max(1);
         let input_len = shapes[0].in_hw * shapes[0].in_hw * shapes[0].in_c;
         let engine = Arc::new(engine);
         let pending = new_pending();
+        let counters: Vec<Arc<StageCounters>> =
+            (0..n).map(|_| Arc::new(StageCounters::default())).collect();
         let mut threads = Vec::with_capacity(n + 1);
 
         // build the inter-stage FIFOs front to back, then hand each stage
@@ -132,14 +176,12 @@ impl PipelineRuntime {
             };
             next_tx = senders.pop();
             let engine = Arc::clone(&engine);
+            let lanes = plan.lanes_per_layer[i];
+            let ctr = Arc::clone(&counters[i]);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("pipeline-stage-{i}"))
-                    .spawn(move || {
-                        let mut stepper =
-                            engine.layer_stepper(i).expect("index validated at construction");
-                        run_stage(&mut stepper, rx, tx);
-                    })
+                    .spawn(move || run_stage_group(&engine, i, lanes, rx, tx, &ctr))
                     .expect("spawn pipeline stage"),
             );
         }
@@ -171,9 +213,9 @@ impl PipelineRuntime {
                             if aborted {
                                 // a stage exited: fail everything in flight
                                 // and everything still being admitted
-                                fail_pending(&pending, "pipeline stage exited");
+                                fail_pending(&pending, StageError::Shutdown);
                                 while let Some((_image, reply)) = feeder_rx.recv() {
-                                    let _ = reply.send(Err("pipeline stage exited".into()));
+                                    let _ = reply.send(Err(StageError::Shutdown));
                                 }
                                 return;
                             }
@@ -191,6 +233,8 @@ impl PipelineRuntime {
             pending,
             shapes,
             fifo_caps,
+            plan,
+            counters,
             inflight,
             input_len,
         })
@@ -219,9 +263,16 @@ impl PipelineRuntime {
     }
 
     /// Input-FIFO row capacity per stage — derived from the §4.3 channel
-    /// geometry ([`fifo_rows`]); the pinning test asserts this.
+    /// geometry ([`fifo_rows`]); the pinning test asserts this.  Lane
+    /// counts do not change it: partitioned lanes share the stage's one
+    /// inter-layer channel.
     pub fn stage_fifo_capacities(&self) -> &[usize] {
         &self.fifo_caps
+    }
+
+    /// The stage plan as executed (lane counts clamped to `[1, out_c]`).
+    pub fn plan(&self) -> &StagePlan {
+        &self.plan
     }
 
     /// Admission-window depth.
@@ -229,9 +280,19 @@ impl PipelineRuntime {
         self.inflight
     }
 
-    /// Stage threads (layers) plus the feeder.
+    /// Total threads: every stage's lanes plus the feeder.
     pub fn thread_count(&self) -> usize {
-        self.shapes.len() + 1
+        self.plan.total_lanes() + 1
+    }
+
+    /// Live per-stage busy/stall snapshot — the bottleneck stage is the
+    /// one with high `busy` while its neighbours stall (FIFO-wait).
+    pub fn stage_stats(&self) -> Vec<StageSnapshot> {
+        self.counters
+            .iter()
+            .enumerate()
+            .map(|(i, c)| c.snapshot(i, self.plan.lanes_per_layer[i]))
+            .collect()
     }
 
     /// Close admission, let the stages drain every admitted image, join
@@ -251,7 +312,7 @@ impl PipelineRuntime {
         }
         // belt and braces: if the threads were already gone the latch is
         // set, but make sure no ticket can be left waiting either way
-        fail_pending(&self.pending, "pipeline shut down with the image in flight");
+        fail_pending(&self.pending, StageError::Shutdown);
     }
 }
 

@@ -1,9 +1,29 @@
-//! One pipeline stage: a thread wrapping a [`LayerStepper`].
+//! One pipeline stage: a *lane group* of threads wrapping channel-
+//! partitioned [`LayerStepper`]s.
 //!
-//! The stage consumes input rows from its bounded FIFO as they arrive,
-//! pushes them through the stepper, and forwards every emitted output row
-//! downstream — so the stage is *concurrently active* with every other
-//! stage, the defining property of the paper's §4 streaming architecture.
+//! A stage with one lane (the PR 3 shape) is a single thread consuming
+//! input rows from its bounded FIFO, pushing them through the stepper and
+//! forwarding every emitted output row downstream — concurrently active
+//! with every other stage, the defining property of the paper's §4
+//! streaming architecture.
+//!
+//! A stage with `L > 1` lanes (a [`crate::pipeline::StagePlan`] entry) is
+//! the host analogue of giving that layer more spatial parallelism `P`:
+//! the output channels are split into `L` contiguous partitions, each
+//! computed by its own [`LayerStepper`] lane over the *same* input rows.
+//! The lead lane (lane 0) owns the stage's FIFO endpoints: per input row
+//! it broadcasts the row (an `Arc`, no copies) to the helper lanes,
+//! computes its own partition, then pops exactly one partial result per
+//! helper per emission and merges deterministically — partial packed rows
+//! carry disjoint bit-ranges and OR together; partial classifier scores
+//! concatenate in ascending lane order.  Emission schedules are identical
+//! across partitions (they depend only on geometry), so the merge needs
+//! no sequence numbers, and the lead's per-emission pops double as the
+//! rate-match: a helper can never run more than one row ahead.  FIFO
+//! geometry *between* stages stays pinned to the §4.3 channel model; the
+//! tiny intra-group lane FIFOs are plumbing inside one stage, not an
+//! inter-layer channel.
+//!
 //! Image boundaries are implicit: a stage knows its layer consumes exactly
 //! `in_hw` rows per image, so after the `in_hw`-th row it flushes (bottom
 //! border / FC compute) and resets for the next image.  No marker tokens
@@ -12,16 +32,21 @@
 //! Shutdown is edge-triggered in both directions:
 //! * upstream closure (sender dropped) — the stage drains buffered rows,
 //!   then exits and drops its own sender, cascading end-of-stream down
-//!   the pipe;
+//!   the pipe (helper lanes exit when the lead drops their input senders);
 //! * downstream closure (receiver dropped) — the stage's forward `send`
 //!   fails, it exits and drops its receiver, cascading the closure up the
 //!   pipe until the feeder observes it.
 
 use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::bcnn::engine::{LayerStepper, RowRef, StepperOut};
+use crate::bcnn::Engine;
+use crate::pipeline::fifo::{bounded, RowReceiver, RowSender};
 
 /// A row in flight between stages: raw integers into the first layer,
 /// packed bits everywhere else.
@@ -31,8 +56,99 @@ pub enum PipeRow {
     Bits(Vec<u64>),
 }
 
+/// Why an in-flight image could not complete — typed, so callers match on
+/// variants instead of scraping message strings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StageError {
+    /// The pipeline shut down (or a stage exited mid-cascade) with the
+    /// image in flight.  The submission itself was fine; resubmitting on
+    /// a live pipeline would succeed.
+    Shutdown,
+    /// A stage's stepper rejected the row stream — impossible for rows
+    /// produced by validated upstream stages, but never silently
+    /// swallowed.
+    Failed(String),
+}
+
+impl fmt::Display for StageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StageError::Shutdown => write!(f, "pipeline shut down with the image in flight"),
+            StageError::Failed(msg) => write!(f, "pipeline stage failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for StageError {}
+
 /// Per-image completion result delivered to a submit ticket.
-pub type ScoreResult = Result<Vec<f32>, String>;
+pub type ScoreResult = Result<Vec<f32>, StageError>;
+
+/// Live busy/stall counters for one stage, updated by its lead lane and
+/// snapshotted by [`crate::pipeline::PipelineRuntime::stage_stats`].
+/// `busy` covers stepper compute plus the lane broadcast/merge (waiting
+/// on this stage's own lanes *is* the stage working); `stall_in` is time
+/// blocked on the input FIFO (upstream starvation); `stall_out` is time
+/// blocked forwarding downstream (backpressure from the next stage).
+/// The bottleneck stage is the one with high `busy` while its neighbours
+/// stall — visible instead of inferred.
+#[derive(Debug, Default)]
+pub struct StageCounters {
+    busy_ns: AtomicU64,
+    stall_in_ns: AtomicU64,
+    stall_out_ns: AtomicU64,
+    rows_in: AtomicU64,
+    images: AtomicU64,
+}
+
+impl StageCounters {
+    fn add(cell: &AtomicU64, d: Duration) {
+        cell.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough snapshot (counters only ever grow).
+    pub fn snapshot(&self, layer: usize, lanes: usize) -> StageSnapshot {
+        let ns = |cell: &AtomicU64| Duration::from_nanos(cell.load(Ordering::Relaxed));
+        StageSnapshot {
+            layer,
+            lanes,
+            busy: ns(&self.busy_ns),
+            stall_in: ns(&self.stall_in_ns),
+            stall_out: ns(&self.stall_out_ns),
+            rows_in: self.rows_in.load(Ordering::Relaxed),
+            images: self.images.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of one stage's [`StageCounters`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StageSnapshot {
+    /// Layer index (= stage position).
+    pub layer: usize,
+    /// Worker lanes the stage runs.
+    pub lanes: usize,
+    pub busy: Duration,
+    pub stall_in: Duration,
+    pub stall_out: Duration,
+    /// Input rows consumed.
+    pub rows_in: u64,
+    /// Whole images flushed.
+    pub images: u64,
+}
+
+impl StageSnapshot {
+    /// Fold another snapshot of the *same* stage into this one (shard
+    /// aggregation across backend replicas).
+    pub fn absorb(&mut self, other: &StageSnapshot) {
+        self.lanes = self.lanes.max(other.lanes);
+        self.busy += other.busy;
+        self.stall_in += other.stall_in;
+        self.stall_out += other.stall_out;
+        self.rows_in += other.rows_in;
+        self.images += other.images;
+    }
+}
 
 /// FIFO-ordered reply senders for images in flight, plus the pipeline's
 /// failure latch.  The feeder registers one sender per admitted image
@@ -48,8 +164,8 @@ pub type ScoreResult = Result<Vec<f32>, String>;
 /// would vanish between live stages and its ticket would wait forever.
 pub struct PendingState {
     queue: VecDeque<mpsc::Sender<ScoreResult>>,
-    /// `Some(reason)` once no new image can ever complete.
-    failed: Option<String>,
+    /// `Some(error)` once no new image can ever complete.
+    failed: Option<StageError>,
 }
 
 /// Shared handle to the pending-reply state.
@@ -66,39 +182,92 @@ pub fn new_pending() -> PendingReplies {
 pub fn register_reply(pending: &PendingReplies, reply: mpsc::Sender<ScoreResult>) {
     let mut state = pending.lock().unwrap();
     match &state.failed {
-        Some(reason) => {
-            let _ = reply.send(Err(reason.clone()));
+        Some(error) => {
+            let _ = reply.send(Err(error.clone()));
         }
         None => state.queue.push_back(reply),
     }
 }
 
-/// Latch the failure `reason` (first caller wins) and fail every ticket
+/// Latch the failure `error` (first caller wins) and fail every ticket
 /// currently in flight.
-pub fn fail_pending(pending: &PendingReplies, reason: &str) {
+pub fn fail_pending(pending: &PendingReplies, error: StageError) {
     let mut state = pending.lock().unwrap();
     if state.failed.is_none() {
-        state.failed = Some(reason.to_string());
+        state.failed = Some(error);
     }
-    let reason = state.failed.clone().expect("latched above");
+    let error = state.failed.clone().expect("latched above");
     for reply in state.queue.drain(..) {
-        let _ = reply.send(Err(reason.clone()));
+        let _ = reply.send(Err(error.clone()));
     }
 }
 
 /// Where a stage's emissions go: another stage's FIFO, or (for the
 /// classifier stage) the pending-reply queue.
 pub enum StageOutput {
-    Rows(super::fifo::RowSender<PipeRow>),
+    Rows(RowSender<PipeRow>),
     Scores(PendingReplies),
 }
 
-/// Run one stage to completion.  Returns when the input stream closes
-/// (normal drain) or the downstream side disappears (abort cascade).
-pub fn run_stage(
-    stepper: &mut LayerStepper<'_>,
-    rx: super::fifo::RowReceiver<PipeRow>,
+/// Capacity of the intra-group lane FIFOs (rows for a helper's input,
+/// partial emissions for its output).  The lead's per-emission pops keep
+/// occupancy at one row in flight; a little slack covers the pool
+/// layers' emission-free row pairs.  NOT a §4.3 channel — those are the
+/// inter-stage FIFOs, still sized by `fpga::channel::fifo_rows`.
+const LANE_FIFO_SLACK: usize = 4;
+
+/// A helper lane's partial result, or the stepper error that killed it.
+type LanePartial = Result<StepperOut, String>;
+
+/// Run one stage — possibly a multi-lane group — to completion.  Returns
+/// when the input stream closes (normal drain) or the downstream side
+/// disappears (abort cascade).  `lanes` is clamped to `[1, out_c]`.
+pub fn run_stage_group(
+    engine: &Engine,
+    index: usize,
+    lanes: usize,
+    rx: RowReceiver<PipeRow>,
     tx: StageOutput,
+    counters: &StageCounters,
+) {
+    let shapes = engine.layer_shapes();
+    let out_c = shapes[index].out_c.max(1);
+    let lanes = lanes.clamp(1, out_c);
+    if lanes == 1 {
+        let mut stepper = engine.layer_stepper(index).expect("index validated at construction");
+        run_single_lane(&mut stepper, rx, tx, counters);
+        return;
+    }
+    // contiguous ascending channel partitions; lane 0 (the lead) keeps
+    // the first so merged scores concatenate in class order
+    let bounds: Vec<(usize, usize)> = lane_bounds(out_c, lanes);
+    std::thread::scope(|scope| {
+        let mut helpers_in: Vec<RowSender<Arc<PipeRow>>> = Vec::with_capacity(lanes - 1);
+        let mut helpers_out: Vec<RowReceiver<LanePartial>> = Vec::with_capacity(lanes - 1);
+        for &(lo, hi) in &bounds[1..] {
+            let (in_tx, in_rx) = bounded::<Arc<PipeRow>>(LANE_FIFO_SLACK);
+            let (out_tx, out_rx) = bounded::<LanePartial>(LANE_FIFO_SLACK);
+            scope.spawn(move || run_helper_lane(engine, index, lo, hi, in_rx, out_tx));
+            helpers_in.push(in_tx);
+            helpers_out.push(out_rx);
+        }
+        run_lead_lane(engine, index, bounds[0], helpers_in, helpers_out, rx, tx, counters);
+        // scope join: helpers observe their dropped endpoints and exit
+    });
+}
+
+/// Split `out_c` into `lanes` contiguous, ascending, non-empty ranges
+/// (callers guarantee `1 <= lanes <= out_c`).
+pub(crate) fn lane_bounds(out_c: usize, lanes: usize) -> Vec<(usize, usize)> {
+    (0..lanes).map(|l| (l * out_c / lanes, (l + 1) * out_c / lanes)).collect()
+}
+
+/// The single-lane stage loop (one thread, no partitioning).
+fn run_single_lane(
+    stepper: &mut LayerStepper<'_>,
+    rx: RowReceiver<PipeRow>,
+    tx: StageOutput,
+    counters: &StageCounters,
 ) {
     let in_hw = stepper.shape().in_hw;
     let mut rows_in_image = 0usize;
@@ -106,25 +275,35 @@ pub fn run_stage(
     // staging buffer never grows past 2
     let mut emitted: Vec<StepperOut> = Vec::with_capacity(2);
 
-    while let Some(row) = rx.recv() {
+    loop {
+        let wait = Instant::now();
+        let Some(row) = rx.recv() else { break };
+        StageCounters::add(&counters.stall_in_ns, wait.elapsed());
+        counters.rows_in.fetch_add(1, Ordering::Relaxed);
+        let work = Instant::now();
         let rref = match &row {
             PipeRow::Int(v) => RowRef::Int(v),
             PipeRow::Bits(v) => RowRef::Bits(v),
         };
         if let Err(e) = stepper.push_row(rref, &mut |o| emitted.push(o)) {
-            fail_stage(&tx, &e);
+            fail_stage(&tx, StageError::Failed(e.to_string()));
             return;
         }
         rows_in_image += 1;
         if rows_in_image == in_hw {
             rows_in_image = 0;
+            counters.images.fetch_add(1, Ordering::Relaxed);
             if let Err(e) = stepper.flush(&mut |o| emitted.push(o)) {
-                fail_stage(&tx, &e);
+                fail_stage(&tx, StageError::Failed(e.to_string()));
                 return;
             }
         }
+        StageCounters::add(&counters.busy_ns, work.elapsed());
         for out in emitted.drain(..) {
-            if !forward(&tx, out) {
+            let send = Instant::now();
+            let ok = forward(&tx, out);
+            StageCounters::add(&counters.stall_out_ns, send.elapsed());
+            if !ok {
                 finish_stage(&tx);
                 return; // downstream gone: cascade the closure upstream
             }
@@ -136,12 +315,179 @@ pub fn run_stage(
     finish_stage(&tx);
 }
 
+/// The lead lane of a multi-lane stage: owns the stage FIFOs, broadcasts
+/// rows to the helpers, computes partition 0, merges partials in lane
+/// order, forwards.
+#[allow(clippy::too_many_arguments)]
+fn run_lead_lane(
+    engine: &Engine,
+    index: usize,
+    (lo, hi): (usize, usize),
+    helpers_in: Vec<RowSender<Arc<PipeRow>>>,
+    helpers_out: Vec<RowReceiver<LanePartial>>,
+    rx: RowReceiver<PipeRow>,
+    tx: StageOutput,
+    counters: &StageCounters,
+) {
+    let mut stepper =
+        engine.layer_stepper_part(index, lo, hi).expect("bounds derived from the shape");
+    let in_hw = stepper.shape().in_hw;
+    let mut rows_in_image = 0usize;
+    let mut emitted: Vec<StepperOut> = Vec::with_capacity(2);
+
+    loop {
+        let wait = Instant::now();
+        let Some(row) = rx.recv() else { break };
+        StageCounters::add(&counters.stall_in_ns, wait.elapsed());
+        counters.rows_in.fetch_add(1, Ordering::Relaxed);
+        let work = Instant::now();
+        // broadcast first so the helpers overlap with the lead's own
+        // partition compute
+        let row = Arc::new(row);
+        for (j, h) in helpers_in.iter().enumerate() {
+            if h.send(Arc::clone(&row)).is_err() {
+                // the lane died; its out-sender is gone too, so draining
+                // its partial FIFO cannot block — recover the real
+                // stepper error it left behind (a lane that erred on an
+                // emission-free row has no other way to surface it)
+                let mut error = StageError::Failed("stage lane exited".into());
+                while let Some(partial) = helpers_out[j].recv() {
+                    if let Err(msg) = partial {
+                        error = StageError::Failed(msg);
+                        break;
+                    }
+                }
+                fail_stage(&tx, error);
+                return;
+            }
+        }
+        let rref = match &*row {
+            PipeRow::Int(v) => RowRef::Int(v),
+            PipeRow::Bits(v) => RowRef::Bits(v),
+        };
+        if let Err(e) = stepper.push_row(rref, &mut |o| emitted.push(o)) {
+            fail_stage(&tx, StageError::Failed(e.to_string()));
+            return;
+        }
+        rows_in_image += 1;
+        if rows_in_image == in_hw {
+            rows_in_image = 0;
+            counters.images.fetch_add(1, Ordering::Relaxed);
+            if let Err(e) = stepper.flush(&mut |o| emitted.push(o)) {
+                fail_stage(&tx, StageError::Failed(e.to_string()));
+                return;
+            }
+        }
+        // every lane emits the same schedule: pop exactly one partial per
+        // helper per own emission and merge in ascending lane order
+        let mut ready: Vec<StepperOut> = Vec::with_capacity(emitted.len());
+        for mut out in emitted.drain(..) {
+            for h in &helpers_out {
+                match h.recv() {
+                    Some(Ok(part)) => {
+                        if let Err(msg) = merge_partial(&mut out, part) {
+                            fail_stage(&tx, StageError::Failed(msg));
+                            return;
+                        }
+                    }
+                    Some(Err(msg)) => {
+                        fail_stage(&tx, StageError::Failed(msg));
+                        return;
+                    }
+                    None => {
+                        fail_stage(&tx, StageError::Failed("stage lane exited".into()));
+                        return;
+                    }
+                }
+            }
+            ready.push(out);
+        }
+        StageCounters::add(&counters.busy_ns, work.elapsed());
+        for out in ready {
+            let send = Instant::now();
+            let ok = forward(&tx, out);
+            StageCounters::add(&counters.stall_out_ns, send.elapsed());
+            if !ok {
+                finish_stage(&tx);
+                return;
+            }
+        }
+    }
+    // EOS only occurs at an emission boundary (every image ends in a
+    // flush emission the lead has already popped partials for), so the
+    // helpers are fully drained here; dropping their senders releases them
+    finish_stage(&tx);
+}
+
+/// A helper lane: consumes broadcast rows, computes its channel
+/// partition, sends every partial emission (or its stepper error) back to
+/// the lead.  Exits when the lead drops either endpoint.
+fn run_helper_lane(
+    engine: &Engine,
+    index: usize,
+    lo: usize,
+    hi: usize,
+    rx: RowReceiver<Arc<PipeRow>>,
+    tx: RowSender<LanePartial>,
+) {
+    let mut stepper =
+        engine.layer_stepper_part(index, lo, hi).expect("bounds derived from the shape");
+    let in_hw = stepper.shape().in_hw;
+    let mut rows_in_image = 0usize;
+    let mut emitted: Vec<StepperOut> = Vec::with_capacity(2);
+    while let Some(row) = rx.recv() {
+        let rref = match &*row {
+            PipeRow::Int(v) => RowRef::Int(v),
+            PipeRow::Bits(v) => RowRef::Bits(v),
+        };
+        if let Err(e) = stepper.push_row(rref, &mut |o| emitted.push(o)) {
+            let _ = tx.send(Err(e.to_string()));
+            return;
+        }
+        rows_in_image += 1;
+        if rows_in_image == in_hw {
+            rows_in_image = 0;
+            if let Err(e) = stepper.flush(&mut |o| emitted.push(o)) {
+                let _ = tx.send(Err(e.to_string()));
+                return;
+            }
+        }
+        for out in emitted.drain(..) {
+            if tx.send(Ok(out)).is_err() {
+                return; // lead gone: cascade teardown
+            }
+        }
+    }
+}
+
+/// Fold a helper lane's partial emission into the lead's: packed rows
+/// carry disjoint bit-ranges and OR together; classifier score slices
+/// concatenate (helpers arrive in ascending class order).
+fn merge_partial(into: &mut StepperOut, part: StepperOut) -> Result<(), String> {
+    match (into, part) {
+        (StepperOut::Row(a), StepperOut::Row(b)) => {
+            if a.len() != b.len() {
+                return Err(format!("lane row width mismatch: {} vs {} words", a.len(), b.len()));
+            }
+            for (x, &y) in a.iter_mut().zip(&b) {
+                *x |= y;
+            }
+            Ok(())
+        }
+        (StepperOut::Scores(a), StepperOut::Scores(b)) => {
+            a.extend_from_slice(&b);
+            Ok(())
+        }
+        _ => Err("lane emission kind mismatch".into()),
+    }
+}
+
 /// On classifier-stage exit (any reason), latch the pending queue: no
 /// image can complete anymore, so in-flight and future tickets must fail
 /// instead of waiting forever.  No-op for non-classifier stages.
 fn finish_stage(tx: &StageOutput) {
     if let StageOutput::Scores(pending) = tx {
-        fail_pending(pending, "pipeline shut down with the image in flight");
+        fail_pending(pending, StageError::Shutdown);
     }
 }
 
@@ -166,12 +512,12 @@ fn forward(tx: &StageOutput, out: StepperOut) -> bool {
     }
 }
 
-/// A stepper error (impossible for rows produced by validated upstream
-/// stages, but never silently swallowed): if this is the classifier
-/// stage, latch and fail everything in flight with the real error; the
-/// upstream cascade (failed sends, then the feeder) handles the rest.
-fn fail_stage(tx: &StageOutput, error: &anyhow::Error) {
+/// A stage failure (stepper error or dead lane): if this is the
+/// classifier stage, latch and fail everything in flight with the real
+/// error; the upstream cascade (failed sends, then the feeder) handles
+/// the rest.
+fn fail_stage(tx: &StageOutput, error: StageError) {
     if let StageOutput::Scores(pending) = tx {
-        fail_pending(pending, &format!("pipeline stage failed: {error}"));
+        fail_pending(pending, error);
     }
 }

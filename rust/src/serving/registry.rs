@@ -25,12 +25,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::bcnn::Engine;
 use crate::coordinator::{
     Backend, BackendFactory, BatchPolicy, Client, Coordinator, CoordinatorConfig, FpgaSimBackend,
     GpuSimBackend, Metrics, NativeBackend, PipelineBackend,
 };
 use crate::gpu::GpuKernel;
 use crate::model::{BcnnModel, NetConfig};
+use crate::pipeline::StagePlan;
 use crate::serving::router::{Router, RoutingTable, TableSlot};
 
 /// Which backend a model entry's pool replicates (paper backends plus the
@@ -39,32 +41,42 @@ use crate::serving::router::{Router, RoutingTable, TableSlot};
 pub enum BackendSpec {
     /// Sequential tap-major engine, `lanes` intra-batch threads.
     Engine { lanes: usize },
-    /// Row-streaming layer pipeline, `inflight` admission window.
-    Pipeline { inflight: usize },
+    /// Row-streaming layer pipeline: `inflight` admission window,
+    /// `stage_threads` total stage-lane budget for the calibrated
+    /// throughput-balancing plan (`0` = one lane per stage, the
+    /// unbalanced pipeline).
+    Pipeline { inflight: usize, stage_threads: usize },
     FpgaSim,
     GpuSim,
 }
 
 impl BackendSpec {
-    /// Parse `engine`, `engine:4`, `pipeline`, `pipeline:8`, `fpga-sim`,
-    /// `gpu-sim` (the wire/CLI encoding).
+    /// Parse `engine`, `engine:4`, `pipeline`, `pipeline:8`,
+    /// `pipeline:8:12` (inflight, then the stage-lane budget),
+    /// `fpga-sim`, `gpu-sim` (the wire/CLI encoding).
     pub fn parse(s: &str) -> Result<Self> {
         let (kind, arg) = match s.split_once(':') {
             Some((k, a)) => (k, Some(a)),
             None => (s, None),
         };
-        let num = |default: usize| -> Result<usize> {
-            match arg {
-                None => Ok(default),
-                Some(a) => a
-                    .parse::<usize>()
-                    .map(|n| n.max(1))
-                    .with_context(|| format!("backend parameter {a:?} in {s:?}")),
-            }
+        let num = |a: &str| -> Result<usize> {
+            a.parse::<usize>()
+                .with_context(|| format!("backend parameter {a:?} in {s:?}"))
         };
         match kind {
-            "engine" | "native" => Ok(BackendSpec::Engine { lanes: num(1)? }),
-            "pipeline" => Ok(BackendSpec::Pipeline { inflight: num(8)? }),
+            "engine" | "native" => Ok(BackendSpec::Engine {
+                lanes: arg.map(num).transpose()?.unwrap_or(1).max(1),
+            }),
+            "pipeline" => {
+                let (inflight, stage_threads) = match arg {
+                    None => (8, 0),
+                    Some(a) => match a.split_once(':') {
+                        None => (num(a)?.max(1), 0),
+                        Some((i, t)) => (num(i)?.max(1), num(t)?),
+                    },
+                };
+                Ok(BackendSpec::Pipeline { inflight, stage_threads })
+            }
             "fpga-sim" => Ok(BackendSpec::FpgaSim),
             "gpu-sim" => Ok(BackendSpec::GpuSim),
             other => bail!("unknown backend {other:?} (engine|pipeline|fpga-sim|gpu-sim)"),
@@ -75,22 +87,48 @@ impl BackendSpec {
     pub fn label(&self) -> String {
         match self {
             BackendSpec::Engine { lanes } => format!("engine:{lanes}"),
-            BackendSpec::Pipeline { inflight } => format!("pipeline:{inflight}"),
+            BackendSpec::Pipeline { inflight, stage_threads: 0 } => format!("pipeline:{inflight}"),
+            BackendSpec::Pipeline { inflight, stage_threads } => {
+                format!("pipeline:{inflight}:{stage_threads}")
+            }
             BackendSpec::FpgaSim => "fpga-sim".to_string(),
             BackendSpec::GpuSim => "gpu-sim".to_string(),
         }
     }
 
     /// Per-worker replica factory for this backend kind over `model`.
+    ///
+    /// A balanced pipeline pool calibrates its [`StagePlan`] **once**:
+    /// the first replica measures and water-fills, later replicas reuse
+    /// the same plan — every shard runs identical lane counts (the
+    /// per-stage metrics aggregation sums like with like), and the
+    /// timing-sensitive calibration never runs while sibling replicas
+    /// are already saturating the cores.
     pub fn factory(&self, model: BcnnModel) -> BackendFactory {
         let spec = *self;
+        let shared_plan: Arc<Mutex<Option<StagePlan>>> = Arc::new(Mutex::new(None));
         Arc::new(move || -> Result<Box<dyn Backend>> {
             Ok(match spec {
                 BackendSpec::Engine { lanes } => {
                     Box::new(NativeBackend::with_lanes(model.clone(), lanes)?)
                 }
-                BackendSpec::Pipeline { inflight } => {
+                BackendSpec::Pipeline { inflight, stage_threads: 0 } => {
                     Box::new(PipelineBackend::new(model.clone(), inflight)?)
+                }
+                BackendSpec::Pipeline { inflight, stage_threads } => {
+                    let plan = {
+                        let mut slot = shared_plan.lock().unwrap();
+                        match &*slot {
+                            Some(plan) => plan.clone(),
+                            None => {
+                                let engine = Engine::new(model.clone())?;
+                                let plan = StagePlan::balanced(&engine, stage_threads)?;
+                                *slot = Some(plan.clone());
+                                plan
+                            }
+                        }
+                    };
+                    Box::new(PipelineBackend::with_plan(model.clone(), inflight, plan)?)
                 }
                 BackendSpec::FpgaSim => Box::new(FpgaSimBackend::new(model.clone())?),
                 BackendSpec::GpuSim => {

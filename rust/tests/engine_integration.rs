@@ -320,6 +320,138 @@ fn layer_stepper_rows_match_whole_image_layers() {
     }
 }
 
+/// Run the whole network through channel-partitioned steppers (`lanes`
+/// per layer), merging lane emissions exactly like a pipeline stage lane
+/// group does: packed rows OR together (disjoint bit-ranges), classifier
+/// score slices concatenate in ascending lane order.
+fn infer_via_partitions(engine: &Engine, img: &[i32], lanes: usize) -> Vec<f32> {
+    enum Rows {
+        Int(Vec<Vec<i32>>),
+        Bits(Vec<Vec<u64>>),
+    }
+    let model = engine.model();
+    let (hw, c) = (model.input_hw, model.input_channels);
+    let mut rows =
+        Rows::Int((0..hw).map(|y| img[y * hw * c..(y + 1) * hw * c].to_vec()).collect());
+    for (i, shape) in engine.layer_shapes().iter().enumerate() {
+        let l = lanes.clamp(1, shape.out_c);
+        let bounds: Vec<(usize, usize)> =
+            (0..l).map(|k| (k * shape.out_c / l, (k + 1) * shape.out_c / l)).collect();
+        // every lane sees the full input rows and emits the same schedule
+        let mut per_lane: Vec<Vec<StepperOut>> = Vec::with_capacity(l);
+        for &(lo, hi) in &bounds {
+            let mut stepper = engine.layer_stepper_part(i, lo, hi).unwrap();
+            assert_eq!(stepper.partition(), (lo, hi));
+            let mut outs: Vec<StepperOut> = Vec::new();
+            {
+                let mut emit = |o: StepperOut| outs.push(o);
+                match &rows {
+                    Rows::Int(rs) => {
+                        for r in rs {
+                            stepper.push_row(RowRef::Int(r), &mut emit).unwrap();
+                        }
+                    }
+                    Rows::Bits(rs) => {
+                        for r in rs {
+                            stepper.push_row(RowRef::Bits(r), &mut emit).unwrap();
+                        }
+                    }
+                }
+                stepper.flush(&mut emit).unwrap();
+            }
+            per_lane.push(outs);
+        }
+        let mut merged = per_lane.remove(0);
+        for outs in per_lane {
+            assert_eq!(outs.len(), merged.len(), "layer {i}: lane emission schedules diverged");
+            for (m, o) in merged.iter_mut().zip(outs) {
+                match (m, o) {
+                    (StepperOut::Row(a), StepperOut::Row(b)) => {
+                        assert_eq!(a.len(), b.len(), "layer {i}: partial row widths");
+                        for (x, y) in a.iter_mut().zip(&b) {
+                            // partitions own disjoint bit-ranges
+                            assert_eq!(*x & *y, 0, "layer {i}: partitions overlap");
+                            *x |= *y;
+                        }
+                    }
+                    (StepperOut::Scores(a), StepperOut::Scores(b)) => a.extend_from_slice(&b),
+                    _ => panic!("layer {i}: lane emission kinds diverged"),
+                }
+            }
+        }
+        if shape.scores {
+            assert_eq!(merged.len(), 1, "classifier emits once");
+            let Some(StepperOut::Scores(scores)) = merged.pop() else {
+                panic!("classifier layer must emit scores");
+            };
+            return scores;
+        }
+        rows = Rows::Bits(
+            merged
+                .into_iter()
+                .map(|o| match o {
+                    StepperOut::Row(r) => r,
+                    StepperOut::Scores(_) => panic!("hidden layer emitted scores"),
+                })
+                .collect(),
+        );
+    }
+    panic!("model has no classifier layer");
+}
+
+#[test]
+fn partitioned_steppers_compose_bit_exactly() {
+    // The stage-lane contract: for every lane count, OR-merging the
+    // partitions' packed rows and concatenating their score slices must
+    // reproduce Engine::infer bit for bit (and the textbook reference
+    // within float tolerance).  Shapes stress the partition math: odd hw
+    // (asymmetric borders), out_c off the 64-bit word lattice (partition
+    // boundaries inside packed words), pool on/off (fused pair folding),
+    // FC tails (feature-range dot products).
+    let cases: &[(usize, &[(usize, bool)], &[usize])] = &[
+        (8, &[(33, false), (65, true)], &[32]),
+        (7, &[(64, false)], &[16]),
+        (12, &[(100, true), (40, true)], &[]),
+        (6, &[(128, true), (96, false)], &[24]),
+        (5, &[(9, false)], &[]),
+        (2, &[(17, true)], &[]),
+    ];
+    for (ci, &(hw, conv, fc)) in cases.iter().enumerate() {
+        let cfg = custom_cfg(hw, conv, fc);
+        let model = BcnnModel::synthetic(&cfg, 0xFA2_B417 + ci as u64);
+        let engine = Engine::new(model.clone()).expect("valid model");
+        for (ii, img) in random_images(&cfg, 2, 4242 + ci as u64).iter().enumerate() {
+            let want = engine.infer(img).unwrap();
+            let slow = scalar_ref::infer_reference(&model, img).unwrap();
+            for lanes in 1..=4usize {
+                let got = infer_via_partitions(&engine, img, lanes);
+                assert_eq!(
+                    got, want,
+                    "case {ci} image {ii} lanes {lanes}: partition merge != Engine::infer"
+                );
+                assert_eq!(got.len(), slow.len());
+                for (a, b) in got.iter().zip(&slow) {
+                    assert!(
+                        (a - b).abs() < 1e-3,
+                        "case {ci} image {ii} lanes {lanes}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn partition_bounds_validated() {
+    let model = load("tiny");
+    let engine = Engine::new(model).expect("valid model");
+    let out_c = engine.layer_shapes()[0].out_c;
+    assert!(engine.layer_stepper_part(0, 0, out_c + 1).is_err(), "hi past out_c");
+    assert!(engine.layer_stepper_part(0, 3, 3).is_err(), "empty range");
+    assert!(engine.layer_stepper_part(99, 0, 1).is_err(), "layer index");
+    assert!(engine.layer_stepper_part(0, 0, out_c).is_ok(), "full range");
+}
+
 #[test]
 fn rejects_wrong_image_size() {
     let model = load("tiny");

@@ -18,7 +18,7 @@ use repro::coordinator::{
 };
 use repro::fpga::channel::{fifo_rows, CHANNEL_SLOTS};
 use repro::model::{BcnnModel, ConvSpec, NetConfig};
-use repro::pipeline::PipelineRuntime;
+use repro::pipeline::{PipelineRuntime, StageError, StagePlan};
 
 fn load(name: &str) -> BcnnModel {
     BcnnModel::load_or_synthetic(name, "artifacts", 0xB_C0DE).expect("built-in config")
@@ -109,6 +109,133 @@ fn tickets_complete_in_submission_order_with_many_images_in_flight() {
         .collect();
     for (img, ticket) in images.iter().zip(tickets) {
         assert_eq!(ticket.wait().unwrap(), engine.infer(img).unwrap());
+    }
+}
+
+#[test]
+fn every_stage_plan_is_bit_exact_and_grouping_insensitive() {
+    // Acceptance: under every tested StagePlan, pipelined scores stay
+    // bit-identical to Engine::infer AND the batch-1 : batch-64 grouping
+    // invariance holds (grouping is a serving-side artifact; the lane
+    // groups must not perturb image order or numerics).  Shapes stress
+    // the lanes: odd-lattice channels, pool fold, FC tail.
+    let cfg = custom_cfg(8, &[(33, false), (65, true)], &[32]);
+    let model = BcnnModel::synthetic(&cfg, 0x51A6E);
+    let engine = Engine::new(model.clone()).expect("valid model");
+    let images = random_images(&cfg, 64, 91);
+    let want: Vec<Vec<f32>> = images.iter().map(|i| engine.infer(i).unwrap()).collect();
+    let n = engine.layer_shapes().len();
+    let plans = vec![
+        StagePlan::uniform(n, 1),
+        StagePlan::uniform(n, 2),
+        StagePlan::uniform(n, 3),
+        // deliberately lopsided
+        StagePlan { lanes_per_layer: (0..n).map(|i| 1 + (i * 7) % 4).collect() },
+        StagePlan::balanced(&engine, 2 * n).expect("calibration"),
+    ];
+    for plan in plans {
+        let label = format!("{:?}", plan.lanes_per_layer);
+        let runtime = PipelineRuntime::with_plan(Engine::new(model.clone()).unwrap(), 8, plan)
+            .expect("spawn planned pipeline");
+        // executed lane counts stay within every layer's split limit
+        for (lanes, shape) in runtime.plan().lanes_per_layer.iter().zip(runtime.shapes()) {
+            assert!((1..=shape.out_c.max(1)).contains(lanes), "plan {label} not clamped");
+        }
+        assert_eq!(runtime.thread_count(), runtime.plan().total_lanes() + 1);
+        for group in [1usize, 64] {
+            let mut got: Vec<Vec<f32>> = Vec::new();
+            for chunk in images.chunks(group) {
+                let tickets: Vec<_> =
+                    chunk.iter().map(|img| runtime.submit(img.clone()).unwrap()).collect();
+                got.extend(tickets.into_iter().map(|t| t.wait().unwrap()));
+            }
+            assert_eq!(got, want, "plan {label} group {group} changed the scores");
+        }
+    }
+}
+
+#[test]
+fn oversubscribed_plans_clamp_to_channel_counts() {
+    // a plan asking for more lanes than a layer has output channels is
+    // clamped, not rejected — and still scores bit-exactly
+    let cfg = custom_cfg(4, &[(3, false)], &[]);
+    let model = BcnnModel::synthetic(&cfg, 0xC1A);
+    let engine = Engine::new(model.clone()).unwrap();
+    let n = engine.layer_shapes().len();
+    let runtime = PipelineRuntime::with_plan(
+        Engine::new(model.clone()).unwrap(),
+        4,
+        StagePlan { lanes_per_layer: vec![1000; n] },
+    )
+    .expect("clamped spawn");
+    for (lanes, shape) in runtime.plan().lanes_per_layer.iter().zip(runtime.shapes()) {
+        assert_eq!(*lanes, shape.out_c, "clamped to out_c");
+    }
+    // a plan of the wrong length is a construction error, not a panic
+    assert!(PipelineRuntime::with_plan(
+        Engine::new(model.clone()).unwrap(),
+        4,
+        StagePlan { lanes_per_layer: vec![1; n + 1] },
+    )
+    .is_err());
+    for img in random_images(&cfg, 4, 55) {
+        let want = engine.infer(&img).unwrap();
+        assert_eq!(runtime.submit(img).unwrap().wait().unwrap(), want);
+    }
+}
+
+#[test]
+fn stage_stats_expose_the_bottleneck() {
+    // per-stage busy/stall counters: after streaming a backlog, every
+    // stage has consumed rows and flushed images, and the counters are
+    // live (busy time observed somewhere)
+    let model = load("tiny");
+    let engine = Engine::new(model.clone()).unwrap();
+    let n = engine.layer_shapes().len();
+    let runtime =
+        PipelineRuntime::with_plan(engine, 8, StagePlan::uniform(n, 2)).expect("spawn");
+    let images = random_images(&model.config(), 12, 17);
+    let tickets: Vec<_> =
+        images.iter().map(|img| runtime.submit(img.clone()).unwrap()).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let stats = runtime.stage_stats();
+    assert_eq!(stats.len(), n);
+    let hw = model.input_hw as u64;
+    for (i, s) in stats.iter().enumerate() {
+        assert_eq!(s.layer, i);
+        assert_eq!(s.images, images.len() as u64, "stage {i} image count");
+        if i == 0 {
+            assert_eq!(s.rows_in, images.len() as u64 * hw, "stage 0 row count");
+        }
+        assert!(s.rows_in > 0, "stage {i} consumed no rows");
+    }
+    assert!(
+        stats.iter().any(|s| s.busy > std::time::Duration::ZERO),
+        "no stage recorded busy time"
+    );
+}
+
+#[test]
+fn shutdown_failures_are_typed_not_stringly() {
+    // the satellite contract: callers distinguish shutdown-in-flight from
+    // stage failure by matching the StageError variant, no string-scraping
+    let model = load("tiny");
+    let runtime = PipelineRuntime::new(Engine::new(model.clone()).unwrap(), 4).unwrap();
+    let images = random_images(&model.config(), 8, 23);
+    let tickets: Vec<_> =
+        images.iter().map(|img| runtime.submit(img.clone()).unwrap()).collect();
+    drop(runtime);
+    let engine = Engine::new(model).unwrap();
+    for (img, ticket) in images.iter().zip(tickets) {
+        match ticket.wait_typed() {
+            Ok(scores) => assert_eq!(scores, engine.infer(img).unwrap()),
+            Err(StageError::Shutdown) => {}
+            Err(StageError::Failed(msg)) => {
+                panic!("shutdown must not surface as a stage failure: {msg}")
+            }
+        }
     }
 }
 

@@ -131,11 +131,31 @@ fn model_source_and_backend_spec_parse() {
     assert!(ModelSource::parse("synthetic:nope:1").unwrap().load().is_err());
 
     assert_eq!(BackendSpec::parse("engine:4").unwrap(), BackendSpec::Engine { lanes: 4 });
-    assert_eq!(BackendSpec::parse("pipeline").unwrap(), BackendSpec::Pipeline { inflight: 8 });
+    assert_eq!(
+        BackendSpec::parse("pipeline").unwrap(),
+        BackendSpec::Pipeline { inflight: 8, stage_threads: 0 }
+    );
+    assert_eq!(
+        BackendSpec::parse("pipeline:4").unwrap(),
+        BackendSpec::Pipeline { inflight: 4, stage_threads: 0 }
+    );
+    assert_eq!(
+        BackendSpec::parse("pipeline:4:12").unwrap(),
+        BackendSpec::Pipeline { inflight: 4, stage_threads: 12 }
+    );
     assert_eq!(BackendSpec::parse("fpga-sim").unwrap(), BackendSpec::FpgaSim);
     assert!(BackendSpec::parse("tpu").is_err());
+    assert!(BackendSpec::parse("pipeline:4:x").is_err());
     let label = BackendSpec::Engine { lanes: 2 }.label();
     assert_eq!(BackendSpec::parse(&label).unwrap(), BackendSpec::Engine { lanes: 2 });
+    // the stage-balanced pipeline label round-trips too (wire deploys)
+    let label = BackendSpec::Pipeline { inflight: 4, stage_threads: 12 }.label();
+    assert_eq!(label, "pipeline:4:12");
+    assert_eq!(
+        BackendSpec::parse(&label).unwrap(),
+        BackendSpec::Pipeline { inflight: 4, stage_threads: 12 }
+    );
+    assert_eq!(BackendSpec::Pipeline { inflight: 8, stage_threads: 0 }.label(), "pipeline:8");
 }
 
 type ServerHandle = std::thread::JoinHandle<anyhow::Result<()>>;
