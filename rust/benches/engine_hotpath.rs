@@ -15,6 +15,7 @@ use repro::bcnn::{Engine, LayerOutput, Scratch};
 use repro::benchkit::{bench_with, fmt_ns, write_bench_json, BenchOpts, Json, Table};
 use repro::coordinator::workload::random_images;
 use repro::model::BcnnModel;
+use repro::util::kernels::{Kernel, KernelKind};
 
 fn smoke() -> bool {
     std::env::var_os("BENCH_SMOKE").is_some()
@@ -121,9 +122,65 @@ fn main() {
     t.row(&["TOTAL".into(), fmt_ns(total), "100.0".into()]);
     t.print();
 
+    // per-kernel A/B on table2: every ISA tier the host can run, pinned
+    // via Engine::with_kernel, against the same prepared inputs — scalar
+    // is the baseline the speedup column divides by.  This is the SIMD
+    // scoreboard EXPERIMENTS.md §Perf iter 7 points at.
+    println!("\n=== per-kernel per-layer (table2, dispatched = {}) ===", engine.kernel());
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    let mut scalar_total: Option<f64> = None;
+    let mut t = Table::new(&["kernel", "e2e ns/image", "layer-sum ns", "speedup vs scalar"]);
+    for kind in KernelKind::ALL {
+        if !kind.available() {
+            println!("(skipping {kind}: unavailable on this host/toolchain)");
+            continue;
+        }
+        let model = BcnnModel::load_or_synthetic("table2", "artifacts", 0xB_C0DE).unwrap();
+        let kernel = Kernel::force(kind).expect("availability checked above");
+        let engine = Engine::with_kernel(model, kernel).expect("valid model");
+        let mut scratch = Scratch::default();
+        let e2e = bench_with(opts(20), &mut || {
+            std::hint::black_box(engine.infer_with_scratch(&img, &mut scratch).unwrap());
+        });
+        let mut layers: Vec<Json> = Vec::new();
+        let mut layer_sum = 0.0;
+        for (i, input) in acts.iter().enumerate() {
+            let stats = bench_with(opts(10), &mut || {
+                std::hint::black_box(engine.run_layer_at(i, input, &mut scratch).unwrap());
+            });
+            layer_sum += stats.median_ns;
+            layers.push(Json::Obj(vec![
+                ("layer".into(), Json::Num((i + 1) as f64)),
+                ("median_ns".into(), Json::Num(stats.median_ns)),
+            ]));
+        }
+        if kind == KernelKind::Scalar {
+            scalar_total = Some(e2e.median_ns);
+        }
+        let speedup = scalar_total.map(|s| s / e2e.median_ns);
+        t.row(&[
+            kind.name().to_string(),
+            format!("{:.0}", e2e.median_ns),
+            format!("{layer_sum:.0}"),
+            speedup.map_or("n/a".into(), |s| format!("{s:.2}x")),
+        ]);
+        kernel_rows.push(Json::Obj(vec![
+            ("name".into(), Json::Str(kind.name().into())),
+            ("end_to_end_ns_per_image".into(), Json::Num(e2e.median_ns)),
+            ("per_layer".into(), Json::Arr(layers)),
+            ("layer_sum_ns".into(), Json::Num(layer_sum)),
+            (
+                "speedup_vs_scalar".into(),
+                speedup.map_or(Json::Null, Json::Num),
+            ),
+        ]));
+    }
+    t.print();
+
     let json = Json::Obj(vec![
         ("bench".into(), Json::Str("engine_hotpath".into())),
         ("smoke".into(), Json::Bool(smoke())),
+        ("kernel".into(), Json::Str(Kernel::from_env().map_or("invalid", Kernel::name).into())),
         ("end_to_end".into(), Json::Arr(e2e_rows)),
         (
             "per_layer".into(),
@@ -133,6 +190,7 @@ fn main() {
                 ("total_ns_per_image".into(), Json::Num(total)),
             ]),
         ),
+        ("kernels".into(), Json::Arr(kernel_rows)),
     ]);
     write_bench_json("BENCH_engine.json", &json).expect("write BENCH_engine.json");
     println!("\nwrote BENCH_engine.json (smoke={})", smoke());

@@ -1,0 +1,38 @@
+//! Probe the compiler for stable AVX-512 intrinsics support.
+//!
+//! The `_mm512_*` intrinsics used by `util::kernels::avx512` were
+//! stabilised in Rust 1.89.  Older stable toolchains must still build the
+//! crate (the dispatcher then reports the `avx512` tier as unavailable),
+//! so instead of a hard MSRV bump we emit a `bcnn_avx512` cfg only when
+//! the compiling rustc is new enough.  No external crates: parse
+//! `rustc --version` by hand.
+
+use std::env;
+use std::process::Command;
+
+const AVX512_STABLE: (u32, u32) = (1, 89);
+
+fn rustc_version() -> Option<(u32, u32)> {
+    let rustc = env::var_os("RUSTC").unwrap_or_else(|| "rustc".into());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // e.g. "rustc 1.89.0 (abcdef 2025-07-01)" or "rustc 1.91.0-nightly (...)"
+    let ver = text.split_whitespace().nth(1)?;
+    let ver = ver.split('-').next()?; // drop -nightly/-beta channel suffix
+    let mut parts = ver.split('.');
+    let major: u32 = parts.next()?.parse().ok()?;
+    let minor: u32 = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}
+
+fn main() {
+    // Declare the custom cfg so toolchains that enforce `--check-cfg`
+    // accept it; cargos that predate check-cfg ignore the directive.
+    println!("cargo:rustc-check-cfg=cfg(bcnn_avx512)");
+    if let Some((major, minor)) = rustc_version() {
+        if (major, minor) >= AVX512_STABLE {
+            println!("cargo:rustc-cfg=bcnn_avx512");
+        }
+    }
+    println!("cargo:rerun-if-changed=build.rs");
+}

@@ -33,6 +33,21 @@
 //! is warm; see the capacity regression test in
 //! `rust/tests/engine_integration.rs`).
 //!
+//! ## SIMD kernel dispatch (PERF iter 7)
+//!
+//! The two bitwise primitives under the hot path — the whole-row XOR
+//! popcount of the FC dots and the per-tap bank lane accumulation of the
+//! conv loops — go through a [`Kernel`] resolved once at [`Engine::new`]
+//! time (avx512 > avx2 > scalar, overridable via `BCNN_KERNEL`).  The
+//! kernel is a `Copy` field of the engine, so every path that borrows the
+//! engine — whole-image inference, the layer-at-a-time API, and every
+//! [`LayerStepper`] lane of the row-streaming pipeline — dispatches to
+//! the same wide implementation.  The `[tap][word][out_c]` bank layout
+//! already makes each tap's lane slice contiguous and unit-stride, which
+//! is exactly the shape the 256/512-bit loads want; no restructuring was
+//! needed.  See `util::kernels` for the implementations and DESIGN.md for
+//! the mapping onto the paper's UF-wide XNOR array.
+//!
 //! Malformed models (packed rows whose word stride disagrees with their
 //! bit width, pooling at an odd resolution, mis-sized parameter vectors)
 //! are rejected with a typed [`ModelError`] at [`Engine::new`] time
@@ -44,9 +59,8 @@ use anyhow::{bail, Result};
 
 use crate::bcnn::tensor::{Activation, BitFmap};
 use crate::model::{BcnnModel, LayerWeights};
-use crate::util::bits::{
-    copy_bits, read_bits_u64, set_bit, words_for, xor_popcount, xor_popcount_lanes,
-};
+use crate::util::bits::{copy_bits, read_bits_u64, set_bit, words_for};
+use crate::util::kernels::{Kernel, KernelError};
 
 /// Output of one layer.
 #[derive(Debug, Clone, PartialEq)]
@@ -73,6 +87,10 @@ pub enum ModelError {
     /// layer's output — the model would bail (or, worse, misnumerate
     /// against phantom pad bits) at request time.
     ChainMismatch { layer: usize, what: &'static str, got: usize, want: usize },
+    /// The `BCNN_KERNEL` kernel override could not be honoured (unknown
+    /// name, or the requested ISA is unavailable on this host) —
+    /// surfaced at construction, where the dispatch is resolved.
+    Kernel(KernelError),
 }
 
 impl fmt::Display for ModelError {
@@ -95,6 +113,7 @@ impl fmt::Display for ModelError {
                 "layer {layer}: declared {what} {got} disagrees with the \
                  previous layer's output ({want})"
             ),
+            ModelError::Kernel(e) => write!(f, "kernel dispatch: {e}"),
         }
     }
 }
@@ -163,12 +182,27 @@ pub struct Engine {
     /// Tap-major transposed banks for every BinConv layer (PERF iter 6;
     /// superseded the whole-row `[word][out_c]` transpose of iter 4).
     bin_prepared: Vec<Option<PreparedBin>>,
+    /// Bitwise-primitive dispatch (PERF iter 7): resolved once at
+    /// construction, carried by value so steppers and clones inherit it.
+    kernel: Kernel,
 }
 
 impl Engine {
     /// Validate `model` (per-layer shapes AND layer-to-layer geometry
-    /// chaining) and prepare the transposed weight banks.
+    /// chaining) and prepare the transposed weight banks.  The bitwise
+    /// kernel is resolved here from `BCNN_KERNEL` (auto-detect when
+    /// unset); use [`Engine::with_kernel`] to pin one explicitly.
     pub fn new(model: BcnnModel) -> std::result::Result<Self, ModelError> {
+        let kernel = Kernel::from_env().map_err(ModelError::Kernel)?;
+        Self::with_kernel(model, kernel)
+    }
+
+    /// [`Engine::new`] with an explicit kernel — lets tests and benches
+    /// hold scalar and SIMD engines over the same model side by side.
+    pub fn with_kernel(
+        model: BcnnModel,
+        kernel: Kernel,
+    ) -> std::result::Result<Self, ModelError> {
         let mut hw = model.input_hw;
         let mut c = model.input_channels;
         for (i, layer) in model.layers.iter().enumerate() {
@@ -209,11 +243,16 @@ impl Engine {
         }
         let fp_weights_t = model.layers.iter().map(prepare_fp).collect();
         let bin_prepared = model.layers.iter().map(prepare_bin).collect();
-        Ok(Self { model, fp_weights_t, bin_prepared })
+        Ok(Self { model, fp_weights_t, bin_prepared, kernel })
     }
 
     pub fn model(&self) -> &BcnnModel {
         &self.model
+    }
+
+    /// The bitwise kernel this engine dispatches to.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     /// Classify one image (`hw*hw*input_channels` NHWC int values in the
@@ -263,6 +302,7 @@ impl Engine {
                 ActRef::Bits(&*bits_in)
             };
             let out = step_layer(
+                self.kernel,
                 layer,
                 self.fp_weights_t[i].as_slice(),
                 self.bin_prepared[i].as_ref(),
@@ -322,6 +362,7 @@ impl Engine {
             bail!("layer index {index} out of range ({} layers)", self.model.layers.len());
         };
         run_prepared_layer(
+            self.kernel,
             layer,
             self.fp_weights_t[index].as_slice(),
             self.bin_prepared[index].as_ref(),
@@ -341,7 +382,7 @@ impl Engine {
         }
         let fp_t = prepare_fp(layer);
         let bin = prepare_bin(layer);
-        run_prepared_layer(layer, &fp_t, bin.as_ref(), input, &mut Scratch::default())
+        run_prepared_layer(self.kernel, layer, &fp_t, bin.as_ref(), input, &mut Scratch::default())
     }
 }
 
@@ -673,6 +714,7 @@ impl LayerStepper<'_> {
     /// for the next image.
     fn flush_fc(&mut self, emit: &mut dyn FnMut(StepperOut)) {
         let (lo, hi) = (self.lo, self.hi);
+        let kernel = self.engine.kernel;
         let layer = &self.engine.model.layers[self.index];
         let StepperState::Fc { fc_row } = &mut self.state else {
             unreachable!("flush_fc on a conv stepper");
@@ -680,12 +722,12 @@ impl LayerStepper<'_> {
         match layer {
             LayerWeights::BinFc { out_f, .. } => {
                 let mut out = vec![0u64; words_for(*out_f)];
-                bin_fc_select(layer, &fc_row[..], lo, hi, |n| set_bit(&mut out, n, true));
+                bin_fc_select(kernel, layer, &fc_row[..], lo, hi, |n| set_bit(&mut out, n, true));
                 emit(StepperOut::Row(out));
             }
             LayerWeights::BinFcOut { .. } => {
                 let mut scores = Vec::with_capacity(hi - lo);
-                bin_fc_out_scores(layer, &fc_row[..], lo, hi, &mut scores);
+                bin_fc_out_scores(kernel, layer, &fc_row[..], lo, hi, &mut scores);
                 emit(StepperOut::Scores(scores));
             }
             _ => unreachable!("Fc state only built for FC layers"),
@@ -729,7 +771,8 @@ impl LayerStepper<'_> {
                     .as_ref()
                     .expect("BinConv layer has a prepared bank");
                 let rows = window(ring, y, in_hw);
-                bin_conv_row(rows, in_hw, in_c, out_c, lo, hi, prep, mism, conv_row);
+                let kernel = self.engine.kernel;
+                bin_conv_row(kernel, rows, in_hw, in_c, out_c, lo, hi, prep, mism, conv_row);
                 finish_conv_row(
                     conv_row, pending, pooled, *pool, y, in_hw, out_c, lo, hi, thresholds, emit,
                 );
@@ -758,6 +801,7 @@ fn window<T>(ring: &[Vec<T>; 3], y: usize, hw: usize) -> [Option<&[T]>; 3] {
 /// the lanes the full kernel does.
 #[allow(clippy::too_many_arguments)]
 fn bin_conv_row(
+    kernel: Kernel,
     rows: [Option<&[u64]>; 3],
     hw: usize,
     in_c: usize,
@@ -776,12 +820,12 @@ fn bin_conv_row(
 
     if !interior_ok {
         for x in 0..hw {
-            bin_row_border(&rows, hw, prep, out_c, lo, hi, x, mism);
+            bin_row_border(kernel, &rows, hw, prep, out_c, lo, hi, x, mism);
             store_row_pixel(out_row, mism, cnum, plen, x);
         }
         return;
     }
-    bin_row_border(&rows, hw, prep, out_c, lo, hi, 0, mism);
+    bin_row_border(kernel, &rows, hw, prep, out_c, lo, hi, 0, mism);
     store_row_pixel(out_row, mism, cnum, plen, 0);
     for x in 1..hw - 1 {
         // all 9 taps in bounds: constant-trip, branch-free tap loop
@@ -790,6 +834,7 @@ fn bin_conv_row(
             let row = rows[t / 3].unwrap();
             let sx = x + t % 3 - 1;
             accumulate_tap_range(
+                kernel,
                 &row[sx * cw..(sx + 1) * cw],
                 &prep.tap_weights[t * lane..(t + 1) * lane],
                 out_c,
@@ -800,7 +845,7 @@ fn bin_conv_row(
         }
         store_row_pixel(out_row, mism, cnum, plen, x);
     }
-    bin_row_border(&rows, hw, prep, out_c, lo, hi, hw - 1, mism);
+    bin_row_border(kernel, &rows, hw, prep, out_c, lo, hi, hw - 1, mism);
     store_row_pixel(out_row, mism, cnum, plen, hw - 1);
 }
 
@@ -808,6 +853,7 @@ fn bin_conv_row(
 /// precomputed weight popcount, exactly like [`border_pixel`].
 #[allow(clippy::too_many_arguments)]
 fn bin_row_border(
+    kernel: Kernel,
     rows: &[Option<&[u64]>; 3],
     hw: usize,
     prep: &PreparedBin,
@@ -826,6 +872,7 @@ fn bin_row_border(
             Some(row) if sx >= 0 && (sx as usize) < hw => {
                 let sx = sx as usize;
                 accumulate_tap_range(
+                    kernel,
                     &row[sx * cw..(sx + 1) * cw],
                     &prep.tap_weights[t * lane..(t + 1) * lane],
                     out_c,
@@ -1131,6 +1178,7 @@ struct StepBufs<'a> {
 }
 
 fn step_layer(
+    kernel: Kernel,
     layer: &LayerWeights,
     fp_t: &[i32],
     bin: Option<&PreparedBin>,
@@ -1167,19 +1215,19 @@ fn step_layer(
             let Some(prep) = bin else {
                 bail!("BinConv layer without a prepared tap-major bank");
             };
-            let out_hw = bin_conv3x3_tap_major(fmap, prep, *in_c, *out_c, *pool, acc, mism);
+            let out_hw = bin_conv3x3_tap_major(kernel, fmap, prep, *in_c, *out_c, *pool, acc, mism);
             threshold_into(acc, out_hw, *out_c, thresholds, bits_out);
             Ok(StepOut::Act)
         }
         LayerWeights::BinFc { in_f, out_f, .. } => {
             flatten_act(&input, *in_f, fc_row)?;
             bits_out.reset(1, *out_f);
-            bin_fc_select(layer, &fc_row[..], 0, *out_f, |n| bits_out.set(0, 0, n, true));
+            bin_fc_select(kernel, layer, &fc_row[..], 0, *out_f, |n| bits_out.set(0, 0, n, true));
             Ok(StepOut::Act)
         }
         LayerWeights::BinFcOut { in_f, out_f, .. } => {
             flatten_act(&input, *in_f, fc_row)?;
-            bin_fc_out_scores(layer, &fc_row[..], 0, *out_f, scores);
+            bin_fc_out_scores(kernel, layer, &fc_row[..], 0, *out_f, scores);
             Ok(StepOut::Scores)
         }
     }
@@ -1192,6 +1240,7 @@ fn step_layer(
 /// threshold (eq. 8).  Features are computed independently, so a
 /// partition's selections equal the full range's for every `n` it owns.
 fn bin_fc_select(
+    kernel: Kernel,
     layer: &LayerWeights,
     fc_row: &[u64],
     lo: usize,
@@ -1203,7 +1252,7 @@ fn bin_fc_select(
     };
     for n in lo..hi {
         let w = layer_weight_row(layer, n, *words_per_row);
-        let matches = *in_f as i32 - xor_popcount(fc_row, w) as i32;
+        let matches = *in_f as i32 - kernel.xor_popcount(fc_row, w) as i32;
         if matches >= thresholds[n] {
             on_set(n);
         }
@@ -1214,6 +1263,7 @@ fn bin_fc_select(
 /// same single-implementation discipline as [`bin_fc_select`].  `scores`
 /// receives classes `[lo, hi)` in order; partitions concatenate.
 fn bin_fc_out_scores(
+    kernel: Kernel,
     layer: &LayerWeights,
     fc_row: &[u64],
     lo: usize,
@@ -1226,13 +1276,14 @@ fn bin_fc_out_scores(
     scores.clear();
     for n in lo..hi {
         let w = layer_weight_row(layer, n, *words_per_row);
-        let matches = *in_f as i32 - xor_popcount(fc_row, w) as i32;
+        let matches = *in_f as i32 - kernel.xor_popcount(fc_row, w) as i32;
         scores.push(matches as f32 * scale[n] + bias[n]);
     }
 }
 
 /// Owned-output wrapper around [`step_layer`] for the layer-at-a-time API.
 fn run_prepared_layer(
+    kernel: Kernel,
     layer: &LayerWeights,
     fp_t: &[i32],
     bin: Option<&PreparedBin>,
@@ -1246,6 +1297,7 @@ fn run_prepared_layer(
     let mut scores = Vec::new();
     let Scratch { acc, mismatch, pix, bits_out, fc_row, .. } = scratch;
     let out = step_layer(
+        kernel,
         layer,
         fp_t,
         bin,
@@ -1351,7 +1403,9 @@ fn fp_conv3x3_tap_major(
 
 /// Hidden binary conv, tap-major and gather-free (see module docs).
 /// Returns the output resolution (`hw/2` when `pool` is fused).
+#[allow(clippy::too_many_arguments)]
 fn bin_conv3x3_tap_major(
+    kernel: Kernel,
     fmap: &BitFmap,
     prep: &PreparedBin,
     in_c: usize,
@@ -1373,19 +1427,19 @@ fn bin_conv3x3_tap_major(
     for y in 0..hw {
         if hw < 3 || y == 0 || y + 1 == hw {
             for x in 0..hw {
-                border_pixel(fmap, prep, out_c, y, x, mism);
+                border_pixel(kernel, fmap, prep, out_c, y, x, mism);
                 store_pixel(acc, mism, cnum, pool, out_hw, out_c, y, x);
             }
             continue;
         }
         // interior row: only x = 0 and x = hw-1 need border handling
-        border_pixel(fmap, prep, out_c, y, 0, mism);
+        border_pixel(kernel, fmap, prep, out_c, y, 0, mism);
         store_pixel(acc, mism, cnum, pool, out_hw, out_c, y, 0);
         for x in 1..hw - 1 {
-            interior_pixel(fmap, tw, lane, out_c, y, x, mism);
+            interior_pixel(kernel, fmap, tw, lane, out_c, y, x, mism);
             store_pixel(acc, mism, cnum, pool, out_hw, out_c, y, x);
         }
-        border_pixel(fmap, prep, out_c, y, hw - 1, mism);
+        border_pixel(kernel, fmap, prep, out_c, y, hw - 1, mism);
         store_pixel(acc, mism, cnum, pool, out_hw, out_c, y, hw - 1);
     }
     out_hw
@@ -1394,16 +1448,18 @@ fn bin_conv3x3_tap_major(
 /// One tap: XOR the pixel's packed channel words against the tap's bank
 /// slice, accumulating mismatches per filter lane.
 #[inline(always)]
-fn accumulate_tap(src: &[u64], tap_bank: &[u64], out_c: usize, mism: &mut [u64]) {
-    accumulate_tap_range(src, tap_bank, out_c, 0, out_c, mism);
+fn accumulate_tap(kernel: Kernel, src: &[u64], tap_bank: &[u64], out_c: usize, mism: &mut [u64]) {
+    accumulate_tap_range(kernel, src, tap_bank, out_c, 0, out_c, mism);
 }
 
 /// [`accumulate_tap`] restricted to the filter lanes `[lo, hi)` of the
 /// tap bank (`mism` holds `hi - lo` lanes) — identical arithmetic per
 /// filter, so a partition's counts equal the full kernel's for every
-/// channel it owns.
+/// channel it owns.  The bank slice is contiguous and unit-stride for
+/// any `[lo, hi)`, so partitioned lanes ride the same wide kernel.
 #[inline(always)]
 fn accumulate_tap_range(
+    kernel: Kernel,
     src: &[u64],
     tap_bank: &[u64],
     out_c: usize,
@@ -1412,13 +1468,15 @@ fn accumulate_tap_range(
     mism: &mut [u64],
 ) {
     for (w, &p) in src.iter().enumerate() {
-        xor_popcount_lanes(p, &tap_bank[w * out_c + lo..w * out_c + hi], mism);
+        kernel.xor_popcount_lanes(p, &tap_bank[w * out_c + lo..w * out_c + hi], mism);
     }
 }
 
 /// All 9 taps in bounds: constant-trip, branch-free tap loop.
+#[allow(clippy::too_many_arguments)]
 #[inline(always)]
 fn interior_pixel(
+    kernel: Kernel,
     fmap: &BitFmap,
     tw: &[u64],
     lane: usize,
@@ -1431,7 +1489,7 @@ fn interior_pixel(
     for t in 0..9usize {
         // caller guarantees 1 <= y, x <= hw-2, so no bounds checks
         let src = fmap.pixel(y + t / 3 - 1, x + t % 3 - 1);
-        accumulate_tap(src, &tw[t * lane..(t + 1) * lane], out_c, mism);
+        accumulate_tap(kernel, src, &tw[t * lane..(t + 1) * lane], out_c, mism);
     }
 }
 
@@ -1439,6 +1497,7 @@ fn interior_pixel(
 /// popcount (zero activation bits = all -1 padding, paper semantics).
 #[inline(always)]
 fn border_pixel(
+    kernel: Kernel,
     fmap: &BitFmap,
     prep: &PreparedBin,
     out_c: usize,
@@ -1458,6 +1517,7 @@ fn border_pixel(
             }
         } else {
             accumulate_tap(
+                kernel,
                 fmap.pixel(sy as usize, sx as usize),
                 &prep.tap_weights[t * lane..(t + 1) * lane],
                 out_c,

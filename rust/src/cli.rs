@@ -11,6 +11,12 @@
 //!   deploy / undeploy / rollback / models — admin plane against a
 //!                  running server (zero-downtime hot-swap by name)
 //!   selftest     — engine vs PJRT vs FPGA-sim cross-check on artifacts
+//!   features     — detected CPU features + chosen bitwise kernel
+//!
+//! `--kernel scalar|avx2|avx512|auto` (any command) forces the bitwise
+//! SIMD dispatch: it is validated up front (typed error when the ISA is
+//! missing) and exported as `BCNN_KERNEL`, so every engine built later —
+//! including registry pools and pipeline stage threads — inherits it.
 
 use std::collections::BTreeMap;
 use std::net::TcpListener;
@@ -33,6 +39,7 @@ use crate::serving::{
 };
 use crate::tables;
 use crate::util::json::Json;
+use crate::util::kernels::{Kernel, KernelKind, KERNEL_ENV};
 
 /// Parsed arguments: positional subcommand + `--key value` / `--flag`.
 #[derive(Debug, Default)]
@@ -165,12 +172,22 @@ COMMANDS
   selftest [--artifacts DIR]
       Cross-check native engine vs PJRT executable vs FPGA simulator on
       the shipped artifacts (exit non-zero on mismatch).
+  features
+      Print detected CPU features, per-tier kernel availability, and the
+      bitwise kernel the engine would dispatch to.
   help
+
+GLOBAL OPTIONS
+  --kernel scalar|avx2|avx512|auto
+      Force the bitwise SIMD kernel (default: auto-detect, widest ISA
+      wins).  Errors out if the requested ISA is unavailable.  Equivalent
+      to setting BCNN_KERNEL.
 ";
 
 /// Entry point used by `main.rs`.
 pub fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
+    apply_kernel_option(&args)?;
     match args.command.as_str() {
         "tables" => cmd_tables(&args),
         "simulate" => cmd_simulate(&args),
@@ -183,6 +200,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "rollback" => cmd_admin_name_op(&args, "rollback"),
         "models" => cmd_models(&args),
         "selftest" => cmd_selftest(&args),
+        "features" => cmd_features(),
         "help" | "" => {
             print!("{USAGE}");
             Ok(())
@@ -193,6 +211,53 @@ pub fn run(argv: &[String]) -> Result<()> {
 
 fn artifacts_dir(args: &Args) -> Result<PathBuf> {
     Ok(PathBuf::from(args.opt_or("artifacts", "artifacts")?))
+}
+
+/// Resolve `--kernel` (typed error for unknown/unavailable tiers) and
+/// export it as `BCNN_KERNEL`, making the env var the single source of
+/// truth: every `Engine::new` — worker shards, pipeline stage threads,
+/// hot-swapped registry pools — picks the forced tier up from there.
+fn apply_kernel_option(args: &Args) -> Result<()> {
+    let Some(spec) = args.value_of("kernel")? else {
+        return Ok(());
+    };
+    let kernel = Kernel::from_spec(Some(spec)).map_err(|e| anyhow!("--kernel {spec}: {e}"))?;
+    std::env::set_var(KERNEL_ENV, kernel.name());
+    Ok(())
+}
+
+/// `repro features`: the dispatch observability surface — what the CPU
+/// reports, which kernel tiers can run, and which one auto-detect picks.
+fn cmd_features() -> Result<()> {
+    println!("cpu features (x86_64 SIMD dispatch inputs):");
+    #[cfg(target_arch = "x86_64")]
+    {
+        for (name, have) in [
+            ("popcnt", is_x86_feature_detected!("popcnt")),
+            ("avx2", is_x86_feature_detected!("avx2")),
+            ("avx512f", is_x86_feature_detected!("avx512f")),
+            ("avx512bw", is_x86_feature_detected!("avx512bw")),
+            ("avx512vpopcntdq", is_x86_feature_detected!("avx512vpopcntdq")),
+        ] {
+            println!("  {name:<16} {}", if have { "yes" } else { "no" });
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    println!("  (non-x86_64 host: scalar kernel only)");
+    println!("kernel tiers:");
+    for kind in KernelKind::ALL {
+        match kind.unavailable_reason() {
+            None => println!("  {:<8} available", kind.name()),
+            Some(reason) => println!("  {:<8} unavailable ({reason})", kind.name()),
+        }
+    }
+    match std::env::var(KERNEL_ENV).ok().filter(|v| !v.is_empty()) {
+        Some(v) => println!("{KERNEL_ENV}={v}"),
+        None => println!("{KERNEL_ENV} unset (auto-detect)"),
+    }
+    let chosen = Kernel::from_env().map_err(|e| anyhow!("{e}"))?;
+    println!("selected kernel: {}", chosen.name());
+    Ok(())
 }
 
 fn load_bcnn(args: &Args, config: &str) -> Result<BcnnModel> {
@@ -642,6 +707,15 @@ mod tests {
         let args = parse(&["serve", "--workers", "--port", "9000"]);
         assert!(args.usize_or("workers", 1).is_err());
         assert_eq!(args.value_of("port").unwrap(), Some("9000"));
+    }
+
+    #[test]
+    fn kernel_option_rejects_unknown_and_bare() {
+        // unknown tier and a bare `--kernel` are usage errors surfaced
+        // before any subcommand runs (and before the env var is touched)
+        assert!(apply_kernel_option(&parse(&["infer", "--kernel", "sse9"])).is_err());
+        assert!(apply_kernel_option(&parse(&["infer", "--kernel"])).is_err());
+        assert!(apply_kernel_option(&parse(&["infer"])).is_ok());
     }
 
     #[test]

@@ -66,6 +66,16 @@ pub trait Backend {
     fn stage_stats(&self) -> Vec<crate::pipeline::stage::StageSnapshot> {
         Vec::new()
     }
+
+    /// Name of the bitwise SIMD kernel the replica's engine dispatches to
+    /// (`"scalar"`/`"avx2"`/`"avx512"`); empty for backends without a
+    /// host engine hot path.  Folded into the shard [`Metrics`] so
+    /// `STATS`/bench JSON record which datapath produced the numbers.
+    ///
+    /// [`Metrics`]: crate::coordinator::Metrics
+    fn kernel(&self) -> &'static str {
+        ""
+    }
 }
 
 /// Per-worker backend factory: the sharded coordinator calls it once on
@@ -150,6 +160,10 @@ impl Backend for NativeBackend {
             scores
         };
         Ok(BatchResult { scores, modeled_device_time: None })
+    }
+
+    fn kernel(&self) -> &'static str {
+        self.engine.kernel().name()
     }
 }
 
@@ -247,6 +261,10 @@ impl Backend for FpgaSimBackend {
         let modeled = Duration::from_secs_f64(report.total_cycles as f64 / self.config.freq_hz);
         Ok(BatchResult { scores: report.scores, modeled_device_time: Some(modeled) })
     }
+
+    fn kernel(&self) -> &'static str {
+        self.engine.kernel().name()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -290,5 +308,9 @@ impl Backend for GpuSimBackend {
         let modeled =
             Duration::from_secs_f64(self.model.batch_latency_s(self.kernel, images.len().max(1)));
         Ok(BatchResult { scores, modeled_device_time: Some(modeled) })
+    }
+
+    fn kernel(&self) -> &'static str {
+        self.engine.kernel().name()
     }
 }

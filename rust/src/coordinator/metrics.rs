@@ -105,6 +105,11 @@ pub struct Metrics {
     /// replace their own snapshot per batch; [`Metrics::merge`] sums
     /// stage-wise across replicas.
     pub stages: Vec<StageSnapshot>,
+    /// Name of the bitwise SIMD kernel the backend's engine dispatched to
+    /// (`"scalar"`/`"avx2"`/`"avx512"`; empty when the backend has no host
+    /// engine hot path).  Recorded so every `STATS`/bench snapshot says
+    /// which datapath produced its numbers.
+    pub kernel: String,
 }
 
 impl Metrics {
@@ -164,6 +169,12 @@ impl Metrics {
             // differing shapes (mixed backends in one fold): keep ours —
             // per-stage sums across different pipelines are meaningless
         }
+        if self.kernel.is_empty() {
+            self.kernel = other.kernel.clone();
+        } else if !other.kernel.is_empty() && self.kernel != other.kernel {
+            // heterogeneous shards (e.g. one forced scalar): make it visible
+            self.kernel = "mixed".into();
+        }
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -215,6 +226,9 @@ impl Metrics {
         m.insert("latency_p99_us".into(), us(self.p99()));
         m.insert("latency_max_us".into(), us(self.latency.max()));
         m.insert("modeled_busy_us".into(), us(self.modeled_busy));
+        if !self.kernel.is_empty() {
+            m.insert("kernel".into(), Json::Str(self.kernel.clone()));
+        }
         if !self.stages.is_empty() {
             let stages: Vec<Json> = self
                 .stages
@@ -339,6 +353,30 @@ mod tests {
         assert!(stages[1].get("busy_us").unwrap().as_f64().unwrap() > 0.0);
         // stage-less metrics omit the key entirely
         assert!(Metrics::new().to_json().get("stages").is_err());
+    }
+
+    #[test]
+    fn kernel_name_merges_and_serializes() {
+        // empty kernel: key omitted entirely
+        assert!(Metrics::new().to_json().get("kernel").is_err());
+        let mut total = Metrics::new();
+        let mut a = Metrics::new();
+        a.kernel = "avx2".into();
+        total.merge(&a);
+        assert_eq!(total.kernel, "avx2");
+        // same kernel across shards stays put
+        total.merge(&a);
+        assert_eq!(total.kernel, "avx2");
+        // a kernel-less shard (e.g. pjrt) does not erase it
+        total.merge(&Metrics::new());
+        assert_eq!(total.kernel, "avx2");
+        // heterogeneous shards are flagged, not silently picked
+        let mut b = Metrics::new();
+        b.kernel = "scalar".into();
+        total.merge(&b);
+        assert_eq!(total.kernel, "mixed");
+        let j = total.to_json();
+        assert_eq!(j.get("kernel").unwrap().as_str().unwrap(), "mixed");
     }
 
     #[test]

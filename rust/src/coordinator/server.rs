@@ -420,11 +420,15 @@ fn shard_loop(
         // add — the counters are running totals) so STATS shows which
         // stage bottlenecks.  Empty for stage-less backends.
         let stage_stats = backend.stage_stats();
+        let kernel = backend.kernel();
         match result {
             Ok(out) => {
                 let mut m = metrics.lock().unwrap();
                 if !stage_stats.is_empty() {
                     m.stages = stage_stats;
+                }
+                if m.kernel.is_empty() && !kernel.is_empty() {
+                    m.kernel = kernel.to_string();
                 }
                 m.record_batch(batch_len, service, out.modeled_device_time);
                 for (req, scores) in batch.into_iter().zip(out.scores) {
@@ -449,6 +453,9 @@ fn shard_loop(
                     let mut m = metrics.lock().unwrap();
                     if !stage_stats.is_empty() {
                         m.stages = stage_stats;
+                    }
+                    if m.kernel.is_empty() && !kernel.is_empty() {
+                        m.kernel = kernel.to_string();
                     }
                     m.record_batch_error(batch_len, service);
                 }

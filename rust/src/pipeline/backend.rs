@@ -92,4 +92,8 @@ impl Backend for PipelineBackend {
     fn stage_stats(&self) -> Vec<StageSnapshot> {
         self.runtime.stage_stats()
     }
+
+    fn kernel(&self) -> &'static str {
+        self.runtime.kernel_name()
+    }
 }

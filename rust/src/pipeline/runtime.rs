@@ -101,6 +101,9 @@ pub struct PipelineRuntime {
     counters: Vec<Arc<StageCounters>>,
     inflight: usize,
     input_len: usize,
+    /// Name of the bitwise SIMD kernel the engine dispatches to, captured
+    /// at spawn (the engine itself moves into the stage threads).
+    kernel: &'static str,
 }
 
 impl PipelineRuntime {
@@ -148,6 +151,7 @@ impl PipelineRuntime {
 
         let inflight = inflight.max(1);
         let input_len = shapes[0].in_hw * shapes[0].in_hw * shapes[0].in_c;
+        let kernel = engine.kernel().name();
         let engine = Arc::new(engine);
         let pending = new_pending();
         let counters: Vec<Arc<StageCounters>> =
@@ -237,6 +241,7 @@ impl PipelineRuntime {
             counters,
             inflight,
             input_len,
+            kernel,
         })
     }
 
@@ -278,6 +283,12 @@ impl PipelineRuntime {
     /// Admission-window depth.
     pub fn inflight(&self) -> usize {
         self.inflight
+    }
+
+    /// Name of the bitwise SIMD kernel every stage lane dispatches to
+    /// (lanes share the spawning engine, so there is exactly one).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel
     }
 
     /// Total threads: every stage's lanes plus the feeder.

@@ -11,6 +11,11 @@
 //! the host analogue of giving that layer more spatial parallelism `P`:
 //! the output channels are split into `L` contiguous partitions, each
 //! computed by its own [`LayerStepper`] lane over the *same* input rows.
+//! Every lane computes its partition with the engine's dispatched bitwise
+//! SIMD kernel (see [`crate::util::kernels`]): the per-tap bank slices a
+//! lane works on are contiguous `[lo, hi)` ranges of the tap-major layout,
+//! so channel partitioning and vectorization compose without any
+//! per-lane re-packing.
 //! The lead lane (lane 0) owns the stage's FIFO endpoints: per input row
 //! it broadcasts the row (an `Arc`, no copies) to the helper lanes,
 //! computes its own partition, then pops exactly one partial result per

@@ -120,11 +120,28 @@ pub fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
 /// For one activation word `p`, accumulate `popcount(p ^ bank[n])` into
 /// `mism[n]` for every filter lane `n` — the vertical (filter-bank-major)
 /// XnorDotProduct step of the tap-major engine.  The weight bank is
-/// unit-stride, so the loop lowers to vpopcntq lanes with no horizontal
+/// unit-stride, so the loop lowers to popcount lanes with no horizontal
 /// reductions; `p` is broadcast.
+///
+/// The `out_c` lanes are walked in chunks of 4 with the trailing partial
+/// chunk handled once at the end, so the hot loop carries no per-word
+/// bounds check; the bank/mismatch length invariant is asserted at the
+/// call boundary instead (`debug_assert!` — callers size both from
+/// `out_c`).
 #[inline]
 pub fn xor_popcount_lanes(p: u64, bank: &[u64], mism: &mut [u64]) {
-    for (m, &w) in mism.iter_mut().zip(bank) {
+    debug_assert_eq!(bank.len(), mism.len(), "bank/mismatch lanes");
+    let n = bank.len().min(mism.len());
+    let (bank, mism) = (&bank[..n], &mut mism[..n]);
+    let mut banks = bank.chunks_exact(4);
+    let mut misms = mism.chunks_exact_mut(4);
+    for (b4, m4) in (&mut banks).zip(&mut misms) {
+        m4[0] += (p ^ b4[0]).count_ones() as u64;
+        m4[1] += (p ^ b4[1]).count_ones() as u64;
+        m4[2] += (p ^ b4[2]).count_ones() as u64;
+        m4[3] += (p ^ b4[3]).count_ones() as u64;
+    }
+    for (m, &w) in misms.into_remainder().iter_mut().zip(banks.remainder()) {
         *m += (p ^ w).count_ones() as u64;
     }
 }
@@ -217,12 +234,15 @@ mod tests {
     #[test]
     fn xor_popcount_lanes_matches_scalar() {
         let mut rng = SplitMix64::new(6);
-        let p = rng.next_u64();
-        let bank: Vec<u64> = (0..9).map(|_| rng.next_u64()).collect();
-        let mut mism = vec![3u64; 9]; // non-zero start: must accumulate
-        xor_popcount_lanes(p, &bank, &mut mism);
-        for (n, &w) in bank.iter().enumerate() {
-            assert_eq!(mism[n], 3 + (p ^ w).count_ones() as u64, "lane {n}");
+        // lane counts exercising the 4-lane chunks and every remainder
+        for lanes in [0usize, 1, 2, 3, 4, 5, 8, 9, 11] {
+            let p = rng.next_u64();
+            let bank: Vec<u64> = (0..lanes).map(|_| rng.next_u64()).collect();
+            let mut mism = vec![3u64; lanes]; // non-zero start: must accumulate
+            xor_popcount_lanes(p, &bank, &mut mism);
+            for (n, &w) in bank.iter().enumerate() {
+                assert_eq!(mism[n], 3 + (p ^ w).count_ones() as u64, "{lanes} lanes, lane {n}");
+            }
         }
     }
 

@@ -1,0 +1,607 @@
+//! Runtime-dispatched SIMD implementations of the two bitwise primitives
+//! that dominate the engine hot path — the host-side analogue of widening
+//! the paper's UF-wide XNOR array + popcount tree (§4, Fig. 5).
+//!
+//! Two primitives, two access patterns:
+//!
+//! * [`Kernel::xor_popcount`] — whole-row XNOR dot product (FC flatten
+//!   dot, `scalar_ref`).  The AVX2 path runs a Harley–Seal carry-save
+//!   adder tree over blocks of 16x256-bit XOR'd vectors so the expensive
+//!   `vpshufb`-LUT popcount fires once per 16 vectors instead of once per
+//!   vector; AVX-512 uses `vpopcntq` directly.
+//! * [`Kernel::xor_popcount_lanes`] — the per-tap bank accumulation of
+//!   the tap-major conv loop: one activation word broadcast against a
+//!   unit-stride bank of filter words, mismatch counts accumulated per
+//!   filter lane.  This is vertical (no horizontal reduction), so both
+//!   wide paths are a straight broadcast-XOR-popcount-add over 4 (AVX2)
+//!   or 8 (AVX-512) lanes per iteration.
+//!
+//! The kernel is chosen once per [`Kernel`] construction via
+//! `is_x86_feature_detected!` (avx512 > avx2 > scalar) and stored as a
+//! `Copy` value, so an `Engine` carries its dispatch with it — tests can
+//! hold a scalar engine and a SIMD engine side by side in one process.
+//! `BCNN_KERNEL=scalar|avx2|avx512` (or `--kernel`) forces a tier, with a
+//! typed [`KernelError`] when the requested ISA is unavailable.  The
+//! scalar path in [`crate::util::bits`] remains the portable fallback and
+//! the bit-exactness oracle.
+//!
+//! AVX-512 intrinsics are additionally gated on the `bcnn_avx512` cfg
+//! emitted by `build.rs` (rustc >= 1.89, where `_mm512_*` stabilised);
+//! on older toolchains the avx512 tier reports itself unavailable instead
+//! of breaking the build.
+
+use std::fmt;
+
+use crate::util::bits;
+
+/// Environment variable that forces the kernel tier (same values as the
+/// CLI `--kernel` flag); empty or `auto` means auto-detect.
+pub const KERNEL_ENV: &str = "BCNN_KERNEL";
+
+/// The ISA tier a [`Kernel`] dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Portable `u64` XOR + `count_ones` loop (`util::bits`), always
+    /// available; the bit-exactness oracle for the wide paths.
+    Scalar,
+    /// 256-bit lanes: `vpshufb` nibble-LUT popcount, Harley–Seal CSA
+    /// tree for whole rows.
+    Avx2,
+    /// 512-bit lanes with the `vpopcntq` instruction
+    /// (`avx512vpopcntdq`); needs rustc >= 1.89.
+    Avx512,
+}
+
+impl KernelKind {
+    /// All tiers, widest last — iteration order for `repro features`
+    /// listings and bench sweeps.
+    pub const ALL: [KernelKind; 3] = [KernelKind::Scalar, KernelKind::Avx2, KernelKind::Avx512];
+
+    /// Stable lowercase name, also the `--kernel` / `BCNN_KERNEL` spec.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Avx512 => "avx512",
+        }
+    }
+
+    /// Parse a `--kernel` / `BCNN_KERNEL` spec (not `auto` — resolve
+    /// that via [`Kernel::from_spec`]).
+    pub fn parse(spec: &str) -> Result<Self, KernelError> {
+        match spec {
+            "scalar" => Ok(KernelKind::Scalar),
+            "avx2" => Ok(KernelKind::Avx2),
+            "avx512" => Ok(KernelKind::Avx512),
+            other => Err(KernelError::Unknown(other.to_string())),
+        }
+    }
+
+    /// Can this tier run here (CPU features and compiler support)?
+    pub fn available(self) -> bool {
+        self.unavailable_reason().is_none()
+    }
+
+    /// `None` when the tier is runnable, otherwise why it is not.
+    pub fn unavailable_reason(self) -> Option<&'static str> {
+        match self {
+            KernelKind::Scalar => None,
+            KernelKind::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    if is_x86_feature_detected!("avx2") {
+                        None
+                    } else {
+                        Some("CPU does not report avx2")
+                    }
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    Some("avx2 requires an x86_64 host")
+                }
+            }
+            KernelKind::Avx512 => {
+                #[cfg(all(target_arch = "x86_64", bcnn_avx512))]
+                {
+                    if !is_x86_feature_detected!("avx512f") {
+                        Some("CPU does not report avx512f")
+                    } else if !is_x86_feature_detected!("avx512vpopcntdq") {
+                        Some("CPU does not report avx512vpopcntdq")
+                    } else {
+                        None
+                    }
+                }
+                #[cfg(all(target_arch = "x86_64", not(bcnn_avx512)))]
+                {
+                    Some("toolchain predates stable AVX-512 intrinsics (rustc < 1.89)")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    Some("avx512 requires an x86_64 host")
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A kernel spec could not be honoured — distinguished from a model
+/// error so callers can report "your host can't do that" precisely.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KernelError {
+    /// The spec names no known tier.
+    Unknown(String),
+    /// The tier exists but cannot run on this host/toolchain.
+    Unavailable {
+        requested: KernelKind,
+        reason: &'static str,
+    },
+}
+
+impl fmt::Display for KernelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KernelError::Unknown(spec) => write!(
+                f,
+                "unknown kernel {spec:?} (expected scalar, avx2, avx512 or auto)"
+            ),
+            KernelError::Unavailable { requested, reason } => {
+                write!(f, "kernel {requested} unavailable: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KernelError {}
+
+/// A resolved dispatch decision.  `Copy` by design: every `Engine` owns
+/// one, so scalar and SIMD engines coexist in-process for A/B tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Kernel {
+    kind: KernelKind,
+}
+
+impl Kernel {
+    /// The portable fallback / oracle.
+    pub fn scalar() -> Self {
+        Kernel {
+            kind: KernelKind::Scalar,
+        }
+    }
+
+    /// Widest tier the host can run: avx512 > avx2 > scalar.
+    pub fn detect() -> Self {
+        for kind in [KernelKind::Avx512, KernelKind::Avx2] {
+            if kind.available() {
+                return Kernel { kind };
+            }
+        }
+        Kernel::scalar()
+    }
+
+    /// Force a specific tier; typed error when the ISA is unavailable.
+    pub fn force(kind: KernelKind) -> Result<Self, KernelError> {
+        match kind.unavailable_reason() {
+            None => Ok(Kernel { kind }),
+            Some(reason) => Err(KernelError::Unavailable {
+                requested: kind,
+                reason,
+            }),
+        }
+    }
+
+    /// Resolve a `--kernel` / `BCNN_KERNEL` spec: absent, empty or
+    /// `auto` auto-detects; anything else forces that tier.
+    pub fn from_spec(spec: Option<&str>) -> Result<Self, KernelError> {
+        match spec {
+            None | Some("") | Some("auto") => Ok(Kernel::detect()),
+            Some(s) => Kernel::force(KernelKind::parse(s)?),
+        }
+    }
+
+    /// [`Kernel::from_spec`] on the [`KERNEL_ENV`] environment variable —
+    /// the resolution `Engine::new` performs.
+    pub fn from_env() -> Result<Self, KernelError> {
+        let spec = std::env::var(KERNEL_ENV).ok();
+        Kernel::from_spec(spec.as_deref())
+    }
+
+    pub fn kind(self) -> KernelKind {
+        self.kind
+    }
+
+    pub fn name(self) -> &'static str {
+        self.kind.name()
+    }
+
+    /// Popcount of `a ^ b` over whole rows (mismatch count of the XNOR
+    /// dot product).  Lengths must match; the shorter prefix is used in
+    /// release builds.
+    #[inline]
+    pub fn xor_popcount(self, a: &[u64], b: &[u64]) -> u32 {
+        debug_assert_eq!(a.len(), b.len(), "xor_popcount row lengths");
+        match self.kind {
+            KernelKind::Scalar => bits::xor_popcount(a, b),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `force`/`detect` admit Avx2 only when the CPU
+            // reports avx2 support.
+            KernelKind::Avx2 => unsafe { avx2::xor_popcount(a, b) },
+            #[cfg(all(target_arch = "x86_64", bcnn_avx512))]
+            // SAFETY: Avx512 is only admitted when avx512f and
+            // avx512vpopcntdq are both detected.
+            KernelKind::Avx512 => unsafe { avx512::xor_popcount(a, b) },
+            #[cfg(not(all(target_arch = "x86_64", bcnn_avx512)))]
+            _ => bits::xor_popcount(a, b),
+        }
+    }
+
+    /// For one activation word `p`, accumulate `popcount(p ^ bank[n])`
+    /// into `mism[n]` for every filter lane `n` — the per-tap bank step
+    /// of the tap-major conv loop.  Lengths must match; the shorter
+    /// prefix is used in release builds.
+    #[inline]
+    pub fn xor_popcount_lanes(self, p: u64, bank: &[u64], mism: &mut [u64]) {
+        debug_assert_eq!(bank.len(), mism.len(), "bank/mismatch lanes");
+        match self.kind {
+            KernelKind::Scalar => bits::xor_popcount_lanes(p, bank, mism),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: as in `xor_popcount`.
+            KernelKind::Avx2 => unsafe { avx2::xor_popcount_lanes(p, bank, mism) },
+            #[cfg(all(target_arch = "x86_64", bcnn_avx512))]
+            // SAFETY: as in `xor_popcount`.
+            KernelKind::Avx512 => unsafe { avx512::xor_popcount_lanes(p, bank, mism) },
+            #[cfg(not(all(target_arch = "x86_64", bcnn_avx512)))]
+            _ => bits::xor_popcount_lanes(p, bank, mism),
+        }
+    }
+}
+
+impl fmt::Display for Kernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.kind.fmt(f)
+    }
+}
+
+/// 256-bit paths.  Every function is `#[target_feature(enable = "avx2")]`
+/// and must only be reached through [`Kernel`], which guards on runtime
+/// detection.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Per-64-bit-lane popcount via Mula's `vpshufb` nibble LUT: table
+    /// lookup per nibble gives per-byte counts, then `vpsadbw` against
+    /// zero folds the 8 bytes of each 64-bit lane into its low word.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt_epi64(v: __m256i) -> __m256i {
+        #[rustfmt::skip]
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let nib = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, nib);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), nib);
+        let bytes = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(bytes, _mm256_setzero_si256())
+    }
+
+    /// Carry-save adder: returns `(carry, sum)` of three bit-vectors —
+    /// one level of the Harley–Seal tree, the same full-adder cell the
+    /// paper's popcount tree is built from.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn csa(a: __m256i, b: __m256i, c: __m256i) -> (__m256i, __m256i) {
+        let u = _mm256_xor_si256(a, b);
+        let h = _mm256_or_si256(_mm256_and_si256(a, b), _mm256_and_si256(u, c));
+        let l = _mm256_xor_si256(u, c);
+        (h, l)
+    }
+
+    /// Sum the four 64-bit lanes of `v`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi64(v: __m256i) -> u64 {
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+        lanes[0]
+            .wrapping_add(lanes[1])
+            .wrapping_add(lanes[2])
+            .wrapping_add(lanes[3])
+    }
+
+    /// XOR of the 4-word vectors at word offset `j` of two rows.
+    /// Unaligned loads: rows are plain `Vec<u64>` slices.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn xor_at(a: *const u64, b: *const u64, j: usize) -> __m256i {
+        _mm256_xor_si256(
+            _mm256_loadu_si256(a.add(j) as *const __m256i),
+            _mm256_loadu_si256(b.add(j) as *const __m256i),
+        )
+    }
+
+    /// Whole-row XOR popcount: Harley–Seal carry-save tree over blocks
+    /// of 16 vectors (64 words), so the LUT popcount runs once per block
+    /// on the `sixteens` counter instead of once per vector; then a
+    /// plain 4-word vector loop and a scalar word tail.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports avx2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
+        let n = a.len().min(b.len());
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+
+        let mut total = _mm256_setzero_si256();
+        let mut ones = _mm256_setzero_si256();
+        let mut twos = _mm256_setzero_si256();
+        let mut fours = _mm256_setzero_si256();
+        let mut eights = _mm256_setzero_si256();
+
+        let mut i = 0usize;
+        while i + 64 <= n {
+            let (twos_a, o1) = csa(ones, xor_at(ap, bp, i), xor_at(ap, bp, i + 4));
+            let (twos_b, o2) = csa(o1, xor_at(ap, bp, i + 8), xor_at(ap, bp, i + 12));
+            let (fours_a, t1) = csa(twos, twos_a, twos_b);
+            let (twos_c, o3) = csa(o2, xor_at(ap, bp, i + 16), xor_at(ap, bp, i + 20));
+            let (twos_d, o4) = csa(o3, xor_at(ap, bp, i + 24), xor_at(ap, bp, i + 28));
+            let (fours_b, t2) = csa(t1, twos_c, twos_d);
+            let (eights_a, f1) = csa(fours, fours_a, fours_b);
+            let (twos_e, o5) = csa(o4, xor_at(ap, bp, i + 32), xor_at(ap, bp, i + 36));
+            let (twos_f, o6) = csa(o5, xor_at(ap, bp, i + 40), xor_at(ap, bp, i + 44));
+            let (fours_c, t3) = csa(t2, twos_e, twos_f);
+            let (twos_g, o7) = csa(o6, xor_at(ap, bp, i + 48), xor_at(ap, bp, i + 52));
+            let (twos_h, o8) = csa(o7, xor_at(ap, bp, i + 56), xor_at(ap, bp, i + 60));
+            let (fours_d, t4) = csa(t3, twos_g, twos_h);
+            let (eights_b, f2) = csa(f1, fours_c, fours_d);
+            let (sixteens, e) = csa(eights, eights_a, eights_b);
+            ones = o8;
+            twos = t4;
+            fours = f2;
+            eights = e;
+            total = _mm256_add_epi64(total, popcnt_epi64(sixteens));
+            i += 64;
+        }
+
+        let mut count = hsum_epi64(total) * 16
+            + hsum_epi64(popcnt_epi64(eights)) * 8
+            + hsum_epi64(popcnt_epi64(fours)) * 4
+            + hsum_epi64(popcnt_epi64(twos)) * 2
+            + hsum_epi64(popcnt_epi64(ones));
+        while i + 4 <= n {
+            count += hsum_epi64(popcnt_epi64(xor_at(ap, bp, i)));
+            i += 4;
+        }
+        while i < n {
+            count += (a[i] ^ b[i]).count_ones() as u64;
+            i += 1;
+        }
+        count as u32
+    }
+
+    /// Broadcast `p` against the bank, 4 filter lanes per iteration,
+    /// accumulating 64-bit mismatch counters in place.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports avx2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_popcount_lanes(p: u64, bank: &[u64], mism: &mut [u64]) {
+        let n = bank.len().min(mism.len());
+        let pv = _mm256_set1_epi64x(p as i64);
+        let bp = bank.as_ptr();
+        let mp = mism.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let w = _mm256_loadu_si256(bp.add(i) as *const __m256i);
+            let m = _mm256_loadu_si256(mp.add(i) as *const __m256i);
+            let c = popcnt_epi64(_mm256_xor_si256(w, pv));
+            _mm256_storeu_si256(mp.add(i) as *mut __m256i, _mm256_add_epi64(m, c));
+            i += 4;
+        }
+        while i < n {
+            *mism.get_unchecked_mut(i) += (p ^ *bank.get_unchecked(i)).count_ones() as u64;
+            i += 1;
+        }
+    }
+}
+
+/// 512-bit paths using the native `vpopcntq` instruction; gated on the
+/// `bcnn_avx512` cfg from `build.rs` (rustc >= 1.89) on top of runtime
+/// detection of avx512f + avx512vpopcntdq.
+#[cfg(all(target_arch = "x86_64", bcnn_avx512))]
+mod avx512 {
+    use std::arch::x86_64::*;
+
+    /// Whole-row XOR popcount, 8 words per iteration.  `vpopcntq` does
+    /// the counting directly, so no CSA tree is needed: the pipeline is
+    /// load-load-xor-popcnt-add.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports avx512f and avx512vpopcntdq.
+    #[target_feature(enable = "avx512f,avx512vpopcntdq")]
+    pub unsafe fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
+        let n = a.len().min(b.len());
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc = _mm512_setzero_si512();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let x = _mm512_xor_si512(
+                _mm512_loadu_si512(ap.add(i) as *const _),
+                _mm512_loadu_si512(bp.add(i) as *const _),
+            );
+            acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(x));
+            i += 8;
+        }
+        let mut count = _mm512_reduce_add_epi64(acc) as u64;
+        while i < n {
+            count += (a[i] ^ b[i]).count_ones() as u64;
+            i += 1;
+        }
+        count as u32
+    }
+
+    /// Broadcast `p` against the bank, 8 filter lanes per iteration.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports avx512f and avx512vpopcntdq.
+    #[target_feature(enable = "avx512f,avx512vpopcntdq")]
+    pub unsafe fn xor_popcount_lanes(p: u64, bank: &[u64], mism: &mut [u64]) {
+        let n = bank.len().min(mism.len());
+        let pv = _mm512_set1_epi64(p as i64);
+        let bp = bank.as_ptr();
+        let mp = mism.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let w = _mm512_loadu_si512(bp.add(i) as *const _);
+            let m = _mm512_loadu_si512(mp.add(i) as *const _);
+            let c = _mm512_popcnt_epi64(_mm512_xor_si512(w, pv));
+            _mm512_storeu_si512(mp.add(i) as *mut _, _mm512_add_epi64(m, c));
+            i += 8;
+        }
+        while i < n {
+            *mism.get_unchecked_mut(i) += (p ^ *bank.get_unchecked(i)).count_ones() as u64;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn available_kernels() -> Vec<Kernel> {
+        KernelKind::ALL
+            .iter()
+            .filter(|k| k.available())
+            .map(|&k| Kernel::force(k).expect("available tier must force"))
+            .collect()
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for kind in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(kind.name()), Ok(kind));
+            assert_eq!(kind.to_string(), kind.name());
+        }
+        match KernelKind::parse("sse9") {
+            Err(KernelError::Unknown(s)) => assert_eq!(s, "sse9"),
+            other => panic!("expected Unknown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn from_spec_auto_and_force() {
+        assert_eq!(Kernel::from_spec(None).unwrap(), Kernel::detect());
+        assert_eq!(Kernel::from_spec(Some("")).unwrap(), Kernel::detect());
+        assert_eq!(Kernel::from_spec(Some("auto")).unwrap(), Kernel::detect());
+        assert_eq!(
+            Kernel::from_spec(Some("scalar")).unwrap().kind(),
+            KernelKind::Scalar
+        );
+        assert!(matches!(
+            Kernel::from_spec(Some("mmx")),
+            Err(KernelError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn force_unavailable_is_typed() {
+        for kind in KernelKind::ALL {
+            match (kind.unavailable_reason(), Kernel::force(kind)) {
+                (None, Ok(k)) => assert_eq!(k.kind(), kind),
+                (Some(reason), Err(KernelError::Unavailable { requested, reason: r })) => {
+                    assert_eq!(requested, kind);
+                    assert_eq!(r, reason);
+                }
+                (avail, got) => panic!("inconsistent force for {kind}: {avail:?} vs {got:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn detect_picks_an_available_kernel() {
+        let k = Kernel::detect();
+        assert!(k.kind().available());
+        // scalar is always a valid floor
+        assert!(KernelKind::Scalar.available());
+    }
+
+    #[test]
+    fn xor_popcount_bit_exact_vs_scalar_across_widths() {
+        let mut rng = SplitMix64::new(0xC0FFEE);
+        let kernels = available_kernels();
+        // widths straddling every path boundary: scalar tail only,
+        // 4-word vector loop, and multiple 64-word Harley–Seal blocks
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 63, 64, 65, 100, 127, 128, 129, 200] {
+            let a: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let want = bits::xor_popcount(&a, &b);
+            for k in &kernels {
+                assert_eq!(k.xor_popcount(&a, &b), want, "kernel {k} width {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn xor_popcount_extremes() {
+        let kernels = available_kernels();
+        for n in [64usize, 65, 130] {
+            let zeros = vec![0u64; n];
+            let ones = vec![u64::MAX; n];
+            for k in &kernels {
+                assert_eq!(k.xor_popcount(&zeros, &ones), (n * 64) as u32, "kernel {k}");
+                assert_eq!(k.xor_popcount(&ones, &ones), 0, "kernel {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn xor_popcount_lanes_bit_exact_vs_scalar_across_widths() {
+        let mut rng = SplitMix64::new(0xBEEF);
+        let kernels = available_kernels();
+        // lane counts off the 4- and 8-lane lattice, incl. below one chunk
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 11, 16, 33, 40, 100, 130] {
+            let p = rng.next_u64();
+            let bank: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let start: Vec<u64> = (0..n).map(|_| rng.below(1000)).collect();
+            let mut want = start.clone();
+            bits::xor_popcount_lanes(p, &bank, &mut want);
+            for k in &kernels {
+                let mut got = start.clone();
+                k.xor_popcount_lanes(p, &bank, &mut got);
+                assert_eq!(got, want, "kernel {k} lanes {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn xor_popcount_lanes_accumulates_repeatedly() {
+        // the conv loop calls this 9x per pixel per word — accumulation
+        // across calls must compose for every tier
+        let mut rng = SplitMix64::new(0xACC);
+        let kernels = available_kernels();
+        let bank: Vec<u64> = (0..13).map(|_| rng.next_u64()).collect();
+        let taps: Vec<u64> = (0..9).map(|_| rng.next_u64()).collect();
+        let mut want = vec![0u64; 13];
+        for &p in &taps {
+            bits::xor_popcount_lanes(p, &bank, &mut want);
+        }
+        for k in &kernels {
+            let mut got = vec![0u64; 13];
+            for &p in &taps {
+                k.xor_popcount_lanes(p, &bank, &mut got);
+            }
+            assert_eq!(got, want, "kernel {k}");
+        }
+    }
+}

@@ -1,9 +1,12 @@
 //! Small self-contained substrates the offline environment forces us to
 //! own: a seeded PRNG (no `rand`), a minimal JSON reader (no `serde_json`),
-//! and bit-string copy helpers shared by the engine and the model loader.
+//! bit-string copy helpers shared by the engine and the model loader, and
+//! the runtime-dispatched SIMD kernels behind the bitwise hot path.
 
 pub mod bits;
 pub mod json;
+pub mod kernels;
 pub mod prng;
 
+pub use kernels::{Kernel, KernelError, KernelKind};
 pub use prng::SplitMix64;

@@ -13,6 +13,7 @@ use repro::coordinator::workload::random_images;
 use repro::fpga::kernel;
 use repro::fpga::timing::LayerParams;
 use repro::model::{BcnnModel, ConvSpec, LayerWeights, NetConfig};
+use repro::util::kernels::{Kernel, KernelKind};
 use repro::util::SplitMix64;
 
 fn load(name: &str) -> BcnnModel {
@@ -156,6 +157,72 @@ fn tap_major_matches_reference_on_random_models() {
                 assert!((a - b).abs() < 1e-3, "case {ci} image {ii}: {a} vs {b}");
             }
         }
+    }
+}
+
+#[test]
+fn simd_kernels_match_scalar_bit_exactly() {
+    // The SIMD dispatch contract: every ISA tier the host can run must
+    // reproduce the scalar kernel's scores EXACTLY (same popcounts, same
+    // integer thresholds — float equality, not tolerance).  Shapes stress
+    // the vector paths: channel counts off the 64-bit word lattice
+    // (partial-word tails), widths straddling the 4-word AVX2 vector and
+    // 64-word Harley–Seal block boundaries, odd hw (border path), pool
+    // on/off, FC widths exercising the flatten dot.
+    let simd: Vec<Kernel> = KernelKind::ALL
+        .iter()
+        .filter(|k| **k != KernelKind::Scalar && k.available())
+        .map(|&k| Kernel::force(k).expect("availability checked"))
+        .collect();
+    if simd.is_empty() {
+        eprintln!("skipping: no SIMD kernel available on this host/toolchain");
+        return;
+    }
+    let cases: &[(usize, &[(usize, bool)], &[usize])] = &[
+        (8, &[(33, false), (65, true)], &[32]),
+        (7, &[(64, false)], &[16]),
+        (9, &[(3, false)], &[]),
+        (12, &[(100, true), (40, true)], &[]),
+        (6, &[(130, true), (96, false)], &[24]),
+        (5, &[(9, false)], &[7]),
+    ];
+    for (ci, &(hw, conv, fc)) in cases.iter().enumerate() {
+        let cfg = custom_cfg(hw, conv, fc);
+        let model = BcnnModel::synthetic(&cfg, 0x51D_0FF + ci as u64);
+        let scalar = Engine::with_kernel(model.clone(), Kernel::scalar()).expect("valid model");
+        let images = random_images(&cfg, 3, 909 + ci as u64);
+        let want: Vec<Vec<f32>> =
+            images.iter().map(|img| scalar.infer(img).unwrap()).collect();
+        for &kernel in &simd {
+            let engine = Engine::with_kernel(model.clone(), kernel).expect("valid model");
+            assert_eq!(engine.kernel().kind(), kernel.kind());
+            let mut scratch = Scratch::default();
+            for (ii, (img, want)) in images.iter().zip(&want).enumerate() {
+                let got = engine.infer_with_scratch(img, &mut scratch).unwrap();
+                assert_eq!(&got, want, "case {ci} image {ii} kernel {kernel}");
+            }
+            // the stage-lane path (partitioned steppers) dispatches the
+            // same kernel: OR-merged partitions must also match scalar
+            let got = infer_via_partitions(&engine, &images[0], 3);
+            assert_eq!(got, want[0], "case {ci} kernel {kernel}: partitioned lanes");
+        }
+    }
+}
+
+#[test]
+fn dispatched_kernel_matches_scalar_end_to_end() {
+    // whatever Engine::new resolves (BCNN_KERNEL env or auto-detect) must
+    // agree exactly with a pinned-scalar engine on a real config
+    let model = load("small");
+    let dispatched = Engine::new(model.clone()).expect("valid model");
+    let scalar = Engine::with_kernel(model.clone(), Kernel::scalar()).expect("valid model");
+    for img in &random_images(&model.config(), 4, 31) {
+        assert_eq!(
+            dispatched.infer(img).unwrap(),
+            scalar.infer(img).unwrap(),
+            "dispatched kernel {} diverges from scalar",
+            dispatched.kernel()
+        );
     }
 }
 
