@@ -1,0 +1,274 @@
+//! Chaos soak — the supervision layer's acceptance artifact (DESIGN.md
+//! §6): mixed-deadline load against a two-model registry while a
+//! deterministic fault plan crashes shard workers, kills a pipeline
+//! stage, injects latency storms, and fakes queue-full storms at submit.
+//!
+//! The run asserts the fault-model contract end to end:
+//!
+//! * request conservation — every submission is answered exactly once,
+//!   with scores or a *typed* error; nothing hangs, nothing is silently
+//!   dropped (`lost == 0`);
+//! * bit-exactness under degradation — every successful reply equals the
+//!   scalar `Engine::infer` oracle, including replies served after the
+//!   pipeline model failed over to its sequential-engine path;
+//! * availability — with one client-side retry, >= 99% of requests
+//!   succeed while workers are being crashed and restarted under load;
+//! * observable supervision — the merged pool metrics show `crashes`,
+//!   `restarts`, and `requests_failed_over` all strictly positive (the
+//!   faults actually fired and the supervisor actually healed them).
+//!
+//! Run:  cargo run --release --example chaos_soak
+//! CI:   BENCH_SMOKE=1 shortens the soak; BCNN_FAULTS overrides the
+//!       default plan; always writes `BENCH_chaos.json` (path override:
+//!       BENCH_OUT).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use repro::bcnn::Engine;
+use repro::coordinator::workload::random_images;
+use repro::coordinator::Metrics;
+use repro::model::{BcnnModel, NetConfig};
+use repro::serving::{BackendSpec, DeploySpec, ModelRegistry};
+use repro::util::faults::{self, FaultPlan, FAULTS_ENV};
+use repro::util::json::Json;
+
+const MODEL_SEED: u64 = 5;
+const IMAGE_POOL: usize = 64;
+const CLIENT_THREADS: usize = 4;
+/// Per-request submit budgets, cycled: tight deadlines exercise the
+/// give-up path, loose ones the retry-until-admitted path.
+const DEADLINES: [Duration; 3] =
+    [Duration::from_millis(2), Duration::from_millis(20), Duration::from_millis(200)];
+const RETRY_DEADLINE: Duration = Duration::from_millis(200);
+const REPLY_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Default fault plan: worker panics frequent enough to observe several
+/// crash/restart cycles even in the smoke run (but never 5 in a row, so
+/// the breaker stays closed and the pools stay serviceable), one stage
+/// death to force the pipeline model onto its engine fallback, a small
+/// latency storm, and a synthetic queue-full storm at submit.
+const DEFAULT_PLAN: &str = "seed=1337;\
+     backend_infer:panic@every=40;\
+     backend_infer:delay=2ms@p=0.02;\
+     stage_emit:panic@once=400;\
+     submit:deny@every=97";
+
+#[derive(Default, Clone, Copy)]
+struct Counters {
+    submitted: u64,
+    succeeded: u64,
+    /// Failed first attempt, succeeded on the single retry.
+    retried: u64,
+    /// Failed even after the retry (typed both times — still conserved).
+    failed: u64,
+    /// Conservation violations: a reply channel that never answered.
+    lost: u64,
+    /// Successful replies whose scores diverged from the scalar oracle.
+    mismatches: u64,
+}
+
+enum Outcome {
+    Scores(Vec<f32>),
+    Failed(String),
+    Lost(String),
+}
+
+/// One routed request: health-aware resolve, deadline-bounded submit,
+/// then wait for the reply.  Every path yields a classified outcome.
+fn attempt(registry: &ModelRegistry, name: &str, img: &[i32], deadline: Duration) -> Outcome {
+    let entry = match registry.router().resolve_healthy(Some(name)) {
+        Ok(e) => e,
+        Err(e) => return Outcome::Failed(e.to_string()),
+    };
+    let rx = match entry.client().submit_deadline(img.to_vec(), deadline) {
+        Ok(rx) => rx,
+        Err(e) => return Outcome::Failed(e.to_string()),
+    };
+    match rx.recv_timeout(REPLY_TIMEOUT) {
+        Ok(reply) => match reply.scores {
+            Ok(s) => Outcome::Scores(s),
+            Err(e) => Outcome::Failed(e.to_string()),
+        },
+        Err(e) => Outcome::Lost(format!("reply channel: {e}")),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let soak = if smoke { Duration::from_millis(1300) } else { Duration::from_secs(6) };
+
+    // BCNN_FAULTS overrides the default plan (CI pins its own seed).
+    let spec = std::env::var(FAULTS_ENV).unwrap_or_else(|_| DEFAULT_PLAN.into());
+    faults::install(FaultPlan::parse(&spec)?);
+    println!("fault plan: {spec}");
+
+    // Two models over the SAME weights: failover between them (and the
+    // pipeline model's internal engine fallback) must stay bit-exact.
+    let cfg = NetConfig::tiny();
+    let model = BcnnModel::synthetic(&cfg, MODEL_SEED);
+    let oracle_engine = Engine::new(model.clone())?;
+    let images = Arc::new(random_images(&cfg, IMAGE_POOL, 77));
+    let oracle: Arc<Vec<Vec<f32>>> = Arc::new(
+        images.iter().map(|img| oracle_engine.infer(img)).collect::<anyhow::Result<_>>()?,
+    );
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.deploy("alpha", DeploySpec::new(model.clone()).with_workers(2))?;
+    registry.deploy(
+        "beta",
+        DeploySpec::new(model)
+            .with_backend(BackendSpec::Pipeline { inflight: 4, stage_threads: 0 })
+            .with_workers(1),
+    )?;
+    println!(
+        "deployed alpha (engine, 2 shards) + beta (pipeline, 1 shard); \
+         soaking for {:.1}s with {CLIENT_THREADS} clients",
+        soak.as_secs_f64()
+    );
+
+    // -- mixed-deadline load until the soak window closes -----------------
+    let stop = Arc::new(AtomicBool::new(false));
+    let t0 = Instant::now();
+    let mut drivers = Vec::new();
+    for t in 0..CLIENT_THREADS {
+        let registry = Arc::clone(&registry);
+        let images = Arc::clone(&images);
+        let oracle = Arc::clone(&oracle);
+        let stop = Arc::clone(&stop);
+        drivers.push(std::thread::spawn(move || {
+            let name = if t % 2 == 0 { "alpha" } else { "beta" };
+            let mut c = Counters::default();
+            let mut i = t; // stagger image/deadline cycles per thread
+            while !stop.load(Ordering::Relaxed) {
+                let idx = i % images.len();
+                let deadline = DEADLINES[i % DEADLINES.len()];
+                c.submitted += 1;
+                let score = |c: &mut Counters, s: Vec<f32>, on_retry: bool| {
+                    if s == oracle[idx] {
+                        if on_retry {
+                            c.retried += 1;
+                        } else {
+                            c.succeeded += 1;
+                        }
+                    } else {
+                        c.mismatches += 1;
+                    }
+                };
+                match attempt(&registry, name, &images[idx], deadline) {
+                    Outcome::Scores(s) => score(&mut c, s, false),
+                    Outcome::Lost(_) => c.lost += 1,
+                    Outcome::Failed(_) => {
+                        // typed failure: the request rode a crashed batch
+                        // or was shed — one retry against a (possibly
+                        // failed-over) healthy path
+                        match attempt(&registry, name, &images[idx], RETRY_DEADLINE) {
+                            Outcome::Scores(s) => score(&mut c, s, true),
+                            Outcome::Lost(_) => c.lost += 1,
+                            Outcome::Failed(_) => c.failed += 1,
+                        }
+                    }
+                }
+                i += 1;
+            }
+            c
+        }));
+    }
+    std::thread::sleep(soak);
+    stop.store(true, Ordering::Relaxed);
+    let mut total = Counters::default();
+    for d in drivers {
+        let c = d.join().expect("driver thread panicked");
+        total.submitted += c.submitted;
+        total.succeeded += c.succeeded;
+        total.retried += c.retried;
+        total.failed += c.failed;
+        total.lost += c.lost;
+        total.mismatches += c.mismatches;
+    }
+    let wall = t0.elapsed();
+
+    // -- supervision observability across both pools ----------------------
+    let mut merged = Metrics::new();
+    for s in registry.stats() {
+        println!("model {} v{} [{}]: {}", s.name, s.version, s.backend, s.metrics.summary());
+        merged.merge(&s.metrics);
+    }
+    for (rule, fired) in faults::fired_counts() {
+        println!("fault {rule}: fired {fired}x");
+    }
+
+    let ok = total.succeeded + total.retried;
+    let availability = ok as f64 / total.submitted.max(1) as f64;
+    println!(
+        "\nchaos soak: {} requests over {:.2}s — {} ok ({} via retry), {} failed, \
+         {} lost, {} mismatched; availability {:.4}",
+        total.submitted,
+        wall.as_secs_f64(),
+        ok,
+        total.retried,
+        total.failed,
+        total.lost,
+        total.mismatches,
+        availability
+    );
+    println!(
+        "supervision: {} crashes, {} restarts, {} requests served via failover",
+        merged.crashes, merged.restarts, merged.requests_failed_over
+    );
+
+    // -- the contract ------------------------------------------------------
+    assert_eq!(total.lost, 0, "request conservation violated: {} replies lost", total.lost);
+    assert_eq!(total.mismatches, 0, "successful replies must match the scalar oracle");
+    assert!(
+        availability >= 0.99,
+        "availability {availability:.4} under faults fell below 0.99"
+    );
+    assert!(merged.crashes > 0, "fault plan fired no worker crashes — soak proved nothing");
+    assert!(merged.restarts > 0, "workers crashed but the supervisor never restarted one");
+    assert!(
+        merged.requests_failed_over > 0,
+        "no requests were served via a degradation path"
+    );
+
+    // -- artifact ----------------------------------------------------------
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("requests".into(), Json::Num(total.submitted as f64));
+    obj.insert("succeeded".into(), Json::Num(ok as f64));
+    obj.insert("retried".into(), Json::Num(total.retried as f64));
+    obj.insert("failed".into(), Json::Num(total.failed as f64));
+    obj.insert("lost".into(), Json::Num(total.lost as f64));
+    obj.insert("mismatches".into(), Json::Num(total.mismatches as f64));
+    obj.insert("availability".into(), Json::Num(availability));
+    obj.insert("p50_us".into(), Json::Num(merged.p50().as_micros() as f64));
+    obj.insert("p99_us".into(), Json::Num(merged.p99().as_micros() as f64));
+    obj.insert("crashes".into(), Json::Num(merged.crashes as f64));
+    obj.insert("restarts".into(), Json::Num(merged.restarts as f64));
+    obj.insert("requests_failed_over".into(), Json::Num(merged.requests_failed_over as f64));
+    obj.insert("duration_s".into(), Json::Num(wall.as_secs_f64()));
+    obj.insert("smoke".into(), Json::Bool(smoke));
+    obj.insert("fault_plan".into(), Json::Str(spec));
+    obj.insert(
+        "faults_fired".into(),
+        Json::Obj(
+            faults::fired_counts()
+                .into_iter()
+                .map(|(rule, n)| (rule, Json::Num(n as f64)))
+                .collect(),
+        ),
+    );
+    let json = Json::Obj(obj);
+    let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "rust/BENCH_chaos.json".into());
+    let text = json.to_string();
+    if std::fs::write(&path, &text).is_err() {
+        // running from inside rust/ (e.g. CI cwd): fall back
+        std::fs::write("BENCH_chaos.json", &text)?;
+        println!("wrote BENCH_chaos.json");
+    } else {
+        println!("wrote {path}");
+    }
+    faults::clear();
+    Ok(())
+}

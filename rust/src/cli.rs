@@ -38,6 +38,7 @@ use crate::serving::{
     serve_registry, BackendSpec, ControlClient, DeploySpec, ModelRegistry, ModelSource,
 };
 use crate::tables;
+use crate::util::faults::{self, FaultPlan, FAULTS_ENV};
 use crate::util::json::Json;
 use crate::util::kernels::{Kernel, KernelKind, KERNEL_ENV};
 
@@ -169,6 +170,10 @@ COMMANDS
   models --addr HOST:PORT
       List deployed models and per-model serving stats (p50/p99) from
       the protocol-v2 LIST/STATS admin frames.
+  health --addr HOST:PORT
+      Per-model pool health from the protocol-v2 HEALTH admin frame:
+      model state (ready/degraded/down) plus per-shard supervisor
+      counters (state, crashes, restarts).
   selftest [--artifacts DIR]
       Cross-check native engine vs PJRT executable vs FPGA simulator on
       the shipped artifacts (exit non-zero on mismatch).
@@ -182,12 +187,20 @@ GLOBAL OPTIONS
       Force the bitwise SIMD kernel (default: auto-detect, widest ISA
       wins).  Errors out if the requested ISA is unavailable.  Equivalent
       to setting BCNN_KERNEL.
+  --faults <spec>
+      Arm the deterministic fault-injection plan for this process, e.g.
+      `seed=7;backend_infer:panic@once=3;submit:deny@p=0.01`.  The spec
+      is validated up front and exported as BCNN_FAULTS so worker shards
+      and stage threads inherit it.  Sites: backend_infer, stage_emit,
+      submit, server_read, server_write.  Actions: panic, delay=<dur>,
+      deny.  Triggers: @once=N, @every=N, @first=N, @p=<prob>.
 ";
 
 /// Entry point used by `main.rs`.
 pub fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     apply_kernel_option(&args)?;
+    apply_faults_option(&args)?;
     match args.command.as_str() {
         "tables" => cmd_tables(&args),
         "simulate" => cmd_simulate(&args),
@@ -199,6 +212,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "undeploy" => cmd_admin_name_op(&args, "undeploy"),
         "rollback" => cmd_admin_name_op(&args, "rollback"),
         "models" => cmd_models(&args),
+        "health" => cmd_health(&args),
         "selftest" => cmd_selftest(&args),
         "features" => cmd_features(),
         "help" | "" => {
@@ -223,6 +237,19 @@ fn apply_kernel_option(args: &Args) -> Result<()> {
     };
     let kernel = Kernel::from_spec(Some(spec)).map_err(|e| anyhow!("--kernel {spec}: {e}"))?;
     std::env::set_var(KERNEL_ENV, kernel.name());
+    Ok(())
+}
+
+/// Resolve `--faults` (typed error for a malformed spec), arm the plan in
+/// this process, and export it as `BCNN_FAULTS` so spawned worker shards
+/// and pipeline stage threads make identical, seeded injection decisions.
+fn apply_faults_option(args: &Args) -> Result<()> {
+    let Some(spec) = args.value_of("faults")? else {
+        return Ok(());
+    };
+    let plan = FaultPlan::parse(spec).map_err(|e| anyhow!("--faults {spec:?}: {e}"))?;
+    std::env::set_var(FAULTS_ENV, spec);
+    faults::install(plan);
     Ok(())
 }
 
@@ -646,6 +673,38 @@ fn cmd_models(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_health(args: &Args) -> Result<()> {
+    let mut client = admin_client(args)?;
+    let health = client.health()?;
+    client.close()?;
+
+    println!("routing epoch {}", health.get("epoch")?.as_f64()? as u64);
+    let mut table = Table::new(&["model", "version", "state", "shards", "crashes", "restarts"]);
+    for m in health.get("models")?.as_arr()? {
+        let shards = m.get("shards")?.as_arr()?;
+        let mut crashes = 0u64;
+        let mut restarts = 0u64;
+        let mut ready = 0usize;
+        for s in shards {
+            crashes += s.get("crashes")?.as_f64()? as u64;
+            restarts += s.get("restarts")?.as_f64()? as u64;
+            if s.get("state")?.as_str()? == "ready" {
+                ready += 1;
+            }
+        }
+        table.row(&[
+            m.get("name")?.as_str()?.to_string(),
+            format!("v{}", m.get("version")?.as_f64()? as u64),
+            m.get("state")?.as_str()?.to_string(),
+            format!("{ready}/{} ready", shards.len()),
+            format!("{crashes}"),
+            format!("{restarts}"),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
 fn cmd_selftest(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args)?;
     let name = "tiny";
@@ -716,6 +775,16 @@ mod tests {
         assert!(apply_kernel_option(&parse(&["infer", "--kernel", "sse9"])).is_err());
         assert!(apply_kernel_option(&parse(&["infer", "--kernel"])).is_err());
         assert!(apply_kernel_option(&parse(&["infer"])).is_ok());
+    }
+
+    #[test]
+    fn faults_option_rejects_malformed_and_bare() {
+        // malformed site/action specs and a bare `--faults` are usage
+        // errors surfaced before any subcommand runs (nothing is armed)
+        assert!(apply_faults_option(&parse(&["infer", "--faults", "bogus_site:panic"])).is_err());
+        assert!(apply_faults_option(&parse(&["infer", "--faults", "submit:explode"])).is_err());
+        assert!(apply_faults_option(&parse(&["infer", "--faults"])).is_err());
+        assert!(apply_faults_option(&parse(&["infer"])).is_ok());
     }
 
     #[test]

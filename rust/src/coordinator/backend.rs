@@ -76,6 +76,21 @@ pub trait Backend {
     fn kernel(&self) -> &'static str {
         ""
     }
+
+    /// Cumulative requests this replica served via an internal degradation
+    /// path (e.g. the pipeline backend re-running a batch on the bit-exact
+    /// engine after a stage death).  The shard worker folds the delta into
+    /// `Metrics::requests_failed_over`.
+    fn failovers(&self) -> u64 {
+        0
+    }
+
+    /// Cumulative internal thread crashes this replica contained (e.g.
+    /// pipeline stage-lane panics).  Folded into `Metrics::crashes` by the
+    /// shard worker.
+    fn crashes(&self) -> u64 {
+        0
+    }
 }
 
 /// Per-worker backend factory: the sharded coordinator calls it once on

@@ -95,6 +95,26 @@ impl Batcher {
         }
         Some(batch)
     }
+
+    /// Drain everything already queued without blocking (circuit-breaker
+    /// trip: the supervisor fails these typed instead of serving them).
+    /// A queued `Stop` poison still takes effect.
+    pub fn drain_pending(&mut self) -> Vec<InferRequest> {
+        let mut out = Vec::new();
+        loop {
+            match self.rx.try_recv() {
+                Ok(Msg::Req(r)) => out.push(r),
+                Ok(Msg::Stop) => self.stopped = true,
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        out
+    }
+
+    /// True once a `Stop` poison or sender disconnect has been observed.
+    pub fn is_stopped(&self) -> bool {
+        self.stopped
+    }
 }
 
 #[cfg(test)]

@@ -97,6 +97,16 @@ pub struct Metrics {
     /// Requests that received an error reply (failed batches; nothing is
     /// silently dropped).
     pub errors: u64,
+    /// Worker/stage-thread panics contained by the supervision layer
+    /// (replica crashes + pipeline stage-lane deaths).
+    pub crashes: u64,
+    /// Replica rebuilds the supervisor completed after a crash.
+    pub restarts: u64,
+    /// Requests served via a degradation path instead of their original
+    /// replica: pipeline batches re-run on the bit-exact engine after a
+    /// stage death, plus queued requests failed out when a circuit
+    /// breaker tripped (the client retries them onto a healthy shard).
+    pub requests_failed_over: u64,
     /// Modeled device-busy time (simulator backends).
     pub modeled_busy: Duration,
     pub wall: Duration,
@@ -156,6 +166,9 @@ impl Metrics {
         self.batches += other.batches;
         self.sum_batch += other.sum_batch;
         self.errors += other.errors;
+        self.crashes += other.crashes;
+        self.restarts += other.restarts;
+        self.requests_failed_over += other.requests_failed_over;
         self.modeled_busy += other.modeled_busy;
         if !other.stages.is_empty() {
             if self.stages.is_empty() {
@@ -218,6 +231,12 @@ impl Metrics {
         let mut m: BTreeMap<String, Json> = BTreeMap::new();
         m.insert("requests".into(), Json::Num(self.requests as f64));
         m.insert("errors".into(), Json::Num(self.errors as f64));
+        m.insert("crashes".into(), Json::Num(self.crashes as f64));
+        m.insert("restarts".into(), Json::Num(self.restarts as f64));
+        m.insert(
+            "requests_failed_over".into(),
+            Json::Num(self.requests_failed_over as f64),
+        );
         m.insert("batches".into(), Json::Num(self.batches as f64));
         m.insert("mean_batch".into(), Json::Num(self.mean_batch()));
         m.insert("throughput".into(), Json::Num(self.throughput()));
@@ -251,7 +270,7 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} errors={} batches={} mean_batch={:.1} throughput={:.1}/s \
              latency(mean={:?} p50={:?} p99={:?} max={:?})",
             self.requests,
@@ -263,7 +282,14 @@ impl Metrics {
             self.latency.quantile(0.5),
             self.latency.quantile(0.99),
             self.latency.max(),
-        )
+        );
+        if self.crashes > 0 || self.restarts > 0 || self.requests_failed_over > 0 {
+            s.push_str(&format!(
+                " crashes={} restarts={} failed_over={}",
+                self.crashes, self.restarts, self.requests_failed_over
+            ));
+        }
+        s
     }
 }
 

@@ -29,6 +29,7 @@ pub mod batcher;
 pub mod metrics;
 pub mod request;
 pub mod server;
+pub mod supervisor;
 pub mod workload;
 
 pub use backend::{
@@ -42,3 +43,6 @@ pub use batcher::{BatchPolicy, Batcher, Msg};
 pub use metrics::Metrics;
 pub use request::{InferError, InferReply, InferRequest, SubmitError};
 pub use server::{serve_tcp, Client, Coordinator, CoordinatorConfig, TcpClient, MAX_WIRE_VALUES};
+pub use supervisor::{
+    PoolHealth, RestartPolicy, ShardHealth, ShardHealthSnapshot, ShardState,
+};

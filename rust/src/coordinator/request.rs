@@ -34,6 +34,10 @@ pub enum SubmitError {
     /// Every shard queue is at capacity.  The image is handed back so the
     /// caller can retry (backpressure, not data loss).
     QueueFull { image: Vec<i32> },
+    /// Every shard worker is dead (crashed / circuit breaker open) but the
+    /// pool was *not* gracefully shut down.  The image is handed back; the
+    /// caller should fail over to another replica or model version.
+    ShardDown { image: Vec<i32> },
     /// The coordinator has shut down; no worker will ever reply.
     Shutdown,
 }
@@ -42,6 +46,9 @@ impl fmt::Display for SubmitError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             SubmitError::QueueFull { .. } => write!(f, "all shard queues full (backpressure)"),
+            SubmitError::ShardDown { .. } => {
+                write!(f, "all shards down (crashed or circuit breaker open)")
+            }
             SubmitError::Shutdown => write!(f, "coordinator shut down"),
         }
     }
@@ -133,7 +140,12 @@ mod tests {
         let e = SubmitError::QueueFull { image: vec![1, 2, 3] };
         match e {
             SubmitError::QueueFull { image } => assert_eq!(image, vec![1, 2, 3]),
-            SubmitError::Shutdown => panic!("wrong variant"),
+            SubmitError::ShardDown { .. } | SubmitError::Shutdown => panic!("wrong variant"),
+        }
+        let e = SubmitError::ShardDown { image: vec![4, 5] };
+        match e {
+            SubmitError::ShardDown { image } => assert_eq!(image, vec![4, 5]),
+            SubmitError::QueueFull { .. } | SubmitError::Shutdown => panic!("wrong variant"),
         }
     }
 }

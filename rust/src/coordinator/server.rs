@@ -25,6 +25,7 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -37,6 +38,9 @@ use crate::coordinator::backend::{Backend, BackendFactory};
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Msg};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{InferError, InferReply, InferRequest, SubmitError};
+use crate::coordinator::supervisor::{PoolHealth, RestartPolicy, ShardHealth, ShardState};
+use crate::util::faults;
+use crate::util::sync::{lock_recover, panic_message};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -46,11 +50,18 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     /// Bounded submission-queue capacity *per shard* (>= 1).
     pub queue_depth: usize,
+    /// Crash supervision: backoff + circuit breaker per shard.
+    pub restart: RestartPolicy,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { policy: BatchPolicy::default(), workers: 1, queue_depth: 256 }
+        Self {
+            policy: BatchPolicy::default(),
+            workers: 1,
+            queue_depth: 256,
+            restart: RestartPolicy::default(),
+        }
     }
 }
 
@@ -62,7 +73,7 @@ impl CoordinatorConfig {
 }
 
 /// One shard as the client sees it: a bounded sender, a load gauge
-/// (queued + in-flight requests), and the shutdown latch.
+/// (queued + in-flight requests), health, and the shutdown latch.
 #[derive(Clone)]
 struct ShardHandle {
     tx: SyncSender<Msg>,
@@ -71,6 +82,9 @@ struct ShardHandle {
     /// competing for queue slots, so the `Stop` message cannot be starved
     /// by `submit_blocking` retry loops.
     stopping: Arc<AtomicBool>,
+    /// Written by the shard's supervisor loop, read by dispatch (skip
+    /// broken shards) and health probes.
+    health: Arc<ShardHealth>,
 }
 
 /// Handle clients use to submit work.  Cheap to clone; clones share the
@@ -85,15 +99,25 @@ pub struct Client {
 
 /// How long `submit_blocking` sleeps between backpressure retries.
 const BACKPRESSURE_RETRY: Duration = Duration::from_micros(50);
+/// Ceiling for `submit_deadline`'s exponential retry backoff.
+const MAX_SUBMIT_BACKOFF: Duration = Duration::from_millis(10);
 
 impl Client {
     /// Submit one image; returns the receiver for its reply, or a
     /// backpressure/shutdown error.
     ///
     /// Dispatch policy: the round-robin cursor fixes the tie-break order,
-    /// then shards are tried least-loaded first.  `QueueFull` hands the
-    /// image back so callers can retry without re-allocating.
+    /// then shards are tried least-loaded first; shards whose circuit
+    /// breaker is open ([`ShardState::Broken`]) are skipped entirely.
+    /// `QueueFull` hands the image back so callers can retry without
+    /// re-allocating; `ShardDown` means every worker is dead without a
+    /// graceful shutdown — callers should fail over.
     pub fn submit(&self, image: Vec<i32>) -> std::result::Result<Receiver<InferReply>, SubmitError> {
+        if faults::fire(faults::SITE_SUBMIT) {
+            // injected queue-full storm: indistinguishable from real
+            // backpressure, so retry loops get exercised end-to-end
+            return Err(SubmitError::QueueFull { image });
+        }
         let n = self.shards.len();
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
         // snapshot the depth gauges ONCE (they move under concurrent
@@ -116,7 +140,9 @@ impl Client {
         });
         let mut dead = 0usize;
         for &(_, i) in &order {
-            if self.shards[i].stopping.load(Ordering::Relaxed) {
+            if self.shards[i].stopping.load(Ordering::Relaxed)
+                || !self.shards[i].health.state().accepts_work()
+            {
                 dead += 1;
                 continue;
             }
@@ -137,14 +163,26 @@ impl Client {
             }
         }
         let Msg::Req(req) = msg else { unreachable!("submit only builds Req") };
-        if dead == n {
+        if dead < n {
+            return Err(SubmitError::QueueFull { image: req.image });
+        }
+        // every shard refused: a graceful shutdown anywhere means the pool
+        // is going away (Shutdown); otherwise the workers crashed out from
+        // under us and the caller should fail over (ShardDown)
+        let stopping = self
+            .shards
+            .iter()
+            .any(|s| s.stopping.load(Ordering::Relaxed) || s.health.state() == ShardState::Stopped);
+        if stopping {
             Err(SubmitError::Shutdown)
         } else {
-            Err(SubmitError::QueueFull { image: req.image })
+            Err(SubmitError::ShardDown { image: req.image })
         }
     }
 
     /// Submit, waiting out backpressure (bounded memory, unbounded time).
+    /// `ShardDown` is terminal here: a pool whose every breaker is open
+    /// will never drain, so waiting would hang forever.
     pub fn submit_blocking(
         &self,
         mut image: Vec<i32>,
@@ -156,13 +194,16 @@ impl Client {
                     image = img;
                     std::thread::sleep(BACKPRESSURE_RETRY);
                 }
-                Err(e @ SubmitError::Shutdown) => return Err(e),
+                Err(e) => return Err(e),
             }
         }
     }
 
-    /// Submit, waiting out backpressure for at most `deadline`.  On expiry
-    /// the image is handed back in [`SubmitError::QueueFull`] so callers
+    /// Submit with bounded retry: waits out `QueueFull`/`ShardDown` with
+    /// exponential backoff (doubling from [`BACKPRESSURE_RETRY`], capped)
+    /// for at most `deadline`.  `ShardDown` is retried because a shard
+    /// whose supervisor is mid-restart comes back within a backoff window;
+    /// on expiry the image is handed back in the last error so callers
     /// (e.g. the TCP handler) can signal overload instead of stalling.
     pub fn submit_deadline(
         &self,
@@ -170,18 +211,30 @@ impl Client {
         deadline: Duration,
     ) -> std::result::Result<Receiver<InferReply>, SubmitError> {
         let start = Instant::now();
+        let mut backoff = BACKPRESSURE_RETRY;
         loop {
-            match self.submit(image) {
+            let down = match self.submit(image) {
                 Ok(rx) => return Ok(rx),
                 Err(SubmitError::QueueFull { image: img }) => {
-                    if start.elapsed() >= deadline {
-                        return Err(SubmitError::QueueFull { image: img });
-                    }
                     image = img;
-                    std::thread::sleep(BACKPRESSURE_RETRY);
+                    false
+                }
+                Err(SubmitError::ShardDown { image: img }) => {
+                    image = img;
+                    true
                 }
                 Err(e @ SubmitError::Shutdown) => return Err(e),
+            };
+            let elapsed = start.elapsed();
+            if elapsed >= deadline {
+                return Err(if down {
+                    SubmitError::ShardDown { image }
+                } else {
+                    SubmitError::QueueFull { image }
+                });
             }
+            std::thread::sleep(backoff.min(deadline - elapsed));
+            backoff = (backoff * 2).min(MAX_SUBMIT_BACKOFF);
         }
     }
 
@@ -199,7 +252,8 @@ impl Client {
     }
 }
 
-/// One running shard: its worker thread plus that shard's metrics.
+/// One running shard: its worker thread (which is also its supervisor
+/// loop) plus that shard's metrics.
 struct Shard {
     handle: ShardHandle,
     worker: Option<JoinHandle<()>>,
@@ -227,8 +281,7 @@ impl Coordinator {
         );
         let cell = Mutex::new(Some(backend));
         let factory: BackendFactory = Arc::new(move || {
-            cell.lock()
-                .unwrap()
+            lock_recover(&cell)
                 .take()
                 .map(|b| {
                     let b: Box<dyn Backend> = b;
@@ -255,7 +308,13 @@ impl Coordinator {
         let mut handles = Vec::with_capacity(workers);
         let mut startup_err = None;
         for shard_id in 0..workers {
-            match spawn_shard(shard_id, Arc::clone(&factory), config.policy, queue_depth) {
+            match spawn_shard(
+                shard_id,
+                Arc::clone(&factory),
+                config.policy,
+                queue_depth,
+                config.restart,
+            ) {
                 Ok(shard) => {
                     handles.push(shard.handle.clone());
                     shards.push(shard);
@@ -295,7 +354,7 @@ impl Coordinator {
     pub fn metrics(&self) -> Metrics {
         let mut total = Metrics::new();
         for shard in &self.shards {
-            total.merge(&shard.metrics.lock().unwrap());
+            total.merge(&lock_recover(&shard.metrics));
         }
         total.wall = self.started.elapsed();
         total
@@ -303,7 +362,14 @@ impl Coordinator {
 
     /// Per-shard metrics snapshots (dispatch-distribution introspection).
     pub fn shard_metrics(&self) -> Vec<Metrics> {
-        self.shards.iter().map(|s| s.metrics.lock().unwrap().clone()).collect()
+        self.shards.iter().map(|s| lock_recover(&s.metrics).clone()).collect()
+    }
+
+    /// Per-shard supervision health (state + crash/restart counters).
+    pub fn health(&self) -> PoolHealth {
+        PoolHealth {
+            shards: self.shards.iter().map(|s| s.handle.health.snapshot()).collect(),
+        }
     }
 
     /// Graceful shutdown: poison every queue (queued requests are still
@@ -351,62 +417,210 @@ fn stop_shard(shard: &mut Shard) {
     }
 }
 
-/// Spawn one shard: bounded queue + worker thread building its replica.
+/// Spawn one shard: bounded queue + worker thread building its replica
+/// and supervising it (restart-in-place on crash).
 fn spawn_shard(
     shard_id: usize,
     factory: BackendFactory,
     policy: BatchPolicy,
     queue_depth: usize,
+    restart: RestartPolicy,
 ) -> Result<Shard> {
     let (tx, rx) = mpsc::sync_channel(queue_depth);
     let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
     let depth = Arc::new(AtomicUsize::new(0));
     let stopping = Arc::new(AtomicBool::new(false));
+    let health = Arc::new(ShardHealth::new());
     let metrics = Arc::new(Mutex::new(Metrics::new()));
     let worker = std::thread::Builder::new()
         .name(format!("coordinator-shard-{shard_id}"))
         .spawn({
             let depth = Arc::clone(&depth);
+            let health = Arc::clone(&health);
             let metrics = Arc::clone(&metrics);
             move || {
-                let mut backend = match factory() {
+                let backend = match factory() {
                     Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
                         b
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
+                        health.set_state(ShardState::Broken);
                         return;
                     }
                 };
-                shard_loop(shard_id, backend.as_mut(), rx, policy, &metrics, &depth);
+                supervise(
+                    shard_id, backend, &factory, rx, policy, restart, &metrics, &depth, &health,
+                );
             }
         })
-        .expect("spawn coordinator shard");
+        .context("spawn coordinator shard thread")?;
     ready_rx
         .recv()
         .map_err(|_| anyhow!("shard worker died during startup"))??;
-    Ok(Shard { handle: ShardHandle { tx, depth, stopping }, worker: Some(worker), metrics })
+    Ok(Shard {
+        handle: ShardHandle { tx, depth, stopping, health },
+        worker: Some(worker),
+        metrics,
+    })
 }
 
-/// The per-shard serving loop: form batches, lend buffers zero-copy to the
-/// replica, fan replies (or typed errors) back out.
+/// How one run of [`shard_loop`] ended.
+enum LoopExit {
+    /// Stop poison / all senders gone: graceful.
+    Stopped,
+    /// The replica panicked mid-batch (contained; the batch already got
+    /// typed error replies).  The supervisor should rebuild.
+    Crashed,
+}
+
+/// The shard supervisor: run the serving loop, and on a contained crash
+/// rebuild the replica from the factory with exponential backoff +
+/// jitter.  `restart.max_consecutive` crashes without an intervening
+/// successful batch trip the circuit breaker: queued requests are failed
+/// typed (the client retries them onto a healthy shard — that's the
+/// failover count), the shard marks itself [`ShardState::Broken`] and the
+/// worker exits, closing the queue.
+#[allow(clippy::too_many_arguments)]
+fn supervise(
+    shard_id: usize,
+    mut backend: Box<dyn Backend>,
+    factory: &BackendFactory,
+    rx: Receiver<Msg>,
+    policy: BatchPolicy,
+    restart: RestartPolicy,
+    metrics: &Mutex<Metrics>,
+    depth: &AtomicUsize,
+    health: &ShardHealth,
+) {
+    // the batcher (and thus the queue receiver) outlives replica rebuilds:
+    // queued requests survive a crash and are served by the next replica
+    let mut batcher = Batcher::new(rx, policy);
+    let max_consecutive = restart.max_consecutive.max(1);
+    loop {
+        match shard_loop(shard_id, backend.as_mut(), &mut batcher, metrics, depth, health) {
+            LoopExit::Stopped => {
+                health.set_state(ShardState::Stopped);
+                return;
+            }
+            LoopExit::Crashed => {
+                let mut consecutive = health.note_crash();
+                lock_recover(metrics).crashes += 1;
+                health.set_state(ShardState::Restarting);
+                loop {
+                    if consecutive >= max_consecutive {
+                        trip_breaker(shard_id, &mut batcher, consecutive, metrics, depth, health);
+                        return;
+                    }
+                    std::thread::sleep(restart.backoff_delay(consecutive, shard_id as u64));
+                    // a queued Stop poison must win over rebuilding
+                    if batcher.is_stopped() {
+                        health.set_state(ShardState::Stopped);
+                        return;
+                    }
+                    match factory() {
+                        Ok(b) => {
+                            backend = b;
+                            health.note_restart();
+                            lock_recover(metrics).restarts += 1;
+                            health.set_state(ShardState::Ready);
+                            break;
+                        }
+                        Err(e) => {
+                            // rebuild failure counts against the breaker too
+                            eprintln!("shard {shard_id}: replica rebuild failed: {e:#}");
+                            consecutive = health.note_crash();
+                            lock_recover(metrics).crashes += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Circuit breaker: fail every queued request typed, mark the shard
+/// broken, and let the worker exit (dropping the queue receiver so later
+/// sends see `Disconnected`).  Nothing hangs, nothing is dropped.
+fn trip_breaker(
+    shard_id: usize,
+    batcher: &mut Batcher,
+    consecutive: u32,
+    metrics: &Mutex<Metrics>,
+    depth: &AtomicUsize,
+    health: &ShardHealth,
+) {
+    health.set_state(ShardState::Broken);
+    let drained = batcher.drain_pending();
+    let message = format!(
+        "shard {shard_id} circuit breaker open after {consecutive} consecutive crashes"
+    );
+    let n = drained.len();
+    if n > 0 {
+        let mut m = lock_recover(metrics);
+        m.errors += n as u64;
+        m.requests_failed_over += n as u64;
+    }
+    for req in drained {
+        let queue_time = req.enqueued.elapsed();
+        let _ = req.reply.send(InferReply {
+            id: req.id,
+            scores: Err(InferError { message: message.clone() }),
+            queue_time,
+            service_time: Duration::ZERO,
+            batch_size: 0,
+            shard: shard_id,
+            modeled_device_time: None,
+        });
+        depth.fetch_sub(1, Ordering::Relaxed);
+    }
+    eprintln!("{message} ({n} queued request(s) failed over)");
+}
+
+/// The per-shard serving loop: form batches, lend buffers zero-copy to
+/// the replica, fan replies (or typed errors) back out.  The replica call
+/// runs under `catch_unwind`: a panicking backend fails its batch typed
+/// (every request replies, no hangs) and returns [`LoopExit::Crashed`] so
+/// the supervisor rebuilds the replica.
 fn shard_loop(
     shard_id: usize,
     backend: &mut dyn Backend,
-    rx: Receiver<Msg>,
-    policy: BatchPolicy,
+    batcher: &mut Batcher,
     metrics: &Mutex<Metrics>,
     depth: &AtomicUsize,
-) {
-    let mut batcher = Batcher::new(rx, policy);
+    health: &ShardHealth,
+) -> LoopExit {
+    // degradation/crash counters are cumulative per *replica*; track the
+    // last fold so rebuilt replicas (fresh counters) don't lose history
+    let mut folded_failovers = 0u64;
+    let mut folded_crashes = 0u64;
     while let Some(batch) = batcher.next_batch() {
         let formed = Instant::now();
         let batch_len = batch.len();
         let views: Vec<&[i32]> = batch.iter().map(|r| r.image.as_slice()).collect();
-        let mut result = backend.infer_batch(&views);
+        // AssertUnwindSafe: on a caught panic the replica is discarded and
+        // rebuilt from the factory, so torn internal state never escapes.
+        // The batch vec lives *outside* the closure, so its reply senders
+        // survive the unwind and every request still gets a typed error.
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            if faults::fire(faults::SITE_BACKEND_INFER) {
+                return Err(anyhow!("injected fault: backend_infer denied"));
+            }
+            backend.infer_batch(&views)
+        }));
         drop(views);
         let service = formed.elapsed();
+        let (mut result, crashed) = match caught {
+            Ok(r) => (r, false),
+            Err(payload) => (
+                Err(anyhow!(
+                    "shard {shard_id} replica panicked: {}",
+                    panic_message(payload.as_ref())
+                )),
+                true,
+            ),
+        };
         if let Ok(out) = &result {
             if out.scores.len() != batch_len {
                 result = Err(anyhow!(
@@ -418,18 +632,26 @@ fn shard_loop(
         // pipeline-backed replicas expose cumulative per-stage busy/stall
         // counters; snapshot them into this shard's metrics (replace, not
         // add — the counters are running totals) so STATS shows which
-        // stage bottlenecks.  Empty for stage-less backends.
-        let stage_stats = backend.stage_stats();
-        let kernel = backend.kernel();
+        // stage bottlenecks.  Empty for stage-less backends.  Skipped for
+        // a crashed replica: its internals are not worth trusting.
+        let stage_stats = if crashed { Vec::new() } else { backend.stage_stats() };
+        let kernel = if crashed { "" } else { backend.kernel() };
+        let (failovers, crashes) = if crashed {
+            (folded_failovers, folded_crashes)
+        } else {
+            (backend.failovers(), backend.crashes())
+        };
         match result {
             Ok(out) => {
-                let mut m = metrics.lock().unwrap();
+                let mut m = lock_recover(metrics);
                 if !stage_stats.is_empty() {
                     m.stages = stage_stats;
                 }
                 if m.kernel.is_empty() && !kernel.is_empty() {
                     m.kernel = kernel.to_string();
                 }
+                m.requests_failed_over += failovers.saturating_sub(folded_failovers);
+                m.crashes += crashes.saturating_sub(folded_crashes);
                 m.record_batch(batch_len, service, out.modeled_device_time);
                 for (req, scores) in batch.into_iter().zip(out.scores) {
                     let queue_time = formed.duration_since(req.enqueued);
@@ -444,19 +666,22 @@ fn shard_loop(
                         modeled_device_time: out.modeled_device_time,
                     });
                 }
+                health.note_success();
             }
             Err(e) => {
                 // No silent drops: every request in the failed batch gets
                 // a typed error reply, and the failure is counted.
                 let message = format!("{e:#}");
                 {
-                    let mut m = metrics.lock().unwrap();
+                    let mut m = lock_recover(metrics);
                     if !stage_stats.is_empty() {
                         m.stages = stage_stats;
                     }
                     if m.kernel.is_empty() && !kernel.is_empty() {
                         m.kernel = kernel.to_string();
                     }
+                    m.requests_failed_over += failovers.saturating_sub(folded_failovers);
+                    m.crashes += crashes.saturating_sub(folded_crashes);
                     m.record_batch_error(batch_len, service);
                 }
                 for req in batch {
@@ -473,8 +698,14 @@ fn shard_loop(
                 }
             }
         }
+        folded_failovers = failovers;
+        folded_crashes = crashes;
         depth.fetch_sub(batch_len, Ordering::Relaxed);
+        if crashed {
+            return LoopExit::Crashed;
+        }
     }
+    LoopExit::Stopped
 }
 
 // ---------------------------------------------------------------------------
@@ -630,12 +861,24 @@ fn handle_conn(mut stream: TcpStream, client: Client) -> Result<()> {
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
             .collect();
+        if faults::fire(faults::SITE_SERVER_READ) {
+            // injected shed: the request is refused after the frame was
+            // read, so the connection stays usable
+            write_error(&mut stream, "injected fault: request shed at server_read")?;
+            continue;
+        }
         // a saturated pool answers with a typed overload frame instead of
         // parking the connection on an unbounded submit_blocking retry
         let rx = match client.submit_deadline(image, TCP_SUBMIT_DEADLINE) {
             Ok(rx) => rx,
             Err(SubmitError::QueueFull { .. }) => {
                 write_error(&mut stream, "server overloaded: all shard queues full")?;
+                continue;
+            }
+            Err(SubmitError::ShardDown { .. }) => {
+                // the pool is down but the process is alive: answer typed
+                // so the client can fail over to another server
+                write_error(&mut stream, "service degraded: all shards down")?;
                 continue;
             }
             Err(SubmitError::Shutdown) => {
@@ -650,6 +893,10 @@ fn handle_conn(mut stream: TcpStream, client: Client) -> Result<()> {
                 bail!("coordinator shut down before replying");
             }
         };
+        if faults::fire(faults::SITE_SERVER_WRITE) {
+            write_error(&mut stream, "injected fault: reply dropped at server_write")?;
+            continue;
+        }
         match &reply.scores {
             Ok(scores) => {
                 stream.write_all(&(scores.len() as u32).to_le_bytes())?;

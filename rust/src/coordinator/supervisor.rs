@@ -1,0 +1,252 @@
+//! Shard supervision: restart policy, per-shard health, pool health.
+//!
+//! The supervisor is *restart-in-place*: each shard's worker thread is its
+//! own supervisor loop (`coordinator/server.rs::supervise`).  A replica
+//! panic is caught around `Backend::infer_batch`, every request in the
+//! failed batch gets a typed error reply, and the worker rebuilds the
+//! replica from the [`BackendFactory`](crate::coordinator::BackendFactory)
+//! after an exponential-backoff-with-jitter delay.  `K` *consecutive*
+//! crashes (successful batches reset the count) trip a circuit breaker:
+//! the shard drains-and-fails its queue, marks itself [`ShardState::Broken`]
+//! and exits — dispatch then skips it, and when every shard is broken the
+//! pool reports unserviceable so the serving router fails over to a
+//! healthy model version.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::time::Duration;
+
+use crate::util::prng::SplitMix64;
+
+/// Restart/backoff/circuit-breaker knobs for a shard supervisor.
+#[derive(Debug, Clone, Copy)]
+pub struct RestartPolicy {
+    /// Trip the circuit breaker after this many *consecutive* crashes
+    /// (a successful batch resets the count).  >= 1.
+    pub max_consecutive: u32,
+    /// Backoff before the first rebuild; doubles per consecutive crash.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        Self {
+            max_consecutive: 5,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(200),
+        }
+    }
+}
+
+impl RestartPolicy {
+    /// Exponential backoff with deterministic jitter: attempt `n` (1-based)
+    /// waits `base * 2^(n-1)`, capped at `max_backoff`, plus up to 25%
+    /// seeded jitter so a pool of shards crashing together doesn't rebuild
+    /// in lockstep.
+    pub fn backoff_delay(&self, attempt: u32, seed: u64) -> Duration {
+        let exp = attempt.saturating_sub(1).min(16);
+        let base = self
+            .base_backoff
+            .saturating_mul(1u32 << exp)
+            .min(self.max_backoff);
+        let mut r = SplitMix64::new(seed ^ u64::from(attempt).wrapping_mul(0x9E37_79B9));
+        let jitter_us = (base.as_micros() as u64 / 4).max(1);
+        base + Duration::from_micros(r.next_u64() % jitter_us)
+    }
+}
+
+/// Lifecycle of one shard, as dispatch sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardState {
+    /// Serving normally.
+    Ready,
+    /// Crashed; the supervisor is backing off / rebuilding the replica.
+    /// The queue stays open — queued work is served once the rebuild lands.
+    Restarting,
+    /// Circuit breaker tripped: the worker exited, the queue is drained
+    /// and closed.  Terminal until the pool is redeployed.
+    Broken,
+    /// Graceful shutdown completed.
+    Stopped,
+}
+
+impl ShardState {
+    pub fn label(self) -> &'static str {
+        match self {
+            ShardState::Ready => "ready",
+            ShardState::Restarting => "restarting",
+            ShardState::Broken => "broken",
+            ShardState::Stopped => "stopped",
+        }
+    }
+
+    /// Can new work be queued onto this shard?
+    pub fn accepts_work(self) -> bool {
+        matches!(self, ShardState::Ready | ShardState::Restarting)
+    }
+}
+
+const STATE_READY: u8 = 0;
+const STATE_RESTARTING: u8 = 1;
+const STATE_BROKEN: u8 = 2;
+const STATE_STOPPED: u8 = 3;
+
+/// Lock-free per-shard health record, shared between the worker thread
+/// (writer) and dispatch / health probes (readers).
+#[derive(Debug, Default)]
+pub struct ShardHealth {
+    state: AtomicU8,
+    crashes: AtomicU64,
+    restarts: AtomicU64,
+    consecutive: AtomicU32,
+}
+
+impl ShardHealth {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn state(&self) -> ShardState {
+        match self.state.load(Ordering::Acquire) {
+            STATE_RESTARTING => ShardState::Restarting,
+            STATE_BROKEN => ShardState::Broken,
+            STATE_STOPPED => ShardState::Stopped,
+            _ => ShardState::Ready,
+        }
+    }
+
+    pub fn set_state(&self, s: ShardState) {
+        let v = match s {
+            ShardState::Ready => STATE_READY,
+            ShardState::Restarting => STATE_RESTARTING,
+            ShardState::Broken => STATE_BROKEN,
+            ShardState::Stopped => STATE_STOPPED,
+        };
+        self.state.store(v, Ordering::Release);
+    }
+
+    /// Record a crash; returns the new consecutive-crash count.
+    pub fn note_crash(&self) -> u32 {
+        self.crashes.fetch_add(1, Ordering::Relaxed);
+        self.consecutive.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Record a successful replica rebuild.
+    pub fn note_restart(&self) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A batch served successfully: the breaker window resets.
+    pub fn note_success(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+    }
+
+    pub fn crashes(&self) -> u64 {
+        self.crashes.load(Ordering::Relaxed)
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> ShardHealthSnapshot {
+        ShardHealthSnapshot {
+            state: self.state(),
+            crashes: self.crashes(),
+            restarts: self.restarts(),
+        }
+    }
+}
+
+/// Point-in-time view of one shard's health.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardHealthSnapshot {
+    pub state: ShardState,
+    pub crashes: u64,
+    pub restarts: u64,
+}
+
+/// Aggregate health of a coordinator pool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolHealth {
+    pub shards: Vec<ShardHealthSnapshot>,
+}
+
+impl PoolHealth {
+    /// At least one shard can accept work.
+    pub fn serviceable(&self) -> bool {
+        self.shards.iter().any(|s| s.state.accepts_work())
+    }
+
+    /// Some shard is not `Ready` (load balancers should prefer elsewhere).
+    pub fn degraded(&self) -> bool {
+        self.shards.iter().any(|s| s.state != ShardState::Ready)
+    }
+
+    pub fn crashes(&self) -> u64 {
+        self.shards.iter().map(|s| s.crashes).sum()
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.shards.iter().map(|s| s.restarts).sum()
+    }
+
+    /// `ready` / `degraded` / `down` — the coarse state OP_HEALTH reports.
+    pub fn label(&self) -> &'static str {
+        if !self.serviceable() {
+            "down"
+        } else if self.degraded() {
+            "degraded"
+        } else {
+            "ready"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let p = RestartPolicy {
+            max_consecutive: 5,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(40),
+        };
+        let d1 = p.backoff_delay(1, 0);
+        let d3 = p.backoff_delay(3, 0);
+        let d10 = p.backoff_delay(10, 0);
+        // base * 2^(n-1), within the +25% jitter envelope
+        assert!(d1 >= Duration::from_millis(5) && d1 < Duration::from_micros(6_250));
+        assert!(d3 >= Duration::from_millis(20) && d3 < Duration::from_millis(25));
+        // capped at max + jitter
+        assert!(d10 >= Duration::from_millis(40) && d10 < Duration::from_millis(50));
+        // deterministic for a fixed (attempt, seed)
+        assert_eq!(p.backoff_delay(2, 9), p.backoff_delay(2, 9));
+    }
+
+    #[test]
+    fn breaker_window_resets_on_success() {
+        let h = ShardHealth::new();
+        assert_eq!(h.note_crash(), 1);
+        assert_eq!(h.note_crash(), 2);
+        h.note_success();
+        assert_eq!(h.note_crash(), 1);
+        assert_eq!(h.crashes(), 3);
+    }
+
+    #[test]
+    fn pool_health_labels() {
+        let ready = ShardHealthSnapshot { state: ShardState::Ready, crashes: 0, restarts: 0 };
+        let broken = ShardHealthSnapshot { state: ShardState::Broken, crashes: 5, restarts: 4 };
+        let restarting =
+            ShardHealthSnapshot { state: ShardState::Restarting, crashes: 1, restarts: 0 };
+        assert_eq!(PoolHealth { shards: vec![ready, ready] }.label(), "ready");
+        assert_eq!(PoolHealth { shards: vec![ready, broken] }.label(), "degraded");
+        assert_eq!(PoolHealth { shards: vec![restarting] }.label(), "degraded");
+        assert_eq!(PoolHealth { shards: vec![broken, broken] }.label(), "down");
+        assert!(PoolHealth { shards: vec![restarting] }.serviceable());
+    }
+}

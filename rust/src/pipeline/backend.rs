@@ -15,19 +15,44 @@
 //! bottleneck layer gets more channel-partitioned lanes exactly the way
 //! the paper gives it more `P`.  A replica runs
 //! `total lanes + 1 (feeder)` threads; size a sharded pool accordingly.
+//!
+//! # Degradation
+//!
+//! A stage-lane death (panic contained by the runtime's per-stage
+//! wrapper, or a stepper failure) permanently fails the runtime — by
+//! design, since a linear pipeline with a dead stage can never complete
+//! another image.  Rather than turning every subsequent request into an
+//! error, the backend *degrades*: it tears the dead runtime down and
+//! re-runs the affected batch — and serves all later ones — on the
+//! bit-exact sequential [`Engine`] ([`NativeBackend`]).  Same weights,
+//! same packed-u64 numerics, so clients see identical scores, only the
+//! stage-level concurrency is lost.  The shard worker reads the
+//! [`Backend::failovers`]/[`Backend::crashes`] deltas into its metrics,
+//! making the degradation observable instead of silent.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::bcnn::Engine;
-use crate::coordinator::backend::{Backend, BatchResult};
+use crate::coordinator::backend::{Backend, BatchResult, NativeBackend};
 use crate::model::BcnnModel;
 use crate::pipeline::plan::StagePlan;
 use crate::pipeline::runtime::PipelineRuntime;
 use crate::pipeline::stage::StageSnapshot;
 
-/// Row-streaming layer-pipeline inference backend.
+/// Row-streaming layer-pipeline inference backend with engine fallback.
 pub struct PipelineBackend {
-    runtime: PipelineRuntime,
+    /// `None` once the pipeline has died and the backend degraded.
+    runtime: Option<PipelineRuntime>,
+    /// Kept to build the bit-exact fallback engine on demand.
+    model: BcnnModel,
+    /// The degraded path, built on first failover.
+    fallback: Option<NativeBackend>,
+    /// Last stage stats observed before the runtime was torn down, so
+    /// observability survives degradation.
+    last_stage_stats: Vec<StageSnapshot>,
+    kernel: &'static str,
+    failovers: u64,
+    crashes: u64,
 }
 
 impl PipelineBackend {
@@ -47,53 +72,140 @@ impl PipelineBackend {
         inflight: usize,
         stage_budget: usize,
     ) -> Result<Self> {
-        let engine = Engine::new(model)?;
+        let engine = Engine::new(model.clone())?;
         let runtime = if stage_budget == 0 {
             PipelineRuntime::new(engine, inflight)?
         } else {
             let plan = StagePlan::balanced(&engine, stage_budget)?;
             PipelineRuntime::with_plan(engine, inflight, plan)?
         };
-        Ok(Self { runtime })
+        Ok(Self::from_runtime(model, runtime))
     }
 
     /// Spawn with an explicit, already-chosen [`StagePlan`].
     pub fn with_plan(model: BcnnModel, inflight: usize, plan: StagePlan) -> Result<Self> {
-        let engine = Engine::new(model)?;
-        Ok(Self { runtime: PipelineRuntime::with_plan(engine, inflight, plan)? })
+        let engine = Engine::new(model.clone())?;
+        let runtime = PipelineRuntime::with_plan(engine, inflight, plan)?;
+        Ok(Self::from_runtime(model, runtime))
     }
 
-    pub fn runtime(&self) -> &PipelineRuntime {
-        &self.runtime
+    fn from_runtime(model: BcnnModel, runtime: PipelineRuntime) -> Self {
+        let kernel = runtime.kernel_name();
+        Self {
+            runtime: Some(runtime),
+            model,
+            fallback: None,
+            last_stage_stats: Vec::new(),
+            kernel,
+            failovers: 0,
+            crashes: 0,
+        }
+    }
+
+    /// The live pipeline runtime, or `None` once the backend has degraded
+    /// to the sequential engine path.
+    pub fn runtime(&self) -> Option<&PipelineRuntime> {
+        self.runtime.as_ref()
+    }
+
+    /// True once a stage death has pushed this replica onto the
+    /// sequential-engine fallback path.
+    pub fn degraded(&self) -> bool {
+        self.runtime.is_none()
+    }
+
+    /// Tear down the dead runtime (folding its crash count and final
+    /// stage stats into ours) and build the sequential fallback.
+    fn degrade(&mut self, why: &str) -> Result<()> {
+        if let Some(rt) = self.runtime.take() {
+            self.crashes += rt.crashes();
+            self.last_stage_stats = rt.stage_stats();
+            eprintln!("pipeline backend degrading to engine path: {why}");
+            // rt drops here: joins stage threads, fails stragglers typed
+        }
+        if self.fallback.is_none() {
+            self.fallback = Some(NativeBackend::new(self.model.clone())?);
+        }
+        Ok(())
     }
 }
 
 impl Backend for PipelineBackend {
     fn name(&self) -> &str {
-        "pipeline"
+        if self.degraded() {
+            "pipeline-degraded"
+        } else {
+            "pipeline"
+        }
     }
 
     fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchResult> {
-        // submit everything first: the whole batch streams through the
-        // stages concurrently, tickets complete in submission order
-        let mut tickets = Vec::with_capacity(images.len());
-        for img in images {
-            // the runtime's feeder slices rows on its own thread, so it
-            // needs an owned copy (the only copy on this path)
-            tickets.push(self.runtime.submit(img.to_vec())?);
+        if let Some(runtime) = &self.runtime {
+            // submit everything first: the whole batch streams through the
+            // stages concurrently, tickets complete in submission order
+            let mut tickets = Vec::with_capacity(images.len());
+            let mut submit_err = None;
+            for img in images {
+                // the runtime's feeder slices rows on its own thread, so it
+                // needs an owned copy (the only copy on this path)
+                match runtime.submit(img.to_vec()) {
+                    Ok(t) => tickets.push(t),
+                    Err(e) => {
+                        submit_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            let mut wait_err = None;
+            let mut scores = Vec::with_capacity(images.len());
+            if submit_err.is_none() {
+                for t in tickets {
+                    match t.wait() {
+                        Ok(s) => scores.push(s),
+                        Err(e) => {
+                            wait_err = Some(e);
+                            break;
+                        }
+                    }
+                }
+            }
+            match (submit_err, wait_err) {
+                (None, None) => {
+                    return Ok(BatchResult { scores, modeled_device_time: None });
+                }
+                (Some(e), _) | (_, Some(e)) => {
+                    // a stage died with this batch in flight: degrade and
+                    // re-run the WHOLE batch on the bit-exact engine so
+                    // the caller still gets every score
+                    self.degrade(&e.to_string())?;
+                }
+            }
         }
-        let scores = tickets
-            .into_iter()
-            .map(|t| t.wait())
-            .collect::<Result<Vec<_>>>()?;
-        Ok(BatchResult { scores, modeled_device_time: None })
+        // everything from here on is served via the degradation path
+        self.failovers += images.len() as u64;
+        let fallback = self
+            .fallback
+            .as_mut()
+            .ok_or_else(|| anyhow!("pipeline backend has no fallback engine"))?;
+        fallback.infer_batch(images)
     }
 
     fn stage_stats(&self) -> Vec<StageSnapshot> {
-        self.runtime.stage_stats()
+        match &self.runtime {
+            Some(rt) => rt.stage_stats(),
+            None => self.last_stage_stats.clone(),
+        }
     }
 
     fn kernel(&self) -> &'static str {
-        self.runtime.kernel_name()
+        self.kernel
+    }
+
+    fn failovers(&self) -> u64 {
+        self.failovers
+    }
+
+    fn crashes(&self) -> u64 {
+        self.crashes + self.runtime.as_ref().map_or(0, |rt| rt.crashes())
     }
 }

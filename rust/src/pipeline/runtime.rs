@@ -33,6 +33,8 @@
 //! complete fail with a typed [`StageError`] — never a hang (see
 //! `pipeline_integration.rs::drop_with_images_in_flight`).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
@@ -44,9 +46,10 @@ use crate::fpga::channel::fifo_rows;
 use crate::pipeline::fifo::{bounded, RowSender};
 use crate::pipeline::plan::StagePlan;
 use crate::pipeline::stage::{
-    fail_pending, new_pending, register_reply, run_stage_group, PendingReplies, PipeRow,
-    ScoreResult, StageCounters, StageError, StageOutput, StageSnapshot,
+    fail_pending, new_pending, pending_failure, register_reply, run_stage_group, PendingReplies,
+    PipeRow, ScoreResult, StageCounters, StageError, StageOutput, StageSnapshot,
 };
+use crate::util::sync::panic_message;
 
 /// An admitted image on its way to the feeder.
 type FeedMsg = (Vec<i32>, mpsc::Sender<ScoreResult>);
@@ -104,6 +107,9 @@ pub struct PipelineRuntime {
     /// Name of the bitwise SIMD kernel the engine dispatches to, captured
     /// at spawn (the engine itself moves into the stage threads).
     kernel: &'static str,
+    /// Stage-thread panics contained by the per-stage `catch_unwind`
+    /// wrappers (cumulative since spawn).
+    crashes: Arc<AtomicU64>,
 }
 
 impl PipelineRuntime {
@@ -156,6 +162,7 @@ impl PipelineRuntime {
         let pending = new_pending();
         let counters: Vec<Arc<StageCounters>> =
             (0..n).map(|_| Arc::new(StageCounters::default())).collect();
+        let crashes = Arc::new(AtomicU64::new(0));
         let mut threads = Vec::with_capacity(n + 1);
 
         // build the inter-stage FIFOs front to back, then hand each stage
@@ -182,10 +189,34 @@ impl PipelineRuntime {
             let engine = Arc::clone(&engine);
             let lanes = plan.lanes_per_layer[i];
             let ctr = Arc::clone(&counters[i]);
+            let pending = Arc::clone(&pending);
+            let crash_ctr = Arc::clone(&crashes);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("pipeline-stage-{i}"))
-                    .spawn(move || run_stage_group(&engine, i, lanes, rx, tx, &ctr))
+                    .spawn(move || {
+                        // Contain stage-thread panics (a stepper bug, an
+                        // injected fault): the unwind drops the stage's FIFO
+                        // endpoints, cascading closure both ways, and the
+                        // typed latch below guarantees every in-flight and
+                        // future ticket fails instead of hanging.  A helper
+                        // lane's panic re-raises through `thread::scope`
+                        // into the lead, so one wrapper per stage covers
+                        // the whole lane group.
+                        let result = catch_unwind(AssertUnwindSafe(|| {
+                            run_stage_group(&engine, i, lanes, rx, tx, &ctr)
+                        }));
+                        if let Err(payload) = result {
+                            crash_ctr.fetch_add(1, Ordering::Relaxed);
+                            fail_pending(
+                                &pending,
+                                StageError::Failed(format!(
+                                    "stage {i} panicked: {}",
+                                    panic_message(payload.as_ref())
+                                )),
+                            );
+                        }
+                    })
                     .expect("spawn pipeline stage"),
             );
         }
@@ -242,6 +273,7 @@ impl PipelineRuntime {
             inflight,
             input_len,
             kernel,
+            crashes,
         })
     }
 
@@ -294,6 +326,19 @@ impl PipelineRuntime {
     /// Total threads: every stage's lanes plus the feeder.
     pub fn thread_count(&self) -> usize {
         self.plan.total_lanes() + 1
+    }
+
+    /// Stage-thread panics contained since spawn (0 on a healthy runtime).
+    pub fn crashes(&self) -> u64 {
+        self.crashes.load(Ordering::Relaxed)
+    }
+
+    /// The latched pipeline failure, if any: `Some` once no future image
+    /// can complete on this runtime (a stage died or shutdown began).
+    /// [`crate::pipeline::PipelineBackend`] polls this to decide when to
+    /// degrade to the bit-exact engine path.
+    pub fn failure(&self) -> Option<StageError> {
+        pending_failure(&self.pending)
     }
 
     /// Live per-stage busy/stall snapshot — the bottleneck stage is the

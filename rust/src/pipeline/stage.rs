@@ -52,6 +52,8 @@ use std::time::{Duration, Instant};
 use crate::bcnn::engine::{LayerStepper, RowRef, StepperOut};
 use crate::bcnn::Engine;
 use crate::pipeline::fifo::{bounded, RowReceiver, RowSender};
+use crate::util::faults;
+use crate::util::sync::lock_recover;
 
 /// A row in flight between stages: raw integers into the first layer,
 /// packed bits everywhere else.
@@ -185,7 +187,7 @@ pub fn new_pending() -> PendingReplies {
 /// already failed, the ticket is failed immediately instead of being
 /// queued behind a classifier that will never pop it.
 pub fn register_reply(pending: &PendingReplies, reply: mpsc::Sender<ScoreResult>) {
-    let mut state = pending.lock().unwrap();
+    let mut state = lock_recover(pending);
     match &state.failed {
         Some(error) => {
             let _ = reply.send(Err(error.clone()));
@@ -197,7 +199,7 @@ pub fn register_reply(pending: &PendingReplies, reply: mpsc::Sender<ScoreResult>
 /// Latch the failure `error` (first caller wins) and fail every ticket
 /// currently in flight.
 pub fn fail_pending(pending: &PendingReplies, error: StageError) {
-    let mut state = pending.lock().unwrap();
+    let mut state = lock_recover(pending);
     if state.failed.is_none() {
         state.failed = Some(error);
     }
@@ -205,6 +207,12 @@ pub fn fail_pending(pending: &PendingReplies, error: StageError) {
     for reply in state.queue.drain(..) {
         let _ = reply.send(Err(error.clone()));
     }
+}
+
+/// The latched failure, if any (readers: runtime health accessors and the
+/// degrading [`crate::pipeline::PipelineBackend`]).
+pub fn pending_failure(pending: &PendingReplies) -> Option<StageError> {
+    lock_recover(pending).failed.clone()
 }
 
 /// Where a stage's emissions go: another stage's FIFO, or (for the
@@ -497,11 +505,17 @@ fn finish_stage(tx: &StageOutput) {
 }
 
 /// Forward one emission; `false` means the downstream side is gone.
+/// The `stage_emit` fault site lives here: a deterministic injection plan
+/// can panic or stall a stage exactly at the emission boundary, the point
+/// where a real stepper bug would surface.
 fn forward(tx: &StageOutput, out: StepperOut) -> bool {
+    if faults::fire(faults::SITE_STAGE_EMIT) {
+        return false; // deny: behave as if downstream vanished (cascade)
+    }
     match (tx, out) {
         (StageOutput::Rows(tx), StepperOut::Row(row)) => tx.send(PipeRow::Bits(row)).is_ok(),
         (StageOutput::Scores(pending), StepperOut::Scores(scores)) => {
-            let slot = pending.lock().unwrap().queue.pop_front();
+            let slot = lock_recover(pending).queue.pop_front();
             if let Some(reply) = slot {
                 // the ticket holder may have given up; that's their right
                 let _ = reply.send(Ok(scores));

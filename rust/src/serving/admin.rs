@@ -17,6 +17,7 @@
 //! OP_ROLLBACK name                   -> REPLY_OK, u64 new version
 //! OP_LIST                            -> REPLY_JSON, u32 len, bytes
 //! OP_STATS                           -> REPLY_JSON, u32 len, bytes
+//! OP_HEALTH                          -> REPLY_JSON, u32 len, bytes
 //! error (any op)                     -> 0xFFFF_FFFF, u32 len, msg bytes
 //! ```
 //!
@@ -50,6 +51,7 @@ pub const OP_UNDEPLOY: u32 = 0xBC20_0003;
 pub const OP_ROLLBACK: u32 = 0xBC20_0004;
 pub const OP_LIST: u32 = 0xBC20_0005;
 pub const OP_STATS: u32 = 0xBC20_0006;
+pub const OP_HEALTH: u32 = 0xBC20_0007;
 pub const REPLY_SCORES: u32 = 0xBC20_0081;
 pub const REPLY_OK: u32 = 0xBC20_0082;
 pub const REPLY_JSON: u32 = 0xBC20_0083;
@@ -92,7 +94,7 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
             // ---- protocol-v1 compatibility: tag is the request length --
             n if (n as usize) <= MAX_WIRE_VALUES => {
                 let image = read_image(&mut stream, n as usize)?;
-                let entry = match router.resolve(None) {
+                let entry = match router.resolve_healthy(None) {
                     Ok(e) => e,
                     Err(e) => {
                         write_error(&mut stream, &e.to_string())?;
@@ -126,7 +128,7 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
                 }
                 let image = read_image(&mut stream, n)?;
                 let sel = if name.is_empty() { None } else { Some(name.as_str()) };
-                let entry = match router.resolve(sel) {
+                let entry = match router.resolve_healthy(sel) {
                     Ok(e) => e,
                     Err(e) => {
                         write_error(&mut stream, &e.to_string())?;
@@ -173,6 +175,10 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
                 let json = stats_json(registry);
                 write_json(&mut stream, &json)?;
             }
+            OP_HEALTH => {
+                let json = health_json(registry);
+                write_json(&mut stream, &json)?;
+            }
             other => {
                 let _ = write_error(&mut stream, &format!("unknown frame tag {other:#010x}"));
                 bail!("unknown frame tag {other:#010x}");
@@ -192,6 +198,9 @@ fn infer_on(entry: &ModelEntry, image: Vec<i32>) -> std::result::Result<Vec<f32>
                 format!("model {:?} overloaded: all shard queues full", entry.name)
             }
             SubmitError::Shutdown => format!("model {:?} pool shut down", entry.name),
+            SubmitError::ShardDown { .. } => {
+                format!("model {:?} pool down: all shards crashed or breaker-open", entry.name)
+            }
         })?;
     let reply = rx
         .recv()
@@ -294,6 +303,38 @@ pub fn stats_json(registry: &ModelRegistry) -> Json {
         })
         .collect();
     obj(vec![("epoch", Json::Num(registry.epoch() as f64)), ("models", Json::Arr(rows))])
+}
+
+/// `HEALTH` payload: per-model pool supervision state — ready/degraded/
+/// down plus per-shard crash/restart counters.  The admin-plane view of
+/// the degradation ladder: a "degraded" model is still serving on its
+/// surviving shards, a "down" model only answers via router failover.
+pub fn health_json(registry: &ModelRegistry) -> Json {
+    let models: Vec<Json> = registry
+        .list()
+        .into_iter()
+        .map(|e| {
+            let health = e.health();
+            let shards: Vec<Json> = health
+                .shards
+                .iter()
+                .map(|s| {
+                    obj(vec![
+                        ("state", Json::Str(s.state.label().to_string())),
+                        ("crashes", Json::Num(s.crashes as f64)),
+                        ("restarts", Json::Num(s.restarts as f64)),
+                    ])
+                })
+                .collect();
+            obj(vec![
+                ("name", Json::Str(e.name.clone())),
+                ("version", Json::Num(e.version as f64)),
+                ("state", Json::Str(health.label().to_string())),
+                ("shards", Json::Arr(shards)),
+            ])
+        })
+        .collect();
+    obj(vec![("epoch", Json::Num(registry.epoch() as f64)), ("models", Json::Arr(models))])
 }
 
 // ---------------------------------------------------------------------------
@@ -433,6 +474,12 @@ impl ControlClient {
 
     pub fn stats(&mut self) -> Result<Json> {
         self.json_op(OP_STATS)
+    }
+
+    /// Per-model pool health (supervision state + shard crash/restart
+    /// counters).
+    pub fn health(&mut self) -> Result<Json> {
+        self.json_op(OP_HEALTH)
     }
 
     fn json_op(&mut self, op: u32) -> Result<Json> {

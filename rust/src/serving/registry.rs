@@ -28,12 +28,13 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::bcnn::Engine;
 use crate::coordinator::{
     Backend, BackendFactory, BatchPolicy, Client, Coordinator, CoordinatorConfig, FpgaSimBackend,
-    GpuSimBackend, Metrics, NativeBackend, PipelineBackend,
+    GpuSimBackend, Metrics, NativeBackend, PipelineBackend, PoolHealth, RestartPolicy,
 };
 use crate::gpu::GpuKernel;
 use crate::model::{BcnnModel, NetConfig};
 use crate::pipeline::StagePlan;
 use crate::serving::router::{Router, RoutingTable, TableSlot};
+use crate::util::sync::{lock_recover, read_recover, write_recover};
 
 /// Which backend a model entry's pool replicates (paper backends plus the
 /// row-streaming pipeline; see `crate::coordinator::backend`).
@@ -117,7 +118,7 @@ impl BackendSpec {
                 }
                 BackendSpec::Pipeline { inflight, stage_threads } => {
                     let plan = {
-                        let mut slot = shared_plan.lock().unwrap();
+                        let mut slot = lock_recover(&shared_plan);
                         match &*slot {
                             Some(plan) => plan.clone(),
                             None => {
@@ -261,6 +262,17 @@ impl ModelEntry {
     pub fn workers(&self) -> usize {
         self.coordinator.workers()
     }
+
+    /// Per-shard supervision health of this version's pool.
+    pub fn health(&self) -> PoolHealth {
+        self.coordinator.health()
+    }
+
+    /// True while at least one shard can still accept work — the router's
+    /// failover predicate.
+    pub fn is_serviceable(&self) -> bool {
+        self.health().serviceable()
+    }
 }
 
 /// `stats()` row: one model name across all its versions.
@@ -347,7 +359,7 @@ impl ModelRegistry {
         // before any lock is taken, so routing, stats, and the accept
         // loop never stall behind a pool build
         let pool = build_pool(name, &spec)?;
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         let version = self.publish_locked(&mut st, name, spec, pool, true);
         reap(&mut st);
         Ok(version)
@@ -356,7 +368,7 @@ impl ModelRegistry {
     /// Remove `name` from the routing table.  In-flight requests finish;
     /// the pool is joined once drained.  Returns the retired version.
     pub fn undeploy(&self, name: &str) -> Result<u64> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         let old = self.swap_table(|table| match table.entries.remove(name) {
             Some(old) => {
                 if table.default.as_deref() == Some(name) {
@@ -386,7 +398,7 @@ impl ModelRegistry {
     /// accept loop never blocks on this lock (`reap_retired` try-locks).
     /// A failed build leaves the rollback point in place for a retry.
     pub fn rollback(&self, name: &str) -> Result<u64> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         let spec = st
             .lineage
             .get(name)
@@ -409,7 +421,7 @@ impl ModelRegistry {
     /// these for any field the frame leaves unset, so a hot-swap does not
     /// silently reset a tuned pool to defaults.
     pub fn current_params(&self, name: &str) -> Option<(BackendSpec, usize, usize, BatchPolicy)> {
-        let st = self.state.lock().unwrap();
+        let st = lock_recover(&self.state);
         st.lineage
             .get(name)
             .and_then(|l| l.current.as_ref())
@@ -418,7 +430,7 @@ impl ModelRegistry {
 
     /// Make `name` the protocol-v1 default route.
     pub fn set_default(&self, name: &str) -> Result<()> {
-        let _st = self.state.lock().unwrap();
+        let _st = lock_recover(&self.state);
         self.swap_table(|table| {
             if !table.entries.contains_key(name) {
                 bail!("no model {name:?} deployed");
@@ -431,20 +443,20 @@ impl ModelRegistry {
 
     /// Current routing epoch (bumps on every deploy/undeploy/rollback).
     pub fn epoch(&self) -> u64 {
-        self.slot.read().unwrap().epoch
+        read_recover(&self.slot).epoch
     }
 
     /// Deployed entries, in name order.
     pub fn list(&self) -> Vec<Arc<ModelEntry>> {
-        self.slot.read().unwrap().entries.values().cloned().collect()
+        read_recover(&self.slot).entries.values().cloned().collect()
     }
 
     /// Per-model serving stats across versions: lineage accumulator
     /// (reaped pools) + still-draining retired pools + the live pool.
     pub fn stats(&self) -> Vec<ModelStats> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         reap(&mut st);
-        let table = Arc::clone(&self.slot.read().unwrap());
+        let table = Arc::clone(&read_recover(&self.slot));
         let mut rows: BTreeMap<String, ModelStats> = BTreeMap::new();
         for (name, lin) in &st.lineage {
             rows.insert(
@@ -505,7 +517,7 @@ impl ModelRegistry {
         let start = Instant::now();
         loop {
             {
-                let mut st = self.state.lock().unwrap();
+                let mut st = lock_recover(&self.state);
                 reap(&mut st);
                 if st.retired.is_empty() {
                     return Ok(());
@@ -570,7 +582,7 @@ impl ModelRegistry {
     where
         F: FnOnce(&mut RoutingTable) -> Result<Option<Arc<ModelEntry>>>,
     {
-        let mut slot = self.slot.write().unwrap();
+        let mut slot = write_recover(&self.slot);
         let mut next: RoutingTable = (**slot).clone();
         next.epoch += 1;
         let displaced = mutate(&mut next)?;
@@ -590,6 +602,7 @@ fn build_pool(name: &str, spec: &DeploySpec) -> Result<Coordinator> {
             policy: spec.policy,
             workers: spec.workers,
             queue_depth: spec.queue_depth,
+            restart: RestartPolicy::default(),
         },
     )
     .with_context(|| format!("building pool for model {name:?}"))
@@ -636,7 +649,7 @@ impl Drop for ModelRegistry {
     fn drop(&mut self) {
         // live pools: unpublish everything so their queues poison cleanly
         let entries: Vec<Arc<ModelEntry>> = {
-            let mut slot = self.slot.write().unwrap();
+            let mut slot = write_recover(&self.slot);
             let old = Arc::clone(&slot);
             *slot = Arc::new(RoutingTable {
                 epoch: old.epoch + 1,
@@ -646,7 +659,7 @@ impl Drop for ModelRegistry {
             old.entries.values().cloned().collect()
         };
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_recover(&self.state);
             for entry in entries {
                 let name = entry.name.clone();
                 st.retired.push(Retired { name, entry });

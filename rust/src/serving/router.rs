@@ -15,6 +15,7 @@ use std::fmt;
 use std::sync::{Arc, RwLock};
 
 use crate::serving::registry::ModelEntry;
+use crate::util::sync::read_recover;
 
 /// One immutable routing snapshot.  `epoch` increments on every publish,
 /// so clients can detect (and log) that a swap happened between requests.
@@ -33,6 +34,9 @@ pub enum RouteError {
     Unknown(String),
     /// Request named no model and no default is deployed.
     NoDefault,
+    /// The routed model's pool is down (circuit breaker open on every
+    /// shard) and no compatible healthy entry exists to fail over to.
+    Degraded(String),
 }
 
 impl fmt::Display for RouteError {
@@ -40,6 +44,9 @@ impl fmt::Display for RouteError {
         match self {
             RouteError::Unknown(name) => write!(f, "no model {name:?} deployed"),
             RouteError::NoDefault => write!(f, "no models deployed"),
+            RouteError::Degraded(name) => {
+                write!(f, "model {name:?} is down and no compatible healthy model is deployed")
+            }
         }
     }
 }
@@ -66,12 +73,12 @@ impl Router {
 
     /// Current table snapshot (immutable; holds its entries alive).
     pub fn snapshot(&self) -> Arc<RoutingTable> {
-        Arc::clone(&self.slot.read().unwrap())
+        Arc::clone(&read_recover(&self.slot))
     }
 
     /// Epoch of the current table.
     pub fn epoch(&self) -> u64 {
-        self.slot.read().unwrap().epoch
+        read_recover(&self.slot).epoch
     }
 
     /// Resolve a request to a model entry.  `None` (or `Some("")`) routes
@@ -92,6 +99,29 @@ impl Router {
                     .cloned()
                     .ok_or_else(|| RouteError::Unknown(d.to_string()))
             }
+        }
+    }
+
+    /// [`Router::resolve`] plus pool-health failover: if the routed
+    /// entry's pool is down (every shard crashed or breaker-open), route
+    /// to another *serviceable* entry serving the same network config —
+    /// same input geometry, same classes, bit-exact scores — before
+    /// giving up with [`RouteError::Degraded`].  A healthy primary is
+    /// always used directly, so failover never steals traffic.
+    pub fn resolve_healthy(&self, name: Option<&str>) -> Result<Arc<ModelEntry>, RouteError> {
+        let primary = self.resolve(name)?;
+        if primary.is_serviceable() {
+            return Ok(primary);
+        }
+        let table = self.snapshot();
+        let standby = table.entries.values().find(|e| {
+            e.name != primary.name
+                && e.config.name == primary.config.name
+                && e.is_serviceable()
+        });
+        match standby {
+            Some(entry) => Ok(Arc::clone(entry)),
+            None => Err(RouteError::Degraded(primary.name.clone())),
         }
     }
 

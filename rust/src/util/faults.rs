@@ -1,0 +1,418 @@
+//! Deterministic fault injection — the testing backbone behind the
+//! supervision layer (DESIGN.md §6).
+//!
+//! A [`FaultPlan`] names *sites* in the serving stack (backend infer,
+//! stage emission, submit, server read/write) and attaches *actions*
+//! (panic, delay, deny) fired by deterministic *triggers*.  Each site
+//! keeps a global hit counter; whether hit `k` at site `s` fires is a
+//! pure function of `(seed, s, k)` via [`SplitMix64`], so the fault
+//! schedule is reproducible regardless of thread interleaving (which
+//! request absorbs hit `k` varies; how many faults fire over N hits does
+//! not).
+//!
+//! Configured via the `BCNN_FAULTS` env var or `--faults` (spec grammar
+//! below); compiled to a single relaxed atomic load when unset, so the
+//! hot paths pay nothing in production.
+//!
+//! Spec grammar (`;`-separated clauses):
+//!
+//! ```text
+//! seed=1337;backend_infer:panic@every=150;stage_emit:delay=1ms@p=0.02;submit:deny@once=7
+//! ```
+//!
+//! * site    — one of [`SITES`]
+//! * action  — `panic` | `delay=<N>{us|ms|s}` | `deny`
+//! * trigger — `p=<f64>` | `once=<k>` | `every=<k>` | `first=<k>`
+//!   (default `p=1`, i.e. every hit)
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::prng::SplitMix64;
+
+/// Environment variable holding the fault-plan spec.
+pub const FAULTS_ENV: &str = "BCNN_FAULTS";
+
+/// The named injection sites wired into the serving stack.
+pub const SITES: &[&str] = [
+    SITE_BACKEND_INFER,
+    SITE_STAGE_EMIT,
+    SITE_SUBMIT,
+    SITE_SERVER_READ,
+    SITE_SERVER_WRITE,
+]
+.as_slice();
+
+/// Around `Backend::infer_batch` on the shard worker (panic = worker crash).
+pub const SITE_BACKEND_INFER: &str = "backend_infer";
+/// Per row emission inside a pipeline stage lane (panic = stage death).
+pub const SITE_STAGE_EMIT: &str = "stage_emit";
+/// At `Client::submit` (deny = synthetic queue-full storm).
+pub const SITE_SUBMIT: &str = "submit";
+/// After a TCP request frame is parsed (deny = shed the request).
+pub const SITE_SERVER_READ: &str = "server_read";
+/// Before a TCP reply frame is written (deny = error frame instead).
+pub const SITE_SERVER_WRITE: &str = "server_write";
+
+/// What a firing rule does to the caller.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// Unwind the calling thread (contained by the supervision layer).
+    Panic,
+    /// Sleep for the given duration (latency storm).
+    Delay(Duration),
+    /// Report "deny" to the call site (queue-full / shed semantics).
+    Deny,
+}
+
+/// When a rule fires, as a pure function of the site hit counter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Trigger {
+    /// Independently with probability `p` per hit (seeded, deterministic).
+    Prob(f64),
+    /// Exactly on hit `k` (1-based).
+    Once(u64),
+    /// On hits `k, 2k, 3k, ...`.
+    Every(u64),
+    /// On every hit `<= k`.
+    First(u64),
+}
+
+/// One `site:action@trigger` clause.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRule {
+    pub site: &'static str,
+    pub action: FaultAction,
+    pub trigger: Trigger,
+}
+
+/// A parsed, validated fault plan.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse a spec string (grammar in the module docs).  Empty specs give
+    /// an empty plan (no rules, never fires).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan { seed: 0, rules: Vec::new() };
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(seed) = clause.strip_prefix("seed=") {
+                plan.seed = seed.parse().map_err(|_| anyhow!("bad seed {seed:?}"))?;
+                continue;
+            }
+            let (site_name, rest) = clause
+                .split_once(':')
+                .ok_or_else(|| anyhow!("clause {clause:?} is not site:action[@trigger]"))?;
+            let site = SITES
+                .iter()
+                .copied()
+                .find(|s| *s == site_name)
+                .ok_or_else(|| anyhow!("unknown fault site {site_name:?} (valid: {SITES:?})"))?;
+            let (action_str, trigger_str) = match rest.split_once('@') {
+                Some((a, t)) => (a, Some(t)),
+                None => (rest, None),
+            };
+            let action = parse_action(action_str)?;
+            let trigger = match trigger_str {
+                None => Trigger::Prob(1.0),
+                Some(t) => parse_trigger(t)?,
+            };
+            plan.rules.push(FaultRule { site, action, trigger });
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan can never fire.
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+fn parse_action(s: &str) -> Result<FaultAction> {
+    if s == "panic" {
+        return Ok(FaultAction::Panic);
+    }
+    if s == "deny" {
+        return Ok(FaultAction::Deny);
+    }
+    if let Some(d) = s.strip_prefix("delay=") {
+        return Ok(FaultAction::Delay(parse_duration(d)?));
+    }
+    bail!("unknown fault action {s:?} (panic | delay=<dur> | deny)")
+}
+
+fn parse_duration(s: &str) -> Result<Duration> {
+    let (num, scale_us) = if let Some(n) = s.strip_suffix("us") {
+        (n, 1u64)
+    } else if let Some(n) = s.strip_suffix("ms") {
+        (n, 1_000)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1_000_000)
+    } else {
+        bail!("duration {s:?} needs a us/ms/s suffix")
+    };
+    let v: u64 = num.parse().map_err(|_| anyhow!("bad duration {s:?}"))?;
+    Ok(Duration::from_micros(v * scale_us))
+}
+
+fn parse_trigger(s: &str) -> Result<Trigger> {
+    if let Some(p) = s.strip_prefix("p=") {
+        let p: f64 = p.parse().map_err(|_| anyhow!("bad probability {p:?}"))?;
+        if !(0.0..=1.0).contains(&p) {
+            bail!("probability {p} out of [0,1]");
+        }
+        return Ok(Trigger::Prob(p));
+    }
+    for (prefix, make) in [
+        ("once=", Trigger::Once as fn(u64) -> Trigger),
+        ("every=", Trigger::Every as fn(u64) -> Trigger),
+        ("first=", Trigger::First as fn(u64) -> Trigger),
+    ] {
+        if let Some(k) = s.strip_prefix(prefix) {
+            let k: u64 = k.parse().map_err(|_| anyhow!("bad trigger count {k:?}"))?;
+            if k == 0 {
+                bail!("trigger count must be >= 1 in {s:?}");
+            }
+            return Ok(make(k));
+        }
+    }
+    bail!("unknown trigger {s:?} (p=<f> | once=<k> | every=<k> | first=<k>)")
+}
+
+// ---------------------------------------------------------------------------
+// global armed state
+// ---------------------------------------------------------------------------
+
+const MODE_UNINIT: u8 = 0;
+const MODE_OFF: u8 = 1;
+const MODE_ON: u8 = 2;
+
+/// Fast-path gate: a single relaxed load decides "faults off" without
+/// touching the `RwLock`.
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNINIT);
+
+struct Armed {
+    plan: FaultPlan,
+    /// One monotone hit counter per entry of [`SITES`].
+    hits: Vec<AtomicU64>,
+    /// Fired count per rule (observability for soak asserts).
+    fired: Vec<AtomicU64>,
+}
+
+fn armed_slot() -> &'static RwLock<Option<Arc<Armed>>> {
+    static SLOT: OnceLock<RwLock<Option<Arc<Armed>>>> = OnceLock::new();
+    SLOT.get_or_init(|| RwLock::new(None))
+}
+
+/// Arm `plan` process-wide (tests, `--faults`).  An empty plan disarms.
+pub fn install(plan: FaultPlan) {
+    let armed = if plan.is_empty() {
+        None
+    } else {
+        Some(Arc::new(Armed {
+            hits: SITES.iter().map(|_| AtomicU64::new(0)).collect(),
+            fired: plan.rules.iter().map(|_| AtomicU64::new(0)).collect(),
+            plan,
+        }))
+    };
+    let mode = if armed.is_some() { MODE_ON } else { MODE_OFF };
+    let mut slot = armed_slot().write().unwrap_or_else(std::sync::PoisonError::into_inner);
+    *slot = armed;
+    MODE.store(mode, Ordering::Release);
+}
+
+/// Disarm all faults (tests call this between cases).
+pub fn clear() {
+    install(FaultPlan::default());
+}
+
+/// True when a non-empty plan is armed.
+pub fn active() -> bool {
+    maybe_init();
+    MODE.load(Ordering::Acquire) == MODE_ON
+}
+
+/// First-use initialisation from `BCNN_FAULTS` (a parse error disarms and
+/// warns rather than panicking inside an arbitrary serving thread).
+fn maybe_init() {
+    if MODE.load(Ordering::Acquire) != MODE_UNINIT {
+        return;
+    }
+    let plan = match std::env::var(FAULTS_ENV) {
+        Ok(spec) if !spec.trim().is_empty() => match FaultPlan::parse(&spec) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("warning: ignoring unparsable {FAULTS_ENV}={spec:?}: {e}");
+                FaultPlan::default()
+            }
+        },
+        _ => FaultPlan::default(),
+    };
+    install(plan);
+}
+
+/// Per-rule fired counts as `(site:action, count)` (empty when disarmed).
+pub fn fired_counts() -> Vec<(String, u64)> {
+    maybe_init();
+    let slot = armed_slot().read().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let Some(armed) = slot.as_ref() else {
+        return Vec::new();
+    };
+    armed
+        .plan
+        .rules
+        .iter()
+        .zip(&armed.fired)
+        .map(|(r, f)| {
+            let label = match r.action {
+                FaultAction::Panic => format!("{}:panic", r.site),
+                FaultAction::Delay(d) => format!("{}:delay={}us", r.site, d.as_micros()),
+                FaultAction::Deny => format!("{}:deny", r.site),
+            };
+            (label, f.load(Ordering::Relaxed))
+        })
+        .collect()
+}
+
+/// Evaluate the armed plan at `site`.  Delays are slept here, panics
+/// unwind from here (the supervision layer contains them), and `true`
+/// means a `deny` rule fired.  A single relaxed atomic load when no plan
+/// is armed.
+pub fn fire(site: &'static str) -> bool {
+    match MODE.load(Ordering::Acquire) {
+        MODE_OFF => return false,
+        MODE_UNINIT => {
+            maybe_init();
+            if MODE.load(Ordering::Acquire) != MODE_ON {
+                return false;
+            }
+        }
+        _ => {}
+    }
+    let armed = {
+        let slot = armed_slot().read().unwrap_or_else(std::sync::PoisonError::into_inner);
+        match slot.as_ref() {
+            Some(a) => Arc::clone(a),
+            None => return false,
+        }
+    };
+    let Some(site_idx) = SITES.iter().position(|s| *s == site) else {
+        return false;
+    };
+    // 1-based hit index: `once=1` means the very first hit
+    let hit = armed.hits[site_idx].fetch_add(1, Ordering::Relaxed) + 1;
+    let mut deny = false;
+    for (rule_idx, rule) in armed.plan.rules.iter().enumerate() {
+        if rule.site != site || !decide(armed.plan.seed, site_idx, hit, rule.trigger) {
+            continue;
+        }
+        armed.fired[rule_idx].fetch_add(1, Ordering::Relaxed);
+        match rule.action {
+            FaultAction::Delay(d) => std::thread::sleep(d),
+            FaultAction::Deny => deny = true,
+            FaultAction::Panic => {
+                panic!("injected fault: panic at {site} (hit {hit})")
+            }
+        }
+    }
+    deny
+}
+
+/// Pure per-hit decision: `(seed, site, hit)` fully determine the outcome.
+fn decide(seed: u64, site_idx: usize, hit: u64, trigger: Trigger) -> bool {
+    match trigger {
+        Trigger::Once(k) => hit == k,
+        Trigger::Every(k) => hit % k == 0,
+        Trigger::First(k) => hit <= k,
+        Trigger::Prob(p) => {
+            if p >= 1.0 {
+                return true;
+            }
+            if p <= 0.0 {
+                return false;
+            }
+            let mut r = SplitMix64::new(
+                seed ^ (site_idx as u64).wrapping_mul(0xA076_1D64_78BD_642F) ^ hit,
+            );
+            r.f64() < p
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let plan = FaultPlan::parse(
+            "seed=42;backend_infer:panic@every=10;stage_emit:delay=2ms@p=0.5;\
+             submit:deny@once=3;server_read:delay=50us@first=2;server_write:deny",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.rules.len(), 5);
+        assert_eq!(plan.rules[0].action, FaultAction::Panic);
+        assert_eq!(plan.rules[0].trigger, Trigger::Every(10));
+        assert_eq!(plan.rules[1].action, FaultAction::Delay(Duration::from_millis(2)));
+        assert_eq!(plan.rules[2].trigger, Trigger::Once(3));
+        assert_eq!(plan.rules[3].trigger, Trigger::First(2));
+        assert_eq!(plan.rules[4].trigger, Trigger::Prob(1.0));
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in [
+            "nosuchsite:panic",
+            "backend_infer:explode",
+            "backend_infer:delay=5",
+            "backend_infer:panic@p=2.0",
+            "backend_infer:panic@every=0",
+            "seed=abc",
+            "backend_infer",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn empty_spec_is_empty_plan() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn decisions_are_deterministic() {
+        let fires: Vec<bool> =
+            (1..=1000).map(|hit| decide(7, 0, hit, Trigger::Prob(0.1))).collect();
+        let again: Vec<bool> =
+            (1..=1000).map(|hit| decide(7, 0, hit, Trigger::Prob(0.1))).collect();
+        assert_eq!(fires, again);
+        let count = fires.iter().filter(|f| **f).count();
+        assert!((50..200).contains(&count), "p=0.1 fired {count}/1000");
+        // different seed, different schedule
+        let other: Vec<bool> =
+            (1..=1000).map(|hit| decide(8, 0, hit, Trigger::Prob(0.1))).collect();
+        assert_ne!(fires, other);
+    }
+
+    #[test]
+    fn counter_triggers() {
+        assert!(decide(0, 0, 5, Trigger::Once(5)));
+        assert!(!decide(0, 0, 6, Trigger::Once(5)));
+        assert!(decide(0, 0, 10, Trigger::Every(5)));
+        assert!(!decide(0, 0, 11, Trigger::Every(5)));
+        assert!(decide(0, 0, 2, Trigger::First(2)));
+        assert!(!decide(0, 0, 3, Trigger::First(2)));
+    }
+}

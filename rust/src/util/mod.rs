@@ -1,12 +1,18 @@
 //! Small self-contained substrates the offline environment forces us to
 //! own: a seeded PRNG (no `rand`), a minimal JSON reader (no `serde_json`),
-//! bit-string copy helpers shared by the engine and the model loader, and
-//! the runtime-dispatched SIMD kernels behind the bitwise hot path.
+//! bit-string copy helpers shared by the engine and the model loader, the
+//! runtime-dispatched SIMD kernels behind the bitwise hot path, and the
+//! deterministic fault-injection + poison-tolerant-locking substrate the
+//! supervision layer is built on.
 
 pub mod bits;
+pub mod faults;
 pub mod json;
 pub mod kernels;
 pub mod prng;
+pub mod sync;
 
+pub use faults::{FaultAction, FaultPlan, FaultRule, Trigger, FAULTS_ENV};
 pub use kernels::{Kernel, KernelError, KernelKind};
 pub use prng::SplitMix64;
+pub use sync::{lock_recover, panic_message, read_recover, write_recover};

@@ -1,0 +1,79 @@
+//! Poison-tolerant locking helpers.
+//!
+//! A thread that panics while holding a `Mutex`/`RwLock` poisons it; the
+//! default `.lock().unwrap()` then propagates that panic into every other
+//! thread touching the lock — one crash takes a whole pool down.  The
+//! supervision layer (DESIGN.md §6) contains panics instead, so lock
+//! poisoning downgrades to "the protected data may be mid-update": for
+//! our uses (metrics counters, routing tables, reply queues) the values
+//! are always individually valid, so recovering the guard is safe.
+
+use std::any::Any;
+use std::sync::{Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// `lock()` that survives poisoning (recovers the inner guard).
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `read()` that survives poisoning.
+pub fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `write()` that survives poisoning.
+pub fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Best-effort human-readable payload from `catch_unwind`.
+pub fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn recovers_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "expected the lock to be poisoned");
+        assert_eq!(*lock_recover(&m), 7);
+    }
+
+    #[test]
+    fn recovers_poisoned_rwlock() {
+        let l = Arc::new(RwLock::new(3u32));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(*read_recover(&l), 3);
+        *write_recover(&l) = 4;
+        assert_eq!(*read_recover(&l), 4);
+    }
+
+    #[test]
+    fn panic_payload_extraction() {
+        let p = std::panic::catch_unwind(|| panic!("literal")).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "literal");
+        let p = std::panic::catch_unwind(|| panic!("formatted {}", 1)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "formatted 1");
+    }
+}

@@ -1,0 +1,315 @@
+//! Fault-injection integration tests: the supervision layer under
+//! deterministic crash schedules (DESIGN.md §6).
+//!
+//! Every test arms a process-global [`FaultPlan`], so the cases serialize
+//! through one mutex and disarm on drop — a panicking assertion cannot
+//! leak an armed plan into the next case.
+
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use repro::bcnn::Engine;
+use repro::coordinator::workload::random_images;
+use repro::coordinator::{
+    Backend, BackendFactory, Coordinator, CoordinatorConfig, NativeBackend, PipelineBackend,
+    RestartPolicy, SubmitError,
+};
+use repro::model::{BcnnModel, NetConfig};
+use repro::pipeline::PipelineRuntime;
+use repro::serving::{DeploySpec, ModelRegistry, RouteError};
+use repro::util::faults::{self, FaultPlan};
+use repro::util::sync::lock_recover;
+
+/// Serializes the armed-plan global across test threads and guarantees
+/// disarm even when the test body panics.
+struct FaultGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+fn arm(spec: &str) -> FaultGuard {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let guard = lock_recover(LOCK.get_or_init(|| Mutex::new(())));
+    faults::install(FaultPlan::parse(spec).expect("valid fault spec"));
+    FaultGuard(guard)
+}
+
+fn tiny_model() -> BcnnModel {
+    BcnnModel::synthetic(&NetConfig::tiny(), 5)
+}
+
+fn native_factory(model: &BcnnModel) -> BackendFactory {
+    let model = model.clone();
+    Arc::new(move || {
+        let b = NativeBackend::new(model.clone())?;
+        Ok(Box::new(b) as Box<dyn Backend>)
+    })
+}
+
+fn fast_restart(max_consecutive: u32) -> RestartPolicy {
+    RestartPolicy {
+        max_consecutive,
+        base_backoff: Duration::from_millis(1),
+        max_backoff: Duration::from_millis(4),
+    }
+}
+
+#[test]
+fn worker_panic_fails_the_batch_typed_then_restarts() {
+    let _g = arm("backend_infer:panic@once=1");
+    let model = tiny_model();
+    let cfg = model.config();
+    let oracle = Engine::new(model.clone()).unwrap();
+    let coord = Coordinator::start_sharded(
+        native_factory(&model),
+        CoordinatorConfig {
+            workers: 1,
+            queue_depth: 16,
+            restart: fast_restart(3),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let client = coord.client();
+    let img = random_images(&cfg, 1, 3).remove(0);
+
+    // the very first batch rides the injected panic: a typed error reply,
+    // not a hang and not a dropped channel
+    let rx = client.submit(img.clone()).expect("queue accepts while worker crashes");
+    let reply = rx.recv_timeout(Duration::from_secs(10)).expect("crashed batch must still reply");
+    assert!(reply.scores.is_err(), "batch on a crashing worker must fail typed");
+
+    // the supervisor rebuilds the replica in place: the next request is
+    // served bit-exact on the SAME pool, queue and all
+    let rx = client
+        .submit_deadline(img.clone(), Duration::from_secs(5))
+        .expect("restarted shard accepts work");
+    let reply = rx.recv_timeout(Duration::from_secs(10)).expect("restarted shard replies");
+    let scores = reply.scores.expect("restarted shard serves successfully");
+    assert_eq!(scores, oracle.infer(&img).unwrap(), "post-restart scores must be bit-exact");
+
+    let health = coord.health();
+    assert!(health.serviceable(), "one crash must not take the pool down");
+    assert_eq!(health.crashes(), 1);
+    assert_eq!(health.restarts(), 1);
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.crashes, 1);
+    assert_eq!(metrics.restarts, 1);
+    assert!(metrics.errors >= 1, "the crashed batch counts as an error");
+}
+
+#[test]
+fn repeated_crashes_trip_the_breaker_to_shard_down() {
+    let _g = arm("backend_infer:panic@p=1");
+    let model = tiny_model();
+    let cfg = model.config();
+    let coord = Coordinator::start_sharded(
+        native_factory(&model),
+        CoordinatorConfig {
+            workers: 1,
+            queue_depth: 16,
+            restart: fast_restart(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let client = coord.client();
+    let img = random_images(&cfg, 1, 3).remove(0);
+
+    // every batch crashes; after 2 consecutive crashes the breaker opens
+    // and submits are refused with the typed crash-down error
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut saw_down = false;
+    while Instant::now() < deadline {
+        match client.submit(img.clone()) {
+            Ok(rx) => {
+                let reply = rx
+                    .recv_timeout(Duration::from_secs(10))
+                    .expect("even a doomed batch must reply");
+                assert!(reply.scores.is_err());
+            }
+            Err(SubmitError::ShardDown { image }) => {
+                assert_eq!(image, img, "refused submit must hand the image back");
+                saw_down = true;
+                break;
+            }
+            Err(SubmitError::QueueFull { .. }) => std::thread::sleep(Duration::from_millis(1)),
+            Err(SubmitError::Shutdown) => panic!("pool was never shut down"),
+        }
+    }
+    assert!(saw_down, "breaker never tripped to ShardDown");
+    let health = coord.health();
+    assert!(!health.serviceable());
+    assert_eq!(health.label(), "down");
+    assert!(health.crashes() >= 2);
+    // shutdown still joins cleanly on a breaker-dead pool (no hang)
+    let metrics = coord.shutdown();
+    assert!(metrics.crashes >= 2);
+}
+
+#[test]
+fn stage_death_fails_tickets_typed_within_watchdog_window() {
+    let _g = arm("stage_emit:panic@once=3");
+    let model = tiny_model();
+    let cfg = model.config();
+    let images = random_images(&cfg, 4, 9);
+
+    // run the whole submit+wait sequence on a worker thread so a hang —
+    // the exact bug the containment exists to prevent — fails the test
+    // via the watchdog instead of wedging the harness
+    let (done_tx, done_rx) = mpsc::channel();
+    let worker = std::thread::spawn(move || {
+        let runtime = PipelineRuntime::new(Engine::new(model).unwrap(), 2).unwrap();
+        let mut failures = 0usize;
+        for img in &images {
+            match runtime.submit(img.clone()) {
+                Ok(t) => {
+                    if t.wait_typed().is_err() {
+                        failures += 1;
+                    }
+                }
+                Err(_) => failures += 1,
+            }
+        }
+        let crashes = runtime.crashes();
+        let latched = runtime.failure().is_some();
+        runtime.shutdown();
+        let _ = done_tx.send((failures, crashes, latched));
+    });
+    let (failures, crashes, latched) = done_rx
+        .recv_timeout(Duration::from_secs(20))
+        .expect("stage death hung the pipeline instead of failing typed");
+    worker.join().unwrap();
+    assert!(failures > 0, "the killed stage must fail at least one ticket");
+    assert_eq!(crashes, 1, "exactly one contained stage panic");
+    assert!(latched, "the failure must latch so future submits fail fast");
+}
+
+#[test]
+fn pipeline_backend_degrades_to_bit_exact_engine_path() {
+    let _g = arm("stage_emit:panic@once=2");
+    let model = tiny_model();
+    let cfg = model.config();
+    let images = random_images(&cfg, 4, 21);
+    let oracle = Engine::new(model.clone()).unwrap();
+    let expected: Vec<Vec<f32>> = images.iter().map(|i| oracle.infer(i).unwrap()).collect();
+
+    let mut backend = PipelineBackend::new(model, 2).unwrap();
+    // the stage dies with this batch in flight; the backend must still
+    // answer the WHOLE batch, re-run bit-exact on the engine fallback
+    let result = backend.infer_owned(&images).expect("degraded backend still serves");
+    assert_eq!(result.scores, expected, "fallback scores must match the scalar oracle");
+    assert!(backend.degraded());
+    assert_eq!(backend.name(), "pipeline-degraded");
+    assert_eq!(backend.crashes(), 1);
+    assert_eq!(backend.failovers(), images.len() as u64, "every fallback request is counted");
+
+    // later batches keep being served (and counted) on the fallback
+    let again = backend.infer_owned(&images).unwrap();
+    assert_eq!(again.scores, expected);
+    assert_eq!(backend.failovers(), 2 * images.len() as u64);
+}
+
+#[test]
+fn submit_deny_storm_is_masked_by_deadline_retry() {
+    let _g = arm("submit:deny@first=3");
+    let model = tiny_model();
+    let cfg = model.config();
+    let oracle = Engine::new(model.clone()).unwrap();
+    let coord = Coordinator::start_sharded(
+        native_factory(&model),
+        CoordinatorConfig { workers: 1, queue_depth: 16, ..Default::default() },
+    )
+    .unwrap();
+    let client = coord.client();
+    let img = random_images(&cfg, 1, 3).remove(0);
+
+    // a bare submit eats injected hit 1: synthetic backpressure
+    match client.submit(img.clone()) {
+        Err(SubmitError::QueueFull { image }) => assert_eq!(image, img),
+        other => panic!("expected injected QueueFull, got {:?}", other.map(|_| "Ok")),
+    }
+    // the deadline path retries through hits 2 and 3 and succeeds on 4
+    let rx = client
+        .submit_deadline(img.clone(), Duration::from_secs(5))
+        .expect("retry loop must mask the deny storm");
+    let reply = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!(reply.scores.unwrap(), oracle.infer(&img).unwrap());
+    coord.shutdown();
+}
+
+#[test]
+fn router_fails_over_to_healthy_same_config_model() {
+    let _g = arm("backend_infer:panic@p=1");
+    let model = tiny_model();
+    let cfg = model.config();
+    let registry = ModelRegistry::new();
+    registry.deploy("a", DeploySpec::new(model.clone())).unwrap();
+    // drive "a" into breaker-open: every batch crashes, and only "a"
+    // receives traffic, so "b" (deployed after disarming below) stays
+    // healthy
+    let entry_a = registry.router().resolve(Some("a")).unwrap();
+    let img = random_images(&cfg, 1, 3).remove(0);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        assert!(Instant::now() < deadline, "breaker never opened on model a");
+        match entry_a.client().submit(img.clone()) {
+            Ok(rx) => {
+                let _ = rx.recv_timeout(Duration::from_secs(10)).expect("typed reply");
+            }
+            Err(SubmitError::ShardDown { .. }) => break,
+            Err(SubmitError::QueueFull { .. }) => std::thread::sleep(Duration::from_millis(1)),
+            Err(SubmitError::Shutdown) => panic!("pool was never shut down"),
+        }
+    }
+    assert!(!entry_a.is_serviceable());
+    assert_eq!(entry_a.health().label(), "down");
+
+    // no compatible standby yet: the router reports Degraded, typed
+    match registry.router().resolve_healthy(Some("a")) {
+        Err(RouteError::Degraded(name)) => assert_eq!(name, "a"),
+        other => panic!("expected Degraded, got {:?}", other.map(|e| e.name.clone())),
+    }
+
+    // disarm, then deploy a same-config standby: resolution fails over
+    faults::clear();
+    registry.deploy("b", DeploySpec::new(model.clone())).unwrap();
+    let routed = registry.router().resolve_healthy(Some("a")).expect("failover target exists");
+    assert_eq!(routed.name, "b", "router must fail over to the healthy same-config entry");
+    assert_eq!(routed.health().label(), "ready");
+
+    // and the failover target really serves, bit-exact
+    let oracle = Engine::new(model).unwrap();
+    let rx = routed.client().submit_deadline(img.clone(), Duration::from_secs(5)).unwrap();
+    let reply = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!(reply.scores.unwrap(), oracle.infer(&img).unwrap());
+}
+
+#[test]
+fn fault_free_paths_are_untouched_when_disarmed() {
+    let _g = arm(""); // empty plan: armed machinery off, sites are no-ops
+    assert!(!faults::active());
+    let model = tiny_model();
+    let cfg = model.config();
+    let oracle = Engine::new(model.clone()).unwrap();
+    let coord = Coordinator::start_sharded(
+        native_factory(&model),
+        CoordinatorConfig { workers: 2, queue_depth: 16, ..Default::default() },
+    )
+    .unwrap();
+    let client = coord.client();
+    let images = random_images(&cfg, 8, 13);
+    for img in &images {
+        let rx = client.submit_deadline(img.clone(), Duration::from_secs(5)).unwrap();
+        let reply = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(reply.scores.unwrap(), oracle.infer(img).unwrap());
+    }
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.crashes, 0);
+    assert_eq!(metrics.restarts, 0);
+    assert_eq!(metrics.requests_failed_over, 0);
+    assert_eq!(metrics.errors, 0);
+}

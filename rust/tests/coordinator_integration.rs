@@ -209,7 +209,9 @@ fn full_bounded_queue_returns_queue_full() {
         Err(SubmitError::QueueFull { image }) => {
             assert_eq!(image, overflow, "backpressure must hand the image back");
         }
-        Err(SubmitError::Shutdown) => panic!("pool is alive"),
+        Err(SubmitError::ShardDown { .. }) | Err(SubmitError::Shutdown) => {
+            panic!("pool is alive")
+        }
         Ok(_) => panic!("4th request fit a 2-deep queue with a busy worker"),
     }
 
@@ -419,7 +421,9 @@ fn submit_deadline_expires_with_queue_full() {
     let t0 = Instant::now();
     match client.submit_deadline(vec![2i32; 4], Duration::from_millis(20)) {
         Err(SubmitError::QueueFull { image }) => assert_eq!(image, vec![2i32; 4]),
-        Err(SubmitError::Shutdown) => panic!("pool is alive"),
+        Err(SubmitError::ShardDown { .. }) | Err(SubmitError::Shutdown) => {
+            panic!("pool is alive")
+        }
         Ok(_) => panic!("deadline submit fit a full queue"),
     }
     let waited = t0.elapsed();
@@ -497,6 +501,7 @@ fn shutdown_disconnects_clients() {
     match client.submit(img.clone()) {
         Err(SubmitError::Shutdown) => {}
         Err(SubmitError::QueueFull { .. }) => panic!("dead pool reported backpressure"),
+        Err(SubmitError::ShardDown { .. }) => panic!("graceful shutdown reported crash-down"),
         Ok(_) => panic!("submit to a dead pool succeeded"),
     }
     assert!(client.infer(img).is_err());

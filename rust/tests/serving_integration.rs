@@ -283,6 +283,36 @@ fn garbage_tag_is_rejected_promptly_not_drained() {
     server.join().unwrap().unwrap();
 }
 
+#[test]
+fn health_frame_reports_pool_state_over_the_wire() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.deploy("prod", DeploySpec::new(tiny(1)).with_workers(2)).unwrap();
+    let (addr, stop, server) = start_server(Arc::clone(&registry));
+
+    let mut admin = ControlClient::connect(&addr).unwrap();
+    let health = admin.health().unwrap();
+    assert_eq!(health.get("epoch").unwrap().as_f64().unwrap() as u64, registry.epoch());
+    let models = health.get("models").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(models.len(), 1);
+    let prod = &models[0];
+    assert_eq!(prod.get("name").unwrap().as_str().unwrap(), "prod");
+    assert_eq!(prod.get("state").unwrap().as_str().unwrap(), "ready");
+    let shards = prod.get("shards").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(shards.len(), 2, "one health row per worker shard");
+    for s in &shards {
+        assert_eq!(s.get("state").unwrap().as_str().unwrap(), "ready");
+        assert_eq!(s.get("crashes").unwrap().as_f64().unwrap() as u64, 0);
+        assert_eq!(s.get("restarts").unwrap().as_f64().unwrap() as u64, 0);
+    }
+
+    // the connection survives a HEALTH frame and keeps serving
+    let img = random_images(&NetConfig::tiny(), 1, 4).pop().unwrap();
+    assert!(admin.infer("prod", &img).is_ok());
+    admin.close().unwrap();
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
 /// The acceptance scenario: a continuous client load loop while the
 /// server flips between two synthetic configs >= 3 times.  Every
 /// submission must be answered, every reply must be bit-identical to a
