@@ -1,0 +1,127 @@
+//! Observability smoke: serve a pipeline-backed model over TCP, trace a
+//! handful of requests end-to-end, validate the Chrome trace export, and
+//! write it to disk.  CI runs this after the tier-1 tests and uploads
+//! the resulting `trace.json` as an artifact — the file loads directly
+//! in Perfetto (https://ui.perfetto.dev) or `chrome://tracing`.
+//!
+//! Run: `cargo run --release --example obs_smoke -- [--out trace.json]`
+//! Exits nonzero if any expected span is missing.
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use repro::coordinator::workload::random_images;
+use repro::model::{BcnnModel, NetConfig};
+use repro::serving::{serve_registry, BackendSpec, ControlClient, DeploySpec, ModelRegistry};
+use repro::util::json::Json;
+
+const REQUESTS: usize = 16;
+
+fn main() -> Result<()> {
+    let mut out_path = "trace.json".to_string();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--out" => out_path = args.next().context("--out needs a path")?,
+            other => bail!("unknown argument {other:?} (usage: obs_smoke [--out <path>])"),
+        }
+    }
+
+    // deploy a pipeline-backed model so the trace has stage tracks, and
+    // serve it on a loopback port like production would
+    let cfg = NetConfig::tiny();
+    let model = BcnnModel::synthetic(&cfg, 0x0B5);
+    let n_layers = model.layers.len();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.deploy(
+        "m",
+        DeploySpec::new(model)
+            .with_backend(BackendSpec::Pipeline { inflight: 4, stage_threads: 0 }),
+    )?;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let stop = Arc::clone(&stop);
+        let registry = Arc::clone(&registry);
+        std::thread::spawn(move || serve_registry(listener, registry, stop))
+    };
+
+    let mut client = ControlClient::connect(&addr)?;
+    let mut trace_ids = Vec::new();
+    for img in &random_images(&cfg, REQUESTS, 7) {
+        let reply = client.infer("m", img)?;
+        if reply.trace_id == 0 {
+            bail!("reply carried no trace id");
+        }
+        trace_ids.push(reply.trace_id);
+    }
+    // the last stage span lands on its ring just after the last reply;
+    // one settle poll is plenty at this request count
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let trace = client.trace()?;
+    client.close()?;
+    stop.store(true, Ordering::Relaxed);
+    server.join().expect("server thread").expect("server exit");
+
+    // validate: every pipeline stage contributed at least one complete
+    // span, and the traced requests appear on the shard track
+    let events = trace.get("traceEvents")?.as_arr()?;
+    let mut track_names: BTreeMap<u64, String> = BTreeMap::new();
+    let mut spans = 0usize;
+    let mut per_kind: BTreeMap<String, usize> = BTreeMap::new();
+    let mut per_stage: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut traced_hits = 0usize;
+    for e in events {
+        match e.get("ph")?.as_str()? {
+            "M" => {
+                let tid = e.get("tid")?.as_f64()? as u64;
+                track_names.insert(tid, e.get("args")?.get("name")?.as_str()?.to_string());
+            }
+            "X" => {
+                spans += 1;
+                if e.get("dur")?.as_f64()? < 0.0 {
+                    bail!("span with negative duration: {e:?}");
+                }
+                let cat = e.get("cat")?.as_str()?.to_string();
+                if cat == "stage" {
+                    let layer = e.get("args")?.get("layer")?.as_f64()? as usize;
+                    *per_stage.entry(layer).or_insert(0) += 1;
+                }
+                *per_kind.entry(cat).or_insert(0) += 1;
+                let id = e.get("args")?.get("trace_id")?.as_f64()? as u64;
+                if trace_ids.contains(&id) {
+                    traced_hits += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    for kind in ["admission", "queue", "batch", "reply"] {
+        if per_kind.get(kind).copied().unwrap_or(0) == 0 {
+            bail!("no {kind} span in the trace");
+        }
+    }
+    for layer in 0..n_layers {
+        if per_stage.get(&layer).copied().unwrap_or(0) == 0 {
+            bail!("stage {layer} recorded no spans (layers 0..{n_layers} expected)");
+        }
+    }
+    if traced_hits < REQUESTS {
+        bail!("only {traced_hits} spans match the {REQUESTS} reply trace ids");
+    }
+
+    std::fs::write(&out_path, trace.to_string())?;
+    println!(
+        "obs smoke OK: {spans} spans over {} tracks ({} stage layers), \
+         {traced_hits} correlated with this client's {REQUESTS} requests",
+        track_names.len(),
+        n_layers,
+    );
+    println!("wrote {out_path} -- load it at https://ui.perfetto.dev");
+    Ok(())
+}

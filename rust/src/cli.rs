@@ -10,6 +10,10 @@
 //!                  pools; optional protocol-v2 TCP front-end)
 //!   deploy / undeploy / rollback / models — admin plane against a
 //!                  running server (zero-downtime hot-swap by name)
+//!   trace        — fetch the server's span rings as a Chrome trace-event
+//!                  JSON file (load in Perfetto / chrome://tracing)
+//!   top          — live terminal dashboard (windowed rate/p99
+//!                  sparklines, pool health, per-stage busy bars)
 //!   selftest     — engine vs PJRT vs FPGA-sim cross-check on artifacts
 //!   features     — detected CPU features + chosen bitwise kernel
 //!
@@ -23,7 +27,7 @@ use std::net::TcpListener;
 use std::path::PathBuf;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -174,6 +178,20 @@ COMMANDS
       Per-model pool health from the protocol-v2 HEALTH admin frame:
       model state (ready/degraded/down) plus per-shard supervisor
       counters (state, crashes, restarts).
+  trace --addr HOST:PORT [--out FILE]
+      Fetch the server's span rings (protocol-v2 TRACE frame) as a
+      Chrome trace-event JSON file (default trace.json): one track per
+      worker shard (admission/queue/batch/reply spans) and one per
+      pipeline stage, every span tagged with the request trace_id that
+      v2 inference replies return.  Open the file in Perfetto
+      (https://ui.perfetto.dev) or chrome://tracing.
+  top --addr HOST:PORT [--interval-ms M] [--iterations N] [--no-clear]
+      Live terminal dashboard: polls STATS + HEALTH every M ms (default
+      1000) and redraws windowed throughput/p99 sparklines, per-model
+      serving rows with client-side rates, pool health states, and
+      per-stage busy/stall bars for pipeline backends.  N>0 exits after
+      N refreshes (default: run until ^C); --no-clear appends frames
+      instead of redrawing in place.
   selftest [--artifacts DIR]
       Cross-check native engine vs PJRT executable vs FPGA simulator on
       the shipped artifacts (exit non-zero on mismatch).
@@ -213,6 +231,8 @@ pub fn run(argv: &[String]) -> Result<()> {
         "rollback" => cmd_admin_name_op(&args, "rollback"),
         "models" => cmd_models(&args),
         "health" => cmd_health(&args),
+        "trace" => cmd_trace(&args),
+        "top" => cmd_top(&args),
         "selftest" => cmd_selftest(&args),
         "features" => cmd_features(),
         "help" | "" => {
@@ -703,6 +723,214 @@ fn cmd_health(args: &Args) -> Result<()> {
     }
     table.print();
     Ok(())
+}
+
+/// `repro trace`: fetch the server's span rings and write a Perfetto-
+/// loadable Chrome trace-event JSON file.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let out_path = args.opt_or("out", "trace.json")?;
+    let mut client = admin_client(args)?;
+    let trace = client.trace()?;
+    client.close()?;
+    let events = trace.get("traceEvents")?.as_arr()?;
+    let spans = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()).map(|s| s == "X").unwrap_or(false))
+        .count();
+    let tracks = events.len() - spans;
+    std::fs::write(&out_path, trace.to_string())
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}: {spans} spans across {tracks} tracks");
+    println!("open it in Perfetto (https://ui.perfetto.dev) or chrome://tracing");
+    Ok(())
+}
+
+/// Eight-level block ramp for the `top` sparklines.
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Render `values` as a sparkline scaled to the series' own maximum.
+fn sparkline(values: &[f64]) -> String {
+    let max = values.iter().cloned().fold(0.0f64, f64::max);
+    values
+        .iter()
+        .map(|&v| {
+            if max <= 0.0 {
+                return SPARK[0];
+            }
+            SPARK[((v / max) * 7.0).round().clamp(0.0, 7.0) as usize]
+        })
+        .collect()
+}
+
+/// `frac` of `width` as a filled bar (`█` filled, `·` empty).
+fn bar(frac: f64, width: usize) -> String {
+    let filled = ((frac.clamp(0.0, 1.0) * width as f64).round() as usize).min(width);
+    format!("{}{}", "█".repeat(filled), "·".repeat(width - filled))
+}
+
+/// `repro top`: live dashboard over the STATS + HEALTH admin frames.
+fn cmd_top(args: &Args) -> Result<()> {
+    let interval_ms = args.usize_or("interval-ms", 1000)? as u64;
+    let interval = Duration::from_millis(interval_ms).max(Duration::from_millis(100));
+    let iterations = args.usize_or("iterations", 0)?;
+    let clear = !args.flag("no-clear");
+    let addr = args.value_of("addr")?.unwrap_or("").to_string();
+    let mut client = admin_client(args)?;
+    // previous poll's per-model cumulative request counts, for the
+    // client-side rate column (server windows cover the whole registry)
+    let mut prev: Option<(Instant, BTreeMap<String, f64>)> = None;
+    let mut rounds = 0usize;
+    loop {
+        let stats = client.stats()?;
+        let health = client.health()?;
+        let now = Instant::now();
+        let prev_view = prev.as_ref().map(|(at, c)| (*at, c));
+        let frame = render_top(&addr, &stats, &health, prev_view, now)?;
+        if clear {
+            print!("\x1b[2J\x1b[H");
+        }
+        print!("{frame}");
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        let mut cum = BTreeMap::new();
+        for m in stats.get("models")?.as_arr()? {
+            cum.insert(
+                m.get("name")?.as_str()?.to_string(),
+                m.get("metrics")?.get("requests")?.as_f64()?,
+            );
+        }
+        prev = Some((now, cum));
+        rounds += 1;
+        if iterations > 0 && rounds >= iterations {
+            break;
+        }
+        std::thread::sleep(interval);
+    }
+    client.close()
+}
+
+/// Build one `top` frame: windowed sparklines, per-model rows, health
+/// states, and per-stage busy/stall bars.
+fn render_top(
+    addr: &str,
+    stats: &Json,
+    health: &Json,
+    prev: Option<(Instant, &BTreeMap<String, f64>)>,
+    now: Instant,
+) -> Result<String> {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let epoch = stats.get("epoch")?.as_f64()? as u64;
+    let models = stats.get("models")?.as_arr()?;
+    writeln!(out, "repro top — {addr}  epoch {epoch}  {} model(s)", models.len()).ok();
+
+    // ---- registry-wide windowed telemetry ------------------------------
+    let windows = stats.get("windows")?.as_arr()?;
+    if windows.is_empty() {
+        writeln!(out, "\nwindows: (no closed 1s windows yet)").ok();
+    } else {
+        let tail = &windows[windows.len().saturating_sub(60)..];
+        let rates: Vec<f64> =
+            tail.iter().map(|w| w.get("rate").and_then(|v| v.as_f64()).unwrap_or(0.0)).collect();
+        let p99s: Vec<f64> = tail
+            .iter()
+            .map(|w| w.get("latency_p99_us").and_then(|v| v.as_f64()).unwrap_or(0.0) / 1e3)
+            .collect();
+        let last = tail.last().expect("tail is non-empty");
+        writeln!(
+            out,
+            "\nwindows   rate {}  {:>8.1} req/s",
+            sparkline(&rates),
+            rates.last().copied().unwrap_or(0.0)
+        )
+        .ok();
+        let last_p99 = p99s.last().copied().unwrap_or(0.0);
+        writeln!(out, "          p99  {}  {:>8.2} ms", sparkline(&p99s), last_p99).ok();
+        writeln!(
+            out,
+            "          last: requests {}  errors {}  crashes {}  failovers {}",
+            last.get("requests")?.as_f64()? as u64,
+            last.get("errors")?.as_f64()? as u64,
+            last.get("crashes")?.as_f64()? as u64,
+            last.get("requests_failed_over")?.as_f64()? as u64,
+        )
+        .ok();
+    }
+
+    // ---- per-model serving rows (health state joined in) ---------------
+    let mut states: BTreeMap<String, String> = BTreeMap::new();
+    for m in health.get("models")?.as_arr()? {
+        let name = m.get("name")?.as_str()?.to_string();
+        states.insert(name, m.get("state")?.as_str()?.to_string());
+    }
+    writeln!(out).ok();
+    let mut table = Table::new(&[
+        "model", "version", "state", "backend", "requests", "req/s", "p50 ms", "p99 ms", "errors",
+        "crashes",
+    ]);
+    for m in models {
+        let name = m.get("name")?.as_str()?.to_string();
+        let metrics = m.get("metrics")?;
+        let requests = metrics.get("requests")?.as_f64()?;
+        let rate = match prev {
+            Some((at, cum)) => match cum.get(&name) {
+                Some(&p) if now > at => {
+                    format!("{:.1}", (requests - p).max(0.0) / (now - at).as_secs_f64())
+                }
+                _ => "-".to_string(),
+            },
+            None => "-".to_string(),
+        };
+        let live = matches!(m.get("live")?, Json::Bool(true));
+        let state = if live {
+            states.get(&name).cloned().unwrap_or_else(|| "?".to_string())
+        } else {
+            "retired".to_string()
+        };
+        table.row(&[
+            name,
+            format!("v{}", m.get("version")?.as_f64()? as u64),
+            state,
+            m.get("backend")?.as_str()?.to_string(),
+            format!("{}", requests as u64),
+            rate,
+            format!("{:.2}", metrics.get("latency_p50_us")?.as_f64()? / 1e3),
+            format!("{:.2}", metrics.get("latency_p99_us")?.as_f64()? / 1e3),
+            format!("{}", metrics.get("errors")?.as_f64()? as u64),
+            format!("{}", metrics.get("crashes")?.as_f64()? as u64),
+        ]);
+    }
+    out.push_str(&table.to_string());
+
+    // ---- per-stage busy/stall bars (pipeline backends) -----------------
+    for m in models {
+        let metrics = m.get("metrics")?;
+        let Ok(stages) = metrics.get("stages") else { continue };
+        let stages = stages.as_arr()?;
+        if stages.is_empty() {
+            continue;
+        }
+        writeln!(out, "\nstages — {}", m.get("name")?.as_str()?).ok();
+        for s in stages {
+            let busy = s.get("busy_us")?.as_f64()?;
+            let stall_in = s.get("stall_in_us")?.as_f64()?;
+            let stall_out = s.get("stall_out_us")?.as_f64()?;
+            let total = busy + stall_in + stall_out;
+            let frac = if total > 0.0 { busy / total } else { 0.0 };
+            writeln!(
+                out,
+                "  stage {:>2} x{:<2} [{}] busy {:>5.1}%  stall in {:>5.1}% out {:>5.1}%",
+                s.get("layer")?.as_f64()? as u64,
+                s.get("lanes")?.as_f64()? as u64,
+                bar(frac, 20),
+                frac * 100.0,
+                if total > 0.0 { stall_in / total * 100.0 } else { 0.0 },
+                if total > 0.0 { stall_out / total * 100.0 } else { 0.0 },
+            )
+            .ok();
+        }
+    }
+    Ok(out)
 }
 
 fn cmd_selftest(args: &Args) -> Result<()> {

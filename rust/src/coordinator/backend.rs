@@ -57,6 +57,15 @@ pub trait Backend {
         self.infer_batch(&views)
     }
 
+    /// `infer_batch` with the requests' trace IDs (one per image, same
+    /// order) so backends with internal concurrency can label their own
+    /// spans — the pipeline backend threads these through its stages.
+    /// Backends without internal spans just delegate.
+    fn infer_batch_traced(&mut self, images: &[&[i32]], trace_ids: &[u64]) -> Result<BatchResult> {
+        let _ = trace_ids;
+        self.infer_batch(images)
+    }
+
     /// Per-stage busy/stall observability for pipeline-backed replicas
     /// (cumulative since construction); empty for backends that have no
     /// stages.  The shard worker folds this into its [`Metrics`] snapshot

@@ -126,7 +126,13 @@ mod tests {
     fn req(id: u64) -> (Msg, mpsc::Receiver<crate::coordinator::InferReply>) {
         let (tx, rx) = mpsc::channel();
         (
-            Msg::Req(InferRequest { id, image: vec![], enqueued: Instant::now(), reply: tx }),
+            Msg::Req(InferRequest {
+                id,
+                trace_id: 0,
+                image: vec![],
+                enqueued: Instant::now(),
+                reply: tx,
+            }),
             rx,
         )
     }

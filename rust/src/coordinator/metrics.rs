@@ -8,7 +8,8 @@ use std::time::Duration;
 use crate::pipeline::stage::StageSnapshot;
 use crate::util::json::Json;
 
-/// Log-scale latency histogram from 1 µs to ~17 s.
+/// Log-scale latency histogram from 1 µs to ~33 s (25 power-of-two
+/// buckets: the last boundary is 2^25 µs ≈ 33.6 s).
 #[derive(Debug, Clone)]
 pub struct Histogram {
     /// bucket i covers [2^i, 2^(i+1)) microseconds.
@@ -67,8 +68,10 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound of the
-    /// bucket containing the quantile).
+    /// Approximate quantile from bucket boundaries: the upper bound of
+    /// the bucket containing the quantile, clamped to the observed
+    /// maximum so a sparsely filled bucket can never report a quantile
+    /// above `max()` (the bound alone overshoots by up to 2x).
     pub fn quantile(&self, q: f64) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
@@ -78,10 +81,35 @@ impl Histogram {
         for (i, &b) in self.buckets.iter().enumerate() {
             seen += b;
             if seen >= target.max(1) {
-                return Duration::from_micros(1u64 << (i + 1));
+                return Duration::from_micros(1u64 << (i + 1)).min(self.max());
             }
         }
         self.max()
+    }
+
+    /// Bucket-wise delta relative to an earlier snapshot of the same
+    /// histogram (windowed telemetry).  The per-window maximum is not
+    /// recoverable from counters alone; it is approximated by the upper
+    /// bound of the highest bucket that grew, clamped by the cumulative
+    /// maximum — consistent with `quantile`'s bucket resolution.
+    pub fn delta_since(&self, prev: &Histogram) -> Histogram {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .zip(&prev.buckets)
+            .map(|(a, b)| a.saturating_sub(*b))
+            .collect();
+        let max_us = buckets
+            .iter()
+            .rposition(|&b| b > 0)
+            .map(|i| ((1u64 << (i + 1)) as f64).min(self.max_us))
+            .unwrap_or(0.0);
+        Histogram {
+            buckets,
+            count: self.count.saturating_sub(prev.count),
+            sum_us: (self.sum_us - prev.sum_us).max(0.0),
+            max_us,
+        }
     }
 }
 
@@ -115,6 +143,10 @@ pub struct Metrics {
     /// replace their own snapshot per batch; [`Metrics::merge`] sums
     /// stage-wise across replicas.
     pub stages: Vec<StageSnapshot>,
+    /// Set when a fold mixed pipelines of different shapes: `stages`
+    /// then holds only one shape's counters, and dashboards must not
+    /// render it as a pool-wide per-stage sum.
+    pub stages_mixed: bool,
     /// Name of the bitwise SIMD kernel the backend's engine dispatched to
     /// (`"scalar"`/`"avx2"`/`"avx512"`; empty when the backend has no host
     /// engine hot path).  Recorded so every `STATS`/bench snapshot says
@@ -170,6 +202,7 @@ impl Metrics {
         self.restarts += other.restarts;
         self.requests_failed_over += other.requests_failed_over;
         self.modeled_busy += other.modeled_busy;
+        self.stages_mixed |= other.stages_mixed;
         if !other.stages.is_empty() {
             if self.stages.is_empty() {
                 self.stages = other.stages.clone();
@@ -178,15 +211,47 @@ impl Metrics {
                 for (a, b) in self.stages.iter_mut().zip(&other.stages) {
                     a.absorb(b);
                 }
+            } else {
+                // differing shapes (mixed backends in one fold): keep ours
+                // — per-stage sums across different pipelines are
+                // meaningless — but flag it so consumers know the stage
+                // table covers only part of the fold
+                self.stages_mixed = true;
             }
-            // differing shapes (mixed backends in one fold): keep ours —
-            // per-stage sums across different pipelines are meaningless
         }
         if self.kernel.is_empty() {
             self.kernel = other.kernel.clone();
         } else if !other.kernel.is_empty() && self.kernel != other.kernel {
             // heterogeneous shards (e.g. one forced scalar): make it visible
             self.kernel = "mixed".into();
+        }
+    }
+
+    /// Delta relative to an earlier cumulative snapshot (windowed
+    /// telemetry: "what happened since the last tick").  Counters
+    /// subtract; histograms subtract bucket-wise; `wall` is left zero for
+    /// the caller to set to the window width; per-stage counters are
+    /// omitted (stage snapshots are replaced wholesale per batch, not
+    /// accumulated, so windowing them is a different mechanism).
+    pub fn delta_since(&self, prev: &Metrics) -> Metrics {
+        Metrics {
+            latency: self.latency.delta_since(&prev.latency),
+            queue: self.queue.delta_since(&prev.queue),
+            service: self.service.delta_since(&prev.service),
+            requests: self.requests.saturating_sub(prev.requests),
+            batches: self.batches.saturating_sub(prev.batches),
+            sum_batch: self.sum_batch.saturating_sub(prev.sum_batch),
+            errors: self.errors.saturating_sub(prev.errors),
+            crashes: self.crashes.saturating_sub(prev.crashes),
+            restarts: self.restarts.saturating_sub(prev.restarts),
+            requests_failed_over: self
+                .requests_failed_over
+                .saturating_sub(prev.requests_failed_over),
+            modeled_busy: self.modeled_busy.saturating_sub(prev.modeled_busy),
+            wall: Duration::ZERO,
+            stages: Vec::new(),
+            stages_mixed: false,
+            kernel: self.kernel.clone(),
         }
     }
 
@@ -265,6 +330,7 @@ impl Metrics {
                 })
                 .collect();
             m.insert("stages".into(), Json::Arr(stages));
+            m.insert("stages_mixed".into(), Json::Bool(self.stages_mixed));
         }
         Json::Obj(m)
     }
@@ -309,6 +375,42 @@ mod tests {
         assert!(p50 <= p99);
         assert!(h.mean() > Duration::from_micros(400));
         assert!(h.mean() < Duration::from_micros(600));
+    }
+
+    #[test]
+    fn quantile_never_exceeds_observed_max() {
+        // one 10 µs sample lands in bucket [8, 16): the raw bucket bound
+        // would report 16 µs, 60% above anything observed
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(10));
+        assert_eq!(h.quantile(0.5), Duration::from_micros(10));
+        assert_eq!(h.quantile(0.99), Duration::from_micros(10));
+        // and in general p99 <= max
+        let mut h = Histogram::new();
+        for i in [3u64, 90, 700, 2_500] {
+            h.record(Duration::from_micros(i));
+        }
+        assert!(h.quantile(0.99) <= h.max());
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn histogram_delta_isolates_new_samples() {
+        let mut prev = Histogram::new();
+        prev.record(Duration::from_micros(100));
+        let mut cur = prev.clone();
+        cur.record(Duration::from_micros(5_000));
+        cur.record(Duration::from_micros(6_000));
+        let d = cur.delta_since(&prev);
+        assert_eq!(d.count(), 2);
+        assert!(d.mean() >= Duration::from_micros(5_000));
+        assert!(d.quantile(0.99) >= Duration::from_micros(4_096));
+        assert!(d.quantile(0.99) <= d.max());
+        // no new samples: empty delta
+        let none = cur.delta_since(&cur);
+        assert_eq!(none.count(), 0);
+        assert_eq!(none.quantile(0.99), Duration::ZERO);
+        assert_eq!(none.max(), Duration::ZERO);
     }
 
     #[test]
@@ -379,6 +481,69 @@ mod tests {
         assert!(stages[1].get("busy_us").unwrap().as_f64().unwrap() > 0.0);
         // stage-less metrics omit the key entirely
         assert!(Metrics::new().to_json().get("stages").is_err());
+    }
+
+    #[test]
+    fn mixed_stage_shapes_are_flagged() {
+        let stage = |layer: usize| StageSnapshot {
+            layer,
+            lanes: 1,
+            busy: Duration::from_millis(1),
+            stall_in: Duration::ZERO,
+            stall_out: Duration::ZERO,
+            rows_in: 4,
+            images: 1,
+        };
+        let mut three = Metrics::new();
+        three.stages = vec![stage(0), stage(1), stage(2)];
+        let mut two = Metrics::new();
+        two.stages = vec![stage(0), stage(1)];
+        let mut total = Metrics::new();
+        total.merge(&three);
+        assert!(!total.stages_mixed, "single shape: not mixed");
+        total.merge(&two);
+        assert!(total.stages_mixed, "differing shapes must be flagged");
+        assert_eq!(total.stages.len(), 3, "keeps the first shape's counters");
+        let j = total.to_json();
+        assert!(j.get("stages_mixed").unwrap().as_bool().unwrap());
+        // same-shape folds serialize the flag as false
+        let mut clean = Metrics::new();
+        clean.merge(&two);
+        clean.merge(&two);
+        assert!(!clean.to_json().get("stages_mixed").unwrap().as_bool().unwrap());
+        // the flag survives further merges (propagates through folds)
+        let mut outer = Metrics::new();
+        outer.merge(&total);
+        assert!(outer.stages_mixed);
+        // stage-less metrics omit the flag along with the stages key
+        assert!(Metrics::new().to_json().get("stages_mixed").is_err());
+    }
+
+    #[test]
+    fn metrics_delta_since_subtracts_counters() {
+        let mut prev = Metrics::new();
+        prev.record_batch(4, Duration::from_millis(1), None);
+        for _ in 0..4 {
+            prev.record_request(Duration::from_micros(50), Duration::from_micros(300));
+        }
+        let mut cur = prev.clone();
+        cur.record_batch_error(2, Duration::from_millis(1));
+        cur.record_batch(2, Duration::from_millis(20), Some(Duration::from_millis(3)));
+        for _ in 0..2 {
+            cur.record_request(Duration::from_millis(1), Duration::from_millis(25));
+        }
+        cur.crashes += 1;
+        let mut d = cur.delta_since(&prev);
+        assert_eq!(d.requests, 4);
+        assert_eq!(d.errors, 2);
+        assert_eq!(d.crashes, 1);
+        assert_eq!(d.batches, 2);
+        assert_eq!(d.latency.count(), 2);
+        assert_eq!(d.modeled_busy, Duration::from_millis(3));
+        assert!(d.p99() >= Duration::from_millis(16), "window p99 reflects the window");
+        assert!(d.stages.is_empty() && !d.stages_mixed);
+        d.wall = Duration::from_secs(2);
+        assert_eq!(d.throughput(), 2.0);
     }
 
     #[test]

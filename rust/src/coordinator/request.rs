@@ -8,6 +8,10 @@ use std::time::{Duration, Instant};
 #[derive(Debug)]
 pub struct InferRequest {
     pub id: u64,
+    /// Tracing identity, minted at admission ([`crate::obs::mint_trace_id`])
+    /// and carried through every span this request produces — coordinator
+    /// queue/batch/reply, pipeline stages — and into the wire reply.
+    pub trace_id: u64,
     pub image: Vec<i32>,
     pub enqueued: Instant,
     pub reply: mpsc::Sender<InferReply>,
@@ -60,6 +64,9 @@ impl std::error::Error for SubmitError {}
 #[derive(Debug, Clone)]
 pub struct InferReply {
     pub id: u64,
+    /// The request's end-to-end trace ID (correlates this reply with its
+    /// spans in the `OP_TRACE` export; 0 means untraced).
+    pub trace_id: u64,
     /// Per-class scores, or the typed failure of the batch this request
     /// rode in.
     pub scores: Result<Vec<f32>, InferError>,
@@ -107,6 +114,7 @@ mod tests {
     fn reply(scores: Result<Vec<f32>, InferError>) -> InferReply {
         InferReply {
             id: 0,
+            trace_id: 0,
             scores,
             queue_time: Duration::from_millis(2),
             service_time: Duration::from_millis(3),

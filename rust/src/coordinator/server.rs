@@ -39,6 +39,7 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher, Msg};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{InferError, InferReply, InferRequest, SubmitError};
 use crate::coordinator::supervisor::{PoolHealth, RestartPolicy, ShardHealth, ShardState};
+use crate::obs::{self, SpanEvent, SpanKind, SpanRing};
 use crate::util::faults;
 use crate::util::sync::{lock_recover, panic_message};
 
@@ -85,6 +86,10 @@ struct ShardHandle {
     /// Written by the shard's supervisor loop, read by dispatch (skip
     /// broken shards) and health probes.
     health: Arc<ShardHealth>,
+    /// This shard's span ring (track `pool{P}/shard{S}` in the trace
+    /// export).  Admission spans are recorded here by `submit`; queue/
+    /// batch/reply spans by the shard worker.
+    ring: Arc<SpanRing>,
 }
 
 /// Handle clients use to submit work.  Cheap to clone; clones share the
@@ -132,8 +137,14 @@ impl Client {
         order.sort_by_key(|&(depth, _)| depth);
 
         let (reply_tx, reply_rx) = mpsc::channel();
+        // trace identity is minted at admission and rides the request
+        // end-to-end; the admission span covers dispatch + queue handoff
+        let tracing = obs::enabled();
+        let admit_start = if tracing { obs::now_ns() } else { 0 };
+        let trace_id = obs::mint_trace_id();
         let mut msg = Msg::Req(InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            trace_id,
             image,
             enqueued: Instant::now(),
             reply: reply_tx,
@@ -150,7 +161,20 @@ impl Client {
             // observe a prior increment, or the usize gauge could wrap
             self.shards[i].depth.fetch_add(1, Ordering::Relaxed);
             match self.shards[i].tx.try_send(msg) {
-                Ok(()) => return Ok(reply_rx),
+                Ok(()) => {
+                    if tracing {
+                        self.shards[i].ring.record(&SpanEvent {
+                            trace_id,
+                            kind: SpanKind::Admission,
+                            t_start_ns: admit_start,
+                            t_end_ns: obs::now_ns(),
+                            shard: i as u32,
+                            layer: None,
+                            batch: 0,
+                        });
+                    }
+                    return Ok(reply_rx);
+                }
                 Err(TrySendError::Full(m)) => {
                     self.shards[i].depth.fetch_sub(1, Ordering::Relaxed);
                     msg = m;
@@ -304,12 +328,16 @@ impl Coordinator {
     pub fn start_sharded(factory: BackendFactory, config: CoordinatorConfig) -> Result<Self> {
         let workers = config.workers.max(1);
         let queue_depth = config.queue_depth.max(1);
+        // distinct trace tracks per pool instance, so replicas/restarts
+        // don't alias: labels are pool{P}/shard{S}
+        let pool = obs::next_instance_id();
         let mut shards = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         let mut startup_err = None;
         for shard_id in 0..workers {
             match spawn_shard(
                 shard_id,
+                pool,
                 Arc::clone(&factory),
                 config.policy,
                 queue_depth,
@@ -421,6 +449,7 @@ fn stop_shard(shard: &mut Shard) {
 /// and supervising it (restart-in-place on crash).
 fn spawn_shard(
     shard_id: usize,
+    pool: u32,
     factory: BackendFactory,
     policy: BatchPolicy,
     queue_depth: usize,
@@ -432,12 +461,14 @@ fn spawn_shard(
     let stopping = Arc::new(AtomicBool::new(false));
     let health = Arc::new(ShardHealth::new());
     let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let ring = SpanRing::new(format!("pool{pool}/shard{shard_id}"), obs::DEFAULT_RING_CAPACITY);
     let worker = std::thread::Builder::new()
         .name(format!("coordinator-shard-{shard_id}"))
         .spawn({
             let depth = Arc::clone(&depth);
             let health = Arc::clone(&health);
             let metrics = Arc::clone(&metrics);
+            let ring = Arc::clone(&ring);
             move || {
                 let backend = match factory() {
                     Ok(b) => {
@@ -452,6 +483,7 @@ fn spawn_shard(
                 };
                 supervise(
                     shard_id, backend, &factory, rx, policy, restart, &metrics, &depth, &health,
+                    &ring,
                 );
             }
         })
@@ -460,7 +492,7 @@ fn spawn_shard(
         .recv()
         .map_err(|_| anyhow!("shard worker died during startup"))??;
     Ok(Shard {
-        handle: ShardHandle { tx, depth, stopping, health },
+        handle: ShardHandle { tx, depth, stopping, health, ring },
         worker: Some(worker),
         metrics,
     })
@@ -493,13 +525,14 @@ fn supervise(
     metrics: &Mutex<Metrics>,
     depth: &AtomicUsize,
     health: &ShardHealth,
+    ring: &SpanRing,
 ) {
     // the batcher (and thus the queue receiver) outlives replica rebuilds:
     // queued requests survive a crash and are served by the next replica
     let mut batcher = Batcher::new(rx, policy);
     let max_consecutive = restart.max_consecutive.max(1);
     loop {
-        match shard_loop(shard_id, backend.as_mut(), &mut batcher, metrics, depth, health) {
+        match shard_loop(shard_id, backend.as_mut(), &mut batcher, metrics, depth, health, ring) {
             LoopExit::Stopped => {
                 health.set_state(ShardState::Stopped);
                 return;
@@ -566,6 +599,7 @@ fn trip_breaker(
         let queue_time = req.enqueued.elapsed();
         let _ = req.reply.send(InferReply {
             id: req.id,
+            trace_id: req.trace_id,
             scores: Err(InferError { message: message.clone() }),
             queue_time,
             service_time: Duration::ZERO,
@@ -583,6 +617,7 @@ fn trip_breaker(
 /// runs under `catch_unwind`: a panicking backend fails its batch typed
 /// (every request replies, no hangs) and returns [`LoopExit::Crashed`] so
 /// the supervisor rebuilds the replica.
+#[allow(clippy::too_many_arguments)]
 fn shard_loop(
     shard_id: usize,
     backend: &mut dyn Backend,
@@ -590,6 +625,7 @@ fn shard_loop(
     metrics: &Mutex<Metrics>,
     depth: &AtomicUsize,
     health: &ShardHealth,
+    ring: &SpanRing,
 ) -> LoopExit {
     // degradation/crash counters are cumulative per *replica*; track the
     // last fold so rebuilt replicas (fresh counters) don't lose history
@@ -597,7 +633,10 @@ fn shard_loop(
     let mut folded_crashes = 0u64;
     while let Some(batch) = batcher.next_batch() {
         let formed = Instant::now();
+        let tracing = obs::enabled();
+        let formed_ns = if tracing { obs::now_ns() } else { 0 };
         let batch_len = batch.len();
+        let trace_ids: Vec<u64> = batch.iter().map(|r| r.trace_id).collect();
         let views: Vec<&[i32]> = batch.iter().map(|r| r.image.as_slice()).collect();
         // AssertUnwindSafe: on a caught panic the replica is discarded and
         // rebuilt from the factory, so torn internal state never escapes.
@@ -607,10 +646,46 @@ fn shard_loop(
             if faults::fire(faults::SITE_BACKEND_INFER) {
                 return Err(anyhow!("injected fault: backend_infer denied"));
             }
-            backend.infer_batch(&views)
+            backend.infer_batch_traced(&views, &trace_ids)
         }));
         drop(views);
         let service = formed.elapsed();
+        // per-request queue/batch/reply spans are recorded just before the
+        // reply send, so by the time a client holds its scores the spans
+        // are already in the ring (trace fetches cannot race them)
+        let record_spans = |req: &InferRequest, queue_time: Duration| {
+            if !tracing {
+                return;
+            }
+            let service_end = formed_ns + service.as_nanos() as u64;
+            ring.record(&SpanEvent {
+                trace_id: req.trace_id,
+                kind: SpanKind::Queue,
+                t_start_ns: formed_ns.saturating_sub(queue_time.as_nanos() as u64),
+                t_end_ns: formed_ns,
+                shard: shard_id as u32,
+                layer: None,
+                batch: 0,
+            });
+            ring.record(&SpanEvent {
+                trace_id: req.trace_id,
+                kind: SpanKind::Batch,
+                t_start_ns: formed_ns,
+                t_end_ns: service_end,
+                shard: shard_id as u32,
+                layer: None,
+                batch: batch_len as u32,
+            });
+            ring.record(&SpanEvent {
+                trace_id: req.trace_id,
+                kind: SpanKind::Reply,
+                t_start_ns: service_end,
+                t_end_ns: obs::now_ns(),
+                shard: shard_id as u32,
+                layer: None,
+                batch: 0,
+            });
+        };
         let (mut result, crashed) = match caught {
             Ok(r) => (r, false),
             Err(payload) => (
@@ -656,8 +731,10 @@ fn shard_loop(
                 for (req, scores) in batch.into_iter().zip(out.scores) {
                     let queue_time = formed.duration_since(req.enqueued);
                     m.record_request(queue_time, queue_time + service);
+                    record_spans(&req, queue_time);
                     let _ = req.reply.send(InferReply {
                         id: req.id,
+                        trace_id: req.trace_id,
                         scores: Ok(scores),
                         queue_time,
                         service_time: service,
@@ -686,8 +763,10 @@ fn shard_loop(
                 }
                 for req in batch {
                     let queue_time = formed.duration_since(req.enqueued);
+                    record_spans(&req, queue_time);
                     let _ = req.reply.send(InferReply {
                         id: req.id,
+                        trace_id: req.trace_id,
                         scores: Err(InferError { message: message.clone() }),
                         queue_time,
                         service_time: service,

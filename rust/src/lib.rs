@@ -20,6 +20,10 @@
 //!   zero-downtime hot-swap via an epoch-tagged routing-table swap, and
 //!   protocol v2 — model-routed request frames plus
 //!   `DEPLOY`/`UNDEPLOY`/`ROLLBACK`/`LIST`/`STATS` admin frames.
+//! * Cross-cutting: [`obs`] — always-on span tracing (per-shard /
+//!   per-stage rings, trace IDs minted at admission, Chrome-trace
+//!   export via `OP_TRACE`) and windowed telemetry behind `STATS`'
+//!   `"windows"` key and the `repro top` dashboard.
 //!
 //! Python never runs at request time: the `repro` binary is self-contained
 //! once `make artifacts` has produced `artifacts/*.hlo.txt` + `*.bcnn`.
@@ -31,6 +35,7 @@ pub mod coordinator;
 pub mod fpga;
 pub mod gpu;
 pub mod model;
+pub mod obs;
 pub mod optimizer;
 pub mod pipeline;
 pub mod runtime;

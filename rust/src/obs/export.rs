@@ -1,0 +1,140 @@
+//! Chrome trace-event JSON export: turn the span rings into a
+//! `trace.json` that `chrome://tracing` / Perfetto loads directly.
+//!
+//! Layout: one process (`pid` 1), one track (`tid`) per ring — shard
+//! rings (`pool{N}/shard{S}`) and pipeline-stage rings
+//! (`pipe{N}/stage{L}`) side by side, named via `thread_name` metadata
+//! events.  Every span is a complete event (`"ph":"X"`) with
+//! microsecond `ts`/`dur` on the shared monotonic clock, and carries
+//! `trace_id` in `args` so one request's journey can be followed across
+//! tracks end-to-end.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::util::json::Json;
+
+use super::ring::{rings, SpanEvent, SpanKind, SpanRing};
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// Export every live ring in the process (the `OP_TRACE` payload).
+pub fn chrome_trace_json() -> Json {
+    chrome_trace_for(&rings())
+}
+
+/// Export a specific set of rings (tests; scoped dumps).
+pub fn chrome_trace_for(selected: &[Arc<SpanRing>]) -> Json {
+    let mut tracks: Vec<&Arc<SpanRing>> = selected.iter().collect();
+    tracks.sort_by(|a, b| a.label().cmp(b.label()));
+    let mut events: Vec<Json> = Vec::new();
+    for (i, ring) in tracks.iter().enumerate() {
+        let tid = (i + 1) as f64;
+        events.push(obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("thread_name".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid)),
+            ("args", obj(vec![("name", Json::Str(ring.label().to_string()))])),
+        ]));
+        for ev in ring.snapshot() {
+            events.push(span_json(&ev, tid));
+        }
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+fn span_json(ev: &SpanEvent, tid: f64) -> Json {
+    // Stage spans get per-layer names so Perfetto's aggregation view
+    // groups by layer; everything else uses the kind label directly.
+    let name = match ev.kind {
+        SpanKind::Stage => format!("stage{}", ev.layer.unwrap_or(0)),
+        k => k.label().to_string(),
+    };
+    let mut args = vec![
+        ("trace_id", Json::Num(ev.trace_id as f64)),
+        ("shard", Json::Num(f64::from(ev.shard))),
+    ];
+    if let Some(layer) = ev.layer {
+        args.push(("layer", Json::Num(f64::from(layer))));
+    }
+    if ev.batch > 0 {
+        args.push(("batch", Json::Num(f64::from(ev.batch))));
+    }
+    obj(vec![
+        ("name", Json::Str(name)),
+        ("cat", Json::Str(ev.kind.label().into())),
+        ("ph", Json::Str("X".into())),
+        ("ts", Json::Num(ev.t_start_ns as f64 / 1e3)),
+        ("dur", Json::Num(ev.t_end_ns.saturating_sub(ev.t_start_ns) as f64 / 1e3)),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(tid)),
+        ("args", obj(args)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn export_names_tracks_and_spans() {
+        let _g = crate::obs::ring::test_guard();
+        let ring = SpanRing::new("test/export-track", 8);
+        ring.record(&SpanEvent {
+            trace_id: 42,
+            kind: SpanKind::Queue,
+            t_start_ns: 1_000,
+            t_end_ns: 3_500,
+            shard: 1,
+            layer: None,
+            batch: 0,
+        });
+        ring.record(&SpanEvent {
+            trace_id: 42,
+            kind: SpanKind::Stage,
+            t_start_ns: 4_000,
+            t_end_ns: 9_000,
+            shard: 1,
+            layer: Some(2),
+            batch: 0,
+        });
+        let j = chrome_trace_for(&[ring]);
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3, "metadata + 2 spans");
+        // track metadata names the ring
+        let meta = &events[0];
+        assert_eq!(meta.get("ph").unwrap().as_str().unwrap(), "M");
+        assert_eq!(
+            meta.get("args").unwrap().get("name").unwrap().as_str().unwrap(),
+            "test/export-track"
+        );
+        // complete events in microseconds, correlated by trace_id
+        let queue = &events[1];
+        assert_eq!(queue.get("name").unwrap().as_str().unwrap(), "queue");
+        assert_eq!(queue.get("ph").unwrap().as_str().unwrap(), "X");
+        assert!((queue.get("ts").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        assert!((queue.get("dur").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
+        assert_eq!(
+            queue.get("args").unwrap().get("trace_id").unwrap().as_usize().unwrap(),
+            42
+        );
+        let stage = &events[2];
+        assert_eq!(stage.get("name").unwrap().as_str().unwrap(), "stage2");
+        assert_eq!(stage.get("cat").unwrap().as_str().unwrap(), "stage");
+        assert_eq!(stage.get("args").unwrap().get("layer").unwrap().as_usize().unwrap(), 2);
+        // the whole document round-trips through the parser
+        let text = j.to_string();
+        let parsed = Json::parse(&text).expect("exported trace JSON parses");
+        assert_eq!(parsed.get("traceEvents").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

@@ -1,0 +1,31 @@
+//! Observability: always-on request tracing and windowed telemetry.
+//!
+//! The paper's argument is an argument about *where time goes* — Fig. 7's
+//! batch-(in)sensitivity, eq. 12's pipeline utilization, Tables 3–5's
+//! per-stage occupancy.  This module is the host reproduction's
+//! measurement substrate for the same question at serving time:
+//!
+//! * [`ring`] — per-shard / per-stage lock-free span ring buffers, trace
+//!   IDs minted at admission and threaded end-to-end (coordinator →
+//!   pipeline stages → protocol-v2 reply).
+//! * [`export`] — Chrome trace-event JSON (`chrome://tracing` /
+//!   Perfetto), one track per shard and per stage, served over the
+//!   `OP_TRACE` admin frame and `repro trace`.
+//! * [`window`] — rolling per-window `Metrics` deltas (rate, p50/p99,
+//!   error/crash rate per window), folded into `stats_json` under
+//!   `"windows"` and rendered live by `repro top`.
+//!
+//! Everything is std-only and wait-free on the hot path: with tracing
+//! disarmed a span site costs one relaxed atomic load; armed, one
+//! clock read and a handful of relaxed stores into a fixed ring.
+
+pub mod export;
+pub mod ring;
+pub mod window;
+
+pub use export::{chrome_trace_for, chrome_trace_json};
+pub use ring::{
+    enabled, mint_trace_id, next_instance_id, now_ns, rings, set_enabled, SpanEvent, SpanKind,
+    SpanRing, StageTracer, TraceLog, DEFAULT_RING_CAPACITY,
+};
+pub use window::{WindowStat, WindowTracker, DEFAULT_WINDOW_CAPACITY, DEFAULT_WINDOW_INTERVAL};

@@ -1,0 +1,438 @@
+//! Lock-free span ring buffers: the always-on tracing substrate.
+//!
+//! Every shard worker and every pipeline stage owns one [`SpanRing`] — a
+//! fixed-capacity, overwrite-oldest buffer of [`SpanEvent`]s written by
+//! exactly one thread and snapshotted concurrently by the exporter.  The
+//! write path is wait-free: a relaxed cursor `fetch_add` picks the slot,
+//! a seqlock (odd sequence = mid-write) guards the payload words, and the
+//! whole record is plain atomics — no locks, no allocation, no `unsafe`.
+//! When tracing is disabled the cost collapses to one relaxed load.
+//!
+//! Rings self-register into a process-global registry (as `Weak`, so a
+//! dropped pool deregisters naturally); [`rings`] hands the exporter every
+//! live ring without any plumbing through the serving stack.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::Instant;
+
+/// What a span measures.  One request produces one `Admission`, `Queue`,
+/// `Batch` and `Reply` span on its shard's ring plus one `Stage` span per
+/// pipeline layer (pipeline backends only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// `Client::submit`: dispatch decision + queue handoff.
+    Admission,
+    /// Time the request sat in the shard queue before its batch formed.
+    Queue,
+    /// Backend execution of the batch the request rode in.
+    Batch,
+    /// One image flowing through one pipeline stage (row-streaming).
+    Stage,
+    /// Reply fan-out back to the submitting client.
+    Reply,
+}
+
+impl SpanKind {
+    /// Stable label used as the Chrome trace-event `name`.
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::Admission => "admission",
+            SpanKind::Queue => "queue",
+            SpanKind::Batch => "batch",
+            SpanKind::Stage => "stage",
+            SpanKind::Reply => "reply",
+        }
+    }
+
+    fn encode(self) -> u64 {
+        match self {
+            SpanKind::Admission => 0,
+            SpanKind::Queue => 1,
+            SpanKind::Batch => 2,
+            SpanKind::Stage => 3,
+            SpanKind::Reply => 4,
+        }
+    }
+
+    fn decode(w: u64) -> Option<SpanKind> {
+        Some(match w {
+            0 => SpanKind::Admission,
+            1 => SpanKind::Queue,
+            2 => SpanKind::Batch,
+            3 => SpanKind::Stage,
+            4 => SpanKind::Reply,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded span.  Timestamps are nanoseconds on the process-wide
+/// monotonic clock ([`now_ns`]), so spans from different rings line up on
+/// one timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Request identity, minted at admission ([`mint_trace_id`]) and
+    /// threaded end-to-end (coordinator → pipeline → wire reply).
+    pub trace_id: u64,
+    pub kind: SpanKind,
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+    /// Shard index (coordinator rings) or pipeline instance (stage rings).
+    pub shard: u32,
+    /// Layer index for `Stage` spans; `None` elsewhere.
+    pub layer: Option<u32>,
+    /// Batch size for `Batch` spans; 0 elsewhere.
+    pub batch: u32,
+}
+
+const WORDS: usize = 6;
+const LAYER_NONE: u64 = u64::MAX;
+
+/// One seqlock-guarded slot.  `seq` is even when stable, odd mid-write;
+/// 0 means never written.  Readers that observe an odd or changed `seq`
+/// skip the slot (the writer overwrote it mid-read — by construction the
+/// oldest data in the ring, so dropping it is the right call).
+struct Slot {
+    seq: AtomicU64,
+    words: [AtomicU64; WORDS],
+}
+
+impl Slot {
+    fn empty() -> Self {
+        Slot { seq: AtomicU64::new(0), words: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    fn write(&self, ev: &SpanEvent) {
+        let seq = self.seq.load(Ordering::Relaxed);
+        self.seq.store(seq.wrapping_add(1), Ordering::Release); // odd: mid-write
+        let words = [
+            ev.trace_id,
+            ev.kind.encode(),
+            ev.t_start_ns,
+            ev.t_end_ns,
+            (u64::from(ev.shard) << 32) | u64::from(ev.batch),
+            ev.layer.map_or(LAYER_NONE, u64::from),
+        ];
+        for (w, v) in self.words.iter().zip(words) {
+            w.store(v, Ordering::Relaxed);
+        }
+        self.seq.store(seq.wrapping_add(2), Ordering::Release); // even: stable
+    }
+
+    fn read(&self) -> Option<SpanEvent> {
+        let before = self.seq.load(Ordering::Acquire);
+        if before == 0 || before % 2 == 1 {
+            return None;
+        }
+        let mut words = [0u64; WORDS];
+        for (v, w) in words.iter_mut().zip(&self.words) {
+            *v = w.load(Ordering::Relaxed);
+        }
+        if self.seq.load(Ordering::Acquire) != before {
+            return None; // torn read: writer lapped us
+        }
+        Some(SpanEvent {
+            trace_id: words[0],
+            kind: SpanKind::decode(words[1])?,
+            t_start_ns: words[2],
+            t_end_ns: words[3],
+            shard: (words[4] >> 32) as u32,
+            batch: words[4] as u32,
+            layer: if words[5] == LAYER_NONE { None } else { Some(words[5] as u32) },
+        })
+    }
+}
+
+/// Default span capacity per ring (per shard / per stage).  At ~500 B/s
+/// of spans per slot this holds the last few thousand requests — plenty
+/// for "export what just happened" while bounding memory hard.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// A single-writer, multi-reader span ring: fixed capacity, overwrite
+/// oldest, atomic write cursor.
+pub struct SpanRing {
+    label: String,
+    slots: Vec<Slot>,
+    cursor: AtomicU64,
+}
+
+impl SpanRing {
+    /// Create a ring and register it with the global exporter registry.
+    /// `label` becomes the track name in the Chrome trace (one track per
+    /// ring, e.g. `pool1/shard0` or `pipe3/stage2`).
+    pub fn new(label: impl Into<String>, capacity: usize) -> Arc<SpanRing> {
+        let ring = Arc::new(SpanRing {
+            label: label.into(),
+            slots: (0..capacity.max(1)).map(|_| Slot::empty()).collect(),
+            cursor: AtomicU64::new(0),
+        });
+        registry().lock().unwrap_or_else(|e| e.into_inner()).push(Arc::downgrade(&ring));
+        ring
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total spans ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Record a span.  Wait-free; a no-op (one relaxed load) while tracing
+    /// is disabled.  Intended for the ring's single owning writer thread —
+    /// concurrent writers stay memory-safe but may interleave slot words.
+    pub fn record(&self, ev: &SpanEvent) {
+        if !enabled() {
+            return;
+        }
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed) as usize % self.slots.len();
+        self.slots[i].write(ev);
+    }
+
+    /// Snapshot every stable slot, oldest-first by start time.  Slots mid
+    /// overwrite are skipped, never blocked on.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let mut out: Vec<SpanEvent> = self.slots.iter().filter_map(Slot::read).collect();
+        out.sort_by_key(|e| (e.t_start_ns, e.t_end_ns, e.trace_id));
+        out
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Weak<SpanRing>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Weak<SpanRing>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Every live ring in the process (dropped pools prune themselves).
+pub fn rings() -> Vec<Arc<SpanRing>> {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.retain(|w| w.strong_count() > 0);
+    reg.iter().filter_map(Weak::upgrade).collect()
+}
+
+// --- global enable/disable gate ------------------------------------------
+//
+// Same shape as `util::faults::MODE`: an AtomicU8 whose relaxed load is the
+// entire disarmed fast path.  Tracing defaults ON (the ISSUE's "always-on,
+// low-overhead"); `BCNN_TRACE=off|0|false` in the environment or
+// `set_enabled(false)` turns it off.
+
+const MODE_UNINIT: u8 = 0;
+const MODE_OFF: u8 = 1;
+const MODE_ON: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNINIT);
+
+/// Is span recording armed?  One relaxed load on the hot path.
+#[inline]
+pub fn enabled() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_ON => true,
+        MODE_OFF => false,
+        _ => init_mode(),
+    }
+}
+
+#[cold]
+fn init_mode() -> bool {
+    let on = match std::env::var("BCNN_TRACE") {
+        Ok(v) => !matches!(v.trim().to_ascii_lowercase().as_str(), "off" | "0" | "false"),
+        Err(_) => true,
+    };
+    MODE.store(if on { MODE_ON } else { MODE_OFF }, Ordering::Relaxed);
+    on
+}
+
+/// Arm or disarm span recording process-wide (benches toggle this to
+/// measure the observer effect).
+pub fn set_enabled(on: bool) {
+    MODE.store(if on { MODE_ON } else { MODE_OFF }, Ordering::Relaxed);
+}
+
+/// Nanoseconds on the process-wide monotonic clock (epoch = first call).
+/// Every span on every ring uses this clock, so the exporter can lay them
+/// on a single timeline.
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Mint a process-unique trace ID (minted at admission, threaded through
+/// every span and the protocol-v2 reply).  0 is reserved for "untraced".
+pub fn mint_trace_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Mint a process-unique instance number for ring labels (`pool{N}`,
+/// `pipe{N}`), so replicas and restarts get distinct tracks.
+pub fn next_instance_id() -> u32 {
+    static NEXT: AtomicU32 = AtomicU32::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// A bounded map from "k-th image fed into a pipeline" to its trace ID.
+///
+/// The feeder writes `set(k, id)` before streaming image `k`'s rows; each
+/// stage counts the images it has flushed and reads `get(k)` to label its
+/// span.  Indexing is absolute (mod capacity), which is safe because the
+/// pipeline's admission window keeps in-flight images far below capacity —
+/// by the time slot `k % cap` is reused, image `k` has long since left
+/// every stage.
+pub struct TraceLog {
+    ids: Vec<AtomicU64>,
+}
+
+impl TraceLog {
+    pub fn new(capacity: usize) -> Self {
+        TraceLog { ids: (0..capacity.max(1)).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    pub fn set(&self, k: u64, trace_id: u64) {
+        self.ids[k as usize % self.ids.len()].store(trace_id, Ordering::Release);
+    }
+
+    pub fn get(&self, k: u64) -> u64 {
+        self.ids[k as usize % self.ids.len()].load(Ordering::Acquire)
+    }
+}
+
+/// Per-stage span recorder handed into the stage-lane loops: a ring, the
+/// shared feeder trace log, and this stage's identity.  One `record_image`
+/// call per image flush — zero cost per row.
+pub struct StageTracer {
+    ring: Arc<SpanRing>,
+    log: Arc<TraceLog>,
+    instance: u32,
+    layer: u32,
+}
+
+impl StageTracer {
+    pub fn new(ring: Arc<SpanRing>, log: Arc<TraceLog>, instance: u32, layer: u32) -> Self {
+        StageTracer { ring, log, instance, layer }
+    }
+
+    /// Record the span for the `image_index`-th image through this stage
+    /// (start captured by the lane at the image's first row).
+    pub fn record_image(&self, image_index: u64, t_start_ns: u64) {
+        if !enabled() {
+            return;
+        }
+        self.ring.record(&SpanEvent {
+            trace_id: self.log.get(image_index),
+            kind: SpanKind::Stage,
+            t_start_ns,
+            t_end_ns: now_ns(),
+            shard: self.instance,
+            layer: Some(self.layer),
+            batch: 0,
+        });
+    }
+}
+
+/// `set_enabled` is process-global and unit tests run concurrently: every
+/// test that records spans or toggles the gate serializes on this lock
+/// (and re-arms tracing, in case a sibling left it off).
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    let g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    set_enabled(true);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn armed() -> std::sync::MutexGuard<'static, ()> {
+        test_guard()
+    }
+
+    fn ev(trace_id: u64, kind: SpanKind, t0: u64, t1: u64) -> SpanEvent {
+        SpanEvent { trace_id, kind, t_start_ns: t0, t_end_ns: t1, shard: 3, layer: None, batch: 2 }
+    }
+
+    #[test]
+    fn record_and_snapshot_roundtrip() {
+        let _g = armed();
+        let ring = SpanRing::new("test/roundtrip", 8);
+        ring.record(&ev(7, SpanKind::Queue, 100, 200));
+        ring.record(&SpanEvent { layer: Some(4), ..ev(8, SpanKind::Stage, 150, 300) });
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0], ev(7, SpanKind::Queue, 100, 200));
+        assert_eq!(snap[1].layer, Some(4));
+        assert_eq!(snap[1].shard, 3);
+        assert_eq!(snap[1].batch, 2);
+        assert_eq!(ring.recorded(), 2);
+    }
+
+    #[test]
+    fn overwrites_oldest_at_capacity() {
+        let _g = armed();
+        let ring = SpanRing::new("test/overwrite", 4);
+        for i in 0..10u64 {
+            ring.record(&ev(i, SpanKind::Batch, i * 10, i * 10 + 5));
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 4);
+        let ids: Vec<u64> = snap.iter().map(|e| e.trace_id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9], "only the newest capacity-many survive");
+        assert_eq!(ring.recorded(), 10);
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = armed();
+        let ring = SpanRing::new("test/disabled", 4);
+        set_enabled(false);
+        ring.record(&ev(1, SpanKind::Reply, 1, 2));
+        set_enabled(true);
+        assert_eq!(ring.recorded(), 0);
+        assert!(ring.snapshot().is_empty());
+        ring.record(&ev(2, SpanKind::Reply, 3, 4));
+        assert_eq!(ring.recorded(), 1);
+    }
+
+    #[test]
+    fn registry_drops_dead_rings() {
+        let label = "test/registry-lifetime";
+        {
+            let _ring = SpanRing::new(label, 2);
+            assert!(rings().iter().any(|r| r.label() == label));
+        }
+        assert!(!rings().iter().any(|r| r.label() == label));
+    }
+
+    #[test]
+    fn trace_log_wraps_by_capacity() {
+        let log = TraceLog::new(4);
+        log.set(0, 100);
+        log.set(5, 105); // wraps onto slot 1
+        assert_eq!(log.get(0), 100);
+        assert_eq!(log.get(5), 105);
+        assert_eq!(log.get(1), 105, "absolute indexing is mod capacity");
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = mint_trace_id();
+        let b = mint_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn clock_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,300 @@
+//! Windowed telemetry: a ring of rolling `Metrics` deltas.
+//!
+//! The cumulative-since-start aggregates served by `STATS` answer "how
+//! has this pool done over its lifetime" but not "what is p99 *right
+//! now*" — during a hot-swap, a fault storm, or a traffic spike the
+//! cumulative tail lags the live one by however much history it has
+//! absorbed.  [`WindowTracker`] closes fixed-width windows (default
+//! 1 s) over successive cumulative [`Metrics`] snapshots and keeps the
+//! last N per-window deltas, so rate / p50 / p99 / error-rate /
+//! crash-rate are queryable per window.  The serving registry folds the
+//! result into `stats_json` under the `"windows"` key; `repro top`
+//! renders it live.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Metrics;
+use crate::util::json::Json;
+
+/// Default window width: the classic 1-s telemetry tick.
+pub const DEFAULT_WINDOW_INTERVAL: Duration = Duration::from_secs(1);
+
+/// Default retention: two minutes of 1-s windows.
+pub const DEFAULT_WINDOW_CAPACITY: usize = 120;
+
+/// One closed window: the metrics delta accumulated between two ticks.
+#[derive(Debug, Clone)]
+pub struct WindowStat {
+    /// Monotone window sequence number since tracker start (windows
+    /// beyond the retention capacity are dropped, the numbering is not).
+    pub index: u64,
+    /// Window end, relative to tracker start.
+    pub end_offset: Duration,
+    /// Metrics accumulated in this window (`wall` = window interval, so
+    /// `delta.throughput()` is the window's request rate).
+    pub delta: Metrics,
+}
+
+impl WindowStat {
+    /// Requests per second within the window.
+    pub fn rate(&self) -> f64 {
+        self.delta.throughput()
+    }
+
+    /// Error replies as a fraction of the window's requests (0 when idle).
+    pub fn error_rate(&self) -> f64 {
+        if self.delta.requests == 0 {
+            0.0
+        } else {
+            self.delta.errors as f64 / self.delta.requests as f64
+        }
+    }
+
+    /// Contained worker/stage crashes per second within the window.
+    pub fn crash_rate(&self) -> f64 {
+        let s = self.delta.wall.as_secs_f64();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.delta.crashes as f64 / s
+        }
+    }
+
+    /// Flat JSON row (stable keys — pinned by the schema test).
+    pub fn to_json(&self) -> Json {
+        let us = |d: Duration| Json::Num(d.as_secs_f64() * 1e6);
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("index".into(), Json::Num(self.index as f64));
+        m.insert("end_s".into(), Json::Num(self.end_offset.as_secs_f64()));
+        m.insert("requests".into(), Json::Num(self.delta.requests as f64));
+        m.insert("errors".into(), Json::Num(self.delta.errors as f64));
+        m.insert("crashes".into(), Json::Num(self.delta.crashes as f64));
+        m.insert("restarts".into(), Json::Num(self.delta.restarts as f64));
+        m.insert(
+            "requests_failed_over".into(),
+            Json::Num(self.delta.requests_failed_over as f64),
+        );
+        m.insert("rate".into(), Json::Num(self.rate()));
+        m.insert("error_rate".into(), Json::Num(self.error_rate()));
+        m.insert("crash_rate".into(), Json::Num(self.crash_rate()));
+        m.insert("latency_p50_us".into(), us(self.delta.p50()));
+        m.insert("latency_p99_us".into(), us(self.delta.p99()));
+        m.insert("latency_max_us".into(), us(self.delta.latency.max()));
+        Json::Obj(m)
+    }
+}
+
+/// Rolling-window tracker over cumulative [`Metrics`] snapshots.
+///
+/// Callers feed it `(now, cumulative)` pairs from any cadence (the admin
+/// server ticks it from the accept loop's idle hook and before serving
+/// `STATS`); it closes a window whenever `now` crosses the next boundary.
+/// The delta since the previous snapshot is attributed to the *first*
+/// window being closed — with ticks arriving much faster than the
+/// interval that is exact; boundaries that elapsed while nobody ticked
+/// close as explicitly empty windows rather than silently stretching.
+#[derive(Debug)]
+pub struct WindowTracker {
+    interval: Duration,
+    capacity: usize,
+    started: Instant,
+    next_boundary: Instant,
+    last: Metrics,
+    next_index: u64,
+    windows: VecDeque<WindowStat>,
+}
+
+impl WindowTracker {
+    pub fn new(interval: Duration, capacity: usize) -> Self {
+        let started = Instant::now();
+        WindowTracker {
+            interval: interval.max(Duration::from_millis(1)),
+            capacity: capacity.max(1),
+            started,
+            next_boundary: started + interval.max(Duration::from_millis(1)),
+            last: Metrics::new(),
+            next_index: 0,
+            windows: VecDeque::new(),
+        }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(DEFAULT_WINDOW_INTERVAL, DEFAULT_WINDOW_CAPACITY)
+    }
+
+    pub fn interval(&self) -> Duration {
+        self.interval
+    }
+
+    /// Tracker epoch — window `end_offset`s are relative to this.
+    pub fn started(&self) -> Instant {
+        self.started
+    }
+
+    /// Cheap pre-check so idle-loop callers can skip the snapshot work
+    /// (and the lock that guards it) between boundaries.
+    pub fn due(&self, now: Instant) -> bool {
+        now >= self.next_boundary
+    }
+
+    /// Close any windows whose boundary `now` has crossed.  Returns true
+    /// if at least one window closed.
+    pub fn tick(&mut self, now: Instant, cumulative: &Metrics) -> bool {
+        if !self.due(now) {
+            return false;
+        }
+        let mut delta = cumulative.delta_since(&self.last);
+        delta.wall = self.interval;
+        self.last = cumulative.clone();
+        let end = self.next_boundary;
+        self.next_boundary = end + self.interval;
+        self.push(end, delta);
+        while now >= self.next_boundary {
+            // nobody ticked across these boundaries: close them empty
+            let end = self.next_boundary;
+            self.next_boundary = end + self.interval;
+            let mut empty = Metrics::new();
+            empty.wall = self.interval;
+            self.push(end, empty);
+        }
+        true
+    }
+
+    fn push(&mut self, end: Instant, delta: Metrics) {
+        let stat = WindowStat {
+            index: self.next_index,
+            end_offset: end.duration_since(self.started),
+            delta,
+        };
+        self.next_index += 1;
+        self.windows.push_back(stat);
+        while self.windows.len() > self.capacity {
+            self.windows.pop_front();
+        }
+    }
+
+    /// Closed windows, oldest first.
+    pub fn windows(&self) -> &VecDeque<WindowStat> {
+        &self.windows
+    }
+
+    /// The most recently closed window.
+    pub fn latest(&self) -> Option<&WindowStat> {
+        self.windows.back()
+    }
+
+    /// JSON array of window rows, oldest first (the `"windows"` value in
+    /// `stats_json`).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.windows.iter().map(WindowStat::to_json).collect())
+    }
+}
+
+impl Default for WindowTracker {
+    fn default() -> Self {
+        Self::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cumulative(requests: usize, latency: Duration) -> Metrics {
+        let mut m = Metrics::new();
+        for _ in 0..requests {
+            m.record_batch(1, latency / 2, None);
+            m.record_request(latency / 2, latency);
+        }
+        m
+    }
+
+    #[test]
+    fn closes_windows_with_deltas() {
+        let mut t = WindowTracker::new(Duration::from_secs(1), 8);
+        let start = t.started();
+        assert!(!t.due(start));
+        assert!(!t.tick(start, &Metrics::new()), "before the boundary: no window");
+
+        let c1 = cumulative(10, Duration::from_millis(2));
+        assert!(t.tick(start + Duration::from_secs(1), &c1));
+        let mut c2 = cumulative(10, Duration::from_millis(2));
+        c2.merge(&cumulative(5, Duration::from_millis(40)));
+        assert!(t.tick(start + Duration::from_secs(2), &c2));
+
+        let w = t.windows();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].delta.requests, 10);
+        assert_eq!(w[1].delta.requests, 5, "second window sees only the delta");
+        assert!((w[0].rate() - 10.0).abs() < 1e-9);
+        assert!(w[0].delta.p99() <= Duration::from_millis(4));
+        assert!(w[1].delta.p99() >= Duration::from_millis(30), "spike confined to its window");
+        assert_eq!(w[1].index, 1);
+        assert_eq!(w[1].end_offset, Duration::from_secs(2));
+    }
+
+    #[test]
+    fn missed_boundaries_close_empty() {
+        let mut t = WindowTracker::new(Duration::from_secs(1), 8);
+        let start = t.started();
+        let c = cumulative(6, Duration::from_millis(1));
+        // one tick, three boundaries late: delta lands in the first
+        // elapsed window, the other two close explicitly empty
+        assert!(t.tick(start + Duration::from_millis(3_500), &c));
+        let w = t.windows();
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[0].delta.requests, 6);
+        assert_eq!(w[1].delta.requests, 0);
+        assert_eq!(w[2].delta.requests, 0);
+        assert_eq!(w[2].error_rate(), 0.0);
+        // next boundary is at 4 s: a tick at 3.9 s closes nothing
+        assert!(!t.tick(start + Duration::from_millis(3_900), &c));
+    }
+
+    #[test]
+    fn retention_drops_oldest_but_keeps_numbering() {
+        let mut t = WindowTracker::new(Duration::from_secs(1), 3);
+        let start = t.started();
+        for i in 1..=5u64 {
+            t.tick(start + Duration::from_secs(i), &Metrics::new());
+        }
+        let w = t.windows();
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.front().unwrap().index, 2);
+        assert_eq!(w.back().unwrap().index, 4);
+    }
+
+    #[test]
+    fn window_json_rows_have_stable_keys() {
+        let mut t = WindowTracker::new(Duration::from_secs(1), 4);
+        let start = t.started();
+        t.tick(start + Duration::from_secs(1), &cumulative(3, Duration::from_millis(2)));
+        let j = t.to_json();
+        let rows = j.as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        let keys: Vec<&str> = match &rows[0] {
+            Json::Obj(m) => m.keys().map(String::as_str).collect(),
+            other => panic!("window row should be an object, got {other:?}"),
+        };
+        assert_eq!(
+            keys,
+            vec![
+                "crash_rate",
+                "crashes",
+                "end_s",
+                "error_rate",
+                "errors",
+                "index",
+                "latency_max_us",
+                "latency_p50_us",
+                "latency_p99_us",
+                "rate",
+                "requests",
+                "requests_failed_over",
+                "restarts",
+            ]
+        );
+        assert_eq!(rows[0].get("requests").unwrap().as_usize().unwrap(), 3);
+    }
+}

@@ -140,15 +140,28 @@ impl Backend for PipelineBackend {
     }
 
     fn infer_batch(&mut self, images: &[&[i32]]) -> Result<BatchResult> {
+        self.infer_batch_traced(images, &[])
+    }
+
+    /// The traced entry point the coordinator's shard worker uses: each
+    /// image keeps its request's trace ID, so per-stage spans in the
+    /// runtime's `pipe{N}/stage{L}` rings correlate with the request's
+    /// coordinator spans.  Images without an ID (direct `infer_batch`
+    /// callers) get a freshly minted one.
+    fn infer_batch_traced(&mut self, images: &[&[i32]], trace_ids: &[u64]) -> Result<BatchResult> {
         if let Some(runtime) = &self.runtime {
             // submit everything first: the whole batch streams through the
             // stages concurrently, tickets complete in submission order
             let mut tickets = Vec::with_capacity(images.len());
             let mut submit_err = None;
-            for img in images {
+            for (i, img) in images.iter().enumerate() {
+                let trace_id = match trace_ids.get(i).copied().filter(|&t| t != 0) {
+                    Some(t) => t,
+                    None => crate::obs::mint_trace_id(),
+                };
                 // the runtime's feeder slices rows on its own thread, so it
                 // needs an owned copy (the only copy on this path)
-                match runtime.submit(img.to_vec()) {
+                match runtime.submit_traced(img.to_vec(), trace_id) {
                     Ok(t) => tickets.push(t),
                     Err(e) => {
                         submit_err = Some(e);

@@ -43,6 +43,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::bcnn::engine::LayerShape;
 use crate::bcnn::Engine;
 use crate::fpga::channel::fifo_rows;
+use crate::obs::{self, SpanRing, StageTracer, TraceLog};
 use crate::pipeline::fifo::{bounded, RowSender};
 use crate::pipeline::plan::StagePlan;
 use crate::pipeline::stage::{
@@ -51,8 +52,15 @@ use crate::pipeline::stage::{
 };
 use crate::util::sync::panic_message;
 
-/// An admitted image on its way to the feeder.
-type FeedMsg = (Vec<i32>, mpsc::Sender<ScoreResult>);
+/// An admitted image on its way to the feeder: pixels, the request's
+/// trace ID, and the reply sender.
+type FeedMsg = (Vec<i32>, u64, mpsc::Sender<ScoreResult>);
+
+/// Capacity of the feeder's image-index → trace-ID log.  Far above any
+/// plausible in-flight image count (admission window + one image per
+/// stage FIFO), so by the time a slot is overwritten the image that
+/// owned it has long since left the pipe.
+const TRACE_LOG_CAPACITY: usize = 1024;
 
 /// Receipt for one submitted image; [`ScoreTicket::wait`] blocks for its
 /// scores.  Tickets complete in submission order.
@@ -163,6 +171,12 @@ impl PipelineRuntime {
         let counters: Vec<Arc<StageCounters>> =
             (0..n).map(|_| Arc::new(StageCounters::default())).collect();
         let crashes = Arc::new(AtomicU64::new(0));
+        // one tracing track per stage (`pipe{instance}/stage{i}`); the
+        // feeder's trace log maps the k-th fed image to its trace ID so
+        // every stage can label its per-image spans without the rows
+        // carrying IDs
+        let instance = obs::next_instance_id();
+        let trace_log = Arc::new(TraceLog::new(TRACE_LOG_CAPACITY));
         let mut threads = Vec::with_capacity(n + 1);
 
         // build the inter-stage FIFOs front to back, then hand each stage
@@ -191,6 +205,14 @@ impl PipelineRuntime {
             let ctr = Arc::clone(&counters[i]);
             let pending = Arc::clone(&pending);
             let crash_ctr = Arc::clone(&crashes);
+            // the ring's Arc lives inside the stage thread, so the track
+            // deregisters from the global registry when the stage exits
+            let tracer = StageTracer::new(
+                SpanRing::new(format!("pipe{instance}/stage{i}"), obs::DEFAULT_RING_CAPACITY),
+                Arc::clone(&trace_log),
+                instance,
+                i as u32,
+            );
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("pipeline-stage-{i}"))
@@ -204,7 +226,7 @@ impl PipelineRuntime {
                         // into the lead, so one wrapper per stage covers
                         // the whole lane group.
                         let result = catch_unwind(AssertUnwindSafe(|| {
-                            run_stage_group(&engine, i, lanes, rx, tx, &ctr)
+                            run_stage_group(&engine, i, lanes, rx, tx, &ctr, Some(&tracer))
                         }));
                         if let Err(payload) = result {
                             crash_ctr.fetch_add(1, Ordering::Relaxed);
@@ -230,9 +252,16 @@ impl PipelineRuntime {
                 .name("pipeline-feeder".into())
                 .spawn({
                     let pending = Arc::clone(&pending);
+                    let trace_log = Arc::clone(&trace_log);
                     move || {
                         let row_len = feed_shape.in_hw * feed_shape.in_c;
-                        while let Some((image, reply)) = feeder_rx.recv() {
+                        let mut fed = 0u64;
+                        while let Some((image, trace_id, reply)) = feeder_rx.recv() {
+                            // publish the image's trace ID BEFORE feeding
+                            // any rows: stages index the log by completed-
+                            // image count, which can never pass the feeder
+                            trace_log.set(fed, trace_id);
+                            fed += 1;
                             // register the reply BEFORE feeding any rows so
                             // the classifier pops replies in image order
                             // (and so an already-failed pipeline fails the
@@ -249,7 +278,7 @@ impl PipelineRuntime {
                                 // a stage exited: fail everything in flight
                                 // and everything still being admitted
                                 fail_pending(&pending, StageError::Shutdown);
-                                while let Some((_image, reply)) = feeder_rx.recv() {
+                                while let Some((_image, _trace_id, reply)) = feeder_rx.recv() {
                                     let _ = reply.send(Err(StageError::Shutdown));
                                 }
                                 return;
@@ -279,8 +308,17 @@ impl PipelineRuntime {
 
     /// Submit one image (`hw*hw*c` NHWC values).  Blocks while the
     /// admission window is full — bounded memory, explicit backpressure —
-    /// and returns a ticket that completes in submission order.
+    /// and returns a ticket that completes in submission order.  Mints a
+    /// fresh trace ID; callers that already hold one (the coordinator's
+    /// traced batch path) use [`PipelineRuntime::submit_traced`].
     pub fn submit(&self, image: Vec<i32>) -> Result<ScoreTicket> {
+        self.submit_traced(image, obs::mint_trace_id())
+    }
+
+    /// [`PipelineRuntime::submit`] with a caller-supplied trace ID, so the
+    /// image's per-stage spans correlate with the request's coordinator
+    /// spans under one end-to-end identity.
+    pub fn submit_traced(&self, image: Vec<i32>, trace_id: u64) -> Result<ScoreTicket> {
         if image.len() != self.input_len {
             bail!("image size {} != {}", image.len(), self.input_len);
         }
@@ -289,7 +327,7 @@ impl PipelineRuntime {
         };
         let (tx, rx) = mpsc::channel();
         feeder_tx
-            .send((image, tx))
+            .send((image, trace_id, tx))
             .map_err(|_| anyhow!("pipeline is shut down"))?;
         Ok(ScoreTicket { rx })
     }

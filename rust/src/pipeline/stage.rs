@@ -51,6 +51,7 @@ use std::time::{Duration, Instant};
 
 use crate::bcnn::engine::{LayerStepper, RowRef, StepperOut};
 use crate::bcnn::Engine;
+use crate::obs::{self, StageTracer};
 use crate::pipeline::fifo::{bounded, RowReceiver, RowSender};
 use crate::util::faults;
 use crate::util::sync::lock_recover;
@@ -242,13 +243,14 @@ pub fn run_stage_group(
     rx: RowReceiver<PipeRow>,
     tx: StageOutput,
     counters: &StageCounters,
+    tracer: Option<&StageTracer>,
 ) {
     let shapes = engine.layer_shapes();
     let out_c = shapes[index].out_c.max(1);
     let lanes = lanes.clamp(1, out_c);
     if lanes == 1 {
         let mut stepper = engine.layer_stepper(index).expect("index validated at construction");
-        run_single_lane(&mut stepper, rx, tx, counters);
+        run_single_lane(&mut stepper, rx, tx, counters, tracer);
         return;
     }
     // contiguous ascending channel partitions; lane 0 (the lead) keeps
@@ -264,7 +266,9 @@ pub fn run_stage_group(
             helpers_in.push(in_tx);
             helpers_out.push(out_rx);
         }
-        run_lead_lane(engine, index, bounds[0], helpers_in, helpers_out, rx, tx, counters);
+        run_lead_lane(
+            engine, index, bounds[0], helpers_in, helpers_out, rx, tx, counters, tracer,
+        );
         // scope join: helpers observe their dropped endpoints and exit
     });
 }
@@ -281,9 +285,12 @@ fn run_single_lane(
     rx: RowReceiver<PipeRow>,
     tx: StageOutput,
     counters: &StageCounters,
+    tracer: Option<&StageTracer>,
 ) {
     let in_hw = stepper.shape().in_hw;
     let mut rows_in_image = 0usize;
+    let mut images_done = 0u64;
+    let mut img_start_ns = 0u64;
     // a push emits at most one row and a flush at most one more, so the
     // staging buffer never grows past 2
     let mut emitted: Vec<StepperOut> = Vec::with_capacity(2);
@@ -293,6 +300,9 @@ fn run_single_lane(
         let Some(row) = rx.recv() else { break };
         StageCounters::add(&counters.stall_in_ns, wait.elapsed());
         counters.rows_in.fetch_add(1, Ordering::Relaxed);
+        if tracer.is_some() && rows_in_image == 0 {
+            img_start_ns = obs::now_ns();
+        }
         let work = Instant::now();
         let rref = match &row {
             PipeRow::Int(v) => RowRef::Int(v),
@@ -310,6 +320,10 @@ fn run_single_lane(
                 fail_stage(&tx, StageError::Failed(e.to_string()));
                 return;
             }
+            if let Some(t) = tracer {
+                t.record_image(images_done, img_start_ns);
+            }
+            images_done += 1;
         }
         StageCounters::add(&counters.busy_ns, work.elapsed());
         for out in emitted.drain(..) {
@@ -341,11 +355,14 @@ fn run_lead_lane(
     rx: RowReceiver<PipeRow>,
     tx: StageOutput,
     counters: &StageCounters,
+    tracer: Option<&StageTracer>,
 ) {
     let mut stepper =
         engine.layer_stepper_part(index, lo, hi).expect("bounds derived from the shape");
     let in_hw = stepper.shape().in_hw;
     let mut rows_in_image = 0usize;
+    let mut images_done = 0u64;
+    let mut img_start_ns = 0u64;
     let mut emitted: Vec<StepperOut> = Vec::with_capacity(2);
 
     loop {
@@ -353,6 +370,9 @@ fn run_lead_lane(
         let Some(row) = rx.recv() else { break };
         StageCounters::add(&counters.stall_in_ns, wait.elapsed());
         counters.rows_in.fetch_add(1, Ordering::Relaxed);
+        if tracer.is_some() && rows_in_image == 0 {
+            img_start_ns = obs::now_ns();
+        }
         let work = Instant::now();
         // broadcast first so the helpers overlap with the lead's own
         // partition compute
@@ -390,6 +410,10 @@ fn run_lead_lane(
                 fail_stage(&tx, StageError::Failed(e.to_string()));
                 return;
             }
+            if let Some(t) = tracer {
+                t.record_image(images_done, img_start_ns);
+            }
+            images_done += 1;
         }
         // every lane emits the same schedule: pop exactly one partial per
         // helper per own emission and merge in ascending lane order

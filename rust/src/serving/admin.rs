@@ -10,7 +10,8 @@
 //! ```text
 //! tag 0                        close connection (v1 semantics)
 //! tag 1..=MAX_WIRE_VALUES      v1 request: tag x i32 values -> u32 n, n x f32
-//! OP_INFER    name, u32 n, n x i32   -> REPLY_SCORES, u64 version, u32 n, n x f32
+//! OP_INFER    name, u32 n, n x i32   -> REPLY_SCORES, u64 version,
+//!                                       u64 trace_id, u32 n, n x f32
 //! OP_DEPLOY   name, source, backend, u32 workers, u32 queue_depth
 //!                                    -> REPLY_OK, u64 version
 //! OP_UNDEPLOY name                   -> REPLY_OK, u64 retired version
@@ -18,8 +19,14 @@
 //! OP_LIST                            -> REPLY_JSON, u32 len, bytes
 //! OP_STATS                           -> REPLY_JSON, u32 len, bytes
 //! OP_HEALTH                          -> REPLY_JSON, u32 len, bytes
+//! OP_TRACE                           -> REPLY_JSON, u32 len, bytes
 //! error (any op)                     -> 0xFFFF_FFFF, u32 len, msg bytes
 //! ```
+//!
+//! `OP_TRACE` returns the server's span rings as a Chrome trace-event
+//! JSON document (load it in Perfetto / `chrome://tracing`); the
+//! `trace_id` in every `REPLY_SCORES` frame correlates a reply with its
+//! spans there.
 //!
 //! Strings are `u16 len + UTF-8 bytes`.  Error frames do **not** close
 //! the connection (the next request may route to a healthy model); only
@@ -52,6 +59,7 @@ pub const OP_ROLLBACK: u32 = 0xBC20_0004;
 pub const OP_LIST: u32 = 0xBC20_0005;
 pub const OP_STATS: u32 = 0xBC20_0006;
 pub const OP_HEALTH: u32 = 0xBC20_0007;
+pub const OP_TRACE: u32 = 0xBC20_0008;
 pub const REPLY_SCORES: u32 = 0xBC20_0081;
 pub const REPLY_OK: u32 = 0xBC20_0082;
 pub const REPLY_JSON: u32 = 0xBC20_0083;
@@ -77,7 +85,10 @@ pub fn serve_registry(
             let _ = handle_conn(stream, &registry);
         })
     };
-    serve_connections(listener, stop, handler, move || registry.reap_retired())
+    serve_connections(listener, stop, handler, move || {
+        registry.reap_retired();
+        registry.tick_windows();
+    })
 }
 
 fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
@@ -102,7 +113,7 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
                     }
                 };
                 match infer_on(&entry, image) {
-                    Ok(scores) => {
+                    Ok((_trace_id, scores)) => {
                         let mut out = Vec::with_capacity(4 + scores.len() * 4);
                         out.extend_from_slice(&(scores.len() as u32).to_le_bytes());
                         for s in &scores {
@@ -136,10 +147,11 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
                     }
                 };
                 match infer_on(&entry, image) {
-                    Ok(scores) => {
-                        let mut out = Vec::with_capacity(16 + scores.len() * 4);
+                    Ok((trace_id, scores)) => {
+                        let mut out = Vec::with_capacity(24 + scores.len() * 4);
                         out.extend_from_slice(&REPLY_SCORES.to_le_bytes());
                         out.extend_from_slice(&entry.version.to_le_bytes());
+                        out.extend_from_slice(&trace_id.to_le_bytes());
                         out.extend_from_slice(&(scores.len() as u32).to_le_bytes());
                         for s in &scores {
                             out.extend_from_slice(&s.to_le_bytes());
@@ -179,6 +191,10 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
                 let json = health_json(registry);
                 write_json(&mut stream, &json)?;
             }
+            OP_TRACE => {
+                let json = crate::obs::chrome_trace_json();
+                write_json(&mut stream, &json)?;
+            }
             other => {
                 let _ = write_error(&mut stream, &format!("unknown frame tag {other:#010x}"));
                 bail!("unknown frame tag {other:#010x}");
@@ -189,7 +205,10 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
 
 /// Submit to one entry's pool with a deadline; a saturated pool yields an
 /// error string (sent as an error frame) instead of a stalled connection.
-fn infer_on(entry: &ModelEntry, image: Vec<i32>) -> std::result::Result<Vec<f32>, String> {
+/// Returns the reply's trace ID with the scores so v2 frames can carry
+/// it (the coordinator records every span *before* sending the reply, so
+/// a client that sees this ID will find its spans in `OP_TRACE`).
+fn infer_on(entry: &ModelEntry, image: Vec<i32>) -> std::result::Result<(u64, Vec<f32>), String> {
     let rx = entry
         .client()
         .submit_deadline(image, SUBMIT_DEADLINE)
@@ -205,7 +224,8 @@ fn infer_on(entry: &ModelEntry, image: Vec<i32>) -> std::result::Result<Vec<f32>
     let reply = rx
         .recv()
         .map_err(|_| format!("model {:?} pool shut down before replying", entry.name))?;
-    reply.scores.map_err(|e| e.message)
+    let trace_id = reply.trace_id;
+    reply.scores.map(|s| (trace_id, s)).map_err(|e| e.message)
 }
 
 /// Build the deploy spec for a wire `DEPLOY`.  Unset fields (empty
@@ -286,8 +306,11 @@ pub fn list_json(registry: &ModelRegistry) -> Json {
     obj(vec![("epoch", Json::Num(table.epoch as f64)), ("models", Json::Arr(models))])
 }
 
-/// `STATS` payload: per-model serving metrics across versions.
+/// `STATS` payload: per-model serving metrics across versions, plus the
+/// rolling windowed telemetry under `"windows"` (advanced here so a
+/// stats poller is itself enough to keep the windows fresh).
 pub fn stats_json(registry: &ModelRegistry) -> Json {
+    registry.tick_windows();
     let rows: Vec<Json> = registry
         .stats()
         .into_iter()
@@ -302,7 +325,11 @@ pub fn stats_json(registry: &ModelRegistry) -> Json {
             ])
         })
         .collect();
-    obj(vec![("epoch", Json::Num(registry.epoch() as f64)), ("models", Json::Arr(rows))])
+    obj(vec![
+        ("epoch", Json::Num(registry.epoch() as f64)),
+        ("models", Json::Arr(rows)),
+        ("windows", registry.windows_json()),
+    ])
 }
 
 /// `HEALTH` payload: per-model pool supervision state — ready/degraded/
@@ -384,10 +411,13 @@ fn push_string(out: &mut Vec<u8>, s: &str) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 /// A v2 inference reply: the scores plus which model *version* served it
-/// (the hot-swap observability hook: clients can pin replies to versions).
+/// (the hot-swap observability hook: clients can pin replies to versions)
+/// and the request's end-to-end trace ID (its key into the `OP_TRACE`
+/// span export; 0 means the server recorded no spans).
 #[derive(Debug, Clone, PartialEq)]
 pub struct VersionedScores {
     pub version: u64,
+    pub trace_id: u64,
     pub scores: Vec<f32>,
 }
 
@@ -416,6 +446,7 @@ impl ControlClient {
         self.stream.write_all(&out)?;
         self.expect(REPLY_SCORES)?;
         let version = read_u64(&mut self.stream)?;
+        let trace_id = read_u64(&mut self.stream)?;
         let n = read_u32(&mut self.stream)? as usize;
         let mut raw = vec![0u8; n * 4];
         self.stream.read_exact(&mut raw)?;
@@ -423,7 +454,7 @@ impl ControlClient {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
-        Ok(VersionedScores { version, scores })
+        Ok(VersionedScores { version, trace_id, scores })
     }
 
     /// Deploy (or hot-swap) `name` from `source` (a server-side `.bcnn`
@@ -480,6 +511,12 @@ impl ControlClient {
     /// counters).
     pub fn health(&mut self) -> Result<Json> {
         self.json_op(OP_HEALTH)
+    }
+
+    /// The server's span rings as a Chrome trace-event JSON document —
+    /// write it to a file and load it in Perfetto / `chrome://tracing`.
+    pub fn trace(&mut self) -> Result<Json> {
+        self.json_op(OP_TRACE)
     }
 
     fn json_op(&mut self, op: u32) -> Result<Json> {

@@ -32,8 +32,10 @@ use crate::coordinator::{
 };
 use crate::gpu::GpuKernel;
 use crate::model::{BcnnModel, NetConfig};
+use crate::obs::WindowTracker;
 use crate::pipeline::StagePlan;
 use crate::serving::router::{Router, RoutingTable, TableSlot};
+use crate::util::json::Json;
 use crate::util::sync::{lock_recover, read_recover, write_recover};
 
 /// Which backend a model entry's pool replicates (paper backends plus the
@@ -323,6 +325,10 @@ struct RegState {
 pub struct ModelRegistry {
     state: Mutex<RegState>,
     slot: Arc<TableSlot>,
+    /// Rolling per-second telemetry over the registry-wide cumulative
+    /// metrics (see [`WindowTracker`]); advanced from the TCP front-end's
+    /// idle loop and from `STATS` requests.
+    windows: Mutex<WindowTracker>,
 }
 
 impl Default for ModelRegistry {
@@ -340,6 +346,7 @@ impl ModelRegistry {
                 retired: Vec::new(),
             }),
             slot: Arc::new(RwLock::new(Arc::new(RoutingTable::default()))),
+            windows: Mutex::new(WindowTracker::with_defaults()),
         }
     }
 
@@ -498,6 +505,49 @@ impl ModelRegistry {
             row.metrics.wall += snap.wall;
         }
         rows.into_values().collect()
+    }
+
+    /// Advance the windowed-telemetry clock if a window boundary has
+    /// passed: snapshot the registry-wide cumulative metrics and close
+    /// the elapsed window(s).  Cheap when nothing is due (one try-lock +
+    /// one Instant compare), so the TCP front-end calls it from its idle
+    /// accept loop; `STATS` requests call it too so a windowless poller
+    /// still sees fresh rows.  Non-blocking: if another thread holds the
+    /// tracker, skip — it is already ticking.
+    pub fn tick_windows(&self) {
+        let due = match self.windows.try_lock() {
+            Ok(w) => w.due(Instant::now()),
+            Err(_) => false,
+        };
+        if !due {
+            return;
+        }
+        // snapshot *outside* the tracker lock: stats() takes the state
+        // lock and can reap, neither of which should serialize pollers
+        let cumulative = self.cumulative_metrics();
+        if let Ok(mut w) = self.windows.try_lock() {
+            w.tick(Instant::now(), &cumulative);
+        }
+    }
+
+    /// The rolling windows as a JSON array (oldest first) — folded into
+    /// the `STATS` payload under `"windows"`.
+    pub fn windows_json(&self) -> Json {
+        lock_recover(&self.windows).to_json()
+    }
+
+    /// Registry-wide cumulative metrics: every model row (live + retired
+    /// lineage) merged into one accumulator — the series the window
+    /// tracker differentiates.
+    pub fn cumulative_metrics(&self) -> Metrics {
+        let mut total = Metrics::new();
+        for row in self.stats() {
+            total.merge(&row.metrics);
+            // merge() skips `wall` by design; sum so throughput stays
+            // defined over the aggregate
+            total.wall += row.metrics.wall;
+        }
+        total
     }
 
     /// Opportunistic reap of drained retired pools.  Also called from

@@ -1,0 +1,211 @@
+//! Observability integration: one request's trace ID correlating every
+//! span across coordinator and pipeline tracks in the exported Chrome
+//! trace, and windowed telemetry confining an injected latency fault to
+//! the windows it actually happened in while the cumulative tail lags.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use repro::bcnn::Engine;
+use repro::coordinator::workload::random_images;
+use repro::model::{BcnnModel, NetConfig};
+use repro::obs::{self, WindowTracker};
+use repro::serving::{serve_registry, BackendSpec, ControlClient, DeploySpec, ModelRegistry};
+use repro::util::faults::{self, FaultPlan};
+use repro::util::json::Json;
+
+/// Tracing arming and fault plans are process-global; every test in this
+/// binary serializes on this lock and restores the defaults (tracing on,
+/// faults clear) before running.
+fn guard() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    let g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    obs::set_enabled(true);
+    faults::clear();
+    g
+}
+
+fn tiny(seed: u64) -> BcnnModel {
+    BcnnModel::synthetic(&NetConfig::tiny(), seed)
+}
+
+type ServerHandle = std::thread::JoinHandle<anyhow::Result<()>>;
+
+fn start_server(registry: Arc<ModelRegistry>) -> (String, Arc<AtomicBool>, ServerHandle) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || serve_registry(listener, registry, stop))
+    };
+    (addr, stop, handle)
+}
+
+/// The ISSUE's trace acceptance: infer one image against a
+/// pipeline-backed model over the wire, pull `OP_TRACE`, and follow the
+/// reply's trace ID through admission, queue, batch and reply spans on
+/// the shard track plus one stage span per layer on the `pipe*/stage*`
+/// tracks.
+#[test]
+fn one_request_trace_correlates_across_all_tracks() {
+    let _g = guard();
+    let model = tiny(3);
+    let n_layers = model.layers.len();
+    let registry = Arc::new(ModelRegistry::new());
+    registry
+        .deploy(
+            "m",
+            DeploySpec::new(model.clone())
+                .with_backend(BackendSpec::Pipeline { inflight: 4, stage_threads: 0 }),
+        )
+        .unwrap();
+    let (addr, stop, server) = start_server(Arc::clone(&registry));
+    let mut admin = ControlClient::connect(&addr).unwrap();
+
+    let img = random_images(&NetConfig::tiny(), 1, 11).pop().unwrap();
+    let reply = admin.infer("m", &img).unwrap();
+    assert_ne!(reply.trace_id, 0, "v2 replies must carry the trace id");
+    assert_eq!(
+        reply.scores,
+        Engine::new(model).unwrap().infer(&img).unwrap(),
+        "tracing must not perturb the scores"
+    );
+
+    // the final stage span lands on its ring nanoseconds after the reply
+    // ticket completes — retry the fetch instead of racing that write
+    let want_spans = 4 + n_layers;
+    let mut tracks: BTreeMap<u64, String> = BTreeMap::new();
+    let mut spans: Vec<Json> = Vec::new();
+    for _ in 0..200 {
+        let trace = admin.trace().unwrap();
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        tracks.clear();
+        for e in &events {
+            if e.get("ph").unwrap().as_str().unwrap() == "M" {
+                let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+                let name = e.get("args").unwrap().get("name").unwrap().as_str().unwrap();
+                tracks.insert(tid, name.to_string());
+            }
+        }
+        spans = events
+            .iter()
+            .filter(|e| {
+                e.get("ph").unwrap().as_str().unwrap() == "X"
+                    && e.get("args").unwrap().get("trace_id").unwrap().as_f64().unwrap() as u64
+                        == reply.trace_id
+            })
+            .cloned()
+            .collect();
+        if spans.len() >= want_spans {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(
+        spans.len(),
+        want_spans,
+        "expected admission+queue+batch+reply plus {n_layers} stage spans, got {spans:?}"
+    );
+
+    // the four coordinator phases, each on a shard track
+    for want in ["admission", "queue", "batch", "reply"] {
+        let span = spans
+            .iter()
+            .find(|s| s.get("cat").unwrap().as_str().unwrap() == want)
+            .unwrap_or_else(|| panic!("missing {want} span for trace {}", reply.trace_id));
+        let tid = span.get("tid").unwrap().as_f64().unwrap() as u64;
+        let track = &tracks[&tid];
+        assert!(track.contains("/shard"), "{want} span on track {track:?}, want a shard track");
+        assert!(span.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+    }
+    // one complete stage span per layer, each on its own pipe/stage track
+    let mut layers_seen = BTreeSet::new();
+    for s in spans.iter().filter(|s| s.get("cat").unwrap().as_str().unwrap() == "stage") {
+        let layer = s.get("args").unwrap().get("layer").unwrap().as_f64().unwrap() as usize;
+        let tid = s.get("tid").unwrap().as_f64().unwrap() as u64;
+        let track = &tracks[&tid];
+        assert!(
+            track.starts_with("pipe") && track.ends_with(&format!("stage{layer}")),
+            "stage-{layer} span landed on track {track:?}"
+        );
+        assert!(s.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        layers_seen.insert(layer);
+    }
+    assert_eq!(
+        layers_seen,
+        (0..n_layers).collect::<BTreeSet<_>>(),
+        "every pipeline layer must contribute a stage span"
+    );
+
+    admin.close().unwrap();
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+}
+
+/// The ISSUE's windowing acceptance: a latency fault injected mid-run
+/// spikes p99 only in the windows where it fired; the neighbouring
+/// windows stay fast, while the cumulative histogram keeps carrying the
+/// spike long after recovery.
+#[test]
+fn latency_fault_spike_is_confined_to_its_windows() {
+    let _g = guard();
+    let registry = ModelRegistry::new();
+    registry.deploy("m", DeploySpec::new(tiny(5))).unwrap();
+    let entry = registry.router().resolve(Some("m")).unwrap();
+    let client = entry.client();
+    let images = random_images(&NetConfig::tiny(), 4, 21);
+    let drive = |n: usize| {
+        for i in 0..n {
+            client.infer(images[i % images.len()].clone()).unwrap().scores.unwrap();
+        }
+    };
+
+    // ticks use fabricated instants at exact 1-s boundaries, so which
+    // requests land in which window is deterministic regardless of how
+    // long the phases really took
+    let mut tracker = WindowTracker::new(Duration::from_secs(1), 16);
+    let start = tracker.started();
+
+    drive(100);
+    assert!(tracker.tick(start + Duration::from_secs(1), &registry.cumulative_metrics()));
+
+    faults::install(FaultPlan::parse("backend_infer:delay=30ms").unwrap());
+    drive(12);
+    faults::clear();
+    assert!(tracker.tick(start + Duration::from_secs(2), &registry.cumulative_metrics()));
+
+    drive(100);
+    assert!(tracker.tick(start + Duration::from_secs(3), &registry.cumulative_metrics()));
+
+    let w = tracker.windows();
+    assert_eq!(w.len(), 3);
+    let per_window: Vec<u64> = w.iter().map(|s| s.delta.requests).collect();
+    assert_eq!(per_window, vec![100, 12, 100], "deltas must partition the traffic");
+
+    // the spike lives in the faulted window...
+    assert!(
+        w[1].delta.p99() >= Duration::from_millis(25),
+        "faulted window p99 {:?} should carry the 30ms delay",
+        w[1].delta.p99()
+    );
+    // ...and nowhere else
+    for i in [0usize, 2] {
+        assert!(
+            w[i].delta.p99() < Duration::from_millis(15),
+            "window {i} p99 {:?} should be unaffected by the fault",
+            w[i].delta.p99()
+        );
+    }
+    // while the cumulative tail still reports the spike after recovery
+    let cumulative = registry.cumulative_metrics();
+    assert!(
+        cumulative.p99() >= Duration::from_millis(25),
+        "cumulative p99 {:?} must lag the recovery",
+        cumulative.p99()
+    );
+    assert!(cumulative.p99() > w[2].delta.p99());
+}

@@ -313,6 +313,118 @@ fn health_frame_reports_pool_state_over_the_wire() {
     server.join().unwrap().unwrap();
 }
 
+/// Schema pinning: the exact key sets of `STATS` (`stats_json`) and
+/// `Metrics::to_json` are wire contract — `repro top` and the CI obs
+/// smoke parse them by name, so a silently added, dropped, or renamed
+/// key must fail here rather than in a consumer.
+#[test]
+fn stats_json_schema_is_pinned() {
+    use repro::util::json::Json;
+
+    fn keys(j: &Json) -> Vec<String> {
+        match j {
+            Json::Obj(m) => m.keys().cloned().collect(),
+            other => panic!("expected an object, got {other:?}"),
+        }
+    }
+
+    let registry = ModelRegistry::new();
+    registry.deploy("eng", DeploySpec::new(tiny(1))).unwrap();
+    registry
+        .deploy(
+            "pipe",
+            DeploySpec::new(tiny(2))
+                .with_backend(BackendSpec::Pipeline { inflight: 4, stage_threads: 0 }),
+        )
+        .unwrap();
+    // one request per model so the kernel label and (for the pipeline)
+    // the per-stage counters are folded into the pool metrics
+    let img = random_images(&NetConfig::tiny(), 1, 12).pop().unwrap();
+    for name in ["eng", "pipe"] {
+        let entry = registry.router().resolve(Some(name)).unwrap();
+        entry.client().infer(img.clone()).unwrap().scores.unwrap();
+    }
+
+    let stats = repro::serving::admin::stats_json(&registry);
+    assert_eq!(keys(&stats), ["epoch", "models", "windows"]);
+
+    let base = [
+        "batches",
+        "crashes",
+        "errors",
+        "kernel",
+        "latency_max_us",
+        "latency_mean_us",
+        "latency_p50_us",
+        "latency_p99_us",
+        "mean_batch",
+        "modeled_busy_us",
+        "requests",
+        "requests_failed_over",
+        "restarts",
+        "throughput",
+    ];
+    let models = stats.get("models").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(models.len(), 2);
+    for m in &models {
+        assert_eq!(keys(m), ["backend", "config", "live", "metrics", "name", "version"]);
+        let name = m.get("name").unwrap().as_str().unwrap();
+        let metrics = m.get("metrics").unwrap();
+        if name == "pipe" {
+            // staged backends add the per-stage table and its shape flag
+            let mut want: Vec<&str> = base.to_vec();
+            want.extend(["stages", "stages_mixed"]);
+            want.sort_unstable();
+            assert_eq!(keys(metrics), want);
+            assert!(!metrics.get("stages_mixed").unwrap().as_bool().unwrap());
+            let stages = metrics.get("stages").unwrap().as_arr().unwrap().to_vec();
+            assert!(!stages.is_empty());
+            for s in &stages {
+                assert_eq!(
+                    keys(s),
+                    [
+                        "busy_us",
+                        "images",
+                        "lanes",
+                        "layer",
+                        "rows_in",
+                        "stall_in_us",
+                        "stall_out_us",
+                    ]
+                );
+            }
+        } else {
+            assert_eq!(keys(metrics), base);
+        }
+    }
+
+    // cross a real 1-s window boundary, then pin the window-row schema
+    std::thread::sleep(Duration::from_millis(1_100));
+    let stats = repro::serving::admin::stats_json(&registry);
+    let windows = stats.get("windows").unwrap().as_arr().unwrap().to_vec();
+    assert!(!windows.is_empty(), "a 1-s boundary must have closed a window");
+    for w in &windows {
+        assert_eq!(
+            keys(w),
+            [
+                "crash_rate",
+                "crashes",
+                "end_s",
+                "error_rate",
+                "errors",
+                "index",
+                "latency_max_us",
+                "latency_p50_us",
+                "latency_p99_us",
+                "rate",
+                "requests",
+                "requests_failed_over",
+                "restarts",
+            ]
+        );
+    }
+}
+
 /// The acceptance scenario: a continuous client load loop while the
 /// server flips between two synthetic configs >= 3 times.  Every
 /// submission must be answered, every reply must be bit-identical to a
