@@ -235,6 +235,13 @@ fn main() -> anyhow::Result<()> {
 
     // -- artifact ----------------------------------------------------------
     let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert(
+        "schema_version".into(),
+        Json::Num(repro::benchkit::BENCH_SCHEMA_VERSION as f64),
+    );
+    obj.insert("bench".into(), Json::Str("chaos_soak".into()));
+    obj.insert("git_commit".into(), Json::Str(repro::benchkit::git_commit()));
+    obj.insert("config_fingerprint".into(), Json::Str("tiny;fault-plan-soak".into()));
     obj.insert("requests".into(), Json::Num(total.submitted as f64));
     obj.insert("succeeded".into(), Json::Num(ok as f64));
     obj.insert("retried".into(), Json::Num(total.retried as f64));

@@ -1,0 +1,169 @@
+//! Performance-accounting smoke: serve a deliberately skewed pipeline
+//! model over TCP, drive traffic, fetch the OP_PROFILE report, and check
+//! the accounting invariants end-to-end:
+//!
+//! * every stage that saw traffic reports a utilization in (0, 1];
+//! * every layer is classified against the roofline balance point
+//!   (the skew puts conv layers compute-bound and the FC layer
+//!   memory-bound, so both classes must appear);
+//! * the measured bottleneck (max busy per image) agrees with the
+//!   eq.-12 prediction (max estimated cycles) — the skew gives the
+//!   middle conv ~85x the work of its neighbour, so a miss means the
+//!   accounting is wrong, not that the machine was noisy.
+//!
+//! Writes the report as `BENCH_profile.json` in the shared benchkit
+//! envelope.  CI runs this after the tier-1 tests and uploads the
+//! artifact.
+//!
+//! Run: `cargo run --release --example profile_smoke -- [--out <path>]`
+//! Exits nonzero if any invariant fails.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use repro::coordinator::workload::random_images;
+use repro::model::{BcnnModel, ConvSpec, NetConfig};
+use repro::serving::{serve_registry, BackendSpec, ControlClient, DeploySpec, ModelRegistry};
+use repro::util::json::Json;
+
+const REQUESTS: usize = 64;
+
+fn main() -> Result<()> {
+    let mut out_path = String::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--out" => out_path = args.next().context("--out needs a path")?,
+            other => bail!("unknown argument {other:?} (usage: profile_smoke [--out <path>])"),
+        }
+    }
+
+    // the fig7 stage-balance config: conv2 (8 -> 256 channels) carries
+    // ~85x conv1's estimated cycles and ~7x the FC layer's, so both the
+    // predicted and the measured bottleneck land on stage 1 regardless
+    // of host noise
+    let cfg = NetConfig {
+        name: "skewed".into(),
+        conv: vec![
+            ConvSpec { out_channels: 8, pool: false },
+            ConvSpec { out_channels: 256, pool: false },
+        ],
+        fc: vec![],
+        classes: 10,
+        input_hw: 8,
+        input_channels: 3,
+        input_bits: 6,
+    };
+    let model = BcnnModel::synthetic(&cfg, 0x0B5);
+    let n_layers = model.layers.len();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.deploy(
+        "m",
+        DeploySpec::new(model)
+            .with_backend(BackendSpec::Pipeline { inflight: 4, stage_threads: 0 }),
+    )?;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let stop = Arc::clone(&stop);
+        let registry = Arc::clone(&registry);
+        std::thread::spawn(move || serve_registry(listener, registry, stop))
+    };
+
+    let mut client = ControlClient::connect(&addr)?;
+    for img in &random_images(&cfg, REQUESTS, 7) {
+        client.infer("m", img)?;
+    }
+    // the final image's last-stage counters land just after the reply
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let profile = client.profile()?;
+    client.close()?;
+    stop.store(true, Ordering::Relaxed);
+    server.join().expect("server thread").expect("server exit");
+
+    // -- invariants --------------------------------------------------------
+    let models = profile.get("models")?.as_arr()?;
+    if models.len() != 1 {
+        bail!("expected 1 profiled model, got {}", models.len());
+    }
+    let report = models[0].get("report")?;
+    if let Ok(err) = report.get("error") {
+        bail!("accounting failed server-side: {}", err.as_str().unwrap_or("?"));
+    }
+    let layers = report.get("layers")?.as_arr()?;
+    if layers.len() != n_layers {
+        bail!("report has {} layers, model has {n_layers}", layers.len());
+    }
+    let mut bounds = std::collections::BTreeSet::new();
+    for layer in layers {
+        let name = layer.get("name")?.as_str()?;
+        let images = layer.get("images")?.as_f64()?;
+        if images < REQUESTS as f64 {
+            bail!("{name}: only {images} of {REQUESTS} images flushed through");
+        }
+        let util = layer.get("utilization")?.as_f64().with_context(|| {
+            format!("{name}: utilization must be a number once the stage saw traffic")
+        })?;
+        if !(util > 0.0 && util <= 1.0) {
+            bail!("{name}: utilization {util} outside (0, 1]");
+        }
+        let bound = layer.get("bound")?.as_str()?;
+        if bound != "compute" && bound != "memory" {
+            bail!("{name}: unknown roofline class {bound:?}");
+        }
+        bounds.insert(bound.to_string());
+        for key in ["xor_words", "popcounts", "bytes_moved", "cycles_est", "cycles_real"] {
+            if layer.get(key)?.as_f64()? <= 0.0 {
+                bail!("{name}: ledger column {key} is not positive");
+            }
+        }
+    }
+    if bounds.len() < 2 {
+        bail!("skewed config must produce both roofline classes, got {bounds:?}");
+    }
+    let predicted = report.get("predicted_bottleneck")?.as_usize()?;
+    if predicted != 1 {
+        bail!("eq.-12 prediction should pick the skewed conv (stage 1), got {predicted}");
+    }
+    let measured = report.get("measured_bottleneck")?.as_usize()?;
+    if !report.get("bottleneck_match")?.as_bool()? {
+        bail!("measured bottleneck stage {measured} disagrees with predicted {predicted}");
+    }
+
+    // -- artifact ----------------------------------------------------------
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert(
+        "schema_version".to_string(),
+        Json::Num(repro::benchkit::BENCH_SCHEMA_VERSION as f64),
+    );
+    obj.insert("bench".to_string(), Json::Str("profile".to_string()));
+    obj.insert("git_commit".to_string(), Json::Str(repro::benchkit::git_commit()));
+    obj.insert(
+        "config_fingerprint".to_string(),
+        Json::Str("skewed;pipeline-inflight4".to_string()),
+    );
+    obj.insert("profile".to_string(), profile);
+    let text = Json::Obj(obj).to_string();
+    if out_path.is_empty() {
+        // examples run from the repo root; keep the artifact next to the
+        // cargo-bench ones, falling back to the cwd outside the checkout
+        out_path = "rust/BENCH_profile.json".to_string();
+        if std::fs::write(&out_path, &text).is_err() {
+            out_path = "BENCH_profile.json".to_string();
+            std::fs::write(&out_path, &text)?;
+        }
+    } else {
+        std::fs::write(&out_path, &text)?;
+    }
+
+    println!(
+        "profile smoke OK: {n_layers} stages, utilization in (0,1], roofline classes \
+         {bounds:?}, bottleneck measured == predicted == stage {predicted}"
+    );
+    println!("wrote {out_path}");
+    Ok(())
+}

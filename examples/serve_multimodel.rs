@@ -165,6 +165,13 @@ fn main() -> anyhow::Result<()> {
 
     // -- artifact ---------------------------------------------------------
     let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert(
+        "schema_version".into(),
+        Json::Num(repro::benchkit::BENCH_SCHEMA_VERSION as f64),
+    );
+    obj.insert("bench".into(), Json::Str("hotswap".into()));
+    obj.insert("git_commit".into(), Json::Str(repro::benchkit::git_commit()));
+    obj.insert("config_fingerprint".into(), Json::Str("tiny;hot-swap-cycles".into()));
     obj.insert("requests".into(), Json::Num((submitted + 1) as f64));
     obj.insert("dropped".into(), Json::Num(0.0));
     obj.insert("swap_cycles".into(), Json::Num(SWAP_CYCLES as f64));

@@ -12,7 +12,7 @@
 use std::time::Duration;
 
 use repro::bcnn::{Engine, LayerOutput, Scratch};
-use repro::benchkit::{bench_with, fmt_ns, write_bench_json, BenchOpts, Json, Table};
+use repro::benchkit::{bench_with, envelope, fmt_ns, write_bench_json, BenchOpts, Json, Table};
 use repro::coordinator::workload::random_images;
 use repro::model::BcnnModel;
 use repro::util::kernels::{Kernel, KernelKind};
@@ -177,8 +177,8 @@ fn main() {
     }
     t.print();
 
-    let json = Json::Obj(vec![
-        ("bench".into(), Json::Str("engine_hotpath".into())),
+    let mut fields = envelope("engine_hotpath", "tiny+small+table2;single-core");
+    fields.extend(vec![
         ("smoke".into(), Json::Bool(smoke())),
         ("kernel".into(), Json::Str(Kernel::from_env().map_or("invalid", Kernel::name).into())),
         ("end_to_end".into(), Json::Arr(e2e_rows)),
@@ -192,6 +192,7 @@ fn main() {
         ),
         ("kernels".into(), Json::Arr(kernel_rows)),
     ]);
+    let json = Json::Obj(fields);
     write_bench_json("BENCH_engine.json", &json).expect("write BENCH_engine.json");
     println!("\nwrote BENCH_engine.json (smoke={})", smoke());
 }

@@ -18,7 +18,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use repro::bcnn::Engine;
-use repro::benchkit::{write_bench_json, Json, Table};
+use repro::benchkit::{envelope, write_bench_json, Json, Table};
 use repro::coordinator::workload::{random_images, run_closed_loop};
 use repro::coordinator::{
     Backend, BackendFactory, BatchPolicy, Coordinator, CoordinatorConfig, FpgaSimBackend,
@@ -106,6 +106,7 @@ fn main() {
                 policy: BatchPolicy { max_batch: 16, max_wait: Duration::ZERO },
                 workers,
                 queue_depth: 64,
+                ..Default::default()
             },
         )
         .expect("start pool");
@@ -260,8 +261,8 @@ fn main() {
     }
     t.print();
 
-    let json = Json::Obj(vec![
-        ("bench".into(), Json::Str("pipeline_batch_sweep".into())),
+    let mut fields = envelope("pipeline_batch_sweep", "tiny+skewed;executed-sweep");
+    fields.extend(vec![
         ("smoke".into(), Json::Bool(smoke())),
         ("config".into(), Json::Str("tiny".into())),
         ("images".into(), Json::Num(total as f64)),
@@ -293,6 +294,7 @@ fn main() {
             ]),
         ),
     ]);
+    let json = Json::Obj(fields);
     write_bench_json("BENCH_pipeline.json", &json).expect("write BENCH_pipeline.json");
     println!("\nwrote BENCH_pipeline.json (smoke={})", smoke());
 }

@@ -3,7 +3,15 @@
 //! `cargo bench` runs the `harness = false` binaries under `rust/benches/`,
 //! each of which uses this module: warmup, adaptive iteration count,
 //! median/mean/p95 over wall-clock samples, aligned table output.
+//!
+//! Every `BENCH_*.json` artifact opens with the shared [`envelope`]
+//! (schema version, bench name, git commit, config fingerprint) so the
+//! perf trajectory is self-describing and diffable across commits, and
+//! [`check_baseline`] compares a fresh run against the committed
+//! `rust/BENCH_baseline.json` inside per-metric tolerance bands
+//! (`repro bench --check`, the CI perf gate).
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// Statistics of one benchmark case.
@@ -180,6 +188,87 @@ pub fn write_bench_json(path: &str, value: &Json) -> std::io::Result<()> {
     std::fs::write(path, value.render() + "\n")
 }
 
+/// Schema version of the shared bench-artifact envelope.  Bump when an
+/// envelope key changes meaning; consumers (`repro bench --list`/
+/// `--merge`/`--check`) key off it.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// The commit the artifact was produced at: `GITHUB_SHA` in CI, else
+/// `git rev-parse HEAD`, else `"unknown"` (tarball checkouts still
+/// produce a valid artifact).
+pub fn git_commit() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        let sha = sha.trim().to_string();
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// The shared artifact envelope, as leading key/value pairs to prepend
+/// *flatly* to a bench's own `Json::Obj` fields (flat so existing
+/// consumers that grep top-level keys keep working).
+pub fn envelope(bench: &str, config_fingerprint: &str) -> Vec<(String, Json)> {
+    vec![
+        ("schema_version".to_string(), Json::Num(BENCH_SCHEMA_VERSION as f64)),
+        ("bench".to_string(), Json::Str(bench.to_string())),
+        ("git_commit".to_string(), Json::Str(git_commit())),
+        ("config_fingerprint".to_string(), Json::Str(config_fingerprint.to_string())),
+    ]
+}
+
+/// One metric's verdict from [`check_baseline`].  Metrics are
+/// lower-is-better (ns, ratios); `limit = baseline * (1 + pct/100)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateResult {
+    pub metric: String,
+    pub baseline: f64,
+    /// `None` when the fresh run did not produce this metric (fails the
+    /// gate if the metric is gated — a silently vanished metric is a
+    /// regression of the harness itself).
+    pub measured: Option<f64>,
+    pub limit: f64,
+    /// Ungated metrics are informational: recorded, never failing.
+    pub gated: bool,
+    pub pass: bool,
+}
+
+/// Compare fresh measurements against a committed baseline document
+/// (`rust/BENCH_baseline.json`: `{schema_version, bench, metrics:
+/// {name: {value, max_regression_pct, gate}}}`).  Returns one
+/// [`GateResult`] per baseline metric; the caller fails if any gated
+/// metric's `pass` is false.
+pub fn check_baseline(
+    baseline: &crate::util::json::Json,
+    measured: &BTreeMap<String, f64>,
+) -> anyhow::Result<Vec<GateResult>> {
+    let version = baseline.get("schema_version")?.as_f64()? as u64;
+    if version != BENCH_SCHEMA_VERSION {
+        anyhow::bail!("baseline schema_version {version} != supported {BENCH_SCHEMA_VERSION}");
+    }
+    let metrics = baseline.get("metrics")?.as_obj()?;
+    let mut out = Vec::with_capacity(metrics.len());
+    for (name, spec) in metrics {
+        let base = spec.get("value")?.as_f64()?;
+        let pct = spec.get("max_regression_pct")?.as_f64()?;
+        let gated = spec.get("gate")?.as_bool()?;
+        let limit = base * (1.0 + pct / 100.0);
+        let m = measured.get(name).copied();
+        let pass = !gated || m.is_some_and(|v| v.is_finite() && v <= limit);
+        out.push(GateResult { metric: name.clone(), baseline: base, measured: m, limit, gated, pass });
+    }
+    Ok(out)
+}
+
 /// Pretty duration for reports.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -296,6 +385,49 @@ mod tests {
             v.render(),
             r#"{"name":"engine \"hot\"\npath","smoke":false,"nan":null,"layers":[{"ns":1234.5},null]}"#
         );
+    }
+
+    #[test]
+    fn envelope_is_flat_and_pinned() {
+        let env = envelope("engine_hotpath", "tiny");
+        let keys: Vec<&str> = env.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["schema_version", "bench", "git_commit", "config_fingerprint"]);
+        assert_eq!(env[0].1, Json::Num(BENCH_SCHEMA_VERSION as f64));
+        assert_eq!(env[1].1, Json::Str("engine_hotpath".into()));
+        // git_commit never errors, even outside a checkout
+        assert!(matches!(&env[2].1, Json::Str(s) if !s.is_empty()));
+    }
+
+    #[test]
+    fn baseline_gate_verdicts() {
+        let baseline = crate::util::json::Json::parse(
+            r#"{
+                "schema_version": 1,
+                "bench": "baseline",
+                "metrics": {
+                    "ratio_ok":   {"value": 5.0, "max_regression_pct": 25, "gate": true},
+                    "ratio_bad":  {"value": 1.0, "max_regression_pct": 25, "gate": true},
+                    "info_only":  {"value": 100.0, "max_regression_pct": 25, "gate": false},
+                    "missing":    {"value": 2.0, "max_regression_pct": 25, "gate": true}
+                }
+            }"#,
+        )
+        .unwrap();
+        let mut measured = BTreeMap::new();
+        measured.insert("ratio_ok".to_string(), 6.0); // <= 6.25: pass
+        measured.insert("ratio_bad".to_string(), 1.3); // > 1.25: fail
+        measured.insert("info_only".to_string(), 1e9); // ungated: pass
+        let results = check_baseline(&baseline, &measured).unwrap();
+        let by_name = |n: &str| results.iter().find(|r| r.metric == n).unwrap();
+        assert!(by_name("ratio_ok").pass);
+        assert!((by_name("ratio_ok").limit - 6.25).abs() < 1e-9);
+        assert!(!by_name("ratio_bad").pass);
+        assert!(by_name("info_only").pass, "ungated metrics never fail");
+        assert!(!by_name("missing").pass, "vanished gated metric fails");
+
+        let wrong_version =
+            crate::util::json::Json::parse(r#"{"schema_version": 99, "metrics": {}}"#).unwrap();
+        assert!(check_baseline(&wrong_version, &measured).is_err());
     }
 
     #[test]

@@ -31,9 +31,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::benchkit::Table;
-use crate::coordinator::workload::{random_images, run_open_loop};
-use crate::coordinator::{Backend, BatchPolicy, FpgaSimBackend, PipelineBackend};
+use crate::bcnn::Engine;
+use crate::benchkit::{self, Table};
+use crate::coordinator::workload::{random_images, run_closed_loop, run_open_loop};
+use crate::coordinator::{
+    Backend, BackendFactory, BatchPolicy, Coordinator, CoordinatorConfig, FpgaSimBackend,
+    NativeBackend, PipelineBackend,
+};
 use crate::fpga::stream::simulate;
 use crate::model::{BcnnModel, NetConfig};
 use crate::optimizer::{optimize, OptimizeOptions};
@@ -192,6 +196,25 @@ COMMANDS
       per-stage busy/stall bars for pipeline backends.  N>0 exits after
       N refreshes (default: run until ^C); --no-clear appends frames
       instead of redrawing in place.
+  profile --addr HOST:PORT [--duration S] [--out FILE]
+      Performance accounting over the protocol-v2 PROFILE frame: per
+      staged model, each stage's work ledger (rows, XNOR'd words,
+      popcounts, bytes) and busy/stall clocks reconciled against the
+      paper's eqs. 9-12 — utilization in (0,1], compute-/memory-bound
+      roofline class, and the measured bottleneck stage checked against
+      the eq.-12 prediction.  --duration S polls twice S seconds apart
+      and reports the window between the polls (default: cumulative
+      since deploy).  Writes the report to FILE (default
+      BENCH_profile.json) in the shared benchkit envelope.
+  bench --list | --merge FILE | --check [--baseline FILE] [--requests N]
+        | --record [--baseline FILE] [--requests N]
+      Perf-trajectory plumbing for the BENCH_*.json artifacts.  --list
+      inventories artifacts (envelope: bench name, schema, commit);
+      --merge aggregates them into one trajectory FILE; --check measures
+      the hot-path ratios (serving overhead over bare engine, dispatched
+      kernel over scalar) and gates them against the committed
+      BENCH_baseline.json tolerance bands (exit non-zero on regression);
+      --record refreshes the baseline file from fresh measurements.
   selftest [--artifacts DIR]
       Cross-check native engine vs PJRT executable vs FPGA simulator on
       the shipped artifacts (exit non-zero on mismatch).
@@ -232,6 +255,8 @@ pub fn run(argv: &[String]) -> Result<()> {
         "models" => cmd_models(&args),
         "health" => cmd_health(&args),
         "trace" => cmd_trace(&args),
+        "profile" => cmd_profile(&args),
+        "bench" => cmd_bench(&args),
         "top" => cmd_top(&args),
         "selftest" => cmd_selftest(&args),
         "features" => cmd_features(),
@@ -748,10 +773,15 @@ fn cmd_trace(args: &Args) -> Result<()> {
 /// Eight-level block ramp for the `top` sparklines.
 const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
 
-/// Render `values` as a sparkline scaled to the series' own maximum.
-fn sparkline(values: &[f64]) -> String {
-    let max = values.iter().cloned().fold(0.0f64, f64::max);
-    values
+/// Render `values` as a `width`-column sparkline scaled to the series'
+/// own maximum.  The output is always exactly `width` glyphs: a short
+/// series is left-padded with spaces (so the newest sample stays pinned
+/// to the right edge and the columns after the sparkline never drift),
+/// and a long series shows its last `width` samples.
+fn sparkline(values: &[f64], width: usize) -> String {
+    let tail = &values[values.len().saturating_sub(width)..];
+    let max = tail.iter().cloned().fold(0.0f64, f64::max);
+    let glyphs: String = tail
         .iter()
         .map(|&v| {
             if max <= 0.0 {
@@ -759,7 +789,8 @@ fn sparkline(values: &[f64]) -> String {
             }
             SPARK[((v / max) * 7.0).round().clamp(0.0, 7.0) as usize]
         })
-        .collect()
+        .collect();
+    format!("{}{}", " ".repeat(width - tail.len()), glyphs)
 }
 
 /// `frac` of `width` as a filled bar (`█` filled, `·` empty).
@@ -840,12 +871,12 @@ fn render_top(
         writeln!(
             out,
             "\nwindows   rate {}  {:>8.1} req/s",
-            sparkline(&rates),
+            sparkline(&rates, 60),
             rates.last().copied().unwrap_or(0.0)
         )
         .ok();
         let last_p99 = p99s.last().copied().unwrap_or(0.0);
-        writeln!(out, "          p99  {}  {:>8.2} ms", sparkline(&p99s), last_p99).ok();
+        writeln!(out, "          p99  {}  {:>8.2} ms", sparkline(&p99s, 60), last_p99).ok();
         writeln!(
             out,
             "          last: requests {}  errors {}  crashes {}  failovers {}",
@@ -865,13 +896,34 @@ fn render_top(
     }
     writeln!(out).ok();
     let mut table = Table::new(&[
-        "model", "version", "state", "backend", "requests", "req/s", "p50 ms", "p99 ms", "errors",
-        "crashes",
+        "model", "version", "state", "backend", "requests", "req/s", "p50 ms", "p99 ms", "util",
+        "errors", "crashes",
     ]);
     for m in models {
         let name = m.get("name")?.as_str()?.to_string();
         let metrics = m.get("metrics")?;
         let requests = metrics.get("requests")?.as_f64()?;
+        // aggregate pipeline utilization: Σbusy / Σ(busy+stalls) over
+        // stages, "-" for backends without a staged pipeline
+        let util = match metrics.get("stages").ok().map(|s| s.as_arr()) {
+            Some(Ok(stages)) if !stages.is_empty() => {
+                let mut busy = 0.0f64;
+                let mut total = 0.0f64;
+                for s in stages {
+                    let b = s.get("busy_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                    busy += b;
+                    total += b
+                        + s.get("stall_in_us").and_then(|v| v.as_f64()).unwrap_or(0.0)
+                        + s.get("stall_out_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                }
+                if total > 0.0 {
+                    format!("{:.0}%", busy / total * 100.0)
+                } else {
+                    "-".to_string()
+                }
+            }
+            _ => "-".to_string(),
+        };
         let rate = match prev {
             Some((at, cum)) => match cum.get(&name) {
                 Some(&p) if now > at => {
@@ -896,6 +948,7 @@ fn render_top(
             rate,
             format!("{:.2}", metrics.get("latency_p50_us")?.as_f64()? / 1e3),
             format!("{:.2}", metrics.get("latency_p99_us")?.as_f64()? / 1e3),
+            util,
             format!("{}", metrics.get("errors")?.as_f64()? as u64),
             format!("{}", metrics.get("crashes")?.as_f64()? as u64),
         ]);
@@ -917,20 +970,510 @@ fn render_top(
             let stall_out = s.get("stall_out_us")?.as_f64()?;
             let total = busy + stall_in + stall_out;
             let frac = if total > 0.0 { busy / total } else { 0.0 };
+            // roofline class from the profiler's work ledger (absent or
+            // zero while the BCNN_PROFILE gate is disarmed)
+            let xor_words = s.get("xor_words").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let bytes = s.get("bytes_moved").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let bound = if bytes > 0.0 {
+                crate::obs::classify(xor_words * 128.0 / bytes).label()
+            } else {
+                "-"
+            };
             writeln!(
                 out,
-                "  stage {:>2} x{:<2} [{}] busy {:>5.1}%  stall in {:>5.1}% out {:>5.1}%",
+                "  stage {:>2} x{:<2} [{}] busy {:>5.1}%  stall in {:>5.1}% out {:>5.1}%  {}",
                 s.get("layer")?.as_f64()? as u64,
                 s.get("lanes")?.as_f64()? as u64,
                 bar(frac, 20),
                 frac * 100.0,
                 if total > 0.0 { stall_in / total * 100.0 } else { 0.0 },
                 if total > 0.0 { stall_out / total * 100.0 } else { 0.0 },
+                bound,
             )
             .ok();
         }
     }
     Ok(out)
+}
+
+/// Tolerant numeric field read: 0.0 when absent or non-numeric.
+fn num(j: &Json, k: &str) -> f64 {
+    j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0)
+}
+
+/// `repro profile`: model-vs-measured performance accounting over the
+/// OP_PROFILE admin frame.
+fn cmd_profile(args: &Args) -> Result<()> {
+    let duration = args.f64_or("duration", 0.0)?;
+    let out_path = args.opt_or("out", "BENCH_profile.json")?;
+    let addr = args.value_of("addr")?.unwrap_or("").to_string();
+    let mut client = admin_client(args)?;
+    let mut profile = client.profile()?;
+    if duration > 0.0 {
+        // two polls bracket the window; the report is the delta of the
+        // raw counters with the derived columns recomputed client-side
+        std::thread::sleep(Duration::from_secs_f64(duration));
+        let second = client.profile()?;
+        profile = windowed_profile(&profile, &second)?;
+    }
+    client.close()?;
+    print!("{}", render_profile(&addr, duration, &profile)?);
+
+    // artifact in the shared benchkit envelope (BTreeMap serialization
+    // sorts keys; the envelope fields are still top-level for `bench
+    // --list` and the perf-gate greps)
+    let mut top = BTreeMap::new();
+    top.insert(
+        "schema_version".to_string(),
+        Json::Num(benchkit::BENCH_SCHEMA_VERSION as f64),
+    );
+    top.insert("bench".to_string(), Json::Str("profile".to_string()));
+    top.insert("git_commit".to_string(), Json::Str(benchkit::git_commit()));
+    top.insert(
+        "config_fingerprint".to_string(),
+        Json::Str(format!("addr={addr};duration={duration}")),
+    );
+    top.insert("profile".to_string(), profile);
+    std::fs::write(&out_path, Json::Obj(top).to_string())
+        .with_context(|| format!("write {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+/// Delta two OP_PROFILE polls into a windowed report.  Models that were
+/// redeployed between polls (version changed) or appear only in the
+/// second poll fall back to their cumulative report.
+fn windowed_profile(first: &Json, second: &Json) -> Result<Json> {
+    let mut prev: BTreeMap<String, &Json> = BTreeMap::new();
+    for m in first.get("models")?.as_arr()? {
+        prev.insert(m.get("name")?.as_str()?.to_string(), m);
+    }
+    let mut models = Vec::new();
+    for m in second.get("models")?.as_arr()? {
+        let name = m.get("name")?.as_str()?;
+        let windowed = prev
+            .get(name)
+            .filter(|p| {
+                num(p, "version") == num(m, "version")
+                    && p.get("report").and_then(|r| r.get("layers")).is_ok()
+                    && m.get("report").and_then(|r| r.get("layers")).is_ok()
+            })
+            .map(|p| -> Result<Json> {
+                let cur = m.get("report")?;
+                let old = p.get("report")?;
+                let mut entry = m.as_obj()?.clone();
+                entry.insert("report".to_string(), window_report(cur, old)?);
+                Ok(Json::Obj(entry))
+            })
+            .transpose()?;
+        models.push(windowed.unwrap_or_else(|| m.clone()));
+    }
+    let mut top = second.as_obj()?.clone();
+    top.insert("models".to_string(), Json::Arr(models));
+    Ok(Json::Obj(top))
+}
+
+/// Window one model's account report: raw counters are deltas, derived
+/// columns (utilization, ns/image, model ratio, measured bottleneck)
+/// are recomputed from the deltas.  Model-side quantities (cycle
+/// estimates, intensity, bound) carry over unchanged — they depend only
+/// on the geometry.
+fn window_report(cur: &Json, old: &Json) -> Result<Json> {
+    let freq_hz = num(cur, "freq_hz").max(1.0);
+    let old_layers = old.get("layers")?.as_arr()?;
+    let mut layers = Vec::new();
+    let mut best: Option<(usize, f64)> = None;
+    for (i, layer) in cur.get("layers")?.as_arr()?.iter().enumerate() {
+        let zero = Json::Obj(BTreeMap::new());
+        let before = old_layers.get(i).unwrap_or(&zero);
+        let mut m = layer.as_obj()?.clone();
+        let delta = |k: &str| (num(layer, k) - num(before, k)).max(0.0);
+        for k in [
+            "images",
+            "rows_in",
+            "xor_words",
+            "popcounts",
+            "bytes_moved",
+            "busy_us",
+            "stall_in_us",
+            "stall_out_us",
+        ] {
+            m.insert(k.to_string(), Json::Num(delta(k)));
+        }
+        let busy = delta("busy_us");
+        let total = busy + delta("stall_in_us") + delta("stall_out_us");
+        m.insert(
+            "utilization".to_string(),
+            if busy > 0.0 && total > 0.0 { Json::Num(busy / total) } else { Json::Null },
+        );
+        let images = delta("images");
+        let ns_per_image = if images > 0.0 { Some(busy * 1e3 / images) } else { None };
+        m.insert(
+            "ns_per_image".to_string(),
+            ns_per_image.map(Json::Num).unwrap_or(Json::Null),
+        );
+        let model_ns = num(layer, "cycles_est") / freq_hz * 1e9;
+        m.insert(
+            "model_ratio".to_string(),
+            match ns_per_image {
+                Some(ns) if model_ns > 0.0 => Json::Num(ns / model_ns),
+                _ => Json::Null,
+            },
+        );
+        if let Some(ns) = ns_per_image {
+            let better = match best {
+                Some((_, b)) => ns > b,
+                None => true,
+            };
+            if better {
+                best = Some((i, ns));
+            }
+        }
+        layers.push(Json::Obj(m));
+    }
+    let mut top = cur.as_obj()?.clone();
+    top.insert("layers".to_string(), Json::Arr(layers));
+    let measured = best.map(|(i, _)| i);
+    top.insert(
+        "measured_bottleneck".to_string(),
+        measured.map(|i| Json::Num(i as f64)).unwrap_or(Json::Null),
+    );
+    let predicted = num(cur, "predicted_bottleneck") as usize;
+    top.insert(
+        "bottleneck_match".to_string(),
+        Json::Bool(measured == Some(predicted)),
+    );
+    Ok(Json::Obj(top))
+}
+
+/// Human-readable model-vs-measured table for one OP_PROFILE report.
+fn render_profile(addr: &str, duration: f64, profile: &Json) -> Result<String> {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let scope =
+        if duration > 0.0 { format!("{duration}s window") } else { "cumulative".to_string() };
+    writeln!(out, "repro profile — {addr}  epoch {}  ({scope})", num(profile, "epoch") as u64)
+        .ok();
+    for m in profile.get("models")?.as_arr()? {
+        let name = m.get("name")?.as_str()?;
+        let report = m.get("report")?;
+        if let Ok(err) = report.get("error") {
+            writeln!(out, "\n{name}: accounting unavailable: {}", err.as_str().unwrap_or("?"))
+                .ok();
+            continue;
+        }
+        writeln!(
+            out,
+            "\n{name} v{} ({}, kernel {})",
+            num(m, "version") as u64,
+            m.get("backend")?.as_str()?,
+            m.get("kernel").and_then(|k| k.as_str()).unwrap_or("-"),
+        )
+        .ok();
+        let mut table = Table::new(&[
+            "layer", "name", "lanes", "images", "util", "cyc est", "cyc real", "ns/img",
+            "x model", "bitops/B", "bound",
+        ]);
+        let fmt_opt = |layer: &Json, k: &str, scale: f64, digits: usize| match layer.get(k) {
+            Ok(Json::Num(n)) => format!("{:.*}", digits, n * scale),
+            _ => "-".to_string(),
+        };
+        for layer in report.get("layers")?.as_arr()? {
+            let util = match layer.get("utilization") {
+                Ok(Json::Num(n)) => format!("{:.0}%", n * 100.0),
+                _ => "-".to_string(),
+            };
+            table.row(&[
+                format!("{}", num(layer, "layer") as u64),
+                layer.get("name")?.as_str()?.to_string(),
+                format!("{}", num(layer, "lanes") as u64),
+                format!("{}", num(layer, "images") as u64),
+                util,
+                format!("{}", num(layer, "cycles_est") as u64),
+                format!("{}", num(layer, "cycles_real") as u64),
+                fmt_opt(layer, "ns_per_image", 1.0, 0),
+                fmt_opt(layer, "model_ratio", 1.0, 2),
+                format!("{:.1}", num(layer, "intensity")),
+                layer.get("bound")?.as_str()?.to_string(),
+            ]);
+        }
+        out.push_str(&table.to_string());
+        let layers = report.get("layers")?.as_arr()?;
+        let stage_name = |i: usize| -> String {
+            layers
+                .get(i)
+                .and_then(|l| l.get("name").ok())
+                .and_then(|n| n.as_str().ok())
+                .unwrap_or("?")
+                .to_string()
+        };
+        let predicted = num(report, "predicted_bottleneck") as usize;
+        match report.get("measured_bottleneck")? {
+            Json::Num(i) => {
+                let i = *i as usize;
+                let verdict = if report.get("bottleneck_match")?.as_bool()? {
+                    "MATCH"
+                } else {
+                    "MISS"
+                };
+                writeln!(
+                    out,
+                    "bottleneck: measured stage {i} ({}) vs eq.12-predicted stage \
+                     {predicted} ({}) — {verdict}",
+                    stage_name(i),
+                    stage_name(predicted),
+                )
+                .ok();
+            }
+            _ => {
+                writeln!(
+                    out,
+                    "bottleneck: no traffic in window; eq.12 predicts stage {predicted} ({})",
+                    stage_name(predicted),
+                )
+                .ok();
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// `repro bench`: BENCH_*.json inventory / aggregation and the committed
+/// perf-regression baseline check.
+fn cmd_bench(args: &Args) -> Result<()> {
+    if args.flag("list") {
+        return bench_list();
+    }
+    if let Some(path) = args.value_of("merge")? {
+        let path = path.to_string();
+        return bench_merge(&path);
+    }
+    if args.flag("check") || args.flag("record") {
+        return bench_check(args);
+    }
+    bail!("bench: pass --list, --merge FILE, --check, or --record (see help)")
+}
+
+/// Every BENCH_*.json reachable from the usual emit locations: the
+/// working directory (examples run from the repo root) and `rust/`
+/// (cargo benches run from the package root).
+fn bench_artifacts() -> Vec<PathBuf> {
+    let mut found = Vec::new();
+    for dir in [".", "rust"] {
+        let Ok(entries) = std::fs::read_dir(dir) else { continue };
+        for entry in entries.flatten() {
+            let name = entry.file_name().to_string_lossy().to_string();
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                found.push(entry.path());
+            }
+        }
+    }
+    found.sort();
+    found
+}
+
+fn bench_list() -> Result<()> {
+    let files = bench_artifacts();
+    if files.is_empty() {
+        println!("no BENCH_*.json artifacts found (run a cargo bench or `repro profile` first)");
+        return Ok(());
+    }
+    let mut table = Table::new(&["file", "bench", "schema", "commit", "fingerprint"]);
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        // pre-envelope artifacts still list, with the gaps visible
+        let parsed = Json::parse(&text).ok();
+        let field = |k: &str| -> String {
+            parsed
+                .as_ref()
+                .and_then(|j| j.get(k).ok().cloned())
+                .map(|v| match v {
+                    Json::Str(s) => s,
+                    Json::Num(n) => format!("{n}"),
+                    other => other.to_string(),
+                })
+                .unwrap_or_else(|| "-".to_string())
+        };
+        let commit = field("git_commit");
+        table.row(&[
+            path.display().to_string(),
+            field("bench"),
+            field("schema_version"),
+            commit.chars().take(8).collect(),
+            field("config_fingerprint"),
+        ]);
+    }
+    table.print();
+    println!("{} artifact(s)", files.len());
+    Ok(())
+}
+
+fn bench_merge(out_path: &str) -> Result<()> {
+    let files = bench_artifacts();
+    let mut benches = BTreeMap::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let parsed =
+            Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+        let stem = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_else(|| path.display().to_string());
+        benches.insert(stem, parsed);
+    }
+    let n = benches.len();
+    let mut top = BTreeMap::new();
+    top.insert(
+        "schema_version".to_string(),
+        Json::Num(benchkit::BENCH_SCHEMA_VERSION as f64),
+    );
+    top.insert("bench".to_string(), Json::Str("merged".to_string()));
+    top.insert("git_commit".to_string(), Json::Str(benchkit::git_commit()));
+    top.insert("benches".to_string(), Json::Obj(benches));
+    std::fs::write(out_path, Json::Obj(top).to_string())
+        .with_context(|| format!("write {out_path}"))?;
+    println!("merged {n} artifact(s) into {out_path}");
+    Ok(())
+}
+
+/// Measure the machine-portable hot-path ratios and gate them against
+/// (or, with `--record`, refresh) the committed baseline.
+fn bench_check(args: &Args) -> Result<()> {
+    let requests = args.usize_or("requests", 256)?;
+    let baseline_path = match args.value_of("baseline")? {
+        Some(p) => p.to_string(),
+        // cargo runs from the repo root; the committed copy lives in rust/
+        None if std::path::Path::new("rust/BENCH_baseline.json").exists() => {
+            "rust/BENCH_baseline.json".to_string()
+        }
+        None => "BENCH_baseline.json".to_string(),
+    };
+
+    let model = BcnnModel::load_or_synthetic("tiny", "artifacts", 0xB_C0DE)?;
+    let cfg = model.config();
+    let images = random_images(&cfg, 4, 0xBE);
+
+    // bare engine, dispatched kernel (the serving denominator)
+    let engine = Engine::new(model.clone())?;
+    let mut i = 0usize;
+    let engine_ns = benchkit::bench(|| {
+        let img = &images[i % images.len()];
+        i += 1;
+        std::hint::black_box(engine.infer(img).expect("engine infer"));
+    })
+    .median_ns;
+
+    // same engine pinned to the scalar kernel (the dispatch numerator's
+    // portable reference point)
+    let scalar = Engine::with_kernel(
+        model.clone(),
+        Kernel::force(KernelKind::Scalar).map_err(|e| anyhow!("{e}"))?,
+    )?;
+    let mut j = 0usize;
+    let scalar_ns = benchkit::bench(|| {
+        let img = &images[j % images.len()];
+        j += 1;
+        std::hint::black_box(scalar.infer(img).expect("scalar infer"));
+    })
+    .median_ns;
+
+    // closed-loop serving through a 1-worker native pool: queueing +
+    // batching + channel overhead over the bare engine
+    let m = model.clone();
+    let factory: BackendFactory = Arc::new(move || -> anyhow::Result<Box<dyn Backend>> {
+        Ok(Box::new(NativeBackend::new(m.clone())?))
+    });
+    let coord = Coordinator::start_sharded(
+        factory,
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::ZERO },
+            workers: 1,
+            queue_depth: 64,
+            ..Default::default()
+        },
+    )?;
+    run_closed_loop(&coord.client(), &cfg, (requests / 4).max(8), 0xA1)?; // warm-up
+    let report = run_closed_loop(&coord.client(), &cfg, requests, 0xA2)?;
+    coord.shutdown();
+    let serve_ns = 1e9 / report.throughput().max(1e-9);
+
+    let mut measured: BTreeMap<String, f64> = BTreeMap::new();
+    measured.insert("serve_over_engine_ratio".to_string(), serve_ns / engine_ns.max(1e-9));
+    measured.insert("dispatched_over_scalar_ratio".to_string(), engine_ns / scalar_ns.max(1e-9));
+    measured.insert("engine_ns_per_image".to_string(), engine_ns);
+    measured.insert("scalar_ns_per_image".to_string(), scalar_ns);
+    measured.insert("serve_ns_per_request".to_string(), serve_ns);
+
+    if args.flag("record") {
+        return bench_record(&baseline_path, &measured);
+    }
+
+    let text = std::fs::read_to_string(&baseline_path)
+        .with_context(|| format!("read baseline {baseline_path} (run `bench --record`?)"))?;
+    let baseline = Json::parse(&text).with_context(|| format!("parse {baseline_path}"))?;
+    let results = benchkit::check_baseline(&baseline, &measured)?;
+
+    let mut table = Table::new(&["metric", "baseline", "measured", "limit", "gate", "verdict"]);
+    let mut failed = Vec::new();
+    for r in &results {
+        table.row(&[
+            r.metric.clone(),
+            format!("{:.3}", r.baseline),
+            r.measured.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".to_string()),
+            if r.gated { format!("{:.3}", r.limit) } else { "-".to_string() },
+            if r.gated { "yes" } else { "info" }.to_string(),
+            if r.pass { "ok" } else { "FAIL" }.to_string(),
+        ]);
+        if !r.pass {
+            failed.push(r.metric.clone());
+        }
+    }
+    println!("=== bench --check vs {baseline_path} ({requests} closed-loop requests) ===");
+    table.print();
+    if !failed.is_empty() {
+        bail!("perf regression past the tolerance band: {}", failed.join(", "));
+    }
+    println!("all gated metrics within their tolerance bands");
+    Ok(())
+}
+
+/// `bench --record`: refresh the baseline from fresh measurements.  The
+/// ratio metrics keep generous bands (they gate CI), the absolute
+/// nanosecond metrics stay informational — they are machine-specific.
+fn bench_record(path: &str, measured: &BTreeMap<String, f64>) -> Result<()> {
+    let band = |metric: &str| match metric {
+        "serve_over_engine_ratio" => Some(150.0),
+        "dispatched_over_scalar_ratio" => Some(25.0),
+        _ => None,
+    };
+    let mut metrics = BTreeMap::new();
+    for (name, &value) in measured {
+        let mut m = BTreeMap::new();
+        m.insert("value".to_string(), Json::Num(value));
+        m.insert(
+            "max_regression_pct".to_string(),
+            Json::Num(band(name).unwrap_or(0.0)),
+        );
+        m.insert("gate".to_string(), Json::Bool(band(name).is_some()));
+        metrics.insert(name.clone(), Json::Obj(m));
+    }
+    let mut top = BTreeMap::new();
+    top.insert(
+        "schema_version".to_string(),
+        Json::Num(benchkit::BENCH_SCHEMA_VERSION as f64),
+    );
+    top.insert("bench".to_string(), Json::Str("baseline".to_string()));
+    top.insert("git_commit".to_string(), Json::Str(benchkit::git_commit()));
+    top.insert(
+        "config_fingerprint".to_string(),
+        Json::Str("tiny;native-pool-w1".to_string()),
+    );
+    top.insert("metrics".to_string(), Json::Obj(metrics));
+    std::fs::write(path, Json::Obj(top).to_string()).with_context(|| format!("write {path}"))?;
+    println!("recorded baseline to {path}");
+    Ok(())
 }
 
 fn cmd_selftest(args: &Args) -> Result<()> {

@@ -326,6 +326,9 @@ impl Metrics {
                     o.insert("stall_out_us".into(), us(s.stall_out));
                     o.insert("rows_in".into(), Json::Num(s.rows_in as f64));
                     o.insert("images".into(), Json::Num(s.images as f64));
+                    o.insert("xor_words".into(), Json::Num(s.xor_words as f64));
+                    o.insert("popcounts".into(), Json::Num(s.popcounts as f64));
+                    o.insert("bytes_moved".into(), Json::Num(s.bytes_moved as f64));
                     Json::Obj(o)
                 })
                 .collect();
@@ -463,6 +466,9 @@ mod tests {
             stall_out: Duration::ZERO,
             rows_in: 8,
             images: 1,
+            xor_words: 64,
+            popcounts: 64,
+            bytes_moved: 128,
         };
         let mut a = Metrics::new();
         a.stages = vec![stage(0, 3), stage(1, 9)];
@@ -474,6 +480,8 @@ mod tests {
         assert_eq!(total.stages.len(), 2);
         assert_eq!(total.stages[1].busy, Duration::from_millis(11));
         assert_eq!(total.stages[0].rows_in, 16);
+        assert_eq!(total.stages[0].xor_words, 128, "ledger words absorb additively");
+        assert_eq!(total.stages[0].bytes_moved, 256);
         let j = total.to_json();
         let stages = j.get("stages").unwrap().as_arr().unwrap();
         assert_eq!(stages.len(), 2);
@@ -493,6 +501,7 @@ mod tests {
             stall_out: Duration::ZERO,
             rows_in: 4,
             images: 1,
+            ..Default::default()
         };
         let mut three = Metrics::new();
         three.stages = vec![stage(0), stage(1), stage(2)];

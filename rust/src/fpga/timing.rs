@@ -16,7 +16,38 @@
 //! depth.  Residual deviation from the paper's exact numbers is unmodeled
 //! HLS control overhead; EXPERIMENTS.md reports both side by side.
 
+use std::fmt;
+
 use super::LayerGeom;
+
+/// Why a timing query could not be answered — typed, so report builders
+/// surface the misuse instead of folding a silent `0.0` into a table.
+/// The panicking/zero-returning plain functions keep their documented
+/// behavior; the `try_*` variants return these.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TimingError {
+    /// `UF * P == 0`: eq. 11's denominator vanishes (the plain
+    /// [`cycle_est`] panics on the division).
+    ZeroLanes,
+    /// An empty per-layer cycle slice: no pipeline to take a bottleneck
+    /// over (the plain [`system_fps`] / [`pipeline_latency_s`] return
+    /// `0.0` by documented convention).
+    EmptyPipeline,
+    /// The reference clock is zero, negative, or non-finite.
+    BadClock(f64),
+}
+
+impl fmt::Display for TimingError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TimingError::ZeroLanes => write!(f, "layer params have UF*P == 0 lanes"),
+            TimingError::EmptyPipeline => write!(f, "empty per-layer cycle slice"),
+            TimingError::BadClock(hz) => write!(f, "clock must be positive and finite, got {hz}"),
+        }
+    }
+}
+
+impl std::error::Error for TimingError {}
 
 /// Architectural parameters of one layer (paper Table 3 columns).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -89,9 +120,20 @@ pub fn cycle_conv(geom: &LayerGeom) -> u64 {
 }
 
 /// eq. 11 — estimated cycles with unfolding UF, parallelism P, interval I.
+/// Panics on zero-lane params (division by `UF*P`); use [`try_cycle_est`]
+/// where the params come from outside the paper tables.
 pub fn cycle_est(geom: &LayerGeom, params: &LayerParams) -> u64 {
     let denom = params.lanes();
     (cycle_conv(geom)).div_ceil(denom) * params.ii as u64
+}
+
+/// [`cycle_est`] with the zero-lane boundary surfaced as a typed error
+/// instead of a panic.
+pub fn try_cycle_est(geom: &LayerGeom, params: &LayerParams) -> Result<u64, TimingError> {
+    if params.lanes() == 0 {
+        return Err(TimingError::ZeroLanes);
+    }
+    Ok(cycle_est(geom, params))
 }
 
 /// Microarchitecture model of the Vivado-HLS-measured `Cycle_r`.
@@ -107,6 +149,9 @@ pub fn cycle_real(geom: &LayerGeom, params: &LayerParams, model: &PipelineModel)
 }
 
 /// eq. 12 — steady-state system FPS given per-layer cycles and the clock.
+/// Documented zero convention: an empty slice (or all-zero cycles) is "no
+/// pipeline" and returns `0.0` FPS; use [`try_system_fps`] where an empty
+/// slice indicates caller misuse that should not fold into a report.
 pub fn system_fps(per_layer_cycles: &[u64], freq_hz: f64) -> f64 {
     let bottleneck = per_layer_cycles.iter().copied().max().unwrap_or(0);
     if bottleneck == 0 {
@@ -115,11 +160,37 @@ pub fn system_fps(per_layer_cycles: &[u64], freq_hz: f64) -> f64 {
     freq_hz / bottleneck as f64
 }
 
+/// [`system_fps`] with the boundaries surfaced as typed errors: empty
+/// slices and bad clocks error instead of contributing `0.0`/NaN rows.
+pub fn try_system_fps(per_layer_cycles: &[u64], freq_hz: f64) -> Result<f64, TimingError> {
+    if per_layer_cycles.is_empty() {
+        return Err(TimingError::EmptyPipeline);
+    }
+    if !(freq_hz.is_finite() && freq_hz > 0.0) {
+        return Err(TimingError::BadClock(freq_hz));
+    }
+    Ok(system_fps(per_layer_cycles, freq_hz))
+}
+
 /// Single-image pipeline latency: with double-buffered phases every image
-/// traverses `L` phases of the bottleneck length (§4.3).
+/// traverses `L` phases of the bottleneck length (§4.3).  Documented zero
+/// convention: an empty slice is "no pipeline" and returns `0.0`; see
+/// [`try_pipeline_latency_s`].
 pub fn pipeline_latency_s(per_layer_cycles: &[u64], freq_hz: f64) -> f64 {
     let bottleneck = per_layer_cycles.iter().copied().max().unwrap_or(0) as f64;
     per_layer_cycles.len() as f64 * bottleneck / freq_hz
+}
+
+/// [`pipeline_latency_s`] with typed boundary errors (empty pipeline, bad
+/// clock) instead of silent zeros.
+pub fn try_pipeline_latency_s(per_layer_cycles: &[u64], freq_hz: f64) -> Result<f64, TimingError> {
+    if per_layer_cycles.is_empty() {
+        return Err(TimingError::EmptyPipeline);
+    }
+    if !(freq_hz.is_finite() && freq_hz > 0.0) {
+        return Err(TimingError::BadClock(freq_hz));
+    }
+    Ok(pipeline_latency_s(per_layer_cycles, freq_hz))
 }
 
 #[cfg(test)]
@@ -189,5 +260,36 @@ mod tests {
     #[test]
     fn system_fps_empty_is_zero() {
         assert_eq!(system_fps(&[], 90e6), 0.0);
+    }
+
+    #[test]
+    fn try_variants_type_the_boundaries() {
+        let geoms = layer_geometry(&NetConfig::tiny());
+        let g = &geoms[0];
+        // zero lanes: plain cycle_est would panic on the division
+        let zero = LayerParams { uf: 0, p: 0, ii: 1 };
+        assert_eq!(try_cycle_est(g, &zero), Err(TimingError::ZeroLanes));
+        let one = LayerParams::new(1, 1);
+        assert_eq!(try_cycle_est(g, &one), Ok(cycle_est(g, &one)));
+
+        assert_eq!(try_system_fps(&[], 90e6), Err(TimingError::EmptyPipeline));
+        assert_eq!(try_pipeline_latency_s(&[], 90e6), Err(TimingError::EmptyPipeline));
+        assert_eq!(try_system_fps(&[100], 0.0), Err(TimingError::BadClock(0.0)));
+        assert!(matches!(
+            try_system_fps(&[100], f64::NAN),
+            Err(TimingError::BadClock(hz)) if hz.is_nan()
+        ));
+        assert_eq!(
+            try_pipeline_latency_s(&[100], -1.0),
+            Err(TimingError::BadClock(-1.0))
+        );
+        assert_eq!(try_system_fps(&[9_000], 90e6), Ok(10_000.0));
+        let lat = try_pipeline_latency_s(&[100, 200], 200.0).unwrap();
+        assert!((lat - 2.0).abs() < 1e-12); // 2 layers x 200-cycle phase / 200 Hz
+    }
+
+    #[test]
+    fn latency_empty_is_zero() {
+        assert_eq!(pipeline_latency_s(&[], 90e6), 0.0);
     }
 }

@@ -1,0 +1,363 @@
+//! Performance accounting: reconcile measured stage counters against the
+//! paper's analytical model (eqs. 9–12).
+//!
+//! The paper's whole argument is performance accounting — eq. 11 predicts
+//! per-layer cycles, eq. 12 turns the bottleneck layer into system FPS,
+//! and Tables 3–5 check the model against the Vivado-HLS measurement.
+//! This module runs the same methodology on the host pipeline: it takes
+//! one [`StageSnapshot`] per stage (busy/stall wall clock + the
+//! [`crate::obs::profile`] work ledger), maps each stage onto its
+//! [`LayerGeom`], and reports per layer:
+//!
+//! * **utilization** — busy ÷ (busy + stall_in + stall_out), the share of
+//!   the stage's wall clock spent computing.  Guaranteed in `(0, 1]`
+//!   whenever the stage did any work; a low value with high `stall_in`
+//!   means upstream starvation, with high `stall_out` downstream
+//!   backpressure — eq. 12's "the slowest layer sets the phase" made
+//!   visible per stage.
+//! * **roofline bound class** — arithmetic intensity (bit-ops per byte
+//!   moved, from the ledger) against [`BALANCE_BIT_OPS_PER_BYTE`]:
+//!   conv layers reuse weight bytes across the spatial plane and land
+//!   compute-bound; FC layers touch every weight byte once and land
+//!   memory-bound (§5.3 is the paper hitting the same wall: FC BRAM
+//!   bandwidth, not XNOR lanes, sizes the FC pipeline).
+//! * **model-vs-measured** — measured ns/image against `cycle_est`
+//!   (eq. 11, at the stage's actual lane count) and `cycle_real` cycles
+//!   at a reference clock; the ratio is the host's "achieved fraction of
+//!   model speed", and the measured bottleneck (max busy/image) is
+//!   checked against the eq.-12 prediction (max `cycle_est`).
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::fpga::timing::{cycle_est, cycle_real, LayerParams, PipelineModel};
+use crate::fpga::{layer_geometry, LayerGeom, DEFAULT_FREQ_HZ};
+use crate::model::NetConfig;
+use crate::obs::profile::{stage_work, StageWork};
+use crate::pipeline::StageSnapshot;
+use crate::util::json::Json;
+
+/// Roofline balance point in bit-operations per byte moved.  CAL: one
+/// packed 64-bit word costs 128 bit-ops (64 XNOR + 64 popcount-accumulate)
+/// against 16 bytes touched (8 weight + 8 activation) when nothing is
+/// reused — 8 bit-ops/byte; full spatial reuse pushes conv layers two to
+/// three orders of magnitude higher.  64 sits between the FC plateau
+/// (~16, see `profile::tests::fc_intensity_sits_near_its_closed_form`)
+/// and the conv floor, so the classifier splits the two families the way
+/// §5.3 does (FC limited by weight bandwidth, conv by lanes).
+pub const BALANCE_BIT_OPS_PER_BYTE: f64 = 64.0;
+
+/// Which roofline regime a layer sits in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    /// Intensity above the balance point: lanes limit throughput.
+    Compute,
+    /// Intensity below the balance point: bytes limit throughput.
+    Memory,
+}
+
+impl Bound {
+    pub fn label(self) -> &'static str {
+        match self {
+            Bound::Compute => "compute",
+            Bound::Memory => "memory",
+        }
+    }
+}
+
+/// Classify an arithmetic intensity against the balance point.
+pub fn classify(intensity: f64) -> Bound {
+    if intensity >= BALANCE_BIT_OPS_PER_BYTE {
+        Bound::Compute
+    } else {
+        Bound::Memory
+    }
+}
+
+/// Occupancy utilization of one stage: busy ÷ (busy + stalls).  `None`
+/// until the stage has recorded any wall clock at all; otherwise in
+/// `(0, 1]` whenever `busy > 0`.
+pub fn utilization(busy: Duration, stall_in: Duration, stall_out: Duration) -> Option<f64> {
+    let total = busy + stall_in + stall_out;
+    if total.is_zero() {
+        return None;
+    }
+    Some(busy.as_secs_f64() / total.as_secs_f64())
+}
+
+/// One layer's reconciled account: the measured side (ledger + wall
+/// clock), the model side (eqs. 9/11 + `Cycle_r`), and the derived
+/// utilization / roofline verdicts.
+#[derive(Debug, Clone)]
+pub struct LayerAccount {
+    /// 0-based stage index (= layer position in the pipeline).
+    pub layer: usize,
+    /// Paper-style layer name ("Conv 1", "FC 2", ...).
+    pub name: String,
+    pub lanes: usize,
+    pub images: u64,
+    pub rows_in: u64,
+    pub xor_words: u64,
+    pub popcounts: u64,
+    pub bytes_moved: u64,
+    pub busy: Duration,
+    pub stall_in: Duration,
+    pub stall_out: Duration,
+    /// Occupancy in `(0, 1]` (`None` before any wall clock accrues).
+    pub utilization: Option<f64>,
+    /// Ledger-predicted per-image work constants for this layer.
+    pub work: StageWork,
+    /// eq. 11 cycles/image at this stage's actual lane count.
+    pub cycles_est: u64,
+    /// `Cycle_r` microarchitecture-model cycles/image, same lanes.
+    pub cycles_real: u64,
+    /// Measured busy ns per image (`None` until an image completes).
+    pub ns_per_image: Option<f64>,
+    /// Measured ÷ model ns/image at the reference clock (> 1 means the
+    /// host runs slower than the eq.-11 bound, as it must).
+    pub model_ratio: Option<f64>,
+    pub intensity: f64,
+    pub bound: Bound,
+}
+
+/// The reconciled report for one model's pipeline.
+#[derive(Debug, Clone)]
+pub struct AccountReport {
+    pub layers: Vec<LayerAccount>,
+    /// Stage with the highest measured busy/image (`None` until any
+    /// stage completes an image).
+    pub measured_bottleneck: Option<usize>,
+    /// Stage with the highest eq.-11 `cycles_est` at actual lane counts.
+    pub predicted_bottleneck: usize,
+    /// Reference clock used to turn model cycles into seconds.
+    pub freq_hz: f64,
+}
+
+impl AccountReport {
+    /// Did the measurement land on the stage eq. 12 predicts?
+    pub fn bottleneck_match(&self) -> bool {
+        self.measured_bottleneck == Some(self.predicted_bottleneck)
+    }
+
+    /// Serialize for the `OP_PROFILE` wire frame / `BENCH_profile.json`.
+    /// Raw cumulative counters are included so pollers can difference two
+    /// reports into a windowed view (`repro profile --duration`).
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut m = std::collections::BTreeMap::new();
+                let mut put = |k: &str, v: Json| {
+                    m.insert(k.to_string(), v);
+                };
+                put("layer", Json::Num(l.layer as f64));
+                put("name", Json::Str(l.name.clone()));
+                put("lanes", Json::Num(l.lanes as f64));
+                put("images", Json::Num(l.images as f64));
+                put("rows_in", Json::Num(l.rows_in as f64));
+                put("xor_words", Json::Num(l.xor_words as f64));
+                put("popcounts", Json::Num(l.popcounts as f64));
+                put("bytes_moved", Json::Num(l.bytes_moved as f64));
+                put("busy_us", Json::Num(l.busy.as_secs_f64() * 1e6));
+                put("stall_in_us", Json::Num(l.stall_in.as_secs_f64() * 1e6));
+                put("stall_out_us", Json::Num(l.stall_out.as_secs_f64() * 1e6));
+                put(
+                    "utilization",
+                    l.utilization.map(Json::Num).unwrap_or(Json::Null),
+                );
+                put("cycles_est", Json::Num(l.cycles_est as f64));
+                put("cycles_real", Json::Num(l.cycles_real as f64));
+                put("ns_per_image", l.ns_per_image.map(Json::Num).unwrap_or(Json::Null));
+                put("model_ratio", l.model_ratio.map(Json::Num).unwrap_or(Json::Null));
+                put("intensity", Json::Num(l.intensity));
+                put("bound", Json::Str(l.bound.label().to_string()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("layers".to_string(), Json::Arr(layers));
+        m.insert(
+            "measured_bottleneck".to_string(),
+            self.measured_bottleneck.map(|i| Json::Num(i as f64)).unwrap_or(Json::Null),
+        );
+        m.insert("predicted_bottleneck".to_string(), Json::Num(self.predicted_bottleneck as f64));
+        m.insert("bottleneck_match".to_string(), Json::Bool(self.bottleneck_match()));
+        m.insert("freq_hz".to_string(), Json::Num(self.freq_hz));
+        m.insert(
+            "balance_bit_ops_per_byte".to_string(),
+            Json::Num(BALANCE_BIT_OPS_PER_BYTE),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Reconcile one model's measured stage snapshots against its analytical
+/// model at the paper's reference clock ([`DEFAULT_FREQ_HZ`]).
+pub fn reconcile(config: &NetConfig, stages: &[StageSnapshot]) -> Result<AccountReport> {
+    reconcile_at(config, stages, DEFAULT_FREQ_HZ)
+}
+
+/// [`reconcile`] with an explicit reference clock.
+pub fn reconcile_at(
+    config: &NetConfig,
+    stages: &[StageSnapshot],
+    freq_hz: f64,
+) -> Result<AccountReport> {
+    let geoms = layer_geometry(config);
+    if stages.len() != geoms.len() {
+        bail!(
+            "stage count {} does not match network '{}' with {} layers",
+            stages.len(),
+            config.name,
+            geoms.len()
+        );
+    }
+    if !(freq_hz.is_finite() && freq_hz > 0.0) {
+        bail!("reference clock must be positive and finite, got {freq_hz}");
+    }
+    let work = stage_work(config);
+    let pipeline = PipelineModel::default();
+    let mut layers = Vec::with_capacity(geoms.len());
+    for ((snap, geom), w) in stages.iter().zip(&geoms).zip(&work) {
+        let lanes = snap.lanes.max(1);
+        let params = LayerParams { uf: 1, p: lanes, ii: 1 };
+        let cycles_est = cycle_est(geom, &params);
+        let cycles_real = cycle_real(geom, &params, &pipeline);
+        let ns_per_image = (snap.images > 0)
+            .then(|| snap.busy.as_nanos() as f64 / snap.images as f64);
+        let model_ns = cycles_est as f64 / freq_hz * 1e9;
+        let model_ratio = ns_per_image.map(|m| m / model_ns.max(f64::MIN_POSITIVE));
+        layers.push(LayerAccount {
+            layer: snap.layer,
+            name: geom.name.clone(),
+            lanes: snap.lanes,
+            images: snap.images,
+            rows_in: snap.rows_in,
+            xor_words: snap.xor_words,
+            popcounts: snap.popcounts,
+            bytes_moved: snap.bytes_moved,
+            busy: snap.busy,
+            stall_in: snap.stall_in,
+            stall_out: snap.stall_out,
+            utilization: utilization(snap.busy, snap.stall_in, snap.stall_out),
+            work: *w,
+            cycles_est,
+            cycles_real,
+            ns_per_image,
+            model_ratio,
+            intensity: w.intensity(),
+            bound: classify(w.intensity()),
+        });
+    }
+    let measured_bottleneck = layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.ns_per_image.is_some())
+        .max_by(|(_, a), (_, b)| {
+            a.ns_per_image
+                .unwrap_or(0.0)
+                .total_cmp(&b.ns_per_image.unwrap_or(0.0))
+        })
+        .map(|(i, _)| i);
+    let predicted_bottleneck = layers
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, l)| l.cycles_est)
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Ok(AccountReport { layers, measured_bottleneck, predicted_bottleneck, freq_hz })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(layer: usize, lanes: usize, busy_ms: u64, stall_ms: u64, images: u64) -> StageSnapshot {
+        StageSnapshot {
+            layer,
+            lanes,
+            busy: Duration::from_millis(busy_ms),
+            stall_in: Duration::from_millis(stall_ms),
+            stall_out: Duration::ZERO,
+            rows_in: images * 8,
+            images,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn utilization_is_occupancy_in_unit_interval() {
+        assert_eq!(utilization(Duration::ZERO, Duration::ZERO, Duration::ZERO), None);
+        let u = utilization(
+            Duration::from_millis(30),
+            Duration::from_millis(60),
+            Duration::from_millis(10),
+        )
+        .unwrap();
+        assert!((u - 0.3).abs() < 1e-9);
+        let full = utilization(Duration::from_millis(5), Duration::ZERO, Duration::ZERO).unwrap();
+        assert!((full - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconcile_rejects_mismatched_stage_count() {
+        let cfg = NetConfig::tiny();
+        assert!(reconcile(&cfg, &[]).is_err());
+    }
+
+    #[test]
+    fn bottlenecks_and_bounds_line_up() {
+        let cfg = NetConfig::tiny();
+        let n = layer_geometry(&cfg).len();
+        // stage 1 does the most busy work per image -> measured bottleneck
+        let stages: Vec<StageSnapshot> = (0..n)
+            .map(|l| snap(l, 1, if l == 1 { 500 } else { 50 }, 100, 10))
+            .collect();
+        let report = reconcile(&cfg, &stages).unwrap();
+        assert_eq!(report.measured_bottleneck, Some(1));
+        for l in &report.layers {
+            let u = l.utilization.expect("stages have wall clock");
+            assert!(u > 0.0 && u <= 1.0, "utilization {u} out of (0,1]");
+            assert!(l.cycles_est > 0 && l.cycles_real >= l.cycles_est / 2);
+        }
+        // uniform lanes: the eq.-11 prediction is the largest cycle_conv
+        let geoms = layer_geometry(&cfg);
+        let expect = geoms
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, g)| g.outputs() * g.cnum as u64)
+            .map(|(i, _)| i)
+            .unwrap();
+        assert_eq!(report.predicted_bottleneck, expect);
+    }
+
+    #[test]
+    fn report_json_has_pinned_shape() {
+        let cfg = NetConfig::tiny();
+        let n = layer_geometry(&cfg).len();
+        let stages: Vec<StageSnapshot> = (0..n).map(|l| snap(l, 2, 100, 50, 4)).collect();
+        let report = reconcile(&cfg, &stages).unwrap();
+        let json = report.to_json();
+        let keys: Vec<&String> = json.as_obj().unwrap().keys().collect();
+        assert_eq!(
+            keys,
+            [
+                "balance_bit_ops_per_byte",
+                "bottleneck_match",
+                "freq_hz",
+                "layers",
+                "measured_bottleneck",
+                "predicted_bottleneck",
+            ]
+        );
+        let layers = json.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), n);
+        for l in layers {
+            assert!(l.get("utilization").unwrap().as_f64().unwrap() > 0.0);
+            let bound = l.get("bound").unwrap().as_str().unwrap();
+            assert!(bound == "compute" || bound == "memory");
+        }
+    }
+}

@@ -14,16 +14,32 @@
 //! * [`window`] — rolling per-window `Metrics` deltas (rate, p50/p99,
 //!   error/crash rate per window), folded into `stats_json` under
 //!   `"windows"` and rendered live by `repro top`.
+//! * [`profile`] — the per-stage work ledger (rows, packed words XNOR'd,
+//!   popcounts, bytes moved), incremented once per flushed image from
+//!   geometry-derived constants behind its own `BCNN_PROFILE` gate.
+//! * [`account`] — performance accounting: reconciles the ledger +
+//!   busy/stall counters against `fpga::timing`'s eqs. 9–12 into
+//!   per-stage utilization, roofline bound classes, and a measured-vs-
+//!   predicted bottleneck verdict (`OP_PROFILE`, `repro profile`).
 //!
 //! Everything is std-only and wait-free on the hot path: with tracing
 //! disarmed a span site costs one relaxed atomic load; armed, one
 //! clock read and a handful of relaxed stores into a fixed ring.
 
+pub mod account;
 pub mod export;
+pub mod profile;
 pub mod ring;
 pub mod window;
 
+pub use account::{
+    classify, reconcile, reconcile_at, utilization, AccountReport, Bound, LayerAccount,
+    BALANCE_BIT_OPS_PER_BYTE,
+};
 pub use export::{chrome_trace_for, chrome_trace_json};
+pub use profile::{
+    enabled as profile_enabled, set_enabled as set_profile_enabled, stage_work, StageWork,
+};
 pub use ring::{
     enabled, mint_trace_id, next_instance_id, now_ns, rings, set_enabled, SpanEvent, SpanKind,
     SpanRing, StageTracer, TraceLog, DEFAULT_RING_CAPACITY,

@@ -1,0 +1,193 @@
+//! Low-overhead continuous profiler: the per-stage *work ledger*.
+//!
+//! PR 5/8 gave every pipeline stage busy/stall wall-clock counters; this
+//! module attributes *work* to that wall clock so the accounting layer
+//! ([`crate::obs::account`]) can divide the two and get a rate.  The
+//! ledger counts, per stage: input rows pushed, packed 64-bit words
+//! XNOR'd, popcounts retired, and bytes moved (weights + input + output
+//! activations).  All three are *derived constants of the layer geometry*
+//! (paper eq. 9 nomenclature, [`crate::fpga::LayerGeom`]): the engine
+//! does exactly `outputs * ceil(cnum/64)` packed-word ops per image per
+//! layer, so the ledger increments once per flushed image by a
+//! precomputed [`StageWork`] instead of instrumenting the kernel inner
+//! loop — the hot path gains one relaxed load (disarmed) or three
+//! relaxed `fetch_add`s per *image* (armed), never per word.
+//!
+//! Arming mirrors the tracing gate in [`crate::obs::ring`]: the
+//! `BCNN_PROFILE` env var (default on; `off`/`0`/`false` disarm) seeds an
+//! `AtomicU8`, and [`set_enabled`] flips it process-wide (the observer-
+//! effect bench toggles it A/B).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::fpga::{layer_geometry, LayerGeom};
+use crate::model::NetConfig;
+
+// Same shape as `ring::MODE`: an AtomicU8 whose relaxed load is the whole
+// disarmed cost; first query resolves the env var.
+const MODE_UNINIT: u8 = 0;
+const MODE_OFF: u8 = 1;
+const MODE_ON: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNINIT);
+
+/// Is work-ledger accounting armed?  One relaxed load on the hot path.
+#[inline]
+pub fn enabled() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_ON => true,
+        MODE_OFF => false,
+        _ => init_mode(),
+    }
+}
+
+#[cold]
+fn init_mode() -> bool {
+    let on = match std::env::var("BCNN_PROFILE") {
+        Ok(v) => !matches!(v.trim().to_ascii_lowercase().as_str(), "off" | "0" | "false"),
+        Err(_) => true,
+    };
+    MODE.store(if on { MODE_ON } else { MODE_OFF }, Ordering::Relaxed);
+    on
+}
+
+/// Arm or disarm the work ledger process-wide (the profile overhead bench
+/// toggles this to measure the observer effect).
+pub fn set_enabled(on: bool) {
+    MODE.store(if on { MODE_ON } else { MODE_OFF }, Ordering::Relaxed);
+}
+
+/// Per-image work constants for one layer — what one flushed image adds
+/// to its stage's ledger.  Derived from [`LayerGeom`] once at stage
+/// startup, not measured: the tap-major engine's op count per image is a
+/// pure function of geometry (eq. 9), so counting it at flush time is
+/// exact, and free of inner-loop instrumentation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageWork {
+    /// Input rows the stage consumes per image (`in_hw`; 1 for FC).
+    pub rows: u64,
+    /// Packed 64-bit words XNOR'd per image: `outputs * ceil(cnum/64)`.
+    /// The fixed-point first layer runs MACs over the same geometry; its
+    /// count is the packed-word *equivalent* of that work.
+    pub xor_words: u64,
+    /// Popcounts retired per image (one per XNOR'd word).
+    pub popcounts: u64,
+    /// Bytes moved per image: binary weights + input activations
+    /// (integer `input_bits`-wide for the first layer, 1-bit packed
+    /// elsewhere) + packed output activations.
+    pub bytes_moved: u64,
+}
+
+impl StageWork {
+    /// Derive the per-image ledger constants for `geom`.  `input_bits`
+    /// only matters for the fixed-point first layer.
+    pub fn for_layer(geom: &LayerGeom, input_bits: usize) -> StageWork {
+        let words_per_output = geom.cnum.div_ceil(64) as u64;
+        let xor_words = geom.outputs() * words_per_output;
+        let weight_bytes = ((geom.dep * geom.cnum) as u64).div_ceil(8);
+        let in_values = if geom.is_conv {
+            // cnum = 9 * in_c for conv layers
+            (geom.wid * geom.hei * (geom.cnum / 9)) as u64
+        } else {
+            geom.cnum as u64
+        };
+        let in_act_bytes = if geom.fixed_point {
+            (in_values * input_bits as u64).div_ceil(8)
+        } else {
+            in_values.div_ceil(8)
+        };
+        let out_act_bytes = geom.outputs().div_ceil(8);
+        StageWork {
+            rows: if geom.is_conv { geom.hei as u64 } else { 1 },
+            xor_words,
+            popcounts: xor_words,
+            bytes_moved: weight_bytes + in_act_bytes + out_act_bytes,
+        }
+    }
+
+    /// Bit-operations per image: 64 XNORs + 64 popcount-accumulates per
+    /// packed word — the roofline's work axis.
+    pub fn bit_ops(&self) -> u64 {
+        self.xor_words * 128
+    }
+
+    /// Arithmetic intensity in bit-ops per byte moved — the roofline's
+    /// x-axis.  Compared against [`crate::obs::account::BALANCE_BIT_OPS_PER_BYTE`].
+    pub fn intensity(&self) -> f64 {
+        self.bit_ops() as f64 / (self.bytes_moved.max(1)) as f64
+    }
+}
+
+/// The per-layer ledger constants for a whole network, index-aligned with
+/// the pipeline's stages.
+pub fn stage_work(config: &NetConfig) -> Vec<StageWork> {
+    layer_geometry(config)
+        .iter()
+        .map(|g| StageWork::for_layer(g, config.input_bits))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_constants_match_eq9_geometry() {
+        let cfg = NetConfig::table2();
+        let geoms = layer_geometry(&cfg);
+        let work = stage_work(&cfg);
+        assert_eq!(work.len(), geoms.len());
+        for (w, g) in work.iter().zip(&geoms) {
+            // eq. 9: cycle_conv = outputs * cnum; the packed-word ledger
+            // is the same work at 64 ops/word granularity
+            assert_eq!(w.xor_words, g.outputs() * g.cnum.div_ceil(64) as u64);
+            assert_eq!(w.popcounts, w.xor_words);
+            assert!(w.bytes_moved > 0);
+            assert_eq!(w.rows, if g.is_conv { g.hei as u64 } else { 1 });
+        }
+    }
+
+    #[test]
+    fn conv_layers_are_denser_than_fc() {
+        // the roofline premise: conv reuses each weight byte across the
+        // whole spatial plane, FC touches every weight byte exactly once
+        let work = stage_work(&NetConfig::table2());
+        let geoms = layer_geometry(&NetConfig::table2());
+        let conv_min = work
+            .iter()
+            .zip(&geoms)
+            .filter(|(_, g)| g.is_conv && !g.fixed_point)
+            .map(|(w, _)| w.intensity())
+            .fold(f64::INFINITY, f64::min);
+        let fc_max = work
+            .iter()
+            .zip(&geoms)
+            .filter(|(_, g)| !g.is_conv)
+            .map(|(w, _)| w.intensity())
+            .fold(0.0f64, f64::max);
+        assert!(
+            conv_min > fc_max,
+            "conv intensity {conv_min:.1} must exceed FC intensity {fc_max:.1}"
+        );
+    }
+
+    #[test]
+    fn fc_intensity_sits_near_its_closed_form() {
+        // FC: outputs = out_f, cnum = in_f, weights dominate bytes, so
+        // intensity -> 128 * ceil(in_f/64) / (in_f/8) ~= 16 bit-ops/byte
+        let cfg = NetConfig::table2();
+        let work = stage_work(&cfg);
+        let fc = &work[6]; // FC1: 8192 -> 1024
+        assert!((fc.intensity() - 16.0).abs() < 1.0, "got {}", fc.intensity());
+    }
+
+    #[test]
+    fn set_enabled_round_trips() {
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(true);
+        assert!(enabled());
+    }
+}

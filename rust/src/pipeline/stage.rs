@@ -51,6 +51,7 @@ use std::time::{Duration, Instant};
 
 use crate::bcnn::engine::{LayerStepper, RowRef, StepperOut};
 use crate::bcnn::Engine;
+use crate::obs::profile::StageWork;
 use crate::obs::{self, StageTracer};
 use crate::pipeline::fifo::{bounded, RowReceiver, RowSender};
 use crate::util::faults;
@@ -107,11 +108,25 @@ pub struct StageCounters {
     stall_out_ns: AtomicU64,
     rows_in: AtomicU64,
     images: AtomicU64,
+    // work ledger (crate::obs::profile): geometry-derived per-image
+    // constants folded in once per flushed image when profiling is armed
+    xor_words: AtomicU64,
+    popcounts: AtomicU64,
+    bytes_moved: AtomicU64,
 }
 
 impl StageCounters {
     fn add(cell: &AtomicU64, d: Duration) {
         cell.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Fold one image's ledger constants in (called at flush time by the
+    /// stage's lead lane; the whole-stage work is accounted once, not per
+    /// lane).
+    fn add_image_work(&self, work: &StageWork) {
+        self.xor_words.fetch_add(work.xor_words, Ordering::Relaxed);
+        self.popcounts.fetch_add(work.popcounts, Ordering::Relaxed);
+        self.bytes_moved.fetch_add(work.bytes_moved, Ordering::Relaxed);
     }
 
     /// Consistent-enough snapshot (counters only ever grow).
@@ -125,6 +140,9 @@ impl StageCounters {
             stall_out: ns(&self.stall_out_ns),
             rows_in: self.rows_in.load(Ordering::Relaxed),
             images: self.images.load(Ordering::Relaxed),
+            xor_words: self.xor_words.load(Ordering::Relaxed),
+            popcounts: self.popcounts.load(Ordering::Relaxed),
+            bytes_moved: self.bytes_moved.load(Ordering::Relaxed),
         }
     }
 }
@@ -143,6 +161,14 @@ pub struct StageSnapshot {
     pub rows_in: u64,
     /// Whole images flushed.
     pub images: u64,
+    /// Packed 64-bit words XNOR'd ([`crate::obs::profile`] ledger; 0
+    /// while profiling is disarmed).
+    pub xor_words: u64,
+    /// Popcounts retired (ledger; 0 while disarmed).
+    pub popcounts: u64,
+    /// Bytes moved: weights + input + output activations (ledger; 0
+    /// while disarmed).
+    pub bytes_moved: u64,
 }
 
 impl StageSnapshot {
@@ -155,6 +181,9 @@ impl StageSnapshot {
         self.stall_out += other.stall_out;
         self.rows_in += other.rows_in;
         self.images += other.images;
+        self.xor_words += other.xor_words;
+        self.popcounts += other.popcounts;
+        self.bytes_moved += other.bytes_moved;
     }
 }
 
@@ -248,9 +277,12 @@ pub fn run_stage_group(
     let shapes = engine.layer_shapes();
     let out_c = shapes[index].out_c.max(1);
     let lanes = lanes.clamp(1, out_c);
+    // per-image ledger constants: derived from geometry once per stage
+    // lifetime, folded in at image flush when profiling is armed
+    let work = crate::obs::profile::stage_work(&engine.model().config())[index];
     if lanes == 1 {
         let mut stepper = engine.layer_stepper(index).expect("index validated at construction");
-        run_single_lane(&mut stepper, rx, tx, counters, tracer);
+        run_single_lane(&mut stepper, work, rx, tx, counters, tracer);
         return;
     }
     // contiguous ascending channel partitions; lane 0 (the lead) keeps
@@ -267,7 +299,7 @@ pub fn run_stage_group(
             helpers_out.push(out_rx);
         }
         run_lead_lane(
-            engine, index, bounds[0], helpers_in, helpers_out, rx, tx, counters, tracer,
+            engine, index, bounds[0], work, helpers_in, helpers_out, rx, tx, counters, tracer,
         );
         // scope join: helpers observe their dropped endpoints and exit
     });
@@ -282,6 +314,7 @@ pub(crate) fn lane_bounds(out_c: usize, lanes: usize) -> Vec<(usize, usize)> {
 /// The single-lane stage loop (one thread, no partitioning).
 fn run_single_lane(
     stepper: &mut LayerStepper<'_>,
+    work: StageWork,
     rx: RowReceiver<PipeRow>,
     tx: StageOutput,
     counters: &StageCounters,
@@ -303,7 +336,7 @@ fn run_single_lane(
         if tracer.is_some() && rows_in_image == 0 {
             img_start_ns = obs::now_ns();
         }
-        let work = Instant::now();
+        let busy = Instant::now();
         let rref = match &row {
             PipeRow::Int(v) => RowRef::Int(v),
             PipeRow::Bits(v) => RowRef::Bits(v),
@@ -316,6 +349,9 @@ fn run_single_lane(
         if rows_in_image == in_hw {
             rows_in_image = 0;
             counters.images.fetch_add(1, Ordering::Relaxed);
+            if crate::obs::profile::enabled() {
+                counters.add_image_work(&work);
+            }
             if let Err(e) = stepper.flush(&mut |o| emitted.push(o)) {
                 fail_stage(&tx, StageError::Failed(e.to_string()));
                 return;
@@ -325,7 +361,7 @@ fn run_single_lane(
             }
             images_done += 1;
         }
-        StageCounters::add(&counters.busy_ns, work.elapsed());
+        StageCounters::add(&counters.busy_ns, busy.elapsed());
         for out in emitted.drain(..) {
             let send = Instant::now();
             let ok = forward(&tx, out);
@@ -350,6 +386,7 @@ fn run_lead_lane(
     engine: &Engine,
     index: usize,
     (lo, hi): (usize, usize),
+    work: StageWork,
     helpers_in: Vec<RowSender<Arc<PipeRow>>>,
     helpers_out: Vec<RowReceiver<LanePartial>>,
     rx: RowReceiver<PipeRow>,
@@ -373,7 +410,7 @@ fn run_lead_lane(
         if tracer.is_some() && rows_in_image == 0 {
             img_start_ns = obs::now_ns();
         }
-        let work = Instant::now();
+        let busy = Instant::now();
         // broadcast first so the helpers overlap with the lead's own
         // partition compute
         let row = Arc::new(row);
@@ -406,6 +443,9 @@ fn run_lead_lane(
         if rows_in_image == in_hw {
             rows_in_image = 0;
             counters.images.fetch_add(1, Ordering::Relaxed);
+            if crate::obs::profile::enabled() {
+                counters.add_image_work(&work);
+            }
             if let Err(e) = stepper.flush(&mut |o| emitted.push(o)) {
                 fail_stage(&tx, StageError::Failed(e.to_string()));
                 return;
@@ -439,7 +479,7 @@ fn run_lead_lane(
             }
             ready.push(out);
         }
-        StageCounters::add(&counters.busy_ns, work.elapsed());
+        StageCounters::add(&counters.busy_ns, busy.elapsed());
         for out in ready {
             let send = Instant::now();
             let ok = forward(&tx, out);

@@ -20,6 +20,7 @@
 //! OP_STATS                           -> REPLY_JSON, u32 len, bytes
 //! OP_HEALTH                          -> REPLY_JSON, u32 len, bytes
 //! OP_TRACE                           -> REPLY_JSON, u32 len, bytes
+//! OP_PROFILE                         -> REPLY_JSON, u32 len, bytes
 //! error (any op)                     -> 0xFFFF_FFFF, u32 len, msg bytes
 //! ```
 //!
@@ -60,6 +61,7 @@ pub const OP_LIST: u32 = 0xBC20_0005;
 pub const OP_STATS: u32 = 0xBC20_0006;
 pub const OP_HEALTH: u32 = 0xBC20_0007;
 pub const OP_TRACE: u32 = 0xBC20_0008;
+pub const OP_PROFILE: u32 = 0xBC20_0009;
 pub const REPLY_SCORES: u32 = 0xBC20_0081;
 pub const REPLY_OK: u32 = 0xBC20_0082;
 pub const REPLY_JSON: u32 = 0xBC20_0083;
@@ -193,6 +195,10 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
             }
             OP_TRACE => {
                 let json = crate::obs::chrome_trace_json();
+                write_json(&mut stream, &json)?;
+            }
+            OP_PROFILE => {
+                let json = profile_json(registry);
                 write_json(&mut stream, &json)?;
             }
             other => {
@@ -364,6 +370,37 @@ pub fn health_json(registry: &ModelRegistry) -> Json {
     obj(vec![("epoch", Json::Num(registry.epoch() as f64)), ("models", Json::Arr(models))])
 }
 
+/// `PROFILE` payload: the performance-accounting report per staged
+/// model — each pipeline-backed entry's cumulative work ledger reconciled
+/// against eqs. 9–12 ([`crate::obs::account::reconcile`]).  Raw counters
+/// travel with the derived fields so a poller (`repro profile
+/// --duration`) can difference two frames into a windowed view.
+/// Engine-backed entries have no stage ledger and are skipped.
+pub fn profile_json(registry: &ModelRegistry) -> Json {
+    let models: Vec<Json> = registry
+        .list()
+        .into_iter()
+        .filter_map(|e| {
+            let metrics = e.metrics();
+            if metrics.stages.is_empty() {
+                return None;
+            }
+            let report = match crate::obs::account::reconcile(&e.config, &metrics.stages) {
+                Ok(r) => r.to_json(),
+                Err(err) => obj(vec![("error", Json::Str(err.to_string()))]),
+            };
+            Some(obj(vec![
+                ("name", Json::Str(e.name.clone())),
+                ("version", Json::Num(e.version as f64)),
+                ("backend", Json::Str(e.backend.clone())),
+                ("kernel", Json::Str(metrics.kernel.clone())),
+                ("report", report),
+            ]))
+        })
+        .collect();
+    obj(vec![("epoch", Json::Num(registry.epoch() as f64)), ("models", Json::Arr(models))])
+}
+
 // ---------------------------------------------------------------------------
 // frame primitives
 // ---------------------------------------------------------------------------
@@ -517,6 +554,13 @@ impl ControlClient {
     /// write it to a file and load it in Perfetto / `chrome://tracing`.
     pub fn trace(&mut self) -> Result<Json> {
         self.json_op(OP_TRACE)
+    }
+
+    /// The performance-accounting report: per staged model, the work
+    /// ledger reconciled against the paper's eqs. 9–12 (utilization,
+    /// roofline bound class, measured-vs-predicted bottleneck).
+    pub fn profile(&mut self) -> Result<Json> {
+        self.json_op(OP_PROFILE)
     }
 
     fn json_op(&mut self, op: u32) -> Result<Json> {

@@ -1,0 +1,176 @@
+//! Property test: the FPGA streaming simulator and the closed-form
+//! timing model are the same arithmetic.
+//!
+//! `fpga::stream::simulate` claims its per-layer cycle counts are the
+//! paper's eq. 9-11 (`cycle_real`) evaluated on the layer geometry, and
+//! its phase/total/fps identities follow eq. 12.  The performance
+//! accounting layer (`obs::account`) leans on exactly that claim when it
+//! reconciles measured busy time against the model — so here a swept
+//! family of pseudo-random configurations and unroll parameters pins the
+//! agreement exactly (`==` on cycles, not a tolerance).
+
+use repro::bcnn::Engine;
+use repro::coordinator::workload::random_images;
+use repro::fpga::layer_geometry;
+use repro::fpga::stream::{simulate, StreamConfig};
+use repro::fpga::timing::{cycle_est, cycle_real, LayerParams, PipelineModel};
+use repro::model::{BcnnModel, ConvSpec, NetConfig};
+
+/// xorshift64* — deterministic parameter sweep, no rand crate.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn pick<T: Copy>(&mut self, choices: &[T]) -> T {
+        choices[(self.next() % choices.len() as u64) as usize]
+    }
+}
+
+/// A small pseudo-random configuration: 1-2 conv layers, optional pool,
+/// optional hidden FC — every shape the geometry walker distinguishes.
+fn random_config(rng: &mut Rng, case: usize) -> NetConfig {
+    let n_conv = rng.pick(&[1usize, 2]);
+    let mut conv = Vec::new();
+    for i in 0..n_conv {
+        conv.push(ConvSpec {
+            out_channels: rng.pick(&[4usize, 8, 16]),
+            // pooling halves the resolution; only the first conv pools so
+            // the spatial size stays a positive even number
+            pool: i == 0 && rng.pick(&[true, false]),
+        });
+    }
+    NetConfig {
+        name: format!("prop-{case}"),
+        conv,
+        fc: if rng.pick(&[true, false]) {
+            vec![rng.pick(&[8usize, 16])]
+        } else {
+            vec![]
+        },
+        classes: rng.pick(&[4usize, 10]),
+        input_hw: rng.pick(&[4usize, 8]),
+        input_channels: rng.pick(&[1usize, 3]),
+        input_bits: rng.pick(&[4usize, 6]),
+    }
+}
+
+#[test]
+fn simulator_cycles_equal_the_closed_form_model() {
+    let mut rng = Rng(0xD1CE_D1CE_D1CE_D1CE);
+    for case in 0..12 {
+        let cfg = random_config(&mut rng, case);
+        let model = BcnnModel::synthetic(&cfg, 0xC0FFEE ^ case as u64);
+        let geoms = layer_geometry(&cfg);
+        let n_layers = model.layers.len();
+        assert_eq!(geoms.len(), n_layers, "case {case}: geometry walker length");
+
+        let params: Vec<LayerParams> = (0..n_layers)
+            .map(|_| LayerParams::new(rng.pick(&[1usize, 3]), rng.pick(&[1usize, 2, 4])))
+            .collect();
+        let pipeline = PipelineModel::default();
+        let engine = Engine::new(model).expect("valid model");
+        let n_images = 3usize;
+        let images = random_images(&cfg, n_images, 0xAB ^ case as u64);
+
+        let stream = StreamConfig {
+            freq_hz: 90.0e6,
+            params: params.clone(),
+            pipeline: pipeline.clone(),
+            double_buffered: true,
+        };
+        let report = simulate(&engine, &stream, &images).expect("simulate");
+
+        // eq. 9-11: per-layer cycles are cycle_real on the geometry, bit
+        // for bit, and never less than the pre-overhead estimate
+        for (l, (geom, p)) in geoms.iter().zip(&params).enumerate() {
+            let expect = cycle_real(geom, p, &pipeline);
+            assert_eq!(
+                report.layer_cycles[l], expect,
+                "case {case} layer {l}: simulator disagrees with cycle_real"
+            );
+            assert!(
+                expect >= cycle_est(geom, p),
+                "case {case} layer {l}: overheads made the model go backwards"
+            );
+        }
+
+        // eq. 12 identities: phase = max cycles, one image per phase, a
+        // full pipeline of fill before the first completion
+        let phase = *report.layer_cycles.iter().max().expect("non-empty");
+        assert_eq!(report.phase_cycles, phase, "case {case}: phase is max layer cycles");
+        assert_eq!(
+            report.total_cycles,
+            (n_images + n_layers) as u64 * phase,
+            "case {case}: total = (n + L) * phase"
+        );
+        for (i, &done) in report.completion_cycles.iter().enumerate() {
+            assert_eq!(
+                done,
+                (i + n_layers + 1) as u64 * phase,
+                "case {case}: image {i} completion"
+            );
+        }
+        assert_eq!(report.fps, 90.0e6 / phase as f64, "case {case}: fps = freq / phase");
+        for (l, &u) in report.utilization.iter().enumerate() {
+            assert_eq!(
+                u,
+                report.layer_cycles[l] as f64 / phase as f64,
+                "case {case} layer {l}: utilization = C_l / phase"
+            );
+        }
+
+        // numerics ride along: the simulator is bit-exact vs the engine
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(
+                report.scores[i],
+                engine.infer(img).expect("infer"),
+                "case {case}: image {i} scores diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn sequential_ablation_sums_the_same_cycles() {
+    let mut rng = Rng(0xFEED_FACE_CAFE_BEEF);
+    for case in 0..6 {
+        let cfg = random_config(&mut rng, case);
+        let model = BcnnModel::synthetic(&cfg, 0xD0_0D ^ case as u64);
+        let geoms = layer_geometry(&cfg);
+        let params: Vec<LayerParams> =
+            geoms.iter().map(|_| LayerParams::new(1, rng.pick(&[1usize, 2]))).collect();
+        let pipeline = PipelineModel::default();
+        let engine = Engine::new(model).expect("valid model");
+        let n_images = 2usize;
+        let images = random_images(&cfg, n_images, 0x51 ^ case as u64);
+
+        let stream = StreamConfig {
+            freq_hz: 90.0e6,
+            params: params.clone(),
+            pipeline: pipeline.clone(),
+            double_buffered: false,
+        };
+        let report = simulate(&engine, &stream, &images).expect("simulate");
+
+        let per_image: u64 = geoms
+            .iter()
+            .zip(&params)
+            .map(|(g, p)| cycle_real(g, p, &pipeline))
+            .sum();
+        assert_eq!(report.phase_cycles, per_image, "case {case}: phase is the cycle sum");
+        assert_eq!(
+            report.total_cycles,
+            n_images as u64 * per_image,
+            "case {case}: no overlap without double buffering"
+        );
+        assert_eq!(report.fps, 90.0e6 / per_image as f64, "case {case}: sequential fps");
+    }
+}

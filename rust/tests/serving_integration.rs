@@ -384,12 +384,15 @@ fn stats_json_schema_is_pinned() {
                     keys(s),
                     [
                         "busy_us",
+                        "bytes_moved",
                         "images",
                         "lanes",
                         "layer",
+                        "popcounts",
                         "rows_in",
                         "stall_in_us",
                         "stall_out_us",
+                        "xor_words",
                     ]
                 );
             }
