@@ -1,0 +1,352 @@
+//! Bench: the event-driven TCP front-end.
+//!
+//! Phase A races the legacy thread-per-connection front-end against the
+//! epoll reactor over the same 2-worker pool and the same multiplexed
+//! open-loop load (pipelined v1 frames, saturating windows).  The
+//! reactor serves the identical request stream from a fixed handful of
+//! event-loop threads instead of one OS thread per socket; at ≥1k
+//! connections that difference is the paper's serving story — the 8.3x
+//! small-batch scenario only materializes if the host front-end keeps
+//! the accelerator fed without drowning in scheduler overhead.
+//!
+//! Phase B demonstrates the two-lane QoS admission: a saturating
+//! offline flood (large windows, short per-request deadlines) competes
+//! with a modest Poisson online stream (100 ms deadlines) through the
+//! protocol-v2 registry front-end.  The weighted-deficit scheduler must
+//! keep the online p99 inside its deadline while the offline lane sheds
+//! with typed `REPLY_EXPIRED` frames — and every admitted request must
+//! still get exactly one reply (conservation).
+//!
+//! Results land in `rust/BENCH_serve.json`.  Run:
+//! `cargo bench --bench serve_frontend` (CI runs `BENCH_SMOKE=1`).
+//! Full mode opens >2k sockets in one process — raise the fd limit
+//! first (`ulimit -n 8192`).  `BENCH_SERVE_CONNS` overrides the phase-A
+//! connection count.
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use repro::benchkit::{envelope, write_bench_json, Json, Table};
+use repro::coordinator::workload::{
+    random_images, run_frontend_load, FrontendLoadConfig, FrontendLoadReport, LoadProto,
+};
+use repro::coordinator::{
+    frontend_snapshot, reactor_supported, serve_tcp_frontend, serve_tcp_threaded, Backend,
+    BackendFactory, BatchPolicy, Coordinator, CoordinatorConfig, FrontendConfig, Lane,
+    NativeBackend, QosConfig,
+};
+use repro::model::BcnnModel;
+use repro::serving::{BackendSpec, DeploySpec, ModelRegistry};
+
+fn smoke() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some()
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// A front-end thread serving one listener until `stop` is raised.
+struct Frontend {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<anyhow::Result<()>>,
+}
+
+impl Frontend {
+    fn shutdown(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.handle.join().expect("front-end thread").expect("front-end serve");
+    }
+}
+
+fn check_conservation(tag: &str, r: &FrontendLoadReport) {
+    assert!(
+        r.conservation_ok(),
+        "{tag}: reply conservation violated — sent {} ok {} errors {} expired {} lost {}",
+        r.sent,
+        r.ok,
+        r.errors,
+        r.expired,
+        r.lost
+    );
+}
+
+// ---------------------------------------------------------------------
+// Phase A: thread-per-connection vs reactor, identical pool and load
+// ---------------------------------------------------------------------
+
+fn start_pool(model: &BcnnModel) -> Coordinator {
+    let m = model.clone();
+    let factory: BackendFactory = Arc::new(move || -> anyhow::Result<Box<dyn Backend>> {
+        Ok(Box::new(NativeBackend::new(m.clone())?))
+    });
+    Coordinator::start_sharded(
+        factory,
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::ZERO },
+            workers: 2,
+            queue_depth: 256,
+            ..Default::default()
+        },
+    )
+    .expect("start pool")
+}
+
+fn start_v1_frontend(pool: &Coordinator, reactor: bool) -> Frontend {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind front-end");
+    let addr = listener.local_addr().expect("local addr");
+    let stop = Arc::new(AtomicBool::new(false));
+    let (client, stop2) = (pool.client(), Arc::clone(&stop));
+    let handle = std::thread::spawn(move || {
+        if reactor {
+            serve_tcp_frontend(listener, client, stop2, FrontendConfig::default())
+        } else {
+            serve_tcp_threaded(listener, client, stop2)
+        }
+    });
+    Frontend { addr, stop, handle }
+}
+
+fn phase_a_rps(
+    model: &BcnnModel,
+    image: &[i32],
+    reactor: bool,
+    conns: usize,
+    duration: Duration,
+) -> f64 {
+    let pool = start_pool(model);
+    let fe = start_v1_frontend(&pool, reactor);
+    let cfg = FrontendLoadConfig {
+        addr: fe.addr,
+        connections: conns,
+        threads: if smoke() { 2 } else { 8 },
+        window: 4,
+        duration,
+        rate_rps: None,
+        proto: LoadProto::V1,
+        seed: 0xA11CE ^ reactor as u64,
+    };
+    let report = run_frontend_load(&cfg, image).expect("phase-A load");
+    let mode = if reactor { "reactor" } else { "threaded" };
+    check_conservation(mode, &report);
+    fe.shutdown();
+    pool.shutdown();
+    report.throughput()
+}
+
+// ---------------------------------------------------------------------
+// Phase B: two-lane QoS over the protocol-v2 registry front-end
+// ---------------------------------------------------------------------
+
+fn start_v2_frontend(registry: Arc<ModelRegistry>) -> Frontend {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind v2 front-end");
+    let addr = listener.local_addr().expect("local addr");
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let cfg = FrontendConfig {
+        reactor_threads: 0,
+        qos: QosConfig {
+            online_weight: 8,
+            offline_weight: 1,
+            // a deep lane so sheds are deadline-typed, not capacity drops
+            lane_capacity: 1 << 16,
+            ..QosConfig::default()
+        },
+    };
+    let handle =
+        std::thread::spawn(move || serve_tcp_registry(listener, registry, stop2, cfg));
+    Frontend { addr, stop, handle }
+}
+
+fn serve_tcp_registry(
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    stop: Arc<AtomicBool>,
+    cfg: FrontendConfig,
+) -> anyhow::Result<()> {
+    repro::serving::serve_registry_frontend(listener, registry, stop, cfg)
+}
+
+struct SloOutcome {
+    online: FrontendLoadReport,
+    offline: FrontendLoadReport,
+    online_deadline_ms: u32,
+    lane_shed_expired: u64,
+}
+
+fn phase_b_slo(model: &BcnnModel, image: &[i32], duration: Duration) -> SloOutcome {
+    // one deliberately narrow pool: a single worker with a shallow shard
+    // queue, so the offline flood actually queues in the admission lanes
+    let registry = Arc::new(ModelRegistry::new());
+    registry
+        .deploy(
+            "demo",
+            DeploySpec {
+                model: model.clone(),
+                backend: BackendSpec::Engine { lanes: 1 },
+                workers: 1,
+                queue_depth: 8,
+                policy: BatchPolicy { max_batch: 8, max_wait: Duration::ZERO },
+            },
+        )
+        .expect("deploy demo model");
+    let fe = start_v2_frontend(Arc::clone(&registry));
+
+    let online_deadline_ms: u32 = 100;
+    let offline_deadline_ms: u32 = if smoke() { 2 } else { 10 };
+    let offline_cfg = FrontendLoadConfig {
+        addr: fe.addr,
+        connections: if smoke() { 32 } else { 448 },
+        threads: if smoke() { 2 } else { 4 },
+        window: 32,
+        duration,
+        rate_rps: None,
+        proto: LoadProto::Qos { lane: Lane::Offline, deadline_ms: offline_deadline_ms },
+        seed: 0x0FF1,
+    };
+    let online_cfg = FrontendLoadConfig {
+        addr: fe.addr,
+        connections: if smoke() { 8 } else { 64 },
+        threads: if smoke() { 1 } else { 2 },
+        window: 4,
+        duration,
+        rate_rps: Some(if smoke() { 150.0 } else { 800.0 }),
+        proto: LoadProto::Qos { lane: Lane::Online, deadline_ms: online_deadline_ms },
+        seed: 0x0511,
+    };
+
+    let image_off = image.to_vec();
+    let offline_thread = std::thread::spawn(move || {
+        run_frontend_load(&offline_cfg, &image_off).expect("offline flood")
+    });
+    let online = run_frontend_load(&online_cfg, image).expect("online load");
+    let offline = offline_thread.join().expect("offline load thread");
+
+    // snapshot the lane counters while the front-end is still live (its
+    // stats deregister once the reactor threads exit); zero when the
+    // platform fell back to the threaded front-end
+    let lane_shed_expired = if reactor_supported() {
+        frontend_snapshot().lane(Lane::Offline).shed_expired
+    } else {
+        0
+    };
+    fe.shutdown();
+    registry.undeploy("demo").expect("undeploy demo model");
+    registry.reap_retired();
+
+    check_conservation("online", &online);
+    check_conservation("offline", &offline);
+    SloOutcome { online, offline, online_deadline_ms, lane_shed_expired }
+}
+
+// ---------------------------------------------------------------------
+
+fn report_json(tag: &str, r: &FrontendLoadReport) -> Json {
+    Json::Obj(vec![
+        ("lane".into(), Json::Str(tag.into())),
+        ("sent".into(), Json::Num(r.sent as f64)),
+        ("ok".into(), Json::Num(r.ok as f64)),
+        ("errors".into(), Json::Num(r.errors as f64)),
+        ("expired".into(), Json::Num(r.expired as f64)),
+        ("throughput_rps".into(), Json::Num(r.throughput())),
+        ("p50_ms".into(), Json::Num(r.percentile_ms(50.0))),
+        ("p99_ms".into(), Json::Num(r.percentile_ms(99.0))),
+    ])
+}
+
+fn main() {
+    let model_a =
+        BcnnModel::load_or_synthetic("tiny", "artifacts", 0xB_C0DE).expect("tiny config");
+    // phase B wants real per-image latency so the flood actually queues
+    let model_b =
+        BcnnModel::load_or_synthetic("small", "artifacts", 0xB_C0DE).expect("small config");
+    let image_a = random_images(&model_a.config(), 1, 0xBEEF).remove(0);
+    let image_b = random_images(&model_b.config(), 1, 0xBEEF).remove(0);
+
+    let conns = env_usize("BENCH_SERVE_CONNS", if smoke() { 64 } else { 1024 });
+    let duration_a = if smoke() { Duration::from_millis(500) } else { Duration::from_secs(3) };
+    let duration_b = if smoke() { Duration::from_millis(800) } else { Duration::from_secs(3) };
+
+    println!(
+        "=== serve front-end: {} connections, reactor {} ===",
+        conns,
+        if reactor_supported() { "native" } else { "UNSUPPORTED (threaded fallback)" }
+    );
+
+    // interleave nothing: each mode gets a fresh pool and a quiet machine
+    let threaded_rps = phase_a_rps(&model_a, &image_a, false, conns, duration_a);
+    let reactor_rps = phase_a_rps(&model_a, &image_a, true, conns, duration_a);
+    let ratio = reactor_rps / threaded_rps.max(1e-9);
+
+    let mut t = Table::new(&["front-end", "conns", "req/s"]);
+    t.row(&["threaded".into(), conns.to_string(), format!("{threaded_rps:.0}")]);
+    t.row(&["reactor".into(), conns.to_string(), format!("{reactor_rps:.0}")]);
+    t.print();
+    println!("reactor/threaded throughput ratio: {ratio:.2}x\n");
+
+    let slo = phase_b_slo(&model_b, &image_b, duration_b);
+    let online_p99 = slo.online.percentile_ms(99.0);
+    let mut t = Table::new(&["lane", "sent", "ok", "expired", "p50 ms", "p99 ms"]);
+    t.row(&[
+        "online".into(),
+        slo.online.sent.to_string(),
+        slo.online.ok.to_string(),
+        slo.online.expired.to_string(),
+        format!("{:.2}", slo.online.percentile_ms(50.0)),
+        format!("{online_p99:.2}"),
+    ]);
+    t.row(&[
+        "offline".into(),
+        slo.offline.sent.to_string(),
+        slo.offline.ok.to_string(),
+        slo.offline.expired.to_string(),
+        format!("{:.2}", slo.offline.percentile_ms(50.0)),
+        format!("{:.2}", slo.offline.percentile_ms(99.0)),
+    ]);
+    t.print();
+
+    let online_within = online_p99 <= slo.online_deadline_ms as f64;
+    let sheds_nonzero = slo.offline.expired > 0;
+    println!(
+        "online p99 {online_p99:.2} ms (deadline {} ms, {}), offline deadline sheds {} \
+         (lane counter {})",
+        slo.online_deadline_ms,
+        if online_within { "met" } else { "MISSED" },
+        slo.offline.expired,
+        slo.lane_shed_expired,
+    );
+
+    // smoke mode (CI shared runners) checks mechanism, not performance:
+    // conservation always holds and the offline lane must shed, but the
+    // throughput win and the online SLO are only asserted in full runs
+    let pass = sheds_nonzero && (smoke() || (ratio > 1.0 && online_within));
+
+    let mut fields = envelope("serve_frontend", "tiny+small;v1-pool-w2;v2-registry-w1");
+    fields.extend(vec![
+        ("smoke".into(), Json::Bool(smoke())),
+        ("reactor_supported".into(), Json::Bool(reactor_supported())),
+        ("connections".into(), Json::Num(conns as f64)),
+        ("threaded_rps".into(), Json::Num(threaded_rps)),
+        ("reactor_rps".into(), Json::Num(reactor_rps)),
+        ("reactor_over_threaded_ratio".into(), Json::Num(ratio)),
+        (
+            "slo".into(),
+            Json::Obj(vec![
+                ("online".into(), report_json("online", &slo.online)),
+                ("offline".into(), report_json("offline", &slo.offline)),
+                ("online_deadline_ms".into(), Json::Num(slo.online_deadline_ms as f64)),
+                ("online_within_deadline".into(), Json::Bool(online_within)),
+                ("offline_deadline_sheds".into(), Json::Num(slo.offline.expired as f64)),
+                ("lane_shed_expired".into(), Json::Num(slo.lane_shed_expired as f64)),
+            ]),
+        ),
+        ("conservation_ok".into(), Json::Bool(true)),
+        ("pass".into(), Json::Bool(pass)),
+    ]);
+    write_bench_json("BENCH_serve.json", &Json::Obj(fields)).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json (smoke={})", smoke());
+    assert!(pass, "serve front-end bench failed its acceptance gates");
+}

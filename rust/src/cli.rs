@@ -25,7 +25,7 @@
 use std::collections::BTreeMap;
 use std::net::TcpListener;
 use std::path::PathBuf;
-use std::sync::atomic::AtomicBool;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -33,17 +33,22 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::bcnn::Engine;
 use crate::benchkit::{self, Table};
-use crate::coordinator::workload::{random_images, run_closed_loop, run_open_loop};
+use crate::coordinator::workload::{
+    random_images, run_closed_loop, run_frontend_load, run_open_loop, FrontendLoadConfig,
+    LoadProto,
+};
 use crate::coordinator::{
-    Backend, BackendFactory, BatchPolicy, Coordinator, CoordinatorConfig, FpgaSimBackend,
-    NativeBackend, PipelineBackend,
+    parse_qos_weights, serve_tcp_frontend, serve_tcp_threaded, Backend, BackendFactory,
+    BatchPolicy, Coordinator, CoordinatorConfig, FpgaSimBackend, FrontendConfig, NativeBackend,
+    PipelineBackend,
 };
 use crate::fpga::stream::simulate;
 use crate::model::{BcnnModel, NetConfig};
 use crate::optimizer::{optimize, OptimizeOptions};
 use crate::runtime::Runtime;
 use crate::serving::{
-    serve_registry, BackendSpec, ControlClient, DeploySpec, ModelRegistry, ModelSource,
+    serve_registry_frontend, serve_registry_threaded, BackendSpec, ControlClient, DeploySpec,
+    ModelRegistry, ModelSource,
 };
 use crate::tables;
 use crate::util::faults::{self, FaultPlan, FAULTS_ENV};
@@ -150,6 +155,8 @@ COMMANDS
         [--max-batch N] [--max-wait-ms M] [--requests N] [--rate RPS]
         [--workers W] [--queue-depth D] [--lanes L] [--inflight N]
         [--stage-threads N | --stage-plan auto]
+        [--reactor-threads N] [--qos ON:OFF] [--deadline-ms MS]
+        [--threaded]
       Start the serving control plane: every model gets its own sharded
       coordinator pool (W worker shards, bounded D-deep queues, L
       intra-batch lanes for the engine backend).  A model source is a
@@ -163,7 +170,13 @@ COMMANDS
       `--stage-threads N` balances N total stage lanes across the layers
       (paper §4.3 executed: the bottleneck stage gets more channel-
       partitioned lanes), `--stage-plan auto` sizes the budget to the
-      machine's parallelism.
+      machine's parallelism.  The TCP front-end is an epoll reactor:
+      `--reactor-threads N` sizes the event-loop pool (0 = auto),
+      `--qos ON:OFF` sets the online:offline admission weights
+      (default 8:1), `--deadline-ms MS` gives online-lane requests a
+      default dispatch deadline (expired requests get a typed shed
+      reply), and `--threaded` falls back to the legacy
+      thread-per-connection front-end.
   deploy --addr HOST:PORT --name NAME --source SRC [--backend B]
          [--workers W] [--queue-depth D]
       Hot-swap NAME on a running server: the new pool is built while the
@@ -543,6 +556,24 @@ fn resolve_model(args: &Args, source: &str) -> Result<BcnnModel> {
     ModelSource::parse(source)?.load()
 }
 
+/// Build the reactor front-end config from `--reactor-threads`, `--qos`
+/// (online:offline admission weights), and `--deadline-ms` (default
+/// online-lane dispatch deadline).
+fn frontend_config(args: &Args) -> Result<FrontendConfig> {
+    let reactor_threads = args.usize_or("reactor-threads", 0)?;
+    let mut qos = crate::coordinator::QosConfig::default();
+    if let Some(spec) = args.value_of("qos")? {
+        let (online, offline) = parse_qos_weights(spec)?;
+        qos.online_weight = online;
+        qos.offline_weight = offline;
+    }
+    let deadline_ms = args.usize_or("deadline-ms", 0)?;
+    if deadline_ms > 0 {
+        qos.default_deadline = Some(Duration::from_millis(deadline_ms as u64));
+    }
+    Ok(FrontendConfig { reactor_threads, qos })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let backend_name = args.opt_or("backend", "engine")?;
     let workers = args.usize_or("workers", 1)?.max(1);
@@ -596,13 +627,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(port) = args.value_of("port")? {
         let addr = format!("127.0.0.1:{port}");
         let listener = TcpListener::bind(&addr).with_context(|| format!("bind {addr}"))?;
-        println!(
-            "serving {} model(s) on {addr} (protocol v2 + v1 compat; \
-             {workers} shard(s) per model, queue depth {queue_depth}; ctrl-c to stop)",
-            registry.list().len()
-        );
         let stop = Arc::new(AtomicBool::new(false));
-        serve_registry(listener, Arc::clone(&registry), stop)?;
+        if args.flag("threaded") {
+            println!(
+                "serving {} model(s) on {addr} (thread-per-connection front-end; \
+                 {workers} shard(s) per model, queue depth {queue_depth}; ctrl-c to stop)",
+                registry.list().len()
+            );
+            serve_registry_threaded(listener, Arc::clone(&registry), stop)?;
+            return Ok(());
+        }
+        let frontend = frontend_config(args)?;
+        println!(
+            "serving {} model(s) on {addr} (epoll reactor front-end, {} loop thread(s), \
+             qos {}:{}; {workers} shard(s) per model, queue depth {queue_depth}; ctrl-c to stop)",
+            registry.list().len(),
+            frontend.resolved_threads(),
+            frontend.qos.online_weight,
+            frontend.qos.offline_weight,
+        );
+        serve_registry_frontend(listener, Arc::clone(&registry), stop, frontend)?;
         return Ok(());
     }
 
@@ -830,6 +874,14 @@ fn cmd_top(args: &Args) -> Result<()> {
                 m.get("metrics")?.get("requests")?.as_f64()?,
             );
         }
+        // cumulative per-lane shed totals feed the lanes table's shed/s
+        if let Some(lanes) =
+            stats.get("frontend").ok().and_then(|fe| fe.get("lanes").ok()).and_then(|l| l.as_obj().ok())
+        {
+            for (name, lane) in lanes {
+                cum.insert(format!("lane:{name}"), num(lane, "shed_expired") + num(lane, "shed_overload"));
+            }
+        }
         prev = Some((now, cum));
         rounds += 1;
         if iterations > 0 && rounds >= iterations {
@@ -886,6 +938,45 @@ fn render_top(
             last.get("requests_failed_over")?.as_f64()? as u64,
         )
         .ok();
+    }
+
+    // ---- front-end QoS lanes (reactor front-ends only) -----------------
+    if let Ok(fe) = stats.get("frontend") {
+        writeln!(
+            out,
+            "\nfrontend  conns {}  reactor threads {}  paused reads {}",
+            num(fe, "connections") as u64,
+            num(fe, "reactor_threads") as u64,
+            num(fe, "paused_reads") as u64,
+        )
+        .ok();
+        if let Some(lanes) = fe.get("lanes").ok().and_then(|l| l.as_obj().ok()) {
+            let mut table = Table::new(&[
+                "lane", "depth", "admitted", "dispatched", "shed exp", "shed ovl", "shed/s",
+            ]);
+            for (name, lane) in lanes {
+                let sheds = num(lane, "shed_expired") + num(lane, "shed_overload");
+                let shed_rate = match prev {
+                    Some((at, cum)) => match cum.get(&format!("lane:{name}")) {
+                        Some(&p) if now > at => {
+                            format!("{:.1}", (sheds - p).max(0.0) / (now - at).as_secs_f64())
+                        }
+                        _ => "-".to_string(),
+                    },
+                    None => "-".to_string(),
+                };
+                table.row(&[
+                    name.clone(),
+                    format!("{}", num(lane, "depth") as u64),
+                    format!("{}", num(lane, "admitted") as u64),
+                    format!("{}", num(lane, "dispatched") as u64),
+                    format!("{}", num(lane, "shed_expired") as u64),
+                    format!("{}", num(lane, "shed_overload") as u64),
+                    shed_rate,
+                ]);
+            }
+            out.push_str(&table.to_string());
+        }
     }
 
     // ---- per-model serving rows (health state joined in) ---------------
@@ -1396,15 +1487,62 @@ fn bench_check(args: &Args) -> Result<()> {
     )?;
     run_closed_loop(&coord.client(), &cfg, (requests / 4).max(8), 0xA1)?; // warm-up
     let report = run_closed_loop(&coord.client(), &cfg, requests, 0xA2)?;
-    coord.shutdown();
     let serve_ns = 1e9 / report.throughput().max(1e-9);
+
+    // front-end A/B on the same pool: legacy thread-per-connection vs
+    // the epoll reactor under an identical multiplexed open-loop load.
+    // Lower-is-better ratio: reactor ns/request over threaded ns/request
+    // — a climbing ratio means the reactor front-end is losing ground.
+    let fe_ns = |reactor: bool| -> Result<f64> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (client, stop2) = (coord.client(), Arc::clone(&stop));
+        let serve = std::thread::spawn(move || -> Result<()> {
+            if reactor {
+                serve_tcp_frontend(listener, client, stop2, FrontendConfig::default())
+            } else {
+                serve_tcp_threaded(listener, client, stop2)
+            }
+        });
+        let load = FrontendLoadConfig {
+            addr,
+            connections: 64,
+            threads: 2,
+            window: 4,
+            duration: Duration::from_millis(300),
+            rate_rps: None,
+            proto: LoadProto::V1,
+            seed: 0xF00D,
+        };
+        let fe_report = run_frontend_load(&load, &images[0])?;
+        stop.store(true, Ordering::SeqCst);
+        serve.join().map_err(|_| anyhow!("front-end serve thread panicked"))??;
+        if !fe_report.conservation_ok() {
+            bail!(
+                "front-end load lost {} of {} request(s) without a reply",
+                fe_report.lost,
+                fe_report.sent
+            );
+        }
+        Ok(1e9 / fe_report.throughput().max(1e-9))
+    };
+    let threaded_ns = fe_ns(false)?;
+    let reactor_ns = fe_ns(true)?;
+    coord.shutdown();
 
     let mut measured: BTreeMap<String, f64> = BTreeMap::new();
     measured.insert("serve_over_engine_ratio".to_string(), serve_ns / engine_ns.max(1e-9));
     measured.insert("dispatched_over_scalar_ratio".to_string(), engine_ns / scalar_ns.max(1e-9));
+    measured.insert(
+        "reactor_over_threaded_ns_ratio".to_string(),
+        reactor_ns / threaded_ns.max(1e-9),
+    );
     measured.insert("engine_ns_per_image".to_string(), engine_ns);
     measured.insert("scalar_ns_per_image".to_string(), scalar_ns);
     measured.insert("serve_ns_per_request".to_string(), serve_ns);
+    measured.insert("frontend_threaded_ns_per_request".to_string(), threaded_ns);
+    measured.insert("frontend_reactor_ns_per_request".to_string(), reactor_ns);
 
     if args.flag("record") {
         return bench_record(&baseline_path, &measured);
@@ -1446,6 +1584,10 @@ fn bench_record(path: &str, measured: &BTreeMap<String, f64>) -> Result<()> {
     let band = |metric: &str| match metric {
         "serve_over_engine_ratio" => Some(150.0),
         "dispatched_over_scalar_ratio" => Some(25.0),
+        // reactor ns/request over threaded ns/request at ~64 multiplexed
+        // connections; generous band — CI boxes schedule noisily, the
+        // gate only has to catch the reactor collapsing outright
+        "reactor_over_threaded_ns_ratio" => Some(100.0),
         _ => None,
     };
     let mut metrics = BTreeMap::new();

@@ -131,7 +131,7 @@ mod tests {
                 trace_id: 0,
                 image: vec![],
                 enqueued: Instant::now(),
-                reply: tx,
+                reply: crate::coordinator::request::ReplyTo::Channel(tx),
             }),
             rx,
         )

@@ -362,6 +362,57 @@ impl Metrics {
     }
 }
 
+// ---------------------------------------------------------------------------
+
+/// Per-lane admission counters (QoS front-end): a point-in-time snapshot
+/// of one lane's lifecycle totals, serialized into the schema-pinned
+/// `"frontend"` section of the v2 `STATS` payload.  Conservation invariant:
+/// every admitted request is eventually exactly one of dispatched,
+/// shed_expired, or shed_overload (depth is the in-flight remainder).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LaneCounters {
+    /// Requests accepted into the lane queue.
+    pub admitted: u64,
+    /// Requests handed to a shard pool.
+    pub dispatched: u64,
+    /// Requests shed with a typed `Expired` reply (deadline passed).
+    pub shed_expired: u64,
+    /// Requests shed with a typed `Overload` reply (lane at capacity or
+    /// the dispatch wait bound elapsed without a free shard queue).
+    pub shed_overload: u64,
+    /// Current queue depth (gauge, not a counter).
+    pub depth: u64,
+}
+
+impl LaneCounters {
+    /// Total sheds of either kind.
+    pub fn shed(&self) -> u64 {
+        self.shed_expired + self.shed_overload
+    }
+
+    /// Element-wise sum (aggregating lanes across front-ends).
+    pub fn merge(&self, other: &LaneCounters) -> LaneCounters {
+        LaneCounters {
+            admitted: self.admitted + other.admitted,
+            dispatched: self.dispatched + other.dispatched,
+            shed_expired: self.shed_expired + other.shed_expired,
+            shed_overload: self.shed_overload + other.shed_overload,
+            depth: self.depth + other.depth,
+        }
+    }
+
+    /// JSON object with stable keys (pinned by the stats-schema test).
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("admitted".into(), Json::Num(self.admitted as f64));
+        m.insert("depth".into(), Json::Num(self.depth as f64));
+        m.insert("dispatched".into(), Json::Num(self.dispatched as f64));
+        m.insert("shed_expired".into(), Json::Num(self.shed_expired as f64));
+        m.insert("shed_overload".into(), Json::Num(self.shed_overload as f64));
+        Json::Obj(m)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -589,5 +640,27 @@ mod tests {
         assert!((m.modeled_energy_j(8.2) - 8.2 * 0.002).abs() < 1e-9);
         m.wall = Duration::from_secs(2);
         assert_eq!(m.throughput(), 3.0);
+    }
+
+    #[test]
+    fn lane_counters_merge_and_json() {
+        let a = LaneCounters {
+            admitted: 10,
+            dispatched: 7,
+            shed_expired: 2,
+            shed_overload: 1,
+            depth: 0,
+        };
+        let b =
+            LaneCounters { admitted: 4, dispatched: 1, shed_expired: 0, shed_overload: 0, depth: 3 };
+        let sum = a.merge(&b);
+        assert_eq!(sum.admitted, 14);
+        assert_eq!(sum.shed(), 3);
+        assert_eq!(sum.depth, 3);
+        // conservation: admitted == dispatched + sheds + depth
+        assert_eq!(sum.admitted, sum.dispatched + sum.shed() + sum.depth);
+        let j = sum.to_json();
+        let keys: Vec<&str> = j.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+        assert_eq!(keys, ["admitted", "depth", "dispatched", "shed_expired", "shed_overload"]);
     }
 }

@@ -20,13 +20,18 @@
 //! `client -> dispatch (round-robin + least-loaded) -> bounded shard queue
 //! -> batcher -> worker thread -> backend replica -> reply channel`
 //!
-//! No tokio in the offline crate cache — the event loop is std threads +
-//! channels, which for this workload (CPU-bound inference, one worker per
-//! replica) is the same architecture without the executor.
+//! No tokio in the offline crate cache — the TCP front-end is a hand-rolled
+//! epoll [`reactor`] (nonblocking multiplexed connections, incremental
+//! frame decoding, write backpressure) feeding a two-lane [`qos`] admission
+//! scheduler; the shard pool itself stays std threads + channels, which for
+//! this workload (CPU-bound inference, one worker per replica) is the same
+//! architecture without the executor.
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
+pub mod qos;
+pub mod reactor;
 pub mod request;
 pub mod server;
 pub mod supervisor;
@@ -40,9 +45,17 @@ pub use backend::{
 // is served through this coordinator like every other backend
 pub use crate::pipeline::PipelineBackend;
 pub use batcher::{BatchPolicy, Batcher, Msg};
-pub use metrics::Metrics;
-pub use request::{InferError, InferReply, InferRequest, SubmitError};
-pub use server::{serve_tcp, Client, Coordinator, CoordinatorConfig, TcpClient, MAX_WIRE_VALUES};
+pub use metrics::{LaneCounters, Metrics};
+pub use qos::{
+    frontend_json, frontend_snapshot, parse_qos_weights, FrontendConfig, FrontendSnapshot,
+    FrontendStats, Lane, QosAdmission, QosConfig,
+};
+pub use reactor::reactor_supported;
+pub use request::{InferError, InferErrorKind, InferReply, InferRequest, ReplyTo, SubmitError};
+pub use server::{
+    serve_tcp, serve_tcp_frontend, serve_tcp_threaded, Client, Coordinator, CoordinatorConfig,
+    TcpClient, MAX_WIRE_VALUES,
+};
 pub use supervisor::{
     PoolHealth, RestartPolicy, ShardHealth, ShardHealthSnapshot, ShardState,
 };

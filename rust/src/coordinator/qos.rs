@@ -1,0 +1,786 @@
+//! Two-class QoS admission for the event-driven front-end.
+//!
+//! The paper's Fig. 7 result is *batch-insensitivity*: the FPGA pipeline
+//! serves small online batches 8.3x faster than the GPU while matching it
+//! on large offline batches.  To make that distinction actionable on the
+//! host, the front-end classifies every request into one of two lanes:
+//!
+//! * **online** — small-batch, deadline-tagged, p99-latency-bound (the
+//!   8.3x scenario).  Requests past their deadline are *shed* with a typed
+//!   `Expired` reply instead of queueing uselessly.
+//! * **offline** — large-batch throughput work ("static data" scenario).
+//!   No latency promise; sheds only on overload.
+//!
+//! Lanes drain by **weighted deficit round-robin** (default 8:1 online) so
+//! an offline flood cannot starve online traffic, and head-of-line expiry
+//! checks run before every dispatch so a stale online request never burns
+//! shard capacity.  Blanket `QueueFull` rejection is replaced by typed
+//! sheds: every admitted request gets exactly one reply — scores, a
+//! backend error, `Expired`, or `Overload` — never a silent drop.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::LaneCounters;
+use crate::coordinator::request::{InferError, InferErrorKind, InferReply, ReplyTo, SubmitError};
+use crate::coordinator::server::{Client, TCP_SUBMIT_DEADLINE};
+use crate::obs::{self, SpanEvent, SpanKind, SpanRing};
+use crate::util::json::Json;
+use crate::util::sync::lock_recover;
+
+/// Request class, carried in the protocol-v2 QoS frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Latency-bound interactive traffic (paper's online scenario).
+    Online,
+    /// Throughput-bound bulk traffic (paper's static-data scenario).
+    Offline,
+}
+
+impl Lane {
+    pub const COUNT: usize = 2;
+
+    pub fn index(self) -> usize {
+        match self {
+            Lane::Online => 0,
+            Lane::Offline => 1,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Lane::Online => "online",
+            Lane::Offline => "offline",
+        }
+    }
+
+    /// Wire encoding (v2 QoS frame `lane` field).
+    pub fn wire(self) -> u32 {
+        self.index() as u32
+    }
+
+    pub fn from_wire(v: u32) -> Option<Lane> {
+        match v {
+            0 => Some(Lane::Online),
+            1 => Some(Lane::Offline),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Lane; 2] {
+        [Lane::Online, Lane::Offline]
+    }
+}
+
+/// Lane weights and shed policy.
+#[derive(Debug, Clone, Copy)]
+pub struct QosConfig {
+    /// DRR quantum for the online lane (dispatches per replenish round).
+    pub online_weight: u32,
+    /// DRR quantum for the offline lane.
+    pub offline_weight: u32,
+    /// Deadline applied to *online* requests that carry none of their own
+    /// (`--deadline-ms`).  `None` preserves the pre-QoS contract: requests
+    /// wait up to [`max_wait`](Self::max_wait) and shed as `Overload`,
+    /// exactly like the threaded path's 5 s submit bound.
+    pub default_deadline: Option<Duration>,
+    /// Per-lane queue capacity; admission beyond it sheds immediately.
+    pub lane_capacity: usize,
+    /// Upper bound on time queued at admission before an `Overload` shed
+    /// (applies to every request as a backstop, deadline or not).
+    pub max_wait: Duration,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        Self {
+            online_weight: 8,
+            offline_weight: 1,
+            default_deadline: None,
+            lane_capacity: 4096,
+            max_wait: TCP_SUBMIT_DEADLINE,
+        }
+    }
+}
+
+/// Parse a `--qos online:offline` weight spec (e.g. `"8:1"`).
+pub fn parse_qos_weights(spec: &str) -> anyhow::Result<(u32, u32)> {
+    let parse = |s: &str| -> anyhow::Result<u32> {
+        let v: u32 = s
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --qos weight {s:?} (want online:offline)"))?;
+        anyhow::ensure!(v >= 1, "--qos weights must be >= 1, got {v}");
+        Ok(v)
+    };
+    let (on, off) = spec
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("invalid --qos spec {spec:?} (want online:offline)"))?;
+    Ok((parse(on)?, parse(off)?))
+}
+
+/// Front-end (reactor + QoS) configuration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FrontendConfig {
+    /// Event-loop threads; `0` = auto (half the available parallelism,
+    /// clamped to `[1, 4]`).
+    pub reactor_threads: usize,
+    pub qos: QosConfig,
+}
+
+impl FrontendConfig {
+    pub fn resolved_threads(&self) -> usize {
+        if self.reactor_threads > 0 {
+            return self.reactor_threads;
+        }
+        let par = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        (par / 2).clamp(1, 4)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stats: per-front-end atomics, globally registered (Weak) so `STATS` /
+// `repro top` can aggregate without plumbing handles through the registry.
+
+#[derive(Default)]
+pub struct LaneStats {
+    admitted: AtomicU64,
+    dispatched: AtomicU64,
+    shed_expired: AtomicU64,
+    shed_overload: AtomicU64,
+    depth: AtomicU64,
+}
+
+impl LaneStats {
+    fn snapshot(&self) -> LaneCounters {
+        LaneCounters {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            dispatched: self.dispatched.load(Ordering::Relaxed),
+            shed_expired: self.shed_expired.load(Ordering::Relaxed),
+            shed_overload: self.shed_overload.load(Ordering::Relaxed),
+            depth: self.depth.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Shared counters for one front-end instance (reactor + admission).
+#[derive(Default)]
+pub struct FrontendStats {
+    lanes: [LaneStats; Lane::COUNT],
+    /// Event-loop threads actually running.
+    pub reactor_threads: AtomicUsize,
+    /// Live multiplexed connections across all loops.
+    pub connections: AtomicUsize,
+    /// Times a connection's read interest was paused for write
+    /// backpressure (slow reader with a full outbound buffer).
+    pub paused_reads: AtomicU64,
+}
+
+impl FrontendStats {
+    /// Create and register in the process-global roster.
+    pub fn new_registered() -> Arc<FrontendStats> {
+        let s = Arc::new(FrontendStats::default());
+        let mut reg = lock_recover(registry());
+        reg.retain(|w: &Weak<FrontendStats>| w.strong_count() > 0);
+        reg.push(Arc::downgrade(&s));
+        drop(reg);
+        s
+    }
+
+    pub fn lane(&self, lane: Lane) -> &LaneStats {
+        &self.lanes[lane.index()]
+    }
+
+    pub fn snapshot(&self) -> FrontendSnapshot {
+        FrontendSnapshot {
+            lanes: [self.lanes[0].snapshot(), self.lanes[1].snapshot()],
+            reactor_threads: self.reactor_threads.load(Ordering::Relaxed),
+            connections: self.connections.load(Ordering::Relaxed),
+            paused_reads: self.paused_reads.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time aggregate across live front-ends.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FrontendSnapshot {
+    pub lanes: [LaneCounters; Lane::COUNT],
+    pub reactor_threads: usize,
+    pub connections: usize,
+    pub paused_reads: u64,
+}
+
+impl FrontendSnapshot {
+    pub fn lane(&self, lane: Lane) -> &LaneCounters {
+        &self.lanes[lane.index()]
+    }
+
+    fn merge(&self, other: &FrontendSnapshot) -> FrontendSnapshot {
+        FrontendSnapshot {
+            lanes: [self.lanes[0].merge(&other.lanes[0]), self.lanes[1].merge(&other.lanes[1])],
+            reactor_threads: self.reactor_threads + other.reactor_threads,
+            connections: self.connections + other.connections,
+            paused_reads: self.paused_reads + other.paused_reads,
+        }
+    }
+
+    /// Stable-keyed JSON (pinned by the stats-schema test).
+    pub fn to_json(&self) -> Json {
+        let mut lanes = std::collections::BTreeMap::new();
+        for lane in Lane::all() {
+            lanes.insert(lane.label().to_string(), self.lane(lane).to_json());
+        }
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("connections".to_string(), Json::Num(self.connections as f64));
+        m.insert("lanes".to_string(), Json::Obj(lanes));
+        m.insert("paused_reads".to_string(), Json::Num(self.paused_reads as f64));
+        m.insert("reactor_threads".to_string(), Json::Num(self.reactor_threads as f64));
+        Json::Obj(m)
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Weak<FrontendStats>>> {
+    static REG: OnceLock<Mutex<Vec<Weak<FrontendStats>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Aggregate snapshot over every live front-end in the process (zeros when
+/// none is running — the `"frontend"` stats section is always present).
+pub fn frontend_snapshot() -> FrontendSnapshot {
+    let reg = lock_recover(registry());
+    reg.iter()
+        .filter_map(|w| w.upgrade())
+        .map(|s| s.snapshot())
+        .fold(FrontendSnapshot::default(), |acc, s| acc.merge(&s))
+}
+
+/// JSON form of [`frontend_snapshot`] for `stats_json`.
+pub fn frontend_json() -> Json {
+    frontend_snapshot().to_json()
+}
+
+// ---------------------------------------------------------------------------
+// Admission queue
+
+/// One queued request awaiting dispatch to a shard pool.
+pub(crate) struct LaneEntry {
+    pub image: Vec<i32>,
+    pub trace_id: u64,
+    pub lane: Lane,
+    pub admitted: Instant,
+    /// When this entry sheds instead of dispatching.
+    pub deadline: Instant,
+    /// `Expired` when the bound came from an explicit/default deadline,
+    /// `Overload` when it is only the `max_wait` backstop.
+    pub expire_kind: InferErrorKind,
+    /// Completion callback (exactly-once reply delivery).
+    pub reply: Arc<dyn Fn(InferReply) + Send + Sync>,
+    /// The shard pool this request targets (per-model under the registry).
+    pub client: Client,
+    /// Last dispatch attempt saw `ShardDown` (colors the shed message).
+    pub saw_down: bool,
+}
+
+struct Inner {
+    queues: [VecDeque<LaneEntry>; Lane::COUNT],
+    deficit: [u64; Lane::COUNT],
+}
+
+/// Weighted-deficit two-lane scheduler.  `admit` enqueues (or sheds on a
+/// full lane); `pump` — called from every reactor loop iteration — drains
+/// by DRR with head-of-line expiry sheds.
+pub struct QosAdmission {
+    cfg: QosConfig,
+    stats: Arc<FrontendStats>,
+    inner: Mutex<Inner>,
+    ring: Arc<SpanRing>,
+}
+
+/// Cap on hoarded deficit: an idle lane may burst at most this many
+/// quanta's worth of dispatches when traffic returns.
+const DEFICIT_BURST_QUANTA: u64 = 4;
+
+impl QosAdmission {
+    pub fn new(cfg: QosConfig, stats: Arc<FrontendStats>) -> Arc<QosAdmission> {
+        let instance = obs::next_instance_id();
+        Arc::new(QosAdmission {
+            cfg,
+            stats,
+            inner: Mutex::new(Inner {
+                queues: [VecDeque::new(), VecDeque::new()],
+                deficit: [0; Lane::COUNT],
+            }),
+            ring: SpanRing::new(format!("frontend{instance}/qos"), obs::DEFAULT_RING_CAPACITY),
+        })
+    }
+
+    pub fn config(&self) -> &QosConfig {
+        &self.cfg
+    }
+
+    /// Enqueue a request for dispatch; sheds immediately (typed reply via
+    /// the callback) when the lane is at capacity.
+    pub(crate) fn admit(
+        &self,
+        image: Vec<i32>,
+        trace_id: u64,
+        lane: Lane,
+        explicit_deadline: Option<Duration>,
+        client: Client,
+        reply: Arc<dyn Fn(InferReply) + Send + Sync>,
+    ) {
+        let now = Instant::now();
+        let online_default =
+            if lane == Lane::Online { self.cfg.default_deadline } else { None };
+        let (deadline, expire_kind) = match explicit_deadline.or(online_default) {
+            Some(d) => (now + d.min(self.cfg.max_wait), InferErrorKind::Expired),
+            None => (now + self.cfg.max_wait, InferErrorKind::Overload),
+        };
+        let entry = LaneEntry {
+            image,
+            trace_id,
+            lane,
+            admitted: now,
+            deadline,
+            expire_kind,
+            reply,
+            client,
+            saw_down: false,
+        };
+        let li = lane.index();
+        self.stats.lanes[li].admitted.fetch_add(1, Ordering::Relaxed);
+        self.stats.lanes[li].depth.fetch_add(1, Ordering::Relaxed);
+        let full = {
+            let mut inner = lock_recover(&self.inner);
+            if inner.queues[li].len() >= self.cfg.lane_capacity {
+                Some(entry)
+            } else {
+                inner.queues[li].push_back(entry);
+                None
+            }
+        };
+        if let Some(entry) = full {
+            self.shed(
+                entry,
+                InferErrorKind::Overload,
+                format!("server overloaded: {} lane at capacity", lane.label()),
+            );
+        }
+    }
+
+    /// One DRR round: replenish deficits, then alternate lanes dispatching
+    /// up to each lane's deficit, shedding expired heads for free.  Returns
+    /// `true` while work remains queued (callers shorten their poll
+    /// timeout to keep the scheduler hot).
+    pub fn pump(&self) -> bool {
+        let mut inner = lock_recover(&self.inner);
+        if inner.queues.iter().all(|q| q.is_empty()) {
+            inner.deficit = [0; Lane::COUNT];
+            return false;
+        }
+        let now = Instant::now();
+        let weights =
+            [u64::from(self.cfg.online_weight.max(1)), u64::from(self.cfg.offline_weight.max(1))];
+        for i in 0..Lane::COUNT {
+            if inner.queues[i].is_empty() {
+                inner.deficit[i] = 0; // no hoarding while idle
+            } else {
+                let cap = weights[i] * DEFICIT_BURST_QUANTA;
+                inner.deficit[i] = (inner.deficit[i] + weights[i]).min(cap);
+            }
+        }
+        let mut progressed = true;
+        while progressed {
+            progressed = false;
+            for i in 0..Lane::COUNT {
+                while inner.deficit[i] > 0 {
+                    let Some(entry) = inner.queues[i].pop_front() else {
+                        break;
+                    };
+                    if now >= entry.deadline {
+                        // expiry sheds are free: they consume no deficit and
+                        // never reach a shard queue
+                        let kind = entry.expire_kind;
+                        let msg = self.expiry_message(&entry, now);
+                        self.shed(entry, kind, msg);
+                        progressed = true;
+                        continue;
+                    }
+                    match self.dispatch(entry) {
+                        Dispatch::Done => {
+                            inner.deficit[i] -= 1;
+                            progressed = true;
+                        }
+                        Dispatch::Blocked(entry) => {
+                            // head-of-line: the target pool is saturated;
+                            // retry this entry on the next pump
+                            inner.queues[i].push_front(entry);
+                            inner.deficit[i] = 0;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        inner.queues.iter().any(|q| !q.is_empty())
+    }
+
+    fn dispatch(&self, entry: LaneEntry) -> Dispatch {
+        let LaneEntry {
+            image,
+            trace_id,
+            lane,
+            admitted,
+            deadline,
+            expire_kind,
+            reply,
+            client,
+            ..
+        } = entry;
+        match client.submit_with(image, trace_id, ReplyTo::Callback(Arc::clone(&reply))) {
+            Ok(()) => {
+                let li = lane.index();
+                self.stats.lanes[li].dispatched.fetch_add(1, Ordering::Relaxed);
+                self.stats.lanes[li].depth.fetch_sub(1, Ordering::Relaxed);
+                if obs::enabled() {
+                    // serialized: pump holds the admission lock
+                    let t_end = obs::now_ns();
+                    let waited = admitted.elapsed().as_nanos() as u64;
+                    self.ring.record(&SpanEvent {
+                        trace_id,
+                        kind: SpanKind::Dispatch,
+                        t_start_ns: t_end.saturating_sub(waited),
+                        t_end_ns: t_end,
+                        shard: lane.index() as u32,
+                        layer: None,
+                        batch: 1,
+                    });
+                }
+                Dispatch::Done
+            }
+            Err(SubmitError::QueueFull { image }) => Dispatch::Blocked(LaneEntry {
+                image,
+                trace_id,
+                lane,
+                admitted,
+                deadline,
+                expire_kind,
+                reply,
+                client,
+                saw_down: false,
+            }),
+            Err(SubmitError::ShardDown { image }) => Dispatch::Blocked(LaneEntry {
+                image,
+                trace_id,
+                lane,
+                admitted,
+                deadline,
+                expire_kind,
+                reply,
+                client,
+                saw_down: true,
+            }),
+            Err(SubmitError::Shutdown) => {
+                self.shed(
+                    LaneEntry {
+                        image: Vec::new(),
+                        trace_id,
+                        lane,
+                        admitted,
+                        deadline,
+                        expire_kind,
+                        reply,
+                        client,
+                        saw_down: false,
+                    },
+                    InferErrorKind::Overload,
+                    "pool shut down before dispatch".to_string(),
+                );
+                Dispatch::Done
+            }
+        }
+    }
+
+    fn expiry_message(&self, entry: &LaneEntry, now: Instant) -> String {
+        let waited_ms = now.duration_since(entry.admitted).as_millis();
+        match entry.expire_kind {
+            InferErrorKind::Expired => format!(
+                "deadline expired after {waited_ms}ms in the {} lane",
+                entry.lane.label()
+            ),
+            _ if entry.saw_down => format!(
+                "service degraded: all shards down ({waited_ms}ms in the {} lane)",
+                entry.lane.label()
+            ),
+            _ => format!(
+                "server overloaded: shed after {waited_ms}ms in the {} lane \
+                 (all shard queues full)",
+                entry.lane.label()
+            ),
+        }
+    }
+
+    /// Deliver a typed shed reply and account it.
+    fn shed(&self, entry: LaneEntry, kind: InferErrorKind, message: String) {
+        let li = entry.lane.index();
+        let s = &self.stats.lanes[li];
+        s.depth.fetch_sub(1, Ordering::Relaxed);
+        match kind {
+            InferErrorKind::Expired => s.shed_expired.fetch_add(1, Ordering::Relaxed),
+            _ => s.shed_overload.fetch_add(1, Ordering::Relaxed),
+        };
+        let err = InferError { message, kind };
+        (entry.reply)(InferReply {
+            id: 0,
+            trace_id: entry.trace_id,
+            scores: Err(err),
+            queue_time: entry.admitted.elapsed(),
+            service_time: Duration::ZERO,
+            batch_size: 0,
+            shard: 0,
+            modeled_device_time: None,
+        });
+    }
+
+    /// Fail everything still queued with a typed reply (server shutdown:
+    /// conservation holds even for requests that never dispatched).
+    pub fn drain_shutdown(&self) {
+        let entries: Vec<LaneEntry> = {
+            let mut inner = lock_recover(&self.inner);
+            inner.queues.iter_mut().flat_map(|q| q.drain(..)).collect()
+        };
+        for entry in entries {
+            self.shed(
+                entry,
+                InferErrorKind::Overload,
+                "server shutting down before dispatch".to_string(),
+            );
+        }
+    }
+
+    /// Queued entries across both lanes (tests/shutdown bookkeeping).
+    pub fn depth(&self) -> usize {
+        let inner = lock_recover(&self.inner);
+        inner.queues.iter().map(|q| q.len()).sum()
+    }
+}
+
+enum Dispatch {
+    Done,
+    Blocked(LaneEntry),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{Backend, BatchResult};
+    use crate::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::mpsc;
+
+    struct EchoBackend;
+    impl Backend for EchoBackend {
+        fn name(&self) -> &str {
+            "echo"
+        }
+        fn infer_batch(&mut self, images: &[&[i32]]) -> anyhow::Result<BatchResult> {
+            Ok(BatchResult {
+                scores: images
+                    .iter()
+                    .map(|img| vec![img.first().copied().unwrap_or(0) as f32])
+                    .collect(),
+                modeled_device_time: None,
+            })
+        }
+    }
+
+    /// Backend that parks until released — lets tests saturate queues.
+    struct GateBackend(Arc<AtomicBool>);
+    impl Backend for GateBackend {
+        fn name(&self) -> &str {
+            "gate"
+        }
+        fn infer_batch(&mut self, images: &[&[i32]]) -> anyhow::Result<BatchResult> {
+            while !self.0.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Ok(BatchResult {
+                scores: images.iter().map(|_| vec![0.0]).collect(),
+                modeled_device_time: None,
+            })
+        }
+    }
+
+    fn pool(factory: impl Fn() -> Box<dyn Backend> + Send + Sync + 'static) -> Coordinator {
+        Coordinator::start_sharded(
+            Arc::new(move || Ok(factory())),
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 1,
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::ZERO },
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    fn collector() -> (Arc<dyn Fn(InferReply) + Send + Sync>, mpsc::Receiver<InferReply>) {
+        let (tx, rx) = mpsc::channel();
+        let tx = Mutex::new(tx);
+        (
+            Arc::new(move |r: InferReply| {
+                let _ = lock_recover(&tx).send(r);
+            }),
+            rx,
+        )
+    }
+
+    #[test]
+    fn admit_pump_dispatches_and_replies() {
+        let pool = pool(|| Box::new(EchoBackend));
+        let stats = FrontendStats::new_registered();
+        let qos = QosAdmission::new(QosConfig::default(), Arc::clone(&stats));
+        let (cb, rx) = collector();
+        qos.admit(vec![7], 1, Lane::Online, None, pool.client(), cb);
+        assert!(!qos.pump() || qos.depth() == 0);
+        let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(reply.scores.unwrap(), vec![7.0]);
+        let snap = stats.snapshot();
+        assert_eq!(snap.lane(Lane::Online).admitted, 1);
+        assert_eq!(snap.lane(Lane::Online).dispatched, 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn expired_entry_sheds_typed() {
+        // gate closed: the worker parks on the first request, the depth-1
+        // queue holds the second, so a third with a tiny deadline must shed
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        let pool = pool(move || Box::new(GateBackend(Arc::clone(&g))));
+        let stats = FrontendStats::new_registered();
+        let qos = QosAdmission::new(QosConfig::default(), Arc::clone(&stats));
+        let (cb, rx) = collector();
+        for _ in 0..2 {
+            qos.admit(vec![1], 0, Lane::Online, None, pool.client(), Arc::clone(&cb));
+        }
+        qos.pump(); // first dispatches (parks), second blocks on full queue
+        qos.admit(vec![2], 9, Lane::Online, Some(Duration::from_millis(5)), pool.client(), cb);
+        std::thread::sleep(Duration::from_millis(20));
+        // the deadlined entry is behind the blocked head; pump sheds it only
+        // once it reaches the head — but expiry also fires when the blocked
+        // head itself expires, so drive pumps until the shed lands
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut expired = None;
+        while Instant::now() < deadline {
+            qos.pump();
+            match rx.recv_timeout(Duration::from_millis(10)) {
+                Ok(r) => {
+                    if let Err(e) = &r.scores {
+                        if e.kind == InferErrorKind::Expired {
+                            expired = Some(e.clone());
+                            break;
+                        }
+                    }
+                }
+                Err(_) => continue,
+            }
+        }
+        let e = expired.expect("typed Expired shed");
+        assert!(e.message.contains("deadline expired"), "{}", e.message);
+        assert!(stats.snapshot().lane(Lane::Online).shed_expired >= 1);
+        gate.store(true, Ordering::Relaxed);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn lane_capacity_sheds_overload() {
+        let pool = pool(|| Box::new(EchoBackend));
+        let stats = FrontendStats::new_registered();
+        let cfg = QosConfig { lane_capacity: 2, ..Default::default() };
+        let qos = QosAdmission::new(cfg, Arc::clone(&stats));
+        let (cb, rx) = collector();
+        for _ in 0..3 {
+            qos.admit(vec![0], 0, Lane::Offline, None, pool.client(), Arc::clone(&cb));
+        }
+        // third admit overflowed capacity 2 and shed inline
+        let r = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        let e = r.scores.unwrap_err();
+        assert_eq!(e.kind, InferErrorKind::Overload);
+        assert!(e.message.contains("overloaded"), "{}", e.message);
+        assert_eq!(stats.snapshot().lane(Lane::Offline).shed_overload, 1);
+        qos.drain_shutdown();
+        pool.shutdown();
+    }
+
+    #[test]
+    fn drr_prefers_online_lane() {
+        // gated pool with queue_depth 1: each pump dispatches at most one
+        // entry; with 8:1 weights the online lane must drain first
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        let pool = pool(move || Box::new(GateBackend(Arc::clone(&g))));
+        let stats = FrontendStats::new_registered();
+        let qos = QosAdmission::new(QosConfig::default(), Arc::clone(&stats));
+        let (cb, _rx) = collector();
+        for _ in 0..4 {
+            qos.admit(vec![0], 0, Lane::Offline, None, pool.client(), Arc::clone(&cb));
+        }
+        for _ in 0..4 {
+            qos.admit(vec![0], 0, Lane::Online, None, pool.client(), Arc::clone(&cb));
+        }
+        qos.pump();
+        let snap = stats.snapshot();
+        // exactly one dispatch landed (worker parked + depth-1 queue =
+        // at most 2 in flight) and it came from the online lane
+        assert!(snap.lane(Lane::Online).dispatched >= 1);
+        assert_eq!(snap.lane(Lane::Offline).dispatched, 0);
+        gate.store(true, Ordering::Relaxed);
+        qos.drain_shutdown();
+        pool.shutdown();
+    }
+
+    #[test]
+    fn drain_shutdown_replies_to_everything() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        let pool = pool(move || Box::new(GateBackend(Arc::clone(&g))));
+        let stats = FrontendStats::new_registered();
+        let qos = QosAdmission::new(QosConfig::default(), Arc::clone(&stats));
+        let (cb, rx) = collector();
+        for _ in 0..5 {
+            qos.admit(vec![0], 0, Lane::Offline, None, pool.client(), Arc::clone(&cb));
+        }
+        qos.drain_shutdown();
+        let mut replies = 0;
+        while rx.recv_timeout(Duration::from_millis(200)).is_ok() {
+            replies += 1;
+        }
+        assert_eq!(replies, 5, "every queued request gets a typed reply");
+        assert_eq!(qos.depth(), 0);
+        gate.store(true, Ordering::Relaxed);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn weight_spec_parses() {
+        assert_eq!(parse_qos_weights("8:1").unwrap(), (8, 1));
+        assert_eq!(parse_qos_weights(" 3 : 2 ").unwrap(), (3, 2));
+        assert!(parse_qos_weights("8").is_err());
+        assert!(parse_qos_weights("0:1").is_err());
+        assert!(parse_qos_weights("a:b").is_err());
+    }
+
+    #[test]
+    fn frontend_json_always_has_lane_keys() {
+        let j = frontend_json();
+        let obj = j.as_obj().unwrap();
+        let keys: Vec<&str> = obj.keys().map(|k| k.as_str()).collect();
+        assert_eq!(keys, ["connections", "lanes", "paused_reads", "reactor_threads"]);
+        let lanes = obj.get("lanes").unwrap().as_obj().unwrap();
+        let lane_keys: Vec<&str> = lanes.keys().map(|k| k.as_str()).collect();
+        assert_eq!(lane_keys, ["offline", "online"]);
+    }
+}

@@ -1,0 +1,1012 @@
+//! Event-driven TCP front-end: a hand-rolled epoll reactor.
+//!
+//! Replaces the thread-per-connection accept loops with a small fixed pool
+//! of event-loop threads owning *nonblocking* multiplexed connections —
+//! the front-end shape the paper's host needs so thousands of online
+//! clients can hit the batch-insensitive datapath without a thread each.
+//!
+//! Design:
+//!
+//! * **Raw syscalls, no new deps.**  `epoll_create1`/`epoll_ctl`/
+//!   `epoll_wait`/`eventfd` via a thin `extern "C"` shim (std already
+//!   links libc on Linux).  Non-Linux builds keep the full protocol stack
+//!   but [`run_reactor`] reports unsupported and callers fall back to the
+//!   threaded accept loop ([`reactor_supported`]).
+//! * **Incremental frame decoding.**  Protocol logic lives behind
+//!   [`FrameService`]: the reactor hands it the connection's buffered
+//!   bytes, the service replies [`FrameOutcome`] — consume a frame, need
+//!   more bytes, start an oversized-payload discard, or close.  Requests
+//!   pipeline freely on one connection.
+//! * **Responses matched by request id.**  The reactor assigns each
+//!   decoded frame a per-connection sequence number; asynchronous replies
+//!   come back through a [`CompletionQueue`] (eventfd-woken) tagged with
+//!   that id, and a `BTreeMap` reorder stage guarantees replies hit the
+//!   wire in request order even when shards finish out of order.
+//! * **Write backpressure by interest re-registration.**  A slow reader's
+//!   outbound buffer crossing the high-water mark pauses that
+//!   connection's *read* interest (counted in
+//!   [`FrontendStats::paused_reads`]) instead of blocking the loop;
+//!   drained buffers re-arm it.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::qos::FrontendStats;
+use crate::util::sync::lock_recover;
+
+/// True when this build can run the epoll reactor (Linux).  Callers fall
+/// back to the threaded accept loop when false.
+pub fn reactor_supported() -> bool {
+    cfg!(target_os = "linux")
+}
+
+// ---------------------------------------------------------------------------
+// Service interface (cross-platform: protocol impls compile everywhere)
+
+/// What a [`FrameService`] decided about the bytes it was shown.
+pub enum FrameOutcome {
+    /// No complete frame yet — wait for more bytes.
+    Incomplete,
+    /// Consumed `.0` bytes; reply with `.1` immediately (in sequence).
+    Reply(usize, Vec<u8>),
+    /// Consumed `.0` bytes; an asynchronous reply will arrive later on the
+    /// ticket's completion queue under this frame's sequence number.
+    Pending(usize),
+    /// Consumed `consumed` bytes of header; swallow the next `skip` raw
+    /// payload bytes without parsing, replying `reply` first (oversized
+    /// frame: typed error, connection stays alive).
+    Discard { consumed: usize, skip: u64, reply: Vec<u8> },
+    /// Consumed `.0` bytes; clean client-initiated shutdown — flush
+    /// whatever is in flight, then close.
+    Close(usize),
+    /// Consumed `.0` bytes; reply with `.1`, then close (unrecoverable
+    /// framing: resynchronization is impossible).
+    Fatal(usize, Vec<u8>),
+}
+
+/// Handle a service uses to deliver an asynchronous reply for one frame.
+/// Cheap to clone; delivering more than once for the same ticket would
+/// wedge the connection's reorder stage, so services must deliver exactly
+/// once per `Pending` outcome.
+#[derive(Clone)]
+pub struct ReplyTicket {
+    queue: Arc<CompletionQueue>,
+    token: u64,
+    seq: u64,
+    trace_id: u64,
+}
+
+impl ReplyTicket {
+    /// The trace id minted for this frame (threads read→dispatch→write
+    /// spans together; services carry it into wire replies).
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
+    }
+
+    /// Deliver the wire reply for this frame (thread-safe, any thread).
+    pub fn deliver(&self, bytes: Vec<u8>) {
+        self.queue.push(Completion {
+            token: self.token,
+            seq: self.seq,
+            trace_id: self.trace_id,
+            t_push_ns: crate::obs::now_ns(),
+            bytes,
+        });
+    }
+}
+
+/// A wire protocol served by the reactor: incremental decode + dispatch.
+pub trait FrameService: Send + Sync {
+    /// Inspect `buf` (everything buffered on one connection).  If it holds
+    /// a complete frame, consume and act on it; `ticket` is this frame's
+    /// reply handle (only meaningful for [`FrameOutcome::Pending`]).
+    fn on_frame(&self, buf: &[u8], ticket: ReplyTicket) -> FrameOutcome;
+
+    /// Called once per event-loop iteration on every loop thread (QoS
+    /// pump, registry housekeeping).  Return `true` while queued work
+    /// remains so the loop polls with a short timeout.
+    fn on_loop_tick(&self) -> bool {
+        false
+    }
+
+    /// Called once after every loop thread has exited (drain queued
+    /// admissions with typed replies).
+    fn on_shutdown(&self) {}
+}
+
+// ---------------------------------------------------------------------------
+// Completion queue: async replies routed back to the owning loop thread
+
+struct Completion {
+    token: u64,
+    seq: u64,
+    trace_id: u64,
+    t_push_ns: u64,
+    bytes: Vec<u8>,
+}
+
+/// Per-loop-thread completion mailbox.  Owns the eventfd that wakes its
+/// loop (kept alive by the `Arc` inside every outstanding [`ReplyTicket`],
+/// so a late completion can never write into a recycled fd).
+pub struct CompletionQueue {
+    items: Mutex<Vec<Completion>>,
+    wake: WakeFd,
+}
+
+impl CompletionQueue {
+    fn new() -> std::io::Result<Arc<CompletionQueue>> {
+        Ok(Arc::new(CompletionQueue { items: Mutex::new(Vec::new()), wake: WakeFd::new()? }))
+    }
+
+    fn push(&self, c: Completion) {
+        lock_recover(&self.items).push(c);
+        self.wake.wake();
+    }
+
+    fn drain(&self) -> Vec<Completion> {
+        std::mem::take(&mut *lock_recover(&self.items))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Linux: eventfd + epoll wrappers
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_NONBLOCK: c_int = 0o4000;
+
+    /// Mirrors `struct epoll_event`; packed on x86_64 (kernel ABI).
+    #[derive(Clone, Copy)]
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: u32, flags: c_int) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    }
+
+    pub fn cvt(ret: c_int) -> std::io::Result<c_int> {
+        if ret < 0 {
+            Err(std::io::Error::last_os_error())
+        } else {
+            Ok(ret)
+        }
+    }
+}
+
+/// Eventfd-backed waker (no-op stub off Linux so the service types still
+/// compile; the reactor itself never runs there).
+#[cfg(target_os = "linux")]
+struct WakeFd {
+    fd: i32,
+}
+
+#[cfg(target_os = "linux")]
+impl WakeFd {
+    fn new() -> std::io::Result<WakeFd> {
+        let fd = sys::cvt(unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) })?;
+        Ok(WakeFd { fd })
+    }
+
+    fn wake(&self) {
+        let one: u64 = 1;
+        // EAGAIN (counter saturated) still leaves the fd readable: fine
+        unsafe {
+            let _ = sys::write(self.fd, (&one as *const u64).cast(), 8);
+        }
+    }
+
+    fn drain(&self) {
+        let mut buf = [0u8; 8];
+        loop {
+            let n = unsafe { sys::read(self.fd, buf.as_mut_ptr().cast(), 8) };
+            if n <= 0 {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for WakeFd {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.fd);
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+struct WakeFd;
+
+#[cfg(not(target_os = "linux"))]
+impl WakeFd {
+    fn new() -> std::io::Result<WakeFd> {
+        Ok(WakeFd)
+    }
+
+    fn wake(&self) {}
+}
+
+#[cfg(target_os = "linux")]
+struct Epoll {
+    fd: i32,
+}
+
+#[cfg(target_os = "linux")]
+impl Epoll {
+    fn new() -> std::io::Result<Epoll> {
+        let fd = sys::cvt(unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) })?;
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: std::os::raw::c_int, fd: i32, token: u64, mask: u32) -> std::io::Result<()> {
+        let mut ev = sys::EpollEvent { events: mask, data: token };
+        sys::cvt(unsafe { sys::epoll_ctl(self.fd, op, fd, &mut ev) })?;
+        Ok(())
+    }
+
+    fn add(&self, fd: i32, token: u64, mask: u32) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, mask)
+    }
+
+    fn modify(&self, fd: i32, token: u64, mask: u32) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, mask)
+    }
+
+    fn wait(&self, events: &mut [sys::EpollEvent], timeout_ms: i32) -> std::io::Result<usize> {
+        loop {
+            let n = unsafe {
+                sys::epoll_wait(self.fd, events.as_mut_ptr(), events.len() as i32, timeout_ms)
+            };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let err = std::io::Error::last_os_error();
+            if err.kind() != std::io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.fd);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reactor entry point
+
+/// Run the reactor: the calling thread becomes the accept loop, `threads`
+/// event-loop workers own the connections (round-robin handoff).  Returns
+/// when `stop` is set and every worker has exited; `on_idle` runs on the
+/// accept thread between accepts (registry housekeeping).
+///
+/// Off Linux this errors immediately — check [`reactor_supported`] first.
+#[cfg(not(target_os = "linux"))]
+pub fn run_reactor(
+    _listener: std::net::TcpListener,
+    _stop: Arc<std::sync::atomic::AtomicBool>,
+    _service: Arc<dyn FrameService>,
+    _threads: usize,
+    _stats: Arc<FrontendStats>,
+    _on_idle: impl FnMut(),
+) -> anyhow::Result<()> {
+    anyhow::bail!("epoll reactor unsupported on this platform (use the threaded front-end)")
+}
+
+#[cfg(target_os = "linux")]
+pub fn run_reactor(
+    listener: std::net::TcpListener,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    service: Arc<dyn FrameService>,
+    threads: usize,
+    stats: Arc<FrontendStats>,
+    mut on_idle: impl FnMut(),
+) -> anyhow::Result<()> {
+    use anyhow::Context;
+
+    let threads = threads.max(1);
+    let instance = crate::obs::next_instance_id();
+    stats.reactor_threads.store(threads, Ordering::Relaxed);
+
+    // build all workers up front so fd allocation failures surface here
+    let mut workers = Vec::with_capacity(threads);
+    for i in 0..threads {
+        workers.push(Worker::new(i as u32, instance, Arc::clone(&service), Arc::clone(&stats))?)
+    }
+    let inboxes: Vec<(Arc<Mutex<Vec<std::net::TcpStream>>>, Arc<CompletionQueue>)> =
+        workers.iter().map(|w| (Arc::clone(&w.incoming), Arc::clone(&w.comp))).collect();
+
+    let handles: Vec<std::thread::JoinHandle<()>> = workers
+        .into_iter()
+        .map(|mut w| {
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name(format!("reactor{}", w.index))
+                .spawn(move || w.run(&stop))
+                .expect("spawn reactor worker")
+        })
+        .collect();
+
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let mut rr = 0usize;
+    let mut accept_err = None;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let (inbox, comp) = &inboxes[rr % inboxes.len()];
+                rr = rr.wrapping_add(1);
+                lock_recover(inbox).push(stream);
+                comp.wake.wake();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                on_idle();
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                accept_err = Some(e);
+                stop.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+    // wake everyone so the stop flag is seen promptly
+    for (_, comp) in &inboxes {
+        comp.wake.wake();
+    }
+    for h in handles {
+        h.join().map_err(|p| {
+            anyhow::anyhow!("reactor worker panicked: {}", crate::util::sync::panic_message(&*p))
+        })?;
+    }
+    service.on_shutdown();
+    match accept_err {
+        Some(e) => Err(anyhow::anyhow!("accept: {e}")),
+        None => Ok(()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker: one event loop thread
+
+/// Outbound buffer high-water mark: beyond this the connection's read
+/// interest is paused (write backpressure) until it drains below
+/// [`WBUF_LOW`].  Deliberately small so a slow reader trips it quickly.
+#[cfg(target_os = "linux")]
+const WBUF_HIGH: usize = 64 * 1024;
+#[cfg(target_os = "linux")]
+const WBUF_LOW: usize = 16 * 1024;
+
+/// Max reads (of `READ_CHUNK`) per readiness event: bounds time spent on
+/// one connection so a firehose peer cannot starve its loop siblings
+/// (level-triggered epoll re-reports leftover data immediately).
+#[cfg(target_os = "linux")]
+const READS_PER_EVENT: usize = 4;
+#[cfg(target_os = "linux")]
+const READ_CHUNK: usize = 64 * 1024;
+
+/// Oversized-payload discards must complete within this bound or the
+/// connection is dropped (mirrors the threaded path's `DISCARD_TIMEOUT`).
+#[cfg(target_os = "linux")]
+const DISCARD_TIMEOUT: Duration = Duration::from_secs(10);
+
+#[cfg(target_os = "linux")]
+const WAKE_TOKEN: u64 = u64::MAX;
+
+#[cfg(target_os = "linux")]
+struct Worker {
+    index: u32,
+    ep: Epoll,
+    conns: std::collections::HashMap<u64, Conn>,
+    comp: Arc<CompletionQueue>,
+    incoming: Arc<Mutex<Vec<std::net::TcpStream>>>,
+    service: Arc<dyn FrameService>,
+    stats: Arc<FrontendStats>,
+    ring: Arc<crate::obs::SpanRing>,
+    next_token: u64,
+}
+
+#[cfg(target_os = "linux")]
+impl Worker {
+    fn new(
+        index: u32,
+        instance: u32,
+        service: Arc<dyn FrameService>,
+        stats: Arc<FrontendStats>,
+    ) -> std::io::Result<Worker> {
+        let ep = Epoll::new()?;
+        let comp = CompletionQueue::new()?;
+        ep.add(comp.wake.fd, WAKE_TOKEN, sys::EPOLLIN)?;
+        Ok(Worker {
+            index,
+            ep,
+            conns: std::collections::HashMap::new(),
+            comp,
+            incoming: Arc::new(Mutex::new(Vec::new())),
+            service,
+            stats,
+            ring: crate::obs::SpanRing::new(
+                format!("frontend{instance}/loop{index}"),
+                crate::obs::DEFAULT_RING_CAPACITY,
+            ),
+            // workers interleave token allocation: token % threads == index
+            next_token: u64::from(index),
+        })
+    }
+
+    fn run(&mut self, stop: &std::sync::atomic::AtomicBool) {
+        let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 256];
+        let mut scratch = vec![0u8; READ_CHUNK];
+        let mut lanes_pending = false;
+        while !stop.load(Ordering::Relaxed) {
+            let timeout = if lanes_pending { 1 } else { 10 };
+            let n = match self.ep.wait(&mut events, timeout) {
+                Ok(n) => n,
+                Err(_) => break,
+            };
+            for i in 0..n {
+                let ev = events[i];
+                let token = ev.data;
+                let bits = ev.events;
+                if token == WAKE_TOKEN {
+                    self.comp.wake.drain();
+                    continue;
+                }
+                if bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+                    self.drop_conn(token);
+                    continue;
+                }
+                if bits & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0 {
+                    self.read_token(token, &mut scratch);
+                }
+                if bits & sys::EPOLLOUT != 0 {
+                    self.flush_token(token);
+                }
+            }
+            self.adopt_incoming();
+            self.route_completions();
+            lanes_pending = self.service.on_loop_tick();
+            self.sweep_discards();
+        }
+        // shutdown: connections drop (close); queued replies are lost the
+        // same way the threaded path loses them — peers see EOF
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            self.drop_conn(t);
+        }
+    }
+
+    fn adopt_incoming(&mut self) {
+        let fresh: Vec<std::net::TcpStream> = {
+            let mut inbox = lock_recover(&self.incoming);
+            std::mem::take(&mut *inbox)
+        };
+        for stream in fresh {
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            let _ = stream.set_nodelay(true);
+            let token = self.next_token;
+            // stride by a constant so tokens stay unique per worker without
+            // cross-thread coordination (worker w owns token % stride == w)
+            self.next_token = self.next_token.wrapping_add(TOKEN_STRIDE);
+            let fd = {
+                use std::os::unix::io::AsRawFd;
+                stream.as_raw_fd()
+            };
+            let conn = Conn::new(stream, token);
+            if self.ep.add(fd, token, conn.mask()).is_err() {
+                continue;
+            }
+            self.conns.insert(token, conn);
+            self.stats.connections.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn read_token(&mut self, token: u64, scratch: &mut [u8]) {
+        let alive = {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                return;
+            };
+            conn.handle_read(
+                scratch,
+                self.service.as_ref(),
+                &self.comp,
+                &self.ring,
+                self.index,
+            )
+        };
+        if !alive {
+            self.drop_conn(token);
+        } else {
+            self.flush_token(token);
+        }
+    }
+
+    fn flush_token(&mut self, token: u64) {
+        let alive = {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                return;
+            };
+            conn.flush(&self.ep, &self.stats)
+        };
+        if !alive {
+            self.drop_conn(token);
+        }
+    }
+
+    fn route_completions(&mut self) {
+        let completions = self.comp.drain();
+        if completions.is_empty() {
+            return;
+        }
+        let mut touched: Vec<u64> = Vec::with_capacity(completions.len());
+        let traced = crate::obs::enabled();
+        let now = crate::obs::now_ns();
+        for c in completions {
+            if let Some(conn) = self.conns.get_mut(&c.token) {
+                if traced {
+                    self.ring.record(&crate::obs::SpanEvent {
+                        trace_id: c.trace_id,
+                        kind: crate::obs::SpanKind::Write,
+                        t_start_ns: c.t_push_ns,
+                        t_end_ns: now,
+                        shard: self.index,
+                        layer: None,
+                        batch: 1,
+                    });
+                }
+                conn.pending.insert(c.seq, c.bytes);
+                if !touched.contains(&c.token) {
+                    touched.push(c.token);
+                }
+            }
+            // token already gone: the peer vanished before its reply did
+        }
+        for token in touched {
+            self.flush_token(token);
+        }
+    }
+
+    fn sweep_discards(&mut self) {
+        let overdue: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| {
+                c.discard > 0
+                    && c.discard_started.map(|t| t.elapsed() > DISCARD_TIMEOUT).unwrap_or(false)
+            })
+            .map(|(t, _)| *t)
+            .collect();
+        for token in overdue {
+            self.drop_conn(token);
+        }
+    }
+
+    fn drop_conn(&mut self, token: u64) {
+        if self.conns.remove(&token).is_some() {
+            self.stats.connections.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Token allocation stride (max loop threads a front-end may run).
+#[cfg(target_os = "linux")]
+const TOKEN_STRIDE: u64 = 64;
+
+// ---------------------------------------------------------------------------
+// Conn: one multiplexed connection's state machine
+
+#[cfg(target_os = "linux")]
+struct Conn {
+    stream: std::net::TcpStream,
+    token: u64,
+    /// Inbound bytes not yet consumed (`rpos` = consumed prefix).
+    rbuf: Vec<u8>,
+    rpos: usize,
+    /// Replies waiting for earlier sequence numbers (reorder stage).
+    pending: BTreeMap<u64, Vec<u8>>,
+    /// In-order outbound bytes (`wpos` = written prefix).
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Next sequence number to assign to a decoded frame.
+    next_seq: u64,
+    /// Next sequence number to move into `wbuf`.
+    next_write: u64,
+    /// Oversized-payload bytes still to swallow unparsed.
+    discard: u64,
+    discard_started: Option<std::time::Instant>,
+    /// Peer closed its write half (EOF / RDHUP).
+    read_closed: bool,
+    /// Flush in-flight replies, then close.
+    closing: bool,
+    /// Read interest withdrawn for write backpressure.
+    paused: bool,
+    /// Interest mask currently registered with epoll.
+    registered_mask: u32,
+    /// `now_ns` when the current partial frame's first byte arrived.
+    t_first_byte: Option<u64>,
+}
+
+#[cfg(target_os = "linux")]
+impl Conn {
+    fn new(stream: std::net::TcpStream, token: u64) -> Conn {
+        Conn {
+            stream,
+            token,
+            rbuf: Vec::new(),
+            rpos: 0,
+            pending: BTreeMap::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            next_seq: 0,
+            next_write: 0,
+            discard: 0,
+            discard_started: None,
+            read_closed: false,
+            closing: false,
+            paused: false,
+            registered_mask: sys::EPOLLIN | sys::EPOLLRDHUP,
+            t_first_byte: None,
+        }
+    }
+
+    fn mask(&self) -> u32 {
+        let mut m = sys::EPOLLRDHUP;
+        if !(self.paused || self.closing || self.read_closed) {
+            m |= sys::EPOLLIN;
+        }
+        if self.wbuf.len() > self.wpos {
+            m |= sys::EPOLLOUT;
+        }
+        m
+    }
+
+    /// Read + parse until `WouldBlock` (bounded).  Returns false when the
+    /// connection must be dropped.
+    fn handle_read(
+        &mut self,
+        scratch: &mut [u8],
+        service: &dyn FrameService,
+        comp: &Arc<CompletionQueue>,
+        ring: &crate::obs::SpanRing,
+        worker: u32,
+    ) -> bool {
+        use std::io::Read;
+        if self.paused || self.closing {
+            return true;
+        }
+        for _ in 0..READS_PER_EVENT {
+            match self.stream.read(scratch) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.ingest(&scratch[..n]);
+                    if !self.parse(service, comp, ring, worker) {
+                        return false;
+                    }
+                    if n < scratch.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        if self.read_closed {
+            // drain whatever was already buffered before the EOF
+            if !self.parse(service, comp, ring, worker) {
+                return false;
+            }
+            let input_done = self.rpos >= self.rbuf.len() && self.discard == 0;
+            let in_flight = self.next_write < self.next_seq;
+            if input_done && !in_flight && self.wbuf.len() == self.wpos {
+                return false; // nothing left to say
+            }
+        }
+        true
+    }
+
+    fn ingest(&mut self, bytes: &[u8]) {
+        self.rbuf.extend_from_slice(bytes);
+    }
+
+    /// Run the service over buffered bytes until it needs more.
+    fn parse(
+        &mut self,
+        service: &dyn FrameService,
+        comp: &Arc<CompletionQueue>,
+        ring: &crate::obs::SpanRing,
+        worker: u32,
+    ) -> bool {
+        loop {
+            // swallow an in-progress oversized payload unparsed
+            if self.discard > 0 {
+                let avail = (self.rbuf.len() - self.rpos) as u64;
+                let take = self.discard.min(avail);
+                self.rpos += take as usize;
+                self.discard -= take;
+                if self.discard > 0 {
+                    break;
+                }
+                self.discard_started = None;
+            }
+            if self.closing || self.rpos >= self.rbuf.len() {
+                break;
+            }
+            if self.t_first_byte.is_none() {
+                self.t_first_byte = Some(crate::obs::now_ns());
+            }
+            let ticket = ReplyTicket {
+                queue: Arc::clone(comp),
+                token: self.token,
+                seq: self.next_seq,
+                trace_id: crate::obs::mint_trace_id(),
+            };
+            let trace_id = ticket.trace_id;
+            let outcome = service.on_frame(&self.rbuf[self.rpos..], ticket);
+            let consumed = match outcome {
+                FrameOutcome::Incomplete => break,
+                FrameOutcome::Reply(consumed, bytes) => {
+                    self.pending.insert(self.next_seq, bytes);
+                    self.next_seq += 1;
+                    consumed
+                }
+                FrameOutcome::Pending(consumed) => {
+                    self.next_seq += 1;
+                    consumed
+                }
+                FrameOutcome::Discard { consumed, skip, reply } => {
+                    self.pending.insert(self.next_seq, reply);
+                    self.next_seq += 1;
+                    self.discard = skip;
+                    self.discard_started = Some(std::time::Instant::now());
+                    consumed
+                }
+                FrameOutcome::Close(consumed) => {
+                    self.closing = true;
+                    consumed
+                }
+                FrameOutcome::Fatal(consumed, bytes) => {
+                    self.pending.insert(self.next_seq, bytes);
+                    self.next_seq += 1;
+                    self.closing = true;
+                    consumed
+                }
+            };
+            self.rpos += consumed;
+            if crate::obs::enabled() {
+                let t_end = crate::obs::now_ns();
+                ring.record(&crate::obs::SpanEvent {
+                    trace_id,
+                    kind: crate::obs::SpanKind::Read,
+                    t_start_ns: self.t_first_byte.unwrap_or(t_end),
+                    t_end_ns: t_end,
+                    shard: worker,
+                    layer: None,
+                    batch: 1,
+                });
+            }
+            self.t_first_byte = None;
+        }
+        // compact the consumed prefix
+        if self.rpos > 0 {
+            self.rbuf.drain(..self.rpos);
+            self.rpos = 0;
+        }
+        true
+    }
+
+    /// Stage in-order replies, write what the socket accepts, manage
+    /// interest + backpressure.  Returns false when the connection is done.
+    fn flush(&mut self, ep: &Epoll, stats: &FrontendStats) -> bool {
+        use std::io::Write;
+        // reorder stage -> in-order outbound buffer
+        while let Some(bytes) = self.pending.remove(&self.next_write) {
+            self.wbuf.extend_from_slice(&bytes);
+            self.next_write += 1;
+        }
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return false,
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > WBUF_HIGH {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        let outstanding = self.wbuf.len() - self.wpos;
+        // write backpressure: pause reads rather than buffer unboundedly
+        if !self.paused && outstanding > WBUF_HIGH {
+            self.paused = true;
+            stats.paused_reads.fetch_add(1, Ordering::Relaxed);
+        } else if self.paused && outstanding < WBUF_LOW {
+            self.paused = false;
+        }
+        let in_flight = self.next_write < self.next_seq;
+        if (self.closing || self.read_closed) && !in_flight && outstanding == 0 {
+            let input_done = self.closing || (self.rpos >= self.rbuf.len() && self.discard == 0);
+            if input_done {
+                return false;
+            }
+        }
+        let want = self.mask();
+        if want != self.registered_mask {
+            let fd = {
+                use std::os::unix::io::AsRawFd;
+                self.stream.as_raw_fd()
+            };
+            if ep.modify(fd, self.token, want).is_err() {
+                return false;
+            }
+            self.registered_mask = want;
+        }
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::atomic::AtomicBool;
+
+    /// Toy protocol: 1-byte length + payload; reply = same frame echoed.
+    /// Length 0 = close.  Odd first byte => reply delivered asynchronously
+    /// from a helper thread (exercises the completion queue + reordering).
+    struct EchoService;
+
+    impl FrameService for EchoService {
+        fn on_frame(&self, buf: &[u8], ticket: ReplyTicket) -> FrameOutcome {
+            let len = buf[0] as usize;
+            if len == 0 {
+                return FrameOutcome::Close(1);
+            }
+            if buf.len() < 1 + len {
+                return FrameOutcome::Incomplete;
+            }
+            let payload = buf[1..1 + len].to_vec();
+            let mut reply = vec![len as u8];
+            reply.extend_from_slice(&payload);
+            if payload[0] % 2 == 1 {
+                // async path: deliver from another thread after a beat so a
+                // later even frame's inline reply must wait for this seq
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_millis(5));
+                    ticket.deliver(reply);
+                });
+                FrameOutcome::Pending(1 + len)
+            } else {
+                FrameOutcome::Reply(1 + len, reply)
+            }
+        }
+    }
+
+    type Running =
+        (std::net::SocketAddr, Arc<AtomicBool>, std::thread::JoinHandle<anyhow::Result<()>>);
+
+    fn start(service: Arc<dyn FrameService>) -> Running {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = FrontendStats::new_registered();
+        let s = Arc::clone(&stop);
+        let h = std::thread::spawn(move || run_reactor(listener, s, service, 2, stats, || ()));
+        (addr, stop, h)
+    }
+
+    fn read_exact_frame(stream: &mut TcpStream) -> Vec<u8> {
+        let mut len = [0u8; 1];
+        stream.read_exact(&mut len).unwrap();
+        let mut payload = vec![0u8; len[0] as usize];
+        stream.read_exact(&mut payload).unwrap();
+        payload
+    }
+
+    #[test]
+    fn echo_round_trip_and_split_frames() {
+        let (addr, stop, h) = start(Arc::new(EchoService));
+        let mut c = TcpStream::connect(addr).unwrap();
+        // frame split across three writes
+        c.write_all(&[3]).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        c.write_all(&[2, 4]).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        c.write_all(&[6]).unwrap();
+        assert_eq!(read_exact_frame(&mut c), vec![2, 4, 6]);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn pipelined_replies_come_back_in_request_order() {
+        let (addr, stop, h) = start(Arc::new(EchoService));
+        let mut c = TcpStream::connect(addr).unwrap();
+        // odd payloads reply async-late, even ones inline: order must hold
+        let mut burst = Vec::new();
+        for v in [1u8, 2, 3, 4, 5, 6] {
+            burst.extend_from_slice(&[1, v]);
+        }
+        c.write_all(&burst).unwrap();
+        for v in [1u8, 2, 3, 4, 5, 6] {
+            assert_eq!(read_exact_frame(&mut c), vec![v], "reply order broke at {v}");
+        }
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn many_connections_multiplex_on_two_loops() {
+        let (addr, stop, h) = start(Arc::new(EchoService));
+        let mut conns: Vec<TcpStream> =
+            (0..32).map(|_| TcpStream::connect(addr).unwrap()).collect();
+        for (i, c) in conns.iter_mut().enumerate() {
+            c.write_all(&[2, (i % 128) as u8, 2]).unwrap();
+        }
+        for (i, c) in conns.iter_mut().enumerate() {
+            assert_eq!(read_exact_frame(c), vec![(i % 128) as u8, 2]);
+        }
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn close_frame_closes_cleanly() {
+        let (addr, stop, h) = start(Arc::new(EchoService));
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(&[2, 8, 8, 0]).unwrap(); // one frame, then close marker
+        assert_eq!(read_exact_frame(&mut c), vec![8, 8]);
+        let mut tail = Vec::new();
+        c.read_to_end(&mut tail).unwrap(); // server closes after flushing
+        assert!(tail.is_empty());
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap().unwrap();
+    }
+}

@@ -1,8 +1,45 @@
 //! Request/reply types flowing through the coordinator.
 
 use std::fmt;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
+
+/// Where a reply goes.  Blocking submitters hold the receiving half of a
+/// per-request channel; the event-driven TCP front-end instead registers
+/// a completion callback (invoked exactly once, on whichever thread
+/// finishes the request — a shard worker, the QoS scheduler on a shed,
+/// or the breaker on a drain).
+#[derive(Clone)]
+pub enum ReplyTo {
+    /// Per-request channel: the submitter blocks on the receiver.
+    Channel(mpsc::Sender<InferReply>),
+    /// Asynchronous completion callback (event-driven front-end).
+    Callback(Arc<dyn Fn(InferReply) + Send + Sync>),
+}
+
+impl ReplyTo {
+    /// Deliver the reply.  Mirrors `mpsc::Sender::send` so reply sites
+    /// are agnostic to how the submitter waits; a callback cannot
+    /// observe a hung-up peer, so it always reports success.
+    pub fn send(&self, reply: InferReply) -> Result<(), mpsc::SendError<InferReply>> {
+        match self {
+            ReplyTo::Channel(tx) => tx.send(reply),
+            ReplyTo::Callback(f) => {
+                f(reply);
+                Ok(())
+            }
+        }
+    }
+}
+
+impl fmt::Debug for ReplyTo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReplyTo::Channel(_) => write!(f, "ReplyTo::Channel"),
+            ReplyTo::Callback(_) => write!(f, "ReplyTo::Callback"),
+        }
+    }
+}
 
 /// A classification request: one image, NHWC `i32` in the 6-bit range.
 #[derive(Debug)]
@@ -14,19 +51,53 @@ pub struct InferRequest {
     pub trace_id: u64,
     pub image: Vec<i32>,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<InferReply>,
+    pub reply: ReplyTo,
 }
 
-/// Typed backend failure carried back to the client (no silent drops:
-/// when `infer_batch` errors, every request in the batch receives this).
+/// Why a request failed, beyond the human-readable message.  The wire
+/// front-ends map `Expired` to a typed expired frame (protocol v2 QoS)
+/// so deadline sheds are distinguishable from backend faults.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InferErrorKind {
+    /// The backend (or its supervision) failed the batch.
+    Backend,
+    /// The QoS admission layer shed the request past its deadline.
+    Expired,
+    /// The admission layer shed the request for capacity (lane full or
+    /// the dispatch wait bound elapsed) — overload, not a deadline miss.
+    Overload,
+}
+
+/// Typed request failure carried back to the client (no silent drops:
+/// when `infer_batch` errors, every request in the batch receives this;
+/// when the QoS layer sheds, the shed request receives one too).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct InferError {
     pub message: String,
+    pub kind: InferErrorKind,
+}
+
+impl InferError {
+    pub fn backend(message: impl Into<String>) -> Self {
+        Self { message: message.into(), kind: InferErrorKind::Backend }
+    }
+
+    pub fn expired(message: impl Into<String>) -> Self {
+        Self { message: message.into(), kind: InferErrorKind::Expired }
+    }
+
+    pub fn overload(message: impl Into<String>) -> Self {
+        Self { message: message.into(), kind: InferErrorKind::Overload }
+    }
 }
 
 impl fmt::Display for InferError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "backend error: {}", self.message)
+        match self.kind {
+            InferErrorKind::Backend => write!(f, "backend error: {}", self.message),
+            InferErrorKind::Expired => write!(f, "expired: {}", self.message),
+            InferErrorKind::Overload => write!(f, "overloaded: {}", self.message),
+        }
     }
 }
 
@@ -132,9 +203,29 @@ mod tests {
 
     #[test]
     fn argmax_none_on_error() {
-        let r = reply(Err(InferError { message: "boom".into() }));
+        let r = reply(Err(InferError::backend("boom")));
         assert_eq!(r.argmax(), None);
         assert!(r.ok_scores().is_err());
+    }
+
+    #[test]
+    fn error_kinds_render_distinctly() {
+        assert_eq!(InferError::backend("x").to_string(), "backend error: x");
+        assert_eq!(InferError::expired("x").to_string(), "expired: x");
+        assert_eq!(InferError::overload("x").to_string(), "overloaded: x");
+        assert_eq!(InferError::expired("x").kind, InferErrorKind::Expired);
+    }
+
+    #[test]
+    fn reply_to_callback_delivers_inline() {
+        use std::sync::Mutex;
+        let got: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&got);
+        let cb = ReplyTo::Callback(Arc::new(move |r: InferReply| {
+            sink.lock().unwrap().push(r.id);
+        }));
+        cb.send(reply(Ok(vec![]))).unwrap();
+        assert_eq!(*got.lock().unwrap(), vec![0]);
     }
 
     #[test]

@@ -37,7 +37,11 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::backend::{Backend, BackendFactory};
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Msg};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{InferError, InferReply, InferRequest, SubmitError};
+use crate::coordinator::qos::{FrontendConfig, FrontendStats, Lane, QosAdmission};
+use crate::coordinator::reactor::{
+    reactor_supported, run_reactor, FrameOutcome, FrameService, ReplyTicket,
+};
+use crate::coordinator::request::{InferError, InferReply, InferRequest, ReplyTo, SubmitError};
 use crate::coordinator::supervisor::{PoolHealth, RestartPolicy, ShardHealth, ShardState};
 use crate::obs::{self, SpanEvent, SpanKind, SpanRing};
 use crate::util::faults;
@@ -118,6 +122,22 @@ impl Client {
     /// re-allocating; `ShardDown` means every worker is dead without a
     /// graceful shutdown — callers should fail over.
     pub fn submit(&self, image: Vec<i32>) -> std::result::Result<Receiver<InferReply>, SubmitError> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        // trace identity is minted at admission and rides the request
+        // end-to-end; the admission span covers dispatch + queue handoff
+        self.submit_with(image, obs::mint_trace_id(), ReplyTo::Channel(reply_tx))?;
+        Ok(reply_rx)
+    }
+
+    /// `submit` with an explicit trace id and reply destination — the
+    /// event-driven front-end registers a completion callback instead of
+    /// blocking on a channel.  Same dispatch policy and errors.
+    pub fn submit_with(
+        &self,
+        image: Vec<i32>,
+        trace_id: u64,
+        reply: ReplyTo,
+    ) -> std::result::Result<(), SubmitError> {
         if faults::fire(faults::SITE_SUBMIT) {
             // injected queue-full storm: indistinguishable from real
             // backpressure, so retry loops get exercised end-to-end
@@ -136,18 +156,14 @@ impl Client {
             .collect();
         order.sort_by_key(|&(depth, _)| depth);
 
-        let (reply_tx, reply_rx) = mpsc::channel();
-        // trace identity is minted at admission and rides the request
-        // end-to-end; the admission span covers dispatch + queue handoff
         let tracing = obs::enabled();
         let admit_start = if tracing { obs::now_ns() } else { 0 };
-        let trace_id = obs::mint_trace_id();
         let mut msg = Msg::Req(InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             trace_id,
             image,
             enqueued: Instant::now(),
-            reply: reply_tx,
+            reply,
         });
         let mut dead = 0usize;
         for &(_, i) in &order {
@@ -173,7 +189,7 @@ impl Client {
                             batch: 0,
                         });
                     }
-                    return Ok(reply_rx);
+                    return Ok(());
                 }
                 Err(TrySendError::Full(m)) => {
                     self.shards[i].depth.fetch_sub(1, Ordering::Relaxed);
@@ -600,7 +616,7 @@ fn trip_breaker(
         let _ = req.reply.send(InferReply {
             id: req.id,
             trace_id: req.trace_id,
-            scores: Err(InferError { message: message.clone() }),
+            scores: Err(InferError::backend(message.clone())),
             queue_time,
             service_time: Duration::ZERO,
             batch_size: 0,
@@ -767,7 +783,7 @@ fn shard_loop(
                     let _ = req.reply.send(InferReply {
                         id: req.id,
                         trace_id: req.trace_id,
-                        scores: Err(InferError { message: message.clone() }),
+                        scores: Err(InferError::backend(message.clone())),
                         queue_time,
                         service_time: service,
                         batch_size: batch_len,
@@ -817,38 +833,181 @@ pub(crate) fn serve_connections(
     listener: TcpListener,
     stop: Arc<AtomicBool>,
     handler: Arc<dyn Fn(TcpStream) + Send + Sync>,
+    on_idle: impl FnMut(),
+) -> Result<()> {
+    serve_connections_gauged(listener, stop, handler, on_idle, Arc::new(AtomicUsize::new(0)))
+}
+
+/// `serve_connections` with an observable live-handler gauge: `live`
+/// tracks the join list's length after reaping, so tests can assert that
+/// connection churn does not leak finished handler threads.
+pub(crate) fn serve_connections_gauged(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    handler: Arc<dyn Fn(TcpStream) + Send + Sync>,
     mut on_idle: impl FnMut(),
+    live: Arc<AtomicUsize>,
 ) -> Result<()> {
     listener.set_nonblocking(true).context("nonblocking listener")?;
     let mut conns: Vec<JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, _addr)) => {
-                // long-lived servers churn many short connections: drop
-                // finished handlers so the list doesn't grow unboundedly
                 conns.retain(|c| !c.is_finished());
                 let handler = Arc::clone(&handler);
                 conns.push(std::thread::spawn(move || handler(stream)));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // reap on idle too — a server accepting one long-lived
+                // connection after thousands of short ones must not hold
+                // thousands of finished JoinHandles until the next accept
+                conns.retain(|c| !c.is_finished());
                 on_idle();
                 std::thread::sleep(Duration::from_millis(2));
             }
             Err(e) => bail!("accept: {e}"),
         }
+        live.store(conns.len(), Ordering::Relaxed);
     }
     for c in conns {
         let _ = c.join();
     }
+    live.store(0, Ordering::Relaxed);
     Ok(())
 }
 
-/// Serve a TCP listener until `stop` flips (thread per connection).
+/// Serve a TCP listener until `stop` flips.  On Linux this runs the epoll
+/// reactor front-end with default QoS ([`FrontendConfig::default`]: every
+/// v1 request rides the online lane with the legacy 5 s overload bound);
+/// elsewhere it falls back to the threaded accept loop.
 pub fn serve_tcp(listener: TcpListener, client: Client, stop: Arc<AtomicBool>) -> Result<()> {
+    serve_tcp_frontend(listener, client, stop, FrontendConfig::default())
+}
+
+/// The legacy thread-per-connection front-end (baseline for the
+/// reactor-vs-threaded benchmark, and the non-Linux fallback).
+pub fn serve_tcp_threaded(
+    listener: TcpListener,
+    client: Client,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
     let handler: Arc<dyn Fn(TcpStream) + Send + Sync> = Arc::new(move |stream| {
         let _ = handle_conn(stream, client.clone());
     });
     serve_connections(listener, stop, handler, || {})
+}
+
+/// Event-driven front-end with explicit reactor/QoS configuration.
+pub fn serve_tcp_frontend(
+    listener: TcpListener,
+    client: Client,
+    stop: Arc<AtomicBool>,
+    cfg: FrontendConfig,
+) -> Result<()> {
+    if !reactor_supported() {
+        return serve_tcp_threaded(listener, client, stop);
+    }
+    let stats = FrontendStats::new_registered();
+    let qos = QosAdmission::new(cfg.qos, Arc::clone(&stats));
+    let service: Arc<dyn FrameService> = Arc::new(V1Service { client, qos });
+    run_reactor(listener, stop, service, cfg.resolved_threads(), stats, || {})
+}
+
+/// Incremental decoder + dispatcher for the v1 wire protocol.
+struct V1Service {
+    client: Client,
+    qos: Arc<QosAdmission>,
+}
+
+impl FrameService for V1Service {
+    fn on_frame(&self, buf: &[u8], ticket: ReplyTicket) -> FrameOutcome {
+        if buf.len() < 4 {
+            return FrameOutcome::Incomplete;
+        }
+        let n = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        if n == 0 {
+            return FrameOutcome::Close(4);
+        }
+        if n > MAX_WIRE_VALUES {
+            let msg = format!("request too large: {n} values");
+            let skip = n as u64 * 4;
+            if skip > MAX_DISCARD_BYTES as u64 {
+                // protocol garbage, not a client mistake: error then close
+                return FrameOutcome::Fatal(4, error_frame(&msg));
+            }
+            return FrameOutcome::Discard { consumed: 4, skip, reply: error_frame(&msg) };
+        }
+        let need = 4 + n * 4;
+        if buf.len() < need {
+            return FrameOutcome::Incomplete;
+        }
+        let image: Vec<i32> = buf[4..need]
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        if faults::fire(faults::SITE_SERVER_READ) {
+            // injected shed after the frame was consumed: the connection
+            // stays framed and usable
+            return FrameOutcome::Reply(
+                need,
+                error_frame("injected fault: request shed at server_read"),
+            );
+        }
+        let trace_id = ticket.trace_id();
+        self.qos.admit(
+            image,
+            trace_id,
+            Lane::Online,
+            None,
+            self.client.clone(),
+            v1_completion(ticket),
+        );
+        FrameOutcome::Pending(need)
+    }
+
+    fn on_loop_tick(&self) -> bool {
+        self.qos.pump()
+    }
+
+    fn on_shutdown(&self) {
+        self.qos.drain_shutdown();
+    }
+}
+
+/// v1 error frame bytes (`WIRE_ERROR`, length, message).
+pub(crate) fn error_frame(msg: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + msg.len());
+    out.extend_from_slice(&WIRE_ERROR.to_le_bytes());
+    out.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    out.extend_from_slice(msg.as_bytes());
+    out
+}
+
+/// v1 scores frame bytes (count, then f32 LE values).
+pub(crate) fn scores_frame(scores: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + scores.len() * 4);
+    out.extend_from_slice(&(scores.len() as u32).to_le_bytes());
+    for s in scores {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    out
+}
+
+/// Completion callback encoding an [`InferReply`] as a v1 wire frame and
+/// delivering it on the frame's ticket.  The `server_write` fault site
+/// fires here — the reactor's equivalent of dropping a reply at write.
+fn v1_completion(ticket: ReplyTicket) -> Arc<dyn Fn(InferReply) + Send + Sync> {
+    Arc::new(move |reply: InferReply| {
+        let bytes = if faults::fire(faults::SITE_SERVER_WRITE) {
+            error_frame("injected fault: reply dropped at server_write")
+        } else {
+            match &reply.scores {
+                Ok(scores) => scores_frame(scores),
+                Err(e) => error_frame(&e.message),
+            }
+        };
+        ticket.deliver(bytes);
+    })
 }
 
 pub(crate) fn write_error(stream: &mut TcpStream, msg: &str) -> std::io::Result<()> {
@@ -1032,5 +1191,59 @@ impl TcpClient {
     pub fn close(mut self) -> Result<()> {
         self.stream.write_all(&0u32.to_le_bytes())?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression for the handler-thread leak: finished handlers used to
+    /// be reaped only when a *new* connection arrived, so churn followed by
+    /// quiet grew the join list without bound.  With reap-on-idle the live
+    /// gauge must fall back to zero once the churned connections finish.
+    #[test]
+    fn connection_churn_does_not_grow_join_list() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(AtomicUsize::new(0));
+        let handler: Arc<dyn Fn(TcpStream) + Send + Sync> = Arc::new(|mut stream: TcpStream| {
+            // read until the peer closes, then finish
+            let mut sink = [0u8; 64];
+            while let Ok(n) = stream.read(&mut sink) {
+                if n == 0 {
+                    break;
+                }
+            }
+        });
+        let server = {
+            let stop = Arc::clone(&stop);
+            let live = Arc::clone(&live);
+            std::thread::spawn(move || {
+                serve_connections_gauged(listener, stop, handler, || {}, live)
+            })
+        };
+        // churn: open and close connections in waves
+        for _ in 0..3 {
+            let conns: Vec<TcpStream> =
+                (0..8).map(|_| TcpStream::connect(addr).unwrap()).collect();
+            drop(conns);
+            std::thread::sleep(Duration::from_millis(30));
+        }
+        // idle long enough for reap-on-idle to observe the finished
+        // handlers, then check the gauge went back down
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut ok = false;
+        while Instant::now() < deadline {
+            if live.load(Ordering::Relaxed) == 0 {
+                ok = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(ok, "finished handlers were not reaped: live={}", live.load(Ordering::Relaxed));
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap().unwrap();
     }
 }

@@ -4,13 +4,22 @@
 //! * open-loop Poisson arrivals — the "online individual requests" regime
 //!   of §6.3 (Baidu's reported batch-8..16 workload);
 //! * closed-loop back-to-back submission — the "static data, large batch"
-//!   regime.
+//!   regime;
+//! * a multiplexed TCP front-end load driver ([`run_frontend_load`]) —
+//!   hundreds-to-thousands of pipelined nonblocking connections from a
+//!   handful of client threads, speaking v1 or v2-QoS wire frames, for
+//!   benchmarking the server front-ends at connection counts a
+//!   thread-per-connection *client* could not reach honestly.
 
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::coordinator::server::Client;
+use crate::coordinator::qos::Lane;
+use crate::coordinator::server::{Client, MAX_WIRE_VALUES, WIRE_ERROR};
 use crate::coordinator::InferReply;
 use crate::model::NetConfig;
 use crate::util::SplitMix64;
@@ -111,6 +120,400 @@ pub fn run_closed_loop(
         replies.push(rx.recv().map_err(|_| anyhow::anyhow!("coordinator died"))?);
     }
     Ok(WorkloadReport { replies, wall: start.elapsed() })
+}
+
+// ---------------------------------------------------------------------------
+// multiplexed TCP front-end load driver
+// ---------------------------------------------------------------------------
+
+/// Which wire dialect the load driver speaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadProto {
+    /// v1 frames on the default model (length-tagged).
+    V1,
+    /// v2 `OP_INFER_QOS` frames: lane-tagged, deadline-bounded
+    /// (`deadline_ms` 0 = the server's default for the lane).
+    Qos { lane: Lane, deadline_ms: u32 },
+}
+
+/// Configuration for [`run_frontend_load`].
+#[derive(Debug, Clone)]
+pub struct FrontendLoadConfig {
+    pub addr: SocketAddr,
+    /// Concurrent TCP connections (split evenly across `threads`).
+    pub connections: usize,
+    /// Client threads, each multiplexing its share of nonblocking
+    /// connections (poll-style, no thread per connection).
+    pub threads: usize,
+    /// Max pipelined in-flight requests per connection.
+    pub window: usize,
+    /// How long to keep issuing new requests (then drain).
+    pub duration: Duration,
+    /// Total open-loop Poisson arrival rate across all connections;
+    /// `None` saturates every connection's window instead.
+    pub rate_rps: Option<f64>,
+    pub proto: LoadProto,
+    pub seed: u64,
+}
+
+/// Aggregated result of a front-end load run.  Conservation invariant:
+/// every request written to a socket is accounted exactly once —
+/// `sent == ok + errors + expired + lost`, and `lost` stays 0 unless the
+/// server dropped a connection or the drain timed out.
+#[derive(Debug, Default)]
+pub struct FrontendLoadReport {
+    pub sent: u64,
+    /// Scores replies.
+    pub ok: u64,
+    /// Typed error frames (overload, backend failure, injected faults).
+    pub errors: u64,
+    /// Typed `REPLY_EXPIRED` frames (deadline sheds).
+    pub expired: u64,
+    /// Requests written but never answered (dead connection or drain
+    /// timeout) — nonzero means the server silently dropped work.
+    pub lost: u64,
+    pub wall: Duration,
+    /// Reply latencies in microseconds (enqueue to decoded reply),
+    /// unsorted.
+    pub latencies_us: Vec<u64>,
+}
+
+impl FrontendLoadReport {
+    pub fn merge(&mut self, other: FrontendLoadReport) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.errors += other.errors;
+        self.expired += other.expired;
+        self.lost += other.lost;
+        self.wall = self.wall.max(other.wall);
+        self.latencies_us.extend(other.latencies_us);
+    }
+
+    /// Answered requests per second of wall time.
+    pub fn throughput(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        (self.ok + self.errors + self.expired) as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Latency percentile (`p` in 0..=100) in milliseconds.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.latencies_us.clone();
+        sorted.sort_unstable();
+        let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[rank.min(sorted.len() - 1)] as f64 / 1000.0
+    }
+
+    /// Every sent request got exactly one reply.
+    pub fn conservation_ok(&self) -> bool {
+        self.lost == 0 && self.sent == self.ok + self.errors + self.expired
+    }
+}
+
+/// How long the driver waits for in-flight replies after the issue
+/// window closes before declaring them lost.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
+/// Idle sleep when no connection made progress (keeps the poll loop from
+/// spinning a core per client thread).
+const LOAD_IDLE_SLEEP: Duration = Duration::from_micros(200);
+
+/// One reply decoded off a connection's read buffer.
+enum ReplyKind {
+    Ok,
+    Error,
+    Expired,
+}
+
+/// Incrementally decode one server reply (v1 or v2).  `None` = the
+/// buffer does not yet hold a complete frame; `Err` = the stream is not
+/// a recognizable reply (protocol violation — the connection is dead).
+fn parse_reply(buf: &[u8]) -> Result<Option<(ReplyKind, usize)>> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let tag = u32::from_le_bytes(buf[..4].try_into().unwrap());
+    // message-bearing frames: error (v1+v2) and typed expiry (v2)
+    if tag == WIRE_ERROR || tag == crate::serving::admin::REPLY_EXPIRED {
+        if buf.len() < 8 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        if buf.len() < 8 + len {
+            return Ok(None);
+        }
+        let kind = if tag == WIRE_ERROR { ReplyKind::Error } else { ReplyKind::Expired };
+        return Ok(Some((kind, 8 + len)));
+    }
+    if tag == crate::serving::admin::REPLY_SCORES {
+        // version + trace_id + count, then the scores
+        if buf.len() < 24 {
+            return Ok(None);
+        }
+        let n = u32::from_le_bytes(buf[20..24].try_into().unwrap()) as usize;
+        if n > MAX_WIRE_VALUES {
+            anyhow::bail!("implausible v2 score count {n}");
+        }
+        if buf.len() < 24 + n * 4 {
+            return Ok(None);
+        }
+        return Ok(Some((ReplyKind::Ok, 24 + n * 4)));
+    }
+    // v1 scores reply: the tag is the score count
+    let n = tag as usize;
+    if n > MAX_WIRE_VALUES {
+        anyhow::bail!("unrecognized reply tag {tag:#010x}");
+    }
+    if buf.len() < 4 + n * 4 {
+        return Ok(None);
+    }
+    Ok(Some((ReplyKind::Ok, 4 + n * 4)))
+}
+
+/// Encode one request frame for `proto`.
+fn request_frame(proto: LoadProto, image: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(18 + image.len() * 4);
+    match proto {
+        LoadProto::V1 => {
+            out.extend_from_slice(&(image.len() as u32).to_le_bytes());
+        }
+        LoadProto::Qos { lane, deadline_ms } => {
+            out.extend_from_slice(&crate::serving::admin::OP_INFER_QOS.to_le_bytes());
+            out.extend_from_slice(&0u16.to_le_bytes()); // default model
+            out.extend_from_slice(&lane.wire().to_le_bytes());
+            out.extend_from_slice(&deadline_ms.to_le_bytes());
+            out.extend_from_slice(&(image.len() as u32).to_le_bytes());
+        }
+    }
+    for v in image {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// One multiplexed client connection: nonblocking socket, partial-write
+/// outbox, incremental read buffer, FIFO of in-flight send timestamps
+/// (pipelined replies come back in order, so front-of-queue matches the
+/// next decoded reply).
+struct LoadConn {
+    stream: TcpStream,
+    out: Vec<u8>,
+    opos: usize,
+    rbuf: Vec<u8>,
+    inflight: VecDeque<Instant>,
+    dead: bool,
+}
+
+impl LoadConn {
+    fn connect(addr: SocketAddr) -> Result<LoadConn> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true).context("set_nonblocking")?;
+        Ok(LoadConn {
+            stream,
+            out: Vec::new(),
+            opos: 0,
+            rbuf: Vec::new(),
+            inflight: VecDeque::new(),
+            dead: false,
+        })
+    }
+
+    fn enqueue(&mut self, frame: &[u8]) {
+        self.out.extend_from_slice(frame);
+        self.inflight.push_back(Instant::now());
+    }
+
+    /// Flush the outbox and drain readable replies into `report`.
+    /// Returns true if any bytes moved.
+    fn pump(&mut self, report: &mut FrontendLoadReport) -> bool {
+        if self.dead {
+            return false;
+        }
+        let mut progressed = false;
+        while self.opos < self.out.len() {
+            match self.stream.write(&self.out[self.opos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return true;
+                }
+                Ok(n) => {
+                    self.opos += n;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return true;
+                }
+            }
+        }
+        if self.opos == self.out.len() && !self.out.is_empty() {
+            self.out.clear();
+            self.opos = 0;
+        }
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        let mut pos = 0;
+        loop {
+            match parse_reply(&self.rbuf[pos..]) {
+                Ok(Some((kind, used))) => {
+                    pos += used;
+                    if let Some(sent_at) = self.inflight.pop_front() {
+                        report.latencies_us.push(sent_at.elapsed().as_micros() as u64);
+                    }
+                    match kind {
+                        ReplyKind::Ok => report.ok += 1,
+                        ReplyKind::Error => report.errors += 1,
+                        ReplyKind::Expired => report.expired += 1,
+                    }
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if pos > 0 {
+            self.rbuf.drain(..pos);
+        }
+        progressed
+    }
+}
+
+/// Drive the TCP front-end at `cfg.addr` with multiplexed pipelined
+/// connections and report per-request outcomes.  Every request is
+/// accounted exactly once (see [`FrontendLoadReport`]); unanswered
+/// requests surface as `lost` rather than vanishing, so a benchmark
+/// built on this driver can assert the server sheds *typed* replies
+/// instead of silently dropping work.
+pub fn run_frontend_load(cfg: &FrontendLoadConfig, image: &[i32]) -> Result<FrontendLoadReport> {
+    anyhow::ensure!(cfg.connections > 0, "need at least one connection");
+    anyhow::ensure!(cfg.window > 0, "need a nonzero pipeline window");
+    let threads = cfg.threads.clamp(1, cfg.connections);
+    let frame = request_frame(cfg.proto, image);
+    let mut handles = Vec::with_capacity(threads);
+    for t in 0..threads {
+        // spread the remainder so connection counts differ by at most 1
+        let share = cfg.connections / threads + usize::from(t < cfg.connections % threads);
+        let cfg = cfg.clone();
+        let frame = frame.clone();
+        handles.push(std::thread::spawn(move || drive_share(&cfg, t, share, &frame)));
+    }
+    let mut report = FrontendLoadReport::default();
+    for h in handles {
+        match h.join() {
+            Ok(Ok(part)) => report.merge(part),
+            Ok(Err(e)) => return Err(e),
+            Err(p) => anyhow::bail!("load thread panicked: {}", crate::util::sync::panic_message(&*p)),
+        }
+    }
+    Ok(report)
+}
+
+/// One client thread's share of the load: `share` connections, windowed
+/// pipelining, optional Poisson pacing, then drain.
+fn drive_share(
+    cfg: &FrontendLoadConfig,
+    thread_idx: usize,
+    share: usize,
+    frame: &[u8],
+) -> Result<FrontendLoadReport> {
+    let mut report = FrontendLoadReport::default();
+    if share == 0 {
+        return Ok(report);
+    }
+    let mut conns = Vec::with_capacity(share);
+    for _ in 0..share {
+        conns.push(LoadConn::connect(cfg.addr)?);
+    }
+    let mut rng = SplitMix64::new(cfg.seed ^ (thread_idx as u64).wrapping_mul(0x9E37_79B9));
+    let per_thread_rate = cfg.rate_rps.map(|r| (r / cfg.threads.max(1) as f64).max(0.001));
+    let start = Instant::now();
+    let issue_until = start + cfg.duration;
+    let mut next_at = start;
+    let mut rr = 0usize;
+    loop {
+        let now = Instant::now();
+        let issuing = now < issue_until;
+        if issuing {
+            match per_thread_rate {
+                None => {
+                    for conn in conns.iter_mut().filter(|c| !c.dead) {
+                        while conn.inflight.len() < cfg.window {
+                            conn.enqueue(frame);
+                            report.sent += 1;
+                        }
+                    }
+                }
+                Some(rate) => {
+                    while next_at <= now {
+                        // round-robin over live connections with window room
+                        let pick = (0..conns.len())
+                            .map(|i| (rr + i) % conns.len())
+                            .find(|&i| !conns[i].dead && conns[i].inflight.len() < cfg.window);
+                        match pick {
+                            Some(i) => {
+                                conns[i].enqueue(frame);
+                                report.sent += 1;
+                                rr = i + 1;
+                            }
+                            None => break, // every window full: arrivals stall
+                        }
+                        next_at += Duration::from_secs_f64(rng.exp(rate));
+                    }
+                }
+            }
+        }
+        let mut progressed = false;
+        for conn in conns.iter_mut() {
+            progressed |= conn.pump(&mut report);
+        }
+        let inflight: usize = conns.iter().map(|c| c.inflight.len()).sum();
+        if !issuing {
+            // dead connections will never answer; count their in-flight
+            // requests as lost and stop waiting on them
+            if conns.iter().all(|c| c.dead || c.inflight.is_empty()) {
+                break;
+            }
+            if now > issue_until + DRAIN_TIMEOUT {
+                break;
+            }
+        }
+        if inflight == 0 && !issuing {
+            break;
+        }
+        if !progressed {
+            std::thread::sleep(LOAD_IDLE_SLEEP);
+        }
+    }
+    for conn in &conns {
+        report.lost += conn.inflight.len() as u64;
+    }
+    report.wall = start.elapsed();
+    Ok(report)
 }
 
 #[cfg(test)]

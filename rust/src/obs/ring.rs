@@ -31,6 +31,12 @@ pub enum SpanKind {
     Stage,
     /// Reply fan-out back to the submitting client.
     Reply,
+    /// Reactor front-end: first byte of a frame to its complete decode.
+    Read,
+    /// QoS admission: lane wait from admit to shard dispatch.
+    Dispatch,
+    /// Reactor front-end: completion delivery to wire write staging.
+    Write,
 }
 
 impl SpanKind {
@@ -42,6 +48,9 @@ impl SpanKind {
             SpanKind::Batch => "batch",
             SpanKind::Stage => "stage",
             SpanKind::Reply => "reply",
+            SpanKind::Read => "read",
+            SpanKind::Dispatch => "dispatch",
+            SpanKind::Write => "write",
         }
     }
 
@@ -52,6 +61,9 @@ impl SpanKind {
             SpanKind::Batch => 2,
             SpanKind::Stage => 3,
             SpanKind::Reply => 4,
+            SpanKind::Read => 5,
+            SpanKind::Dispatch => 6,
+            SpanKind::Write => 7,
         }
     }
 
@@ -62,6 +74,9 @@ impl SpanKind {
             2 => SpanKind::Batch,
             3 => SpanKind::Stage,
             4 => SpanKind::Reply,
+            5 => SpanKind::Read,
+            6 => SpanKind::Dispatch,
+            7 => SpanKind::Write,
             _ => return None,
         })
     }

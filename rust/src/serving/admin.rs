@@ -12,6 +12,9 @@
 //! tag 1..=MAX_WIRE_VALUES      v1 request: tag x i32 values -> u32 n, n x f32
 //! OP_INFER    name, u32 n, n x i32   -> REPLY_SCORES, u64 version,
 //!                                       u64 trace_id, u32 n, n x f32
+//! OP_INFER_QOS name, u32 lane, u32 deadline_ms, u32 n, n x i32
+//!                                    -> REPLY_SCORES (as above)
+//!                                     | REPLY_EXPIRED, u32 len, msg bytes
 //! OP_DEPLOY   name, source, backend, u32 workers, u32 queue_depth
 //!                                    -> REPLY_OK, u64 version
 //! OP_UNDEPLOY name                   -> REPLY_OK, u64 retired version
@@ -24,6 +27,14 @@
 //! error (any op)                     -> 0xFFFF_FFFF, u32 len, msg bytes
 //! ```
 //!
+//! `OP_INFER_QOS` is the two-lane admission frame: `lane` selects the
+//! online (0) or offline (1) QoS class, `deadline_ms` bounds how long the
+//! request may wait for dispatch (0 = the server's default for the lane).
+//! A request shed because its deadline passed gets the *typed*
+//! `REPLY_EXPIRED` frame — distinguishable from a backend error — and the
+//! connection stays open.  Plain `OP_INFER` and v1 frames ride the online
+//! lane with no explicit deadline.
+//!
 //! `OP_TRACE` returns the server's span rings as a Chrome trace-event
 //! JSON document (load it in Perfetto / `chrome://tracing`); the
 //! `trace_id` in every `REPLY_SCORES` frame correlates a reply with its
@@ -32,6 +43,13 @@
 //! Strings are `u16 len + UTF-8 bytes`.  Error frames do **not** close
 //! the connection (the next request may route to a healthy model); only
 //! malformed framing does.
+//!
+//! Two server front-ends speak this protocol: the default epoll
+//! [`reactor`](crate::coordinator::reactor) front-end
+//! ([`serve_registry_frontend`] — multiplexed nonblocking connections,
+//! incremental frame decode, pipelined requests, QoS admission) and the
+//! legacy thread-per-connection fallback ([`serve_registry_threaded`],
+//! used automatically off Linux).
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -42,13 +60,19 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::qos::{FrontendConfig, FrontendStats, Lane, QosAdmission};
+use crate::coordinator::reactor::{
+    reactor_supported, run_reactor, FrameOutcome, FrameService, ReplyTicket,
+};
+use crate::coordinator::request::{InferErrorKind, InferReply};
 use crate::coordinator::server::{
-    reject_payload, serve_connections, write_error, MAX_WIRE_VALUES, TCP_SUBMIT_DEADLINE,
-    WIRE_ERROR,
+    error_frame, reject_payload, scores_frame, serve_connections, write_error, MAX_DISCARD_BYTES,
+    MAX_WIRE_VALUES, TCP_SUBMIT_DEADLINE, WIRE_ERROR,
 };
 use crate::coordinator::SubmitError;
 use crate::model::BcnnModel;
 use crate::serving::registry::{BackendSpec, DeploySpec, ModelEntry, ModelRegistry, ModelSource};
+use crate::util::faults;
 use crate::util::json::Json;
 
 /// v2 frame tags.  All sit far above [`MAX_WIRE_VALUES`] (a v1 length)
@@ -62,21 +86,66 @@ pub const OP_STATS: u32 = 0xBC20_0006;
 pub const OP_HEALTH: u32 = 0xBC20_0007;
 pub const OP_TRACE: u32 = 0xBC20_0008;
 pub const OP_PROFILE: u32 = 0xBC20_0009;
+/// QoS inference: lane-tagged, deadline-bounded (two-lane admission).
+pub const OP_INFER_QOS: u32 = 0xBC20_000A;
 pub const REPLY_SCORES: u32 = 0xBC20_0081;
 pub const REPLY_OK: u32 = 0xBC20_0082;
 pub const REPLY_JSON: u32 = 0xBC20_0083;
+/// Typed deadline-expiry reply: the request was shed before dispatch
+/// because its deadline passed.  The connection stays open.
+pub const REPLY_EXPIRED: u32 = 0xBC20_0084;
 
 /// How long a handler waits out backpressure before sending the client a
 /// typed overload error instead of stalling the connection (shared with
 /// the v1 front-end).
 pub const SUBMIT_DEADLINE: Duration = TCP_SUBMIT_DEADLINE;
 
-/// Serve the registry on a TCP listener until `stop` flips (thread per
-/// connection, sharing the v1 front-end's accept loop).  Idle accept
-/// polls reap drained retired pools, so a hot-swapped-out model's
-/// threads and weights are freed promptly even on a server that only
-/// ever sees inference traffic after the swap.
+/// Serve the registry on a TCP listener until `stop` flips, on the
+/// default front-end: the epoll reactor with two-lane QoS admission
+/// ([`serve_registry_frontend`] with default config), falling back to
+/// thread-per-connection where the reactor is unsupported.
 pub fn serve_registry(
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    serve_registry_frontend(listener, registry, stop, FrontendConfig::default())
+}
+
+/// Serve the registry on the event-driven front-end: a fixed pool of
+/// reactor threads multiplexing nonblocking connections, incremental v2
+/// frame decode (pipelined requests answered in order), and two-lane
+/// weighted-deficit QoS admission with deadline shedding.  Registry
+/// housekeeping (reaping drained retired pools, advancing telemetry
+/// windows) runs on the accept thread's idle polls, so a hot-swapped-out
+/// model's threads and weights are freed promptly even on a server that
+/// only ever sees inference traffic after the swap.
+pub fn serve_registry_frontend(
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    stop: Arc<AtomicBool>,
+    cfg: FrontendConfig,
+) -> Result<()> {
+    if !reactor_supported() {
+        return serve_registry_threaded(listener, registry, stop);
+    }
+    let threads = cfg.resolved_threads();
+    let stats = FrontendStats::new_registered();
+    let qos = QosAdmission::new(cfg.qos, Arc::clone(&stats));
+    let service: Arc<dyn FrameService> =
+        Arc::new(V2Service { registry: Arc::clone(&registry), qos });
+    run_reactor(listener, stop, service, threads, stats, move || {
+        registry.reap_retired();
+        registry.tick_windows();
+    })
+}
+
+/// Thread-per-connection fallback front-end (one blocking handler thread
+/// per accepted socket, sharing the v1 front-end's accept loop).  The
+/// reactor front-end is the default; this path remains for platforms
+/// without epoll and as the baseline the front-end benchmark compares
+/// against.
+pub fn serve_registry_threaded(
     listener: TcpListener,
     registry: Arc<ModelRegistry>,
     stop: Arc<AtomicBool>,
@@ -92,6 +161,317 @@ pub fn serve_registry(
         registry.tick_windows();
     })
 }
+
+// ---------------------------------------------------------------------------
+// reactor service: incremental decode + QoS admission
+// ---------------------------------------------------------------------------
+
+/// Which wire dialect a pending inference replies in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ReplyStyle {
+    /// Raw v1 reply: `u32 n, n x f32` (or a `WIRE_ERROR` frame).
+    V1,
+    /// Tagged v2 reply: `REPLY_SCORES` / `REPLY_EXPIRED` / `WIRE_ERROR`.
+    V2,
+}
+
+/// Admin ops whose reply is a `REPLY_JSON` document.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum JsonOp {
+    List,
+    Stats,
+    Health,
+    Trace,
+    Profile,
+}
+
+/// One decoded v2 frame (or the decode verdict for a malformed one).
+#[derive(Debug, PartialEq)]
+enum WireFrame {
+    Close,
+    Infer { name: String, lane: Lane, deadline_ms: u32, image: Vec<i32>, style: ReplyStyle },
+    Deploy { name: String, source: String, backend: String, workers: usize, queue_depth: usize },
+    Undeploy(String),
+    Rollback(String),
+    Admin(JsonOp),
+    /// Framing stayed intact; reply with an error frame and carry on.
+    Reject(String),
+    /// Oversized-but-bounded payload: reply, swallow `skip` bytes, go on.
+    Discard { skip: u64, message: String },
+    /// Protocol garbage: reply with an error frame, then close.
+    Fatal(String),
+}
+
+/// Incremental decoder + dispatcher for protocol v2 (including its v1
+/// compatibility arm) on the epoll reactor.  Admin ops execute inline on
+/// the loop thread — they are cheap and serialized on the registry lock
+/// anyway — while inference frames go through the two-lane QoS admission
+/// queue and reply asynchronously via their [`ReplyTicket`].
+struct V2Service {
+    registry: Arc<ModelRegistry>,
+    qos: Arc<QosAdmission>,
+}
+
+impl V2Service {
+    #[allow(clippy::too_many_arguments)]
+    fn admit_infer(
+        &self,
+        used: usize,
+        name: String,
+        lane: Lane,
+        deadline_ms: u32,
+        image: Vec<i32>,
+        style: ReplyStyle,
+        ticket: ReplyTicket,
+    ) -> FrameOutcome {
+        if faults::fire(faults::SITE_SERVER_READ) {
+            // injected shed after the frame was consumed: the connection
+            // stays framed and usable
+            return FrameOutcome::Reply(
+                used,
+                error_frame("injected fault: request shed at server_read"),
+            );
+        }
+        let sel = if name.is_empty() { None } else { Some(name.as_str()) };
+        let entry = match self.registry.router().resolve_healthy(sel) {
+            Ok(e) => e,
+            Err(e) => return FrameOutcome::Reply(used, error_frame(&e.to_string())),
+        };
+        let deadline = (deadline_ms > 0).then(|| Duration::from_millis(u64::from(deadline_ms)));
+        let trace_id = ticket.trace_id();
+        let completion = v2_completion(ticket, style, entry.version);
+        self.qos.admit(image, trace_id, lane, deadline, entry.client(), completion);
+        FrameOutcome::Pending(used)
+    }
+}
+
+impl FrameService for V2Service {
+    fn on_frame(&self, buf: &[u8], ticket: ReplyTicket) -> FrameOutcome {
+        let (frame, used) = match parse_frame(buf) {
+            None => return FrameOutcome::Incomplete,
+            Some(f) => f,
+        };
+        match frame {
+            WireFrame::Close => FrameOutcome::Close(used),
+            WireFrame::Fatal(msg) => FrameOutcome::Fatal(used, error_frame(&msg)),
+            WireFrame::Reject(msg) => FrameOutcome::Reply(used, error_frame(&msg)),
+            WireFrame::Discard { skip, message } => {
+                FrameOutcome::Discard { consumed: used, skip, reply: error_frame(&message) }
+            }
+            WireFrame::Infer { name, lane, deadline_ms, image, style } => {
+                self.admit_infer(used, name, lane, deadline_ms, image, style, ticket)
+            }
+            WireFrame::Deploy { name, source, backend, workers, queue_depth } => {
+                let result = deploy_from_wire(
+                    &self.registry,
+                    &name,
+                    &source,
+                    &backend,
+                    workers,
+                    queue_depth,
+                );
+                FrameOutcome::Reply(used, version_frame(result))
+            }
+            WireFrame::Undeploy(name) => {
+                FrameOutcome::Reply(used, version_frame(self.registry.undeploy(&name)))
+            }
+            WireFrame::Rollback(name) => {
+                FrameOutcome::Reply(used, version_frame(self.registry.rollback(&name)))
+            }
+            WireFrame::Admin(op) => {
+                FrameOutcome::Reply(used, json_frame(&admin_json(op, &self.registry)))
+            }
+        }
+    }
+
+    fn on_loop_tick(&self) -> bool {
+        self.qos.pump()
+    }
+
+    fn on_shutdown(&self) {
+        self.qos.drain_shutdown();
+    }
+}
+
+/// Completion callback encoding an [`InferReply`] in the frame's reply
+/// dialect and delivering it on the ticket.  The `server_write` fault
+/// site fires here — the reactor's equivalent of dropping a reply at
+/// write time.  Deadline-expired sheds become the typed `REPLY_EXPIRED`
+/// frame on v2 (v1 has no typed tags, so they fall back to an error
+/// frame there).
+fn v2_completion(
+    ticket: ReplyTicket,
+    style: ReplyStyle,
+    version: u64,
+) -> Arc<dyn Fn(InferReply) + Send + Sync> {
+    Arc::new(move |reply: InferReply| {
+        let bytes = if faults::fire(faults::SITE_SERVER_WRITE) {
+            error_frame("injected fault: reply dropped at server_write")
+        } else {
+            match (style, &reply.scores) {
+                (ReplyStyle::V1, Ok(scores)) => scores_frame(scores),
+                (ReplyStyle::V1, Err(e)) => error_frame(&e.message),
+                (ReplyStyle::V2, Ok(scores)) => v2_scores_frame(version, reply.trace_id, scores),
+                (ReplyStyle::V2, Err(e)) if e.kind == InferErrorKind::Expired => {
+                    expired_frame(&e.message)
+                }
+                (ReplyStyle::V2, Err(e)) => error_frame(&e.message),
+            }
+        };
+        ticket.deliver(bytes);
+    })
+}
+
+// ---------------------------------------------------------------------------
+// incremental frame parser
+// ---------------------------------------------------------------------------
+
+/// Cursor over one connection's buffered bytes.  Every reader returns
+/// `None` while the buffer does not yet hold enough bytes — the
+/// incremental-decode contract: a partial frame parses as "incomplete"
+/// (never an error) and is simply retried when more bytes arrive.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(s)
+    }
+
+    fn u16(&mut self) -> Option<u16> {
+        Some(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// `u16 len + UTF-8 bytes`.  `Some(Err(_))` is a framing error (the
+    /// bytes are all present but not UTF-8), distinct from `None`.
+    fn string(&mut self) -> Option<std::result::Result<String, String>> {
+        let len = self.u16()? as usize;
+        let raw = self.take(len)?;
+        Some(
+            std::str::from_utf8(raw)
+                .map(str::to_string)
+                .map_err(|_| "string field is not UTF-8".to_string()),
+        )
+    }
+
+    fn image(&mut self, n: usize) -> Option<Vec<i32>> {
+        let raw = self.take(n.checked_mul(4)?)?;
+        Some(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// Classify an oversized-payload claim: bounded lengths are swallowed to
+/// keep the connection framed, implausible ones close it (protocol
+/// garbage is not worth draining gigabytes for).
+fn oversize(skip: u64, message: String) -> WireFrame {
+    if skip > MAX_DISCARD_BYTES as u64 {
+        WireFrame::Fatal(message)
+    } else {
+        WireFrame::Discard { skip, message }
+    }
+}
+
+/// Decode one frame off the front of `buf`.  `None` means the buffer does
+/// not yet hold a complete frame; `Some((frame, consumed))` consumed
+/// exactly `consumed` bytes.  Pure — all I/O stays in the reactor.
+fn parse_frame(buf: &[u8]) -> Option<(WireFrame, usize)> {
+    let mut cur = Cur::new(buf);
+    macro_rules! wire_str {
+        () => {
+            match cur.string()? {
+                Ok(s) => s,
+                Err(msg) => return Some((WireFrame::Fatal(msg), cur.pos)),
+            }
+        };
+    }
+    let tag = cur.u32()?;
+    match tag {
+        0 => Some((WireFrame::Close, cur.pos)),
+        // ---- protocol-v1 compatibility: the tag is the request length --
+        n if (n as usize) <= MAX_WIRE_VALUES => {
+            let image = cur.image(n as usize)?;
+            let frame = WireFrame::Infer {
+                name: String::new(),
+                lane: Lane::Online,
+                deadline_ms: 0,
+                image,
+                style: ReplyStyle::V1,
+            };
+            Some((frame, cur.pos))
+        }
+        // ---- oversized v1 length: not a v2 tag, not the error tag ------
+        n if n != WIRE_ERROR && (n >> 24) != 0xBC => {
+            Some((oversize(u64::from(n) * 4, format!("request too large: {n} values")), cur.pos))
+        }
+        OP_INFER | OP_INFER_QOS => {
+            let name = wire_str!();
+            let (lane_raw, deadline_ms) = if tag == OP_INFER_QOS {
+                (cur.u32()?, cur.u32()?)
+            } else {
+                (Lane::Online.wire(), 0)
+            };
+            let n = cur.u32()? as usize;
+            if n == 0 {
+                return Some((WireFrame::Reject("invalid request size: 0 values".into()), cur.pos));
+            }
+            if n > MAX_WIRE_VALUES {
+                let msg = format!("invalid request size: {n} values");
+                return Some((oversize(n as u64 * 4, msg), cur.pos));
+            }
+            let image = cur.image(n)?;
+            let lane = match Lane::from_wire(lane_raw) {
+                Some(l) => l,
+                None => {
+                    return Some((WireFrame::Reject(format!("invalid lane {lane_raw}")), cur.pos))
+                }
+            };
+            let style = ReplyStyle::V2;
+            Some((WireFrame::Infer { name, lane, deadline_ms, image, style }, cur.pos))
+        }
+        OP_DEPLOY => {
+            let name = wire_str!();
+            let source = wire_str!();
+            let backend = wire_str!();
+            let workers = cur.u32()? as usize;
+            let queue_depth = cur.u32()? as usize;
+            Some((WireFrame::Deploy { name, source, backend, workers, queue_depth }, cur.pos))
+        }
+        OP_UNDEPLOY => {
+            let name = wire_str!();
+            Some((WireFrame::Undeploy(name), cur.pos))
+        }
+        OP_ROLLBACK => {
+            let name = wire_str!();
+            Some((WireFrame::Rollback(name), cur.pos))
+        }
+        OP_LIST => Some((WireFrame::Admin(JsonOp::List), cur.pos)),
+        OP_STATS => Some((WireFrame::Admin(JsonOp::Stats), cur.pos)),
+        OP_HEALTH => Some((WireFrame::Admin(JsonOp::Health), cur.pos)),
+        OP_TRACE => Some((WireFrame::Admin(JsonOp::Trace), cur.pos)),
+        OP_PROFILE => Some((WireFrame::Admin(JsonOp::Profile), cur.pos)),
+        other => Some((WireFrame::Fatal(format!("unknown frame tag {other:#010x}")), cur.pos)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// threaded fallback handler
+// ---------------------------------------------------------------------------
 
 fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
     stream.set_nodelay(true).ok();
@@ -115,14 +495,7 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
                     }
                 };
                 match infer_on(&entry, image) {
-                    Ok((_trace_id, scores)) => {
-                        let mut out = Vec::with_capacity(4 + scores.len() * 4);
-                        out.extend_from_slice(&(scores.len() as u32).to_le_bytes());
-                        for s in &scores {
-                            out.extend_from_slice(&s.to_le_bytes());
-                        }
-                        stream.write_all(&out)?;
-                    }
+                    Ok((_trace_id, scores)) => stream.write_all(&scores_frame(&scores))?,
                     Err(msg) => write_error(&mut stream, &msg)?,
                 }
             }
@@ -150,17 +523,48 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
                 };
                 match infer_on(&entry, image) {
                     Ok((trace_id, scores)) => {
-                        let mut out = Vec::with_capacity(24 + scores.len() * 4);
-                        out.extend_from_slice(&REPLY_SCORES.to_le_bytes());
-                        out.extend_from_slice(&entry.version.to_le_bytes());
-                        out.extend_from_slice(&trace_id.to_le_bytes());
-                        out.extend_from_slice(&(scores.len() as u32).to_le_bytes());
-                        for s in &scores {
-                            out.extend_from_slice(&s.to_le_bytes());
-                        }
-                        stream.write_all(&out)?;
+                        stream.write_all(&v2_scores_frame(entry.version, trace_id, &scores))?
                     }
                     Err(msg) => write_error(&mut stream, &msg)?,
+                }
+            }
+            OP_INFER_QOS => {
+                let name = read_string(&mut stream)?;
+                let lane_raw = read_u32(&mut stream)?;
+                let deadline_ms = read_u32(&mut stream)?;
+                let n = read_u32(&mut stream)? as usize;
+                if n == 0 || n > MAX_WIRE_VALUES {
+                    reject_payload(&mut stream, n, &format!("invalid request size: {n} values"))?;
+                    continue;
+                }
+                let image = read_image(&mut stream, n)?;
+                if Lane::from_wire(lane_raw).is_none() {
+                    write_error(&mut stream, &format!("invalid lane {lane_raw}"))?;
+                    continue;
+                }
+                let sel = if name.is_empty() { None } else { Some(name.as_str()) };
+                let entry = match router.resolve_healthy(sel) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        write_error(&mut stream, &e.to_string())?;
+                        continue;
+                    }
+                };
+                // The threaded path has no admission queue to wait in, so
+                // the deadline bounds the submit backpressure wait.
+                let result = match deadline_ms {
+                    0 => infer_on(&entry, image).map_err(InferFail::Other),
+                    ms => {
+                        let d = Duration::from_millis(u64::from(ms)).min(SUBMIT_DEADLINE);
+                        infer_deadline(&entry, image, d, true)
+                    }
+                };
+                match result {
+                    Ok((trace_id, scores)) => {
+                        stream.write_all(&v2_scores_frame(entry.version, trace_id, &scores))?
+                    }
+                    Err(InferFail::Expired(msg)) => stream.write_all(&expired_frame(&msg))?,
+                    Err(InferFail::Other(msg)) => write_error(&mut stream, &msg)?,
                 }
             }
             OP_DEPLOY => {
@@ -171,36 +575,21 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
                 let queue_depth = read_u32(&mut stream)? as usize;
                 let result =
                     deploy_from_wire(registry, &name, &source, &backend, workers, queue_depth);
-                reply_version(&mut stream, result)?;
+                stream.write_all(&version_frame(result))?;
             }
             OP_UNDEPLOY => {
                 let name = read_string(&mut stream)?;
-                reply_version(&mut stream, registry.undeploy(&name))?;
+                stream.write_all(&version_frame(registry.undeploy(&name)))?;
             }
             OP_ROLLBACK => {
                 let name = read_string(&mut stream)?;
-                reply_version(&mut stream, registry.rollback(&name))?;
+                stream.write_all(&version_frame(registry.rollback(&name)))?;
             }
-            OP_LIST => {
-                let json = list_json(registry);
-                write_json(&mut stream, &json)?;
-            }
-            OP_STATS => {
-                let json = stats_json(registry);
-                write_json(&mut stream, &json)?;
-            }
-            OP_HEALTH => {
-                let json = health_json(registry);
-                write_json(&mut stream, &json)?;
-            }
-            OP_TRACE => {
-                let json = crate::obs::chrome_trace_json();
-                write_json(&mut stream, &json)?;
-            }
-            OP_PROFILE => {
-                let json = profile_json(registry);
-                write_json(&mut stream, &json)?;
-            }
+            OP_LIST => stream.write_all(&json_frame(&list_json(registry)))?,
+            OP_STATS => stream.write_all(&json_frame(&stats_json(registry)))?,
+            OP_HEALTH => stream.write_all(&json_frame(&health_json(registry)))?,
+            OP_TRACE => stream.write_all(&json_frame(&crate::obs::chrome_trace_json()))?,
+            OP_PROFILE => stream.write_all(&json_frame(&profile_json(registry)))?,
             other => {
                 let _ = write_error(&mut stream, &format!("unknown frame tag {other:#010x}"));
                 bail!("unknown frame tag {other:#010x}");
@@ -209,29 +598,58 @@ fn handle_conn(mut stream: TcpStream, registry: &ModelRegistry) -> Result<()> {
     }
 }
 
+/// How a threaded-path inference failed: a typed deadline expiry (only
+/// when the client sent an explicit deadline) or everything else.
+enum InferFail {
+    Expired(String),
+    Other(String),
+}
+
 /// Submit to one entry's pool with a deadline; a saturated pool yields an
-/// error string (sent as an error frame) instead of a stalled connection.
-/// Returns the reply's trace ID with the scores so v2 frames can carry
-/// it (the coordinator records every span *before* sending the reply, so
-/// a client that sees this ID will find its spans in `OP_TRACE`).
-fn infer_on(entry: &ModelEntry, image: Vec<i32>) -> std::result::Result<(u64, Vec<f32>), String> {
-    let rx = entry
-        .client()
-        .submit_deadline(image, SUBMIT_DEADLINE)
-        .map_err(|e| match e {
-            SubmitError::QueueFull { .. } => {
-                format!("model {:?} overloaded: all shard queues full", entry.name)
-            }
-            SubmitError::Shutdown => format!("model {:?} pool shut down", entry.name),
-            SubmitError::ShardDown { .. } => {
-                format!("model {:?} pool down: all shards crashed or breaker-open", entry.name)
-            }
-        })?;
-    let reply = rx
-        .recv()
-        .map_err(|_| format!("model {:?} pool shut down before replying", entry.name))?;
+/// error instead of a stalled connection.  With `typed_expiry`, running
+/// out the deadline in backpressure maps to [`InferFail::Expired`] so the
+/// caller can send `REPLY_EXPIRED`.  Returns the reply's trace ID with
+/// the scores so v2 frames can carry it (the coordinator records every
+/// span *before* sending the reply, so a client that sees this ID will
+/// find its spans in `OP_TRACE`).
+fn infer_deadline(
+    entry: &ModelEntry,
+    image: Vec<i32>,
+    deadline: Duration,
+    typed_expiry: bool,
+) -> std::result::Result<(u64, Vec<f32>), InferFail> {
+    let rx = entry.client().submit_deadline(image, deadline).map_err(|e| match e {
+        SubmitError::QueueFull { .. } if typed_expiry => InferFail::Expired(format!(
+            "deadline expired after {}ms waiting for model {:?}",
+            deadline.as_millis(),
+            entry.name
+        )),
+        SubmitError::QueueFull { .. } => {
+            InferFail::Other(format!("model {:?} overloaded: all shard queues full", entry.name))
+        }
+        SubmitError::Shutdown => InferFail::Other(format!("model {:?} pool shut down", entry.name)),
+        SubmitError::ShardDown { .. } => InferFail::Other(format!(
+            "model {:?} pool down: all shards crashed or breaker-open",
+            entry.name
+        )),
+    })?;
+    let reply = rx.recv().map_err(|_| {
+        InferFail::Other(format!("model {:?} pool shut down before replying", entry.name))
+    })?;
     let trace_id = reply.trace_id;
-    reply.scores.map(|s| (trace_id, s)).map_err(|e| e.message)
+    reply.scores.map(|s| (trace_id, s)).map_err(|e| {
+        if e.kind == InferErrorKind::Expired {
+            InferFail::Expired(e.message)
+        } else {
+            InferFail::Other(e.message)
+        }
+    })
+}
+
+fn infer_on(entry: &ModelEntry, image: Vec<i32>) -> std::result::Result<(u64, Vec<f32>), String> {
+    infer_deadline(entry, image, SUBMIT_DEADLINE, false).map_err(|f| match f {
+        InferFail::Expired(m) | InferFail::Other(m) => m,
+    })
 }
 
 /// Build the deploy spec for a wire `DEPLOY`.  Unset fields (empty
@@ -264,25 +682,63 @@ fn deploy_from_wire(
     registry.deploy(name, spec)
 }
 
-fn reply_version(stream: &mut TcpStream, result: Result<u64>) -> std::io::Result<()> {
+// ---------------------------------------------------------------------------
+// reply frame builders (shared by both front-ends)
+// ---------------------------------------------------------------------------
+
+/// `REPLY_SCORES` frame bytes: version, trace ID, count, f32 LE values.
+fn v2_scores_frame(version: u64, trace_id: u64, scores: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24 + scores.len() * 4);
+    out.extend_from_slice(&REPLY_SCORES.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&trace_id.to_le_bytes());
+    out.extend_from_slice(&(scores.len() as u32).to_le_bytes());
+    for s in scores {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    out
+}
+
+/// `REPLY_EXPIRED` frame bytes (tag, length, message).
+fn expired_frame(msg: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + msg.len());
+    out.extend_from_slice(&REPLY_EXPIRED.to_le_bytes());
+    out.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    out.extend_from_slice(msg.as_bytes());
+    out
+}
+
+/// `REPLY_OK` + version on success, an error frame otherwise.
+fn version_frame(result: Result<u64>) -> Vec<u8> {
     match result {
         Ok(version) => {
             let mut out = Vec::with_capacity(12);
             out.extend_from_slice(&REPLY_OK.to_le_bytes());
             out.extend_from_slice(&version.to_le_bytes());
-            stream.write_all(&out)
+            out
         }
-        Err(e) => write_error(stream, &format!("{e:#}")),
+        Err(e) => error_frame(&format!("{e:#}")),
     }
 }
 
-fn write_json(stream: &mut TcpStream, json: &Json) -> std::io::Result<()> {
+/// `REPLY_JSON` frame bytes (tag, length, serialized document).
+fn json_frame(json: &Json) -> Vec<u8> {
     let text = json.to_string();
     let mut out = Vec::with_capacity(8 + text.len());
     out.extend_from_slice(&REPLY_JSON.to_le_bytes());
     out.extend_from_slice(&(text.len() as u32).to_le_bytes());
     out.extend_from_slice(text.as_bytes());
-    stream.write_all(&out)
+    out
+}
+
+fn admin_json(op: JsonOp, registry: &ModelRegistry) -> Json {
+    match op {
+        JsonOp::List => list_json(registry),
+        JsonOp::Stats => stats_json(registry),
+        JsonOp::Health => health_json(registry),
+        JsonOp::Trace => crate::obs::chrome_trace_json(),
+        JsonOp::Profile => profile_json(registry),
+    }
 }
 
 fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -312,9 +768,11 @@ pub fn list_json(registry: &ModelRegistry) -> Json {
     obj(vec![("epoch", Json::Num(table.epoch as f64)), ("models", Json::Arr(models))])
 }
 
-/// `STATS` payload: per-model serving metrics across versions, plus the
+/// `STATS` payload: per-model serving metrics across versions, the
 /// rolling windowed telemetry under `"windows"` (advanced here so a
-/// stats poller is itself enough to keep the windows fresh).
+/// stats poller is itself enough to keep the windows fresh), and the
+/// front-end's per-lane QoS admission counters under `"frontend"`
+/// (all-zero when the threaded fallback is serving).
 pub fn stats_json(registry: &ModelRegistry) -> Json {
     registry.tick_windows();
     let rows: Vec<Json> = registry
@@ -333,6 +791,7 @@ pub fn stats_json(registry: &ModelRegistry) -> Json {
         .collect();
     obj(vec![
         ("epoch", Json::Num(registry.epoch() as f64)),
+        ("frontend", crate::coordinator::frontend_json()),
         ("models", Json::Arr(rows)),
         ("windows", registry.windows_json()),
     ])
@@ -458,6 +917,15 @@ pub struct VersionedScores {
     pub scores: Vec<f32>,
 }
 
+/// Typed outcome of a QoS-lane inference: scores, or a server-side
+/// deadline expiry (the request was shed before dispatch; the connection
+/// stays usable — retry or fall back as the SLO dictates).
+#[derive(Debug, Clone, PartialEq)]
+pub enum InferOutcome {
+    Scores(VersionedScores),
+    Expired(String),
+}
+
 /// Blocking protocol-v2 client (inference + admin plane).  Server-sent
 /// error frames surface as `Err` but leave the connection usable.
 pub struct ControlClient {
@@ -482,6 +950,55 @@ impl ControlClient {
         }
         self.stream.write_all(&out)?;
         self.expect(REPLY_SCORES)?;
+        self.read_scores()
+    }
+
+    /// Classify one image on `model` with an explicit QoS class.  `lane`
+    /// picks the admission lane (online = latency-bound, offline =
+    /// throughput); `deadline` bounds how long the request may wait for
+    /// dispatch (`None` = the server's default for the lane).  A request
+    /// the server shed on deadline comes back as
+    /// [`InferOutcome::Expired`] — a typed outcome, not an error — and
+    /// the connection stays usable.
+    pub fn infer_qos(
+        &mut self,
+        model: &str,
+        lane: Lane,
+        deadline: Option<Duration>,
+        image: &[i32],
+    ) -> Result<InferOutcome> {
+        let deadline_ms = deadline.map_or(0u32, |d| d.as_millis().min(u128::from(u32::MAX)) as u32);
+        let mut out = Vec::with_capacity(18 + model.len() + image.len() * 4);
+        out.extend_from_slice(&OP_INFER_QOS.to_le_bytes());
+        push_string(&mut out, model)?;
+        out.extend_from_slice(&lane.wire().to_le_bytes());
+        out.extend_from_slice(&deadline_ms.to_le_bytes());
+        out.extend_from_slice(&(image.len() as u32).to_le_bytes());
+        for v in image {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        self.stream.write_all(&out)?;
+        let tag = read_u32(&mut self.stream)?;
+        if tag == REPLY_EXPIRED {
+            let len = read_u32(&mut self.stream)? as usize;
+            let mut msg = vec![0u8; len];
+            self.stream.read_exact(&mut msg)?;
+            return Ok(InferOutcome::Expired(String::from_utf8_lossy(&msg).into_owned()));
+        }
+        if tag == WIRE_ERROR {
+            let len = read_u32(&mut self.stream)? as usize;
+            let mut msg = vec![0u8; len];
+            self.stream.read_exact(&mut msg)?;
+            bail!("server error: {}", String::from_utf8_lossy(&msg));
+        }
+        if tag != REPLY_SCORES {
+            bail!("unexpected reply tag {tag:#010x} (wanted {REPLY_SCORES:#010x})");
+        }
+        Ok(InferOutcome::Scores(self.read_scores()?))
+    }
+
+    /// Decode the body of a `REPLY_SCORES` frame (tag already consumed).
+    fn read_scores(&mut self) -> Result<VersionedScores> {
         let version = read_u64(&mut self.stream)?;
         let trace_id = read_u64(&mut self.stream)?;
         let n = read_u32(&mut self.stream)? as usize;
@@ -591,5 +1108,146 @@ impl ControlClient {
     pub fn close(mut self) -> Result<()> {
         self.stream.write_all(&0u32.to_le_bytes())?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn infer_qos_bytes(name: &str, lane: u32, deadline_ms: u32, image: &[i32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&OP_INFER_QOS.to_le_bytes());
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&lane.to_le_bytes());
+        out.extend_from_slice(&deadline_ms.to_le_bytes());
+        out.extend_from_slice(&(image.len() as u32).to_le_bytes());
+        for v in image {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn parse_is_incremental_at_every_split_point() {
+        let frame = infer_qos_bytes("m", 1, 250, &[1, -2, 3]);
+        for cut in 0..frame.len() {
+            assert!(
+                parse_frame(&frame[..cut]).is_none(),
+                "prefix of {cut}/{} bytes must parse as incomplete",
+                frame.len()
+            );
+        }
+        let (parsed, used) = parse_frame(&frame).expect("complete frame parses");
+        assert_eq!(used, frame.len());
+        match parsed {
+            WireFrame::Infer { name, lane, deadline_ms, image, style } => {
+                assert_eq!(name, "m");
+                assert_eq!(lane, Lane::Offline);
+                assert_eq!(deadline_ms, 250);
+                assert_eq!(image, vec![1, -2, 3]);
+                assert_eq!(style, ReplyStyle::V2);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_v1_close_and_pipelined_frames() {
+        // two v1 frames (length tags) then a close, back to back
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&5i32.to_le_bytes());
+        buf.extend_from_slice(&(-7i32).to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&9i32.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+
+        let (f1, u1) = parse_frame(&buf).unwrap();
+        match f1 {
+            WireFrame::Infer { image, style, lane, .. } => {
+                assert_eq!(image, vec![5, -7]);
+                assert_eq!(style, ReplyStyle::V1);
+                assert_eq!(lane, Lane::Online);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        let (f2, u2) = parse_frame(&buf[u1..]).unwrap();
+        assert!(matches!(f2, WireFrame::Infer { ref image, .. } if *image == vec![9]));
+        let (f3, _) = parse_frame(&buf[u1 + u2..]).unwrap();
+        assert_eq!(f3, WireFrame::Close);
+    }
+
+    #[test]
+    fn parse_classifies_oversize_and_garbage() {
+        // bounded oversize: discard-and-continue
+        let n = (MAX_WIRE_VALUES + 1) as u32;
+        let (frame, used) = parse_frame(&n.to_le_bytes()).unwrap();
+        assert_eq!(used, 4);
+        match frame {
+            WireFrame::Discard { skip, message } => {
+                assert_eq!(skip, u64::from(n) * 4);
+                assert!(message.contains("too large"), "{message}");
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        // implausible length: protocol garbage, close
+        let (frame, _) = parse_frame(&0xFEFF_FFFFu32.to_le_bytes()).unwrap();
+        assert!(matches!(frame, WireFrame::Fatal(ref m) if m.contains("too large")), "{frame:?}");
+        // unknown v2 tag: close
+        let (frame, _) = parse_frame(&0xBC20_00FFu32.to_le_bytes()).unwrap();
+        assert!(matches!(frame, WireFrame::Fatal(ref m) if m.contains("unknown frame tag")));
+    }
+
+    #[test]
+    fn parse_rejects_bad_lane_and_zero_size_without_closing() {
+        let frame = infer_qos_bytes("m", 7, 0, &[1]);
+        let (parsed, used) = parse_frame(&frame).unwrap();
+        assert_eq!(used, frame.len());
+        assert!(matches!(parsed, WireFrame::Reject(ref m) if m.contains("invalid lane")));
+
+        let mut zero = Vec::new();
+        zero.extend_from_slice(&OP_INFER.to_le_bytes());
+        zero.extend_from_slice(&0u16.to_le_bytes());
+        zero.extend_from_slice(&0u32.to_le_bytes());
+        let (parsed, used) = parse_frame(&zero).unwrap();
+        assert_eq!(used, zero.len());
+        assert!(matches!(parsed, WireFrame::Reject(ref m) if m.contains("invalid request size")));
+    }
+
+    #[test]
+    fn parse_admin_ops_and_deploy() {
+        for (op, want) in [
+            (OP_LIST, JsonOp::List),
+            (OP_STATS, JsonOp::Stats),
+            (OP_HEALTH, JsonOp::Health),
+            (OP_TRACE, JsonOp::Trace),
+            (OP_PROFILE, JsonOp::Profile),
+        ] {
+            let (frame, used) = parse_frame(&op.to_le_bytes()).unwrap();
+            assert_eq!((frame, used), (WireFrame::Admin(want), 4));
+        }
+        let mut dep = Vec::new();
+        dep.extend_from_slice(&OP_DEPLOY.to_le_bytes());
+        for s in ["m", "synthetic:tiny", ""] {
+            dep.extend_from_slice(&(s.len() as u16).to_le_bytes());
+            dep.extend_from_slice(s.as_bytes());
+        }
+        dep.extend_from_slice(&2u32.to_le_bytes());
+        dep.extend_from_slice(&8u32.to_le_bytes());
+        assert!(parse_frame(&dep[..dep.len() - 1]).is_none());
+        let (frame, used) = parse_frame(&dep).unwrap();
+        assert_eq!(used, dep.len());
+        assert_eq!(
+            frame,
+            WireFrame::Deploy {
+                name: "m".into(),
+                source: "synthetic:tiny".into(),
+                backend: String::new(),
+                workers: 2,
+                queue_depth: 8,
+            }
+        );
     }
 }

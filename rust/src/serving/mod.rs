@@ -22,6 +22,9 @@ pub mod admin;
 pub mod registry;
 pub mod router;
 
-pub use admin::{serve_registry, ControlClient, VersionedScores};
+pub use admin::{
+    serve_registry, serve_registry_frontend, serve_registry_threaded, ControlClient, InferOutcome,
+    VersionedScores,
+};
 pub use registry::{BackendSpec, DeploySpec, ModelEntry, ModelRegistry, ModelSource, ModelStats};
 pub use router::{RouteError, Router, RoutingTable};

@@ -5,14 +5,16 @@
 //! through one mutex and disarm on drop — a panicking assertion cannot
 //! leak an armed plan into the next case.
 
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
 
 use repro::bcnn::Engine;
 use repro::coordinator::workload::random_images;
 use repro::coordinator::{
-    Backend, BackendFactory, Coordinator, CoordinatorConfig, NativeBackend, PipelineBackend,
-    RestartPolicy, SubmitError,
+    serve_tcp_frontend, Backend, BackendFactory, Coordinator, CoordinatorConfig, FrontendConfig,
+    NativeBackend, PipelineBackend, RestartPolicy, SubmitError, TcpClient,
 };
 use repro::model::{BcnnModel, NetConfig};
 use repro::pipeline::PipelineRuntime;
@@ -286,6 +288,97 @@ fn router_fails_over_to_healthy_same_config_model() {
     let rx = routed.client().submit_deadline(img.clone(), Duration::from_secs(5)).unwrap();
     let reply = rx.recv_timeout(Duration::from_secs(10)).unwrap();
     assert_eq!(reply.scores.unwrap(), oracle.infer(&img).unwrap());
+}
+
+/// Spawn a reactor front-end over a 1-worker pool; returns everything a
+/// chaos case needs to drive it and tear it down.
+fn start_frontend(
+    model: &BcnnModel,
+) -> (String, Arc<AtomicBool>, std::thread::JoinHandle<anyhow::Result<()>>, Coordinator) {
+    let coord = Coordinator::start_sharded(
+        native_factory(model),
+        CoordinatorConfig { workers: 1, queue_depth: 16, ..Default::default() },
+    )
+    .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let client = coord.client();
+    let serve = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            serve_tcp_frontend(listener, client, stop, FrontendConfig::default())
+        })
+    };
+    (addr, stop, serve, coord)
+}
+
+#[test]
+fn reactor_frontend_sheds_injected_read_and_write_faults_typed() {
+    let _g = arm("server_read:deny@once=1;server_write:deny@once=1");
+    let model = tiny_model();
+    let cfg = model.config();
+    let oracle = Engine::new(model.clone()).unwrap();
+    let (addr, stop, serve, coord) = start_frontend(&model);
+    let img = random_images(&cfg, 1, 3).remove(0);
+    let want = oracle.infer(&img).unwrap();
+
+    // run the client sequence behind a watchdog: a reactor that loses a
+    // request to an injected fault would hang the blocking client
+    let (done_tx, done_rx) = mpsc::channel();
+    let worker = std::thread::spawn(move || {
+        let mut client = TcpClient::connect(&addr).unwrap();
+        // request 1 eats the read-side deny: typed shed, connection alive
+        let e = client.infer(&img).expect_err("read-side deny must surface as an error reply");
+        assert!(e.to_string().contains("server_read"), "{e}");
+        // request 2 survives parsing but its reply rides the write-side
+        // deny: a typed error frame instead of the scores
+        let e = client.infer(&img).expect_err("write-side deny must surface as an error reply");
+        assert!(e.to_string().contains("server_write"), "{e}");
+        // request 3 sails through on the same connection, bit-exact
+        let scores = client.infer(&img).expect("connection must outlive both injected faults");
+        assert_eq!(scores, want, "post-fault scores must be bit-exact");
+        client.close().unwrap();
+        let _ = done_tx.send(());
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("reactor lost a request to an injected fault");
+    worker.join().unwrap();
+
+    stop.store(true, Ordering::Relaxed);
+    serve.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+#[test]
+fn reactor_frontend_is_bit_exact_under_injected_read_delays() {
+    let _g = arm("seed=7;server_read:delay=1ms@p=0.5");
+    let model = tiny_model();
+    let cfg = model.config();
+    let oracle = Engine::new(model.clone()).unwrap();
+    let (addr, stop, serve, coord) = start_frontend(&model);
+    let images = random_images(&cfg, 8, 17);
+
+    // random decode-path stalls must reorder nothing and corrupt nothing
+    let (done_tx, done_rx) = mpsc::channel();
+    let worker = std::thread::spawn(move || {
+        let mut client = TcpClient::connect(&addr).unwrap();
+        for img in &images {
+            let scores = client.infer(img).expect("delayed request still serves");
+            assert_eq!(scores, oracle.infer(img).unwrap(), "delayed reply must be bit-exact");
+        }
+        client.close().unwrap();
+        let _ = done_tx.send(());
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("injected read delays wedged the reactor");
+    worker.join().unwrap();
+
+    stop.store(true, Ordering::Relaxed);
+    serve.join().unwrap().unwrap();
+    coord.shutdown();
 }
 
 #[test]

@@ -1,0 +1,550 @@
+//! Event-driven front-end integration: incremental frame decoding over
+//! the reactor (split writes, pipelining), oversized-frame handling,
+//! slow-reader write backpressure, and two-lane deadline shedding —
+//! protocol v1 (`serve_tcp_frontend`) and v2 (`serve_registry_frontend`).
+//!
+//! Every test body runs on a worker thread behind a done-channel
+//! watchdog, so a front-end hang fails the test instead of wedging the
+//! harness.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use repro::bcnn::Engine;
+use repro::coordinator::server::WIRE_ERROR;
+use repro::coordinator::workload::random_images;
+use repro::coordinator::{
+    frontend_snapshot, reactor_supported, serve_tcp_frontend, Backend, BackendFactory,
+    BatchPolicy, BatchResult, Coordinator, CoordinatorConfig, FrontendConfig, Lane,
+    NativeBackend, QosConfig, MAX_WIRE_VALUES,
+};
+use repro::model::{BcnnModel, NetConfig};
+use repro::serving::admin::{OP_INFER_QOS, REPLY_EXPIRED, REPLY_SCORES};
+use repro::serving::{
+    serve_registry_frontend, BackendSpec, ControlClient, DeploySpec, InferOutcome, ModelRegistry,
+};
+
+fn tiny_model() -> BcnnModel {
+    BcnnModel::synthetic(&NetConfig::tiny(), 5)
+}
+
+fn native_factory(model: &BcnnModel) -> BackendFactory {
+    let model = model.clone();
+    Arc::new(move || {
+        let b = NativeBackend::new(model.clone())?;
+        Ok(Box::new(b) as Box<dyn Backend>)
+    })
+}
+
+/// Run `body` on a worker thread; fail via the watchdog if it hangs.
+fn with_watchdog<T: Send + 'static>(secs: u64, body: impl FnOnce() -> T + Send + 'static) -> T {
+    let (done_tx, done_rx) = mpsc::channel();
+    let worker = std::thread::spawn(move || {
+        let _ = done_tx.send(body());
+    });
+    let out = done_rx
+        .recv_timeout(Duration::from_secs(secs))
+        .expect("front-end test hung past its watchdog");
+    worker.join().unwrap();
+    out
+}
+
+type ServeHandle = std::thread::JoinHandle<anyhow::Result<()>>;
+
+fn start_v1(
+    factory: BackendFactory,
+    frontend: FrontendConfig,
+    workers: usize,
+    queue_depth: usize,
+) -> (String, Arc<AtomicBool>, ServeHandle, Coordinator) {
+    let coord = Coordinator::start_sharded(
+        factory,
+        CoordinatorConfig {
+            workers,
+            queue_depth,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::ZERO },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let client = coord.client();
+    let serve = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || serve_tcp_frontend(listener, client, stop, frontend))
+    };
+    (addr, stop, serve, coord)
+}
+
+fn v1_frame(image: &[i32]) -> Vec<u8> {
+    let mut out = (image.len() as u32).to_le_bytes().to_vec();
+    for v in image {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+enum V1Reply {
+    Scores(Vec<f32>),
+    Error(String),
+}
+
+fn read_v1_reply(stream: &mut TcpStream) -> V1Reply {
+    let mut tag = [0u8; 4];
+    stream.read_exact(&mut tag).expect("reply tag");
+    let n = u32::from_le_bytes(tag);
+    if n == WIRE_ERROR {
+        let mut len = [0u8; 4];
+        stream.read_exact(&mut len).unwrap();
+        let mut msg = vec![0u8; u32::from_le_bytes(len) as usize];
+        stream.read_exact(&mut msg).unwrap();
+        V1Reply::Error(String::from_utf8_lossy(&msg).into_owned())
+    } else {
+        let mut raw = vec![0u8; n as usize * 4];
+        stream.read_exact(&mut raw).unwrap();
+        V1Reply::Scores(
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+        )
+    }
+}
+
+#[test]
+fn split_writes_reassemble_into_one_frame() {
+    let model = tiny_model();
+    let oracle = Engine::new(model.clone()).unwrap();
+    let img = random_images(&model.config(), 1, 3).remove(0);
+    let want = oracle.infer(&img).unwrap();
+    let (addr, stop, serve, coord) =
+        start_v1(native_factory(&model), FrontendConfig::default(), 1, 16);
+
+    with_watchdog(60, move || {
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        // drip the frame across many tiny writes with real pauses so the
+        // decoder sees it over several readiness events
+        let frame = v1_frame(&img);
+        for chunk in frame.chunks(7) {
+            conn.write_all(chunk).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        match read_v1_reply(&mut conn) {
+            V1Reply::Scores(s) => assert_eq!(s, want, "split-written frame must decode intact"),
+            V1Reply::Error(e) => panic!("unexpected error reply: {e}"),
+        }
+        conn.write_all(&0u32.to_le_bytes()).unwrap(); // graceful close
+    });
+
+    stop.store(true, Ordering::Relaxed);
+    serve.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+#[test]
+fn pipelined_frames_reply_in_order() {
+    let model = tiny_model();
+    let oracle = Engine::new(model.clone()).unwrap();
+    let images = random_images(&model.config(), 8, 7);
+    let expected: Vec<Vec<f32>> = images.iter().map(|i| oracle.infer(i).unwrap()).collect();
+    // a single worker serves strictly FIFO, so reply order is the oracle
+    let (addr, stop, serve, coord) =
+        start_v1(native_factory(&model), FrontendConfig::default(), 1, 32);
+
+    with_watchdog(60, move || {
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        let mut all = Vec::new();
+        for img in &images {
+            all.extend_from_slice(&v1_frame(img));
+        }
+        // one burst: every frame is in flight before the first reply
+        conn.write_all(&all).unwrap();
+        for (i, want) in expected.iter().enumerate() {
+            match read_v1_reply(&mut conn) {
+                V1Reply::Scores(s) => {
+                    assert_eq!(&s, want, "pipelined reply {i} must match its request")
+                }
+                V1Reply::Error(e) => panic!("pipelined request {i} failed: {e}"),
+            }
+        }
+        conn.write_all(&0u32.to_le_bytes()).unwrap();
+    });
+
+    stop.store(true, Ordering::Relaxed);
+    serve.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+#[test]
+fn oversized_frame_is_discarded_without_dropping_the_connection() {
+    let model = tiny_model();
+    let oracle = Engine::new(model.clone()).unwrap();
+    let img = random_images(&model.config(), 1, 11).remove(0);
+    let want = oracle.infer(&img).unwrap();
+    let (addr, stop, serve, coord) =
+        start_v1(native_factory(&model), FrontendConfig::default(), 1, 16);
+
+    with_watchdog(120, move || {
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+        // plausible-but-oversized: the server must reply "too large",
+        // swallow the payload, and keep the connection serving
+        let n = (MAX_WIRE_VALUES + 1) as u32;
+        conn.write_all(&n.to_le_bytes()).unwrap();
+        conn.write_all(&vec![0u8; (MAX_WIRE_VALUES + 1) * 4]).unwrap();
+        match read_v1_reply(&mut conn) {
+            V1Reply::Error(e) => assert!(e.contains("too large"), "{e}"),
+            V1Reply::Scores(_) => panic!("oversized frame must not produce scores"),
+        }
+
+        // the same connection still serves a well-formed request
+        conn.write_all(&v1_frame(&img)).unwrap();
+        match read_v1_reply(&mut conn) {
+            V1Reply::Scores(s) => assert_eq!(s, want, "connection must survive a discard"),
+            V1Reply::Error(e) => panic!("post-discard request failed: {e}"),
+        }
+
+        // an implausible ~17 GiB claim is protocol garbage: error + close
+        conn.write_all(&0xFEFF_FFFFu32.to_le_bytes()).unwrap();
+        match read_v1_reply(&mut conn) {
+            V1Reply::Error(e) => assert!(e.contains("too large"), "{e}"),
+            V1Reply::Scores(_) => panic!("garbage tag must not produce scores"),
+        }
+        let mut probe = [0u8; 1];
+        assert_eq!(
+            conn.read(&mut probe).unwrap_or(0),
+            0,
+            "connection must close after an implausible frame"
+        );
+    });
+
+    stop.store(true, Ordering::Relaxed);
+    serve.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+#[test]
+fn slow_reader_engages_write_backpressure_without_losing_replies() {
+    if !reactor_supported() {
+        eprintln!("skipping: reactor unsupported on this platform (threaded fallback)");
+        return;
+    }
+    let model = tiny_model();
+    let img = random_images(&model.config(), 1, 13).remove(0);
+    let (addr, stop, serve, coord) =
+        start_v1(native_factory(&model), FrontendConfig::default(), 2, 256);
+
+    let paused_after = with_watchdog(180, move || {
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        conn.set_nonblocking(true).unwrap();
+        let frame = v1_frame(&img);
+        let base = frontend_snapshot().paused_reads;
+
+        // flood requests while never reading replies: once the kernel
+        // buffers fill, the server's write buffer crosses its high-water
+        // mark and the reactor pauses this connection's read interest
+        const MAX_FRAMES: usize = 1 << 16;
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let mut outbox: Vec<u8> = Vec::new();
+        let mut opos = 0usize;
+        let mut sent = 0usize;
+        while frontend_snapshot().paused_reads == base {
+            assert!(Instant::now() < deadline, "backpressure never engaged ({sent} frames)");
+            if opos >= outbox.len() {
+                assert!(sent < MAX_FRAMES, "no pause after {MAX_FRAMES} unread-reply frames");
+                outbox.clear();
+                opos = 0;
+                for _ in 0..64 {
+                    outbox.extend_from_slice(&frame);
+                    sent += 1;
+                }
+            }
+            match conn.write(&outbox[opos..]) {
+                Ok(0) => panic!("socket closed while flooding"),
+                Ok(n) => opos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(1))
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => panic!("flood write failed: {e}"),
+            }
+        }
+
+        // drain: finish flushing queued frames while reading every reply.
+        // Replies may be scores or typed overload sheds — either way,
+        // every request must get exactly one (conservation, no drops).
+        let reply_len = |buf: &[u8]| -> Option<usize> {
+            if buf.len() < 4 {
+                return None;
+            }
+            let tag = u32::from_le_bytes(buf[..4].try_into().unwrap());
+            if tag == WIRE_ERROR {
+                if buf.len() < 8 {
+                    return None;
+                }
+                let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+                return (buf.len() >= 8 + len).then_some(8 + len);
+            }
+            let total = 4 + tag as usize * 4;
+            (buf.len() >= total).then_some(total)
+        };
+        let mut rbuf: Vec<u8> = Vec::new();
+        let mut tmp = [0u8; 16384];
+        let mut got = 0usize;
+        while got < sent {
+            assert!(Instant::now() < deadline, "drain stalled at {got}/{sent} replies");
+            let mut progressed = false;
+            if opos < outbox.len() {
+                match conn.write(&outbox[opos..]) {
+                    Ok(n) => {
+                        opos += n;
+                        progressed = n > 0;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e) => panic!("drain write failed: {e}"),
+                }
+            }
+            match conn.read(&mut tmp) {
+                Ok(0) => panic!("server closed with {got}/{sent} replies delivered"),
+                Ok(n) => {
+                    rbuf.extend_from_slice(&tmp[..n]);
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => panic!("drain read failed: {e}"),
+            }
+            while let Some(len) = reply_len(&rbuf) {
+                rbuf.drain(..len);
+                got += 1;
+            }
+            if !progressed {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        assert_eq!(got, sent, "every flooded request must get exactly one reply");
+        frontend_snapshot().paused_reads
+    });
+    assert!(paused_after > 0, "the reactor must have paused reads at least once");
+
+    stop.store(true, Ordering::Relaxed);
+    serve.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+/// Parks every batch until the gate opens — wedges a 1-worker pool so
+/// admitted-but-undispatchable requests age past their deadline.
+struct GateBackend(Arc<AtomicBool>);
+
+impl Backend for GateBackend {
+    fn name(&self) -> &str {
+        "gate"
+    }
+    fn infer_batch(&mut self, images: &[&[i32]]) -> anyhow::Result<BatchResult> {
+        while !self.0.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Ok(BatchResult {
+            scores: images.iter().map(|_| vec![0.0]).collect(),
+            modeled_device_time: None,
+        })
+    }
+}
+
+#[test]
+fn v1_default_deadline_sheds_typed_when_the_pool_is_wedged() {
+    const REQUESTS: usize = 6;
+    let gate = Arc::new(AtomicBool::new(false));
+    let factory: BackendFactory = {
+        let gate = Arc::clone(&gate);
+        Arc::new(move || Ok(Box::new(GateBackend(Arc::clone(&gate))) as Box<dyn Backend>))
+    };
+    let frontend = FrontendConfig {
+        reactor_threads: 1,
+        qos: QosConfig {
+            default_deadline: Some(Duration::from_millis(30)),
+            ..QosConfig::default()
+        },
+    };
+    let (addr, stop, serve, coord) = start_v1(factory, frontend, 1, 1);
+
+    with_watchdog(60, move || {
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let img = vec![7i32; 16];
+        for _ in 0..REQUESTS {
+            conn.write_all(&v1_frame(&img)).unwrap();
+        }
+
+        // the wedged worker strands the overflow in the admission lane;
+        // those requests must come back as typed deadline sheds while
+        // the gate is still closed
+        let mut sheds = 0usize;
+        let mut scores = 0usize;
+        match read_v1_reply(&mut conn) {
+            V1Reply::Error(e) => {
+                assert!(e.contains("deadline expired"), "shed must be deadline-typed: {e}");
+                sheds += 1;
+            }
+            V1Reply::Scores(_) => panic!("no request can complete while the gate is closed"),
+        }
+
+        // open the gate: the dispatched requests finish, and every one
+        // of the six gets exactly one reply
+        gate.store(true, Ordering::Relaxed);
+        for _ in 0..REQUESTS - 1 {
+            match read_v1_reply(&mut conn) {
+                V1Reply::Error(e) => {
+                    assert!(e.contains("deadline expired"), "shed must be deadline-typed: {e}");
+                    sheds += 1;
+                }
+                V1Reply::Scores(_) => scores += 1,
+            }
+        }
+        assert!(sheds >= 1, "the wedged pool must shed at least one request");
+        assert!(scores >= 1, "the gated batch must still complete after release");
+        assert_eq!(sheds + scores, REQUESTS, "conservation: one reply per request");
+        conn.write_all(&0u32.to_le_bytes()).unwrap();
+    });
+
+    stop.store(true, Ordering::Relaxed);
+    serve.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+fn infer_qos_frame(name: &str, lane: Lane, deadline_ms: u32, image: &[i32]) -> Vec<u8> {
+    let mut out = OP_INFER_QOS.to_le_bytes().to_vec();
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+    out.extend_from_slice(&lane.wire().to_le_bytes());
+    out.extend_from_slice(&deadline_ms.to_le_bytes());
+    out.extend_from_slice(&(image.len() as u32).to_le_bytes());
+    for v in image {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Length of the v2 reply frame at the head of `buf`, if complete.
+fn v2_reply_len(buf: &[u8]) -> Option<usize> {
+    if buf.len() < 4 {
+        return None;
+    }
+    let tag = u32::from_le_bytes(buf[..4].try_into().unwrap());
+    if tag == REPLY_SCORES {
+        if buf.len() < 24 {
+            return None;
+        }
+        let n = u32::from_le_bytes(buf[20..24].try_into().unwrap()) as usize;
+        return (buf.len() >= 24 + n * 4).then_some(24 + n * 4);
+    }
+    if tag == REPLY_EXPIRED || tag == WIRE_ERROR {
+        if buf.len() < 8 {
+            return None;
+        }
+        let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        return (buf.len() >= 8 + len).then_some(8 + len);
+    }
+    panic!("unexpected v2 reply tag {tag:#010x}");
+}
+
+#[test]
+fn v2_offline_backlog_sheds_with_typed_expired_reply() {
+    const FLOOD: usize = 1024;
+    let model = tiny_model();
+    let oracle = Engine::new(model.clone()).unwrap();
+    let registry = Arc::new(ModelRegistry::new());
+    registry
+        .deploy(
+            "m",
+            DeploySpec {
+                model,
+                backend: BackendSpec::Engine { lanes: 1 },
+                workers: 1,
+                queue_depth: 1,
+                policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            },
+        )
+        .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let serve = {
+        let stop = Arc::clone(&stop);
+        let registry = Arc::clone(&registry);
+        std::thread::spawn(move || {
+            serve_registry_frontend(listener, registry, stop, FrontendConfig::default())
+        })
+    };
+
+    with_watchdog(120, move || {
+        let img = random_images(&NetConfig::tiny(), 1, 3).remove(0);
+
+        // a deep pipelined offline backlog through an un-batched 1-worker
+        // pool; its replies stay unread while the probe runs
+        let mut flood = TcpStream::connect(&addr).unwrap();
+        let frame = infer_qos_frame("", Lane::Offline, 0, &img);
+        let mut all = Vec::new();
+        for _ in 0..FLOOD {
+            all.extend_from_slice(&frame);
+        }
+        flood.write_all(&all).unwrap();
+
+        // an offline probe with a 1 ms deadline joins the queue tail: it
+        // must come back as a typed REPLY_EXPIRED, not an opaque error
+        // (bounded retry in case the backlog drains implausibly fast)
+        let mut admin = ControlClient::connect(&addr).unwrap();
+        let mut saw_expired = false;
+        for _ in 0..10 {
+            match admin
+                .infer_qos("m", Lane::Offline, Some(Duration::from_millis(1)), &img)
+                .unwrap()
+            {
+                InferOutcome::Expired(msg) => {
+                    assert!(msg.contains("expired"), "expiry must say so: {msg}");
+                    saw_expired = true;
+                    break;
+                }
+                InferOutcome::Scores(_) => {}
+            }
+        }
+        assert!(saw_expired, "a 1 ms deadline behind a {FLOOD}-deep backlog must expire");
+
+        // the same connection keeps serving after a typed expiry, and the
+        // online lane cuts past the offline backlog
+        match admin.infer_qos("m", Lane::Online, None, &img).unwrap() {
+            InferOutcome::Scores(reply) => {
+                assert_eq!(reply.scores, oracle.infer(&img).unwrap(), "online reply bit-exact")
+            }
+            InferOutcome::Expired(msg) => panic!("no-deadline online infer expired: {msg}"),
+        }
+        admin.close().unwrap();
+
+        // conservation on the flood connection: one reply per request
+        flood.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let mut rbuf: Vec<u8> = Vec::new();
+        let mut tmp = [0u8; 16384];
+        let mut got = 0usize;
+        while got < FLOOD {
+            let n = flood.read(&mut tmp).expect("flood drain read");
+            assert!(n > 0, "server closed with {got}/{FLOOD} flood replies delivered");
+            rbuf.extend_from_slice(&tmp[..n]);
+            while let Some(len) = v2_reply_len(&rbuf) {
+                rbuf.drain(..len);
+                got += 1;
+            }
+        }
+        assert_eq!(got, FLOOD, "every flood request must get exactly one reply");
+        flood.write_all(&0u32.to_le_bytes()).unwrap();
+    });
+
+    stop.store(true, Ordering::Relaxed);
+    serve.join().unwrap().unwrap();
+    registry.drain_retired(Duration::from_secs(5)).unwrap();
+}

@@ -346,7 +346,20 @@ fn stats_json_schema_is_pinned() {
     }
 
     let stats = repro::serving::admin::stats_json(&registry);
-    assert_eq!(keys(&stats), ["epoch", "models", "windows"]);
+    assert_eq!(keys(&stats), ["epoch", "frontend", "models", "windows"]);
+
+    // the front-end aggregate and its per-lane counters are wire
+    // contract too (`repro top` renders them by name)
+    let fe = stats.get("frontend").unwrap();
+    assert_eq!(keys(fe), ["connections", "lanes", "paused_reads", "reactor_threads"]);
+    let lanes = fe.get("lanes").unwrap();
+    assert_eq!(keys(lanes), ["offline", "online"]);
+    for lane in ["offline", "online"] {
+        assert_eq!(
+            keys(lanes.get(lane).unwrap()),
+            ["admitted", "depth", "dispatched", "shed_expired", "shed_overload"]
+        );
+    }
 
     let base = [
         "batches",
