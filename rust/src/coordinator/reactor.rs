@@ -352,13 +352,34 @@ pub fn run_reactor(
     let inboxes: Vec<(Arc<Mutex<Vec<std::net::TcpStream>>>, Arc<CompletionQueue>)> =
         workers.iter().map(|w| (Arc::clone(&w.incoming), Arc::clone(&w.comp))).collect();
 
+    let worker_err: Arc<Mutex<Option<std::io::Error>>> = Arc::new(Mutex::new(None));
     let handles: Vec<std::thread::JoinHandle<()>> = workers
         .into_iter()
         .map(|mut w| {
             let stop = Arc::clone(&stop);
+            let err_slot = Arc::clone(&worker_err);
             std::thread::Builder::new()
                 .name(format!("reactor{}", w.index))
-                .spawn(move || w.run(&stop))
+                .spawn(move || {
+                    // A worker that exits for any reason — epoll failure or
+                    // a panic unwinding through it — must stop the whole
+                    // front-end: the accept thread would otherwise keep
+                    // round-robin-assigning sockets into a loop nobody
+                    // runs, hanging those clients silently.
+                    struct StopOnExit(Arc<std::sync::atomic::AtomicBool>);
+                    impl Drop for StopOnExit {
+                        fn drop(&mut self) {
+                            self.0.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    let _guard = StopOnExit(Arc::clone(&stop));
+                    if let Err(e) = w.run(&stop) {
+                        let mut slot = lock_recover(&err_slot);
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                    }
+                })
                 .expect("spawn reactor worker")
         })
         .collect();
@@ -366,6 +387,7 @@ pub fn run_reactor(
     listener.set_nonblocking(true).context("nonblocking listener")?;
     let mut rr = 0usize;
     let mut accept_err = None;
+    let mut last_transient_log: Option<std::time::Instant> = None;
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, _addr)) => {
@@ -378,6 +400,17 @@ pub fn run_reactor(
                 on_idle();
                 std::thread::sleep(Duration::from_millis(2));
             }
+            Err(e) if accept_transient(&e) => {
+                // aborted handshakes and fd exhaustion are per-connection
+                // or momentary; killing the listener for them would take
+                // the whole front-end down.  Back off a beat and keep
+                // accepting (log rate-limited — EMFILE can persist).
+                if last_transient_log.map_or(true, |t| t.elapsed() >= Duration::from_secs(1)) {
+                    eprintln!("frontend accept: transient error (continuing): {e}");
+                    last_transient_log = Some(std::time::Instant::now());
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
             Err(e) => {
                 accept_err = Some(e);
                 stop.store(true, Ordering::Relaxed);
@@ -388,16 +421,44 @@ pub fn run_reactor(
     for (_, comp) in &inboxes {
         comp.wake.wake();
     }
+    // join everything and run the shutdown drain even when a worker
+    // panicked: queued admissions still get their typed replies (the
+    // one-reply-per-admitted-request invariant survives crashes)
+    let mut panic_err: Option<anyhow::Error> = None;
     for h in handles {
-        h.join().map_err(|p| {
-            anyhow::anyhow!("reactor worker panicked: {}", crate::util::sync::panic_message(&*p))
-        })?;
+        if let Err(p) = h.join() {
+            let msg = crate::util::sync::panic_message(&*p);
+            panic_err.get_or_insert_with(|| anyhow::anyhow!("reactor worker panicked: {msg}"));
+        }
     }
     service.on_shutdown();
+    if let Some(e) = panic_err {
+        return Err(e);
+    }
+    if let Some(e) = lock_recover(&worker_err).take() {
+        return Err(anyhow::anyhow!("reactor worker event loop failed: {e}"));
+    }
     match accept_err {
         Some(e) => Err(anyhow::anyhow!("accept: {e}")),
         None => Ok(()),
     }
+}
+
+/// Accept errors that must not tear the listener down: the kernel reports
+/// these for a single doomed connection (peer aborted the handshake) or a
+/// momentary resource shortage (out of fds at the 1k+-connection scale
+/// this front-end targets), and `accept` is immediately usable again.
+#[cfg(target_os = "linux")]
+fn accept_transient(e: &std::io::Error) -> bool {
+    use std::io::ErrorKind;
+    if matches!(
+        e.kind(),
+        ErrorKind::ConnectionAborted | ErrorKind::ConnectionReset | ErrorKind::Interrupted
+    ) {
+        return true;
+    }
+    // raw Linux errno: ENOMEM, ENFILE, EMFILE, EPROTO, ENOBUFS
+    matches!(e.raw_os_error(), Some(12 | 23 | 24 | 71 | 105))
 }
 
 // ---------------------------------------------------------------------------
@@ -468,15 +529,21 @@ impl Worker {
         })
     }
 
-    fn run(&mut self, stop: &std::sync::atomic::AtomicBool) {
+    fn run(&mut self, stop: &std::sync::atomic::AtomicBool) -> std::io::Result<()> {
         let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 256];
         let mut scratch = vec![0u8; READ_CHUNK];
         let mut lanes_pending = false;
+        let mut result = Ok(());
         while !stop.load(Ordering::Relaxed) {
             let timeout = if lanes_pending { 1 } else { 10 };
             let n = match self.ep.wait(&mut events, timeout) {
                 Ok(n) => n,
-                Err(_) => break,
+                Err(e) => {
+                    // surfaced to run_reactor; the spawn wrapper's stop
+                    // guard tears the whole front-end down with us
+                    result = Err(e);
+                    break;
+                }
             };
             for i in 0..n {
                 let ev = events[i];
@@ -508,6 +575,7 @@ impl Worker {
         for t in tokens {
             self.drop_conn(t);
         }
+        result
     }
 
     fn adopt_incoming(&mut self) {
@@ -686,9 +754,16 @@ impl Conn {
     }
 
     fn mask(&self) -> u32 {
-        let mut m = sys::EPOLLRDHUP;
+        // Once reads are over (peer half-closed, service-initiated close,
+        // or backpressure pause) RDHUP must come off too: it is
+        // level-triggered, so a half-closed connection that kept it
+        // registered would be re-reported on every wait and busy-spin the
+        // loop.  A connection waiting only on in-flight completions sleeps
+        // with an empty mask — the completion's eventfd wakes the loop,
+        // and EPOLLERR/EPOLLHUP are always reported regardless of mask.
+        let mut m = 0;
         if !(self.paused || self.closing || self.read_closed) {
-            m |= sys::EPOLLIN;
+            m |= sys::EPOLLIN | sys::EPOLLRDHUP;
         }
         if self.wbuf.len() > self.wpos {
             m |= sys::EPOLLOUT;
@@ -735,9 +810,14 @@ impl Conn {
             if !self.parse(service, comp, ring, worker) {
                 return false;
             }
-            let input_done = self.rpos >= self.rbuf.len() && self.discard == 0;
+            // a partial frame tail or unfinished oversize discard can
+            // never complete now — no more input will ever arrive, so
+            // drop instead of waiting forever
+            if self.rpos < self.rbuf.len() || self.discard > 0 {
+                return false;
+            }
             let in_flight = self.next_write < self.next_seq;
-            if input_done && !in_flight && self.wbuf.len() == self.wpos {
+            if !in_flight && self.wbuf.len() == self.wpos {
                 return false; // nothing left to say
             }
         }
@@ -867,12 +947,11 @@ impl Conn {
         } else if self.paused && outstanding < WBUF_LOW {
             self.paused = false;
         }
+        // closing ignores residual input by design; after a half-close the
+        // residue can never complete a frame, so it counts as done too
         let in_flight = self.next_write < self.next_seq;
         if (self.closing || self.read_closed) && !in_flight && outstanding == 0 {
-            let input_done = self.closing || (self.rpos >= self.rbuf.len() && self.discard == 0);
-            if input_done {
-                return false;
-            }
+            return false;
         }
         let want = self.mask();
         if want != self.registered_mask {
@@ -995,6 +1074,67 @@ mod tests {
         }
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn half_close_with_partial_frame_drops_connection() {
+        let (addr, stop, h) = start(Arc::new(EchoService));
+        let mut c = TcpStream::connect(addr).unwrap();
+        // header promises 5 payload bytes, only 1 ever arrives, then FIN:
+        // the frame can never complete, so the server must drop us rather
+        // than hold (and busy-poll) the connection forever
+        c.write_all(&[5, 1]).unwrap();
+        c.shutdown(std::net::Shutdown::Write).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut tail = Vec::new();
+        c.read_to_end(&mut tail).unwrap(); // errs (timeout) if the server hangs on to us
+        assert!(tail.is_empty());
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn half_close_flushes_in_flight_reply_then_closes() {
+        let (addr, stop, h) = start(Arc::new(EchoService));
+        let mut c = TcpStream::connect(addr).unwrap();
+        // odd payload: the echo arrives asynchronously after the peer has
+        // already half-closed — the reply must still be delivered, then EOF
+        c.write_all(&[1, 7]).unwrap();
+        c.shutdown(std::net::Shutdown::Write).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(read_exact_frame(&mut c), vec![7]);
+        let mut tail = Vec::new();
+        c.read_to_end(&mut tail).unwrap();
+        assert!(tail.is_empty());
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap().unwrap();
+    }
+
+    /// Panics on every frame; records whether the shutdown hook ran.
+    struct PanicService(Arc<AtomicBool>);
+
+    impl FrameService for PanicService {
+        fn on_frame(&self, _buf: &[u8], _ticket: ReplyTicket) -> FrameOutcome {
+            panic!("frame handler blew up")
+        }
+
+        fn on_shutdown(&self) {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
+
+    #[test]
+    fn worker_panic_stops_front_end_and_still_drains_shutdown() {
+        let drained = Arc::new(AtomicBool::new(false));
+        let (addr, _stop, h) = start(Arc::new(PanicService(Arc::clone(&drained))));
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(&[1, 1]).unwrap();
+        // the panicking worker's stop guard tears the front-end down: the
+        // run_reactor call must return (no hang), surface the panic, and
+        // still have run the service's shutdown drain
+        let err = h.join().unwrap().expect_err("worker panic must surface as an error");
+        assert!(err.to_string().contains("panicked"), "{err}");
+        assert!(drained.load(Ordering::Relaxed), "on_shutdown must run after a panic");
     }
 
     #[test]

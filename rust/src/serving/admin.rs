@@ -203,10 +203,14 @@ enum WireFrame {
 }
 
 /// Incremental decoder + dispatcher for protocol v2 (including its v1
-/// compatibility arm) on the epoll reactor.  Admin ops execute inline on
-/// the loop thread — they are cheap and serialized on the registry lock
-/// anyway — while inference frames go through the two-lane QoS admission
-/// queue and reply asynchronously via their [`ReplyTicket`].
+/// compatibility arm) on the epoll reactor.  Cheap admin ops (list,
+/// stats, health, profile, undeploy, rollback) execute inline on the loop
+/// thread; `DEPLOY` (loads weights, spawns a shard pool — seconds) and
+/// `TRACE` (serializes every span ring — potentially megabytes) run on a
+/// helper thread via [`reply_off_loop`] so the connections multiplexed on
+/// that loop never stall behind them.  Inference frames go through the
+/// two-lane QoS admission queue and reply asynchronously via their
+/// [`ReplyTicket`].
 struct V2Service {
     registry: Arc<ModelRegistry>,
     qos: Arc<QosAdmission>,
@@ -262,21 +266,28 @@ impl FrameService for V2Service {
                 self.admit_infer(used, name, lane, deadline_ms, image, style, ticket)
             }
             WireFrame::Deploy { name, source, backend, workers, queue_depth } => {
-                let result = deploy_from_wire(
-                    &self.registry,
-                    &name,
-                    &source,
-                    &backend,
-                    workers,
-                    queue_depth,
-                );
-                FrameOutcome::Reply(used, version_frame(result))
+                let registry = Arc::clone(&self.registry);
+                reply_off_loop("deploy", used, ticket, move || {
+                    version_frame(deploy_from_wire(
+                        &registry,
+                        &name,
+                        &source,
+                        &backend,
+                        workers,
+                        queue_depth,
+                    ))
+                })
             }
             WireFrame::Undeploy(name) => {
                 FrameOutcome::Reply(used, version_frame(self.registry.undeploy(&name)))
             }
             WireFrame::Rollback(name) => {
                 FrameOutcome::Reply(used, version_frame(self.registry.rollback(&name)))
+            }
+            WireFrame::Admin(JsonOp::Trace) => {
+                reply_off_loop("trace", used, ticket, || {
+                    json_frame(&crate::obs::chrome_trace_json())
+                })
             }
             WireFrame::Admin(op) => {
                 FrameOutcome::Reply(used, json_frame(&admin_json(op, &self.registry)))
@@ -320,6 +331,37 @@ fn v2_completion(
         };
         ticket.deliver(bytes);
     })
+}
+
+/// Run `job` on a helper thread and deliver the frame it builds through
+/// the ticket ([`FrameOutcome::Pending`]): slow admin ops must not execute
+/// inline in `on_frame` — that runs on a reactor loop thread, so every
+/// connection multiplexed there (including deadline-bound online-lane
+/// traffic) would stall for the duration.  A reply frame is delivered on
+/// every path — spawn failure and a panicking job included — because a
+/// missing sequence number would wedge the connection's reorder stage
+/// permanently.
+fn reply_off_loop(
+    name: &str,
+    used: usize,
+    ticket: ReplyTicket,
+    job: impl FnOnce() -> Vec<u8> + Send + 'static,
+) -> FrameOutcome {
+    let fallback = ticket.clone();
+    let spawned = std::thread::Builder::new().name(format!("admin-{name}")).spawn(move || {
+        let bytes = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job))
+            .unwrap_or_else(|p| {
+                error_frame(&format!(
+                    "admin op panicked: {}",
+                    crate::util::sync::panic_message(&*p)
+                ))
+            });
+        ticket.deliver(bytes);
+    });
+    if let Err(e) = spawned {
+        fallback.deliver(error_frame(&format!("admin op failed: spawn helper thread: {e}")));
+    }
+    FrameOutcome::Pending(used)
 }
 
 // ---------------------------------------------------------------------------
